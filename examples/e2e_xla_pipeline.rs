@@ -1,0 +1,92 @@
+//! End-to-end three-layer driver — the full-stack validation run.
+//!
+//! Exercises every layer on a real small workload:
+//!   L1  Pallas threshold-matrix h-index kernel + assertion-clamp kernel
+//!   L2  jax vectorised step functions (peel_step / hindex_step)
+//!   AOT HLO-text artifacts (`make artifacts`)
+//!   L3  rust: PJRT load + compile, the XlaWorker service thread, the
+//!       coordinator scheduler, and the BZ oracle check
+//!
+//! Workload: the XLA-tier suite (graphs fitting the (4096, 64) bucket).
+//! Reports per-graph latency, step counts, and throughput for both
+//! vectorised paradigms, cross-validated against the native engine and
+//! the serial oracle. The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//!     make artifacts && cargo run --release --example e2e_xla_pipeline
+
+use pico::bench::suite::{suite, Tier};
+use pico::core::bz::bz_coreness;
+use pico::core::peel::PoDyn;
+use pico::core::Decomposer;
+use pico::runtime::{default_worker, VecHindex, VecPeel};
+use pico::util::fmt;
+use std::time::Instant;
+
+fn main() -> anyhow::Result<()> {
+    let worker = default_worker()?;
+    println!("pjrt platform: {}", worker.platform()?);
+    println!("buckets: {:?}\n", worker.buckets());
+
+    let vec_peel = VecPeel::new(worker.clone());
+    let vec_hindex = VecHindex::new(worker.clone());
+
+    println!(
+        "{:<12} {:>6} {:>7} {:>5} | {:>10} {:>6} {:>9} | {:>10} {:>5} {:>9} | {:>9}",
+        "dataset", "|V|", "|E|", "kmax",
+        "vpeel(ms)", "steps", "thru",
+        "vhidx(ms)", "l2", "thru",
+        "native ms"
+    );
+
+    let mut all_ok = true;
+    for entry in suite(Tier::Xla) {
+        let g = entry.build();
+        let oracle = bz_coreness(&g);
+
+        // --- vectorised PeelOne through the whole stack ---
+        let t = Instant::now();
+        let vp = vec_peel.try_decompose(&g)?;
+        let vp_ms = t.elapsed().as_secs_f64() * 1e3;
+        let vp_ok = vp.core == oracle;
+
+        // --- vectorised h-index through the whole stack ---
+        let t = Instant::now();
+        let vh = vec_hindex.try_decompose(&g)?;
+        let vh_ms = t.elapsed().as_secs_f64() * 1e3;
+        let vh_ok = vh.core == oracle;
+
+        // --- native engine for scale ---
+        let t = Instant::now();
+        let nat = PoDyn.decompose(&g);
+        let nat_ms = t.elapsed().as_secs_f64() * 1e3;
+        let nat_ok = nat.core == oracle;
+
+        all_ok &= vp_ok && vh_ok && nat_ok;
+        println!(
+            "{:<12} {:>6} {:>7} {:>5} | {:>10} {:>6} {:>9} | {:>10} {:>5} {:>9} | {:>9}  {}",
+            entry.name,
+            g.num_vertices(),
+            fmt::si(g.num_edges()),
+            vp.k_max(),
+            fmt::ms(vp_ms),
+            vp.launches,
+            fmt::meps(g.num_edges() * vp.launches as u64, vp_ms),
+            fmt::ms(vh_ms),
+            vh.iterations,
+            fmt::meps(g.num_edges() * vh.iterations as u64, vh_ms),
+            fmt::ms(nat_ms),
+            if vp_ok && vh_ok { "validated" } else { "MISMATCH" },
+        );
+    }
+
+    // Also prove the oversize path reports a structured error.
+    let big = pico::graph::gen::star_burst(1, 200, 0, 3);
+    match vec_peel.try_decompose(&big) {
+        Err(e) => println!("\noversize graph correctly rejected: {e}"),
+        Ok(_) => anyhow::bail!("oversize graph should not fit a bucket"),
+    }
+
+    anyhow::ensure!(all_ok, "some validation failed");
+    println!("\ne2e_xla_pipeline OK — all layers compose, all outputs oracle-validated");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""AOT lowering: jax step functions -> HLO *text* artifacts.
+
+HLO text (NOT serialized HloModuleProto / jax.export bytes) is the
+interchange format: jax >= 0.5 emits protos with 64-bit instruction ids
+which the xla crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits, per (N, D) bucket:
+    peel_n{N}_d{D}.hlo.txt      — peel_step(core, alive, nbrs, k)
+    hindex_n{N}_d{D}.hlo.txt    — hindex_step(core, nbrs)
+plus `manifest.txt` (one `N D` pair per line) consumed by the rust
+runtime's bucket selection.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import BUCKETS, hindex_step, peel_step
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True so the
+    rust side unwraps one tuple)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_bucket(n: int, d: int):
+    """Lower both step functions for one (N, D) bucket."""
+    core = jax.ShapeDtypeStruct((n,), jnp.int32)
+    alive = jax.ShapeDtypeStruct((n,), jnp.int32)
+    nbrs = jax.ShapeDtypeStruct((n, d), jnp.int32)
+    k = jax.ShapeDtypeStruct((), jnp.int32)
+    peel = jax.jit(peel_step).lower(core, alive, nbrs, k)
+    hidx = jax.jit(hindex_step).lower(core, nbrs)
+    return to_hlo_text(peel), to_hlo_text(hidx)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--buckets",
+        default=None,
+        help="comma-separated N:D pairs overriding the default bucket set",
+    )
+    args = parser.parse_args()
+
+    buckets = BUCKETS
+    if args.buckets:
+        buckets = [
+            tuple(int(x) for x in pair.split(":")) for pair in args.buckets.split(",")
+        ]
+
+    os.makedirs(args.out, exist_ok=True)
+    manifest_lines = []
+    for n, d in buckets:
+        peel_text, hidx_text = lower_bucket(n, d)
+        peel_path = os.path.join(args.out, f"peel_n{n}_d{d}.hlo.txt")
+        hidx_path = os.path.join(args.out, f"hindex_n{n}_d{d}.hlo.txt")
+        with open(peel_path, "w") as f:
+            f.write(peel_text)
+        with open(hidx_path, "w") as f:
+            f.write(hidx_text)
+        manifest_lines.append(f"{n} {d}")
+        print(
+            f"bucket ({n:5d},{d:3d}): wrote {len(peel_text):9d} + "
+            f"{len(hidx_text):9d} chars"
+        )
+    with open(os.path.join(args.out, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(buckets)} buckets -> {args.out}/manifest.txt")
+
+
+if __name__ == "__main__":
+    main()

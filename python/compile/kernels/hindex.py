@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel: tiled h-index via the threshold-compare matrix.
+
+GPU -> TPU adaptation (DESIGN.md §Hardware-Adaptation): the CUDA HINDEX
+scatters into a per-vertex ``histo[]`` with atomics — random access that a
+TPU has no fast path for. We reformulate Step I as a *dense* compare:
+
+    cnt[b, h] = sum_j (vals[b, j] >= h)        h = 1..D
+
+which is a [B, D] x [D] broadcast-compare-reduce on the VPU lanes (and is
+MXU-expressible as a one-hot matmul), followed by Step II as a masked
+row-max. The BlockSpec tiles B vertices per grid step, bounding VMEM at
+B*D*4 bytes for the value tile plus the [B, D] compare accumulator.
+
+interpret=True everywhere: the CPU PJRT client cannot run Mosaic
+custom-calls; real-TPU numbers are estimated in DESIGN.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _hindex_tile_kernel(vals_ref, cap_ref, out_ref):
+    """One tile: vals[B, D] i32, cap[B] i32 -> h[B] i32."""
+    vals = vals_ref[...]
+    cap = cap_ref[...]
+    d = vals.shape[1]
+    thresholds = jnp.arange(1, d + 1, dtype=jnp.int32)  # [D]
+    # Step I (dense histogram analog): cnt[b, h] = #{j : vals[b, j] >= h}.
+    cnt = jnp.sum(
+        (vals[:, :, None] >= thresholds[None, None, :]).astype(jnp.int32), axis=1
+    )  # [B, D]
+    # Step II: h = max{h : cnt >= h, h <= cap}.
+    ok = (cnt >= thresholds[None, :]) & (thresholds[None, :] <= cap[:, None])
+    out_ref[...] = jnp.max(
+        jnp.where(ok, thresholds[None, :], 0), axis=1
+    ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def hindex_rows(vals, cap, block=128):
+    """h-index of every row: vals[N, D] i32, cap[N] i32 -> [N] i32.
+
+    N must be a multiple of `block` (callers pad to the bucket size).
+    """
+    n, d = vals.shape
+    block = min(block, n)
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _hindex_tile_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, d), lambda i: (i, 0)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(vals.astype(jnp.int32), cap.astype(jnp.int32))
+
+
+def vmem_bytes_estimate(block, d):
+    """VMEM working-set estimate per tile for DESIGN.md §Perf: the value
+    tile, the [B, D] compare/count accumulator, thresholds and outputs."""
+    return block * d * 4 + block * d * 4 + d * 4 + 2 * block * 4

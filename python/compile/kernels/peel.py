@@ -1,0 +1,50 @@
+"""Layer-1 Pallas kernel: the batched assertion update (atomicSub_{>=k}).
+
+The paper's novel atomic (§III.B) computes, per vertex,
+``old > k ? old - dec : k`` clamped at the floor ``k``. On a GPU this is a
+CAS transaction per edge; vectorised for the TPU it becomes one fused
+select/max over a tile of vertices:
+
+    new_core[b] = core[b] > k ? max(core[b] - dec[b], k) : core[b]
+
+`dec[b]` (how many frontier neighbors vertex b lost this step) is computed
+at Layer 2 by a dense gather-reduce; the kernel is the clamp itself, tiled
+B vertices per grid step. The scalar `k` rides along as a (1,)-shaped
+block broadcast to every tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _assert_clamp_kernel(core_ref, dec_ref, k_ref, out_ref):
+    core = core_ref[...]
+    dec = dec_ref[...]
+    k = k_ref[0]
+    out_ref[...] = jnp.where(
+        core > k, jnp.maximum(core - dec, k), core
+    ).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def assert_clamp(core, dec, k, block=256):
+    """Batched atomicSub_{>=k}: core[N], dec[N] i32, k i32[1] -> [N] i32."""
+    n = core.shape[0]
+    block = min(block, n)
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    grid = (n // block,)
+    return pl.pallas_call(
+        _assert_clamp_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),  # broadcast scalar k
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=True,
+    )(core.astype(jnp.int32), dec.astype(jnp.int32), jnp.asarray(k, jnp.int32).reshape(1))

@@ -1,0 +1,123 @@
+"""Pure-jnp / pure-python oracles for the Pallas kernels.
+
+Everything in this file is the *correctness reference*: no Pallas, no
+tiling — just the mathematical definition. pytest compares every kernel
+against these, and the vectorised-engine tests compare the full step loop
+against a serial python peel.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def hindex_row_py(vals, cap):
+    """h-index of one row, python ints: max h <= cap with #{v >= h} >= h."""
+    best = 0
+    for h in range(1, int(cap) + 1):
+        if sum(1 for v in vals if v >= h) >= h:
+            best = h
+    return best
+
+
+def hindex_rows_ref(vals, cap):
+    """Vectorised reference: vals[B, D] i32, cap[B] i32 -> h[B] i32.
+
+    cnt[b, h] = #{j : vals[b, j] >= h} for h = 1..D, then
+    h[b] = max{h : cnt[b, h] >= h and h <= cap[b]} (0 if none).
+    """
+    vals = jnp.asarray(vals, jnp.int32)
+    cap = jnp.asarray(cap, jnp.int32)
+    d = vals.shape[1]
+    thresholds = jnp.arange(1, d + 1, dtype=jnp.int32)  # [D]
+    cnt = jnp.sum(vals[:, :, None] >= thresholds[None, None, :], axis=1)  # [B, D]
+    ok = (cnt >= thresholds[None, :]) & (thresholds[None, :] <= cap[:, None])
+    return jnp.max(jnp.where(ok, thresholds[None, :], 0), axis=1).astype(jnp.int32)
+
+
+def assert_clamp_ref(core, dec, k):
+    """The vectorised atomicSub_{>=k}: core[b] > k -> max(core - dec, k)."""
+    core = jnp.asarray(core, jnp.int32)
+    dec = jnp.asarray(dec, jnp.int32)
+    return jnp.where(core > k, jnp.maximum(core - dec, k), core).astype(jnp.int32)
+
+
+def peel_step_ref(core, alive, nbrs, k):
+    """One vectorised PeelOne step (reference semantics).
+
+    core, alive: i32[N]; nbrs: i32[N, D] padded with N; k: scalar.
+    Returns (new_core, new_alive, frontier_count, alive_count).
+    """
+    core = jnp.asarray(core, jnp.int32)
+    alive = jnp.asarray(alive, jnp.int32)
+    nbrs = jnp.asarray(nbrs, jnp.int32)
+    frontier = (alive == 1) & (core == k)
+    f_ext = jnp.concatenate([frontier.astype(jnp.int32), jnp.zeros((1,), jnp.int32)])
+    dec = jnp.sum(f_ext[nbrs], axis=1)
+    new_alive = jnp.where(frontier, 0, alive)
+    new_core = jnp.where(new_alive == 1, assert_clamp_ref(core, dec, k), core)
+    return (
+        new_core.astype(jnp.int32),
+        new_alive.astype(jnp.int32),
+        jnp.sum(frontier.astype(jnp.int32)),
+        jnp.sum(new_alive),
+    )
+
+
+def hindex_step_ref(core, nbrs):
+    """One vectorised Index2core sweep (reference semantics).
+
+    core: i32[N]; nbrs: i32[N, D] padded with N.
+    Returns (new_core, changed_count).
+    """
+    core = jnp.asarray(core, jnp.int32)
+    nbrs = jnp.asarray(nbrs, jnp.int32)
+    core_ext = jnp.concatenate([core, jnp.zeros((1,), jnp.int32)])
+    vals = core_ext[nbrs]  # [N, D]; pads read the 0 sentinel
+    h = hindex_rows_ref(vals, core)
+    changed = jnp.sum((h != core).astype(jnp.int32))
+    return h.astype(jnp.int32), changed
+
+
+def serial_coreness_py(n, edges):
+    """Plain-python peel for ground truth in the python tests."""
+    adj = [[] for _ in range(n)]
+    for u, v in edges:
+        adj[u].append(v)
+        adj[v].append(u)
+    deg = [len(a) for a in adj]
+    removed = [False] * n
+    core = [0] * n
+    k = 0
+    left = n
+    while left > 0:
+        frontier = [v for v in range(n) if not removed[v] and deg[v] <= k]
+        if not frontier:
+            k += 1
+            continue
+        while frontier:
+            v = frontier.pop()
+            if removed[v]:
+                continue
+            removed[v] = True
+            core[v] = k
+            left -= 1
+            for u in adj[v]:
+                if not removed[u]:
+                    deg[u] -= 1
+                    if deg[u] <= k:
+                        frontier.append(u)
+    return core
+
+
+def pad_neighbors(n, edges, d):
+    """CSR -> dense padded neighbor matrix (pad index = n)."""
+    adj = [[] for _ in range(n)]
+    for u, v in edges:
+        adj[u].append(v)
+        adj[v].append(u)
+    out = np.full((n, d), n, dtype=np.int32)
+    for v, a in enumerate(adj):
+        if len(a) > d:
+            raise ValueError(f"degree {len(a)} exceeds bucket width {d}")
+        out[v, : len(a)] = sorted(a)
+    return out

@@ -1,0 +1,77 @@
+"""Layer 2: the vectorised k-core step functions (VETGA [20] lineage).
+
+Both paradigms are expressed as dense, statically-shaped step functions
+over a padded neighbor matrix, calling the Layer-1 Pallas kernels:
+
+* :func:`peel_step` — one sub-iteration of the vectorised PeelOne: find
+  the frontier ``alive & core == k``, gather its incidence counts, apply
+  the assertion clamp (Pallas kernel), retire the frontier.
+* :func:`hindex_step` — one Index2core sweep: gather neighbor estimates,
+  recompute every h-index (Pallas threshold-matrix kernel).
+
+The Rust runtime drives these to convergence; Python never runs at
+request time. Shapes are fixed per (N, D) bucket and AOT-lowered by
+:mod:`compile.aot`.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.hindex import hindex_rows
+from .kernels.peel import assert_clamp
+
+
+def peel_step(core, alive, nbrs, k):
+    """One vectorised PeelOne sub-iteration at level ``k``.
+
+    Args:
+      core:  i32[N] — merged residual-degree/coreness array (Alg 4).
+      alive: i32[N] — 1 for residual vertices.
+      nbrs:  i32[N, D] — padded neighbor matrix (pad index = N).
+      k:     i32[] — current level.
+
+    Returns (new_core, new_alive, frontier_count, alive_count); removed
+    vertices keep ``core == k`` (their coreness, Theorem 1).
+    """
+    n = core.shape[0]
+    frontier = (alive == 1) & (core == k)
+    f_ext = jnp.concatenate(
+        [frontier.astype(jnp.int32), jnp.zeros((1,), jnp.int32)]
+    )
+    dec = jnp.sum(f_ext[nbrs], axis=1).astype(jnp.int32)  # [N]
+    new_alive = jnp.where(frontier, 0, alive).astype(jnp.int32)
+    clamped = assert_clamp(core, dec, k, block=min(256, n))
+    new_core = jnp.where(new_alive == 1, clamped, core).astype(jnp.int32)
+    return (
+        new_core,
+        new_alive,
+        jnp.sum(frontier.astype(jnp.int32)),
+        jnp.sum(new_alive),
+    )
+
+
+def hindex_step(core, nbrs):
+    """One vectorised Index2core sweep.
+
+    Args:
+      core: i32[N] — current estimates (init: degrees).
+      nbrs: i32[N, D] — padded neighbor matrix (pad index = N).
+
+    Returns (new_core, changed_count).
+    """
+    n = core.shape[0]
+    core_ext = jnp.concatenate([core, jnp.zeros((1,), jnp.int32)])
+    vals = core_ext[nbrs]  # [N, D] — pads gather the 0 sentinel
+    h = hindex_rows(vals, core, block=min(128, n))
+    changed = jnp.sum((h != core).astype(jnp.int32))
+    return h, changed
+
+
+# The (N, D) buckets compiled by `make artifacts`. Kept here so aot.py,
+# the python tests, and (via manifest.txt) the rust runtime agree.
+BUCKETS = [
+    (8, 4),
+    (64, 8),
+    (256, 16),
+    (1024, 32),
+    (4096, 64),
+]

@@ -1,0 +1,55 @@
+//! Fig. 4 ablation: the assertion method's atomic-operation savings.
+//!
+//! For every dataset: (a) census the under-core events of a serial peel
+//! (the exact `n`, `m` of the paper's 2n−m analysis), (b) measure PP-dyn
+//! (atomicSub + corrective atomicAdd) vs PO-dyn (atomicSub_{>=k}) atomic
+//! counts and times. Check: PO-dyn performs zero atomicAdds and
+//! `below-floor decrements × 2` fewer total atomics, matching the census.
+//!
+//!     cargo bench --bench ablation_assertion
+
+use pico::analysis::undercore_census;
+use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::coordinator::report::Table;
+use pico::core::peel::{PoDyn, PpDyn};
+use pico::util::fmt;
+
+fn main() {
+    let opts = BenchOptions::default();
+    print_preamble("Fig. 4 ablation — assertion method atomic savings", &opts);
+
+    let mut t = Table::new(&[
+        "dataset",
+        "undercore V",
+        "belowfloor dec",
+        "PP-dyn atomics",
+        "PO-dyn atomics",
+        "saved",
+        "PP-dyn ms",
+        "PO-dyn ms",
+    ]);
+    for entry in suite(Tier::from_env()) {
+        let g = entry.build();
+        let census = undercore_census(&g);
+        let pp = measure(&PpDyn, &g, &opts);
+        let po = measure(&PoDyn, &g, &opts);
+        let pp_atomics = pp.instrumented.metrics.total_atomics();
+        let po_atomics = po.instrumented.metrics.total_atomics();
+        assert_eq!(
+            po.instrumented.metrics.atomic_adds, 0,
+            "assertion method must not need corrective adds"
+        );
+        t.row(vec![
+            entry.name.to_string(),
+            fmt::commas(census.undercore_vertices),
+            fmt::commas(census.below_floor_decrements),
+            fmt::commas(pp_atomics),
+            fmt::commas(po_atomics),
+            fmt::commas(pp_atomics.saturating_sub(po_atomics)),
+            fmt::ms(pp.ms()),
+            fmt::ms(po.ms()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\npaper claim: assertion avoids 2(n-m) atomics per under-core vertex (Fig. 4).");
+}

@@ -1,0 +1,47 @@
+//! Ablation: each PeelOne design choice in isolation (§III.C).
+//!
+//!   GPP          — two arrays + rem flag, full rescan, plain atomicSub
+//!   PeelOne      — + merged array + assertion (static frontiers)
+//!   PO-dyn       — + dynamic frontier queue
+//!
+//! Shows where the paper's 1.9x (assertion/merge) and 5.2x (dynamic
+//! frontier) multipliers come from, with launches and iteration counts.
+//!
+//!     cargo bench --bench ablation_frontier
+
+use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::coordinator::report::Table;
+use pico::core::peel::{Gpp, PeelOne, PoDyn};
+use pico::util::fmt;
+
+fn main() {
+    let opts = BenchOptions::default();
+    print_preamble("Ablation — PeelOne design choices", &opts);
+
+    let mut t = Table::new(&[
+        "dataset",
+        "GPP ms(l1)",
+        "PeelOne ms(l1)",
+        "PO-dyn ms(l1)",
+        "launches G/P/D",
+        "frontier pushes D",
+    ]);
+    for entry in suite(Tier::from_env()) {
+        let g = entry.build();
+        let gpp = measure(&Gpp, &g, &opts);
+        let peel = measure(&PeelOne, &g, &opts);
+        let pod = measure(&PoDyn, &g, &opts);
+        t.row(vec![
+            entry.name.to_string(),
+            format!("{}({})", fmt::ms(gpp.ms()), gpp.instrumented.iterations),
+            format!("{}({})", fmt::ms(peel.ms()), peel.instrumented.iterations),
+            format!("{}({})", fmt::ms(pod.ms()), pod.instrumented.iterations),
+            format!(
+                "{}/{}/{}",
+                gpp.instrumented.launches, peel.instrumented.launches, pod.instrumented.launches
+            ),
+            fmt::commas(pod.instrumented.metrics.frontier_pushes),
+        ]);
+    }
+    print!("{}", t.render());
+}

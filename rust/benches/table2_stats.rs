@@ -1,0 +1,38 @@
+//! Table II reproduction: statistical properties of the dataset suite
+//! (|V|, |E|, d_avg, std, d_max, k_max, category). The synthetic suite
+//! substitutes the paper's 24 public datasets (DESIGN.md §1); this bench
+//! regenerates the table the other benches' rows are keyed against.
+//!
+//!     cargo bench --bench table2_stats        # PICO_SUITE=small|standard|large
+
+use pico::bench::{print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::coordinator::report::Table;
+use pico::core::bz::bz_coreness;
+use pico::graph::GraphStats;
+use pico::util::fmt;
+
+fn main() {
+    let opts = BenchOptions::default();
+    print_preamble("Table II — dataset statistics", &opts);
+
+    let mut t = Table::new(&[
+        "dataset", "|V|", "|E|", "d_avg", "std", "d_max", "k_max", "skew", "category",
+    ]);
+    for entry in suite(Tier::from_env()) {
+        let g = entry.build();
+        let core = bz_coreness(&g);
+        let s = GraphStats::measure(&g).with_kmax(&core);
+        t.row(vec![
+            entry.name.to_string(),
+            fmt::si(s.vertices),
+            fmt::si(s.edges),
+            format!("{:.2}", s.d_avg),
+            format!("{:.1}", s.d_std),
+            s.d_max.to_string(),
+            s.k_max.unwrap_or(0).to_string(),
+            format!("{:.1}", s.skew()),
+            entry.category.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+}

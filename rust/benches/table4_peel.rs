@@ -1,0 +1,45 @@
+//! Table IV reproduction: GPP vs PeelOne execution time (+ the Gunrock
+//! system-level column, here the vertex-centric framework VC-Peel).
+//!
+//! Paper shape to check: PeelOne beats GPP on every dataset (1.0–4.1x,
+//! avg 1.9x on the RTX 3090); the generic-framework implementation is far
+//! slower than both. Both iteration counts (l1) are printed as in the
+//! paper's table.
+//!
+//!     cargo bench --bench table4_peel
+
+use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::coordinator::report::{geomean_speedup, Table};
+use pico::core::peel::{Gpp, PeelOne};
+use pico::util::fmt;
+use pico::vc::VcPeel;
+
+fn main() {
+    let opts = BenchOptions::default();
+    print_preamble("Table IV — GPP vs PeelOne (+ Gunrock-analog)", &opts);
+
+    let mut t = Table::new(&[
+        "dataset", "GPP", "PeelOne", "SpeedUp", "VC-Peel(GR)", "l1",
+    ]);
+    let mut pairs = Vec::new();
+    for entry in suite(Tier::from_env()) {
+        let g = entry.build();
+        let gpp = measure(&Gpp, &g, &opts);
+        let po = measure(&PeelOne, &g, &opts);
+        let vc = measure(&VcPeel, &g, &opts);
+        pairs.push((gpp.ms(), po.ms()));
+        t.row(vec![
+            entry.name.to_string(),
+            fmt::ms(gpp.ms()),
+            fmt::ms(po.ms()),
+            fmt::speedup(gpp.ms() / po.ms()),
+            fmt::ms(vc.ms()),
+            po.instrumented.iterations.to_string(),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\ngeomean PeelOne speedup over GPP: {} (paper: avg 1.9x)",
+        fmt::speedup(geomean_speedup(&pairs))
+    );
+}

@@ -1,0 +1,49 @@
+//! Table V reproduction: the dynamic frontier + assertion method.
+//! Columns: PeelOne (static rounds, l1 = Σ per-level sub-iterations),
+//! PP-dyn (SOTA [21], l1 = k_max, extra atomicAdds), PO-dyn (proposed).
+//!
+//! Paper shape to check: dynamic frontiers collapse l1 to k_max
+//! (2–25.8x fewer iterations, avg 11x) and dominate time on almost every
+//! dataset; PO-dyn edges out PP-dyn by eliminating under-core atomics.
+//!
+//!     cargo bench --bench table5_dynfrontier
+
+use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::coordinator::report::{geomean_speedup, Table};
+use pico::core::peel::{PeelOne, PoDyn, PpDyn};
+use pico::util::fmt;
+
+fn main() {
+    let opts = BenchOptions::default();
+    print_preamble("Table V — dynamic frontiers + assertion", &opts);
+
+    let mut t = Table::new(&[
+        "dataset",
+        "PeelOne(l1)",
+        "PP-dyn(l1)",
+        "SpeedUp",
+        "PO-dyn(l1)",
+        "iter-reduction",
+    ]);
+    let mut pairs = Vec::new();
+    for entry in suite(Tier::from_env()) {
+        let g = entry.build();
+        let stat = measure(&PeelOne, &g, &opts);
+        let ppd = measure(&PpDyn, &g, &opts);
+        let pod = measure(&PoDyn, &g, &opts);
+        pairs.push((stat.ms(), pod.ms()));
+        t.row(vec![
+            entry.name.to_string(),
+            format!("{}({})", fmt::ms(stat.ms()), stat.instrumented.iterations),
+            format!("{}({})", fmt::ms(ppd.ms()), ppd.instrumented.iterations),
+            fmt::speedup(stat.ms() / ppd.ms()),
+            format!("{}({})", fmt::ms(pod.ms()), pod.instrumented.iterations),
+            fmt::speedup(stat.instrumented.iterations as f64 / pod.instrumented.iterations as f64),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\ngeomean PO-dyn speedup over static PeelOne: {} (paper: avg 5.2x for PP-dyn)",
+        fmt::speedup(geomean_speedup(&pairs))
+    );
+}

@@ -1,0 +1,55 @@
+//! Table VI reproduction: NbrCore vs CntCore vs HistoCore (+ l2).
+//!
+//! Paper shape to check: CntCore beats NbrCore (precise frontiers, avg
+//! 1.8x), HistoCore beats CntCore by a large factor (up-to-date
+//! histograms, avg 8x). Edge-access counters are printed to attribute the
+//! win to the removed neighbor re-reads (§IV).
+//!
+//!     cargo bench --bench table6_index2core
+
+use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::coordinator::report::{geomean_speedup, Table};
+use pico::core::index2core::{CntCore, HistoCore, NbrCore};
+use pico::util::fmt;
+
+fn main() {
+    let opts = BenchOptions::default();
+    print_preamble("Table VI — Index2core: NbrCore / CntCore / HistoCore", &opts);
+
+    let mut t = Table::new(&[
+        "dataset", "NbrCore", "CntCore", "HistoCore", "SpeedUp", "l2", "edgeacc N/C/H",
+    ]);
+    let mut nbr_cnt = Vec::new();
+    let mut cnt_hist = Vec::new();
+    for entry in suite(Tier::from_env()) {
+        let g = entry.build();
+        let nbr = measure(&NbrCore, &g, &opts);
+        let cnt = measure(&CntCore, &g, &opts);
+        let hst = measure(&HistoCore, &g, &opts);
+        nbr_cnt.push((nbr.ms(), cnt.ms()));
+        cnt_hist.push((cnt.ms(), hst.ms()));
+        t.row(vec![
+            entry.name.to_string(),
+            fmt::ms(nbr.ms()),
+            fmt::ms(cnt.ms()),
+            fmt::ms(hst.ms()),
+            fmt::speedup(cnt.ms() / hst.ms()),
+            hst.instrumented.iterations.to_string(),
+            format!(
+                "{}/{}/{}",
+                fmt::si(nbr.instrumented.metrics.edge_accesses),
+                fmt::si(cnt.instrumented.metrics.edge_accesses),
+                fmt::si(hst.instrumented.metrics.edge_accesses)
+            ),
+        ]);
+    }
+    print!("{}", t.render());
+    println!(
+        "\ngeomean CntCore speedup over NbrCore:   {} (paper: avg 1.8x)",
+        fmt::speedup(geomean_speedup(&nbr_cnt))
+    );
+    println!(
+        "geomean HistoCore speedup over CntCore: {} (paper: avg 8x)",
+        fmt::speedup(geomean_speedup(&cnt_hist))
+    );
+}

@@ -1,0 +1,98 @@
+//! Table VII reproduction: the paradigm crossover — optimal Peel (PO-dyn)
+//! vs optimal Index2core (HistoCore), with l1 and l2 side by side.
+//!
+//! Paper shape to check: PO-dyn wins where k_max is small relative to the
+//! graph; HistoCore wins (1.1–3.2x) exactly on the graphs where l2 is far
+//! below l1 = k_max (deep hierarchies). Extra deep-hierarchy graphs are
+//! appended beyond the standard suite to chart where the crossover falls.
+//!
+//!     cargo bench --bench table7_crossover
+
+use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::coordinator::report::Table;
+use pico::core::hybrid::{Choice, Hybrid};
+use pico::core::index2core::HistoCore;
+use pico::core::peel::PoDyn;
+use pico::graph::{gen, CsrGraph};
+use pico::util::fmt;
+
+fn deep_extras() -> Vec<CsrGraph> {
+    vec![
+        // core-periphery: the regime of the paper's HistoCore-winning web
+        // graphs (indochina/webbase/it): big sparse |V|, k_max set by a
+        // small deep core -> l1 * |V| scans dwarf |E|
+        gen::core_periphery(150_000, 120, 3),
+        gen::core_periphery(300_000, 250, 5),
+        // clique chains with ever deeper hierarchies: k_max 185 -> 388
+        gen::nested_cliques(30, 12, 6).0,
+        gen::nested_cliques(38, 15, 10).0,
+        // planted ladders
+        gen::planted_core(
+            30_000,
+            150_000,
+            &[(6_000, 24), (1_500, 60), (300, 120), (60, 200)],
+            23,
+        ),
+        gen::planted_core(
+            20_000,
+            80_000,
+            &[(8_000, 16), (4_000, 32), (2_000, 64), (1_000, 96), (500, 128)],
+            29,
+        ),
+    ]
+}
+
+fn main() {
+    let opts = BenchOptions::default();
+    print_preamble("Table VII — Peel vs Index2core crossover", &opts);
+
+    let mut t = Table::new(&[
+        "dataset", "|E|", "PO-dyn", "l1", "HistoCore", "l2", "l1/l2", "winner", "hybrid picks",
+    ]);
+    let mut hybrid_correct = 0usize;
+    let mut hybrid_total = 0usize;
+    let mut run = |g: &CsrGraph| {
+        let pod = measure(&PoDyn, g, &opts);
+        let hst = measure(&HistoCore, g, &opts);
+        let l1 = pod.instrumented.iterations.max(1);
+        let l2 = hst.instrumented.iterations.max(1);
+        // the paper's §VII future work: does the hybrid selector pick the
+        // measured winner?
+        let pick = Hybrid::default().choose(g);
+        let winner_is_histo = hst.ms() < pod.ms();
+        let pick_is_histo = pick == Choice::Index2core;
+        hybrid_total += 1;
+        // count near-ties (within 15%) as correct either way
+        let tie = (hst.ms() - pod.ms()).abs() / pod.ms().max(hst.ms()) < 0.15;
+        if tie || pick_is_histo == winner_is_histo {
+            hybrid_correct += 1;
+        }
+        t.row(vec![
+            g.name.clone(),
+            fmt::si(g.num_edges()),
+            fmt::ms(pod.ms()),
+            l1.to_string(),
+            fmt::ms(hst.ms()),
+            l2.to_string(),
+            format!("{:.1}", l1 as f64 / l2 as f64),
+            if winner_is_histo {
+                format!("HistoCore {}", fmt::speedup(pod.ms() / hst.ms()))
+            } else {
+                format!("PO-dyn {}", fmt::speedup(hst.ms() / pod.ms()))
+            },
+            format!("{pick:?}"),
+        ]);
+    };
+
+    for entry in suite(Tier::from_env()) {
+        run(&entry.build());
+    }
+    for g in deep_extras() {
+        run(&g);
+    }
+    print!("{}", t.render());
+    println!("\npaper shape: HistoCore wins exactly where l1/l2 is large (deep hierarchies).");
+    println!(
+        "hybrid selector (paper §VII future work) picks the measured winner or a near-tie on {hybrid_correct}/{hybrid_total} graphs"
+    );
+}

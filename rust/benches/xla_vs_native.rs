@@ -1,0 +1,58 @@
+//! Vector-engine comparison: the XLA-executed vectorised paradigms
+//! (VETGA [20] lineage, our L1/L2/AOT path) against the hand-fused native
+//! engine — the Table IV "system overhead" story told at the other end of
+//! the stack, plus proof the AOT artifacts run on the request path.
+//!
+//!     make artifacts && cargo bench --bench xla_vs_native
+
+use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::coordinator::report::Table;
+use pico::core::index2core::HistoCore;
+use pico::core::peel::PoDyn;
+use pico::runtime::{default_worker, VecHindex, VecPeel};
+use pico::util::fmt;
+
+fn main() {
+    let opts = BenchOptions {
+        // the XLA path re-uploads literals per step; keep reps small
+        reps: std::env::var("PICO_BENCH_REPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(2),
+        ..Default::default()
+    };
+    print_preamble("XLA vectorised engines vs native (XLA-tier suite)", &opts);
+
+    let worker = match default_worker() {
+        Ok(w) => w,
+        Err(e) => {
+            eprintln!("SKIP: {e}");
+            return;
+        }
+    };
+    println!("pjrt: {}\n", worker.platform().unwrap_or_default());
+    let vec_peel = VecPeel::new(worker.clone());
+    let vec_hindex = VecHindex::new(worker);
+
+    let mut t = Table::new(&[
+        "dataset", "VecPeel", "VecHindex", "PO-dyn", "HistoCore", "bucket fit",
+    ]);
+    for entry in suite(Tier::Xla) {
+        let g = entry.build();
+        let vp = measure(&vec_peel, &g, &opts);
+        let vh = measure(&vec_hindex, &g, &opts);
+        let pod = measure(&PoDyn, &g, &opts);
+        let hst = measure(&HistoCore, &g, &opts);
+        t.row(vec![
+            entry.name.to_string(),
+            fmt::ms(vp.ms()),
+            fmt::ms(vh.ms()),
+            fmt::ms(pod.ms()),
+            fmt::ms(hst.ms()),
+            format!("n<=4096,d<={}", g.max_degree()),
+        ]);
+    }
+    print!("{}", t.render());
+    println!("\nnote: the dense vectorised formulation pays O(N*D) per step — the");
+    println!("paper's reason hand-fused CSR kernels beat vector-primitive engines.");
+}

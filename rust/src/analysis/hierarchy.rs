@@ -1,0 +1,128 @@
+//! Core-hierarchy queries — the §I application layer the paper motivates
+//! (community/engagement analysis, degeneracy ordering for clique
+//! finding [3], k-core subgraph extraction for clustering [2]).
+
+use crate::core::bz::bz_coreness;
+use crate::graph::{CsrGraph, GraphBuilder, VertexId};
+
+/// A computed core decomposition with query helpers.
+#[derive(Clone, Debug)]
+pub struct CoreHierarchy {
+    pub core: Vec<u32>,
+    pub k_max: u32,
+}
+
+impl CoreHierarchy {
+    pub fn from_coreness(core: Vec<u32>) -> Self {
+        let k_max = core.iter().copied().max().unwrap_or(0);
+        Self { core, k_max }
+    }
+
+    pub fn compute(g: &CsrGraph) -> Self {
+        Self::from_coreness(bz_coreness(g))
+    }
+
+    /// Vertices of the k-core.
+    pub fn k_core_vertices(&self, k: u32) -> Vec<VertexId> {
+        (0..self.core.len() as VertexId)
+            .filter(|&v| self.core[v as usize] >= k)
+            .collect()
+    }
+
+    /// Size of each k-shell (vertices with coreness exactly k).
+    pub fn shell_sizes(&self) -> Vec<usize> {
+        let mut sizes = vec![0usize; self.k_max as usize + 1];
+        for &c in &self.core {
+            sizes[c as usize] += 1;
+        }
+        sizes
+    }
+
+    /// Induced subgraph of the k-core, with a vertex-id mapping back to
+    /// the original graph.
+    pub fn extract_k_core(&self, g: &CsrGraph, k: u32) -> (CsrGraph, Vec<VertexId>) {
+        let members = self.k_core_vertices(k);
+        let mut remap = vec![u32::MAX; g.num_vertices()];
+        for (new, &old) in members.iter().enumerate() {
+            remap[old as usize] = new as u32;
+        }
+        let mut b = GraphBuilder::new(members.len());
+        for &old in &members {
+            for &u in g.neighbors(old) {
+                let ru = remap[u as usize];
+                if ru != u32::MAX && remap[old as usize] < ru {
+                    b.add_edge(remap[old as usize], ru);
+                }
+            }
+        }
+        (b.build(format!("{}-{}core", g.name, k)), members)
+    }
+
+    /// Degeneracy ordering (peel order): vertices sorted by coreness,
+    /// ties by id — the ordering used to linearise clique enumeration
+    /// (paper ref [3]). The graph's degeneracy is `k_max`.
+    pub fn degeneracy_ordering(&self) -> Vec<VertexId> {
+        let mut order: Vec<VertexId> = (0..self.core.len() as VertexId).collect();
+        order.sort_by_key(|&v| (self.core[v as usize], v));
+        order
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+
+    #[test]
+    fn g1_hierarchy() {
+        let g = examples::g1();
+        let h = CoreHierarchy::compute(&g);
+        assert_eq!(h.k_max, 2);
+        assert_eq!(h.k_core_vertices(2), vec![2, 3, 4, 5]);
+        assert_eq!(h.shell_sizes(), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn extract_two_core_of_g1() {
+        let g = examples::g1();
+        let h = CoreHierarchy::compute(&g);
+        let (sub, members) = h.extract_k_core(&g, 2);
+        assert_eq!(members, vec![2, 3, 4, 5]);
+        assert_eq!(sub.num_vertices(), 4);
+        // the 2-core of G1 keeps edges {23,24,34,35,45} -> 5 edges
+        assert_eq!(sub.num_edges(), 5);
+        assert!(sub.degrees().iter().all(|&d| d >= 2));
+    }
+
+    #[test]
+    fn degeneracy_ordering_is_monotone_in_coreness() {
+        let g = examples::g1();
+        let h = CoreHierarchy::compute(&g);
+        let order = h.degeneracy_ordering();
+        for w in order.windows(2) {
+            assert!(h.core[w[0] as usize] <= h.core[w[1] as usize]);
+        }
+        assert_eq!(order.len(), 6);
+    }
+
+    #[test]
+    fn k_core_minimum_degree_property() {
+        let g = crate::graph::gen::barabasi_albert(500, 4, 7);
+        let h = CoreHierarchy::compute(&g);
+        for k in [2u32, 3, 4] {
+            let (sub, _) = h.extract_k_core(&g, k);
+            if sub.num_vertices() > 0 {
+                assert!(sub.degrees().iter().all(|&d| d >= k), "k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_core_extraction() {
+        let g = examples::path(5);
+        let h = CoreHierarchy::compute(&g);
+        let (sub, members) = h.extract_k_core(&g, 5);
+        assert!(members.is_empty());
+        assert_eq!(sub.num_vertices(), 0);
+    }
+}

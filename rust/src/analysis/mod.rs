@@ -1,0 +1,11 @@
+//! Workload analysis — the instrumentation behind Fig. 3 (multi-access
+//! proportions of the Index2core paradigm) and the under-core census that
+//! motivates the assertion method (§III.A).
+
+pub mod activation;
+pub mod hierarchy;
+pub mod undercore;
+
+pub use activation::{activation_profile, ActivationProfile};
+pub use hierarchy::CoreHierarchy;
+pub use undercore::{undercore_census, UndercoreCensus};

@@ -1,0 +1,96 @@
+//! Under-core census (§III.A): during a serial peel, count how many
+//! vertices become *under-core* — residual degree strictly below the level
+//! k at which they are removed — and how many extra atomic operations the
+//! non-assertion baselines would spend on them (the Fig. 4 arithmetic:
+//! `2(n−m)` avoidable atomics per under-core vertex).
+
+use crate::graph::CsrGraph;
+
+/// Result of the census.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct UndercoreCensus {
+    /// Number of vertices removed with residual degree < their coreness k.
+    pub undercore_vertices: u64,
+    /// Total decrements that drove residual degrees below the level —
+    /// each costs one extra sub + one corrective add in PP-dyn (Fig. 4a).
+    pub below_floor_decrements: u64,
+    /// Total (would-be) atomic decrements of the peel.
+    pub total_decrements: u64,
+}
+
+impl UndercoreCensus {
+    /// The avoidable atomics of Fig. 4: sub below floor + corrective add.
+    pub fn avoidable_atomics(&self) -> u64 {
+        2 * self.below_floor_decrements
+    }
+}
+
+/// Serial peel that tracks under-core events exactly.
+pub fn undercore_census(g: &CsrGraph) -> UndercoreCensus {
+    let n = g.num_vertices();
+    let mut deg: Vec<i64> = (0..n).map(|v| g.degree(v as u32) as i64).collect();
+    let mut removed = vec![false; n];
+    let mut census = UndercoreCensus::default();
+    let mut remaining = n;
+    let mut k: i64 = 0;
+    while remaining > 0 {
+        // frontier at this k
+        let frontier: Vec<usize> = (0..n)
+            .filter(|&v| !removed[v] && deg[v] <= k)
+            .collect();
+        if frontier.is_empty() {
+            k += 1;
+            continue;
+        }
+        for &v in &frontier {
+            removed[v] = true;
+            remaining -= 1;
+            if deg[v] < k {
+                census.undercore_vertices += 1;
+            }
+        }
+        for &v in &frontier {
+            for &u in g.neighbors(v as u32) {
+                let u = u as usize;
+                if !removed[u] {
+                    census.total_decrements += 1;
+                    deg[u] -= 1;
+                    if deg[u] < k {
+                        census.below_floor_decrements += 1;
+                    }
+                }
+            }
+        }
+    }
+    census
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{examples, gen};
+
+    #[test]
+    fn g1_has_undercore_vertices() {
+        // Fig. 2: v3 and v5 end up under-core in the third iteration.
+        let c = undercore_census(&examples::g1());
+        assert!(c.undercore_vertices >= 1);
+        assert!(c.total_decrements > 0);
+    }
+
+    #[test]
+    fn path_has_no_undercore() {
+        // Peeling a path removes endpoints with deg exactly 1 = k.
+        let c = undercore_census(&examples::path(20));
+        assert_eq!(c.undercore_vertices, 0);
+    }
+
+    #[test]
+    fn clique_chain_heavy_undercore() {
+        let (g, _) = gen::nested_cliques(3, 5, 5);
+        let c = undercore_census(&g);
+        // removing a clique level floods the rest below k
+        assert!(c.below_floor_decrements > 0);
+        assert_eq!(c.avoidable_atomics(), 2 * c.below_floor_decrements);
+    }
+}

@@ -1,0 +1,23 @@
+//! Benchmark harness shared by `rust/benches/*` and the CLI: the dataset
+//! suite (the Table II substitute), the measurement loop, and helpers to
+//! print paper-shaped tables.
+
+pub mod runner;
+pub mod suite;
+
+pub use runner::{measure, BenchOptions, Measurement};
+pub use suite::{suite, SuiteEntry, Tier};
+
+/// Standard preamble all bench binaries print, so recorded outputs carry
+/// their run conditions.
+pub fn print_preamble(title: &str, opts: &BenchOptions) {
+    println!("== {title} ==");
+    println!(
+        "host: {} hw threads | spmd threads: {} | reps: {} (min reported) | tier: {:?}",
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+        opts.threads,
+        opts.reps,
+        Tier::from_env(),
+    );
+    println!();
+}

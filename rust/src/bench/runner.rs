@@ -1,0 +1,133 @@
+//! The measurement loop: warmup, repeated timed runs, one validated
+//! instrumented run — so every number a bench prints is backed by an
+//! oracle check and carries the paper's iteration/atomic counters.
+
+use crate::core::traits::{DecompositionResult, Decomposer};
+use crate::core::verify::check_against_oracle;
+use crate::graph::CsrGraph;
+use crate::util::timer::{Samples, Timer};
+
+/// Measurement options (env-tunable for the bench binaries).
+#[derive(Clone, Debug)]
+pub struct BenchOptions {
+    pub warmup: usize,
+    pub reps: usize,
+    pub threads: usize,
+    /// Oracle-validate the first run (skipped for huge graphs if needed).
+    pub validate: bool,
+}
+
+impl Default for BenchOptions {
+    fn default() -> Self {
+        let reps = std::env::var("PICO_BENCH_REPS")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(3);
+        Self {
+            warmup: 1,
+            reps,
+            threads: crate::util::default_threads(),
+            validate: true,
+        }
+    }
+}
+
+/// One algorithm × dataset measurement.
+#[derive(Debug)]
+pub struct Measurement {
+    pub algorithm: String,
+    pub dataset: String,
+    pub samples: Samples,
+    /// The instrumented (metrics-on) run's result.
+    pub instrumented: DecompositionResult,
+    pub validated: bool,
+}
+
+impl Measurement {
+    /// The time a table row reports (min over reps — least scheduler noise).
+    pub fn ms(&self) -> f64 {
+        self.samples.min_ms()
+    }
+}
+
+/// Measure `algo` on `g`: warmup, `reps` timed runs (metrics off), then
+/// one instrumented run for the counters. Panics on oracle mismatch —
+/// a bench must never report a wrong-answer time.
+pub fn measure(algo: &dyn Decomposer, g: &CsrGraph, opts: &BenchOptions) -> Measurement {
+    for _ in 0..opts.warmup {
+        let r = algo.decompose_with(g, opts.threads, false);
+        if opts.validate {
+            if let Err(e) = check_against_oracle(g, &r.core) {
+                panic!("{} produced wrong coreness on {}: {e}", algo.name(), g.name);
+            }
+        }
+    }
+    let mut samples = Samples::default();
+    for _ in 0..opts.reps.max(1) {
+        let t = Timer::start();
+        let r = algo.decompose_with(g, opts.threads, false);
+        samples.push(t.elapsed());
+        std::hint::black_box(&r.core);
+    }
+    let instrumented = algo.decompose_with(g, opts.threads, true);
+    Measurement {
+        algorithm: algo.name().to_string(),
+        dataset: g.name.clone(),
+        samples,
+        instrumented,
+        validated: opts.validate,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::peel::PoDyn;
+    use crate::graph::examples;
+
+    #[test]
+    fn measure_g1() {
+        let g = examples::g1();
+        let m = measure(
+            &PoDyn,
+            &g,
+            &BenchOptions {
+                warmup: 1,
+                reps: 2,
+                threads: 1,
+                validate: true,
+            },
+        );
+        assert_eq!(m.samples.runs.len(), 2);
+        assert!(m.ms() >= 0.0);
+        assert_eq!(m.instrumented.core, examples::g1_coreness());
+    }
+
+    #[test]
+    #[should_panic(expected = "wrong coreness")]
+    fn wrong_answer_panics() {
+        struct Liar;
+        impl Decomposer for Liar {
+            fn name(&self) -> &'static str {
+                "Liar"
+            }
+            fn paradigm(&self) -> crate::core::Paradigm {
+                crate::core::Paradigm::Serial
+            }
+            fn decompose_with(
+                &self,
+                g: &CsrGraph,
+                _t: usize,
+                _m: bool,
+            ) -> DecompositionResult {
+                DecompositionResult {
+                    core: vec![9; g.num_vertices()],
+                    iterations: 0,
+                    launches: 0,
+                    metrics: Default::default(),
+                }
+            }
+        }
+        measure(&Liar, &examples::g1(), &BenchOptions::default());
+    }
+}

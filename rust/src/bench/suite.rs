@@ -1,0 +1,235 @@
+//! The synthetic dataset suite — the laptop-scale substitute for the
+//! paper's 24 public datasets (Table II). Entries mirror the paper's
+//! categories and the structural regimes its analysis depends on:
+//! power-law skew (under-core pressure, multi-changed frontiers), deep
+//! core hierarchies (l1 = k_max large), hub-dominated communication
+//! graphs, and regular meshes.
+
+use crate::graph::{gen, CsrGraph};
+
+/// Which benchmark tier an entry belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Tier {
+    /// Seconds-fast sanity graphs.
+    Small,
+    /// The default bench suite.
+    Standard,
+    /// Larger stress graphs (opt-in: `PICO_SUITE=large`).
+    Large,
+    /// Graphs that fit the XLA buckets (|V| <= 4096, d_max <= 64).
+    Xla,
+}
+
+impl Tier {
+    pub fn from_env() -> Tier {
+        match std::env::var("PICO_SUITE").as_deref() {
+            Ok("small") => Tier::Small,
+            Ok("large") => Tier::Large,
+            Ok("xla") => Tier::Xla,
+            _ => Tier::Standard,
+        }
+    }
+}
+
+/// One dataset definition (generated deterministically on demand).
+pub struct SuiteEntry {
+    pub name: &'static str,
+    /// Paper-category analog (Table II's last column).
+    pub category: &'static str,
+    pub tier: Tier,
+    build: fn() -> CsrGraph,
+}
+
+impl SuiteEntry {
+    pub fn build(&self) -> CsrGraph {
+        let mut g = (self.build)();
+        g.name = self.name.to_string();
+        g
+    }
+}
+
+/// The full suite; filter by tier.
+pub fn suite(tier: Tier) -> Vec<&'static SuiteEntry> {
+    ALL.iter().filter(|e| e.tier == tier).collect()
+}
+
+/// Every entry regardless of tier.
+pub fn all_entries() -> &'static [SuiteEntry] {
+    &ALL
+}
+
+/// Find one entry by name.
+pub fn by_name(name: &str) -> Option<&'static SuiteEntry> {
+    ALL.iter().find(|e| e.name == name)
+}
+
+static ALL: [SuiteEntry; 19] = [
+    // ---- Small tier (smoke / CI) ----
+    SuiteEntry {
+        name: "g1",
+        category: "paper example",
+        tier: Tier::Small,
+        build: || crate::graph::examples::g1(),
+    },
+    SuiteEntry {
+        name: "ba-small",
+        category: "Social Network",
+        tier: Tier::Small,
+        build: || gen::barabasi_albert(2_000, 4, 101),
+    },
+    SuiteEntry {
+        name: "cliques-small",
+        category: "Web Graph (deep)",
+        tier: Tier::Small,
+        build: || gen::nested_cliques(8, 6, 6).0,
+    },
+    // ---- Standard tier (the paper-table suite) ----
+    SuiteEntry {
+        name: "social-ba",
+        category: "Social Network",
+        tier: Tier::Standard,
+        build: || gen::barabasi_albert(20_000, 8, 42),
+    },
+    SuiteEntry {
+        name: "social-rmat",
+        category: "Social Network",
+        tier: Tier::Standard,
+        build: || gen::rmat(15, 12, 0.57, 0.19, 0.19, 7),
+    },
+    SuiteEntry {
+        name: "comm-starburst",
+        category: "Communication",
+        tier: Tier::Standard,
+        build: || gen::star_burst(8, 15_000, 60_000, 11),
+    },
+    SuiteEntry {
+        name: "cite-er",
+        category: "Citation",
+        tier: Tier::Standard,
+        build: || gen::erdos_renyi(40_000, 320_000, 13),
+    },
+    SuiteEntry {
+        name: "collab-plc",
+        category: "Collaboration",
+        tier: Tier::Standard,
+        build: || gen::power_law_cluster(20_000, 8, 0.7, 17),
+    },
+    SuiteEntry {
+        name: "collab-caveman",
+        category: "Collaboration",
+        tier: Tier::Standard,
+        build: || gen::caveman(1_500, 12, 19),
+    },
+    SuiteEntry {
+        name: "web-planted",
+        category: "Web Graph",
+        tier: Tier::Standard,
+        build: || {
+            gen::planted_core(
+                30_000,
+                150_000,
+                &[(6_000, 24), (1_500, 60), (300, 120), (60, 200)],
+                23,
+            )
+        },
+    },
+    SuiteEntry {
+        name: "web-cliques",
+        category: "Web Graph (deep)",
+        tier: Tier::Standard,
+        build: || gen::nested_cliques(30, 12, 6).0,
+    },
+    SuiteEntry {
+        name: "web-coreperiph",
+        category: "Web Graph (deep)",
+        tier: Tier::Standard,
+        build: || gen::core_periphery(150_000, 120, 3),
+    },
+    SuiteEntry {
+        name: "road-grid",
+        category: "Mesh/Road",
+        tier: Tier::Standard,
+        build: || gen::grid2d(260, 260),
+    },
+    SuiteEntry {
+        name: "ba-dense",
+        category: "Social Network",
+        tier: Tier::Standard,
+        build: || gen::barabasi_albert(8_000, 16, 29),
+    },
+    // ---- Large tier ----
+    SuiteEntry {
+        name: "rmat-large",
+        category: "Social Network",
+        tier: Tier::Large,
+        build: || gen::rmat(17, 12, 0.57, 0.19, 0.19, 31),
+    },
+    SuiteEntry {
+        name: "ba-large",
+        category: "Social Network",
+        tier: Tier::Large,
+        build: || gen::barabasi_albert(150_000, 10, 37),
+    },
+    // ---- XLA tier (fits the (4096, 64) bucket) ----
+    SuiteEntry {
+        name: "xla-grid",
+        category: "Mesh/Road",
+        tier: Tier::Xla,
+        build: || gen::grid2d(64, 64),
+    },
+    SuiteEntry {
+        name: "xla-caveman",
+        category: "Collaboration",
+        tier: Tier::Xla,
+        build: || gen::caveman(512, 8, 41),
+    },
+    SuiteEntry {
+        name: "xla-er",
+        category: "Citation",
+        tier: Tier::Xla,
+        build: || gen::erdos_renyi(4_000, 12_000, 43),
+    },
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_partitions_by_tier() {
+        assert!(!suite(Tier::Small).is_empty());
+        assert!(suite(Tier::Standard).len() >= 8);
+        assert!(!suite(Tier::Xla).is_empty());
+    }
+
+    #[test]
+    fn small_entries_build_and_validate() {
+        for e in suite(Tier::Small) {
+            let g = e.build();
+            assert_eq!(g.validate(), Ok(()), "{}", e.name);
+            assert_eq!(g.name, e.name);
+        }
+    }
+
+    #[test]
+    fn xla_entries_fit_bucket() {
+        for e in suite(Tier::Xla) {
+            let g = e.build();
+            assert!(g.num_vertices() <= 4096, "{}", e.name);
+            assert!(g.max_degree() <= 64, "{} d_max={}", e.name, g.max_degree());
+        }
+    }
+
+    #[test]
+    fn by_name_finds() {
+        assert!(by_name("g1").is_some());
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn deterministic_rebuild() {
+        let a = by_name("ba-small").unwrap().build();
+        let b = by_name("ba-small").unwrap().build();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,108 @@
+//! Tiny argument parser: positional command + `--flag[=| ]value` options
+//! + boolean switches. Unknown flags are errors (typos should not pass
+//! silently).
+
+use anyhow::{bail, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub command: String,
+    pub options: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (without argv[0]). `switch_names` lists flags that
+    /// take no value.
+    pub fn parse(raw: &[String], switch_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with("--") {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(tok) = it.next() {
+            let Some(flag) = tok.strip_prefix("--") else {
+                bail!("unexpected positional argument '{tok}'");
+            };
+            if let Some((k, v)) = flag.split_once('=') {
+                out.options.insert(k.to_string(), v.to_string());
+            } else if switch_names.contains(&flag) {
+                out.switches.push(flag.to_string());
+            } else if let Some(next) = it.peek() {
+                if next.starts_with("--") {
+                    bail!("flag --{flag} expects a value");
+                }
+                out.options.insert(flag.to_string(), it.next().unwrap().clone());
+            } else {
+                bail!("flag --{flag} expects a value");
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn parse_num<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{key}: invalid value '{v}'")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(v: &[&str]) -> Vec<String> {
+        v.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_command_options_switches() {
+        let a = Args::parse(
+            &s(&["run", "--algo", "PeelOne", "--metrics", "--threads=4"]),
+            &["metrics"],
+        )
+        .unwrap();
+        assert_eq!(a.command, "run");
+        assert_eq!(a.get("algo"), Some("PeelOne"));
+        assert_eq!(a.get("threads"), Some("4"));
+        assert!(a.has("metrics"));
+        assert_eq!(a.parse_num::<usize>("threads").unwrap(), Some(4));
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&s(&["run", "--algo"]), &[]).is_err());
+        assert!(Args::parse(&s(&["run", "--algo", "--x"]), &[]).is_err());
+    }
+
+    #[test]
+    fn stray_positional_is_error() {
+        assert!(Args::parse(&s(&["run", "oops"]), &[]).is_err());
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = Args::parse(&s(&["run", "--threads", "many"]), &[]).unwrap();
+        assert!(a.parse_num::<usize>("threads").is_err());
+    }
+}

@@ -1,0 +1,40 @@
+//! Hand-rolled CLI (the environment carries no `clap`): a small flag
+//! parser plus the `pico` subcommands.
+
+pub mod args;
+pub mod commands;
+
+pub use args::Args;
+
+/// Top-level usage text.
+pub const USAGE: &str = "\
+pico — all k-core decomposition paradigms (PICO reproduction)
+
+USAGE:
+    pico <COMMAND> [OPTIONS]
+
+COMMANDS:
+    run       Decompose one dataset with one algorithm
+    suite     Run algorithms across the dataset suite (scheduler demo)
+    stats     Print Table II-style statistics for the suite
+    analyze   Fig. 3-style multi-access analysis of a dataset
+    doctor    Check the XLA runtime and artifacts
+    list      List algorithms and suite datasets
+    help      Show this message
+
+COMMON OPTIONS:
+    --threads N        SPMD worker threads (default: host parallelism)
+    --config PATH      Config file (default: ./pico.conf if present)
+
+RUN OPTIONS:
+    --algo NAME        Algorithm (see `pico list`); default PO-dyn
+    --dataset NAME     Suite dataset name, or a path to .el/.mtx/.pico
+    --no-validate      Skip the BZ oracle check
+    --metrics          Print instrumented counters
+
+EXAMPLES:
+    pico run --algo HistoCore --dataset social-ba --metrics
+    pico suite --algos PO-dyn,HistoCore --tier small
+    pico stats --tier standard
+    pico analyze --dataset social-rmat
+";

@@ -1,0 +1,138 @@
+//! Configuration: defaults < config file (`pico.conf`, INI-like) < env
+//! vars < CLI flags. The launcher (`pico`) and the bench binaries all
+//! resolve their knobs through [`Config`].
+
+pub mod parser;
+
+use anyhow::{Context, Result};
+use parser::KvFile;
+use std::path::Path;
+
+/// Resolved runtime configuration.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Config {
+    /// SPMD worker threads per decomposition.
+    pub threads: usize,
+    /// Timed repetitions per bench measurement.
+    pub bench_reps: usize,
+    /// Suite tier name (small | standard | large | xla).
+    pub suite_tier: String,
+    /// Scheduler memory budget in bytes.
+    pub memory_budget: u64,
+    /// Artifacts directory override (empty = default resolution).
+    pub artifacts_dir: String,
+    /// Base seed for generated workloads.
+    pub seed: u64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            threads: crate::util::default_threads(),
+            bench_reps: 3,
+            suite_tier: "standard".into(),
+            memory_budget: 8 << 30,
+            artifacts_dir: String::new(),
+            seed: 42,
+        }
+    }
+}
+
+impl Config {
+    /// Layer a parsed key-value file on top of `self`.
+    pub fn apply_file(&mut self, kv: &KvFile) -> Result<()> {
+        if let Some(v) = kv.get("threads") {
+            self.threads = v.parse().context("threads")?;
+        }
+        if let Some(v) = kv.get("bench.reps") {
+            self.bench_reps = v.parse().context("bench.reps")?;
+        }
+        if let Some(v) = kv.get("bench.suite") {
+            self.suite_tier = v.to_string();
+        }
+        if let Some(v) = kv.get("scheduler.memory_budget_mb") {
+            let mb: u64 = v.parse().context("scheduler.memory_budget_mb")?;
+            self.memory_budget = mb << 20;
+        }
+        if let Some(v) = kv.get("runtime.artifacts") {
+            self.artifacts_dir = v.to_string();
+        }
+        if let Some(v) = kv.get("seed") {
+            self.seed = v.parse().context("seed")?;
+        }
+        Ok(())
+    }
+
+    /// Layer environment variables on top.
+    pub fn apply_env(&mut self) {
+        if let Ok(v) = std::env::var("PICO_THREADS") {
+            if let Ok(n) = v.parse() {
+                self.threads = n;
+            }
+        }
+        if let Ok(v) = std::env::var("PICO_BENCH_REPS") {
+            if let Ok(n) = v.parse() {
+                self.bench_reps = n;
+            }
+        }
+        if let Ok(v) = std::env::var("PICO_SUITE") {
+            self.suite_tier = v;
+        }
+        if let Ok(v) = std::env::var("PICO_ARTIFACTS") {
+            self.artifacts_dir = v;
+        }
+    }
+
+    /// Full resolution: defaults, optional file, env.
+    pub fn load(path: Option<&Path>) -> Result<Self> {
+        let mut cfg = Self::default();
+        let candidate = path
+            .map(|p| p.to_path_buf())
+            .unwrap_or_else(|| "pico.conf".into());
+        if candidate.exists() {
+            let kv = KvFile::parse_file(&candidate)?;
+            cfg.apply_file(&kv)?;
+        } else if path.is_some() {
+            anyhow::bail!("config file {} not found", candidate.display());
+        }
+        cfg.apply_env();
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let c = Config::default();
+        assert!(c.threads >= 1);
+        assert_eq!(c.suite_tier, "standard");
+    }
+
+    #[test]
+    fn file_layering() {
+        let kv = KvFile::parse(
+            "threads = 7\n[bench]\nreps = 9\nsuite = small\n[scheduler]\nmemory_budget_mb = 64\n",
+        )
+        .unwrap();
+        let mut c = Config::default();
+        c.apply_file(&kv).unwrap();
+        assert_eq!(c.threads, 7);
+        assert_eq!(c.bench_reps, 9);
+        assert_eq!(c.suite_tier, "small");
+        assert_eq!(c.memory_budget, 64 << 20);
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let kv = KvFile::parse("threads = lots\n").unwrap();
+        assert!(Config::default().apply_file(&kv).is_err());
+    }
+
+    #[test]
+    fn missing_explicit_file_errors() {
+        assert!(Config::load(Some(Path::new("/no/such/pico.conf"))).is_err());
+    }
+}

@@ -1,0 +1,93 @@
+//! Minimal INI-style parser: `key = value` lines, `[section]` headers
+//! prefixing subsequent keys as `section.key`, `#`/`;` comments. Built
+//! in-tree because the environment is offline (no serde/toml crates).
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Parsed key-value file with section-qualified keys.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KvFile {
+    entries: BTreeMap<String, String>,
+}
+
+impl KvFile {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut entries = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') || line.starts_with(';') {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[') {
+                let name = name
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: unterminated section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("line {}: expected 'key = value', got '{line}'", lineno + 1);
+            };
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let mut value = v.trim();
+            // strip optional quotes
+            if value.len() >= 2 && value.starts_with('"') && value.ends_with('"') {
+                value = &value[1..value.len() - 1];
+            }
+            if entries.insert(key.clone(), value.to_string()).is_some() {
+                bail!("line {}: duplicate key '{key}'", lineno + 1);
+            }
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn parse_file(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.as_ref().display()))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.entries.get(key).map(|s| s.as_str())
+    }
+
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.entries.keys().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let kv = KvFile::parse(
+            "# top\nthreads = 4\n[bench]\n; c\nreps = 5\nsuite = \"small\"\n",
+        )
+        .unwrap();
+        assert_eq!(kv.get("threads"), Some("4"));
+        assert_eq!(kv.get("bench.reps"), Some("5"));
+        assert_eq!(kv.get("bench.suite"), Some("small"));
+        assert_eq!(kv.get("missing"), None);
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(KvFile::parse("just a line\n").is_err());
+        assert!(KvFile::parse("[open\n").is_err());
+        assert!(KvFile::parse("a = 1\na = 2\n").is_err());
+    }
+
+    #[test]
+    fn empty_ok() {
+        assert!(KvFile::parse("").unwrap().keys().next().is_none());
+    }
+}

@@ -1,0 +1,158 @@
+//! Job model: what to run, on what, and what came back.
+
+use crate::engine::metrics::MetricsSnapshot;
+use crate::graph::CsrGraph;
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Where a job's graph comes from.
+#[derive(Clone)]
+pub enum DatasetSpec {
+    /// Already materialised (generated suites, tests).
+    InMemory(Arc<CsrGraph>),
+    /// Load from a file at admission time.
+    Path(std::path::PathBuf),
+    /// Generate lazily from a named generator closure.
+    Lazy {
+        name: String,
+        build: Arc<dyn Fn() -> CsrGraph + Send + Sync>,
+    },
+}
+
+impl DatasetSpec {
+    pub fn name(&self) -> String {
+        match self {
+            DatasetSpec::InMemory(g) => g.name.clone(),
+            DatasetSpec::Path(p) => p
+                .file_stem()
+                .map(|s| s.to_string_lossy().into_owned())
+                .unwrap_or_else(|| p.display().to_string()),
+            DatasetSpec::Lazy { name, .. } => name.clone(),
+        }
+    }
+
+    /// Materialise the graph.
+    pub fn load(&self) -> anyhow::Result<Arc<CsrGraph>> {
+        match self {
+            DatasetSpec::InMemory(g) => Ok(g.clone()),
+            DatasetSpec::Path(p) => Ok(Arc::new(crate::graph::io::load(p)?)),
+            DatasetSpec::Lazy { build, .. } => Ok(Arc::new(build())),
+        }
+    }
+}
+
+impl std::fmt::Debug for DatasetSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "DatasetSpec({})", self.name())
+    }
+}
+
+/// One decomposition request.
+#[derive(Clone, Debug)]
+pub struct Job {
+    pub dataset: DatasetSpec,
+    /// Registry name (`PeelOne`, `HistoCore`, `VecPeel(XLA)`, …).
+    pub algorithm: String,
+    pub threads: usize,
+    pub metrics: bool,
+    /// Validate the output against the BZ oracle.
+    pub validate: bool,
+}
+
+impl Job {
+    pub fn new(dataset: DatasetSpec, algorithm: impl Into<String>) -> Self {
+        Self {
+            dataset,
+            algorithm: algorithm.into(),
+            threads: crate::util::default_threads(),
+            metrics: false,
+            validate: true,
+        }
+    }
+
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads;
+        self
+    }
+
+    pub fn with_metrics(mut self, metrics: bool) -> Self {
+        self.metrics = metrics;
+        self
+    }
+
+    pub fn with_validation(mut self, validate: bool) -> Self {
+        self.validate = validate;
+        self
+    }
+}
+
+/// Terminal state of a job.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum JobOutcome {
+    /// Completed; coreness validated if requested.
+    Ok,
+    /// Completed but the oracle check failed (message).
+    ValidationFailed(String),
+    /// Rejected at admission (unknown algorithm, load failure, budget).
+    Rejected(String),
+    /// The algorithm panicked (contained; message).
+    Panicked(String),
+}
+
+/// What came back.
+#[derive(Clone, Debug)]
+pub struct JobResult {
+    pub dataset: String,
+    pub algorithm: String,
+    pub outcome: JobOutcome,
+    pub elapsed: Duration,
+    pub iterations: usize,
+    pub launches: usize,
+    pub k_max: u32,
+    pub vertices: u64,
+    pub edges: u64,
+    pub metrics: MetricsSnapshot,
+}
+
+impl JobResult {
+    pub fn ok(&self) -> bool {
+        self.outcome == JobOutcome::Ok
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed.as_secs_f64() * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+
+    #[test]
+    fn dataset_names() {
+        let g = Arc::new(examples::g1());
+        assert_eq!(DatasetSpec::InMemory(g).name(), "G1");
+        assert_eq!(
+            DatasetSpec::Path("/tmp/foo.el".into()).name(),
+            "foo"
+        );
+        let lazy = DatasetSpec::Lazy {
+            name: "lz".into(),
+            build: Arc::new(|| examples::g1()),
+        };
+        assert_eq!(lazy.name(), "lz");
+        assert_eq!(lazy.load().unwrap().num_vertices(), 6);
+    }
+
+    #[test]
+    fn job_builder() {
+        let j = Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "PeelOne")
+            .with_threads(3)
+            .with_metrics(true)
+            .with_validation(false);
+        assert_eq!(j.threads, 3);
+        assert!(j.metrics);
+        assert!(!j.validate);
+    }
+}

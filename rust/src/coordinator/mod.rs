@@ -1,0 +1,19 @@
+//! Layer-3 coordinator: the job scheduler that turns decomposition
+//! requests (dataset × algorithm × options) into validated, instrumented
+//! results.
+//!
+//! * [`job`] — job specs and results;
+//! * [`registry`] — algorithm lookup by name (all eight native algorithms,
+//!   the VC framework baseline, and the XLA vectorised engines);
+//! * [`scheduler`] — admission (memory budget), dispatch, failure
+//!   containment (a panicking job is reported, not fatal), aggregation;
+//! * [`report`] — plain-text table rendering for results.
+
+pub mod job;
+pub mod registry;
+pub mod report;
+pub mod scheduler;
+
+pub use job::{DatasetSpec, Job, JobOutcome, JobResult};
+pub use registry::{algorithm_by_name, algorithm_names};
+pub use scheduler::{Scheduler, SchedulerConfig};

@@ -1,0 +1,78 @@
+//! Algorithm registry: name → [`Decomposer`] instance, covering every
+//! algorithm the paper's tables reference plus the XLA vectorised engines.
+
+use crate::core::{bz::Bz, index2core, peel, Decomposer};
+use crate::vc::VcPeel;
+use anyhow::{bail, Result};
+
+/// All registry names, in the order the tables print them.
+pub fn algorithm_names() -> Vec<&'static str> {
+    vec![
+        "BZ",
+        "GPP",
+        "PeelOne",
+        "PP-dyn",
+        "PO-dyn",
+        "VC-Peel(Gunrock)",
+        "NbrCore",
+        "CntCore",
+        "HistoCore",
+        "Hybrid",
+        "VecPeel(XLA)",
+        "VecHindex(XLA)",
+    ]
+}
+
+/// Instantiate an algorithm by name. The XLA engines require built
+/// artifacts; their construction error propagates here.
+pub fn algorithm_by_name(name: &str) -> Result<Box<dyn Decomposer>> {
+    Ok(match name {
+        "BZ" => Box::new(Bz),
+        "GPP" => Box::new(peel::Gpp),
+        "PeelOne" => Box::new(peel::PeelOne),
+        "PP-dyn" => Box::new(peel::PpDyn),
+        "PO-dyn" => Box::new(peel::PoDyn),
+        "VC-Peel(Gunrock)" => Box::new(VcPeel),
+        "NbrCore" => Box::new(index2core::NbrCore),
+        "CntCore" => Box::new(index2core::CntCore),
+        "HistoCore" => Box::new(index2core::HistoCore),
+        "Hybrid" => Box::new(crate::core::Hybrid::default()),
+        "VecPeel(XLA)" => Box::new(crate::runtime::VecPeel::open_default()?),
+        "VecHindex(XLA)" => Box::new(crate::runtime::VecHindex::open_default()?),
+        other => bail!(
+            "unknown algorithm '{other}' (known: {})",
+            algorithm_names().join(", ")
+        ),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+
+    #[test]
+    fn native_algorithms_resolve_and_run() {
+        for name in ["BZ", "GPP", "PeelOne", "PP-dyn", "PO-dyn", "NbrCore", "CntCore", "HistoCore", "VC-Peel(Gunrock)"] {
+            let algo = algorithm_by_name(name).unwrap();
+            assert_eq!(algo.name(), name);
+            let r = algo.decompose_with(&examples::g1(), 2, false);
+            assert_eq!(r.core, examples::g1_coreness(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_name_is_error() {
+        match algorithm_by_name("NopeCore") {
+            Ok(_) => panic!("should have failed"),
+            Err(err) => assert!(err.to_string().contains("unknown algorithm")),
+        }
+    }
+
+    #[test]
+    fn names_list_is_complete() {
+        for n in algorithm_names() {
+            assert!(algorithm_by_name(n).is_ok(), "{n} unresolvable");
+        }
+    }
+}

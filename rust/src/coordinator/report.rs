@@ -1,0 +1,129 @@
+//! Plain-text table rendering for job results — the same row shapes the
+//! paper's tables use (time in ms, iteration counts in parentheses,
+//! speedup columns).
+
+use super::job::{JobOutcome, JobResult};
+use crate::util::fmt;
+
+/// Simple column-aligned table builder.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Self {
+        Self {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize]| -> String {
+            let mut line = String::new();
+            for (c, cell) in cells.iter().enumerate() {
+                if c > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:>width$}", cell, width = widths[c]));
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Status glyph for a result.
+pub fn status(r: &JobResult) -> String {
+    match &r.outcome {
+        JobOutcome::Ok => "ok".into(),
+        JobOutcome::ValidationFailed(_) => "BAD".into(),
+        JobOutcome::Rejected(m) => format!("rejected: {m}"),
+        JobOutcome::Panicked(m) => format!("panic: {m}"),
+    }
+}
+
+/// Render a batch of results grouped as one table.
+pub fn render_results(results: &[JobResult]) -> String {
+    let mut t = Table::new(&[
+        "dataset", "|V|", "|E|", "algorithm", "time(ms)", "iters", "k_max", "status",
+    ]);
+    for r in results {
+        t.row(vec![
+            r.dataset.clone(),
+            fmt::si(r.vertices),
+            fmt::si(r.edges),
+            r.algorithm.clone(),
+            fmt::ms(r.elapsed_ms()),
+            r.iterations.to_string(),
+            r.k_max.to_string(),
+            status(r),
+        ]);
+    }
+    t.render()
+}
+
+/// Geometric mean of pairwise speedups (baseline time / candidate time),
+/// the aggregate the paper quotes ("average speedup of 1.9x").
+pub fn geomean_speedup(pairs: &[(f64, f64)]) -> f64 {
+    if pairs.is_empty() {
+        return f64::NAN;
+    }
+    let log_sum: f64 = pairs
+        .iter()
+        .map(|&(base, cand)| (base / cand).ln())
+        .sum();
+    (log_sum / pairs.len() as f64).exp()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["a", "bbbb"]);
+        t.row(vec!["xxx".into(), "1".into()]);
+        let s = t.render();
+        assert!(s.contains("a  bbbb") || s.contains("  a  bbbb"));
+        assert!(s.lines().count() == 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn row_arity_checked() {
+        Table::new(&["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean_speedup(&[(2.0, 1.0)]) - 2.0).abs() < 1e-12);
+        // 4x and 1x -> 2x geometric mean
+        assert!((geomean_speedup(&[(4.0, 1.0), (1.0, 1.0)]) - 2.0).abs() < 1e-12);
+        assert!(geomean_speedup(&[]).is_nan());
+    }
+}

@@ -1,0 +1,222 @@
+//! The scheduler: admission control, dispatch, failure containment.
+//!
+//! Jobs flow through three stages:
+//! 1. **Admission** — resolve the algorithm, materialise the dataset,
+//!    check it against the memory budget; failures become
+//!    [`JobOutcome::Rejected`] results, never panics.
+//! 2. **Dispatch** — jobs run on a pool of scheduler workers; each
+//!    decomposition itself fans out over its own SPMD threads, so the
+//!    scheduler default is one job at a time (`job_slots = 1`) and the
+//!    knob exists for multi-tenant hosts.
+//! 3. **Containment** — a panicking algorithm is caught
+//!    (`catch_unwind`) and reported as [`JobOutcome::Panicked`]; the
+//!    suite keeps running.
+
+use super::job::{Job, JobOutcome, JobResult};
+use super::registry::algorithm_by_name;
+use crate::core::verify::check_against_oracle;
+use crate::engine::metrics::MetricsSnapshot;
+use crate::util::timer::Timer;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Scheduler tuning.
+#[derive(Clone, Debug)]
+pub struct SchedulerConfig {
+    /// Concurrent job slots (decompositions already use all cores; keep 1
+    /// unless jobs are tiny).
+    pub job_slots: usize,
+    /// Reject datasets whose resident CSR exceeds this (bytes).
+    pub memory_budget: u64,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        Self {
+            job_slots: 1,
+            memory_budget: 8 << 30, // 8 GiB
+        }
+    }
+}
+
+/// Batch scheduler.
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Self { cfg }
+    }
+
+    /// Run all jobs; results come back in submission order.
+    pub fn run(&self, jobs: Vec<Job>) -> Vec<JobResult> {
+        let n = jobs.len();
+        let results: Vec<Mutex<Option<JobResult>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        let cursor = AtomicUsize::new(0);
+        let slots = self.cfg.job_slots.max(1).min(n.max(1));
+
+        crossbeam_utils::thread::scope(|scope| {
+            for _ in 0..slots {
+                scope.spawn(|_| loop {
+                    let i = cursor.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    let result = self.run_one(&jobs[i]);
+                    *results[i].lock().unwrap() = Some(result);
+                });
+            }
+        })
+        .expect("scheduler worker panicked outside containment");
+
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("job skipped"))
+            .collect()
+    }
+
+    /// Run a single job through admission, dispatch, containment.
+    pub fn run_one(&self, job: &Job) -> JobResult {
+        let dataset_name = job.dataset.name();
+        let rejected = |msg: String| JobResult {
+            dataset: dataset_name.clone(),
+            algorithm: job.algorithm.clone(),
+            outcome: JobOutcome::Rejected(msg),
+            elapsed: std::time::Duration::ZERO,
+            iterations: 0,
+            launches: 0,
+            k_max: 0,
+            vertices: 0,
+            edges: 0,
+            metrics: MetricsSnapshot::default(),
+        };
+
+        // --- admission ---
+        let algo = match algorithm_by_name(&job.algorithm) {
+            Ok(a) => a,
+            Err(e) => return rejected(e.to_string()),
+        };
+        let g = match job.dataset.load() {
+            Ok(g) => g,
+            Err(e) => return rejected(format!("dataset load failed: {e}")),
+        };
+        if g.resident_bytes() > self.cfg.memory_budget {
+            return rejected(format!(
+                "graph needs {} bytes, budget is {}",
+                g.resident_bytes(),
+                self.cfg.memory_budget
+            ));
+        }
+
+        // --- dispatch with containment ---
+        let timer = Timer::start();
+        let run = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            algo.decompose_with(&g, job.threads, job.metrics)
+        }));
+        let elapsed = timer.elapsed();
+
+        match run {
+            Err(panic) => {
+                let msg = panic
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| panic.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "opaque panic".into());
+                JobResult {
+                    dataset: dataset_name,
+                    algorithm: job.algorithm.clone(),
+                    outcome: JobOutcome::Panicked(msg),
+                    elapsed,
+                    iterations: 0,
+                    launches: 0,
+                    k_max: 0,
+                    vertices: g.num_vertices() as u64,
+                    edges: g.num_edges(),
+                    metrics: MetricsSnapshot::default(),
+                }
+            }
+            Ok(r) => {
+                let outcome = if job.validate {
+                    match check_against_oracle(&g, &r.core) {
+                        Ok(()) => JobOutcome::Ok,
+                        Err(e) => JobOutcome::ValidationFailed(e),
+                    }
+                } else {
+                    JobOutcome::Ok
+                };
+                JobResult {
+                    dataset: dataset_name,
+                    algorithm: job.algorithm.clone(),
+                    outcome,
+                    elapsed,
+                    iterations: r.iterations,
+                    launches: r.launches,
+                    k_max: r.k_max(),
+                    vertices: g.num_vertices() as u64,
+                    edges: g.num_edges(),
+                    metrics: r.metrics,
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::job::DatasetSpec;
+    use crate::graph::examples;
+    use std::sync::Arc;
+
+    fn g1_job(algo: &str) -> Job {
+        Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), algo).with_threads(2)
+    }
+
+    #[test]
+    fn runs_and_validates() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        let r = s.run_one(&g1_job("PO-dyn"));
+        assert!(r.ok(), "{:?}", r.outcome);
+        assert_eq!(r.k_max, 2);
+        assert_eq!(r.vertices, 6);
+    }
+
+    #[test]
+    fn unknown_algorithm_rejected() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        let r = s.run_one(&g1_job("NopeCore"));
+        assert!(matches!(r.outcome, JobOutcome::Rejected(_)));
+    }
+
+    #[test]
+    fn memory_budget_enforced() {
+        let s = Scheduler::new(SchedulerConfig {
+            memory_budget: 8, // 8 bytes: nothing fits
+            ..Default::default()
+        });
+        let r = s.run_one(&g1_job("PeelOne"));
+        assert!(matches!(r.outcome, JobOutcome::Rejected(ref m) if m.contains("budget")));
+    }
+
+    #[test]
+    fn batch_preserves_order() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        let jobs = vec![g1_job("BZ"), g1_job("PeelOne"), g1_job("HistoCore")];
+        let rs = s.run(jobs);
+        assert_eq!(rs.len(), 3);
+        assert_eq!(rs[0].algorithm, "BZ");
+        assert_eq!(rs[1].algorithm, "PeelOne");
+        assert_eq!(rs[2].algorithm, "HistoCore");
+        assert!(rs.iter().all(|r| r.ok()));
+    }
+
+    #[test]
+    fn dataset_load_failure_is_rejection() {
+        let s = Scheduler::new(SchedulerConfig::default());
+        let j = Job::new(DatasetSpec::Path("/nonexistent/x.el".into()), "BZ");
+        let r = s.run_one(&j);
+        assert!(matches!(r.outcome, JobOutcome::Rejected(ref m) if m.contains("load failed")));
+    }
+}

@@ -1,0 +1,143 @@
+//! Batagelj–Zaversnik serial peel (the O(M) bucket-sort algorithm, paper
+//! ref [33]) — the ground-truth oracle every parallel algorithm and every
+//! bench run is validated against.
+
+use super::traits::{DecompositionResult, Decomposer, Paradigm};
+use crate::engine::metrics::MetricsSnapshot;
+use crate::graph::CsrGraph;
+
+/// Serial BZ decomposition.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Bz;
+
+/// Plain-function form: coreness of every vertex in O(M).
+pub fn bz_coreness(g: &CsrGraph) -> Vec<u32> {
+    let n = g.num_vertices();
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut deg: Vec<u32> = g.degrees();
+    let max_deg = *deg.iter().max().unwrap() as usize;
+
+    // bin[d] = start index of the block of vertices with degree d.
+    let mut bin = vec![0usize; max_deg + 2];
+    for &d in &deg {
+        bin[d as usize + 1] += 1;
+    }
+    for d in 0..=max_deg {
+        bin[d + 1] += bin[d];
+    }
+    // vert = vertices sorted by degree; pos[v] = index of v in vert.
+    let mut vert = vec![0u32; n];
+    let mut pos = vec![0usize; n];
+    {
+        let mut cursor = bin.clone();
+        for v in 0..n {
+            let d = deg[v] as usize;
+            vert[cursor[d]] = v as u32;
+            pos[v] = cursor[d];
+            cursor[d] += 1;
+        }
+    }
+
+    // Peel in ascending degree order, shifting neighbors to lower bins.
+    let mut core = vec![0u32; n];
+    for i in 0..n {
+        let v = vert[i];
+        core[v as usize] = deg[v as usize];
+        for &u in g.neighbors(v) {
+            let u = u as usize;
+            if deg[u] > deg[v as usize] {
+                let du = deg[u] as usize;
+                let pu = pos[u];
+                // first vertex of u's current bin
+                let pw = bin[du];
+                let w = vert[pw];
+                if u as u32 != w {
+                    vert[pu] = w;
+                    vert[pw] = u as u32;
+                    pos[u] = pw;
+                    pos[w as usize] = pu;
+                }
+                bin[du] += 1;
+                deg[u] -= 1;
+            }
+        }
+    }
+    core
+}
+
+impl Decomposer for Bz {
+    fn name(&self) -> &'static str {
+        "BZ"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Serial
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, _threads: usize, _metrics: bool) -> DecompositionResult {
+        DecompositionResult {
+            core: bz_coreness(g),
+            iterations: 1,
+            launches: 0,
+            metrics: MetricsSnapshot::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+
+    #[test]
+    fn g1_matches_paper() {
+        assert_eq!(bz_coreness(&examples::g1()), examples::g1_coreness());
+    }
+
+    #[test]
+    fn complete_graph() {
+        let g = examples::complete(8);
+        assert_eq!(bz_coreness(&g), vec![7; 8]);
+    }
+
+    #[test]
+    fn path_is_one_core() {
+        assert_eq!(bz_coreness(&examples::path(10)), vec![1; 10]);
+    }
+
+    #[test]
+    fn cycle_is_two_core() {
+        assert_eq!(bz_coreness(&examples::cycle(9)), vec![2; 9]);
+    }
+
+    #[test]
+    fn star_and_isolated() {
+        let g = examples::star(5);
+        assert_eq!(bz_coreness(&g), vec![1; 6]);
+        let g = crate::graph::GraphBuilder::new(3).build("iso");
+        assert_eq!(bz_coreness(&g), vec![0; 3]);
+    }
+
+    #[test]
+    fn empty_graph() {
+        let g = crate::graph::CsrGraph::from_parts(vec![0], vec![], "e");
+        assert_eq!(bz_coreness(&g), Vec::<u32>::new());
+    }
+
+    #[test]
+    fn clique_chain_exact() {
+        let (g, expected) = crate::graph::gen::nested_cliques(4, 3, 4);
+        assert_eq!(bz_coreness(&g), expected);
+    }
+
+    #[test]
+    fn coreness_le_degree() {
+        let g = crate::graph::gen::erdos_renyi(500, 2500, 42);
+        let core = bz_coreness(&g);
+        for v in 0..g.num_vertices() {
+            assert!(core[v] <= g.degree(v as u32));
+        }
+    }
+}

@@ -1,0 +1,137 @@
+//! The `HINDEX` function shared by all Index2core algorithms (§IV, Fig. 6):
+//! for a vertex with neighbor estimates `vals`, the h-index is the largest
+//! `h` such that at least `h` neighbors have estimate ≥ `h`.
+//!
+//! Decomposed exactly as the paper's Step I (histogram, capped at the
+//! vertex's own ceiling) + Step II (reverse cumulative sum).
+
+/// Reusable per-worker scratch for histogram construction.
+#[derive(Debug, Default)]
+pub struct HindexScratch {
+    histo: Vec<u32>,
+}
+
+impl HindexScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn ensure(&mut self, cap: usize) {
+        if self.histo.len() < cap + 1 {
+            self.histo.resize(cap + 1, 0);
+        }
+    }
+}
+
+/// h-index of `vals`, capped at `cap` (a vertex's estimate can never
+/// exceed its previous estimate, so callers pass the current `core[v]`;
+/// capping also bounds the histogram at `cap + 1` slots — the paper's
+/// `min(core[u], core[v])` trick).
+///
+/// Scratch is cleared incrementally (only touched slots), so amortised
+/// cost is O(len(vals)) regardless of global max degree.
+pub fn hindex_capped(
+    vals: impl Iterator<Item = u32> + Clone,
+    cap: u32,
+    scratch: &mut HindexScratch,
+) -> u32 {
+    let cap_us = cap as usize;
+    scratch.ensure(cap_us);
+    // Step I: histogram with values clamped to cap.
+    for v in vals.clone() {
+        let slot = (v.min(cap)) as usize;
+        scratch.histo[slot] += 1;
+    }
+    // Step II: reverse cumulative sum until sum >= k.
+    let mut sum = 0u32;
+    let mut h = 0u32;
+    let mut k = cap;
+    while k >= 1 {
+        sum += scratch.histo[k as usize];
+        if sum >= k {
+            h = k;
+            break;
+        }
+        k -= 1;
+    }
+    // Incremental clear.
+    for v in vals {
+        let slot = (v.min(cap)) as usize;
+        scratch.histo[slot] = 0;
+    }
+    h
+}
+
+/// Convenience for tests / the oracle: h-index of a slice, no cap beyond
+/// its length (h can never exceed the number of values).
+pub fn hindex(vals: &[u32]) -> u32 {
+    let mut scratch = HindexScratch::new();
+    hindex_capped(vals.iter().copied(), vals.len() as u32, &mut scratch)
+}
+
+/// `cnt(u)` of CntCore (Alg 5): the number of values ≥ `threshold`.
+pub fn cnt_at_least(vals: impl Iterator<Item = u32>, threshold: u32) -> u32 {
+    vals.filter(|&v| v >= threshold).count() as u32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_example_v5() {
+        // Fig. 6: v5's neighbors have estimates {1, 1, 2, 2, 3} -> h = 2.
+        assert_eq!(hindex(&[1, 1, 2, 2, 3]), 2);
+    }
+
+    #[test]
+    fn basic_cases() {
+        assert_eq!(hindex(&[]), 0);
+        assert_eq!(hindex(&[0]), 0);
+        assert_eq!(hindex(&[5]), 1);
+        assert_eq!(hindex(&[1, 1, 1]), 1);
+        assert_eq!(hindex(&[3, 3, 3]), 3);
+        assert_eq!(hindex(&[10, 10, 10, 10]), 4);
+        assert_eq!(hindex(&[4, 3, 2, 1]), 2);
+    }
+
+    #[test]
+    fn cap_bounds_result() {
+        let mut s = HindexScratch::new();
+        assert_eq!(hindex_capped([9, 9, 9, 9].iter().copied(), 2, &mut s), 2);
+        assert_eq!(hindex_capped([9, 9, 9, 9].iter().copied(), 10, &mut s), 4);
+    }
+
+    #[test]
+    fn scratch_reuse_is_clean() {
+        let mut s = HindexScratch::new();
+        assert_eq!(hindex_capped([3, 3, 3].iter().copied(), 3, &mut s), 3);
+        // if the scratch were dirty, this would over-count
+        assert_eq!(hindex_capped([1].iter().copied(), 3, &mut s), 1);
+        assert_eq!(hindex_capped([0, 0].iter().copied(), 3, &mut s), 0);
+    }
+
+    #[test]
+    fn matches_naive_definition() {
+        // naive: max h with count(vals >= h) >= h
+        let naive = |vals: &[u32]| -> u32 {
+            (0..=vals.len() as u32)
+                .filter(|&h| vals.iter().filter(|&&v| v >= h).count() as u32 >= h)
+                .max()
+                .unwrap_or(0)
+        };
+        let mut rng = crate::util::rng::Rng::new(17);
+        for _ in 0..500 {
+            let len = rng.below_usize(12);
+            let vals: Vec<u32> = (0..len).map(|_| rng.below(10) as u32).collect();
+            assert_eq!(hindex(&vals), naive(&vals), "vals={vals:?}");
+        }
+    }
+
+    #[test]
+    fn cnt_matches_definition() {
+        assert_eq!(cnt_at_least([1, 2, 3, 4].iter().copied(), 3), 2);
+        assert_eq!(cnt_at_least([].iter().copied(), 1), 0);
+        assert_eq!(cnt_at_least([5, 5].iter().copied(), 0), 2);
+    }
+}

@@ -1,0 +1,282 @@
+//! HistoCore (Algorithm 6) — the paper's flagship Index2core algorithm.
+//!
+//! CntCore still re-reads every neighbor of a multi-changed frontier to
+//! rebuild its histogram (Step I of HINDEX). HistoCore maintains one
+//! global, *up-to-date* histogram per vertex:
+//!
+//! * `InitHisto` builds `histo[v][min(deg(u), deg(v))]++` once;
+//! * `SumHisto` recomputes a frontier vertex's estimate by the reverse
+//!   cumulative sum alone (Step II) — **no neighbor access** — and stores
+//!   the byproduct `sum` into slot `h` (the cnt-slot trick, line 15);
+//! * `UpdateHisto` propagates a changed vertex's drop `oldcore → core` to
+//!   each neighbor `u` with `core[u] > core[v]` by one atomic decrement at
+//!   slot `min(oldcore[v], core[u])` and one increment at `core[v]`; the
+//!   decrement's return value crossing `core[u]` is exactly the Theorem-2
+//!   frontier signal (lines 19–23).
+//!
+//! Slots are capped at the owner's current estimate, so when an estimate
+//! drops to `h` the suffix `h+1..` of its histogram becomes dead and the
+//! stored `sum` re-normalises slot `h` — the capping invariant the tests
+//! in `rust/tests/properties.rs` exercise.
+
+use crate::core::traits::{DecompositionResult, Decomposer, Paradigm};
+use crate::engine::atomics::AtomicCoreArray;
+use crate::engine::frontier::{NextFrontier, WorkList};
+use crate::engine::metrics::Metrics;
+use crate::engine::spmd::run_spmd;
+use crate::graph::CsrGraph;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Algorithm 6.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct HistoCore;
+
+impl Decomposer for HistoCore {
+    fn name(&self) -> &'static str {
+        "HistoCore"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Index2core
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, threads: usize, metrics_on: bool) -> DecompositionResult {
+        let n = g.num_vertices();
+        let metrics = Metrics::new(threads, metrics_on);
+        if n == 0 {
+            return DecompositionResult {
+                core: vec![],
+                iterations: 0,
+                launches: 0,
+                metrics: metrics.snapshot(),
+            };
+        }
+
+        let core = AtomicCoreArray::from_vec(g.degrees());
+        let oldcore = AtomicCoreArray::from_vec(g.degrees());
+
+        // Per-vertex histogram rows, flattened: row v has deg(v)+1 slots
+        // (estimates are capped at deg(v)), at offset csr_offset[v] + v.
+        // Zeroed via memset (atomic_u32_zeroed), not element-wise init —
+        // this is an O(2|E|) allocation on the hot path.
+        let offsets = g.offsets();
+        let row = |v: usize| (offsets[v] as usize) + v;
+        let histo: Vec<AtomicU32> =
+            crate::engine::atomics::atomic_u32_zeroed(offsets[n] as usize + n);
+        // Dense degree array: InitHisto reads deg(u) per arc; going through
+        // the 8-byte offsets array doubles the random-access traffic.
+        let degs: Vec<u32> = g.degrees();
+
+        let frontier: Mutex<Arc<Vec<u32>>> = Mutex::new(Arc::new((0..n as u32).collect()));
+        let changed = WorkList::new(n);
+        let vcnt = NextFrontier::new(n);
+        let sum_cursor = AtomicUsize::new(0);
+        let upd_cursor = AtomicUsize::new(0);
+        let iterations = AtomicUsize::new(0);
+
+        let launches = run_spmd(threads, |ctx| {
+            let mv = metrics.view(ctx.tid);
+
+            // ---- InitHisto kernel (lines 2–4) ----
+            for v in ctx.static_chunk(n) {
+                let dv = degs[v];
+                let base = row(v);
+                for &u in g.neighbors(v as u32) {
+                    mv.edge_accesses(1);
+                    let slot = degs[u as usize].min(dv) as usize;
+                    // row owned by this worker: uncontended add
+                    let cell = &histo[base + slot];
+                    cell.store(cell.load(Ordering::Relaxed) + 1, Ordering::Relaxed);
+                }
+            }
+            ctx.launch_boundary();
+
+            loop {
+                let front = frontier.lock().unwrap().clone();
+                if front.is_empty() {
+                    break;
+                }
+
+                // ---- SumHisto kernel (lines 9–16) ----
+                for range in ctx.dynamic_chunks(front.len(), 64, &sum_cursor) {
+                    for &v in &front[range] {
+                        let v = v as usize;
+                        let old = core.load(v);
+                        let base = row(v);
+                        let mut sum = 0u32;
+                        let mut k = old;
+                        while k >= 1 {
+                            sum += histo[base + k as usize].load(Ordering::Relaxed);
+                            if sum >= k {
+                                break;
+                            }
+                            k -= 1;
+                        }
+                        let h = k;
+                        // the paper counts the decoupling win in slot reads,
+                        // not neighbor reads:
+                        mv.hindex_evals(1);
+                        mv.edge_accesses((old - h + 1) as u64);
+                        // cnt-slot byproduct (line 15): sum == cnt(v)
+                        histo[base + h as usize].store(sum, Ordering::Relaxed);
+                        if h != old {
+                            core.store(v, h);
+                            oldcore.store(v, old);
+                            changed.push(v as u32);
+                        }
+                    }
+                }
+                ctx.launch_boundary();
+
+                // ---- UpdateHisto kernel (lines 17–23) ----
+                // Single-worker runs use plain load/store in place of the
+                // LOCK-prefixed RMWs (same semantics, ~15x cheaper; the
+                // GPU original pays the same price for both, which is why
+                // the paper counts them rather than special-casing).
+                let seq = ctx.num_threads == 1;
+                let csize = changed.pushed();
+                for range in ctx.dynamic_chunks(csize, 32, &upd_cursor) {
+                    for i in range {
+                        let v = changed.get(i) as usize;
+                        let cv = core.load(v);
+                        let ov = oldcore.load(v);
+                        for &u in g.neighbors(v as u32) {
+                            mv.edge_accesses(1);
+                            let u = u as usize;
+                            let cu = core.load(u);
+                            if cu > cv {
+                                let base = row(u);
+                                let dec_slot = base + ov.min(cu) as usize;
+                                let add_slot = base + cv as usize;
+                                // CUDA atomicSub returns the OLD value
+                                let cnt_value = if seq {
+                                    let old = histo[dec_slot].load(Ordering::Relaxed);
+                                    histo[dec_slot].store(old - 1, Ordering::Relaxed);
+                                    let a = histo[add_slot].load(Ordering::Relaxed);
+                                    histo[add_slot].store(a + 1, Ordering::Relaxed);
+                                    old
+                                } else {
+                                    let old = histo[dec_slot].fetch_sub(1, Ordering::Relaxed);
+                                    histo[add_slot].fetch_add(1, Ordering::Relaxed);
+                                    old
+                                };
+                                mv.atomic_subs(1);
+                                mv.atomic_adds(1);
+                                if ov >= cu && cnt_value == cu {
+                                    // cnt crossed below core[u]: Theorem-2
+                                    // frontier signal
+                                    vcnt.push(u as u32);
+                                    mv.frontier_pushes(1);
+                                }
+                            }
+                        }
+                    }
+                }
+                ctx.launch_boundary();
+
+                if ctx.tid == 0 {
+                    iterations.fetch_add(1, Ordering::Relaxed);
+                    *frontier.lock().unwrap() = Arc::new(vcnt.take());
+                    changed.reset();
+                    sum_cursor.store(0, Ordering::Relaxed);
+                    upd_cursor.store(0, Ordering::Relaxed);
+                }
+                ctx.barrier();
+            }
+        });
+
+        DecompositionResult {
+            core: core.to_vec(),
+            iterations: iterations.load(Ordering::Relaxed),
+            launches,
+            metrics: metrics.snapshot(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::{examples, gen};
+
+    #[test]
+    fn g1_matches_paper() {
+        let r = HistoCore.decompose_with(&examples::g1(), 2, false);
+        assert_eq!(r.core, examples::g1_coreness());
+    }
+
+    #[test]
+    fn matches_bz_on_random_graphs() {
+        for seed in 0..4 {
+            let g = gen::erdos_renyi(400, 1600, seed);
+            assert_eq!(
+                HistoCore.decompose_with(&g, 4, false).core,
+                bz_coreness(&g),
+                "seed={seed}"
+            );
+        }
+    }
+
+    #[test]
+    fn matches_bz_on_skewed_graphs() {
+        let g = gen::rmat(9, 8, 0.57, 0.19, 0.19, 6);
+        assert_eq!(HistoCore.decompose_with(&g, 8, false).core, bz_coreness(&g));
+        let g = gen::star_burst(3, 150, 300, 8);
+        assert_eq!(HistoCore.decompose_with(&g, 8, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn matches_bz_on_planted_and_caveman() {
+        let g = gen::planted_core(1200, 3600, &[(240, 12), (60, 24)], 19);
+        assert_eq!(HistoCore.decompose_with(&g, 4, false).core, bz_coreness(&g));
+        let g = gen::caveman(25, 7, 4);
+        assert_eq!(HistoCore.decompose_with(&g, 4, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn clique_chain_exact() {
+        let (g, expected) = gen::nested_cliques(3, 4, 3);
+        assert_eq!(HistoCore.decompose_with(&g, 4, false).core, expected);
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let g = gen::barabasi_albert(600, 3, 15);
+        assert_eq!(HistoCore.decompose_with(&g, 1, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn fewer_edge_accesses_than_cntcore() {
+        // The §IV claim: the up-to-date histo array removes the repeated
+        // neighbor sweeps of multi-changed frontiers.
+        let g = gen::barabasi_albert(3000, 5, 33);
+        let hc = HistoCore.decompose_with(&g, 4, true);
+        let cc = crate::core::index2core::CntCore.decompose_with(&g, 4, true);
+        assert_eq!(hc.core, cc.core);
+        assert!(
+            hc.metrics.edge_accesses < cc.metrics.edge_accesses,
+            "HistoCore {} vs CntCore {}",
+            hc.metrics.edge_accesses,
+            cc.metrics.edge_accesses
+        );
+    }
+
+    #[test]
+    fn l2_close_to_cntcore_on_g1() {
+        // Both locate frontiers by cnt; sweep counts differ by at most the
+        // final empty-frontier check (CntCore counts an active-but-stable
+        // sweep, HistoCore exits on an empty V_cnt).
+        let hc = HistoCore.decompose_with(&examples::g1(), 1, false);
+        let cc = crate::core::index2core::CntCore.decompose_with(&examples::g1(), 1, false);
+        assert_eq!(hc.core, cc.core);
+        assert!(hc.iterations.abs_diff(cc.iterations) <= 1);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = crate::graph::GraphBuilder::new(4).build("iso");
+        assert_eq!(HistoCore.decompose_with(&g, 2, false).core, vec![0; 4]);
+    }
+}

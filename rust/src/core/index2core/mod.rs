@@ -1,0 +1,12 @@
+//! Index2core-paradigm algorithms (top-down h-index convergence, §II-A
+//! Algorithm 2): the NbrCore baseline [19], the proposed CntCore (precise
+//! frontiers via `cnt`, Alg 5) and HistoCore (up-to-date per-vertex
+//! histograms, Alg 6).
+
+pub mod cntcore;
+pub mod histocore;
+pub mod nbrcore;
+
+pub use cntcore::CntCore;
+pub use histocore::HistoCore;
+pub use nbrcore::NbrCore;

@@ -1,0 +1,157 @@
+//! NbrCore [19] — the baseline Index2core GPU algorithm: every vertex
+//! starts at `core[v] = deg(v)`; each iteration recomputes the h-index of
+//! the active set, and **all** neighbors of any vertex whose estimate
+//! changed become active next iteration. The paper's Fig. 3 observation:
+//! ~94% of those reactivated neighbors do not actually change — the
+//! redundancy CntCore then eliminates.
+
+use crate::core::hindex::{hindex_capped, HindexScratch};
+use crate::core::traits::{DecompositionResult, Decomposer, Paradigm};
+use crate::engine::atomics::AtomicCoreArray;
+use crate::engine::frontier::NextFrontier;
+use crate::engine::metrics::Metrics;
+use crate::engine::spmd::run_spmd;
+use crate::graph::CsrGraph;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// The h-index baseline of [19].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NbrCore;
+
+impl Decomposer for NbrCore {
+    fn name(&self) -> &'static str {
+        "NbrCore"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Index2core
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, threads: usize, metrics_on: bool) -> DecompositionResult {
+        let n = g.num_vertices();
+        let metrics = Metrics::new(threads, metrics_on);
+        if n == 0 {
+            return DecompositionResult {
+                core: vec![],
+                iterations: 0,
+                launches: 0,
+                metrics: metrics.snapshot(),
+            };
+        }
+
+        let core = AtomicCoreArray::from_vec(g.degrees());
+        let active: Mutex<Arc<Vec<u32>>> = Mutex::new(Arc::new((0..n as u32).collect()));
+        let next = NextFrontier::new(n);
+        let cursor = AtomicUsize::new(0);
+        let iterations = AtomicUsize::new(0);
+
+        let launches = run_spmd(threads, |ctx| {
+            let mv = metrics.view(ctx.tid);
+            let mut scratch = HindexScratch::new();
+            loop {
+                let frontier = active.lock().unwrap().clone();
+                if frontier.is_empty() {
+                    break;
+                }
+
+                // ---- h-index kernel over the active set ----
+                for range in ctx.dynamic_chunks(frontier.len(), 64, &cursor) {
+                    for &v in &frontier[range] {
+                        let v = v as usize;
+                        let cap = core.load(v);
+                        if cap == 0 {
+                            continue;
+                        }
+                        let nbrs = g.neighbors(v as u32);
+                        mv.hindex_evals(1);
+                        mv.edge_accesses(nbrs.len() as u64);
+                        let h = hindex_capped(
+                            nbrs.iter().map(|&u| core.load(u as usize)),
+                            cap,
+                            &mut scratch,
+                        );
+                        if h < cap {
+                            core.store(v, h);
+                            // NbrCore redundancy: reactivate *all* neighbors
+                            for &u in nbrs {
+                                next.push(u);
+                                mv.frontier_pushes(1);
+                            }
+                        }
+                    }
+                }
+                ctx.launch_boundary();
+
+                if ctx.tid == 0 {
+                    iterations.fetch_add(1, Ordering::Relaxed);
+                    *active.lock().unwrap() = Arc::new(next.take());
+                    cursor.store(0, Ordering::Relaxed);
+                }
+                ctx.barrier();
+            }
+        });
+
+        DecompositionResult {
+            core: core.to_vec(),
+            iterations: iterations.load(Ordering::Relaxed),
+            launches,
+            metrics: metrics.snapshot(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::{examples, gen};
+
+    #[test]
+    fn g1_matches_paper() {
+        let r = NbrCore.decompose_with(&examples::g1(), 2, false);
+        assert_eq!(r.core, examples::g1_coreness());
+    }
+
+    #[test]
+    fn matches_bz_on_random_graphs() {
+        for seed in 0..4 {
+            let g = gen::erdos_renyi(400, 1600, seed);
+            assert_eq!(NbrCore.decompose_with(&g, 4, false).core, bz_coreness(&g), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn matches_bz_on_powerlaw() {
+        let g = gen::barabasi_albert(1000, 4, 3);
+        assert_eq!(NbrCore.decompose_with(&g, 8, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn clique_chain_exact() {
+        let (g, expected) = gen::nested_cliques(3, 4, 3);
+        assert_eq!(NbrCore.decompose_with(&g, 4, false).core, expected);
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let g = gen::rmat(8, 6, 0.57, 0.19, 0.19, 4);
+        assert_eq!(NbrCore.decompose_with(&g, 1, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn few_iterations_on_regular_graphs() {
+        // On a cycle everything converges immediately (deg == coreness):
+        // one sweep with no changes.
+        let g = examples::cycle(100);
+        let r = NbrCore.decompose_with(&g, 2, false);
+        assert_eq!(r.core, vec![2; 100]);
+        assert_eq!(r.iterations, 1);
+    }
+
+    #[test]
+    fn isolated_vertices() {
+        let g = crate::graph::GraphBuilder::new(3).build("iso");
+        assert_eq!(NbrCore.decompose_with(&g, 2, false).core, vec![0, 0, 0]);
+    }
+}

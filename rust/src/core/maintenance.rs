@@ -1,0 +1,325 @@
+//! Core maintenance on dynamic graphs — the paper's §VI-C1 variant: keep
+//! every vertex's coreness current under edge insertions/deletions
+//! without recomputing the whole graph.
+//!
+//! Implements the classic subcore/traversal approach ([47], Sariyüce et
+//! al.): a single edge edit changes coreness by at most one, and only
+//! within the *k-subcore* — the set of vertices with coreness exactly
+//! `k = min(core(u), core(v))` connected to the edited edge through
+//! vertices of that same coreness.
+//!
+//! * **Insertion**: collect the subcore S reachable from the lower-core
+//!   endpoint(s); compute each member's *candidate degree* (neighbors
+//!   with higher core or inside S); iteratively evict members with
+//!   cd ≤ k; survivors are promoted to k+1.
+//! * **Deletion**: collect the subcore after removing the edge; compute
+//!   each member's *max-core degree* (neighbors with core ≥ k); cascade
+//!   demotions of members whose mcd falls below k.
+//!
+//! Every operation is verified in tests against a from-scratch BZ run on
+//! randomised edit scripts.
+
+use crate::core::bz::bz_coreness;
+use crate::graph::{CsrGraph, GraphBuilder, VertexId};
+use std::collections::HashMap;
+
+/// A mutable graph with continuously maintained coreness.
+#[derive(Clone, Debug)]
+pub struct DynamicCore {
+    adj: Vec<Vec<VertexId>>,
+    core: Vec<u32>,
+}
+
+impl DynamicCore {
+    /// Initialise from a static graph (one BZ run).
+    pub fn new(g: &CsrGraph) -> Self {
+        let adj = (0..g.num_vertices() as VertexId)
+            .map(|v| g.neighbors(v).to_vec())
+            .collect();
+        Self {
+            adj,
+            core: bz_coreness(g),
+        }
+    }
+
+    /// Empty graph with `n` vertices.
+    pub fn with_vertices(n: usize) -> Self {
+        Self {
+            adj: vec![Vec::new(); n],
+            core: vec![0; n],
+        }
+    }
+
+    pub fn num_vertices(&self) -> usize {
+        self.adj.len()
+    }
+
+    pub fn coreness(&self) -> &[u32] {
+        &self.core
+    }
+
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.adj[u as usize].contains(&v)
+    }
+
+    /// Rebuild an immutable CSR snapshot (for oracle checks / export).
+    pub fn snapshot(&self) -> CsrGraph {
+        let mut b = GraphBuilder::new(self.num_vertices());
+        for (u, nbrs) in self.adj.iter().enumerate() {
+            for &v in nbrs {
+                if (u as VertexId) < v {
+                    b.add_edge(u as VertexId, v);
+                }
+            }
+        }
+        b.build("dynamic-snapshot")
+    }
+
+    /// The subcore of level `k` reachable from `roots` (vertices with
+    /// core == k, connected through vertices of core == k).
+    fn subcore(&self, k: u32, roots: &[VertexId]) -> Vec<VertexId> {
+        let mut seen: HashMap<VertexId, ()> = HashMap::new();
+        let mut stack: Vec<VertexId> = Vec::new();
+        for &r in roots {
+            if self.core[r as usize] == k && !seen.contains_key(&r) {
+                seen.insert(r, ());
+                stack.push(r);
+            }
+        }
+        let mut out = Vec::new();
+        while let Some(w) = stack.pop() {
+            out.push(w);
+            for &x in &self.adj[w as usize] {
+                if self.core[x as usize] == k && !seen.contains_key(&x) {
+                    seen.insert(x, ());
+                    stack.push(x);
+                }
+            }
+        }
+        out
+    }
+
+    /// Insert an undirected edge; returns true if it was new.
+    /// Amortised cost is proportional to the affected subcore, not |G|.
+    pub fn insert_edge(&mut self, u: VertexId, v: VertexId) -> bool {
+        assert!(u != v, "self-loops unsupported");
+        let (u, v) = (u.min(v), u.max(v));
+        if self.has_edge(u, v) {
+            return false;
+        }
+        self.adj[u as usize].push(v);
+        self.adj[v as usize].push(u);
+
+        let (cu, cv) = (self.core[u as usize], self.core[v as usize]);
+        let k = cu.min(cv);
+        // roots: endpoints sitting exactly at level k
+        let roots: Vec<VertexId> = [u, v]
+            .into_iter()
+            .filter(|&w| self.core[w as usize] == k)
+            .collect();
+        let candidates = self.subcore(k, &roots);
+        if candidates.is_empty() {
+            return true;
+        }
+
+        // candidate degree: neighbors strictly above k, or inside S
+        let index: HashMap<VertexId, usize> = candidates
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| (w, i))
+            .collect();
+        let mut cd: Vec<u32> = candidates
+            .iter()
+            .map(|&w| {
+                self.adj[w as usize]
+                    .iter()
+                    .filter(|&&x| self.core[x as usize] > k || index.contains_key(&x))
+                    .count() as u32
+            })
+            .collect();
+        let mut evicted = vec![false; candidates.len()];
+        // evict until fixpoint: members that cannot sustain k+1
+        let mut queue: Vec<usize> = (0..candidates.len()).filter(|&i| cd[i] <= k).collect();
+        while let Some(i) = queue.pop() {
+            if evicted[i] {
+                continue;
+            }
+            evicted[i] = true;
+            let w = candidates[i];
+            for &x in &self.adj[w as usize] {
+                if let Some(&j) = index.get(&x) {
+                    if !evicted[j] {
+                        cd[j] -= 1;
+                        if cd[j] <= k {
+                            queue.push(j);
+                        }
+                    }
+                }
+            }
+        }
+        for (i, &w) in candidates.iter().enumerate() {
+            if !evicted[i] {
+                self.core[w as usize] = k + 1;
+            }
+        }
+        true
+    }
+
+    /// Delete an undirected edge; returns true if it existed.
+    pub fn delete_edge(&mut self, u: VertexId, v: VertexId) -> bool {
+        let (u, v) = (u.min(v), u.max(v));
+        let Some(pu) = self.adj[u as usize].iter().position(|&x| x == v) else {
+            return false;
+        };
+        self.adj[u as usize].swap_remove(pu);
+        let pv = self.adj[v as usize]
+            .iter()
+            .position(|&x| x == u)
+            .expect("asymmetric adjacency");
+        self.adj[v as usize].swap_remove(pv);
+
+        let (cu, cv) = (self.core[u as usize], self.core[v as usize]);
+        let k = cu.min(cv);
+        if k == 0 {
+            return true;
+        }
+        let roots: Vec<VertexId> = [u, v]
+            .into_iter()
+            .filter(|&w| self.core[w as usize] == k)
+            .collect();
+        let candidates = self.subcore(k, &roots);
+        if candidates.is_empty() {
+            return true;
+        }
+        let index: HashMap<VertexId, usize> = candidates
+            .iter()
+            .enumerate()
+            .map(|(i, &w)| (w, i))
+            .collect();
+        // max-core degree: neighbors with core >= k
+        let mut mcd: Vec<u32> = candidates
+            .iter()
+            .map(|&w| {
+                self.adj[w as usize]
+                    .iter()
+                    .filter(|&&x| self.core[x as usize] >= k)
+                    .count() as u32
+            })
+            .collect();
+        let mut demoted = vec![false; candidates.len()];
+        let mut queue: Vec<usize> = (0..candidates.len()).filter(|&i| mcd[i] < k).collect();
+        while let Some(i) = queue.pop() {
+            if demoted[i] {
+                continue;
+            }
+            demoted[i] = true;
+            let w = candidates[i];
+            self.core[w as usize] = k - 1;
+            for &x in &self.adj[w as usize] {
+                if let Some(&j) = index.get(&x) {
+                    if !demoted[j] {
+                        mcd[j] -= 1;
+                        if mcd[j] < k {
+                            queue.push(j);
+                        }
+                    }
+                }
+            }
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+    use crate::util::rng::Rng;
+
+    fn check(dc: &DynamicCore, label: &str) {
+        let expected = bz_coreness(&dc.snapshot());
+        assert_eq!(dc.coreness(), expected.as_slice(), "{label}");
+    }
+
+    #[test]
+    fn insert_into_g1_creates_three_core() {
+        let mut dc = DynamicCore::new(&examples::g1());
+        assert_eq!(dc.coreness(), &examples::g1_coreness()[..]);
+        // closing (v2, v5) makes {v2..v5} a K4 -> coreness 3
+        assert!(dc.insert_edge(2, 5));
+        check(&dc, "after insert (2,5)");
+        assert_eq!(dc.coreness()[2..6], [3, 3, 3, 3]);
+        // duplicate insert is a no-op
+        assert!(!dc.insert_edge(5, 2));
+    }
+
+    #[test]
+    fn delete_from_clique_demotes() {
+        let mut dc = DynamicCore::new(&examples::complete(5));
+        assert!(dc.delete_edge(0, 1));
+        check(&dc, "after delete (0,1)");
+        // K5 minus an edge: everyone drops to 3
+        assert_eq!(dc.coreness(), &[3, 3, 3, 3, 3]);
+        assert!(!dc.delete_edge(0, 1));
+    }
+
+    #[test]
+    fn grow_from_empty() {
+        let mut dc = DynamicCore::with_vertices(4);
+        dc.insert_edge(0, 1);
+        dc.insert_edge(1, 2);
+        dc.insert_edge(2, 0);
+        check(&dc, "triangle");
+        assert_eq!(dc.coreness(), &[2, 2, 2, 0]);
+        dc.insert_edge(3, 0);
+        check(&dc, "triangle+tail");
+        assert_eq!(dc.coreness()[3], 1);
+    }
+
+    #[test]
+    fn randomized_edit_script_matches_oracle() {
+        let n = 60;
+        let mut dc = DynamicCore::with_vertices(n);
+        let mut rng = Rng::new(0xD15C0);
+        let mut edges: Vec<(u32, u32)> = Vec::new();
+        for step in 0..400 {
+            let insert = edges.is_empty() || rng.chance(0.65);
+            if insert {
+                let u = rng.below(n as u64) as u32;
+                let v = rng.below(n as u64) as u32;
+                if u != v && !dc.has_edge(u, v) {
+                    dc.insert_edge(u, v);
+                    edges.push((u.min(v), u.max(v)));
+                }
+            } else {
+                let i = rng.below_usize(edges.len());
+                let (u, v) = edges.swap_remove(i);
+                dc.delete_edge(u, v);
+            }
+            if step % 25 == 0 {
+                check(&dc, &format!("step {step}"));
+            }
+        }
+        check(&dc, "final");
+    }
+
+    #[test]
+    fn maintenance_matches_fresh_on_suite_graph() {
+        let g = crate::graph::gen::barabasi_albert(300, 3, 5);
+        let mut dc = DynamicCore::new(&g);
+        // hammer one region
+        let mut rng = Rng::new(7);
+        for _ in 0..60 {
+            let u = rng.below(50) as u32;
+            let v = rng.below(300) as u32;
+            if u != v {
+                if dc.has_edge(u, v) {
+                    dc.delete_edge(u, v);
+                } else {
+                    dc.insert_edge(u, v);
+                }
+            }
+        }
+        check(&dc, "ba after churn");
+    }
+}

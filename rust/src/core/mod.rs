@@ -1,0 +1,26 @@
+//! Core decomposition algorithms — the paper's contribution plus every
+//! baseline it compares against.
+//!
+//! | Algorithm | Paradigm | Paper role |
+//! |---|---|---|
+//! | [`bz::Bz`] | serial Peel | O(M) ground-truth oracle [33] |
+//! | [`peel::Gpp`] | Peel | General Parallel Peel baseline (Alg 3) |
+//! | [`peel::PeelOne`] | Peel | **proposed** — assertion method (Alg 4) |
+//! | [`peel::PpDyn`] | Peel | SOTA dynamic-frontier baseline [21] |
+//! | [`peel::PoDyn`] | Peel | **proposed** — PeelOne + dynamic frontier |
+//! | [`index2core::NbrCore`] | Index2core | baseline [19] |
+//! | [`index2core::CntCore`] | Index2core | **proposed** — cnt frontiers (Alg 5) |
+//! | [`index2core::HistoCore`] | Index2core | **proposed** — up-to-date histograms (Alg 6) |
+
+pub mod bz;
+pub mod hindex;
+pub mod hybrid;
+pub mod index2core;
+pub mod maintenance;
+pub mod peel;
+pub mod traits;
+pub mod verify;
+
+pub use hybrid::Hybrid;
+pub use maintenance::DynamicCore;
+pub use traits::{DecompositionResult, Decomposer, Paradigm};

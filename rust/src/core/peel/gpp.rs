@@ -1,0 +1,167 @@
+//! General Parallel Peel (Algorithm 3) — the common GPU baseline of
+//! [19], [20] and Gunrock's k-core: two property arrays (`deg` residual
+//! degree + `core` output) plus a `rem` removal flag, full-graph `scan`
+//! each round, `scatter` with *unfloored* `atomicSub` guarded by the flag.
+//!
+//! The paper's critique, reproduced here deliberately:
+//! * under-core vertices keep receiving decrements below `k` (wasted
+//!   atomics — count them via the metrics to regenerate Fig. 4a);
+//! * the scan criterion is multifaceted (`!rem[v] && deg[v] <= k`),
+//!   touching two arrays;
+//! * `rem` adds a third array of memory traffic.
+
+use crate::core::traits::{DecompositionResult, Decomposer, Paradigm};
+use crate::engine::atomics::{atomic_sub_one, AtomicCoreArray};
+use crate::engine::frontier::WorkList;
+use crate::engine::metrics::Metrics;
+use crate::engine::spmd::run_spmd;
+use crate::graph::CsrGraph;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Algorithm 3.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Gpp;
+
+impl Decomposer for Gpp {
+    fn name(&self) -> &'static str {
+        "GPP"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Peel
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, threads: usize, metrics_on: bool) -> DecompositionResult {
+        let n = g.num_vertices();
+        let metrics = Metrics::new(threads, metrics_on);
+        if n == 0 {
+            return DecompositionResult {
+                core: vec![],
+                iterations: 0,
+                launches: 0,
+                metrics: metrics.snapshot(),
+            };
+        }
+
+        let deg = AtomicCoreArray::from_vec(g.degrees());
+        let core = AtomicCoreArray::zeros(n);
+        let rem: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+        // Frontier buffer: with `rem` set at scan time each vertex enters
+        // exactly once across the whole run.
+        let frontier = WorkList::new(n);
+        let remaining = AtomicUsize::new(n);
+        let k = AtomicUsize::new(0);
+        let iterations = AtomicUsize::new(0);
+
+        let launches = run_spmd(threads, |ctx| {
+            let mv = metrics.view(ctx.tid);
+            loop {
+                if remaining.load(Ordering::Acquire) == 0 {
+                    break;
+                }
+                let kk = k.load(Ordering::Acquire) as u32;
+
+                // ---- scan kernel: V_f = { v : !rem[v] && deg[v] <= k } ----
+                for v in ctx.static_chunk(n) {
+                    if !rem[v].load(Ordering::Relaxed) && deg.load(v) <= kk {
+                        // mark removed at frontier insertion (Alg 3 line 8)
+                        rem[v].store(true, Ordering::Relaxed);
+                        core.store(v, kk);
+                        frontier.push(v as u32);
+                        mv.frontier_pushes(1);
+                    }
+                }
+                ctx.launch_boundary();
+
+                let fsize = frontier.pushed();
+                if fsize == 0 {
+                    // no vertex at this k: advance k (thread 0)
+                    if ctx.tid == 0 {
+                        k.fetch_add(1, Ordering::AcqRel);
+                    }
+                    ctx.barrier();
+                    continue;
+                }
+
+                // ---- scatter kernel: decrement residual neighbors ----
+                for i in ctx.static_chunk(fsize) {
+                    let v = frontier.get(i);
+                    for &u in g.neighbors(v) {
+                        mv.edge_accesses(1);
+                        if !rem[u as usize].load(Ordering::Relaxed) {
+                            // Unfloored decrement: may sink below k — the
+                            // under-core waste PeelOne eliminates.
+                            atomic_sub_one(deg.cell(u as usize), &mv);
+                        }
+                    }
+                }
+                ctx.launch_boundary();
+
+                if ctx.tid == 0 {
+                    iterations.fetch_add(1, Ordering::Relaxed);
+                    remaining.fetch_sub(fsize, Ordering::AcqRel);
+                    frontier.reset();
+                }
+                ctx.barrier();
+            }
+        });
+
+        DecompositionResult {
+            core: core.to_vec(),
+            iterations: iterations.load(Ordering::Relaxed),
+            launches,
+            metrics: metrics.snapshot(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::{examples, gen};
+
+    #[test]
+    fn g1_matches_paper() {
+        let r = Gpp.decompose_with(&examples::g1(), 2, false);
+        assert_eq!(r.core, examples::g1_coreness());
+        assert!(r.iterations >= 3); // Fig. 2: three peel iterations
+    }
+
+    #[test]
+    fn matches_bz_on_random_graphs() {
+        for seed in 0..3 {
+            let g = gen::erdos_renyi(300, 1200, seed);
+            let r = Gpp.decompose_with(&g, 4, false);
+            assert_eq!(r.core, bz_coreness(&g), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn matches_bz_on_powerlaw() {
+        let g = gen::barabasi_albert(800, 3, 5);
+        assert_eq!(Gpp.decompose_with(&g, 4, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let g = gen::rmat(8, 6, 0.57, 0.19, 0.19, 2);
+        assert_eq!(Gpp.decompose_with(&g, 1, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn empty_and_isolated() {
+        let g = crate::graph::GraphBuilder::new(4).build("iso");
+        let r = Gpp.decompose_with(&g, 2, false);
+        assert_eq!(r.core, vec![0; 4]);
+    }
+
+    #[test]
+    fn counts_atomics_when_enabled() {
+        // G1: removing v0, v1 at k=1 decrements v5 twice, etc.
+        let g = examples::g1();
+        let r = Gpp.decompose_with(&g, 2, true);
+        assert!(r.metrics.atomic_subs > 0);
+        assert!(r.metrics.edge_accesses > 0);
+    }
+}

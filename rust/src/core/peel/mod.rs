@@ -1,0 +1,13 @@
+//! Peel-paradigm algorithms (bottom-up removal, §II-A Algorithm 1):
+//! the GPP baseline, the proposed PeelOne (assertion method), the
+//! dynamic-frontier SOTA baseline PP-dyn, and the proposed PO-dyn.
+
+pub mod gpp;
+pub mod peelone;
+pub mod podyn;
+pub mod ppdyn;
+
+pub use gpp::Gpp;
+pub use peelone::PeelOne;
+pub use podyn::PoDyn;
+pub use ppdyn::PpDyn;

@@ -1,0 +1,228 @@
+//! PeelOne (Algorithm 4) — the paper's proposed Peel algorithm.
+//!
+//! Three optimisations over GPP (§III.C):
+//! 1. **Single property array.** `core[]` is initialised to the degree and
+//!    doubles as the residual degree; by Corollary 1 residual vertices
+//!    always satisfy `core[v] >= k`, so the frontier test is the single
+//!    equality `core[v] == k` and the `rem` flag disappears (removed
+//!    vertices have `core < k`, asserted vertices exactly `k`).
+//! 2. **Assertion method.** Degree updates use `atomicSub_{>=k}`
+//!    ([`atomic_sub_floor`]): an under-core vertex is clamped *at* `k`
+//!    (its coreness, Theorem 1) instead of being driven below and patched
+//!    back — saving the `2(n−m)` extra atomics of Fig. 4.
+//! 3. *(in PO-dyn)* **Dynamic frontiers.** This variant is the static
+//!    form: every round re-scans the vertex set for `core == k` (that is
+//!    what l1 ≈ Σ per-level rounds counts, Table V's left column);
+//!    [`super::PoDyn`] replaces the rescans with the live work-list fed
+//!    by the unique `Written(k)` floor-hit signal.
+
+use crate::core::traits::{DecompositionResult, Decomposer, Paradigm};
+use crate::engine::atomics::{atomic_sub_floor, AtomicCoreArray, SubFloor};
+use crate::engine::frontier::WorkList;
+use crate::engine::metrics::Metrics;
+use crate::engine::spmd::run_spmd;
+use crate::graph::CsrGraph;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Algorithm 4 with per-round static frontiers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PeelOne;
+
+impl Decomposer for PeelOne {
+    fn name(&self) -> &'static str {
+        "PeelOne"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Peel
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, threads: usize, metrics_on: bool) -> DecompositionResult {
+        let n = g.num_vertices();
+        let metrics = Metrics::new(threads, metrics_on);
+        if n == 0 {
+            return DecompositionResult {
+                core: vec![],
+                iterations: 0,
+                launches: 0,
+                metrics: metrics.snapshot(),
+            };
+        }
+
+        // core[] doubles as residual degree (Alg 4 line 1).
+        let core = AtomicCoreArray::from_vec(g.degrees());
+        let frontier = WorkList::new(n);
+        // Scan-dedup stamp: a processed frontier vertex keeps core == k
+        // (its coreness) and must not re-enter later rounds of the level.
+        let queued: Vec<std::sync::atomic::AtomicBool> =
+            (0..n).map(|_| std::sync::atomic::AtomicBool::new(false)).collect();
+        let remaining = AtomicUsize::new(n);
+        let iterations = AtomicUsize::new(0);
+        let round_end_shared = AtomicUsize::new(0);
+
+        let launches = run_spmd(threads, |ctx| {
+            let mv = metrics.view(ctx.tid);
+
+            // Level 0: isolated vertices are already converged (core 0).
+            let isolated = ctx.static_chunk(n).filter(|&v| core.load(v) == 0).count();
+            if isolated > 0 {
+                remaining.fetch_sub(isolated, Ordering::AcqRel);
+            }
+            ctx.barrier();
+
+            let mut k = 0u32;
+            loop {
+                if remaining.load(Ordering::Acquire) == 0 {
+                    break;
+                }
+                k += 1;
+
+                // ---- scan/scatter rounds at level k (Alg 4 faithfully:
+                // the *static* variant re-scans the whole vertex set each
+                // round; detecting new frontiers without a rescan is
+                // exactly the dynamic-frontier upgrade of PO-dyn). The
+                // `queued` stamp keeps processed frontier vertices (whose
+                // core stays == k, their coreness) out of later scans.
+                // Round bounds are published by thread 0 between barriers
+                // so all workers agree on the slice.
+                let mut round_start = 0usize;
+                loop {
+                    // scan kernel: V_f = {v : core[v] == k, not yet queued}.
+                    // Predicate order matters on every architecture: the
+                    // 1-byte queued stream short-circuits processed
+                    // vertices (whose core stays == k forever) before the
+                    // 4-byte core load, and the RMW swap runs at most once
+                    // per vertex — mirroring how GPP's rem[] flag guards
+                    // its two-array test.
+                    let range = ctx.static_chunk(n);
+                    let lo = range.start;
+                    for (i, q) in queued[range].iter().enumerate() {
+                        // slice iteration: bounds checks and Vec metadata
+                        // loads hoisted out of the 7M-iteration hot loop
+                        if !q.load(Ordering::Relaxed) {
+                            let v = lo + i;
+                            if core.load(v) == k && !q.swap(true, Ordering::Relaxed) {
+                                frontier.push(v as u32);
+                                mv.frontier_pushes(1);
+                            }
+                        }
+                    }
+                    ctx.launch_boundary();
+                    if ctx.tid == 0 {
+                        round_end_shared.store(frontier.pushed(), Ordering::Relaxed);
+                    }
+                    ctx.barrier();
+                    let round_end = round_end_shared.load(Ordering::Relaxed);
+                    if round_start == round_end {
+                        break;
+                    }
+                    // scatter kernel over this round's slice
+                    let len = round_end - round_start;
+                    let per = len.div_ceil(ctx.num_threads);
+                    let lo = round_start + (ctx.tid * per).min(len);
+                    let hi = round_start + ((ctx.tid + 1) * per).min(len);
+                    for i in lo..hi {
+                        let v = frontier.get(i);
+                        for &u in g.neighbors(v) {
+                            mv.edge_accesses(1);
+                            let u = u as usize;
+                            if core.load(u) > k {
+                                // assertion method: clamp at the floor k
+                                let _ = atomic_sub_floor(core.cell(u), k, &mv);
+                            }
+                        }
+                    }
+                    ctx.launch_boundary();
+                    if ctx.tid == 0 {
+                        iterations.fetch_add(1, Ordering::Relaxed);
+                    }
+                    round_start = round_end;
+                }
+
+                // Level done: everything queued this level had coreness k.
+                ctx.barrier();
+                if ctx.tid == 0 {
+                    remaining.fetch_sub(frontier.pushed(), Ordering::AcqRel);
+                    frontier.reset();
+                }
+                ctx.barrier();
+            }
+        });
+
+        DecompositionResult {
+            core: core.to_vec(),
+            iterations: iterations.load(Ordering::Relaxed),
+            launches,
+            metrics: metrics.snapshot(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::{examples, gen};
+
+    #[test]
+    fn g1_matches_paper_walkthrough() {
+        // Fig. 5: frontiers {v0,v1} at k=1, {v2,v4} at k=2 with v3,v5
+        // asserted under-core — final coreness [1,1,2,2,2,2].
+        let r = PeelOne.decompose_with(&examples::g1(), 2, true);
+        assert_eq!(r.core, examples::g1_coreness());
+        // assertion method: no atomicAdd corrections ever
+        assert_eq!(r.metrics.atomic_adds, 0);
+    }
+
+    #[test]
+    fn matches_bz_on_random_graphs() {
+        for seed in 0..3 {
+            let g = gen::erdos_renyi(300, 1200, seed);
+            let r = PeelOne.decompose_with(&g, 4, false);
+            assert_eq!(r.core, bz_coreness(&g), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn matches_bz_on_powerlaw_and_planted() {
+        let g = gen::barabasi_albert(800, 3, 5);
+        assert_eq!(PeelOne.decompose_with(&g, 4, false).core, bz_coreness(&g));
+        let g = gen::planted_core(1000, 3000, &[(200, 12), (50, 25)], 7);
+        assert_eq!(PeelOne.decompose_with(&g, 4, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn clique_chain_exact() {
+        let (g, expected) = gen::nested_cliques(4, 3, 4);
+        assert_eq!(PeelOne.decompose_with(&g, 4, false).core, expected);
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let g = gen::rmat(8, 6, 0.57, 0.19, 0.19, 2);
+        assert_eq!(PeelOne.decompose_with(&g, 1, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn isolated_vertices_terminate() {
+        let mut b = crate::graph::GraphBuilder::new(5);
+        b.add_edge(0, 1);
+        let g = b.build("mostly-isolated");
+        let r = PeelOne.decompose_with(&g, 2, false);
+        assert_eq!(r.core, vec![1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn fewer_atomics_than_gpp() {
+        // The Fig. 4 claim: assertion eliminates under-core atomics.
+        let g = gen::barabasi_albert(2000, 5, 11);
+        let po = PeelOne.decompose_with(&g, 4, true);
+        let gpp = crate::core::peel::Gpp.decompose_with(&g, 4, true);
+        assert!(
+            po.metrics.total_atomics() <= gpp.metrics.total_atomics(),
+            "PeelOne {} vs GPP {}",
+            po.metrics.total_atomics(),
+            gpp.metrics.total_atomics()
+        );
+    }
+}

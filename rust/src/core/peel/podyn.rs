@@ -1,0 +1,184 @@
+//! PO-dyn — PeelOne combined with the dynamic frontier queue (§III.C
+//! step 3): a vertex asserted to the floor `k` mid-scatter is pushed into
+//! the live [`WorkList`] and processed *within the same launch*, so each
+//! core level costs exactly one scan + one drain and l1 collapses to
+//! k_max (Table V). This is the paper's best Peel configuration.
+
+use crate::core::traits::{DecompositionResult, Decomposer, Paradigm};
+use crate::engine::atomics::{atomic_sub_floor, sub_floor_seq, AtomicCoreArray, SubFloor};
+use crate::engine::frontier::WorkList;
+use crate::engine::metrics::Metrics;
+use crate::engine::spmd::run_spmd;
+use crate::graph::CsrGraph;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// PeelOne + dynamic frontier.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PoDyn;
+
+impl Decomposer for PoDyn {
+    fn name(&self) -> &'static str {
+        "PO-dyn"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Peel
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, threads: usize, metrics_on: bool) -> DecompositionResult {
+        let n = g.num_vertices();
+        let metrics = Metrics::new(threads, metrics_on);
+        if n == 0 {
+            return DecompositionResult {
+                core: vec![],
+                iterations: 0,
+                launches: 0,
+                metrics: metrics.snapshot(),
+            };
+        }
+
+        let core = AtomicCoreArray::from_vec(g.degrees());
+        let frontier = WorkList::new(n);
+        let remaining = AtomicUsize::new(n);
+        let iterations = AtomicUsize::new(0);
+
+        let launches = run_spmd(threads, |ctx| {
+            let mv = metrics.view(ctx.tid);
+
+            // Isolated vertices (core 0) are converged from the start.
+            let isolated = ctx.static_chunk(n).filter(|&v| core.load(v) == 0).count();
+            if isolated > 0 {
+                remaining.fetch_sub(isolated, Ordering::AcqRel);
+            }
+            ctx.barrier();
+
+            let mut k = 0u32;
+            loop {
+                if remaining.load(Ordering::Acquire) == 0 {
+                    break;
+                }
+                k += 1;
+
+                // ---- scan: seed the level-k frontier ----
+                for v in ctx.static_chunk(n) {
+                    if core.load(v) == k {
+                        frontier.push(v as u32);
+                        mv.frontier_pushes(1);
+                    }
+                }
+                ctx.launch_boundary();
+
+                // ---- single drain launch: the dynamic frontier ----
+                let seq = ctx.num_threads == 1;
+                let process = |v: u32, frontier: &crate::engine::frontier::WorkList| {
+                    for &u in g.neighbors(v) {
+                        mv.edge_accesses(1);
+                        let u = u as usize;
+                        if core.load(u) > k {
+                            let res = if seq {
+                                sub_floor_seq(core.cell(u), k, &mv)
+                            } else {
+                                atomic_sub_floor(core.cell(u), k, &mv)
+                            };
+                            if let SubFloor::Written(nv) = res {
+                                if nv == k {
+                                    // asserted under-core vertex: process
+                                    // within this very launch
+                                    frontier.push(u as u32);
+                                    mv.frontier_pushes(1);
+                                }
+                            }
+                        }
+                    }
+                };
+                if seq {
+                    frontier.drain_seq(process);
+                } else {
+                    frontier.drain(process);
+                }
+                ctx.launch_boundary();
+
+                if ctx.tid == 0 {
+                    iterations.fetch_add(1, Ordering::Relaxed);
+                    remaining.fetch_sub(frontier.pushed(), Ordering::AcqRel);
+                    frontier.reset();
+                }
+                ctx.barrier();
+            }
+        });
+
+        DecompositionResult {
+            core: core.to_vec(),
+            iterations: iterations.load(Ordering::Relaxed),
+            launches,
+            metrics: metrics.snapshot(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::{examples, gen};
+
+    #[test]
+    fn g1_matches_paper() {
+        let r = PoDyn.decompose_with(&examples::g1(), 2, false);
+        assert_eq!(r.core, examples::g1_coreness());
+        // dynamic frontier: l1 equals k_max = 2 (Table V's collapse)
+        assert_eq!(r.iterations, 2);
+    }
+
+    #[test]
+    fn l1_equals_kmax_on_clique_chain() {
+        let (g, expected) = gen::nested_cliques(3, 4, 4); // k_max = 11
+        let r = PoDyn.decompose_with(&g, 4, false);
+        assert_eq!(r.core, expected);
+        assert_eq!(r.iterations, 11, "l1 must equal k_max with dyn frontier");
+    }
+
+    #[test]
+    fn matches_bz_on_random_graphs() {
+        for seed in 0..4 {
+            let g = gen::erdos_renyi(400, 1600, seed);
+            let r = PoDyn.decompose_with(&g, 4, false);
+            assert_eq!(r.core, bz_coreness(&g), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn matches_bz_on_skewed_graphs() {
+        let g = gen::rmat(9, 8, 0.57, 0.19, 0.19, 3);
+        assert_eq!(PoDyn.decompose_with(&g, 8, false).core, bz_coreness(&g));
+        let g = gen::star_burst(3, 200, 400, 5);
+        assert_eq!(PoDyn.decompose_with(&g, 8, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let g = gen::barabasi_albert(500, 4, 9);
+        assert_eq!(PoDyn.decompose_with(&g, 1, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn fewer_iterations_than_static_peelone() {
+        let g = gen::power_law_cluster(1500, 4, 0.6, 13);
+        let dyn_r = PoDyn.decompose_with(&g, 4, false);
+        let static_r = crate::core::peel::PeelOne.decompose_with(&g, 4, false);
+        assert_eq!(dyn_r.core, static_r.core);
+        assert!(
+            dyn_r.iterations <= static_r.iterations,
+            "dyn {} vs static {}",
+            dyn_r.iterations,
+            static_r.iterations
+        );
+    }
+
+    #[test]
+    fn no_atomic_adds_ever() {
+        let g = gen::barabasi_albert(1000, 5, 21);
+        let r = PoDyn.decompose_with(&g, 4, true);
+        assert_eq!(r.metrics.atomic_adds, 0);
+    }
+}

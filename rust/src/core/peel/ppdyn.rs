@@ -1,0 +1,180 @@
+//! PP-dyn — the SOTA GPU Peel baseline [21]: dynamic frontier queue like
+//! PO-dyn, but *without* the assertion method. Under-core vertices are
+//! driven below `k` by plain `atomicSub` and patched back with an extra
+//! `atomicAdd` (the Fig. 4a workflow: `2n − m` atomics where the assertion
+//! needs `n − m`), and a separate `rem` flag plus a second property array
+//! are retained. The benches compare its measured atomic counts against
+//! PO-dyn to regenerate the Fig. 4 claim.
+
+use crate::core::traits::{DecompositionResult, Decomposer, Paradigm};
+use crate::engine::atomics::{atomic_add_one, atomic_sub_one, AtomicCoreArray};
+use crate::engine::frontier::WorkList;
+use crate::engine::metrics::Metrics;
+use crate::engine::spmd::run_spmd;
+use crate::graph::CsrGraph;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Dynamic-frontier Peel with atomicAdd under-core correction [21].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PpDyn;
+
+impl Decomposer for PpDyn {
+    fn name(&self) -> &'static str {
+        "PP-dyn"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Peel
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, threads: usize, metrics_on: bool) -> DecompositionResult {
+        let n = g.num_vertices();
+        let metrics = Metrics::new(threads, metrics_on);
+        if n == 0 {
+            return DecompositionResult {
+                core: vec![],
+                iterations: 0,
+                launches: 0,
+                metrics: metrics.snapshot(),
+            };
+        }
+
+        let deg = AtomicCoreArray::from_vec(g.degrees());
+        let core = AtomicCoreArray::zeros(n);
+        let rem: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
+        let frontier = WorkList::new(n);
+        let remaining = AtomicUsize::new(n);
+        let iterations = AtomicUsize::new(0);
+        // Wrap detection for transient below-zero excursions of `deg`.
+        let wrap_threshold = u32::MAX / 2;
+
+        let launches = run_spmd(threads, |ctx| {
+            let mv = metrics.view(ctx.tid);
+            let mut k = 0u32;
+            loop {
+                if remaining.load(Ordering::Acquire) == 0 {
+                    break;
+                }
+
+                // ---- scan: seed {!rem && deg <= k} ----
+                // (rem load first: removed vertices keep deg <= k forever,
+                // an unguarded swap would RMW all of them every level)
+                for v in ctx.static_chunk(n) {
+                    if !rem[v].load(Ordering::Relaxed)
+                        && deg.load(v) <= k
+                        && !rem[v].swap(true, Ordering::Relaxed)
+                    {
+                        core.store(v, k);
+                        frontier.push(v as u32);
+                        mv.frontier_pushes(1);
+                    }
+                }
+                ctx.launch_boundary();
+
+                // ---- drain with atomicSub + atomicAdd correction ----
+                let process = |v: u32, frontier: &crate::engine::frontier::WorkList| {
+                    for &u in g.neighbors(v) {
+                        mv.edge_accesses(1);
+                        let u = u as usize;
+                        if rem[u].load(Ordering::Relaxed) {
+                            continue;
+                        }
+                        let nv = atomic_sub_one(deg.cell(u), &mv);
+                        if nv == k {
+                            // first arrival at k: this thread removes u
+                            if !rem[u].swap(true, Ordering::Relaxed) {
+                                core.store(u, k);
+                                frontier.push(u as u32);
+                                mv.frontier_pushes(1);
+                            }
+                        } else if nv > wrap_threshold || nv < k {
+                            // under-core excursion: patch back (the extra
+                            // atomic the assertion method eliminates)
+                            atomic_add_one(deg.cell(u), &mv);
+                        }
+                    }
+                };
+                if ctx.num_threads == 1 {
+                    frontier.drain_seq(process);
+                } else {
+                    frontier.drain(process);
+                }
+                ctx.launch_boundary();
+
+                if ctx.tid == 0 {
+                    iterations.fetch_add(1, Ordering::Relaxed);
+                    remaining.fetch_sub(frontier.pushed(), Ordering::AcqRel);
+                    frontier.reset();
+                }
+                ctx.barrier();
+                k += 1;
+            }
+        });
+
+        DecompositionResult {
+            core: core.to_vec(),
+            iterations: iterations.load(Ordering::Relaxed),
+            launches,
+            metrics: metrics.snapshot(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::{examples, gen};
+
+    #[test]
+    fn g1_matches_paper() {
+        let r = PpDyn.decompose_with(&examples::g1(), 2, false);
+        assert_eq!(r.core, examples::g1_coreness());
+    }
+
+    #[test]
+    fn matches_bz_on_random_graphs() {
+        for seed in 0..4 {
+            let g = gen::erdos_renyi(400, 1600, seed);
+            assert_eq!(PpDyn.decompose_with(&g, 4, false).core, bz_coreness(&g), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn matches_bz_on_powerlaw() {
+        let g = gen::barabasi_albert(1000, 4, 3);
+        assert_eq!(PpDyn.decompose_with(&g, 8, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn isolated_vertices_get_core_zero() {
+        let mut b = crate::graph::GraphBuilder::new(5);
+        b.add_edge(0, 1);
+        let g = b.build("iso");
+        assert_eq!(PpDyn.decompose_with(&g, 2, false).core, vec![1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let g = gen::caveman(20, 6, 7);
+        assert_eq!(PpDyn.decompose_with(&g, 1, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn uses_atomic_adds_where_podyn_does_not() {
+        // Fig. 4: PP-dyn pays correction atomicAdds on under-core vertices;
+        // PO-dyn's assertion removes them. Use a clique chain, which is
+        // rich in under-core events.
+        let (g, _) = gen::nested_cliques(4, 6, 6);
+        let pp = PpDyn.decompose_with(&g, 8, true);
+        let po = crate::core::peel::PoDyn.decompose_with(&g, 8, true);
+        assert_eq!(pp.core, po.core);
+        assert_eq!(po.metrics.atomic_adds, 0);
+        assert!(
+            pp.metrics.total_atomics() >= po.metrics.total_atomics(),
+            "PP-dyn {} vs PO-dyn {}",
+            pp.metrics.total_atomics(),
+            po.metrics.total_atomics()
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! The common decomposition interface and its instrumented result type.
+
+use crate::engine::metrics::MetricsSnapshot;
+use crate::graph::CsrGraph;
+use crate::util::default_threads;
+
+/// Which of the paper's paradigms an algorithm belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Paradigm {
+    /// Bottom-up iterative removal (§II-A, Algorithm 1).
+    Peel,
+    /// Top-down h-index convergence (§II-A, Algorithm 2).
+    Index2core,
+    /// Serial reference (BZ).
+    Serial,
+    /// Dense vectorised engine executed through XLA (VETGA lineage).
+    Vectorized,
+}
+
+/// Output of a decomposition run, carrying the columns the paper's tables
+/// report alongside the coreness itself.
+#[derive(Clone, Debug)]
+pub struct DecompositionResult {
+    /// `core[v]` = coreness of vertex `v`.
+    pub core: Vec<u32>,
+    /// The paper's iteration count — l1 for Peel algorithms (scan/scatter
+    /// rounds), l2 for Index2core (convergence sweeps).
+    pub iterations: usize,
+    /// BSP kernel launches (barrier-delimited phases).
+    pub launches: usize,
+    /// Instrumented counters (zeros when metrics were disabled).
+    pub metrics: MetricsSnapshot,
+}
+
+impl DecompositionResult {
+    /// Max coreness (the dataset's k_max).
+    pub fn k_max(&self) -> u32 {
+        self.core.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// A k-core decomposition algorithm.
+pub trait Decomposer: Sync {
+    /// Display name used in tables (`PeelOne`, `HistoCore`, …).
+    fn name(&self) -> &'static str;
+
+    fn paradigm(&self) -> Paradigm;
+
+    /// Run with explicit thread count and metrics switch.
+    fn decompose_with(&self, g: &CsrGraph, threads: usize, metrics: bool) -> DecompositionResult;
+
+    /// Run with defaults (host parallelism, metrics off).
+    fn decompose(&self, g: &CsrGraph) -> DecompositionResult {
+        self.decompose_with(g, default_threads(), false)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kmax_of_result() {
+        let r = DecompositionResult {
+            core: vec![1, 3, 2],
+            iterations: 0,
+            launches: 0,
+            metrics: MetricsSnapshot::default(),
+        };
+        assert_eq!(r.k_max(), 3);
+    }
+
+    #[test]
+    fn kmax_empty() {
+        let r = DecompositionResult {
+            core: vec![],
+            iterations: 0,
+            launches: 0,
+            metrics: MetricsSnapshot::default(),
+        };
+        assert_eq!(r.k_max(), 0);
+    }
+}

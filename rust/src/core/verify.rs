@@ -1,0 +1,101 @@
+//! Decomposition validation: structural invariants plus oracle agreement.
+//! Every bench run validates its output here, so any table row reported in
+//! EXPERIMENTS.md is backed by a correctness check against BZ.
+
+use super::bz::bz_coreness;
+use super::hindex::hindex;
+use crate::graph::CsrGraph;
+
+/// Structural invariants a coreness vector must satisfy, checkable without
+/// an oracle:
+/// 1. `core[v] <= deg(v)`;
+/// 2. *support*: at least `core[v]` neighbors have coreness ≥ `core[v]`
+///    (v's membership in its own k-core);
+/// 3. *h-index fixpoint*: `H(core of neighbors) == core[v]` — coreness is
+///    the (maximal) fixpoint of the h-index operator [18].
+pub fn check_invariants(g: &CsrGraph, core: &[u32]) -> Result<(), String> {
+    if core.len() != g.num_vertices() {
+        return Err(format!(
+            "length mismatch: |core|={} but |V|={}",
+            core.len(),
+            g.num_vertices()
+        ));
+    }
+    for v in 0..g.num_vertices() {
+        let cv = core[v];
+        let deg = g.degree(v as u32);
+        if cv > deg {
+            return Err(format!("core[{v}]={cv} exceeds degree {deg}"));
+        }
+        let nbr_cores: Vec<u32> = g
+            .neighbors(v as u32)
+            .iter()
+            .map(|&u| core[u as usize])
+            .collect();
+        let support = nbr_cores.iter().filter(|&&c| c >= cv).count() as u32;
+        if support < cv {
+            return Err(format!(
+                "core[{v}]={cv} has only {support} supporting neighbors"
+            ));
+        }
+        let h = hindex(&nbr_cores);
+        if h != cv {
+            return Err(format!(
+                "h-index fixpoint violated at {v}: H(nbrs)={h}, core={cv}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Full validation: invariants + exact agreement with the BZ oracle.
+pub fn check_against_oracle(g: &CsrGraph, core: &[u32]) -> Result<(), String> {
+    check_invariants(g, core)?;
+    let expected = bz_coreness(g);
+    if core != expected.as_slice() {
+        let diff = core
+            .iter()
+            .zip(&expected)
+            .enumerate()
+            .find(|(_, (a, b))| a != b)
+            .map(|(v, (a, b))| format!("first mismatch at v{v}: got {a}, expected {b}"))
+            .unwrap_or_default();
+        return Err(format!("oracle mismatch: {diff}"));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+
+    #[test]
+    fn correct_coreness_passes() {
+        let g = examples::g1();
+        assert_eq!(check_against_oracle(&g, &examples::g1_coreness()), Ok(()));
+    }
+
+    #[test]
+    fn rejects_wrong_values() {
+        let g = examples::g1();
+        let mut core = examples::g1_coreness();
+        core[0] = 2;
+        assert!(check_invariants(&g, &core).is_err());
+        let mut core = examples::g1_coreness();
+        core[5] = 1; // h-index fixpoint violated (too low)
+        assert!(check_invariants(&g, &core).is_err());
+    }
+
+    #[test]
+    fn rejects_length_mismatch() {
+        let g = examples::g1();
+        assert!(check_invariants(&g, &[1, 1]).is_err());
+    }
+
+    #[test]
+    fn rejects_above_degree() {
+        let g = examples::path(3);
+        assert!(check_invariants(&g, &[2, 2, 2]).is_err());
+    }
+}

@@ -1,0 +1,237 @@
+//! Atomic primitives of the paper.
+//!
+//! * [`atomic_sub_floor`] — the paper's novel `atomicSub_{>=k}(addr, 1, k)`
+//!   (§III.B): atomically compute `old > k ? old − 1 : k` — i.e. decrement
+//!   but never below the floor `k`. CUDA exposes this as a single atomic
+//!   transaction built from `atomicCAS`; we use the identical CAS loop.
+//! * [`AtomicCoreArray`] — the shared `core[]` / `deg[]` property array all
+//!   kernels operate on.
+
+use super::metrics::MetricsView;
+use std::sync::atomic::{AtomicU32, Ordering};
+
+/// Shared u32 property array with relaxed-atomic element access.
+pub struct AtomicCoreArray {
+    cells: Vec<AtomicU32>,
+}
+
+impl AtomicCoreArray {
+    pub fn from_vec(init: Vec<u32>) -> Self {
+        Self {
+            cells: init.into_iter().map(AtomicU32::new).collect(),
+        }
+    }
+
+    pub fn zeros(n: usize) -> Self {
+        Self::from_vec(vec![0; n])
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
+    }
+
+    #[inline]
+    pub fn load(&self, i: usize) -> u32 {
+        self.cells[i].load(Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn store(&self, i: usize, v: u32) {
+        self.cells[i].store(v, Ordering::Relaxed)
+    }
+
+    #[inline]
+    pub fn cell(&self, i: usize) -> &AtomicU32 {
+        &self.cells[i]
+    }
+
+    /// Copy out the plain values (end of a run).
+    pub fn to_vec(&self) -> Vec<u32> {
+        self.cells.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Result of [`atomic_sub_floor`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubFloor {
+    /// This thread performed the decrement; holds the *new* value.
+    Written(u32),
+    /// Value was already at or below the floor; holds the observed value.
+    AtFloor(u32),
+}
+
+/// The paper's `atomicSub_{>=k}`: decrement `cell` by one but never below
+/// `k`. Returns whether *this* call performed a write and the resulting
+/// value — the caller uses `Written(k)` as the unique "vertex just hit the
+/// floor" signal for dynamic-frontier insertion (§III.C step 3).
+#[inline]
+pub fn atomic_sub_floor(cell: &AtomicU32, k: u32, mv: &MetricsView) -> SubFloor {
+    let mut old = cell.load(Ordering::Relaxed);
+    loop {
+        if old <= k {
+            return SubFloor::AtFloor(old);
+        }
+        match cell.compare_exchange_weak(old, old - 1, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => {
+                mv.atomic_subs(1);
+                return SubFloor::Written(old - 1);
+            }
+            Err(actual) => {
+                mv.cas_retries(1);
+                old = actual;
+            }
+        }
+    }
+}
+
+/// Single-worker fast path of [`atomic_sub_floor`]: plain load/store
+/// (no LOCK prefix). Semantically identical when exactly one thread
+/// mutates the array — the SPMD programs select it for `num_threads == 1`,
+/// where CAS traffic would be pure overhead (a ~15x per-op difference on
+/// x86 that otherwise drowns the algorithmic comparisons the benches
+/// make).
+#[inline]
+pub fn sub_floor_seq(cell: &AtomicU32, k: u32, mv: &MetricsView) -> SubFloor {
+    let old = cell.load(Ordering::Relaxed);
+    if old <= k {
+        SubFloor::AtFloor(old)
+    } else {
+        cell.store(old - 1, Ordering::Relaxed);
+        mv.atomic_subs(1);
+        SubFloor::Written(old - 1)
+    }
+}
+
+/// Allocate a zeroed atomic array via the `u32`→`AtomicU32` layout
+/// guarantee ("same size and bit validity"): `vec![0u32]` is a memset,
+/// element-wise `AtomicU32::new` is not — this matters for HistoCore's
+/// O(2|E|) histogram rows.
+pub fn atomic_u32_zeroed(len: usize) -> Vec<AtomicU32> {
+    let v = vec![0u32; len];
+    let mut v = std::mem::ManuallyDrop::new(v);
+    // SAFETY: AtomicU32 has the same size, alignment, and bit validity as
+    // u32 (std documented guarantee); length/capacity are preserved.
+    unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut AtomicU32, v.len(), v.capacity()) }
+}
+
+/// Plain instrumented `atomicSub(cell, 1)` returning the new value —
+/// the baseline GPP / PP-dyn operation (may go below any floor).
+#[inline]
+pub fn atomic_sub_one(cell: &AtomicU32, mv: &MetricsView) -> u32 {
+    mv.atomic_subs(1);
+    cell.fetch_sub(1, Ordering::Relaxed).wrapping_sub(1)
+}
+
+/// Plain instrumented `atomicAdd(cell, 1)` returning the new value —
+/// PP-dyn's under-core correction (Fig. 4a).
+#[inline]
+pub fn atomic_add_one(cell: &AtomicU32, mv: &MetricsView) -> u32 {
+    mv.atomic_adds(1);
+    cell.fetch_add(1, Ordering::Relaxed).wrapping_add(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::metrics::Metrics;
+    use crate::engine::spmd::run_spmd;
+
+    #[test]
+    fn sub_floor_decrements_above_floor() {
+        let m = Metrics::new(1, true);
+        let c = AtomicU32::new(10);
+        assert_eq!(atomic_sub_floor(&c, 5, &m.view(0)), SubFloor::Written(9));
+        assert_eq!(c.load(Ordering::Relaxed), 9);
+    }
+
+    #[test]
+    fn sub_floor_stops_at_floor() {
+        let m = Metrics::new(1, true);
+        let c = AtomicU32::new(5);
+        assert_eq!(atomic_sub_floor(&c, 5, &m.view(0)), SubFloor::AtFloor(5));
+        assert_eq!(c.load(Ordering::Relaxed), 5);
+        // below floor (removed vertex from an earlier level): untouched
+        let c = AtomicU32::new(3);
+        assert_eq!(atomic_sub_floor(&c, 5, &m.view(0)), SubFloor::AtFloor(3));
+        assert_eq!(c.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn sub_floor_exactly_one_writer_hits_floor() {
+        // n concurrent decrements on a cell of value k+m: exactly m writes
+        // succeed, exactly one of them produces Written(k) — the paper's
+        // unique frontier-insertion signal.
+        let k = 8u32;
+        let m_extra = 5u32; // value = k + m_extra
+        let n_threads = 8usize;
+        let reps = 200;
+        for rep in 0..reps {
+            let cell = AtomicU32::new(k + m_extra);
+            let metrics = Metrics::new(n_threads, true);
+            let hit_floor = std::sync::atomic::AtomicU32::new(0);
+            run_spmd(n_threads, |ctx| {
+                // every thread tries 3 decrements: 24 attempts on 5 slack
+                for _ in 0..3 {
+                    if let SubFloor::Written(nv) =
+                        atomic_sub_floor(&cell, k, &metrics.view(ctx.tid))
+                    {
+                        if nv == k {
+                            hit_floor.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+            });
+            assert_eq!(cell.load(Ordering::Relaxed), k, "rep {rep}");
+            assert_eq!(hit_floor.load(Ordering::Relaxed), 1, "rep {rep}");
+            // exactly m_extra successful subs
+            assert_eq!(metrics.snapshot().atomic_subs, m_extra as u64);
+        }
+    }
+
+    #[test]
+    fn sub_floor_seq_matches_concurrent_semantics() {
+        let m = Metrics::new(1, true);
+        for (init, k) in [(10u32, 5u32), (5, 5), (3, 5), (6, 5)] {
+            let a = AtomicU32::new(init);
+            let b = AtomicU32::new(init);
+            let ra = atomic_sub_floor(&a, k, &m.view(0));
+            let rb = sub_floor_seq(&b, k, &m.view(0));
+            assert_eq!(ra, rb, "init={init} k={k}");
+            assert_eq!(a.load(Ordering::Relaxed), b.load(Ordering::Relaxed));
+        }
+    }
+
+    #[test]
+    fn zeroed_atomic_vec() {
+        let v = atomic_u32_zeroed(1000);
+        assert_eq!(v.len(), 1000);
+        assert!(v.iter().all(|c| c.load(Ordering::Relaxed) == 0));
+        v[5].store(7, Ordering::Relaxed);
+        assert_eq!(v[5].load(Ordering::Relaxed), 7);
+    }
+
+    #[test]
+    fn core_array_round_trip() {
+        let a = AtomicCoreArray::from_vec(vec![1, 2, 3]);
+        a.store(1, 9);
+        assert_eq!(a.to_vec(), vec![1, 9, 3]);
+        assert_eq!(a.len(), 3);
+    }
+
+    #[test]
+    fn sub_add_one_instrumented() {
+        let m = Metrics::new(1, true);
+        let c = AtomicU32::new(10);
+        assert_eq!(atomic_sub_one(&c, &m.view(0)), 9);
+        assert_eq!(atomic_add_one(&c, &m.view(0)), 10);
+        let s = m.snapshot();
+        assert_eq!(s.atomic_subs, 1);
+        assert_eq!(s.atomic_adds, 1);
+    }
+}

@@ -1,0 +1,325 @@
+//! Frontier machinery.
+//!
+//! * [`WorkList`] — the *dynamic* global frontier queue of PP-dyn/PO-dyn
+//!   (§III.C step 3): vertices discovered mid-launch (under-core vertices
+//!   asserted to the floor k) are pushed and drained within the same
+//!   launch, collapsing the per-level sub-iterations so l1 = k_max.
+//!   Modeled after a GPU global work-list: one reservation cursor for
+//!   pops, one publish cursor for pushes, live termination detection.
+//! * [`NextFrontier`] — the double-buffered, deduplicated frontier the
+//!   Index2core algorithms use for `V_active` / `V_cnt` (one epoch per
+//!   BSP launch; dedup via an epoch-stamp array instead of clearing).
+
+use crossbeam_utils::CachePadded;
+use std::sync::atomic::{AtomicU32, AtomicUsize, Ordering};
+
+const SENTINEL: u32 = u32::MAX;
+
+/// Dynamic global work-list over vertex ids `< capacity`.
+///
+/// Usage per level: seed with [`WorkList::push`] (scan kernel), then all
+/// workers call [`WorkList::drain`] concurrently; `drain` returns when the
+/// list is globally exhausted and no worker can produce more items.
+/// [`WorkList::reset`] (single-threaded, between levels) clears only the
+/// used range, so a full decomposition pays O(total pushes) reset cost.
+pub struct WorkList {
+    buf: Vec<AtomicU32>,
+    /// Pop reservation cursor.
+    head: CachePadded<AtomicUsize>,
+    /// Publish cursor.
+    tail: CachePadded<AtomicUsize>,
+    /// Workers currently processing an item (termination detection).
+    busy: CachePadded<AtomicUsize>,
+}
+
+impl WorkList {
+    /// Capacity must bound the number of pushes between two resets —
+    /// for peel algorithms each vertex is enqueued at most once, so `n`.
+    pub fn new(capacity: usize) -> Self {
+        Self {
+            buf: (0..capacity).map(|_| AtomicU32::new(SENTINEL)).collect(),
+            head: CachePadded::new(AtomicUsize::new(0)),
+            tail: CachePadded::new(AtomicUsize::new(0)),
+            busy: CachePadded::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Publish an item (safe to call concurrently with draining).
+    #[inline]
+    pub fn push(&self, v: u32) {
+        debug_assert_ne!(v, SENTINEL);
+        let i = self.tail.fetch_add(1, Ordering::AcqRel);
+        assert!(i < self.buf.len(), "WorkList overflow (capacity {})", self.buf.len());
+        self.buf[i].store(v, Ordering::Release);
+    }
+
+    /// Number of items published since the last reset.
+    pub fn pushed(&self) -> usize {
+        self.tail.load(Ordering::Acquire)
+    }
+
+    /// Read a published item by index (BSP use: `i < pushed()` and a
+    /// barrier separates the pushing launch from the reading launch).
+    #[inline]
+    pub fn get(&self, i: usize) -> u32 {
+        let v = self.buf[i].load(Ordering::Acquire);
+        debug_assert_ne!(v, SENTINEL, "read of unpublished WorkList slot {i}");
+        v
+    }
+
+    /// Cooperatively drain: repeatedly pop an item and call `f(item, self)`
+    /// (f may push). Returns the number of items this worker processed.
+    /// All workers of the launch must call this; it returns only when the
+    /// list is globally empty and no worker is mid-item.
+    pub fn drain(&self, mut f: impl FnMut(u32, &WorkList)) -> usize {
+        let mut processed = 0usize;
+        let mut spins = 0u32;
+        loop {
+            // Optimistically mark ourselves busy before attempting a pop so
+            // no peer can observe (empty ∧ nobody busy) while we hold an
+            // unprocessed item.
+            self.busy.fetch_add(1, Ordering::SeqCst);
+            let h = self.head.load(Ordering::Acquire);
+            let t = self.tail.load(Ordering::Acquire);
+            if h < t
+                && self
+                    .head
+                    .compare_exchange(h, h + 1, Ordering::AcqRel, Ordering::Acquire)
+                    .is_ok()
+            {
+                // Wait for the slot to be published (push reserves index
+                // before storing the value). Yield after a short spin —
+                // on low-core hosts the publisher may need the CPU.
+                let v = {
+                    let mut wait = 0u32;
+                    loop {
+                        let v = self.buf[h].load(Ordering::Acquire);
+                        if v != SENTINEL {
+                            break v;
+                        }
+                        wait += 1;
+                        if wait > 16 {
+                            std::thread::yield_now();
+                        } else {
+                            std::hint::spin_loop();
+                        }
+                    }
+                };
+                f(v, self);
+                processed += 1;
+                self.busy.fetch_sub(1, Ordering::SeqCst);
+                spins = 0;
+                continue;
+            }
+            self.busy.fetch_sub(1, Ordering::SeqCst);
+            // Exhausted? Only if nothing pending and nobody mid-item.
+            if self.busy.load(Ordering::SeqCst) == 0
+                && self.head.load(Ordering::SeqCst) >= self.tail.load(Ordering::SeqCst)
+            {
+                return processed;
+            }
+            spins += 1;
+            if spins > 64 {
+                std::thread::yield_now();
+            } else {
+                std::hint::spin_loop();
+            }
+        }
+    }
+
+    /// Sequential drain — the single-worker fast path (no busy
+    /// accounting, no CAS): used when the SPMD pool has one thread, where
+    /// the concurrent protocol's SeqCst traffic would be pure overhead.
+    pub fn drain_seq(&self, mut f: impl FnMut(u32, &WorkList)) -> usize {
+        let mut processed = 0usize;
+        loop {
+            let h = self.head.load(Ordering::Relaxed);
+            let t = self.tail.load(Ordering::Relaxed);
+            if h >= t {
+                return processed;
+            }
+            self.head.store(h + 1, Ordering::Relaxed);
+            let v = self.buf[h].load(Ordering::Relaxed);
+            debug_assert_ne!(v, SENTINEL);
+            f(v, self);
+            processed += 1;
+        }
+    }
+
+    /// Clear for the next level. Single-threaded (between BSP launches).
+    pub fn reset(&self) {
+        let used = self.tail.load(Ordering::Acquire).min(self.buf.len());
+        for slot in &self.buf[..used] {
+            slot.store(SENTINEL, Ordering::Relaxed);
+        }
+        self.head.store(0, Ordering::Release);
+        self.tail.store(0, Ordering::Release);
+    }
+}
+
+/// Double-buffered deduplicated next-frontier set (BSP epochs).
+///
+/// During launch `e`, workers [`NextFrontier::push`] candidate vertices;
+/// duplicates within the epoch are dropped via an epoch-stamp array.
+/// Between launches (single-threaded), [`NextFrontier::take`] yields the
+/// collected set and opens the next epoch. Visibility is provided by the
+/// BSP barrier, so all atomics are relaxed.
+pub struct NextFrontier {
+    epoch: AtomicU32,
+    stamp: Vec<AtomicU32>,
+    buf: Vec<AtomicU32>,
+    len: CachePadded<AtomicUsize>,
+}
+
+impl NextFrontier {
+    pub fn new(n: usize) -> Self {
+        Self {
+            epoch: AtomicU32::new(1),
+            stamp: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            buf: (0..n).map(|_| AtomicU32::new(0)).collect(),
+            len: CachePadded::new(AtomicUsize::new(0)),
+        }
+    }
+
+    /// Add `v` to the next frontier (idempotent within an epoch).
+    #[inline]
+    pub fn push(&self, v: u32) {
+        let e = self.epoch.load(Ordering::Relaxed);
+        if self.stamp[v as usize].swap(e, Ordering::Relaxed) != e {
+            let i = self.len.fetch_add(1, Ordering::Relaxed);
+            self.buf[i].store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Whether `v` is already queued this epoch.
+    #[inline]
+    pub fn contains(&self, v: u32) -> bool {
+        self.stamp[v as usize].load(Ordering::Relaxed) == self.epoch.load(Ordering::Relaxed)
+    }
+
+    /// Current number of queued vertices.
+    pub fn len(&self) -> usize {
+        self.len.load(Ordering::Relaxed)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Collect the queued set and open the next epoch. Call from a single
+    /// thread between barriers.
+    pub fn take(&self) -> Vec<u32> {
+        let n = self.len.load(Ordering::Relaxed);
+        let out: Vec<u32> = self.buf[..n]
+            .iter()
+            .map(|c| c.load(Ordering::Relaxed))
+            .collect();
+        self.len.store(0, Ordering::Relaxed);
+        self.epoch.fetch_add(1, Ordering::Relaxed);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::spmd::run_spmd;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn worklist_single_thread_fifo_drain() {
+        let wl = WorkList::new(10);
+        wl.push(3);
+        wl.push(7);
+        let mut seen = Vec::new();
+        let n = wl.drain(|v, _| seen.push(v));
+        assert_eq!(n, 2);
+        assert_eq!(seen, vec![3, 7]);
+    }
+
+    #[test]
+    fn worklist_recursive_pushes_processed_same_launch() {
+        // Seed one item; each processed item v pushes v-1 down to 0:
+        // the whole chain must drain within a single `drain` call.
+        let wl = WorkList::new(101);
+        wl.push(100);
+        let count = AtomicU64::new(0);
+        run_spmd(4, |_| {
+            wl.drain(|v, wl| {
+                count.fetch_add(1, Ordering::Relaxed);
+                if v > 0 {
+                    wl.push(v - 1);
+                }
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 101);
+    }
+
+    #[test]
+    fn worklist_parallel_exactly_once() {
+        let n = 10_000u32;
+        let wl = WorkList::new(n as usize);
+        for v in 0..n {
+            wl.push(v);
+        }
+        let hits: Vec<AtomicU32> = (0..n).map(|_| AtomicU32::new(0)).collect();
+        run_spmd(8, |_| {
+            wl.drain(|v, _| {
+                hits[v as usize].fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn worklist_reset_reusable() {
+        let wl = WorkList::new(8);
+        wl.push(1);
+        wl.drain(|_, _| {});
+        wl.reset();
+        assert_eq!(wl.pushed(), 0);
+        wl.push(2);
+        let mut seen = Vec::new();
+        wl.drain(|v, _| seen.push(v));
+        assert_eq!(seen, vec![2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "overflow")]
+    fn worklist_overflow_panics() {
+        let wl = WorkList::new(1);
+        wl.push(0);
+        wl.push(1);
+    }
+
+    #[test]
+    fn next_frontier_dedups_within_epoch() {
+        let nf = NextFrontier::new(10);
+        nf.push(4);
+        nf.push(4);
+        nf.push(2);
+        assert_eq!(nf.len(), 2);
+        let mut got = nf.take();
+        got.sort_unstable();
+        assert_eq!(got, vec![2, 4]);
+        // next epoch: same vertex can be queued again
+        nf.push(4);
+        assert_eq!(nf.take(), vec![4]);
+    }
+
+    #[test]
+    fn next_frontier_parallel_dedup() {
+        let n = 1000usize;
+        let nf = NextFrontier::new(n);
+        run_spmd(8, |_| {
+            for v in 0..n as u32 {
+                nf.push(v % 100); // heavy duplication across threads
+            }
+        });
+        let mut got = nf.take();
+        got.sort_unstable();
+        got.dedup();
+        assert_eq!(got.len(), 100);
+        assert_eq!(got, (0..100u32).collect::<Vec<_>>());
+    }
+}

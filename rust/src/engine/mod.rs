@@ -1,0 +1,21 @@
+//! The BSP kernel-launch engine — the CUDA-substitute substrate.
+//!
+//! The paper's algorithms are synchronous sequences of GPU kernel launches
+//! (`scan`, `scatter`, `SumHisto`, `UpdateHisto`). We model each launch as
+//! a bulk-synchronous data-parallel pass executed by a fixed pool of OS
+//! threads in SPMD style: every algorithm is written as *one* function all
+//! workers execute, with [`SpmdCtx::barrier`] marking kernel boundaries —
+//! exactly the shape of a CUDA cooperative-groups program. Atomic
+//! operations (including the paper's novel `atomicSub_{>=k}`) are CAS loops
+//! over `std::sync::atomic` with optional instrumentation, so every table
+//! can report the paper's atomic-op and launch counts alongside time.
+
+pub mod atomics;
+pub mod frontier;
+pub mod metrics;
+pub mod spmd;
+
+pub use atomics::{atomic_sub_floor, AtomicCoreArray};
+pub use frontier::{NextFrontier, WorkList};
+pub use metrics::{Metrics, MetricsSnapshot, MetricsView};
+pub use spmd::{run_spmd, SpmdCtx};

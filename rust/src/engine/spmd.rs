@@ -1,0 +1,213 @@
+//! SPMD execution: spawn `T` workers that all run the same kernel program,
+//! synchronising at explicit barriers (= GPU kernel-launch boundaries).
+//!
+//! Workers are spawned once per decomposition run (not per launch), so a
+//! run with thousands of launches pays thousands of *barriers* (~µs), not
+//! thousands of thread spawns — mirroring the persistent-threads style of
+//! the paper's CUDA kernels while keeping launch counts meaningful.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Barrier;
+
+/// Per-worker execution context.
+pub struct SpmdCtx<'a> {
+    /// Worker id in `0..num_threads`.
+    pub tid: usize,
+    /// Total workers.
+    pub num_threads: usize,
+    barrier: &'a Barrier,
+    launches: &'a AtomicUsize,
+}
+
+impl<'a> SpmdCtx<'a> {
+    /// Synchronise all workers — the kernel-launch boundary.
+    #[inline]
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+
+    /// Barrier that also counts a kernel launch (thread 0 accounts it).
+    #[inline]
+    pub fn launch_boundary(&self) {
+        if self.tid == 0 {
+            self.launches.fetch_add(1, Ordering::Relaxed);
+        }
+        self.barrier.wait();
+    }
+
+    /// The static contiguous chunk of `domain` assigned to this worker —
+    /// the analog of `blockIdx`-based index partitioning.
+    #[inline]
+    pub fn static_chunk(&self, domain: usize) -> std::ops::Range<usize> {
+        let per = domain.div_ceil(self.num_threads);
+        let lo = (self.tid * per).min(domain);
+        let hi = ((self.tid + 1) * per).min(domain);
+        lo..hi
+    }
+
+    /// Dynamically load-balanced chunks over `domain` via a shared cursor —
+    /// the analog of a grid-stride persistent-threads loop. `cursor` must
+    /// be reset (to 0) before the launch and be the same for all workers.
+    #[inline]
+    pub fn dynamic_chunks<'c>(
+        &self,
+        domain: usize,
+        chunk: usize,
+        cursor: &'c AtomicUsize,
+    ) -> DynamicChunks<'c> {
+        DynamicChunks {
+            domain,
+            chunk: chunk.max(1),
+            cursor,
+        }
+    }
+}
+
+/// Iterator over dynamically grabbed chunks.
+pub struct DynamicChunks<'c> {
+    domain: usize,
+    chunk: usize,
+    cursor: &'c AtomicUsize,
+}
+
+impl Iterator for DynamicChunks<'_> {
+    type Item = std::ops::Range<usize>;
+
+    #[inline]
+    fn next(&mut self) -> Option<Self::Item> {
+        let lo = self.cursor.fetch_add(self.chunk, Ordering::Relaxed);
+        if lo >= self.domain {
+            return None;
+        }
+        Some(lo..(lo + self.chunk).min(self.domain))
+    }
+}
+
+/// Run `kernel_program` on `num_threads` workers; returns the number of
+/// `launch_boundary` crossings (kernel launches) observed.
+pub fn run_spmd<F>(num_threads: usize, kernel_program: F) -> usize
+where
+    F: Fn(&SpmdCtx) + Sync,
+{
+    assert!(num_threads >= 1);
+    let barrier = Barrier::new(num_threads);
+    let launches = AtomicUsize::new(0);
+    if num_threads == 1 {
+        // Fast path (also used by tests to get deterministic scheduling).
+        let ctx = SpmdCtx {
+            tid: 0,
+            num_threads: 1,
+            barrier: &barrier,
+            launches: &launches,
+        };
+        kernel_program(&ctx);
+        return launches.load(Ordering::Relaxed);
+    }
+    crossbeam_utils::thread::scope(|scope| {
+        for tid in 0..num_threads {
+            let barrier = &barrier;
+            let launches = &launches;
+            let kernel_program = &kernel_program;
+            scope.spawn(move |_| {
+                let ctx = SpmdCtx {
+                    tid,
+                    num_threads,
+                    barrier,
+                    launches,
+                };
+                kernel_program(&ctx);
+            });
+        }
+    })
+    .expect("SPMD worker panicked");
+    launches.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn static_chunks_cover_domain() {
+        let barrier = Barrier::new(1);
+        let launches = AtomicUsize::new(0);
+        let mk = |tid, nt| SpmdCtx {
+            tid,
+            num_threads: nt,
+            barrier: &barrier,
+            launches: &launches,
+        };
+        for nt in [1, 3, 4, 7] {
+            for domain in [0usize, 1, 5, 100] {
+                let mut covered = vec![false; domain];
+                for tid in 0..nt {
+                    for i in mk(tid, nt).static_chunk(domain) {
+                        assert!(!covered[i], "overlap at {i}");
+                        covered[i] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "nt={nt} domain={domain}");
+            }
+        }
+    }
+
+    #[test]
+    fn spmd_parallel_sum() {
+        let total = AtomicU64::new(0);
+        let n = 100_000usize;
+        run_spmd(4, |ctx| {
+            let mut local = 0u64;
+            for i in ctx.static_chunk(n) {
+                local += i as u64;
+            }
+            total.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::Relaxed), (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn dynamic_chunks_cover_exactly_once() {
+        let n = 10_000usize;
+        let cursor = AtomicUsize::new(0);
+        let hits: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        run_spmd(4, |ctx| {
+            for range in ctx.dynamic_chunks(n, 64, &cursor) {
+                for i in range {
+                    hits[i].fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn launch_boundary_counts_once_per_crossing() {
+        let launches = run_spmd(4, |ctx| {
+            for _ in 0..5 {
+                ctx.launch_boundary();
+            }
+        });
+        assert_eq!(launches, 5);
+    }
+
+    #[test]
+    fn barriers_order_phases() {
+        // Phase 1 writes, phase 2 reads — barrier must make writes visible.
+        let n = 1000usize;
+        let data: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+        let sum = AtomicU64::new(0);
+        run_spmd(4, |ctx| {
+            for i in ctx.static_chunk(n) {
+                data[i].store(i as u64 + 1, Ordering::Relaxed);
+            }
+            ctx.barrier();
+            let mut local = 0;
+            for i in ctx.static_chunk(n) {
+                local += data[i].load(Ordering::Relaxed);
+            }
+            sum.fetch_add(local, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), (1..=n as u64).sum::<u64>());
+    }
+}

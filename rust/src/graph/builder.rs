@@ -1,0 +1,157 @@
+//! Mutable edge-set accumulator that canonicalises into [`CsrGraph`]:
+//! undirected closure, self-loop stripping, duplicate removal, sorted
+//! adjacency. All loaders and generators funnel through here so the CSR
+//! invariants hold by construction.
+
+use super::csr::{CsrGraph, VertexId};
+
+/// Accumulates edges, then `build()`s a canonical CSR.
+#[derive(Clone, Debug, Default)]
+pub struct GraphBuilder {
+    n: usize,
+    edges: Vec<(VertexId, VertexId)>,
+}
+
+impl GraphBuilder {
+    /// Builder for a graph with (at least) `n` vertices. Adding an edge
+    /// with a larger endpoint grows the vertex count.
+    pub fn new(n: usize) -> Self {
+        Self { n, edges: Vec::new() }
+    }
+
+    pub fn with_capacity(n: usize, m: usize) -> Self {
+        Self {
+            n,
+            edges: Vec::with_capacity(m),
+        }
+    }
+
+    /// Current vertex count.
+    pub fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    /// Number of (pre-dedup) edges added so far.
+    pub fn num_pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Add an undirected edge. Self-loops are silently dropped (the k-core
+    /// literature works on simple graphs); duplicates are removed at build.
+    pub fn add_edge(&mut self, u: VertexId, v: VertexId) {
+        if u == v {
+            return;
+        }
+        let hi = u.max(v) as usize + 1;
+        if hi > self.n {
+            self.n = hi;
+        }
+        // store canonical (min, max): undirected dedup key
+        self.edges.push((u.min(v), u.max(v)));
+    }
+
+    /// Bulk add.
+    pub fn add_edges(&mut self, it: impl IntoIterator<Item = (VertexId, VertexId)>) {
+        for (u, v) in it {
+            self.add_edge(u, v);
+        }
+    }
+
+    /// Canonicalise into CSR. O(E log E).
+    pub fn build(mut self, name: impl Into<String>) -> CsrGraph {
+        self.edges.sort_unstable();
+        self.edges.dedup();
+        let n = self.n;
+
+        // Count degrees over both directions.
+        let mut offsets = vec![0u64; n + 1];
+        for &(u, v) in &self.edges {
+            offsets[u as usize + 1] += 1;
+            offsets[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+
+        // Fill adjacency; edges are sorted by (u, v) so u-lists fill in
+        // order, v-lists need a second sorted pass — easiest is cursor fill
+        // then per-list sort, but since (u,v) sorted gives sorted u-lists
+        // and v-entries arrive sorted by u too, cursor fill keeps every
+        // list sorted already.
+        let mut cursor: Vec<u64> = offsets[..n].to_vec();
+        let mut adjacency = vec![0 as VertexId; *offsets.last().unwrap() as usize];
+        for &(u, v) in &self.edges {
+            adjacency[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+        }
+        // v-direction: iterate again; (u,v) sorted by u then v means for a
+        // fixed v the u's arrive ascending, so v-lists stay sorted only if
+        // we interleave correctly — but u-entries (written above) for a
+        // list all precede... they do not. Simplest correct approach:
+        // write both directions then sort each list. Lists are short on
+        // average; total cost O(E log d_max).
+        for &(u, v) in &self.edges {
+            adjacency[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        for v in 0..n {
+            let lo = offsets[v] as usize;
+            let hi = offsets[v + 1] as usize;
+            adjacency[lo..hi].sort_unstable();
+        }
+
+        CsrGraph::from_parts(offsets, adjacency, name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_and_selfloops() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 0); // duplicate, reversed
+        b.add_edge(0, 1); // duplicate
+        b.add_edge(2, 2); // self-loop dropped
+        let g = b.build("t");
+        assert_eq!(g.num_edges(), 1);
+        assert_eq!(g.degree(2), 0);
+        assert_eq!(g.validate(), Ok(()));
+    }
+
+    #[test]
+    fn grows_vertex_count() {
+        let mut b = GraphBuilder::new(0);
+        b.add_edge(5, 9);
+        let g = b.build("t");
+        assert_eq!(g.num_vertices(), 10);
+        assert!(g.has_edge(9, 5));
+    }
+
+    #[test]
+    fn adjacency_sorted() {
+        let mut b = GraphBuilder::new(6);
+        b.add_edge(3, 5);
+        b.add_edge(3, 1);
+        b.add_edge(3, 4);
+        b.add_edge(3, 0);
+        let g = b.build("t");
+        assert_eq!(g.neighbors(3), &[0, 1, 4, 5]);
+        assert_eq!(g.validate(), Ok(()));
+    }
+
+    #[test]
+    fn star_degrees() {
+        let mut b = GraphBuilder::new(5);
+        for i in 1..5 {
+            b.add_edge(0, i);
+        }
+        let g = b.build("star");
+        assert_eq!(g.degree(0), 4);
+        for i in 1..5 {
+            assert_eq!(g.degree(i), 1);
+        }
+    }
+}

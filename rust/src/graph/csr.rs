@@ -1,0 +1,225 @@
+//! Compressed Sparse Row graph storage — the layout every GPU k-core work
+//! (and this reproduction) operates on: one array of concatenated
+//! adjacency lists plus one offsets array (paper §II-B1).
+
+/// Vertex identifier. 32-bit: the suite tops out well under 2^32 vertices,
+/// and halving the index width doubles effective memory bandwidth on the
+/// scatter-heavy hot path (same reasoning as the CUDA original).
+pub type VertexId = u32;
+
+/// An immutable undirected graph in CSR form.
+///
+/// Invariants (validated by [`CsrGraph::validate`] and enforced by
+/// [`crate::graph::GraphBuilder`]):
+/// * `offsets.len() == n + 1`, `offsets[0] == 0`, non-decreasing.
+/// * `adjacency.len() == offsets[n]` = 2·|E| (each undirected edge stored
+///   in both endpoint lists).
+/// * No self-loops, no duplicate edges; each adjacency list is sorted.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CsrGraph {
+    offsets: Vec<u64>,
+    adjacency: Vec<VertexId>,
+    /// Optional human-readable name (dataset id in tables).
+    pub name: String,
+}
+
+impl CsrGraph {
+    /// Construct from raw parts. Prefer [`crate::graph::GraphBuilder`];
+    /// this is for loaders that already produce canonical CSR.
+    pub fn from_parts(offsets: Vec<u64>, adjacency: Vec<VertexId>, name: impl Into<String>) -> Self {
+        let g = Self {
+            offsets,
+            adjacency,
+            name: name.into(),
+        };
+        debug_assert!(g.validate().is_ok(), "invalid CSR: {:?}", g.validate());
+        g
+    }
+
+    /// Number of vertices.
+    #[inline]
+    pub fn num_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    /// Number of undirected edges.
+    #[inline]
+    pub fn num_edges(&self) -> u64 {
+        self.adjacency.len() as u64 / 2
+    }
+
+    /// Number of directed arcs (2·|E|) — the length of the adjacency array,
+    /// which is what kernel workloads scale with.
+    #[inline]
+    pub fn num_arcs(&self) -> u64 {
+        self.adjacency.len() as u64
+    }
+
+    /// Degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> u32 {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as u32
+    }
+
+    /// Neighbors of `v`, sorted ascending.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.adjacency[lo..hi]
+    }
+
+    /// The raw offsets array (length n+1).
+    #[inline]
+    pub fn offsets(&self) -> &[u64] {
+        &self.offsets
+    }
+
+    /// The raw adjacency array (length 2·|E|).
+    #[inline]
+    pub fn adjacency(&self) -> &[VertexId] {
+        &self.adjacency
+    }
+
+    /// Degree vector.
+    pub fn degrees(&self) -> Vec<u32> {
+        (0..self.num_vertices() as VertexId).map(|v| self.degree(v)).collect()
+    }
+
+    /// Maximum degree (0 for the empty graph).
+    pub fn max_degree(&self) -> u32 {
+        (0..self.num_vertices() as VertexId)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Whether the undirected edge (u, v) exists. O(log deg(u)).
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Full structural validation (used by loader tests & property tests).
+    pub fn validate(&self) -> Result<(), String> {
+        if self.offsets.is_empty() {
+            return Err("offsets empty".into());
+        }
+        if self.offsets[0] != 0 {
+            return Err("offsets[0] != 0".into());
+        }
+        let n = self.num_vertices();
+        for i in 0..n {
+            if self.offsets[i] > self.offsets[i + 1] {
+                return Err(format!("offsets decrease at {i}"));
+            }
+        }
+        if *self.offsets.last().unwrap() != self.adjacency.len() as u64 {
+            return Err("offsets[n] != adjacency.len()".into());
+        }
+        if self.adjacency.len() % 2 != 0 {
+            return Err("odd arc count (must be 2|E|)".into());
+        }
+        for v in 0..n as VertexId {
+            let nbrs = self.neighbors(v);
+            for w in nbrs.windows(2) {
+                if w[0] >= w[1] {
+                    return Err(format!("adjacency of {v} not strictly sorted"));
+                }
+            }
+            for &u in nbrs {
+                if u as usize >= n {
+                    return Err(format!("neighbor {u} of {v} out of range"));
+                }
+                if u == v {
+                    return Err(format!("self-loop at {v}"));
+                }
+                if !self.has_edge(u, v) {
+                    return Err(format!("edge ({v},{u}) not symmetric"));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Approximate resident bytes (memory-budget checks in the coordinator).
+    pub fn resident_bytes(&self) -> u64 {
+        (self.offsets.len() * std::mem::size_of::<u64>()
+            + self.adjacency.len() * std::mem::size_of::<VertexId>()) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn triangle() -> CsrGraph {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1);
+        b.add_edge(1, 2);
+        b.add_edge(0, 2);
+        b.build("triangle")
+    }
+
+    #[test]
+    fn basic_accessors() {
+        let g = triangle();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+        assert_eq!(g.num_arcs(), 6);
+        assert_eq!(g.degree(0), 2);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.max_degree(), 2);
+    }
+
+    #[test]
+    fn has_edge_symmetric() {
+        let g = triangle();
+        assert!(g.has_edge(0, 1));
+        assert!(g.has_edge(1, 0));
+        assert!(!g.has_edge(0, 0));
+    }
+
+    #[test]
+    fn validate_accepts_canonical() {
+        assert_eq!(triangle().validate(), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_asymmetry() {
+        // 0 -> 1 present but 1 -> 0 missing.
+        let g = CsrGraph {
+            offsets: vec![0, 1, 1],
+            adjacency: vec![1, 1].into_iter().take(1).collect(),
+            name: "bad".into(),
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_self_loop() {
+        let g = CsrGraph {
+            offsets: vec![0, 1, 2],
+            adjacency: vec![0, 0],
+            name: "loop".into(),
+        };
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn empty_graph_ok() {
+        let g = CsrGraph::from_parts(vec![0], vec![], "empty");
+        assert_eq!(g.num_vertices(), 0);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.validate(), Ok(()));
+    }
+
+    #[test]
+    fn isolated_vertices_ok() {
+        let b = GraphBuilder::new(5);
+        let g = b.build("isolated");
+        assert_eq!(g.num_vertices(), 5);
+        assert_eq!(g.num_edges(), 0);
+        assert_eq!(g.degree(3), 0);
+    }
+}

@@ -1,0 +1,97 @@
+//! Hand-constructed example graphs, including the paper's running example
+//! `G1` (Fig. 1): six vertices where {v0, v1} have coreness 1 and
+//! {v2, v3, v4, v5} have coreness 2.
+
+use super::builder::GraphBuilder;
+use super::csr::CsrGraph;
+
+/// The paper's Fig. 1 graph `G1`.
+///
+/// Edges: v0–v5, v1–v5, v2–v3, v2–v4, v3–v4, v3–v5, v4–v5.
+/// Degrees: v0=1, v1=1, v2=2, v3=3, v4=3, v5=4.
+/// Coreness: v0=v1=1, v2..v5=2 (the 2-core is {v2,v3,v4,v5}; no 3-core).
+/// The peel walkthrough of Fig. 2 takes 3 iterations and yields the
+/// under-core set {v3, v5} in the third.
+pub fn g1() -> CsrGraph {
+    let mut b = GraphBuilder::new(6);
+    b.add_edges([(0, 5), (1, 5), (2, 3), (2, 4), (3, 4), (3, 5), (4, 5)]);
+    b.build("G1")
+}
+
+/// Expected coreness of [`g1`].
+pub fn g1_coreness() -> Vec<u32> {
+    vec![1, 1, 2, 2, 2, 2]
+}
+
+/// Complete graph K_n — coreness n−1 everywhere.
+pub fn complete(n: usize) -> CsrGraph {
+    let mut b = GraphBuilder::new(n);
+    for u in 0..n as u32 {
+        for v in (u + 1)..n as u32 {
+            b.add_edge(u, v);
+        }
+    }
+    b.build(format!("K{n}"))
+}
+
+/// Path P_n — coreness 1 everywhere (n ≥ 2).
+pub fn path(n: usize) -> CsrGraph {
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n as u32 {
+        b.add_edge(v - 1, v);
+    }
+    b.build(format!("P{n}"))
+}
+
+/// Cycle C_n — coreness 2 everywhere (n ≥ 3).
+pub fn cycle(n: usize) -> CsrGraph {
+    let mut b = GraphBuilder::new(n);
+    for v in 1..n as u32 {
+        b.add_edge(v - 1, v);
+    }
+    b.add_edge(n as u32 - 1, 0);
+    b.build(format!("C{n}"))
+}
+
+/// Star S_n (one hub, n leaves) — coreness 1 everywhere.
+pub fn star(leaves: usize) -> CsrGraph {
+    let mut b = GraphBuilder::new(leaves + 1);
+    for v in 1..=leaves as u32 {
+        b.add_edge(0, v);
+    }
+    b.build(format!("S{leaves}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn g1_shape_matches_paper() {
+        let g = g1();
+        assert_eq!(g.num_vertices(), 6);
+        assert_eq!(g.num_edges(), 7);
+        assert_eq!(g.degrees(), vec![1, 1, 2, 3, 3, 4]);
+    }
+
+    #[test]
+    fn complete_graph() {
+        let g = complete(5);
+        assert_eq!(g.num_edges(), 10);
+        assert!(g.degrees().iter().all(|&d| d == 4));
+    }
+
+    #[test]
+    fn path_and_cycle() {
+        assert_eq!(path(10).num_edges(), 9);
+        assert_eq!(cycle(10).num_edges(), 10);
+        assert!(cycle(10).degrees().iter().all(|&d| d == 2));
+    }
+
+    #[test]
+    fn star_shape() {
+        let g = star(7);
+        assert_eq!(g.degree(0), 7);
+        assert_eq!(g.num_edges(), 7);
+    }
+}

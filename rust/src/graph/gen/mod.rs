@@ -1,0 +1,20 @@
+//! Synthetic graph generators — the workload substitute for the paper's 24
+//! public datasets (Table II). Each generator is deterministic in its seed
+//! and targets one of the paper's dataset categories:
+//!
+//! | Generator | Paper category analog | Key property |
+//! |---|---|---|
+//! | [`erdos_renyi`] | baseline | homogeneous degrees, tiny k_max |
+//! | [`barabasi_albert`] | social / collaboration | power-law, k_max = m |
+//! | [`rmat`] | social (twitter/sinaweibo) | skewed power-law, hubs |
+//! | [`power_law_cluster`] | collaboration (hollywood) | power-law + triangles |
+//! | [`planted_core`] | web graphs (deep hierarchy) | controlled large k_max |
+//! | [`star_burst`] | communication (wiki-Talk) | extreme hub skew, small k_max |
+//! | [`grid2d`] | mesh/road-like | uniform, k_max = 2..3 |
+//! | [`caveman`] | community structure | clique hierarchy |
+
+pub mod models;
+pub mod planted;
+
+pub use models::{barabasi_albert, caveman, erdos_renyi, grid2d, power_law_cluster, rmat, star_burst};
+pub use planted::{core_periphery, nested_cliques, planted_core};

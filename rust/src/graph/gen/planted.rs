@@ -1,0 +1,178 @@
+//! Planted-coreness generators: graphs with a *known, controllable* core
+//! hierarchy. These are the deep-hierarchy web-graph analogs (paper's
+//! indochina-2004 with k_max = 6869, hollywood-2009 with k_max = 2208) and
+//! double as exact-answer oracles for tests — [`nested_cliques`] returns
+//! the expected coreness alongside the graph.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::{CsrGraph, VertexId};
+use crate::util::rng::Rng;
+
+/// Clique chain: `levels` cliques of sizes `base, base+step, …`, adjacent
+/// cliques joined by a single bridge edge.
+///
+/// Exact coreness: every member of the clique of size `s` has coreness
+/// `s − 1`. A bridge raises one endpoint's *degree* but not its coreness —
+/// an s-core containing a K_s member would need all members at degree ≥ s
+/// inside the subgraph, which the other K_s members (degree s−1) cannot
+/// supply, and the bridge leads to a clique that cannot sustain it either
+/// (its own members cap out at their clique bound). This yields a
+/// staircase hierarchy with k_max = base + (levels−1)·step − 1 and a
+/// *fixed* peel depth, the regime where the paper's Table VII shows
+/// HistoCore beating PO-dyn (l2 ≪ l1 = k_max).
+///
+/// Returns (graph, expected coreness).
+pub fn nested_cliques(levels: usize, base: usize, step: usize) -> (CsrGraph, Vec<u32>) {
+    assert!(levels >= 1 && base >= 2);
+    let sizes: Vec<usize> = (0..levels).map(|i| base + i * step).collect();
+    let n: usize = sizes.iter().sum();
+    let m: usize = sizes.iter().map(|s| s * (s - 1) / 2).sum::<usize>() + levels - 1;
+    let mut b = GraphBuilder::with_capacity(n, m);
+    let mut expected = vec![0u32; n];
+    let mut offset = 0usize;
+    let mut prev_first: Option<VertexId> = None;
+    for &s in &sizes {
+        for i in 0..s {
+            expected[offset + i] = (s - 1) as u32;
+            for j in (i + 1)..s {
+                b.add_edge((offset + i) as VertexId, (offset + j) as VertexId);
+            }
+        }
+        if let Some(p) = prev_first {
+            // single bridge between consecutive cliques (coreness-neutral)
+            b.add_edge(p, offset as VertexId);
+        }
+        prev_first = Some(offset as VertexId);
+        offset += s;
+    }
+    let g = b.build(format!("cliques_l{levels}_b{base}_s{step}"));
+    (g, expected)
+}
+
+/// Planted-core graph: a random power-law background with an embedded
+/// dense core ladder. `ladder` entries are `(member_count, internal_degree)`:
+/// each rung adds a random near-regular subgraph over the vertex prefix
+/// `[0, member_count)`, so inner prefixes accumulate density — a controlled
+/// deep hierarchy without the O(n²) edges of [`nested_cliques`]. Coreness
+/// is not closed-form here; use the BZ oracle for ground truth.
+pub fn planted_core(
+    n: usize,
+    background_edges: usize,
+    ladder: &[(usize, usize)],
+    seed: u64,
+) -> CsrGraph {
+    let mut rng = Rng::new(seed);
+    let cap = background_edges + ladder.iter().map(|&(c, d)| c * d / 2).sum::<usize>();
+    let mut b = GraphBuilder::with_capacity(n, cap);
+    // sparse background
+    for _ in 0..background_edges {
+        let u = rng.below_usize(n) as VertexId;
+        let v = rng.below_usize(n) as VertexId;
+        b.add_edge(u, v);
+    }
+    // dense rungs over vertex prefixes (rung i over vertices [0, count_i))
+    for &(count, internal_degree) in ladder {
+        let count = count.min(n);
+        if count < 2 {
+            continue;
+        }
+        let target_edges = count * internal_degree / 2;
+        for _ in 0..target_edges {
+            let u = rng.below_usize(count) as VertexId;
+            let v = rng.below_usize(count) as VertexId;
+            b.add_edge(u, v);
+        }
+    }
+    b.build(format!("planted_n{n}_l{}", ladder.len()))
+}
+
+/// Core–periphery graph: a small deep core (clique of `core_size`) inside
+/// a large sparse periphery (random tree + a few extra edges), connected
+/// by a handful of bridges.
+///
+/// This is the structural regime of the paper's HistoCore-winning
+/// datasets (indochina-2004, webbase-2001, it-2004): k_max is set by the
+/// small core while |V| is set by the periphery, so the Peel paradigm's
+/// l1 = k_max levels each pay an O(|V|) scan — l1·|V| ≫ |E| — while
+/// Index2core converges in a handful of sweeps over mostly-settled
+/// estimates.
+pub fn core_periphery(periphery: usize, core_size: usize, seed: u64) -> CsrGraph {
+    assert!(core_size >= 2);
+    let n = periphery + core_size;
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::with_capacity(n, periphery * 2 + core_size * core_size / 2);
+    // periphery: random recursive tree + sprinkle of extra edges
+    for v in 1..periphery {
+        let parent = rng.below_usize(v) as VertexId;
+        b.add_edge(v as VertexId, parent);
+    }
+    for _ in 0..periphery / 4 {
+        let u = rng.below_usize(periphery) as VertexId;
+        let v = rng.below_usize(periphery) as VertexId;
+        b.add_edge(u, v);
+    }
+    // the deep core
+    let base = periphery as VertexId;
+    for i in 0..core_size as VertexId {
+        for j in (i + 1)..core_size as VertexId {
+            b.add_edge(base + i, base + j);
+        }
+    }
+    // bridges
+    for i in 0..8.min(core_size) {
+        let p = rng.below_usize(periphery.max(1)) as VertexId;
+        b.add_edge(base + i as VertexId, p);
+    }
+    b.build(format!("coreperiph_p{periphery}_c{core_size}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clique_chain_structure() {
+        let (g, expected) = nested_cliques(3, 4, 2); // sizes 4, 6, 8
+        assert_eq!(g.validate(), Ok(()));
+        assert_eq!(g.num_vertices(), 18);
+        // K4: coreness 3, K6: 5, K8: 7
+        assert_eq!(expected[0], 3);
+        assert_eq!(expected[4], 5);
+        assert_eq!(expected[10], 7);
+        // 2 bridges
+        let clique_edges = 4 * 3 / 2 + 6 * 5 / 2 + 8 * 7 / 2;
+        assert_eq!(g.num_edges() as usize, clique_edges + 2);
+    }
+
+    #[test]
+    fn clique_chain_kmax() {
+        let (_, expected) = nested_cliques(5, 3, 3); // biggest clique 15
+        assert_eq!(*expected.iter().max().unwrap(), 14);
+    }
+
+    #[test]
+    fn planted_core_valid() {
+        let g = planted_core(5000, 10_000, &[(1000, 8), (200, 24), (50, 40)], 11);
+        assert_eq!(g.validate(), Ok(()));
+        assert!(g.num_edges() > 10_000);
+    }
+
+    #[test]
+    fn core_periphery_structure() {
+        let g = core_periphery(10_000, 60, 5);
+        assert_eq!(g.validate(), Ok(()));
+        let core = crate::core::bz::bz_coreness(&g);
+        let k_max = *core.iter().max().unwrap();
+        assert!(k_max >= 59, "core sets k_max, got {k_max}");
+        // periphery is shallow
+        let shallow = core.iter().filter(|&&c| c <= 3).count();
+        assert!(shallow > 9_000);
+    }
+
+    #[test]
+    fn planted_deterministic() {
+        let a = planted_core(1000, 2000, &[(100, 10)], 3);
+        let b = planted_core(1000, 2000, &[(100, 10)], 3);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,130 @@
+//! Whitespace edge-list parser (SNAP `.txt` style): one `u v` pair per
+//! line, `#` or `%` comment lines, arbitrary (possibly sparse) vertex ids
+//! remapped densely in order of first appearance when they exceed a
+//! density threshold, kept as-is otherwise.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::CsrGraph;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parse edge-list text into a graph named `name`.
+pub fn parse(text: &str, name: &str) -> Result<CsrGraph> {
+    // First pass: collect raw pairs and the max id.
+    let mut raw: Vec<(u64, u64)> = Vec::new();
+    let mut max_id = 0u64;
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') || line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let u: u64 = it
+            .next()
+            .context("missing source id")?
+            .parse()
+            .with_context(|| format!("line {}: bad source id", lineno + 1))?;
+        let v: u64 = match it.next() {
+            Some(tok) => tok
+                .parse()
+                .with_context(|| format!("line {}: bad target id", lineno + 1))?,
+            None => bail!("line {}: missing target id", lineno + 1),
+        };
+        max_id = max_id.max(u).max(v);
+        raw.push((u, v));
+    }
+
+    if raw.is_empty() {
+        return Ok(GraphBuilder::new(0).build(name));
+    }
+
+    // Dense ids: keep as-is when the id space is reasonably filled,
+    // otherwise remap (avoids 2^32-sized offset arrays for sparse ids).
+    let dense_enough = (max_id as usize) < raw.len().saturating_mul(4).max(1024);
+    let mut b = GraphBuilder::with_capacity(0, raw.len());
+    if dense_enough && max_id < u32::MAX as u64 {
+        for (u, v) in raw {
+            b.add_edge(u as u32, v as u32);
+        }
+    } else {
+        let mut remap: HashMap<u64, u32> = HashMap::new();
+        let mut next = 0u32;
+        let mut id = |x: u64, remap: &mut HashMap<u64, u32>| -> Result<u32> {
+            if let Some(&i) = remap.get(&x) {
+                return Ok(i);
+            }
+            if next == u32::MAX {
+                bail!("more than 2^32 distinct vertex ids");
+            }
+            remap.insert(x, next);
+            next += 1;
+            Ok(next - 1)
+        };
+        for (u, v) in raw {
+            let iu = id(u, &mut remap)?;
+            let iv = id(v, &mut remap)?;
+            b.add_edge(iu, iv);
+        }
+    }
+    Ok(b.build(name))
+}
+
+/// Serialise a graph to edge-list text (round-trip / export).
+pub fn serialize(g: &CsrGraph) -> String {
+    let mut out = String::with_capacity(g.num_edges() as usize * 8);
+    out.push_str(&format!("# pico edge list: {} ({} vertices, {} edges)\n", g.name, g.num_vertices(), g.num_edges()));
+    for u in 0..g.num_vertices() as u32 {
+        for &v in g.neighbors(u) {
+            if u < v {
+                out.push_str(&format!("{u} {v}\n"));
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_with_comments() {
+        let g = parse("# header\n% alt comment\n0 1\n1 2\n2 0\n", "t").unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn sparse_ids_remapped() {
+        let g = parse("1000000000 2000000000\n2000000000 3000000000\n", "t").unwrap();
+        assert_eq!(g.num_vertices(), 3);
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn bad_line_errors() {
+        assert!(parse("0\n", "t").is_err());
+        assert!(parse("a b\n", "t").is_err());
+    }
+
+    #[test]
+    fn empty_text_gives_empty_graph() {
+        let g = parse("# nothing\n", "t").unwrap();
+        assert_eq!(g.num_vertices(), 0);
+    }
+
+    #[test]
+    fn round_trip() {
+        let g = crate::graph::examples::g1();
+        let text = serialize(&g);
+        let g2 = parse(&text, "G1").unwrap();
+        assert_eq!(g.offsets(), g2.offsets());
+        assert_eq!(g.adjacency(), g2.adjacency());
+    }
+
+    #[test]
+    fn tabs_and_extra_whitespace() {
+        let g = parse("0\t1\n1   2\n", "t").unwrap();
+        assert_eq!(g.num_edges(), 2);
+    }
+}

@@ -1,0 +1,95 @@
+//! Graph loaders and the binary cache.
+//!
+//! Supported input formats (auto-detected by extension in [`load`]):
+//! * `.txt` / `.el` — whitespace edge list, `#`/`%` comments (SNAP style)
+//! * `.mtx` — MatrixMarket coordinate (1-based, header skipped)
+//! * `.gz` suffix on any of the above — gzip-compressed
+//! * `.pico` — this crate's binary CSR cache (fast reload)
+
+pub mod binfmt;
+pub mod edgelist;
+pub mod mtx;
+
+use crate::graph::csr::CsrGraph;
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// Load a graph, dispatching on the file extension.
+pub fn load(path: impl AsRef<Path>) -> Result<CsrGraph> {
+    let path = path.as_ref();
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "unnamed".into());
+    let lower = path.to_string_lossy().to_lowercase();
+
+    if lower.ends_with(".pico") {
+        return binfmt::read_file(path);
+    }
+
+    let text = read_maybe_gz(path)?;
+    if lower.ends_with(".mtx") || lower.ends_with(".mtx.gz") {
+        mtx::parse(&text, &name)
+    } else if lower.ends_with(".txt")
+        || lower.ends_with(".el")
+        || lower.ends_with(".txt.gz")
+        || lower.ends_with(".el.gz")
+        || lower.ends_with(".edges")
+        || lower.ends_with(".edges.gz")
+    {
+        edgelist::parse(&text, &name)
+    } else {
+        bail!("unrecognised graph format: {}", path.display())
+    }
+}
+
+/// Read a file into a string, transparently decompressing `.gz`.
+pub fn read_maybe_gz(path: &Path) -> Result<String> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    if path.to_string_lossy().ends_with(".gz") {
+        let mut decoder = flate2::read::GzDecoder::new(&bytes[..]);
+        let mut out = String::new();
+        decoder
+            .read_to_string(&mut out)
+            .with_context(|| format!("gunzip {}", path.display()))?;
+        Ok(out)
+    } else {
+        Ok(String::from_utf8(bytes).context("graph file is not UTF-8")?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn dispatch_edgelist() {
+        let dir = std::env::temp_dir().join("pico_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tiny.el");
+        std::fs::write(&p, "# comment\n0 1\n1 2\n").unwrap();
+        let g = load(&p).unwrap();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.name, "tiny");
+    }
+
+    #[test]
+    fn dispatch_gz() {
+        let dir = std::env::temp_dir().join("pico_io_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("tiny2.el.gz");
+        let f = std::fs::File::create(&p).unwrap();
+        let mut enc = flate2::write::GzEncoder::new(f, flate2::Compression::default());
+        enc.write_all(b"0 1\n0 2\n1 2\n").unwrap();
+        enc.finish().unwrap();
+        let g = load(&p).unwrap();
+        assert_eq!(g.num_edges(), 3);
+    }
+
+    #[test]
+    fn unknown_extension_errors() {
+        assert!(load("/tmp/does_not_exist.xyz").is_err());
+    }
+}

@@ -1,0 +1,119 @@
+//! MatrixMarket coordinate-format parser (the SuiteSparse distribution
+//! format for several of the paper's datasets). Only the structure is
+//! used: `%%MatrixMarket matrix coordinate <field> <symmetry>`, a
+//! dimensions line, then 1-based `i j [value]` entries.
+
+use crate::graph::builder::GraphBuilder;
+use crate::graph::csr::CsrGraph;
+use anyhow::{bail, Context, Result};
+
+/// Parse MatrixMarket text into an undirected simple graph.
+pub fn parse(text: &str, name: &str) -> Result<CsrGraph> {
+    let mut lines = text.lines().enumerate().filter(|(_, l)| !l.trim().is_empty());
+
+    // Header (optional but usual).
+    let mut first = lines.next().context("empty mtx file")?;
+    if first.1.starts_with("%%MatrixMarket") {
+        let header = first.1.to_lowercase();
+        if !header.contains("coordinate") {
+            bail!("only coordinate-format MatrixMarket supported");
+        }
+        // skip remaining comments
+        loop {
+            first = lines.next().context("mtx missing dimensions line")?;
+            if !first.1.trim_start().starts_with('%') {
+                break;
+            }
+        }
+    } else if first.1.trim_start().starts_with('%') {
+        loop {
+            first = lines.next().context("mtx missing dimensions line")?;
+            if !first.1.trim_start().starts_with('%') {
+                break;
+            }
+        }
+    }
+
+    // Dimensions: rows cols nnz
+    let dims: Vec<u64> = first
+        .1
+        .split_whitespace()
+        .map(|t| t.parse::<u64>())
+        .collect::<std::result::Result<_, _>>()
+        .with_context(|| format!("line {}: bad dimensions", first.0 + 1))?;
+    if dims.len() != 3 {
+        bail!("mtx dimensions line must have 3 fields, got {}", dims.len());
+    }
+    let n = dims[0].max(dims[1]) as usize;
+    let nnz = dims[2] as usize;
+
+    let mut b = GraphBuilder::with_capacity(n, nnz);
+    let mut seen = 0usize;
+    for (lineno, line) in lines {
+        let line = line.trim();
+        if line.starts_with('%') {
+            continue;
+        }
+        let mut it = line.split_whitespace();
+        let i: u64 = it
+            .next()
+            .context("missing row")?
+            .parse()
+            .with_context(|| format!("line {}: bad row", lineno + 1))?;
+        let j: u64 = it
+            .next()
+            .with_context(|| format!("line {}: missing col", lineno + 1))?
+            .parse()
+            .with_context(|| format!("line {}: bad col", lineno + 1))?;
+        if i == 0 || j == 0 {
+            bail!("line {}: MatrixMarket indices are 1-based", lineno + 1);
+        }
+        b.add_edge((i - 1) as u32, (j - 1) as u32);
+        seen += 1;
+    }
+    if seen != nnz {
+        // tolerated (some files count symmetric pairs differently) but
+        // grossly wrong counts indicate truncation
+        if seen * 2 < nnz {
+            bail!("mtx truncated: header says {nnz} entries, found {seen}");
+        }
+    }
+    Ok(b.build(name))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "%%MatrixMarket matrix coordinate pattern symmetric\n\
+% a comment\n\
+4 4 4\n\
+1 2\n\
+2 3\n\
+3 4\n\
+4 1\n";
+
+    #[test]
+    fn parses_sample() {
+        let g = parse(SAMPLE, "c4").unwrap();
+        assert_eq!(g.num_vertices(), 4);
+        assert_eq!(g.num_edges(), 4); // a 4-cycle
+        assert!(g.degrees().iter().all(|&d| d == 2));
+    }
+
+    #[test]
+    fn zero_based_rejected() {
+        assert!(parse("2 2 1\n0 1\n", "t").is_err());
+    }
+
+    #[test]
+    fn headerless_ok() {
+        let g = parse("3 3 2\n1 2\n2 3\n", "t").unwrap();
+        assert_eq!(g.num_edges(), 2);
+    }
+
+    #[test]
+    fn truncated_detected() {
+        assert!(parse("5 5 100\n1 2\n", "t").is_err());
+    }
+}

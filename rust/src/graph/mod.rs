@@ -1,0 +1,16 @@
+//! Graph substrate: CSR storage, construction, loaders, synthetic
+//! generators, statistics, and the paper's running example `G1`.
+//!
+//! All decomposition algorithms in [`crate::core`] consume an immutable
+//! [`CsrGraph`]; mutation happens only in [`GraphBuilder`].
+
+pub mod builder;
+pub mod csr;
+pub mod examples;
+pub mod gen;
+pub mod io;
+pub mod stats;
+
+pub use builder::GraphBuilder;
+pub use csr::{CsrGraph, VertexId};
+pub use stats::GraphStats;

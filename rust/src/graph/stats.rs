@@ -1,0 +1,96 @@
+//! Graph statistics — the columns of the paper's Table II
+//! (|V|, |E|, d_avg, std, d_max, and k_max via the BZ oracle).
+
+use super::csr::CsrGraph;
+
+/// Statistical properties of a dataset (Table II row).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GraphStats {
+    pub name: String,
+    pub vertices: u64,
+    pub edges: u64,
+    pub d_avg: f64,
+    pub d_std: f64,
+    pub d_max: u32,
+    /// Max coreness; computed lazily (needs a decomposition) — `None`
+    /// until [`GraphStats::with_kmax`] fills it.
+    pub k_max: Option<u32>,
+}
+
+impl GraphStats {
+    /// Degree-level statistics (cheap, no decomposition).
+    pub fn measure(g: &CsrGraph) -> Self {
+        let n = g.num_vertices() as u64;
+        let degs = g.degrees();
+        let sum: f64 = degs.iter().map(|&d| d as f64).sum();
+        let d_avg = if n == 0 { 0.0 } else { sum / n as f64 };
+        let var: f64 = if n == 0 {
+            0.0
+        } else {
+            degs.iter().map(|&d| (d as f64 - d_avg).powi(2)).sum::<f64>() / n as f64
+        };
+        Self {
+            name: g.name.clone(),
+            vertices: n,
+            edges: g.num_edges(),
+            d_avg,
+            d_std: var.sqrt(),
+            d_max: g.max_degree(),
+            k_max: None,
+        }
+    }
+
+    /// Attach the max coreness from a computed decomposition.
+    pub fn with_kmax(mut self, core: &[u32]) -> Self {
+        self.k_max = core.iter().copied().max();
+        self
+    }
+
+    /// Degree skew: d_max / d_avg — the property (paper §V-A2,
+    /// `trackers`) that predicts dynamic-frontier pathologies.
+    pub fn skew(&self) -> f64 {
+        if self.d_avg == 0.0 {
+            0.0
+        } else {
+            self.d_max as f64 / self.d_avg
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+
+    #[test]
+    fn g1_stats() {
+        let s = GraphStats::measure(&examples::g1());
+        assert_eq!(s.vertices, 6);
+        assert_eq!(s.edges, 7);
+        assert_eq!(s.d_max, 4);
+        // degrees 1,1,2,3,3,4 -> mean 14/6
+        assert!((s.d_avg - 14.0 / 6.0).abs() < 1e-9);
+        assert!(s.k_max.is_none());
+    }
+
+    #[test]
+    fn kmax_attach() {
+        let s = GraphStats::measure(&examples::g1()).with_kmax(&examples::g1_coreness());
+        assert_eq!(s.k_max, Some(2));
+    }
+
+    #[test]
+    fn empty_graph_stats() {
+        let g = crate::graph::CsrGraph::from_parts(vec![0], vec![], "empty");
+        let s = GraphStats::measure(&g);
+        assert_eq!(s.vertices, 0);
+        assert_eq!(s.d_avg, 0.0);
+        assert_eq!(s.skew(), 0.0);
+    }
+
+    #[test]
+    fn star_skew_is_high() {
+        let s = GraphStats::measure(&examples::star(100));
+        assert!(s.skew() > 25.0);
+    }
+}

@@ -1,0 +1,40 @@
+//! # PICO-RS — all k-core decomposition paradigms
+//!
+//! A production-shaped reproduction of *PICO: Accelerating All k-Core
+//! Paradigms on GPU* (CS.DC 2024) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the coordinator: a bulk-synchronous
+//!   kernel-launch engine ([`engine`]), the eight decomposition algorithms
+//!   of the paper ([`core`]), a vertex-centric framework baseline ([`vc`]),
+//!   the job scheduler ([`coordinator`]), and the benchmark harness
+//!   ([`bench`]) that regenerates every table and figure.
+//! * **Layer 2 (build-time JAX)** — vectorised peel / h-index step
+//!   functions, AOT-lowered to HLO text and executed from [`runtime`] via
+//!   the PJRT C API.
+//! * **Layer 1 (build-time Pallas)** — the threshold-matrix h-index tile
+//!   kernel; see `python/compile/kernels/hindex.py`.
+//!
+//! Quickstart (`no_run` here only because rustdoc's test binary lacks the
+//! xla rpath; `cargo run --example quickstart` executes the same code):
+//!
+//! ```no_run
+//! use pico::graph::{examples, CsrGraph};
+//! use pico::core::{Decomposer, peel::PoDyn};
+//!
+//! let g = examples::g1();
+//! let result = PoDyn::default().decompose(&g);
+//! assert_eq!(result.core, vec![1, 1, 2, 2, 2, 2]);
+//! ```
+
+pub mod analysis;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod core;
+pub mod engine;
+pub mod graph;
+pub mod runtime;
+pub mod util;
+pub mod vc;

@@ -1,0 +1,38 @@
+//! `pico` — the launcher binary.
+//!
+//! See [`pico::cli::USAGE`] or run `pico help`.
+
+use anyhow::Result;
+use pico::cli::{args::Args, commands, USAGE};
+use pico::config::Config;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&raw, &["metrics", "no-validate", "help"])?;
+
+    let cfg = Config::load(args.get("config").map(std::path::Path::new))?;
+
+    match args.command.as_str() {
+        "run" => commands::cmd_run(&args, &cfg),
+        "suite" => commands::cmd_suite(&args, &cfg),
+        "stats" => commands::cmd_stats(&args, &cfg),
+        "analyze" => commands::cmd_analyze(&args, &cfg),
+        "doctor" => commands::cmd_doctor(&args, &cfg),
+        "list" => commands::cmd_list(&args, &cfg),
+        "" | "help" => {
+            print!("{USAGE}");
+            Ok(())
+        }
+        other => {
+            eprint!("{USAGE}");
+            anyhow::bail!("unknown command '{other}'")
+        }
+    }
+}

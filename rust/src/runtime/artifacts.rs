@@ -1,0 +1,135 @@
+//! Artifact registry: finds the `artifacts/` directory, reads the bucket
+//! manifest, and parses HLO-text modules into `XlaComputation`s.
+//! Compilation and caching of executables happens in the (thread-confined)
+//! [`crate::runtime::worker`], since compiled handles are `!Send`.
+
+use super::buckets::Bucket;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Which step function an artifact implements.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Kind {
+    Peel,
+    Hindex,
+}
+
+impl Kind {
+    pub fn file_name(&self, b: Bucket) -> String {
+        match self {
+            Kind::Peel => format!("peel_n{}_d{}.hlo.txt", b.n, b.d),
+            Kind::Hindex => format!("hindex_n{}_d{}.hlo.txt", b.n, b.d),
+        }
+    }
+}
+
+/// Manifest-backed artifact directory.
+#[derive(Clone, Debug)]
+pub struct ArtifactStore {
+    dir: PathBuf,
+    buckets: Vec<Bucket>,
+}
+
+impl ArtifactStore {
+    /// Open an explicit directory (must contain `manifest.txt`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&manifest).with_context(|| {
+            format!(
+                "reading {} — run `make artifacts` first",
+                manifest.display()
+            )
+        })?;
+        let mut buckets = Vec::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let n: usize = it
+                .next()
+                .context("manifest: missing N")?
+                .parse()
+                .with_context(|| format!("manifest line {}", i + 1))?;
+            let d: usize = it
+                .next()
+                .context("manifest: missing D")?
+                .parse()
+                .with_context(|| format!("manifest line {}", i + 1))?;
+            buckets.push(Bucket { n, d });
+        }
+        if buckets.is_empty() {
+            bail!("manifest {} lists no buckets", manifest.display());
+        }
+        Ok(Self { dir, buckets })
+    }
+
+    /// Open the default location: `$PICO_ARTIFACTS`, else `./artifacts`,
+    /// else `<crate root>/artifacts` (so `cargo test` works from anywhere).
+    pub fn open_default() -> Result<Self> {
+        if let Ok(dir) = std::env::var("PICO_ARTIFACTS") {
+            return Self::open(dir);
+        }
+        let candidates = [
+            PathBuf::from("artifacts"),
+            PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"),
+        ];
+        for c in &candidates {
+            if c.join("manifest.txt").exists() {
+                return Self::open(c);
+            }
+        }
+        bail!("no artifacts directory found (tried $PICO_ARTIFACTS, ./artifacts); run `make artifacts`")
+    }
+
+    /// Buckets listed by the manifest.
+    pub fn buckets(&self) -> &[Bucket] {
+        &self.buckets
+    }
+
+    /// Parse one artifact into an `XlaComputation` (thread-confined types
+    /// begin here — call from the worker thread).
+    pub fn load_computation(&self, kind: Kind, bucket: Bucket) -> Result<xla::XlaComputation> {
+        let path = self.dir.join(kind.file_name(bucket));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-UTF-8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+        Ok(xla::XlaComputation::from_proto(&proto))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn open_default_reads_manifest() {
+        let store = ArtifactStore::open_default().expect("artifacts built?");
+        assert!(store.buckets().contains(&Bucket { n: 8, d: 4 }));
+        assert!(store.buckets().len() >= 3);
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = ArtifactStore::open("/nonexistent_dir_xyz").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn file_names() {
+        let b = Bucket { n: 8, d: 4 };
+        assert_eq!(Kind::Peel.file_name(b), "peel_n8_d4.hlo.txt");
+        assert_eq!(Kind::Hindex.file_name(b), "hindex_n8_d4.hlo.txt");
+    }
+
+    #[test]
+    fn load_computation_parses() {
+        let store = ArtifactStore::open_default().expect("artifacts built?");
+        let _c = store
+            .load_computation(Kind::Peel, Bucket { n: 8, d: 4 })
+            .expect("parse HLO text");
+    }
+}

@@ -1,0 +1,128 @@
+//! (N, D) bucket selection and dense padding.
+//!
+//! The AOT artifacts are lowered for fixed shapes; a graph runs in the
+//! smallest bucket with `N >= |V|` and `D >= d_max`. Graphs exceeding the
+//! largest bucket are a structured error — the coordinator falls back to
+//! the native engine and says so (never silently).
+
+use crate::graph::CsrGraph;
+use anyhow::{bail, Result};
+
+/// One compiled shape bucket.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct Bucket {
+    pub n: usize,
+    pub d: usize,
+}
+
+impl Bucket {
+    /// Dense cells of the neighbor matrix (the memory driver).
+    pub fn cells(&self) -> usize {
+        self.n * self.d
+    }
+}
+
+/// Pick the cheapest bucket that fits (n, d_max); `buckets` need not be
+/// sorted.
+pub fn select_bucket(buckets: &[Bucket], n: usize, d_max: usize) -> Result<Bucket> {
+    buckets
+        .iter()
+        .copied()
+        .filter(|b| b.n >= n && b.d >= d_max)
+        .min_by_key(|b| b.cells())
+        .ok_or_else(|| {
+            anyhow::anyhow!(
+                "no bucket fits |V|={n}, d_max={d_max} (largest: {:?}); \
+                 regenerate artifacts with a bigger bucket or use the native engine",
+                buckets.iter().max_by_key(|b| b.cells())
+            )
+        })
+}
+
+/// A graph padded into a bucket's dense shapes.
+#[derive(Clone, Debug)]
+pub struct PaddedGraph {
+    pub bucket: Bucket,
+    /// Real vertex count (<= bucket.n).
+    pub n_real: usize,
+    /// i32[N*D] row-major neighbor matrix, pad index = bucket.n.
+    pub nbrs: Vec<i32>,
+    /// i32[N] initial degrees (0 in padding).
+    pub degrees: Vec<i32>,
+}
+
+impl PaddedGraph {
+    pub fn new(g: &CsrGraph, buckets: &[Bucket]) -> Result<Self> {
+        let n_real = g.num_vertices();
+        let d_max = g.max_degree() as usize;
+        let bucket = select_bucket(buckets, n_real, d_max)?;
+        if n_real > i32::MAX as usize {
+            bail!("graph too large for i32 indices");
+        }
+        let pad = bucket.n as i32;
+        let mut nbrs = vec![pad; bucket.cells()];
+        let mut degrees = vec![0i32; bucket.n];
+        for v in 0..n_real {
+            let row = v * bucket.d;
+            let ns = g.neighbors(v as u32);
+            degrees[v] = ns.len() as i32;
+            for (j, &u) in ns.iter().enumerate() {
+                nbrs[row + j] = u as i32;
+            }
+        }
+        Ok(Self {
+            bucket,
+            n_real,
+            nbrs,
+            degrees,
+        })
+    }
+
+    /// Initial alive mask (1 for real vertices with degree > 0).
+    pub fn alive0(&self) -> Vec<i32> {
+        self.degrees
+            .iter()
+            .map(|&d| if d > 0 { 1 } else { 0 })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+
+    fn bs() -> Vec<Bucket> {
+        [(8, 4), (64, 8), (256, 16), (1024, 32), (4096, 64)]
+            .iter()
+            .map(|&(n, d)| Bucket { n, d })
+            .collect()
+    }
+
+    #[test]
+    fn selects_smallest_fitting() {
+        assert_eq!(select_bucket(&bs(), 6, 4).unwrap(), Bucket { n: 8, d: 4 });
+        assert_eq!(select_bucket(&bs(), 6, 5).unwrap(), Bucket { n: 64, d: 8 });
+        assert_eq!(select_bucket(&bs(), 100, 8).unwrap(), Bucket { n: 256, d: 16 });
+    }
+
+    #[test]
+    fn rejects_oversize() {
+        assert!(select_bucket(&bs(), 5000, 4).is_err());
+        assert!(select_bucket(&bs(), 4, 100).is_err());
+    }
+
+    #[test]
+    fn pads_g1() {
+        let g = examples::g1();
+        let p = PaddedGraph::new(&g, &bs()).unwrap();
+        assert_eq!(p.bucket, Bucket { n: 8, d: 4 });
+        assert_eq!(p.n_real, 6);
+        assert_eq!(p.degrees, vec![1, 1, 2, 3, 3, 4, 0, 0]);
+        // v5's row: neighbors 0,1,3,4
+        assert_eq!(&p.nbrs[5 * 4..6 * 4], &[0, 1, 3, 4]);
+        // padding rows are all-pad
+        assert_eq!(&p.nbrs[6 * 4..7 * 4], &[8, 8, 8, 8]);
+        assert_eq!(p.alive0(), vec![1, 1, 1, 1, 1, 1, 0, 0]);
+    }
+}

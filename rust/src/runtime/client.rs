@@ -1,0 +1,35 @@
+//! PJRT CPU client construction.
+//!
+//! The `xla` crate's handles are `Rc`-based (`!Send`/`!Sync`), so the
+//! client lives *thread-confined* inside the [`crate::runtime::worker`]
+//! service thread; this module only knows how to create one and describe
+//! it.
+
+use anyhow::{Context, Result};
+
+/// Create a CPU PJRT client (expensive: do it once per worker thread).
+pub fn create_cpu_client() -> Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu()
+        .map_err(|e| anyhow::anyhow!("{e}"))
+        .context("creating PJRT CPU client (is libxla_extension.so on the rpath?)")
+}
+
+/// Human-readable platform string (for `pico doctor` / logs).
+pub fn platform_info(client: &xla::PjRtClient) -> String {
+    format!(
+        "{} ({} devices)",
+        client.platform_name(),
+        client.device_count()
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creates_and_reports_cpu() {
+        let c = create_cpu_client().expect("client");
+        assert!(platform_info(&c).to_lowercase().contains("cpu"));
+    }
+}

@@ -1,0 +1,23 @@
+//! PJRT runtime — loads the AOT artifacts produced by `make artifacts`
+//! (HLO text; see python/compile/aot.py for why text, not protos) and
+//! executes them on the XLA CPU client from the rust request path.
+//!
+//! * [`client`] — process-wide PJRT client handle.
+//! * [`artifacts`] — artifact registry: manifest parsing, lazy
+//!   compile-and-cache of the per-bucket executables.
+//! * [`buckets`] — (N, D) bucket selection and dense padding of CSR
+//!   graphs into the fixed shapes the artifacts were lowered for.
+//! * [`vec_engine`] — the vectorised decomposition engines (VETGA [20]
+//!   lineage): [`vec_engine::VecPeel`] and [`vec_engine::VecHindex`],
+//!   both [`crate::core::Decomposer`]s, proving the three layers compose.
+
+pub mod artifacts;
+pub mod buckets;
+pub mod client;
+pub mod vec_engine;
+pub mod worker;
+
+pub use artifacts::ArtifactStore;
+pub use buckets::{select_bucket, Bucket, PaddedGraph};
+pub use vec_engine::{default_worker, VecHindex, VecPeel};
+pub use worker::XlaWorker;

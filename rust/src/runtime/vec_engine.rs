@@ -1,0 +1,133 @@
+//! The vectorised decomposition engines — the paper's two paradigms
+//! expressed as dense XLA step functions (VETGA [20] lineage), driven to
+//! convergence through the [`super::worker::XlaWorker`] service thread.
+//! This is the end-to-end proof that the three layers compose: Pallas
+//! kernel → jax step function → HLO text → PJRT executable → rust driver.
+
+use super::artifacts::Kind;
+use super::worker::XlaWorker;
+use crate::core::traits::{DecompositionResult, Decomposer, Paradigm};
+use crate::graph::CsrGraph;
+use anyhow::Result;
+use once_cell::sync::OnceCell;
+use std::sync::Arc;
+
+static DEFAULT_WORKER: OnceCell<Arc<XlaWorker>> = OnceCell::new();
+
+/// The process-default XLA worker (respects `$PICO_ARTIFACTS`).
+pub fn default_worker() -> Result<Arc<XlaWorker>> {
+    DEFAULT_WORKER
+        .get_or_try_init(|| XlaWorker::spawn_default().map(Arc::new))
+        .cloned()
+}
+
+/// Vectorised PeelOne through XLA.
+#[derive(Clone)]
+pub struct VecPeel {
+    worker: Arc<XlaWorker>,
+}
+
+impl VecPeel {
+    pub fn new(worker: Arc<XlaWorker>) -> Self {
+        Self { worker }
+    }
+
+    /// Construct against the process-default worker.
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(default_worker()?))
+    }
+
+    /// Fallible decomposition (bucket fit and PJRT errors surface here).
+    pub fn try_decompose(&self, g: &CsrGraph) -> Result<DecompositionResult> {
+        self.worker.decompose(Kind::Peel, g)
+    }
+}
+
+impl Decomposer for VecPeel {
+    fn name(&self) -> &'static str {
+        "VecPeel(XLA)"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Vectorized
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, _threads: usize, _metrics: bool) -> DecompositionResult {
+        self.try_decompose(g)
+            .expect("VecPeel: artifacts missing or graph exceeds bucket (use try_decompose)")
+    }
+}
+
+/// Vectorised Index2core through XLA.
+#[derive(Clone)]
+pub struct VecHindex {
+    worker: Arc<XlaWorker>,
+}
+
+impl VecHindex {
+    pub fn new(worker: Arc<XlaWorker>) -> Self {
+        Self { worker }
+    }
+
+    pub fn open_default() -> Result<Self> {
+        Ok(Self::new(default_worker()?))
+    }
+
+    pub fn try_decompose(&self, g: &CsrGraph) -> Result<DecompositionResult> {
+        self.worker.decompose(Kind::Hindex, g)
+    }
+}
+
+impl Decomposer for VecHindex {
+    fn name(&self) -> &'static str {
+        "VecHindex(XLA)"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Vectorized
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, _threads: usize, _metrics: bool) -> DecompositionResult {
+        self.try_decompose(g)
+            .expect("VecHindex: artifacts missing or graph exceeds bucket (use try_decompose)")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::{examples, gen};
+
+    #[test]
+    fn vec_peel_g1() {
+        let eng = VecPeel::open_default().expect("artifacts built?");
+        let r = eng.try_decompose(&examples::g1()).unwrap();
+        assert_eq!(r.core, examples::g1_coreness());
+    }
+
+    #[test]
+    fn vec_hindex_g1() {
+        let eng = VecHindex::open_default().expect("artifacts built?");
+        let r = eng.try_decompose(&examples::g1()).unwrap();
+        assert_eq!(r.core, examples::g1_coreness());
+    }
+
+    #[test]
+    fn vec_engines_match_bz_on_grid() {
+        let g = gen::grid2d(8, 8); // 64 vertices, d_max 4 -> (64, 8) bucket
+        let expected = bz_coreness(&g);
+        let p = VecPeel::open_default().unwrap().try_decompose(&g).unwrap();
+        assert_eq!(p.core, expected);
+        let h = VecHindex::open_default().unwrap().try_decompose(&g).unwrap();
+        assert_eq!(h.core, expected);
+    }
+
+    #[test]
+    fn oversize_graph_is_structured_error() {
+        let g = gen::star_burst(1, 200, 0, 3); // hub degree ~200 > 64
+        let eng = VecPeel::open_default().unwrap();
+        let err = eng.try_decompose(&g).unwrap_err();
+        assert!(err.to_string().contains("bucket"), "{err}");
+    }
+}

@@ -1,0 +1,268 @@
+//! The XLA service thread.
+//!
+//! PJRT handles from the `xla` crate are `Rc`-based and thread-confined,
+//! so one dedicated worker thread owns the client, the compiled-executable
+//! cache, and the step-driver loops; the rest of the system talks to it
+//! through a channel. The handle ([`XlaWorker`]) is `Send + Sync` and
+//! cheap to clone behind an `Arc` — this is also exactly the shape a
+//! GPU-backed deployment would have (one host thread owning the CUDA
+//! context, a queue in front).
+
+use super::artifacts::{ArtifactStore, Kind};
+use super::buckets::{Bucket, PaddedGraph};
+use crate::core::traits::DecompositionResult;
+use crate::engine::metrics::MetricsSnapshot;
+use anyhow::{bail, Context, Result};
+use std::collections::HashMap;
+use std::sync::mpsc;
+
+enum Request {
+    Decompose {
+        kind: Kind,
+        padded: PaddedGraph,
+        reply: mpsc::Sender<Result<DecompositionResult>>,
+    },
+    Platform {
+        reply: mpsc::Sender<Result<String>>,
+    },
+    Shutdown,
+}
+
+/// Handle to the XLA service thread.
+pub struct XlaWorker {
+    tx: mpsc::Sender<Request>,
+    join: std::sync::Mutex<Option<std::thread::JoinHandle<()>>>,
+    store: ArtifactStore,
+}
+
+impl XlaWorker {
+    /// Spawn the service thread over an artifact store.
+    pub fn spawn(store: ArtifactStore) -> Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let thread_store = store.clone();
+        let join = std::thread::Builder::new()
+            .name("pico-xla-worker".into())
+            .spawn(move || worker_main(thread_store, rx))
+            .context("spawning XLA worker thread")?;
+        Ok(Self {
+            tx,
+            join: std::sync::Mutex::new(Some(join)),
+            store,
+        })
+    }
+
+    /// Spawn against the default artifact location.
+    pub fn spawn_default() -> Result<Self> {
+        Self::spawn(ArtifactStore::open_default()?)
+    }
+
+    /// Buckets available (manifest).
+    pub fn buckets(&self) -> &[Bucket] {
+        self.store.buckets()
+    }
+
+    /// Pad `g` and run one decomposition on the service thread.
+    pub fn decompose(&self, kind: Kind, g: &crate::graph::CsrGraph) -> Result<DecompositionResult> {
+        let padded = PaddedGraph::new(g, self.store.buckets())?;
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Decompose {
+                kind,
+                padded,
+                reply,
+            })
+            .map_err(|_| anyhow::anyhow!("XLA worker thread is gone"))?;
+        rx.recv().context("XLA worker dropped the reply")?
+    }
+
+    /// Platform description from the worker's client.
+    pub fn platform(&self) -> Result<String> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Platform { reply })
+            .map_err(|_| anyhow::anyhow!("XLA worker thread is gone"))?;
+        rx.recv().context("XLA worker dropped the reply")?
+    }
+}
+
+impl Drop for XlaWorker {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(j) = self.join.lock().unwrap().take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Worker thread main: owns client + executable cache, serves requests.
+fn worker_main(store: ArtifactStore, rx: mpsc::Receiver<Request>) {
+    let client = super::client::create_cpu_client();
+    let mut cache: HashMap<(Kind, Bucket), xla::PjRtLoadedExecutable> = HashMap::new();
+
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Platform { reply } => {
+                let msg = client
+                    .as_ref()
+                    .map(|c| super::client::platform_info(c))
+                    .map_err(|e| anyhow::anyhow!("{e}"));
+                let _ = reply.send(msg);
+            }
+            Request::Decompose {
+                kind,
+                padded,
+                reply,
+            } => {
+                let out = (|| -> Result<DecompositionResult> {
+                    let client = client
+                        .as_ref()
+                        .map_err(|e| anyhow::anyhow!("PJRT client unavailable: {e}"))?;
+                    let key = (kind, padded.bucket);
+                    if !cache.contains_key(&key) {
+                        let comp = store.load_computation(kind, padded.bucket)?;
+                        let exe = client
+                            .compile(&comp)
+                            .map_err(|e| anyhow::anyhow!("compiling {kind:?} {:?}: {e}", padded.bucket))?;
+                        cache.insert(key, exe);
+                    }
+                    let exe = &cache[&key];
+                    match kind {
+                        Kind::Peel => drive_peel(exe, &padded),
+                        Kind::Hindex => drive_hindex(exe, &padded),
+                    }
+                })();
+                let _ = reply.send(out);
+            }
+        }
+    }
+}
+
+/// Drive the vectorised PeelOne to convergence.
+fn drive_peel(exe: &xla::PjRtLoadedExecutable, padded: &PaddedGraph) -> Result<DecompositionResult> {
+    let n = padded.bucket.n;
+    let d = padded.bucket.d;
+    let nbrs = xla::Literal::vec1(&padded.nbrs)
+        .reshape(&[n as i64, d as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e}"))?;
+    let mut core = padded.degrees.clone();
+    let mut alive = padded.alive0();
+    let mut total_alive: i64 = alive.iter().map(|&a| a as i64).sum();
+    let mut k: i32 = 1;
+    let mut iterations = 0usize;
+    let mut launches = 0usize;
+
+    while total_alive > 0 {
+        if k as usize > d + 1 {
+            bail!("vectorised peel failed to converge (k={k} > D+1)");
+        }
+        let core_lit = xla::Literal::vec1(&core);
+        let alive_lit = xla::Literal::vec1(&alive);
+        let k_lit = xla::Literal::scalar(k);
+        let out = exe
+            .execute::<&xla::Literal>(&[&core_lit, &alive_lit, &nbrs, &k_lit])
+            .map_err(|e| anyhow::anyhow!("peel execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("peel sync: {e}"))?;
+        let (c, a, fc, ac) = out
+            .to_tuple4()
+            .map_err(|e| anyhow::anyhow!("peel tuple: {e}"))?;
+        core = c.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        alive = a.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let frontier: i32 = fc
+            .get_first_element()
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        let alive_now: i32 = ac
+            .get_first_element()
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        launches += 1;
+        if frontier == 0 {
+            k += 1;
+        } else {
+            iterations += 1;
+        }
+        total_alive = alive_now as i64;
+    }
+
+    Ok(DecompositionResult {
+        core: core[..padded.n_real].iter().map(|&c| c as u32).collect(),
+        iterations,
+        launches,
+        metrics: MetricsSnapshot::default(),
+    })
+}
+
+/// Drive the vectorised h-index iteration to convergence.
+fn drive_hindex(
+    exe: &xla::PjRtLoadedExecutable,
+    padded: &PaddedGraph,
+) -> Result<DecompositionResult> {
+    let n = padded.bucket.n;
+    let d = padded.bucket.d;
+    let nbrs = xla::Literal::vec1(&padded.nbrs)
+        .reshape(&[n as i64, d as i64])
+        .map_err(|e| anyhow::anyhow!("reshape: {e}"))?;
+    let mut core = padded.degrees.clone();
+    let mut iterations = 0usize;
+
+    loop {
+        if iterations > n + 2 {
+            bail!("vectorised h-index failed to converge");
+        }
+        let core_lit = xla::Literal::vec1(&core);
+        let out = exe
+            .execute::<&xla::Literal>(&[&core_lit, &nbrs])
+            .map_err(|e| anyhow::anyhow!("hindex execute: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("hindex sync: {e}"))?;
+        let (c, ch) = out
+            .to_tuple2()
+            .map_err(|e| anyhow::anyhow!("hindex tuple: {e}"))?;
+        core = c.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?;
+        let changed: i32 = ch
+            .get_first_element()
+            .map_err(|e| anyhow::anyhow!("{e}"))?;
+        iterations += 1;
+        if changed == 0 {
+            break;
+        }
+    }
+
+    Ok(DecompositionResult {
+        core: core[..padded.n_real].iter().map(|&c| c as u32).collect(),
+        iterations,
+        launches: iterations,
+        metrics: MetricsSnapshot::default(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+
+    #[test]
+    fn worker_round_trip() {
+        let w = XlaWorker::spawn_default().expect("artifacts built?");
+        assert!(w.platform().unwrap().to_lowercase().contains("cpu"));
+        let r = w.decompose(Kind::Peel, &examples::g1()).unwrap();
+        assert_eq!(r.core, examples::g1_coreness());
+        let r = w.decompose(Kind::Hindex, &examples::g1()).unwrap();
+        assert_eq!(r.core, examples::g1_coreness());
+    }
+
+    #[test]
+    fn worker_usable_from_many_threads() {
+        let w = std::sync::Arc::new(XlaWorker::spawn_default().expect("artifacts built?"));
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let w = w.clone();
+            handles.push(std::thread::spawn(move || {
+                w.decompose(Kind::Peel, &examples::g1()).unwrap().core
+            }));
+        }
+        for h in handles {
+            assert_eq!(h.join().unwrap(), examples::g1_coreness());
+        }
+    }
+}

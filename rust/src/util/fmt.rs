@@ -1,0 +1,94 @@
+//! Human-readable formatting for tables and logs (counts, durations,
+//! throughput), matching the style of the paper's tables.
+
+/// `1234567 -> "1,234,567"`.
+pub fn commas(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::with_capacity(s.len() + s.len() / 3);
+    let bytes = s.as_bytes();
+    for (i, b) in bytes.iter().enumerate() {
+        if i > 0 && (bytes.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(*b as char);
+    }
+    out
+}
+
+/// Compact SI-style count: `1.9K`, `85.7M`, `2.05B`.
+pub fn si(n: u64) -> String {
+    let n = n as f64;
+    if n >= 1e9 {
+        format!("{:.2}B", n / 1e9)
+    } else if n >= 1e6 {
+        format!("{:.1}M", n / 1e6)
+    } else if n >= 1e3 {
+        format!("{:.1}K", n / 1e3)
+    } else {
+        format!("{n:.0}")
+    }
+}
+
+/// Milliseconds with sensible precision (paper reports ms).
+pub fn ms(v: f64) -> String {
+    if v.is_nan() {
+        "-".into()
+    } else if v >= 100.0 {
+        format!("{v:.1}")
+    } else if v >= 1.0 {
+        format!("{v:.2}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Speedup in the paper's `1.9x` style.
+pub fn speedup(v: f64) -> String {
+    if v.is_nan() || !v.is_finite() {
+        "-".into()
+    } else {
+        format!("{v:.1}x")
+    }
+}
+
+/// Edges/second throughput.
+pub fn meps(edges: u64, ms: f64) -> String {
+    if ms <= 0.0 {
+        return "-".into();
+    }
+    format!("{:.1} ME/s", edges as f64 / 1e3 / ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn commas_groups() {
+        assert_eq!(commas(0), "0");
+        assert_eq!(commas(999), "999");
+        assert_eq!(commas(1000), "1,000");
+        assert_eq!(commas(1234567), "1,234,567");
+    }
+
+    #[test]
+    fn si_scales() {
+        assert_eq!(si(950), "950");
+        assert_eq!(si(1_901_000), "1.9M");
+        assert_eq!(si(2_054_950_000), "2.05B");
+    }
+
+    #[test]
+    fn ms_precision() {
+        assert_eq!(ms(1234.56), "1234.6");
+        assert_eq!(ms(12.345), "12.35");
+        assert_eq!(ms(0.1234), "0.123");
+        assert_eq!(ms(f64::NAN), "-");
+    }
+
+    #[test]
+    fn speedup_style() {
+        assert_eq!(speedup(1.94), "1.9x");
+        assert_eq!(speedup(f64::INFINITY), "-");
+    }
+}

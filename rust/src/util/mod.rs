@@ -1,0 +1,35 @@
+//! Shared substrate utilities: deterministic RNG, timing, human-readable
+//! formatting, and a small property-testing harness (`quickcheck`-lite,
+//! built in-tree because the environment is offline).
+
+pub mod fmt;
+pub mod quickcheck;
+pub mod rng;
+pub mod timer;
+
+/// Number of worker threads to use for the BSP engine.
+///
+/// Honours `PICO_THREADS` when set (useful for reproducible benches),
+/// otherwise the host parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("PICO_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            if n >= 1 {
+                return n;
+            }
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_threads_is_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

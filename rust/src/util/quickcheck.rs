@@ -1,0 +1,238 @@
+//! `quickcheck`-lite: a minimal in-tree property-testing harness.
+//!
+//! The offline environment carries no `proptest`/`quickcheck` crate, so the
+//! test suites use this: seeded generators, a configurable number of cases,
+//! and greedy input shrinking for failures. It is deliberately small — the
+//! generators the k-core tests need are graphs, integer vectors, and
+//! scalars — but the shrinking loop is real, so failing cases come back
+//! minimal enough to debug.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct Config {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrink_steps: usize,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            cases: 64,
+            seed: 0xC0FFEE,
+            max_shrink_steps: 400,
+        }
+    }
+}
+
+/// A value generator paired with a shrinker.
+pub trait Arbitrary: Sized + Clone + std::fmt::Debug {
+    fn generate(rng: &mut Rng, size: usize) -> Self;
+
+    /// Candidate smaller values; empty when fully shrunk.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Arbitrary for u32 {
+    fn generate(rng: &mut Rng, size: usize) -> Self {
+        rng.below((size.max(1) as u64) * 4) as u32
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Arbitrary for usize {
+    fn generate(rng: &mut Rng, size: usize) -> Self {
+        rng.below_usize(size.max(1) * 4)
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl<T: Arbitrary> Arbitrary for Vec<T> {
+    fn generate(rng: &mut Rng, size: usize) -> Self {
+        let len = rng.below_usize(size.max(1) + 1);
+        (0..len).map(|_| T::generate(rng, size)).collect()
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Halve, drop one element, shrink one element.
+        out.push(self[..self.len() / 2].to_vec());
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.remove(self.len() - 1);
+            out.push(v);
+            let mut v = self.clone();
+            v.remove(0);
+            out.push(v);
+        }
+        for (i, x) in self.iter().enumerate().take(4) {
+            for sx in x.shrink().into_iter().take(2) {
+                let mut v = self.clone();
+                v[i] = sx;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+/// Pairs.
+impl<A: Arbitrary, B: Arbitrary> Arbitrary for (A, B) {
+    fn generate(rng: &mut Rng, size: usize) -> Self {
+        (A::generate(rng, size), B::generate(rng, size))
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self
+            .0
+            .shrink()
+            .into_iter()
+            .map(|a| (a, self.1.clone()))
+            .collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Outcome of a property check.
+#[derive(Debug)]
+pub enum CheckResult<T> {
+    Pass { cases: usize },
+    Fail { original: T, shrunk: T, message: String },
+}
+
+/// Run `prop` over `cfg.cases` generated inputs; shrink on first failure.
+pub fn check<T: Arbitrary>(
+    cfg: &Config,
+    prop: impl Fn(&T) -> Result<(), String>,
+) -> CheckResult<T> {
+    let mut rng = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        // Grow input size with the case index so early cases are tiny.
+        let size = 2 + case * 2;
+        let input = T::generate(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            let shrunk = shrink_failure(&input, &prop, cfg.max_shrink_steps);
+            return CheckResult::Fail {
+                original: input,
+                shrunk,
+                message: msg,
+            };
+        }
+    }
+    CheckResult::Pass { cases: cfg.cases }
+}
+
+fn shrink_failure<T: Arbitrary>(
+    input: &T,
+    prop: &impl Fn(&T) -> Result<(), String>,
+    max_steps: usize,
+) -> T {
+    let mut current = input.clone();
+    let mut steps = 0;
+    'outer: while steps < max_steps {
+        for candidate in current.shrink() {
+            steps += 1;
+            if prop(&candidate).is_err() {
+                current = candidate;
+                continue 'outer;
+            }
+            if steps >= max_steps {
+                break 'outer;
+            }
+        }
+        break;
+    }
+    current
+}
+
+/// Assert that the property holds; panics with the shrunk counterexample.
+pub fn assert_prop<T: Arbitrary>(cfg: &Config, name: &str, prop: impl Fn(&T) -> Result<(), String>) {
+    match check(cfg, prop) {
+        CheckResult::Pass { .. } => {}
+        CheckResult::Fail {
+            original,
+            shrunk,
+            message,
+        } => panic!(
+            "property '{name}' failed: {message}\n  original: {original:?}\n  shrunk:   {shrunk:?}"
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        let cfg = Config::default();
+        match check::<Vec<u32>>(&cfg, |v| {
+            if v.iter().map(|&x| x as u64).sum::<u64>() >= v.iter().map(|&x| x as u64).max().unwrap_or(0) {
+                Ok(())
+            } else {
+                Err("sum < max".into())
+            }
+        }) {
+            CheckResult::Pass { cases } => assert_eq!(cases, cfg.cases),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn failing_property_shrinks() {
+        let cfg = Config { cases: 200, ..Config::default() };
+        // Fails whenever the vec contains an element >= 10.
+        match check::<Vec<u32>>(&cfg, |v| {
+            if v.iter().all(|&x| x < 10) {
+                Ok(())
+            } else {
+                Err("elem >= 10".into())
+            }
+        }) {
+            CheckResult::Fail { shrunk, .. } => {
+                // Shrinker should get us close to the minimal witness [10].
+                assert!(shrunk.len() <= 2, "shrunk too large: {shrunk:?}");
+                assert!(shrunk.iter().any(|&x| x >= 10));
+            }
+            CheckResult::Pass { .. } => panic!("property should have failed"),
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let cfg = Config { cases: 50, seed: 7, ..Config::default() };
+        let run = || -> Vec<Vec<u32>> {
+            let mut rng = Rng::new(cfg.seed);
+            (0..cfg.cases).map(|c| Vec::<u32>::generate(&mut rng, 2 + c * 2)).collect()
+        };
+        assert_eq!(run(), run());
+    }
+}

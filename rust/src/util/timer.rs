@@ -1,0 +1,109 @@
+//! Wall-clock measurement helpers shared by the bench harness and the
+//! coordinator's per-job accounting.
+
+use std::time::{Duration, Instant};
+
+/// A simple start/stop timer.
+#[derive(Debug, Clone)]
+pub struct Timer {
+    start: Instant,
+}
+
+impl Default for Timer {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Self { start: Instant::now() }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    pub fn elapsed_ms(&self) -> f64 {
+        self.start.elapsed().as_secs_f64() * 1e3
+    }
+
+    pub fn restart(&mut self) -> Duration {
+        let e = self.start.elapsed();
+        self.start = Instant::now();
+        e
+    }
+}
+
+/// Measure `f`, returning (result, elapsed).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t = Timer::start();
+    let out = f();
+    (out, t.elapsed())
+}
+
+/// Aggregate of repeated measurements (the bench harness reports min —
+/// least noisy on a shared host — plus mean for context).
+#[derive(Debug, Clone, Default)]
+pub struct Samples {
+    pub runs: Vec<Duration>,
+}
+
+impl Samples {
+    pub fn push(&mut self, d: Duration) {
+        self.runs.push(d);
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        self.runs
+            .iter()
+            .min()
+            .map(|d| d.as_secs_f64() * 1e3)
+            .unwrap_or(f64::NAN)
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.runs.is_empty() {
+            return f64::NAN;
+        }
+        let total: f64 = self.runs.iter().map(|d| d.as_secs_f64() * 1e3).sum();
+        total / self.runs.len() as f64
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.runs
+            .iter()
+            .max()
+            .map(|d| d.as_secs_f64() * 1e3)
+            .unwrap_or(f64::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(Duration::from_millis(1));
+        assert!(t.elapsed_ms() >= 1.0);
+    }
+
+    #[test]
+    fn samples_stats() {
+        let mut s = Samples::default();
+        s.push(Duration::from_millis(2));
+        s.push(Duration::from_millis(4));
+        assert!((s.min_ms() - 2.0).abs() < 0.5);
+        assert!((s.mean_ms() - 3.0).abs() < 0.5);
+        assert!((s.max_ms() - 4.0).abs() < 0.5);
+    }
+
+    #[test]
+    fn empty_samples_are_nan() {
+        let s = Samples::default();
+        assert!(s.min_ms().is_nan());
+        assert!(s.mean_ms().is_nan());
+    }
+}

@@ -1,0 +1,18 @@
+//! A generic vertex-centric graph-processing framework — the **Gunrock
+//! analog** for Table IV's system-level baseline.
+//!
+//! Gunrock [22] expresses algorithms as sequences of *advance* / *filter*
+//! operators over frontiers. That generality costs: operators are
+//! dispatched dynamically, every frontier is materialised, and each
+//! operator is its own launch. This module reproduces exactly that
+//! overhead class (deliberately — the point of the Table IV column is to
+//! quantify what hand-fused kernels save), then implements the k-core
+//! peel on top ([`vc_peel::VcPeel`]).
+
+pub mod engine;
+pub mod operators;
+pub mod vc_peel;
+
+pub use engine::{VcEngine, VcProgram, VcStep};
+pub use operators::{AdvanceOp, FilterFn, FilterOp};
+pub use vc_peel::VcPeel;

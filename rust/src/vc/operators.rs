@@ -1,0 +1,56 @@
+//! Operator interfaces of the vertex-centric framework — the Gunrock
+//! `advance` / `filter` pair, object-safe so programs compose them
+//! dynamically (which is precisely the system overhead the framework
+//! column of Table IV measures).
+
+/// Per-edge visitor of an `advance` over the frontier: called for every
+/// edge (src, dst) with src in the frontier; returns `true` when `dst`
+/// should enter the operator's output frontier.
+pub trait AdvanceOp: Sync {
+    fn visit_edge(&self, src: u32, dst: u32, tid: usize) -> bool;
+}
+
+/// Per-vertex predicate of a `filter` pass over a domain.
+pub trait FilterOp: Sync {
+    fn keep(&self, v: u32, tid: usize) -> bool;
+}
+
+/// Blanket impls so closures can be used directly.
+impl<F> AdvanceOp for F
+where
+    F: Fn(u32, u32, usize) -> bool + Sync,
+{
+    fn visit_edge(&self, src: u32, dst: u32, tid: usize) -> bool {
+        self(src, dst, tid)
+    }
+}
+
+pub struct FilterFn<F>(pub F);
+
+impl<F> FilterOp for FilterFn<F>
+where
+    F: Fn(u32, usize) -> bool + Sync,
+{
+    fn keep(&self, v: u32, tid: usize) -> bool {
+        (self.0)(v, tid)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn closure_as_advance() {
+        let op = |src: u32, dst: u32, _tid: usize| src < dst;
+        assert!(op.visit_edge(1, 2, 0));
+        assert!(!AdvanceOp::visit_edge(&op, 3, 2, 0));
+    }
+
+    #[test]
+    fn filter_fn_wrapper() {
+        let f = FilterFn(|v: u32, _| v % 2 == 0);
+        assert!(f.keep(4, 0));
+        assert!(!f.keep(5, 0));
+    }
+}

@@ -1,0 +1,159 @@
+//! Coordinator invariants, property-tested: routing (every job produces
+//! exactly one result, in order), batching across job-slot counts, state
+//! (outcome classification is total and accurate).
+
+use pico::coordinator::{
+    DatasetSpec, Job, JobOutcome, Scheduler, SchedulerConfig,
+};
+use pico::graph::{examples, gen};
+use pico::util::quickcheck::{assert_prop, Arbitrary, Config};
+use pico::util::rng::Rng;
+use std::sync::Arc;
+
+/// A random batch of jobs mixing valid/invalid algorithms and datasets.
+#[derive(Clone, Debug)]
+struct JobBatch {
+    specs: Vec<(u8, u8)>, // (algo selector, dataset selector)
+    slots: usize,
+}
+
+impl Arbitrary for JobBatch {
+    fn generate(rng: &mut Rng, size: usize) -> Self {
+        let n = 1 + rng.below_usize(size.max(1).min(12));
+        let specs = (0..n)
+            .map(|_| (rng.below(6) as u8, rng.below(4) as u8))
+            .collect();
+        Self {
+            specs,
+            slots: 1 + rng.below_usize(3),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.specs.len() > 1 {
+            out.push(Self {
+                specs: self.specs[..self.specs.len() / 2].to_vec(),
+                slots: self.slots,
+            });
+        }
+        if self.slots > 1 {
+            out.push(Self {
+                specs: self.specs.clone(),
+                slots: 1,
+            });
+        }
+        out
+    }
+}
+
+fn algo_name(sel: u8) -> &'static str {
+    match sel {
+        0 => "BZ",
+        1 => "PeelOne",
+        2 => "PO-dyn",
+        3 => "HistoCore",
+        4 => "CntCore",
+        _ => "NoSuchAlgorithm", // deliberately invalid
+    }
+}
+
+fn dataset(sel: u8) -> DatasetSpec {
+    match sel {
+        0 => DatasetSpec::InMemory(Arc::new(examples::g1())),
+        1 => DatasetSpec::Lazy {
+            name: "er".into(),
+            build: Arc::new(|| gen::erdos_renyi(60, 150, 3)),
+        },
+        2 => DatasetSpec::InMemory(Arc::new(examples::complete(8))),
+        _ => DatasetSpec::Path("/nonexistent/graph.el".into()), // invalid
+    }
+}
+
+#[test]
+fn prop_scheduler_routing_and_state() {
+    assert_prop::<JobBatch>(
+        &Config {
+            cases: 25,
+            seed: 0xBA7C4,
+            ..Config::default()
+        },
+        "scheduler routing/batching/state",
+        |batch| {
+            let jobs: Vec<Job> = batch
+                .specs
+                .iter()
+                .map(|&(a, d)| Job::new(dataset(d), algo_name(a)).with_threads(1))
+                .collect();
+            let scheduler = Scheduler::new(SchedulerConfig {
+                job_slots: batch.slots,
+                ..Default::default()
+            });
+            let results = scheduler.run(jobs.clone());
+
+            // routing: one result per job, in submission order
+            if results.len() != jobs.len() {
+                return Err(format!("{} jobs -> {} results", jobs.len(), results.len()));
+            }
+            for (i, (job, res)) in jobs.iter().zip(&results).enumerate() {
+                if res.algorithm != job.algorithm {
+                    return Err(format!("slot {i}: algorithm mismatch"));
+                }
+                if res.dataset != job.dataset.name() {
+                    return Err(format!("slot {i}: dataset mismatch"));
+                }
+                // state: outcome classification must match the job's shape
+                let (a, d) = batch.specs[i];
+                let valid = a <= 4 && d <= 2;
+                match (&res.outcome, valid) {
+                    (JobOutcome::Ok, true) => {}
+                    (JobOutcome::Rejected(_), false) => {}
+                    (other, v) => {
+                        return Err(format!("slot {i}: outcome {other:?} but valid={v}"))
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn slots_do_not_change_results() {
+    let jobs: Vec<Job> = (0..6)
+        .map(|i| {
+            Job::new(
+                DatasetSpec::InMemory(Arc::new(examples::complete(5 + i))),
+                "PO-dyn",
+            )
+            .with_threads(1)
+        })
+        .collect();
+    let r1 = Scheduler::new(SchedulerConfig {
+        job_slots: 1,
+        ..Default::default()
+    })
+    .run(jobs.clone());
+    let r3 = Scheduler::new(SchedulerConfig {
+        job_slots: 3,
+        ..Default::default()
+    })
+    .run(jobs);
+    for (a, b) in r1.iter().zip(&r3) {
+        assert_eq!(a.k_max, b.k_max);
+        assert_eq!(a.outcome, b.outcome);
+    }
+}
+
+#[test]
+fn validation_failure_is_detected_not_fatal() {
+    // a job with validation disabled still completes; with a bogus
+    // algorithm name it is rejected — both keep the batch running
+    let jobs = vec![
+        Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "Bogus"),
+        Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "PO-dyn").with_validation(false),
+    ];
+    let results = Scheduler::new(SchedulerConfig::default()).run(jobs);
+    assert!(matches!(results[0].outcome, JobOutcome::Rejected(_)));
+    assert_eq!(results[1].outcome, JobOutcome::Ok);
+}

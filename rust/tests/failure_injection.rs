@@ -1,0 +1,104 @@
+//! Failure injection: corrupted artifacts, malformed inputs, and
+//! panicking algorithms must surface as structured errors — never hangs,
+//! never silent wrong answers.
+
+use pico::coordinator::{DatasetSpec, Job, JobOutcome, Scheduler, SchedulerConfig};
+use pico::graph::{examples, io};
+use pico::runtime::artifacts::{ArtifactStore, Kind};
+use pico::runtime::Bucket;
+use std::sync::Arc;
+
+fn temp_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join("pico_failures").join(name);
+    let _ = std::fs::remove_dir_all(&d);
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn missing_manifest_is_structured_error() {
+    let dir = temp_dir("no_manifest");
+    let err = ArtifactStore::open(&dir).unwrap_err();
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}
+
+#[test]
+fn malformed_manifest_is_rejected() {
+    let dir = temp_dir("bad_manifest");
+    std::fs::write(dir.join("manifest.txt"), "eight four\n").unwrap();
+    assert!(ArtifactStore::open(&dir).is_err());
+    std::fs::write(dir.join("manifest.txt"), "").unwrap();
+    assert!(ArtifactStore::open(&dir).is_err());
+}
+
+#[test]
+fn truncated_hlo_artifact_fails_to_parse() {
+    let dir = temp_dir("trunc_hlo");
+    std::fs::write(dir.join("manifest.txt"), "8 4\n").unwrap();
+    std::fs::write(dir.join("peel_n8_d4.hlo.txt"), "HloModule garbage {{{").unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    let err = store
+        .load_computation(Kind::Peel, Bucket { n: 8, d: 4 })
+        .map(|_| ())
+        .unwrap_err();
+    assert!(err.to_string().contains("peel_n8_d4"), "{err}");
+}
+
+#[test]
+fn missing_artifact_file_reports_path() {
+    let dir = temp_dir("missing_file");
+    std::fs::write(dir.join("manifest.txt"), "8 4\n").unwrap();
+    let store = ArtifactStore::open(&dir).unwrap();
+    assert!(store
+        .load_computation(Kind::Hindex, Bucket { n: 8, d: 4 })
+        .is_err());
+}
+
+#[test]
+fn malformed_graph_files_are_rejected() {
+    let dir = temp_dir("bad_graphs");
+    let p = dir.join("bad.el");
+    std::fs::write(&p, "1 2\nthree four\n").unwrap();
+    assert!(io::load(&p).is_err());
+    let p = dir.join("bad.mtx");
+    std::fs::write(&p, "%%MatrixMarket matrix coordinate\n2 2 1\n0 1\n").unwrap();
+    assert!(io::load(&p).is_err());
+    let p = dir.join("bad.pico");
+    std::fs::write(&p, b"NOTMAGIC").unwrap();
+    assert!(io::load(&p).is_err());
+}
+
+#[test]
+fn scheduler_contains_panicking_algorithm() {
+    // VecPeel's Decomposer impl panics on bucket overflow when invoked
+    // through the non-fallible trait path; the scheduler must contain it.
+    let big_star = pico::graph::gen::star_burst(1, 300, 0, 1); // d_max 300 > 64
+    let jobs = vec![
+        Job::new(DatasetSpec::InMemory(Arc::new(big_star)), "VecPeel(XLA)").with_threads(1),
+        Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "PO-dyn").with_threads(1),
+    ];
+    let results = Scheduler::new(SchedulerConfig::default()).run(jobs);
+    assert!(
+        matches!(results[0].outcome, JobOutcome::Panicked(_)),
+        "expected contained panic, got {:?}",
+        results[0].outcome
+    );
+    // the batch survived: the second job still ran fine
+    assert_eq!(results[1].outcome, JobOutcome::Ok);
+}
+
+#[test]
+fn scheduler_rejects_unloadable_dataset_before_dispatch() {
+    let jobs = vec![Job::new(DatasetSpec::Path("/dev/null/nope.el".into()), "BZ")];
+    let results = Scheduler::new(SchedulerConfig::default()).run(jobs);
+    assert!(matches!(results[0].outcome, JobOutcome::Rejected(_)));
+}
+
+#[test]
+fn config_failures_are_structured() {
+    use pico::config::parser::KvFile;
+    assert!(KvFile::parse("no equals sign").is_err());
+    let kv = KvFile::parse("threads = NaN").unwrap();
+    let mut cfg = pico::config::Config::default();
+    assert!(cfg.apply_file(&kv).is_err());
+}

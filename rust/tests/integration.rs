@@ -1,0 +1,125 @@
+//! Cross-module integration tests: every algorithm on every small-tier
+//! suite dataset agrees with the BZ oracle and satisfies the structural
+//! invariants; loaders feed algorithms; the CLI command layer works
+//! end-to-end in-process.
+
+use pico::bench::suite::{suite, Tier};
+use pico::core::bz::bz_coreness;
+use pico::core::verify::{check_against_oracle, check_invariants};
+use pico::core::Decomposer;
+use pico::coordinator::{algorithm_by_name, algorithm_names};
+use pico::graph::{examples, gen, io};
+
+/// The native (non-XLA) algorithms — XLA needs artifacts; covered in
+/// runtime_xla.rs.
+fn native_algorithms() -> Vec<Box<dyn Decomposer>> {
+    algorithm_names()
+        .into_iter()
+        .filter(|n| !n.contains("XLA"))
+        .map(|n| algorithm_by_name(n).unwrap())
+        .collect()
+}
+
+#[test]
+fn all_algorithms_agree_on_small_suite() {
+    for entry in suite(Tier::Small) {
+        let g = entry.build();
+        let expected = bz_coreness(&g);
+        for algo in native_algorithms() {
+            for threads in [1, 3] {
+                let r = algo.decompose_with(&g, threads, false);
+                assert_eq!(
+                    r.core, expected,
+                    "{} with {} threads disagrees on {}",
+                    algo.name(),
+                    threads,
+                    entry.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn all_algorithms_satisfy_invariants_on_skewed_graph() {
+    let g = gen::star_burst(4, 300, 600, 5);
+    for algo in native_algorithms() {
+        let r = algo.decompose_with(&g, 2, false);
+        check_invariants(&g, &r.core).unwrap_or_else(|e| panic!("{}: {e}", algo.name()));
+    }
+}
+
+#[test]
+fn iteration_counters_reported() {
+    let (g, _) = gen::nested_cliques(4, 4, 3);
+    let pod = algorithm_by_name("PO-dyn").unwrap().decompose_with(&g, 2, false);
+    // dyn frontier: l1 == k_max
+    assert_eq!(pod.iterations as u32, pod.k_max());
+    let hst = algorithm_by_name("HistoCore").unwrap().decompose_with(&g, 2, false);
+    assert!(hst.iterations >= 1);
+    assert!(pod.launches > 0);
+}
+
+#[test]
+fn loader_to_algorithm_pipeline() {
+    // serialize G1, reload, decompose
+    let dir = std::env::temp_dir().join("pico_integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("g1.el");
+    std::fs::write(&path, pico::graph::io::edgelist::serialize(&examples::g1())).unwrap();
+    let g = io::load(&path).unwrap();
+    let r = algorithm_by_name("HistoCore").unwrap().decompose(&g);
+    assert_eq!(r.core, examples::g1_coreness());
+
+    // binary cache round trip through an algorithm
+    let bin = dir.join("g1.pico");
+    io::binfmt::write_file(&g, &bin).unwrap();
+    let g2 = io::load(&bin).unwrap();
+    let r2 = algorithm_by_name("PO-dyn").unwrap().decompose(&g2);
+    assert_eq!(r2.core, examples::g1_coreness());
+}
+
+#[test]
+fn oracle_check_round_trips_every_generator() {
+    let graphs = vec![
+        gen::erdos_renyi(300, 900, 1),
+        gen::barabasi_albert(300, 3, 2),
+        gen::rmat(8, 6, 0.57, 0.19, 0.19, 3),
+        gen::power_law_cluster(300, 3, 0.5, 4),
+        gen::star_burst(3, 50, 100, 5),
+        gen::grid2d(15, 15),
+        gen::caveman(10, 6, 6),
+        gen::planted_core(400, 800, &[(100, 8), (25, 16)], 7),
+        gen::nested_cliques(4, 3, 3).0,
+    ];
+    for g in &graphs {
+        let core = bz_coreness(g);
+        check_against_oracle(g, &core).unwrap_or_else(|e| panic!("{}: {e}", g.name));
+    }
+}
+
+#[test]
+fn metrics_are_consistent_across_runs() {
+    // deterministic single-thread instrumented runs give identical counts
+    let g = gen::barabasi_albert(500, 4, 9);
+    let algo = algorithm_by_name("PeelOne").unwrap();
+    let a = algo.decompose_with(&g, 1, true);
+    let b = algo.decompose_with(&g, 1, true);
+    assert_eq!(a.metrics, b.metrics);
+    assert_eq!(a.iterations, b.iterations);
+}
+
+#[test]
+fn paradigms_report_expected_iteration_relation_on_deep_graph() {
+    // Table VII's structural claim: l2 << l1 = k_max on deep hierarchies.
+    let (g, _) = gen::nested_cliques(10, 6, 6);
+    let pod = algorithm_by_name("PO-dyn").unwrap().decompose_with(&g, 2, false);
+    let hst = algorithm_by_name("HistoCore").unwrap().decompose_with(&g, 2, false);
+    assert_eq!(pod.core, hst.core);
+    assert!(
+        hst.iterations * 5 < pod.iterations,
+        "expected l2 ({}) << l1 ({})",
+        hst.iterations,
+        pod.iterations
+    );
+}

@@ -1,0 +1,232 @@
+//! Property-based tests (quickcheck-lite, see `pico::util::quickcheck`):
+//! random graphs in, algorithm/oracle agreement and structural invariants
+//! out — with shrinking to minimal counterexamples on failure.
+
+use pico::core::bz::bz_coreness;
+use pico::core::hindex::hindex;
+use pico::core::{index2core, peel, Decomposer};
+use pico::graph::{CsrGraph, GraphBuilder};
+use pico::util::quickcheck::{assert_prop, Arbitrary, Config};
+use pico::util::rng::Rng;
+
+/// Random simple graph: edge list drives generation and shrinks
+/// edge-by-edge, which keeps counterexamples readable.
+#[derive(Clone, Debug)]
+struct RandGraph {
+    n: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl RandGraph {
+    fn build(&self) -> CsrGraph {
+        let mut b = GraphBuilder::new(self.n);
+        b.add_edges(self.edges.iter().copied());
+        b.build("prop")
+    }
+}
+
+impl Arbitrary for RandGraph {
+    fn generate(rng: &mut Rng, size: usize) -> Self {
+        let n = 2 + rng.below_usize(size.max(2) * 3);
+        let m = rng.below_usize(n * 3 + 1);
+        let edges = (0..m)
+            .map(|_| (rng.below_usize(n) as u32, rng.below_usize(n) as u32))
+            .filter(|(u, v)| u != v)
+            .collect();
+        Self { n, edges }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.edges.is_empty() {
+            out.push(Self {
+                n: self.n,
+                edges: self.edges[..self.edges.len() / 2].to_vec(),
+            });
+            let mut e = self.edges.clone();
+            e.pop();
+            out.push(Self { n: self.n, edges: e });
+        }
+        if self.n > 2 {
+            // drop the highest-id vertex and its edges
+            let n = self.n - 1;
+            out.push(Self {
+                n,
+                edges: self
+                    .edges
+                    .iter()
+                    .copied()
+                    .filter(|&(u, v)| (u as usize) < n && (v as usize) < n)
+                    .collect(),
+            });
+        }
+        out
+    }
+}
+
+fn cfg(cases: usize, seed: u64) -> Config {
+    Config {
+        cases,
+        seed,
+        ..Config::default()
+    }
+}
+
+#[test]
+fn prop_all_peel_algorithms_match_bz() {
+    assert_prop::<RandGraph>(&cfg(60, 11), "peel == BZ", |rg| {
+        let g = rg.build();
+        let expected = bz_coreness(&g);
+        for (name, r) in [
+            ("GPP", peel::Gpp.decompose_with(&g, 2, false)),
+            ("PeelOne", peel::PeelOne.decompose_with(&g, 2, false)),
+            ("PP-dyn", peel::PpDyn.decompose_with(&g, 2, false)),
+            ("PO-dyn", peel::PoDyn.decompose_with(&g, 2, false)),
+        ] {
+            if r.core != expected {
+                return Err(format!("{name}: got {:?}, want {expected:?}", r.core));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_all_index2core_algorithms_match_bz() {
+    assert_prop::<RandGraph>(&cfg(60, 13), "index2core == BZ", |rg| {
+        let g = rg.build();
+        let expected = bz_coreness(&g);
+        for (name, r) in [
+            ("NbrCore", index2core::NbrCore.decompose_with(&g, 2, false)),
+            ("CntCore", index2core::CntCore.decompose_with(&g, 2, false)),
+            ("HistoCore", index2core::HistoCore.decompose_with(&g, 2, false)),
+        ] {
+            if r.core != expected {
+                return Err(format!("{name}: got {:?}, want {expected:?}", r.core));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coreness_monotone_under_edge_insertion() {
+    // adding an edge never decreases any coreness
+    assert_prop::<RandGraph>(&cfg(50, 17), "monotone insertion", |rg| {
+        if rg.n < 3 {
+            return Ok(());
+        }
+        let g = rg.build();
+        let before = bz_coreness(&g);
+        // add one fresh edge deterministically
+        let (mut u, mut v) = (0u32, 1u32);
+        'search: for a in 0..rg.n as u32 {
+            for b in (a + 1)..rg.n as u32 {
+                if !g.has_edge(a, b) {
+                    u = a;
+                    v = b;
+                    break 'search;
+                }
+            }
+        }
+        if g.has_edge(u, v) {
+            return Ok(()); // complete graph
+        }
+        let mut b = GraphBuilder::new(rg.n);
+        b.add_edges(rg.edges.iter().copied());
+        b.add_edge(u, v);
+        let g2 = b.build("prop+e");
+        let after = bz_coreness(&g2);
+        for i in 0..before.len() {
+            if after[i] < before[i] {
+                return Err(format!(
+                    "vertex {i}: coreness dropped {} -> {} after adding ({u},{v})",
+                    before[i], after[i]
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hindex_fixpoint_characterisation() {
+    // H(coreness of neighbors) == coreness, and coreness <= h-index of
+    // degrees (the first Index2core iterate).
+    assert_prop::<RandGraph>(&cfg(60, 19), "h-index fixpoint", |rg| {
+        let g = rg.build();
+        let core = bz_coreness(&g);
+        for v in 0..g.num_vertices() {
+            let nbr_cores: Vec<u32> = g
+                .neighbors(v as u32)
+                .iter()
+                .map(|&u| core[u as usize])
+                .collect();
+            let h = hindex(&nbr_cores);
+            if h != core[v] {
+                return Err(format!("v{v}: H(nbrs)={h} != core={}", core[v]));
+            }
+            let nbr_degs: Vec<u32> = g
+                .neighbors(v as u32)
+                .iter()
+                .map(|&u| g.degree(u))
+                .collect();
+            if core[v] > hindex(&nbr_degs) {
+                return Err(format!("v{v}: core exceeds first h-index iterate"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_kcore_subgraph_min_degree() {
+    // the k-core (vertices with coreness >= k) induces min degree >= k
+    assert_prop::<RandGraph>(&cfg(50, 23), "k-core min degree", |rg| {
+        let g = rg.build();
+        let core = bz_coreness(&g);
+        let k_max = core.iter().copied().max().unwrap_or(0);
+        for k in 1..=k_max {
+            for v in 0..g.num_vertices() {
+                if core[v] >= k {
+                    let deg_in_core = g
+                        .neighbors(v as u32)
+                        .iter()
+                        .filter(|&&u| core[u as usize] >= k)
+                        .count() as u32;
+                    if deg_in_core < k {
+                        return Err(format!("v{v} has degree {deg_in_core} in the {k}-core"));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_builder_is_canonical() {
+    // builder output passes full CSR validation whatever the input order
+    assert_prop::<RandGraph>(&cfg(80, 29), "CSR canonical", |rg| {
+        rg.build().validate()
+    });
+}
+
+#[test]
+fn prop_metrics_counts_bound_edge_work() {
+    // every edge access counted by an instrumented PeelOne run is at most
+    // 2|E| per direction of the peel (each arc visited at most once per
+    // endpoint removal)
+    assert_prop::<RandGraph>(&cfg(40, 31), "edge access bound", |rg| {
+        let g = rg.build();
+        let r = peel::PoDyn.decompose_with(&g, 1, true);
+        let bound = g.num_arcs();
+        if r.metrics.edge_accesses > bound {
+            return Err(format!(
+                "edge accesses {} exceed 2|E| = {bound}",
+                r.metrics.edge_accesses
+            ));
+        }
+        Ok(())
+    });
+}

@@ -1,0 +1,69 @@
+//! XLA runtime integration: the vectorised engines against the oracle on
+//! the XLA-tier suite, bucket-selection edge cases, and scheduler-driven
+//! execution of the XLA path.
+
+use pico::bench::suite::{suite, Tier};
+use pico::coordinator::{DatasetSpec, Job, Scheduler, SchedulerConfig};
+use pico::core::bz::bz_coreness;
+use pico::graph::examples;
+use pico::runtime::{default_worker, select_bucket, Bucket, VecHindex, VecPeel};
+use std::sync::Arc;
+
+#[test]
+fn vec_engines_match_oracle_on_xla_tier() {
+    let peel = VecPeel::open_default().expect("artifacts built? run `make artifacts`");
+    let hindex = VecHindex::open_default().unwrap();
+    for entry in suite(Tier::Xla) {
+        let g = entry.build();
+        let expected = bz_coreness(&g);
+        let p = peel.try_decompose(&g).unwrap();
+        assert_eq!(p.core, expected, "VecPeel on {}", entry.name);
+        let h = hindex.try_decompose(&g).unwrap();
+        assert_eq!(h.core, expected, "VecHindex on {}", entry.name);
+    }
+}
+
+#[test]
+fn xla_engines_via_scheduler() {
+    let jobs = vec![
+        Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "VecPeel(XLA)").with_threads(1),
+        Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "VecHindex(XLA)").with_threads(1),
+    ];
+    let results = Scheduler::new(SchedulerConfig::default()).run(jobs);
+    for r in &results {
+        assert!(r.ok(), "{}: {:?}", r.algorithm, r.outcome);
+        assert_eq!(r.k_max, 2);
+    }
+}
+
+#[test]
+fn bucket_selection_boundaries() {
+    let buckets = [
+        Bucket { n: 8, d: 4 },
+        Bucket { n: 64, d: 8 },
+        Bucket { n: 4096, d: 64 },
+    ];
+    // exact fit
+    assert_eq!(select_bucket(&buckets, 8, 4).unwrap(), Bucket { n: 8, d: 4 });
+    // one over on either axis climbs a bucket
+    assert_eq!(select_bucket(&buckets, 9, 4).unwrap(), Bucket { n: 64, d: 8 });
+    assert_eq!(select_bucket(&buckets, 8, 5).unwrap(), Bucket { n: 64, d: 8 });
+    // empty graph fits the smallest
+    assert_eq!(select_bucket(&buckets, 0, 0).unwrap(), Bucket { n: 8, d: 4 });
+    // too big in either dimension
+    assert!(select_bucket(&buckets, 5000, 4).is_err());
+    assert!(select_bucket(&buckets, 8, 65).is_err());
+}
+
+#[test]
+fn worker_shared_across_engines() {
+    // both engines over one worker (one PJRT client), interleaved calls
+    let worker = default_worker().expect("artifacts");
+    let peel = VecPeel::new(worker.clone());
+    let hindex = VecHindex::new(worker);
+    let g = examples::complete(6);
+    for _ in 0..3 {
+        assert_eq!(peel.try_decompose(&g).unwrap().core, vec![5; 6]);
+        assert_eq!(hindex.try_decompose(&g).unwrap().core, vec![5; 6]);
+    }
+}
