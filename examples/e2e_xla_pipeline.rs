@@ -14,14 +14,28 @@
 //!
 //!     make artifacts && cargo run --release --example e2e_xla_pipeline
 
+#[cfg(not(feature = "xla"))]
+fn main() -> anyhow::Result<()> {
+    eprintln!("SKIP: built without the `xla` feature (cargo run --release --example e2e_xla_pipeline --features xla)");
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
 use pico::bench::suite::{suite, Tier};
+#[cfg(feature = "xla")]
 use pico::core::bz::bz_coreness;
+#[cfg(feature = "xla")]
 use pico::core::peel::PoDyn;
+#[cfg(feature = "xla")]
 use pico::core::Decomposer;
+#[cfg(feature = "xla")]
 use pico::runtime::{default_worker, VecHindex, VecPeel};
+#[cfg(feature = "xla")]
 use pico::util::fmt;
+#[cfg(feature = "xla")]
 use std::time::Instant;
 
+#[cfg(feature = "xla")]
 fn main() -> anyhow::Result<()> {
     let worker = default_worker()?;
     println!("pjrt platform: {}", worker.platform()?);

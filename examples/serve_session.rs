@@ -1,0 +1,85 @@
+//! End-to-end serving session — the Layer 3.5 walkthrough:
+//! start `pico serve` in-process, stream edits over TCP, and query
+//! coreness concurrently while batches land.
+//!
+//! The same flow over two shells:
+//!
+//! ```text
+//! $ pico serve --dataset social-ba --addr 127.0.0.1:7571
+//! $ pico query --cmd 'CORENESS 0; INSERT 17 99; FLUSH; CORENESS 17; DENSEST'
+//! ```
+//!
+//!     cargo run --release --example serve_session
+
+use pico::graph::gen;
+use pico::service::{serve, BatchConfig, CoreService};
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn send(w: &mut TcpStream, r: &mut BufReader<TcpStream>, cmd: &str) -> String {
+    writeln!(w, "{cmd}").unwrap();
+    w.flush().unwrap();
+    let mut line = String::new();
+    r.read_line(&mut line).unwrap();
+    let reply = line.trim_end().to_string();
+    println!("  > {cmd:<18} < {reply}");
+    reply
+}
+
+fn main() -> anyhow::Result<()> {
+    // 1. Host a social-network graph (port 0: pick any free port).
+    let g = gen::barabasi_albert(10_000, 6, 2026);
+    let service = Arc::new(CoreService::new(BatchConfig::default()));
+    service.open("social", &g);
+    let handle = serve(service, "127.0.0.1:0")?;
+    println!("serving 'social' on {}\n", handle.addr());
+
+    // 2. A writer connection streams edits; they become visible at FLUSH.
+    let ws = TcpStream::connect(handle.addr())?;
+    let mut writer = ws.try_clone()?;
+    let mut wreader = BufReader::new(ws);
+    println!("writer session:");
+    send(&mut writer, &mut wreader, "EPOCH");
+    send(&mut writer, &mut wreader, "INSERT 3 4071");
+    send(&mut writer, &mut wreader, "INSERT 3 9006");
+    send(&mut writer, &mut wreader, "DELETE 3 4071"); // coalesces away
+    send(&mut writer, &mut wreader, "FLUSH");
+
+    // 3. Readers on their own connections see only published epochs —
+    //    here, querying concurrently with another in-flight batch.
+    println!("  (queueing 200 more edits silently...)");
+    for i in 0..200u32 {
+        writeln!(writer, "INSERT {} {}", i % 97, 100 + i)?;
+        writer.flush()?;
+        let mut line = String::new();
+        wreader.read_line(&mut line)?;
+        assert!(line.starts_with("OK"), "{line}");
+    }
+    let reader_thread = std::thread::spawn({
+        let addr = handle.addr();
+        move || {
+            let rs = TcpStream::connect(addr).unwrap();
+            let mut w = rs.try_clone().unwrap();
+            let mut r = BufReader::new(rs);
+            println!("\nconcurrent reader session:");
+            send(&mut w, &mut r, "CORENESS 3");
+            send(&mut w, &mut r, "DEGENERACY");
+            send(&mut w, &mut r, "MEMBERS 8");
+            send(&mut w, &mut r, "HISTO");
+            send(&mut w, &mut r, "DENSEST");
+            send(&mut w, &mut r, "STATS");
+            send(&mut w, &mut r, "QUIT");
+        }
+    });
+    reader_thread.join().unwrap();
+
+    println!("\nwriter flushes the second batch:");
+    send(&mut writer, &mut wreader, "FLUSH");
+    send(&mut writer, &mut wreader, "EPOCH");
+    send(&mut writer, &mut wreader, "QUIT");
+
+    handle.stop();
+    println!("\ndone — see rust/src/service/server.rs for the full protocol");
+    Ok(())
+}

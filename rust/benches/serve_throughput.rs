@@ -1,0 +1,214 @@
+//! Serving-layer benchmark: concurrent read throughput under batched
+//! updates, batched-update latency (p50/p99), and the incremental-vs-
+//! recompute crossover that calibrates `BatchConfig::recompute_fraction`.
+//!
+//! The crossover table is the serving analog of the paper's Table VII
+//! peel-vs-index2core crossover: below it, per-edit subcore maintenance
+//! wins; above it, one full run of the `Hybrid`-selected decomposer is
+//! cheaper. Run on a new host to recalibrate the default (see ROADMAP's
+//! tuning follow-up).
+//!
+//!     cargo bench --bench serve_throughput
+//!     PICO_SUITE=small cargo bench --bench serve_throughput   # quicker
+
+use pico::bench::suite::Tier;
+use pico::core::bz::bz_coreness;
+use pico::core::maintenance::{DynamicCore, EdgeEdit};
+use pico::core::{Decomposer, Hybrid};
+use pico::graph::{gen, CsrGraph};
+use pico::service::{BatchConfig, CoreIndex, EditQueue};
+use pico::util::fmt;
+use pico::util::rng::Rng;
+use pico::util::timer::{Samples, Timer};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+fn workload(tier: Tier) -> CsrGraph {
+    match tier {
+        Tier::Small | Tier::Xla => gen::barabasi_albert(5_000, 6, 42),
+        _ => gen::barabasi_albert(20_000, 8, 42),
+    }
+}
+
+fn random_edits(rng: &mut Rng, n: u32, count: usize, p_insert: f64) -> Vec<EdgeEdit> {
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        if u == v {
+            continue;
+        }
+        out.push(if rng.chance(p_insert) {
+            EdgeEdit::Insert(u, v)
+        } else {
+            EdgeEdit::Delete(u, v)
+        });
+    }
+    out
+}
+
+/// Part 1 — queries/sec under 4 concurrent readers while a writer
+/// streams batches, plus per-flush latency percentiles.
+fn bench_concurrent_serving(g: &CsrGraph) {
+    const READERS: usize = 4;
+    const ROUNDS: usize = 60;
+    const BATCH: usize = 32;
+
+    let n = g.num_vertices() as u32;
+    let idx = Arc::new(CoreIndex::new("bench", g));
+    let queue = EditQueue::new(idx.clone(), BatchConfig::default());
+
+    let stop = Arc::new(AtomicBool::new(false));
+    let total_queries = Arc::new(AtomicU64::new(0));
+    let mut readers = Vec::new();
+    for r in 0..READERS {
+        let idx = idx.clone();
+        let stop = stop.clone();
+        let total = total_queries.clone();
+        readers.push(std::thread::spawn(move || {
+            let mut rng = Rng::new(1000 + r as u64);
+            let mut local = 0u64;
+            let mut sink = 0u64;
+            while !stop.load(Ordering::Relaxed) {
+                let s = idx.snapshot();
+                let v = rng.below(s.num_vertices().max(1) as u64) as u32;
+                sink ^= s.coreness(v).unwrap_or(0) as u64 ^ s.epoch;
+                local += 1;
+            }
+            total.fetch_add(local, Ordering::Relaxed);
+            std::hint::black_box(sink);
+        }));
+    }
+
+    let mut rng = Rng::new(7);
+    let mut flushes = Samples::default();
+    let wall = Timer::start();
+    for _ in 0..ROUNDS {
+        for e in random_edits(&mut rng, n, BATCH, 0.6) {
+            queue.submit(e);
+        }
+        let out = queue.flush();
+        flushes.push(out.elapsed);
+    }
+    let wall_s = wall.elapsed().as_secs_f64();
+    stop.store(true, Ordering::Relaxed);
+    for h in readers {
+        h.join().unwrap();
+    }
+
+    let q = total_queries.load(Ordering::Relaxed);
+    println!(
+        "concurrent serving: {READERS} readers, {ROUNDS} batches x {BATCH} edits over {:.2}s",
+        wall_s
+    );
+    println!(
+        "  reads:   {} total -> {} queries/sec",
+        fmt::commas(q),
+        fmt::si((q as f64 / wall_s) as u64)
+    );
+    println!(
+        "  updates: flush latency p50 {} ms | p99 {} ms | max {} ms | epochs {}",
+        fmt::ms(flushes.percentile_ms(50.0)),
+        fmt::ms(flushes.percentile_ms(99.0)),
+        fmt::ms(flushes.max_ms()),
+        idx.epoch()
+    );
+
+    // correctness backstop: the bench never reports numbers for a broken index
+    let (snap, graph) = idx.consistent_view();
+    assert_eq!(snap.core, bz_coreness(&graph), "served state diverged from oracle");
+    println!("  oracle check: ok\n");
+}
+
+/// Part 2 — the crossover: per-batch-size cost of incremental
+/// maintenance vs structural-edits + full recompute.
+fn bench_crossover(g: &CsrGraph) {
+    let n = g.num_vertices() as u32;
+    let m = g.num_edges();
+    let base = DynamicCore::new(g);
+    let fractions = [0.0005, 0.001, 0.002, 0.005, 0.01, 0.02, 0.05, 0.1];
+
+    println!("incremental vs recompute crossover (|E| = {}):", fmt::commas(m));
+    println!(
+        "{:>10}  {:>8}  {:>12}  {:>12}  {:>10}",
+        "fraction", "edits", "incr(ms)", "recomp(ms)", "winner"
+    );
+    let mut crossover: Option<f64> = None;
+    let mut rng = Rng::new(99);
+    for &frac in &fractions {
+        let count = ((m as f64 * frac) as usize).max(1);
+        let edits = random_edits(&mut rng, n, count, 0.6);
+
+        let mut inc = base.clone();
+        let t = Timer::start();
+        inc.apply_batch(&edits);
+        let inc_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        let mut rec = base.clone();
+        let t = Timer::start();
+        for &e in &edits {
+            match e {
+                EdgeEdit::Insert(u, v) => {
+                    rec.insert_edge_structural(u, v);
+                }
+                EdgeEdit::Delete(u, v) => {
+                    rec.delete_edge_structural(u, v);
+                }
+            }
+        }
+        rec.recompute_with(&Hybrid::default(), pico::util::default_threads());
+        let rec_ms = t.elapsed().as_secs_f64() * 1e3;
+
+        assert_eq!(inc.coreness(), rec.coreness(), "paths disagree at frac {frac}");
+        let winner = if inc_ms <= rec_ms { "incremental" } else { "recompute" };
+        if inc_ms > rec_ms && crossover.is_none() {
+            crossover = Some(frac);
+        }
+        println!(
+            "{:>9.2}%  {:>8}  {:>12}  {:>12}  {:>10}",
+            frac * 100.0,
+            count,
+            fmt::ms(inc_ms),
+            fmt::ms(rec_ms),
+            winner
+        );
+    }
+    match crossover {
+        Some(f) => println!(
+            "\nmeasured crossover ≈ {:.2}% of |E| -> suggested BatchConfig.recompute_fraction = {f}",
+            f * 100.0
+        ),
+        None => println!(
+            "\nrecompute never won up to {:.0}% of |E| on this host; keep the incremental path",
+            fractions.last().unwrap() * 100.0
+        ),
+    }
+}
+
+/// Part 3 — one full-recompute decomposition on the serving graph, for
+/// scale: what a cold index build / worst-case fallback costs.
+fn bench_cold_build(g: &CsrGraph) {
+    let t = Timer::start();
+    let r = Hybrid::default().decompose(g);
+    println!(
+        "\ncold index build (Hybrid): {} ms, k_max {}, {}",
+        fmt::ms(t.elapsed_ms()),
+        r.k_max(),
+        fmt::meps(g.num_edges(), t.elapsed_ms())
+    );
+}
+
+fn main() {
+    let tier = Tier::from_env();
+    let g = workload(tier);
+    println!(
+        "== serve_throughput == dataset {} (|V|={}, |E|={}, tier {:?})\n",
+        g.name,
+        fmt::si(g.num_vertices() as u64),
+        fmt::si(g.num_edges()),
+        tier
+    );
+    bench_concurrent_serving(&g);
+    bench_crossover(&g);
+    bench_cold_build(&g);
+}

@@ -5,13 +5,25 @@
 //!
 //!     make artifacts && cargo bench --bench xla_vs_native
 
+#[cfg(not(feature = "xla"))]
+fn main() {
+    eprintln!("SKIP: built without the `xla` feature (cargo bench --bench xla_vs_native --features xla)");
+}
+
+#[cfg(feature = "xla")]
 use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+#[cfg(feature = "xla")]
 use pico::coordinator::report::Table;
+#[cfg(feature = "xla")]
 use pico::core::index2core::HistoCore;
+#[cfg(feature = "xla")]
 use pico::core::peel::PoDyn;
+#[cfg(feature = "xla")]
 use pico::runtime::{default_worker, VecHindex, VecPeel};
+#[cfg(feature = "xla")]
 use pico::util::fmt;
 
+#[cfg(feature = "xla")]
 fn main() {
     let opts = BenchOptions {
         // the XLA path re-uploads literals per step; keep reps small

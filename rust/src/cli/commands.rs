@@ -23,19 +23,10 @@ fn tier_by_name(name: &str) -> Result<Tier> {
     })
 }
 
-/// Resolve `--dataset`: suite name first, then filesystem path.
+/// Resolve `--dataset`: suite name first, then filesystem path
+/// (shared with the serve protocol via [`DatasetSpec::resolve`]).
 fn resolve_dataset(name: &str) -> Result<DatasetSpec> {
-    if let Some(entry) = suite::by_name(name) {
-        return Ok(DatasetSpec::Lazy {
-            name: entry.name.to_string(),
-            build: Arc::new(|| entry.build()),
-        });
-    }
-    let path = std::path::Path::new(name);
-    if path.exists() {
-        return Ok(DatasetSpec::Path(path.to_path_buf()));
-    }
-    bail!("'{name}' is neither a suite dataset (see `pico list`) nor a file")
+    DatasetSpec::resolve(name)
 }
 
 /// `pico run`
@@ -52,6 +43,13 @@ pub fn cmd_run(args: &Args, cfg: &Config) -> Result<()> {
         ..Default::default()
     });
     let r = scheduler.run_one(&job);
+    if args.has("json") {
+        print!("{}", report::render_results_json(std::slice::from_ref(&r)));
+        if !r.ok() {
+            bail!("job did not complete cleanly: {:?}", r.outcome);
+        }
+        return Ok(());
+    }
     print!("{}", report::render_results(std::slice::from_ref(&r)));
     if job.metrics {
         println!(
@@ -86,7 +84,7 @@ pub fn cmd_suite(args: &Args, cfg: &Config) -> Result<()> {
                 Job::new(
                     DatasetSpec::Lazy {
                         name: entry.name.to_string(),
-                        build: Arc::new(|| entry.build()),
+                        build: Arc::new(move || entry.build()),
                     },
                     algo.clone(),
                 )
@@ -100,7 +98,11 @@ pub fn cmd_suite(args: &Args, cfg: &Config) -> Result<()> {
         ..Default::default()
     });
     let results = scheduler.run(jobs);
-    print!("{}", report::render_results(&results));
+    if args.has("json") {
+        print!("{}", report::render_results_json(&results));
+    } else {
+        print!("{}", report::render_results(&results));
+    }
     let failed = results.iter().filter(|r| !r.ok()).count();
     if failed > 0 {
         bail!("{failed} job(s) failed");
@@ -156,9 +158,18 @@ pub fn cmd_analyze(args: &Args, _cfg: &Config) -> Result<()> {
 /// `pico doctor`
 pub fn cmd_doctor(_args: &Args, _cfg: &Config) -> Result<()> {
     println!("host threads: {}", crate::util::default_threads());
-    let store = crate::runtime::ArtifactStore::open_default()
-        .context("artifacts not found — run `make artifacts`")?;
-    println!("artifacts: {} buckets {:?}", store.buckets().len(), store.buckets());
+    match crate::runtime::ArtifactStore::open_default() {
+        Ok(store) => {
+            println!("artifacts: {} buckets {:?}", store.buckets().len(), store.buckets());
+            doctor_xla(store)?;
+        }
+        Err(e) => println!("artifacts: not found ({e:#}); XLA path unavailable"),
+    }
+    Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn doctor_xla(store: crate::runtime::ArtifactStore) -> Result<()> {
     let worker = crate::runtime::XlaWorker::spawn(store)?;
     println!("pjrt: {}", worker.platform()?);
     let r = worker.decompose(crate::runtime::artifacts::Kind::Peel, &crate::graph::examples::g1())?;
@@ -167,6 +178,87 @@ pub fn cmd_doctor(_args: &Args, _cfg: &Config) -> Result<()> {
         "XLA smoke test produced wrong coreness"
     );
     println!("xla smoke test (G1 via VecPeel): ok");
+    Ok(())
+}
+
+#[cfg(not(feature = "xla"))]
+fn doctor_xla(_store: crate::runtime::ArtifactStore) -> Result<()> {
+    println!("xla backend: disabled at build time (rebuild with `--features xla`)");
+    Ok(())
+}
+
+/// `pico serve` — host core indices behind the line-protocol TCP server
+/// (see `service::server` docs for the protocol).
+pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
+    use crate::service::{serve, BatchConfig, CoreService};
+
+    let addr = args.get_or("addr", "127.0.0.1:7571").to_string();
+    let dataset_name = args.get_or("dataset", "g1").to_string();
+    let threads = args.parse_num::<usize>("threads")?.unwrap_or(cfg.threads);
+    let batch = BatchConfig {
+        recompute_fraction: args
+            .parse_num::<f64>("batch-fraction")?
+            .unwrap_or(BatchConfig::default().recompute_fraction),
+        min_recompute_edits: args
+            .parse_num::<usize>("batch-min")?
+            .unwrap_or(BatchConfig::default().min_recompute_edits),
+        threads,
+    };
+
+    let spec = resolve_dataset(&dataset_name)?;
+    let g = spec.load()?;
+    let service = std::sync::Arc::new(CoreService::new(batch.clone()));
+    let idx = service.open(&spec.name(), &g);
+    let s = idx.snapshot();
+    let handle = serve(service, &addr)?;
+    println!(
+        "serving '{}' on {} — |V|={} |E|={} k_max={} (epoch {})",
+        spec.name(),
+        handle.addr(),
+        s.num_vertices(),
+        s.num_edges,
+        s.k_max,
+        s.epoch
+    );
+    println!(
+        "batch policy: recompute above max({}, {:.1}% of |E|) coalesced edits",
+        batch.min_recompute_edits,
+        batch.recompute_fraction * 100.0
+    );
+    println!("try: pico query --addr {} --cmd 'CORENESS 0'", handle.addr());
+    handle.join(); // runs until the process is killed
+    Ok(())
+}
+
+/// `pico query` — one-shot client: send `;`-separated protocol commands,
+/// print each reply line.
+pub fn cmd_query(args: &Args, _cfg: &Config) -> Result<()> {
+    use std::io::{BufRead, BufReader, Write};
+
+    let addr = args.get_or("addr", "127.0.0.1:7571");
+    let Some(script) = args.get("cmd") else {
+        bail!("--cmd is required, e.g. --cmd 'INSERT 1 2; FLUSH; CORENESS 1'");
+    };
+    let stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to pico serve at {addr}"))?;
+    let mut writer = stream.try_clone().context("cloning the connection")?;
+    let mut reader = BufReader::new(stream);
+    let mut failed = false;
+    for cmd in script.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+        writeln!(writer, "{cmd}")?;
+        writer.flush()?;
+        let mut reply = String::new();
+        if reader.read_line(&mut reply)? == 0 {
+            bail!("server closed the connection after '{cmd}'");
+        }
+        let reply = reply.trim_end();
+        println!("{reply}");
+        failed |= reply.starts_with("ERR");
+    }
+    let _ = writeln!(writer, "QUIT");
+    if failed {
+        bail!("at least one command was rejected");
+    }
     Ok(())
 }
 
@@ -207,6 +299,41 @@ mod tests {
         )
         .unwrap();
         cmd_run(&args, &Config::default()).unwrap();
+    }
+
+    #[test]
+    fn run_command_json_smoke() {
+        let args = Args::parse(
+            &[
+                "run".into(),
+                "--algo".into(),
+                "PeelOne".into(),
+                "--dataset".into(),
+                "g1".into(),
+                "--json".into(),
+            ],
+            &["metrics", "no-validate", "json"],
+        )
+        .unwrap();
+        assert!(args.has("json"));
+        cmd_run(&args, &Config::default()).unwrap();
+    }
+
+    #[test]
+    fn query_without_server_is_structured_error() {
+        let args = Args::parse(
+            &[
+                "query".into(),
+                "--addr".into(),
+                "127.0.0.1:1".into(), // reserved port: nothing listens
+                "--cmd".into(),
+                "PING".into(),
+            ],
+            &[],
+        )
+        .unwrap();
+        let err = cmd_query(&args, &Config::default()).unwrap_err();
+        assert!(err.to_string().contains("connecting"), "{err:#}");
     }
 
     #[test]

@@ -15,7 +15,9 @@ USAGE:
 
 COMMANDS:
     run       Decompose one dataset with one algorithm
-    suite     Run algorithms across the dataset suite (scheduler demo)
+    suite     Run algorithms across the dataset suite (alias: bench)
+    serve     Host core indices behind the line-protocol TCP server
+    query     Send protocol commands to a running `pico serve`
     stats     Print Table II-style statistics for the suite
     analyze   Fig. 3-style multi-access analysis of a dataset
     doctor    Check the XLA runtime and artifacts
@@ -31,10 +33,26 @@ RUN OPTIONS:
     --dataset NAME     Suite dataset name, or a path to .el/.mtx/.pico
     --no-validate      Skip the BZ oracle check
     --metrics          Print instrumented counters
+    --json             Machine-readable report (also for suite/bench)
+
+SERVE OPTIONS:
+    --addr HOST:PORT     Bind address (default 127.0.0.1:7571)
+    --dataset NAME       Initial hosted graph (default g1)
+    --batch-fraction F   Recompute when a batch exceeds F of |E| (default 0.02)
+    --batch-min N        Never recompute below N coalesced edits (default 64)
+
+QUERY OPTIONS:
+    --addr HOST:PORT   Server address (default 127.0.0.1:7571)
+    --cmd 'A; B; C'    Protocol commands, `;`-separated (see service::server
+                       docs: CORENESS, MEMBERS, HISTO, DENSEST, INSERT,
+                       DELETE, FLUSH, EPOCH, STATS, OPEN, USE, GRAPHS)
 
 EXAMPLES:
     pico run --algo HistoCore --dataset social-ba --metrics
+    pico run --algo PO-dyn --dataset g1 --json
     pico suite --algos PO-dyn,HistoCore --tier small
+    pico serve --dataset social-ba --addr 127.0.0.1:7571
+    pico query --cmd 'INSERT 3 9; FLUSH; CORENESS 3; DENSEST'
     pico stats --tier standard
     pico analyze --dataset social-rmat
 ";

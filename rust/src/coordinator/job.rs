@@ -20,6 +20,23 @@ pub enum DatasetSpec {
 }
 
 impl DatasetSpec {
+    /// Resolve a user-supplied dataset argument — suite name first, then
+    /// filesystem path — shared by `pico run`/`serve` and the protocol's
+    /// OPEN verb so the two surfaces can't drift.
+    pub fn resolve(name: &str) -> anyhow::Result<DatasetSpec> {
+        if let Some(entry) = crate::bench::suite::by_name(name) {
+            return Ok(DatasetSpec::Lazy {
+                name: entry.name.to_string(),
+                build: Arc::new(move || entry.build()),
+            });
+        }
+        let path = std::path::Path::new(name);
+        if path.exists() {
+            return Ok(DatasetSpec::Path(path.to_path_buf()));
+        }
+        anyhow::bail!("'{name}' is neither a suite dataset (see `pico list`) nor a file")
+    }
+
     pub fn name(&self) -> String {
         match self {
             DatasetSpec::InMemory(g) => g.name.clone(),

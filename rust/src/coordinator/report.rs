@@ -87,6 +87,61 @@ pub fn render_results(results: &[JobResult]) -> String {
     t.render()
 }
 
+/// Minimal JSON string escaping (the environment carries no serde; the
+/// emitted values are ASCII identifiers and error messages).
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One result as a JSON object.
+fn result_json(r: &JobResult) -> String {
+    format!(
+        concat!(
+            "{{\"dataset\":\"{}\",\"algorithm\":\"{}\",\"status\":\"{}\",\"ok\":{},",
+            "\"time_ms\":{:.3},\"iterations\":{},\"launches\":{},\"k_max\":{},",
+            "\"vertices\":{},\"edges\":{},",
+            "\"metrics\":{{\"atomic_subs\":{},\"atomic_adds\":{},\"cas_retries\":{},",
+            "\"edge_accesses\":{},\"hindex_evals\":{},\"frontier_pushes\":{}}}}}"
+        ),
+        json_escape(&r.dataset),
+        json_escape(&r.algorithm),
+        json_escape(&status(r)),
+        r.ok(),
+        r.elapsed_ms(),
+        r.iterations,
+        r.launches,
+        r.k_max,
+        r.vertices,
+        r.edges,
+        r.metrics.atomic_subs,
+        r.metrics.atomic_adds,
+        r.metrics.cas_retries,
+        r.metrics.edge_accesses,
+        r.metrics.hindex_evals,
+        r.metrics.frontier_pushes,
+    )
+}
+
+/// Machine-readable run/suite report (`pico run --json`,
+/// `pico suite --json`) — one stable document per invocation so the perf
+/// trajectory can be tracked across PRs.
+pub fn render_results_json(results: &[JobResult]) -> String {
+    let rows: Vec<String> = results.iter().map(result_json).collect();
+    format!("{{\"results\":[{}]}}\n", rows.join(","))
+}
+
 /// Geometric mean of pairwise speedups (baseline time / candidate time),
 /// the aggregate the paper quotes ("average speedup of 1.9x").
 pub fn geomean_speedup(pairs: &[(f64, f64)]) -> f64 {
@@ -117,6 +172,40 @@ mod tests {
     #[should_panic(expected = "arity")]
     fn row_arity_checked() {
         Table::new(&["a"]).row(vec!["1".into(), "2".into()]);
+    }
+
+    #[test]
+    fn json_report_shape() {
+        use crate::engine::metrics::MetricsSnapshot;
+        let r = JobResult {
+            dataset: "g\"1".into(),
+            algorithm: "PO-dyn".into(),
+            outcome: JobOutcome::Ok,
+            elapsed: std::time::Duration::from_millis(12),
+            iterations: 3,
+            launches: 9,
+            k_max: 2,
+            vertices: 6,
+            edges: 7,
+            metrics: MetricsSnapshot::default(),
+        };
+        let s = render_results_json(std::slice::from_ref(&r));
+        assert!(s.starts_with("{\"results\":[{"), "{s}");
+        assert!(s.contains("\"dataset\":\"g\\\"1\""), "{s}");
+        assert!(s.contains("\"algorithm\":\"PO-dyn\""), "{s}");
+        assert!(s.contains("\"ok\":true"), "{s}");
+        assert!(s.contains("\"k_max\":2"), "{s}");
+        assert!(s.contains("\"time_ms\":12."), "{s}");
+        assert!(s.trim_end().ends_with("]}"), "{s}");
+        // two results join with a comma
+        let two = render_results_json(&[r.clone(), r]);
+        assert!(two.contains("},{"), "{two}");
+    }
+
+    #[test]
+    fn json_escape_control_chars() {
+        assert_eq!(json_escape("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(json_escape("\u{1}"), "\\u0001");
     }
 
     #[test]

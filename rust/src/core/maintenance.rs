@@ -20,8 +20,30 @@
 //! randomised edit scripts.
 
 use crate::core::bz::bz_coreness;
+use crate::core::traits::Decomposer;
 use crate::graph::{CsrGraph, GraphBuilder, VertexId};
 use std::collections::HashMap;
+
+/// One edge edit. Endpoints are unordered (stored as given, compared
+/// canonically); self-loop edits are rejected by [`DynamicCore::apply`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum EdgeEdit {
+    Insert(VertexId, VertexId),
+    Delete(VertexId, VertexId),
+}
+
+impl EdgeEdit {
+    /// Canonical `(min, max)` endpoint pair — the coalescing key.
+    pub fn endpoints(&self) -> (VertexId, VertexId) {
+        match *self {
+            EdgeEdit::Insert(u, v) | EdgeEdit::Delete(u, v) => (u.min(v), u.max(v)),
+        }
+    }
+
+    pub fn is_insert(&self) -> bool {
+        matches!(self, EdgeEdit::Insert(_, _))
+    }
+}
 
 /// A mutable graph with continuously maintained coreness.
 #[derive(Clone, Debug)]
@@ -54,8 +76,23 @@ impl DynamicCore {
         self.adj.len()
     }
 
+    /// Undirected edge count. O(|V|): sums adjacency lengths.
+    pub fn num_edges(&self) -> u64 {
+        self.adj.iter().map(|a| a.len() as u64).sum::<u64>() / 2
+    }
+
     pub fn coreness(&self) -> &[u32] {
         &self.core
+    }
+
+    /// Grow the vertex set so `v` is a valid id (new vertices are
+    /// isolated with coreness 0).
+    pub fn ensure_vertex(&mut self, v: VertexId) {
+        let need = v as usize + 1;
+        if need > self.adj.len() {
+            self.adj.resize(need, Vec::new());
+            self.core.resize(need, 0);
+        }
     }
 
     pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
@@ -99,16 +136,77 @@ impl DynamicCore {
         out
     }
 
-    /// Insert an undirected edge; returns true if it was new.
-    /// Amortised cost is proportional to the affected subcore, not |G|.
-    pub fn insert_edge(&mut self, u: VertexId, v: VertexId) -> bool {
-        assert!(u != v, "self-loops unsupported");
+    /// Mutate the adjacency only — no coreness maintenance. Returns true
+    /// if the edge was new. Pair with [`Self::recompute_with`]; used by
+    /// the service batch path when a full recompute is cheaper than
+    /// cascading per-edit maintenance.
+    pub fn insert_edge_structural(&mut self, u: VertexId, v: VertexId) -> bool {
+        if u == v {
+            return false;
+        }
         let (u, v) = (u.min(v), u.max(v));
         if self.has_edge(u, v) {
             return false;
         }
         self.adj[u as usize].push(v);
         self.adj[v as usize].push(u);
+        true
+    }
+
+    /// Structural counterpart of [`Self::delete_edge`]; returns true if
+    /// the edge existed. No coreness maintenance.
+    pub fn delete_edge_structural(&mut self, u: VertexId, v: VertexId) -> bool {
+        let (u, v) = (u.min(v), u.max(v));
+        let Some(pu) = self.adj[u as usize].iter().position(|&x| x == v) else {
+            return false;
+        };
+        self.adj[u as usize].swap_remove(pu);
+        let pv = self.adj[v as usize]
+            .iter()
+            .position(|&x| x == u)
+            .expect("asymmetric adjacency");
+        self.adj[v as usize].swap_remove(pv);
+        true
+    }
+
+    /// Replace the maintained coreness with a from-scratch run of `algo`
+    /// over the current structure (the batch path's recompute fallback).
+    pub fn recompute_with(&mut self, algo: &dyn Decomposer, threads: usize) {
+        let g = self.snapshot();
+        self.core = algo.decompose_with(&g, threads, false).core;
+    }
+
+    /// Apply one [`EdgeEdit`] with incremental maintenance. Returns true
+    /// if the edge set changed (self-loop edits never do).
+    pub fn apply(&mut self, edit: EdgeEdit) -> bool {
+        match edit {
+            EdgeEdit::Insert(u, v) => {
+                if u == v {
+                    return false;
+                }
+                self.insert_edge(u, v)
+            }
+            EdgeEdit::Delete(u, v) => self.delete_edge(u, v),
+        }
+    }
+
+    /// Apply a batch of edits through the incremental path. Returns how
+    /// many edits actually changed the edge set. For batches large enough
+    /// that maintenance cascades dominate, prefer the structural edits +
+    /// [`Self::recompute_with`] combination (see `service::batch` for the
+    /// crossover policy).
+    pub fn apply_batch(&mut self, edits: &[EdgeEdit]) -> usize {
+        edits.iter().filter(|&&e| self.apply(e)).count()
+    }
+
+    /// Insert an undirected edge; returns true if it was new.
+    /// Amortised cost is proportional to the affected subcore, not |G|.
+    pub fn insert_edge(&mut self, u: VertexId, v: VertexId) -> bool {
+        assert!(u != v, "self-loops unsupported");
+        let (u, v) = (u.min(v), u.max(v));
+        if !self.insert_edge_structural(u, v) {
+            return false;
+        }
 
         let (cu, cv) = (self.core[u as usize], self.core[v as usize]);
         let k = cu.min(cv);
@@ -168,15 +266,9 @@ impl DynamicCore {
     /// Delete an undirected edge; returns true if it existed.
     pub fn delete_edge(&mut self, u: VertexId, v: VertexId) -> bool {
         let (u, v) = (u.min(v), u.max(v));
-        let Some(pu) = self.adj[u as usize].iter().position(|&x| x == v) else {
+        if !self.delete_edge_structural(u, v) {
             return false;
-        };
-        self.adj[u as usize].swap_remove(pu);
-        let pv = self.adj[v as usize]
-            .iter()
-            .position(|&x| x == u)
-            .expect("asymmetric adjacency");
-        self.adj[v as usize].swap_remove(pv);
+        }
 
         let (cu, cv) = (self.core[u as usize], self.core[v as usize]);
         let k = cu.min(cv);
@@ -301,6 +393,58 @@ mod tests {
             }
         }
         check(&dc, "final");
+    }
+
+    #[test]
+    fn apply_batch_matches_oracle() {
+        let mut dc = DynamicCore::new(&examples::g1());
+        let changed = dc.apply_batch(&[
+            EdgeEdit::Insert(2, 5),
+            EdgeEdit::Delete(0, 5),
+            EdgeEdit::Insert(2, 5), // duplicate: no-op
+            EdgeEdit::Insert(1, 1), // self-loop: no-op
+        ]);
+        assert_eq!(changed, 2);
+        check(&dc, "after batch");
+    }
+
+    #[test]
+    fn structural_edits_plus_recompute_match_incremental() {
+        let g = examples::g1();
+        let mut inc = DynamicCore::new(&g);
+        let mut rec = DynamicCore::new(&g);
+        let edits = [
+            EdgeEdit::Insert(2, 5),
+            EdgeEdit::Insert(0, 1),
+            EdgeEdit::Delete(3, 4),
+        ];
+        inc.apply_batch(&edits);
+        for e in edits {
+            let changed = match e {
+                EdgeEdit::Insert(u, v) => rec.insert_edge_structural(u, v),
+                EdgeEdit::Delete(u, v) => rec.delete_edge_structural(u, v),
+            };
+            assert!(changed);
+        }
+        rec.recompute_with(&crate::core::bz::Bz, 1);
+        assert_eq!(inc.coreness(), rec.coreness());
+        check(&inc, "incremental");
+        check(&rec, "recomputed");
+    }
+
+    #[test]
+    fn ensure_vertex_grows_with_zero_core() {
+        let mut dc = DynamicCore::with_vertices(2);
+        dc.ensure_vertex(5);
+        assert_eq!(dc.num_vertices(), 6);
+        assert_eq!(dc.coreness()[5], 0);
+        assert_eq!(dc.num_edges(), 0);
+        dc.insert_edge(0, 5);
+        check(&dc, "edge to grown vertex");
+        assert_eq!(dc.num_edges(), 1);
+        // idempotent / non-shrinking
+        dc.ensure_vertex(3);
+        assert_eq!(dc.num_vertices(), 6);
     }
 
     #[test]

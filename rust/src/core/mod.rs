@@ -22,5 +22,5 @@ pub mod traits;
 pub mod verify;
 
 pub use hybrid::Hybrid;
-pub use maintenance::DynamicCore;
+pub use maintenance::{DynamicCore, EdgeEdit};
 pub use traits::{DecompositionResult, Decomposer, Paradigm};

@@ -9,6 +9,10 @@
 //!   of the paper ([`core`]), a vertex-centric framework baseline ([`vc`]),
 //!   the job scheduler ([`coordinator`]), and the benchmark harness
 //!   ([`bench`]) that regenerates every table and figure.
+//! * **Layer 3.5 ([`service`])** — the serving layer: epoch-versioned
+//!   core indices with non-blocking concurrent reads, a coalescing
+//!   batched-update pipeline with an incremental-vs-recompute crossover,
+//!   and a line-protocol TCP server (`pico serve` / `pico query`).
 //! * **Layer 2 (build-time JAX)** — vectorised peel / h-index step
 //!   functions, AOT-lowered to HLO text and executed from [`runtime`] via
 //!   the PJRT C API.
@@ -36,5 +40,6 @@ pub mod core;
 pub mod engine;
 pub mod graph;
 pub mod runtime;
+pub mod service;
 pub mod util;
 pub mod vc;

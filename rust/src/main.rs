@@ -15,13 +15,16 @@ fn main() {
 
 fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["metrics", "no-validate", "help"])?;
+    let args = Args::parse(&raw, &["metrics", "no-validate", "help", "json"])?;
 
     let cfg = Config::load(args.get("config").map(std::path::Path::new))?;
 
     match args.command.as_str() {
         "run" => commands::cmd_run(&args, &cfg),
-        "suite" => commands::cmd_suite(&args, &cfg),
+        // `bench` is an alias: the suite runner is the in-CLI benchmark
+        "suite" | "bench" => commands::cmd_suite(&args, &cfg),
+        "serve" => commands::cmd_serve(&args, &cfg),
+        "query" => commands::cmd_query(&args, &cfg),
         "stats" => commands::cmd_stats(&args, &cfg),
         "analyze" => commands::cmd_analyze(&args, &cfg),
         "doctor" => commands::cmd_doctor(&args, &cfg),

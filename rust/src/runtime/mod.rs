@@ -11,13 +11,24 @@
 //!   lineage): [`vec_engine::VecPeel`] and [`vec_engine::VecHindex`],
 //!   both [`crate::core::Decomposer`]s, proving the three layers compose.
 
+//! The PJRT-backed pieces ([`client`], [`worker`], [`vec_engine`]) need the
+//! `xla` crate, which the offline build environment does not carry; they are
+//! gated behind the `xla` cargo feature. [`artifacts`] and [`buckets`]
+//! (manifest parsing, shape selection, dense padding) are pure Rust and stay
+//! available unconditionally so their error paths remain testable.
+
 pub mod artifacts;
 pub mod buckets;
+#[cfg(feature = "xla")]
 pub mod client;
+#[cfg(feature = "xla")]
 pub mod vec_engine;
+#[cfg(feature = "xla")]
 pub mod worker;
 
 pub use artifacts::ArtifactStore;
 pub use buckets::{select_bucket, Bucket, PaddedGraph};
+#[cfg(feature = "xla")]
 pub use vec_engine::{default_worker, VecHindex, VecPeel};
+#[cfg(feature = "xla")]
 pub use worker::XlaWorker;

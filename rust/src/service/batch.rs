@@ -1,0 +1,327 @@
+//! The batched update pipeline: coalesce queued edits, apply them to a
+//! [`CoreIndex`], and pick incremental maintenance vs full recompute.
+//!
+//! **Coalescing.** Edits are keyed by their canonical endpoint pair; an
+//! edge's final membership after a batch equals the *last* edit's target
+//! state (Insert ⇒ present, Delete ⇒ absent), so last-wins coalescing is
+//! exact: an insert+delete pair on the same edge collapses to the delete,
+//! duplicate inserts collapse to one, and intermediate flip-flops vanish.
+//! Self-loop edits are dropped outright (simple graphs only).
+//!
+//! **Crossover.** Incremental maintenance pays a subcore-cascade per edit;
+//! a full recompute pays one `Decomposer` run regardless of batch size.
+//! The incremental path wins for small batches and loses once the batch
+//! is a few percent of |E| — the same shape as the paper's Table VII
+//! peel-vs-index2core crossover, and like it, host-dependent. The default
+//! [`BatchConfig::recompute_fraction`] comes from
+//! `benches/serve_throughput.rs` (run it to recalibrate on a new host;
+//! ROADMAP tracks the tuning follow-up). The recompute path itself picks
+//! PeelOne/HistoCore through [`Hybrid`].
+
+use super::index::{CoreIndex, CoreSnapshot};
+use crate::core::maintenance::EdgeEdit;
+use crate::core::traits::Decomposer;
+use crate::core::Hybrid;
+use crate::util::timer::Timer;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Tuning for the batch pipeline.
+#[derive(Clone, Debug)]
+pub struct BatchConfig {
+    /// Fall back to full recompute when the coalesced batch exceeds this
+    /// fraction of the current edge count. Calibrated by
+    /// `benches/serve_throughput.rs` on this testbed.
+    pub recompute_fraction: f64,
+    /// Floor for the recompute trigger, so tiny graphs / tiny batches
+    /// always take the incremental path.
+    pub min_recompute_edits: usize,
+    /// SPMD threads for the recompute decomposer.
+    pub threads: usize,
+}
+
+impl Default for BatchConfig {
+    fn default() -> Self {
+        Self {
+            recompute_fraction: 0.02,
+            min_recompute_edits: 64,
+            threads: crate::util::default_threads(),
+        }
+    }
+}
+
+impl BatchConfig {
+    /// Coalesced-batch size at which recompute takes over, for a graph
+    /// with `num_edges` edges.
+    pub fn recompute_threshold(&self, num_edges: u64) -> usize {
+        let frac = (self.recompute_fraction * num_edges as f64).ceil() as usize;
+        frac.max(self.min_recompute_edits)
+    }
+}
+
+/// What one applied batch did.
+#[derive(Clone, Debug)]
+pub struct BatchOutcome {
+    /// Snapshot published by this batch.
+    pub snapshot: Arc<CoreSnapshot>,
+    /// Edits handed in (pre-coalescing).
+    pub submitted: usize,
+    /// Edits applied after coalescing.
+    pub applied: usize,
+    /// Edits removed by coalescing (duplicates, cancelling pairs, loops).
+    pub coalesced: usize,
+    /// Applied edits that actually changed the edge set.
+    pub changed: usize,
+    /// Whether the full-recompute fallback ran instead of per-edit
+    /// maintenance.
+    pub recomputed: bool,
+    pub elapsed: Duration,
+}
+
+impl BatchOutcome {
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed.as_secs_f64() * 1e3
+    }
+}
+
+/// Last-wins coalescing over canonical endpoint pairs; drops self-loops.
+/// Output preserves the order in which pairs first appeared.
+pub fn coalesce(edits: &[EdgeEdit]) -> Vec<EdgeEdit> {
+    let mut last: HashMap<(u32, u32), (usize, EdgeEdit)> = HashMap::with_capacity(edits.len());
+    for &e in edits {
+        let (u, v) = e.endpoints();
+        if u == v {
+            continue;
+        }
+        let next_slot = last.len();
+        last.entry((u, v))
+            .and_modify(|slot| slot.1 = e)
+            .or_insert((next_slot, e));
+    }
+    let mut out: Vec<(usize, EdgeEdit)> = last.into_values().collect();
+    out.sort_by_key(|&(slot, _)| slot);
+    out.into_iter().map(|(_, e)| e).collect()
+}
+
+/// Coalesce and apply `edits` to `index`, publishing one new epoch.
+/// Readers observe the pre-batch snapshot until the publish.
+pub fn apply_batch(index: &CoreIndex, edits: &[EdgeEdit], cfg: &BatchConfig) -> BatchOutcome {
+    let timer = Timer::start();
+    let batch = coalesce(edits);
+    let applied = batch.len();
+    let ((changed, recomputed), snapshot) = index.update(|dc| {
+        for e in &batch {
+            let (_, hi) = e.endpoints();
+            dc.ensure_vertex(hi);
+        }
+        let threshold = cfg.recompute_threshold(dc.num_edges());
+        if applied >= threshold {
+            // Structural edits + one from-scratch run of the fastest
+            // decomposer — the paper's full-recompute engines serving as
+            // the maintenance fallback.
+            let mut changed = 0usize;
+            for &e in &batch {
+                let did = match e {
+                    EdgeEdit::Insert(u, v) => dc.insert_edge_structural(u, v),
+                    EdgeEdit::Delete(u, v) => dc.delete_edge_structural(u, v),
+                };
+                if did {
+                    changed += 1;
+                }
+            }
+            dc.recompute_with(&Hybrid::default(), cfg.threads);
+            (changed, true)
+        } else {
+            (dc.apply_batch(&batch), false)
+        }
+    });
+    BatchOutcome {
+        snapshot,
+        submitted: edits.len(),
+        applied,
+        coalesced: edits.len() - applied,
+        changed,
+        recomputed,
+        elapsed: timer.elapsed(),
+    }
+}
+
+/// A thread-safe pending-edit queue in front of one [`CoreIndex`] —
+/// producers `submit`, a flusher (timer, size trigger, or the protocol's
+/// FLUSH verb) drains and applies.
+pub struct EditQueue {
+    index: Arc<CoreIndex>,
+    cfg: BatchConfig,
+    pending: Mutex<Vec<EdgeEdit>>,
+    /// Serialises whole flushes (drain *and* apply). Without it, a flush
+    /// arriving while another one is mid-apply would find the queue empty
+    /// and return the pre-batch snapshot — breaking the protocol's
+    /// read-your-writes promise ("my edits are visible after my FLUSH").
+    flush_lock: Mutex<()>,
+}
+
+impl EditQueue {
+    pub fn new(index: Arc<CoreIndex>, cfg: BatchConfig) -> Self {
+        Self {
+            index,
+            cfg,
+            pending: Mutex::new(Vec::new()),
+            flush_lock: Mutex::new(()),
+        }
+    }
+
+    pub fn index(&self) -> &Arc<CoreIndex> {
+        &self.index
+    }
+
+    pub fn config(&self) -> &BatchConfig {
+        &self.cfg
+    }
+
+    /// Enqueue one edit; returns the pending count after the push.
+    pub fn submit(&self, e: EdgeEdit) -> usize {
+        let mut p = self.pending.lock().unwrap();
+        p.push(e);
+        p.len()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// Drain the queue and apply it as one batch (publishes one epoch).
+    /// An empty queue publishes nothing and reports zeros. Concurrent
+    /// flushes serialise: a flush that finds the queue empty still waits
+    /// for any in-flight flush, so its returned snapshot includes every
+    /// edit submitted before this call.
+    pub fn flush(&self) -> BatchOutcome {
+        let _in_flight = self.flush_lock.lock().unwrap();
+        let edits: Vec<EdgeEdit> = std::mem::take(&mut *self.pending.lock().unwrap());
+        if edits.is_empty() {
+            return BatchOutcome {
+                snapshot: self.index.snapshot(),
+                submitted: 0,
+                applied: 0,
+                coalesced: 0,
+                changed: 0,
+                recomputed: false,
+                elapsed: Duration::ZERO,
+            };
+        }
+        apply_batch(&self.index, &edits, &self.cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::examples;
+
+    #[test]
+    fn coalesce_is_last_wins_per_pair() {
+        let edits = [
+            EdgeEdit::Insert(1, 2),
+            EdgeEdit::Insert(3, 4),
+            EdgeEdit::Delete(2, 1), // same pair as (1,2), reversed: wins
+            EdgeEdit::Insert(5, 5), // self-loop dropped
+            EdgeEdit::Insert(3, 4), // duplicate collapses
+        ];
+        let c = coalesce(&edits);
+        assert_eq!(c, vec![EdgeEdit::Delete(2, 1), EdgeEdit::Insert(3, 4)]);
+    }
+
+    #[test]
+    fn coalesce_empty_and_loops_only() {
+        assert!(coalesce(&[]).is_empty());
+        assert!(coalesce(&[EdgeEdit::Insert(7, 7)]).is_empty());
+    }
+
+    #[test]
+    fn incremental_batch_matches_oracle() {
+        let idx = CoreIndex::new("g1", &examples::g1());
+        let out = apply_batch(
+            &idx,
+            &[
+                EdgeEdit::Insert(2, 5),
+                EdgeEdit::Delete(0, 5),
+                EdgeEdit::Insert(0, 5), // cancels the delete -> no-op insert
+            ],
+            &BatchConfig::default(),
+        );
+        assert!(!out.recomputed);
+        assert_eq!(out.submitted, 3);
+        assert_eq!(out.applied, 2);
+        assert_eq!(out.coalesced, 1);
+        assert_eq!(out.changed, 1); // (0,5) already present
+        assert_eq!(out.snapshot.epoch, 1);
+        assert_eq!(out.snapshot.core, bz_coreness(&idx.graph()));
+    }
+
+    #[test]
+    fn big_batch_takes_recompute_path_and_matches_oracle() {
+        let idx = CoreIndex::new("g1", &examples::g1());
+        let cfg = BatchConfig {
+            recompute_fraction: 0.01,
+            min_recompute_edits: 2,
+            threads: 1,
+        };
+        let out = apply_batch(
+            &idx,
+            &[
+                EdgeEdit::Insert(2, 5),
+                EdgeEdit::Insert(0, 1),
+                EdgeEdit::Delete(3, 4),
+                EdgeEdit::Insert(0, 2),
+            ],
+            &cfg,
+        );
+        assert!(out.recomputed);
+        assert_eq!(out.changed, 4);
+        assert_eq!(out.snapshot.core, bz_coreness(&idx.graph()));
+    }
+
+    #[test]
+    fn batch_grows_vertex_set() {
+        let idx = CoreIndex::new("g1", &examples::g1());
+        let out = apply_batch(
+            &idx,
+            &[EdgeEdit::Insert(5, 9)],
+            &BatchConfig::default(),
+        );
+        assert_eq!(out.snapshot.num_vertices(), 10);
+        assert_eq!(out.snapshot.core[9], 1);
+        assert_eq!(out.snapshot.core, bz_coreness(&idx.graph()));
+    }
+
+    #[test]
+    fn queue_accumulates_and_flushes_once() {
+        let idx = Arc::new(CoreIndex::new("g1", &examples::g1()));
+        let q = EditQueue::new(idx.clone(), BatchConfig::default());
+        assert_eq!(q.submit(EdgeEdit::Insert(2, 5)), 1);
+        assert_eq!(q.submit(EdgeEdit::Insert(2, 5)), 2);
+        assert_eq!(q.pending(), 2);
+        let out = q.flush();
+        assert_eq!(out.submitted, 2);
+        assert_eq!(out.applied, 1);
+        assert_eq!(q.pending(), 0);
+        assert_eq!(idx.epoch(), 1);
+        // empty flush publishes nothing
+        let out2 = q.flush();
+        assert_eq!(out2.submitted, 0);
+        assert_eq!(out2.snapshot.epoch, 1);
+        assert_eq!(idx.epoch(), 1);
+    }
+
+    #[test]
+    fn threshold_floor_respected() {
+        let cfg = BatchConfig {
+            recompute_fraction: 0.5,
+            min_recompute_edits: 10,
+            threads: 1,
+        };
+        assert_eq!(cfg.recompute_threshold(4), 10);
+        assert_eq!(cfg.recompute_threshold(1000), 500);
+    }
+}

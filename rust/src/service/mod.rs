@@ -1,0 +1,30 @@
+//! Layer 3.5 — the serving layer: a long-running, concurrent
+//! query/update surface over maintained k-core indices.
+//!
+//! The paper's engines answer "decompose this graph once"; a production
+//! deployment answers "what is v's coreness *right now*" while the graph
+//! keeps changing. This subsystem provides that:
+//!
+//! * [`index`] — [`index::CoreIndex`]: epoch-versioned snapshots over
+//!   [`crate::core::DynamicCore`]; readers never block on writers.
+//! * [`batch`] — the update pipeline: last-wins edit coalescing and the
+//!   incremental-maintenance vs full-recompute crossover (the serving
+//!   analog of the paper's Peel vs Index2core crossover, Table VII).
+//! * [`queries`] — the read API: coreness, k-core membership,
+//!   degeneracy, core histograms, densest-core extraction.
+//! * [`server`] — a line-protocol TCP server ([`server::serve`]) and the
+//!   multi-graph [`server::CoreService`] behind `pico serve`.
+//!
+//! Throughput/latency characteristics are measured by
+//! `benches/serve_throughput.rs`; the crossover default in
+//! [`batch::BatchConfig`] comes from that bench.
+
+pub mod batch;
+pub mod index;
+pub mod queries;
+pub mod server;
+
+pub use batch::{apply_batch, coalesce, BatchConfig, BatchOutcome, EditQueue};
+pub use index::{CoreIndex, CoreSnapshot, CoreStore};
+pub use queries::{densest_core, DensestCore};
+pub use server::{serve, CoreService, ServerHandle, Session};

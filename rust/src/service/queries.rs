@@ -1,0 +1,172 @@
+//! The read API over published snapshots — the §I application queries
+//! (engagement cohorts, degeneracy ordering, dense-community location)
+//! served concurrently with updates.
+//!
+//! Everything here except [`densest_core`] runs against one immutable
+//! [`CoreSnapshot`] and therefore never blocks on writers. Densest-core
+//! extraction needs the adjacency; it takes a consistent (snapshot,
+//! graph) pair from the index and reuses [`CoreHierarchy`].
+
+use super::index::{CoreIndex, CoreSnapshot};
+use crate::analysis::CoreHierarchy;
+use crate::graph::VertexId;
+
+impl CoreSnapshot {
+    /// Coreness of `v`; `None` for out-of-range ids.
+    pub fn coreness(&self, v: VertexId) -> Option<u32> {
+        self.core.get(v as usize).copied()
+    }
+
+    /// The graph's degeneracy (max coreness) at this epoch.
+    pub fn degeneracy(&self) -> u32 {
+        self.k_max
+    }
+
+    /// Vertices of the k-core (coreness >= k), ascending.
+    pub fn kcore_members(&self, k: u32) -> Vec<VertexId> {
+        (0..self.core.len() as VertexId)
+            .filter(|&v| self.core[v as usize] >= k)
+            .collect()
+    }
+
+    /// |k-core| without materialising the members.
+    pub fn kcore_size(&self, k: u32) -> usize {
+        self.core.iter().filter(|&&c| c >= k).count()
+    }
+
+    /// Core-number histogram: `hist[k]` = vertices with coreness exactly
+    /// k, for k in `0..=k_max`.
+    pub fn histogram(&self) -> Vec<u64> {
+        let mut hist = vec![0u64; self.k_max as usize + 1];
+        for &c in &self.core {
+            hist[c as usize] += 1;
+        }
+        hist
+    }
+}
+
+/// The densest k-core of a graph (max edges-per-vertex over all k).
+#[derive(Clone, Debug)]
+pub struct DensestCore {
+    /// Epoch the extraction ran against.
+    pub epoch: u64,
+    pub k: u32,
+    pub vertices: usize,
+    pub edges: u64,
+    /// |E| / |V| of the extracted core (0 for the empty graph).
+    pub density: f64,
+    pub members: Vec<VertexId>,
+}
+
+/// Extract the densest core: scan k = 1..=k_max, extracting each k-core
+/// subgraph (via [`CoreHierarchy`]) and keeping the max-density one.
+/// Serialises with writers (needs the adjacency); the scan is
+/// O(k_max · (|V| + |E|)).
+pub fn densest_core(index: &CoreIndex) -> DensestCore {
+    let (snap, g) = index.consistent_view();
+    let h = CoreHierarchy::from_coreness(snap.core.clone());
+    // base case (k = 0): the whole graph, members listed so the fields
+    // stay mutually consistent even when no k-core beats it
+    let mut best = DensestCore {
+        epoch: snap.epoch,
+        k: 0,
+        vertices: g.num_vertices(),
+        edges: g.num_edges(),
+        density: if g.num_vertices() == 0 {
+            0.0
+        } else {
+            g.num_edges() as f64 / g.num_vertices() as f64
+        },
+        members: (0..g.num_vertices() as VertexId).collect(),
+    };
+    for k in 1..=snap.k_max {
+        let (sub, members) = h.extract_k_core(&g, k);
+        if sub.num_vertices() == 0 {
+            continue;
+        }
+        // ties promote the deeper core: a k-core and (k+1)-core can be
+        // the same vertex set, and the larger k is the sharper label
+        let density = sub.num_edges() as f64 / sub.num_vertices() as f64;
+        if density >= best.density {
+            best = DensestCore {
+                epoch: snap.epoch,
+                k,
+                vertices: sub.num_vertices(),
+                edges: sub.num_edges(),
+                density,
+                members,
+            };
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{examples, GraphBuilder};
+
+    #[test]
+    fn snapshot_queries_on_g1() {
+        let idx = CoreIndex::new("g1", &examples::g1());
+        let s = idx.snapshot();
+        assert_eq!(s.coreness(0), Some(1));
+        assert_eq!(s.coreness(3), Some(2));
+        assert_eq!(s.coreness(6), None);
+        assert_eq!(s.degeneracy(), 2);
+        assert_eq!(s.kcore_members(2), vec![2, 3, 4, 5]);
+        assert_eq!(s.kcore_size(2), 4);
+        assert_eq!(s.kcore_size(3), 0);
+        assert_eq!(s.histogram(), vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn densest_core_finds_planted_clique() {
+        // a K5 (density 2.0) hanging off a long path (density ~1)
+        let mut b = GraphBuilder::new(0);
+        for u in 0..5u32 {
+            for v in (u + 1)..5 {
+                b.add_edge(u, v);
+            }
+        }
+        for v in 5..30u32 {
+            b.add_edge(v - 1, v);
+        }
+        let g = b.build("k5+path");
+        let idx = CoreIndex::new("k5+path", &g);
+        let d = densest_core(&idx);
+        assert_eq!(d.k, 4);
+        assert_eq!(d.vertices, 5);
+        assert_eq!(d.edges, 10);
+        assert!((d.density - 2.0).abs() < 1e-9);
+        assert_eq!(d.members, vec![0, 1, 2, 3, 4]);
+        assert_eq!(d.epoch, 0);
+    }
+
+    #[test]
+    fn densest_core_tracks_updates() {
+        let idx = CoreIndex::new("g1", &examples::g1());
+        let before = densest_core(&idx);
+        assert_eq!(before.k, 2);
+        // close (2,5): {2,3,4,5} becomes K4 — density jumps to 1.5
+        idx.update(|dc| dc.insert_edge(2, 5));
+        let after = densest_core(&idx);
+        assert_eq!(after.k, 3);
+        assert_eq!(after.vertices, 4);
+        assert_eq!(after.edges, 6);
+        assert_eq!(after.epoch, 1);
+    }
+
+    #[test]
+    fn densest_core_of_empty_graph() {
+        let g = GraphBuilder::new(3).build("edgeless");
+        let idx = CoreIndex::new("edgeless", &g);
+        let d = densest_core(&idx);
+        assert_eq!(d.k, 0);
+        assert_eq!(d.vertices, 3);
+        assert_eq!(d.density, 0.0);
+        // the base case lists its members too (fields stay consistent)
+        assert_eq!(d.members, vec![0, 1, 2]);
+        assert_eq!(d.members.len(), d.vertices);
+    }
+}

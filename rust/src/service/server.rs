@@ -1,0 +1,644 @@
+//! The serving surface: a multi-graph [`CoreService`] and a line-protocol
+//! TCP front end (`pico serve` / `pico query`).
+//!
+//! # Line protocol
+//!
+//! One UTF-8 command per line, one reply line per command. Replies start
+//! with `OK` or `ERR`. Verbs are case-insensitive; vertex ids are decimal
+//! `u32`. A session has a *current graph* (the server's default graph
+//! until `USE` switches it).
+//!
+//! | command | reply |
+//! |---|---|
+//! | `PING` | `OK pong` |
+//! | `GRAPHS` | `OK n=<count> <name>...` |
+//! | `USE <name>` | `OK use=<name>` |
+//! | `OPEN <name> <dataset>` | `OK open=<name> vertices=<n> edges=<m>` — index a suite dataset or graph file |
+//! | `EPOCH` | `OK epoch=<e>` |
+//! | `CORENESS <v>` | `OK core=<c> epoch=<e>` |
+//! | `DEGENERACY` | `OK degeneracy=<k> epoch=<e>` |
+//! | `MEMBERS <k>` | `OK count=<n> epoch=<e> members=<v,v,...>` (capped) |
+//! | `HISTO` | `OK epoch=<e> histo=<k>:<count>,...` |
+//! | `DENSEST` | `OK k=<k> vertices=<n> edges=<m> density=<d> epoch=<e>` |
+//! | `INSERT <u> <v>` | `OK pending=<n>` — queued, not yet visible |
+//! | `DELETE <u> <v>` | `OK pending=<n>` |
+//! | `FLUSH` | `OK epoch=<e> submitted=<s> applied=<a> coalesced=<c> changed=<g> recomputed=<0|1> ms=<t>` |
+//! | `STATS` | `OK queries=<q> edits=<e> batches=<b> recomputes=<r> graphs=<g>` |
+//! | `QUIT` | `OK bye` (connection closes) |
+//!
+//! Edits become visible only at `FLUSH` (one published epoch per flush),
+//! so a client controls its own read-your-writes boundary. Readers on
+//! other connections keep being served the previous epoch while a flush
+//! is applying — the epoch-snapshot guarantee from [`super::index`].
+//!
+//! The TCP layer is thread-per-connection with the scheduler's
+//! containment idiom: a panicking handler poisons nothing — the
+//! connection reports `ERR internal` and closes, the server keeps
+//! accepting. Abuse bounds: [`MAX_LINE_BYTES`], [`MAX_VERTEX_ID`],
+//! [`MAX_PENDING_EDITS`], [`MAX_HOSTED_GRAPHS`].
+//!
+//! **Trust model:** the protocol is unauthenticated, and `OPEN` resolves
+//! suite names *and server-local file paths* (CLI parity). The default
+//! bind is loopback; expose a non-loopback `--addr` only to clients you
+//! would let run `pico` on the host.
+
+use super::batch::{BatchConfig, EditQueue};
+use super::index::CoreIndex;
+use super::queries::densest_core;
+use crate::core::maintenance::EdgeEdit;
+use crate::engine::metrics::{Metrics, MetricsSnapshot};
+use crate::graph::CsrGraph;
+use anyhow::{Context, Result};
+use std::collections::HashMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Metric slots shared by connection threads (round-robin assignment).
+const METRIC_SLOTS: usize = 8;
+
+/// Reply cap for `MEMBERS` (a serving system never streams a million ids
+/// down one reply line; `count=` always carries the true size).
+pub const MAX_REPLY_MEMBERS: usize = 64;
+
+/// Longest protocol line accepted from the wire. A client streaming
+/// bytes with no newline must not grow the server's line buffer without
+/// bound (same memory-exhaustion class as [`MAX_VERTEX_ID`]).
+pub const MAX_LINE_BYTES: usize = 4096;
+
+/// Most queued-but-unflushed edits per graph accepted from the wire. A
+/// client that streams INSERTs without ever flushing must not grow the
+/// pending queue without bound; past the cap, edits are rejected until a
+/// FLUSH drains it.
+pub const MAX_PENDING_EDITS: usize = 1 << 20;
+
+/// Most graphs one server will host (OPEN of an *existing* name always
+/// works — it is a reset). Keeps a chatty client from growing the hosted
+/// map, each entry of which owns a full index.
+pub const MAX_HOSTED_GRAPHS: usize = 16;
+
+/// Largest vertex id accepted from the wire. Edits grow the vertex set
+/// (`DynamicCore::ensure_vertex`), so without a bound one
+/// `INSERT 0 4294967295` would make the server allocate tens of GB and
+/// die. 2^24 vertices ≈ 200 MB of adjacency headroom — far above every
+/// suite graph; raise it here when hosting genuinely larger graphs.
+pub const MAX_VERTEX_ID: u32 = (1 << 24) - 1;
+
+/// One hosted graph: its index and edit queue, always installed (and
+/// replaced) together so a flush can never reach an orphaned index.
+#[derive(Clone)]
+struct Hosted {
+    index: Arc<CoreIndex>,
+    queue: Arc<EditQueue>,
+}
+
+/// The serving core: named indices, their edit queues, request counters.
+pub struct CoreService {
+    hosted: RwLock<HashMap<String, Hosted>>,
+    batch_cfg: BatchConfig,
+    metrics: Metrics,
+    default_graph: Mutex<String>,
+}
+
+impl CoreService {
+    pub fn new(batch_cfg: BatchConfig) -> Self {
+        Self {
+            hosted: RwLock::new(HashMap::new()),
+            batch_cfg,
+            metrics: Metrics::new(METRIC_SLOTS, true),
+            default_graph: Mutex::new(String::new()),
+        }
+    }
+
+    /// Host `g` under `name` (first hosted graph becomes the default).
+    /// Re-opening an existing name atomically replaces both the index
+    /// and its queue — any unflushed edits on the old queue are
+    /// discarded by design (OPEN is a reset).
+    pub fn open(&self, name: &str, g: &CsrGraph) -> Arc<CoreIndex> {
+        let idx = Arc::new(CoreIndex::new(name, g));
+        let q = Arc::new(EditQueue::new(idx.clone(), self.batch_cfg.clone()));
+        self.hosted.write().unwrap().insert(
+            name.to_string(),
+            Hosted {
+                index: idx.clone(),
+                queue: q,
+            },
+        );
+        let mut d = self.default_graph.lock().unwrap();
+        if d.is_empty() {
+            *d = name.to_string();
+        }
+        idx
+    }
+
+    pub fn default_graph(&self) -> String {
+        self.default_graph.lock().unwrap().clone()
+    }
+
+    pub fn index(&self, name: &str) -> Option<Arc<CoreIndex>> {
+        self.hosted.read().unwrap().get(name).map(|h| h.index.clone())
+    }
+
+    pub fn queue(&self, name: &str) -> Option<Arc<EditQueue>> {
+        self.hosted.read().unwrap().get(name).map(|h| h.queue.clone())
+    }
+
+    pub fn graph_names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.hosted.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn num_graphs(&self) -> usize {
+        self.hosted.read().unwrap().len()
+    }
+
+    /// Aggregated serve-path counters.
+    pub fn stats(&self) -> MetricsSnapshot {
+        self.metrics.snapshot()
+    }
+
+    /// Execute one protocol line for a session on `graph`; returns the
+    /// reply line (without newline). `slot` picks the metrics slot.
+    pub fn handle_command(&self, session: &mut Session, line: &str, slot: usize) -> String {
+        let view = self.metrics.view(slot % METRIC_SLOTS);
+        let mut parts = line.split_whitespace();
+        let Some(raw_verb) = parts.next() else {
+            return "ERR empty command".into();
+        };
+        let verb = raw_verb.to_ascii_uppercase();
+        let args: Vec<&str> = parts.collect();
+        match verb.as_str() {
+            "PING" => "OK pong".into(),
+            "GRAPHS" => {
+                let names = self.graph_names();
+                format!("OK n={} {}", names.len(), names.join(" "))
+            }
+            "USE" => match args.first() {
+                Some(&name) if self.index(name).is_some() => {
+                    session.graph = name.to_string();
+                    format!("OK use={name}")
+                }
+                Some(&name) => format!("ERR unknown graph '{name}'"),
+                None => "ERR usage: USE <name>".into(),
+            },
+            "OPEN" => {
+                let (Some(&name), Some(&dataset)) = (args.first(), args.get(1)) else {
+                    return "ERR usage: OPEN <name> <dataset>".into();
+                };
+                if self.index(name).is_none() && self.num_graphs() >= MAX_HOSTED_GRAPHS {
+                    return format!("ERR graph limit reached ({MAX_HOSTED_GRAPHS} hosted)");
+                }
+                match load_dataset(dataset) {
+                    Ok(g) => {
+                        let idx = self.open(name, &g);
+                        let s = idx.snapshot();
+                        session.graph = name.to_string();
+                        format!(
+                            "OK open={name} vertices={} edges={}",
+                            s.num_vertices(),
+                            s.num_edges
+                        )
+                    }
+                    Err(e) => format!("ERR {e:#}"),
+                }
+            }
+            "STATS" => {
+                let s = self.stats();
+                format!(
+                    "OK queries={} edits={} batches={} recomputes={} graphs={}",
+                    s.serve_queries,
+                    s.serve_edits,
+                    s.serve_batches,
+                    s.serve_recomputes,
+                    self.num_graphs()
+                )
+            }
+            "QUIT" => "OK bye".into(),
+            // everything below operates on the session's current graph
+            _ => {
+                let Some(idx) = self.index(&session.graph) else {
+                    return format!("ERR no graph selected (have: {})", self.graph_names().join(" "));
+                };
+                match verb.as_str() {
+                    "EPOCH" => {
+                        view.serve_queries(1);
+                        // the snapshot's epoch, not the writer counter:
+                        // the reply must name an epoch readers can get
+                        format!("OK epoch={}", idx.snapshot().epoch)
+                    }
+                    "CORENESS" => {
+                        view.serve_queries(1);
+                        let Some(Ok(v)) = args.first().map(|a| a.parse::<u32>()) else {
+                            return "ERR usage: CORENESS <v>".into();
+                        };
+                        let s = idx.snapshot();
+                        match s.coreness(v) {
+                            Some(c) => format!("OK core={c} epoch={}", s.epoch),
+                            None => format!("ERR vertex {v} out of range (|V|={})", s.num_vertices()),
+                        }
+                    }
+                    "DEGENERACY" => {
+                        view.serve_queries(1);
+                        let s = idx.snapshot();
+                        format!("OK degeneracy={} epoch={}", s.degeneracy(), s.epoch)
+                    }
+                    "MEMBERS" => {
+                        view.serve_queries(1);
+                        let Some(Ok(k)) = args.first().map(|a| a.parse::<u32>()) else {
+                            return "ERR usage: MEMBERS <k>".into();
+                        };
+                        let s = idx.snapshot();
+                        // count + capped listing without materialising the
+                        // full membership (|V|-sized per request otherwise)
+                        let count = s.kcore_size(k);
+                        let listed: Vec<String> = s
+                            .core
+                            .iter()
+                            .enumerate()
+                            .filter(|&(_, &c)| c >= k)
+                            .take(MAX_REPLY_MEMBERS)
+                            .map(|(v, _)| v.to_string())
+                            .collect();
+                        format!(
+                            "OK count={} epoch={} members={}",
+                            count,
+                            s.epoch,
+                            listed.join(",")
+                        )
+                    }
+                    "HISTO" => {
+                        view.serve_queries(1);
+                        let s = idx.snapshot();
+                        let cells: Vec<String> = s
+                            .histogram()
+                            .iter()
+                            .enumerate()
+                            .map(|(k, n)| format!("{k}:{n}"))
+                            .collect();
+                        format!("OK epoch={} histo={}", s.epoch, cells.join(","))
+                    }
+                    "DENSEST" => {
+                        view.serve_queries(1);
+                        let d = densest_core(&idx);
+                        format!(
+                            "OK k={} vertices={} edges={} density={:.4} epoch={}",
+                            d.k, d.vertices, d.edges, d.density, d.epoch
+                        )
+                    }
+                    "INSERT" | "DELETE" => {
+                        let (Some(Ok(u)), Some(Ok(v))) = (
+                            args.first().map(|a| a.parse::<u32>()),
+                            args.get(1).map(|a| a.parse::<u32>()),
+                        ) else {
+                            return format!("ERR usage: {verb} <u> <v>");
+                        };
+                        if u == v {
+                            return format!("ERR self-loop ({u},{u}) rejected");
+                        }
+                        if u > MAX_VERTEX_ID || v > MAX_VERTEX_ID {
+                            return format!(
+                                "ERR vertex id above limit {MAX_VERTEX_ID} (see server::MAX_VERTEX_ID)"
+                            );
+                        }
+                        let Some(q) = self.queue(&session.graph) else {
+                            return format!("ERR no edit queue for '{}'", session.graph);
+                        };
+                        if q.pending() >= MAX_PENDING_EDITS {
+                            return format!(
+                                "ERR edit queue full ({MAX_PENDING_EDITS} pending); FLUSH first"
+                            );
+                        }
+                        view.serve_edits(1);
+                        let edit = if verb == "INSERT" {
+                            EdgeEdit::Insert(u, v)
+                        } else {
+                            EdgeEdit::Delete(u, v)
+                        };
+                        format!("OK pending={}", q.submit(edit))
+                    }
+                    "FLUSH" => {
+                        let Some(q) = self.queue(&session.graph) else {
+                            return format!("ERR no edit queue for '{}'", session.graph);
+                        };
+                        let out = q.flush();
+                        view.serve_batches(1);
+                        if out.recomputed {
+                            view.serve_recomputes(1);
+                        }
+                        format!(
+                            "OK epoch={} submitted={} applied={} coalesced={} changed={} recomputed={} ms={:.3}",
+                            out.snapshot.epoch,
+                            out.submitted,
+                            out.applied,
+                            out.coalesced,
+                            out.changed,
+                            out.recomputed as u8,
+                            out.elapsed_ms()
+                        )
+                    }
+                    other => format!("ERR unknown command '{other}'"),
+                }
+            }
+        }
+    }
+}
+
+/// Per-connection state.
+#[derive(Clone, Debug)]
+pub struct Session {
+    /// Current graph name.
+    pub graph: String,
+}
+
+/// Resolve a dataset argument — the same suite-name-then-path rules as
+/// the CLI ([`crate::coordinator::DatasetSpec::resolve`]).
+fn load_dataset(name: &str) -> Result<Arc<CsrGraph>> {
+    crate::coordinator::DatasetSpec::resolve(name)?.load()
+}
+
+/// A running TCP server. Dropping the handle stops the accept loop.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop to exit.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until the accept loop exits (`stop()` from another thread,
+    /// or process teardown).
+    pub fn join(mut self) {
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// Bind `addr` and serve `service` until the handle is stopped.
+/// The accept loop runs on a background thread; connections get a thread
+/// each, wrapped in `catch_unwind` containment.
+pub fn serve(service: Arc<CoreService>, addr: &str) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr().context("reading bound address")?;
+    listener
+        .set_nonblocking(true)
+        .context("setting the listener non-blocking")?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = stop.clone();
+    let conn_counter = Arc::new(AtomicUsize::new(0));
+    let join = std::thread::Builder::new()
+        .name("pico-serve-accept".into())
+        .spawn(move || {
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _peer)) => {
+                        let service = service.clone();
+                        let slot = conn_counter.fetch_add(1, Ordering::Relaxed);
+                        let _ = std::thread::Builder::new()
+                            .name(format!("pico-serve-conn-{slot}"))
+                            .spawn(move || handle_connection(service, stream, slot));
+                    }
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                    Err(_) => {
+                        // transient accept error; keep serving
+                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    }
+                }
+            }
+        })
+        .context("spawning the accept thread")?;
+    Ok(ServerHandle {
+        addr: local,
+        stop,
+        join: Some(join),
+    })
+}
+
+fn handle_connection(service: Arc<CoreService>, stream: TcpStream, slot: usize) {
+    // the listener is non-blocking (stoppable accept loop); make sure the
+    // per-connection socket blocks — inheritance is platform-dependent
+    if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    let mut writer = match stream.try_clone() {
+        Ok(w) => w,
+        Err(_) => return,
+    };
+    let mut reader = BufReader::new(stream);
+    let mut session = Session {
+        graph: service.default_graph(),
+    };
+    loop {
+        let line = match read_line_capped(&mut reader, MAX_LINE_BYTES) {
+            Ok(Some(l)) => l,
+            Ok(None) => break, // EOF
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                let _ = writeln!(writer, "ERR line exceeds {MAX_LINE_BYTES} bytes");
+                break;
+            }
+            Err(_) => break,
+        };
+        if line.trim().is_empty() {
+            continue;
+        }
+        // containment: a panicking handler must not take the server down
+        let reply = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            service.handle_command(&mut session, &line, slot)
+        }))
+        .unwrap_or_else(|_| "ERR internal handler panic (contained)".into());
+        let quit = reply == "OK bye";
+        if writeln!(writer, "{reply}").and_then(|_| writer.flush()).is_err() {
+            break;
+        }
+        if quit {
+            break;
+        }
+    }
+}
+
+/// `read_line` with a byte cap: returns `Ok(None)` at EOF and
+/// `ErrorKind::InvalidData` once a line exceeds `max` bytes.
+fn read_line_capped(
+    reader: &mut BufReader<TcpStream>,
+    max: usize,
+) -> std::io::Result<Option<String>> {
+    let mut line: Vec<u8> = Vec::new();
+    loop {
+        let buf = reader.fill_buf()?;
+        if buf.is_empty() {
+            // EOF: hand back any trailing unterminated line
+            return Ok(if line.is_empty() {
+                None
+            } else {
+                Some(String::from_utf8_lossy(&line).into_owned())
+            });
+        }
+        let newline = buf.iter().position(|&b| b == b'\n');
+        let upto = newline.unwrap_or(buf.len());
+        if line.len() + upto > max {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                "protocol line too long",
+            ));
+        }
+        line.extend_from_slice(&buf[..upto]);
+        let consumed = if newline.is_some() { upto + 1 } else { upto };
+        reader.consume(consumed);
+        if newline.is_some() {
+            return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+
+    fn service_with_g1() -> (CoreService, Session) {
+        let svc = CoreService::new(BatchConfig {
+            threads: 1,
+            ..BatchConfig::default()
+        });
+        svc.open("g1", &examples::g1());
+        let session = Session {
+            graph: svc.default_graph(),
+        };
+        (svc, session)
+    }
+
+    #[test]
+    fn read_commands_round_trip() {
+        let (svc, mut s) = service_with_g1();
+        assert_eq!(svc.handle_command(&mut s, "PING", 0), "OK pong");
+        assert_eq!(svc.handle_command(&mut s, "GRAPHS", 0), "OK n=1 g1");
+        assert_eq!(svc.handle_command(&mut s, "EPOCH", 0), "OK epoch=0");
+        assert_eq!(svc.handle_command(&mut s, "coreness 3", 0), "OK core=2 epoch=0");
+        assert_eq!(
+            svc.handle_command(&mut s, "DEGENERACY", 0),
+            "OK degeneracy=2 epoch=0"
+        );
+        assert_eq!(
+            svc.handle_command(&mut s, "MEMBERS 2", 0),
+            "OK count=4 epoch=0 members=2,3,4,5"
+        );
+        assert_eq!(
+            svc.handle_command(&mut s, "HISTO", 0),
+            "OK epoch=0 histo=0:0,1:2,2:4"
+        );
+    }
+
+    #[test]
+    fn edit_flush_cycle_bumps_epoch() {
+        let (svc, mut s) = service_with_g1();
+        assert_eq!(svc.handle_command(&mut s, "INSERT 2 5", 0), "OK pending=1");
+        // queued, not visible yet
+        assert_eq!(svc.handle_command(&mut s, "coreness 2", 0), "OK core=2 epoch=0");
+        let flush = svc.handle_command(&mut s, "FLUSH", 0);
+        assert!(
+            flush.starts_with("OK epoch=1 submitted=1 applied=1 coalesced=0 changed=1 recomputed=0"),
+            "{flush}"
+        );
+        assert_eq!(svc.handle_command(&mut s, "coreness 2", 0), "OK core=3 epoch=1");
+        let stats = svc.handle_command(&mut s, "STATS", 0);
+        assert!(stats.contains("edits=1"), "{stats}");
+        assert!(stats.contains("batches=1"), "{stats}");
+    }
+
+    #[test]
+    fn error_paths_are_structured() {
+        let (svc, mut s) = service_with_g1();
+        assert!(svc.handle_command(&mut s, "CORENESS 99", 0).starts_with("ERR vertex 99"));
+        assert!(svc.handle_command(&mut s, "CORENESS", 0).starts_with("ERR usage"));
+        assert!(svc.handle_command(&mut s, "INSERT 3 3", 0).starts_with("ERR self-loop"));
+        // unbounded ids would let one command allocate gigabytes
+        assert!(svc
+            .handle_command(&mut s, "INSERT 0 4294967295", 0)
+            .starts_with("ERR vertex id above limit"));
+        assert!(svc
+            .handle_command(&mut s, &format!("DELETE 0 {}", MAX_VERTEX_ID + 1), 0)
+            .starts_with("ERR vertex id above limit"));
+        assert!(svc.handle_command(&mut s, "NOPE", 0).starts_with("ERR unknown command"));
+        assert!(svc.handle_command(&mut s, "USE ghost", 0).starts_with("ERR unknown graph"));
+        assert!(svc.handle_command(&mut s, "", 0).starts_with("ERR empty"));
+    }
+
+    #[test]
+    fn multi_graph_sessions_are_independent() {
+        let (svc, mut s) = service_with_g1();
+        let open = svc.handle_command(&mut s, "OPEN k5 g1", 0);
+        // 'g1' resolves through the suite; the new index is independent
+        assert_eq!(open, "OK open=k5 vertices=6 edges=7");
+        assert_eq!(s.graph, "k5");
+        svc.handle_command(&mut s, "INSERT 2 5", 0);
+        svc.handle_command(&mut s, "FLUSH", 0);
+        assert_eq!(svc.handle_command(&mut s, "EPOCH", 0), "OK epoch=1");
+        // the original graph is untouched
+        assert_eq!(svc.handle_command(&mut s, "USE g1", 0), "OK use=g1");
+        assert_eq!(svc.handle_command(&mut s, "EPOCH", 0), "OK epoch=0");
+        assert_eq!(svc.handle_command(&mut s, "GRAPHS", 0), "OK n=2 g1 k5");
+    }
+
+    #[test]
+    fn members_reply_is_capped() {
+        let svc = CoreService::new(BatchConfig::default());
+        svc.open("star", &examples::star(200));
+        let mut s = Session { graph: "star".into() };
+        let reply = svc.handle_command(&mut s, "MEMBERS 1", 0);
+        assert!(reply.starts_with("OK count=201 "), "{reply}");
+        let members = reply.split("members=").nth(1).unwrap();
+        assert_eq!(members.split(',').count(), MAX_REPLY_MEMBERS);
+    }
+
+    #[test]
+    fn tcp_round_trip() {
+        let svc = Arc::new(CoreService::new(BatchConfig {
+            threads: 1,
+            ..BatchConfig::default()
+        }));
+        svc.open("g1", &examples::g1());
+        let handle = serve(svc, "127.0.0.1:0").expect("bind");
+        let addr = handle.addr();
+
+        let stream = TcpStream::connect(addr).expect("connect");
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        let mut send = |cmd: &str, r: &mut BufReader<TcpStream>| -> String {
+            writeln!(w, "{cmd}").unwrap();
+            w.flush().unwrap();
+            let mut line = String::new();
+            r.read_line(&mut line).unwrap();
+            line.trim_end().to_string()
+        };
+        assert_eq!(send("PING", &mut r), "OK pong");
+        assert_eq!(send("CORENESS 4", &mut r), "OK core=2 epoch=0");
+        assert_eq!(send("INSERT 2 5", &mut r), "OK pending=1");
+        assert!(send("FLUSH", &mut r).starts_with("OK epoch=1"));
+        assert_eq!(send("CORENESS 4", &mut r), "OK core=3 epoch=1");
+        assert_eq!(send("QUIT", &mut r), "OK bye");
+        handle.stop();
+    }
+}

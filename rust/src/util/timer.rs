@@ -77,6 +77,18 @@ impl Samples {
             .map(|d| d.as_secs_f64() * 1e3)
             .unwrap_or(f64::NAN)
     }
+
+    /// Nearest-rank percentile in ms (`p` in 0..=100) — the serving
+    /// bench reports p50/p99 batched-update latency.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.runs.is_empty() {
+            return f64::NAN;
+        }
+        let mut v: Vec<f64> = self.runs.iter().map(|d| d.as_secs_f64() * 1e3).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((p / 100.0) * (v.len() - 1) as f64).round() as usize;
+        v[idx.min(v.len() - 1)]
+    }
 }
 
 #[cfg(test)]
@@ -105,5 +117,18 @@ mod tests {
         let s = Samples::default();
         assert!(s.min_ms().is_nan());
         assert!(s.mean_ms().is_nan());
+        assert!(s.percentile_ms(50.0).is_nan());
+    }
+
+    #[test]
+    fn percentiles_bracket_the_distribution() {
+        let mut s = Samples::default();
+        for ms in [1u64, 2, 3, 4, 5, 6, 7, 8, 9, 100] {
+            s.push(Duration::from_millis(ms));
+        }
+        assert!((s.percentile_ms(0.0) - 1.0).abs() < 0.5);
+        assert!((s.percentile_ms(50.0) - 5.0).abs() < 1.5);
+        assert!((s.percentile_ms(100.0) - 100.0).abs() < 0.5);
+        assert!(s.percentile_ms(99.0) >= s.percentile_ms(50.0));
     }
 }

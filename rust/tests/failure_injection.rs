@@ -31,6 +31,7 @@ fn malformed_manifest_is_rejected() {
     assert!(ArtifactStore::open(&dir).is_err());
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn truncated_hlo_artifact_fails_to_parse() {
     let dir = temp_dir("trunc_hlo");
@@ -50,7 +51,7 @@ fn missing_artifact_file_reports_path() {
     std::fs::write(dir.join("manifest.txt"), "8 4\n").unwrap();
     let store = ArtifactStore::open(&dir).unwrap();
     assert!(store
-        .load_computation(Kind::Hindex, Bucket { n: 8, d: 4 })
+        .load_hlo_text(Kind::Hindex, Bucket { n: 8, d: 4 })
         .is_err());
 }
 
@@ -68,8 +69,13 @@ fn malformed_graph_files_are_rejected() {
     assert!(io::load(&p).is_err());
 }
 
+#[cfg(feature = "xla")]
 #[test]
 fn scheduler_contains_panicking_algorithm() {
+    if pico::runtime::default_worker().is_err() {
+        eprintln!("SKIP scheduler_contains_panicking_algorithm: XLA artifacts not built");
+        return;
+    }
     // VecPeel's Decomposer impl panics on bucket overflow when invoked
     // through the non-fallible trait path; the scheduler must contain it.
     let big_star = pico::graph::gen::star_burst(1, 300, 0, 1); // d_max 300 > 64
@@ -101,4 +107,22 @@ fn config_failures_are_structured() {
     let kv = KvFile::parse("threads = NaN").unwrap();
     let mut cfg = pico::config::Config::default();
     assert!(cfg.apply_file(&kv).is_err());
+}
+
+#[cfg(not(feature = "xla"))]
+#[test]
+fn xla_algorithms_rejected_without_feature() {
+    // Built without the XLA backend, the registry rejects the vectorised
+    // engines with a pointer to the feature flag instead of panicking.
+    let jobs = vec![
+        Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "VecPeel(XLA)").with_threads(1),
+        Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "PO-dyn").with_threads(1),
+    ];
+    let results = Scheduler::new(SchedulerConfig::default()).run(jobs);
+    assert!(
+        matches!(results[0].outcome, JobOutcome::Rejected(ref m) if m.contains("xla")),
+        "expected rejection naming the feature, got {:?}",
+        results[0].outcome
+    );
+    assert_eq!(results[1].outcome, JobOutcome::Ok);
 }

@@ -1,6 +1,12 @@
 //! XLA runtime integration: the vectorised engines against the oracle on
 //! the XLA-tier suite, bucket-selection edge cases, and scheduler-driven
 //! execution of the XLA path.
+//!
+//! The whole file is gated on the `xla` cargo feature (the backend links
+//! the `xla` crate); with the feature on but no AOT artifacts on disk,
+//! each test skips with a message rather than failing.
+
+#![cfg(feature = "xla")]
 
 use pico::bench::suite::{suite, Tier};
 use pico::coordinator::{DatasetSpec, Job, Scheduler, SchedulerConfig};
@@ -9,9 +15,21 @@ use pico::graph::examples;
 use pico::runtime::{default_worker, select_bucket, Bucket, VecHindex, VecPeel};
 use std::sync::Arc;
 
+/// Skip (not fail) when AOT artifacts have not been built.
+fn artifacts_missing(test: &str) -> bool {
+    if default_worker().is_err() {
+        eprintln!("SKIP {test}: XLA artifacts not built (run `make artifacts`)");
+        return true;
+    }
+    false
+}
+
 #[test]
 fn vec_engines_match_oracle_on_xla_tier() {
-    let peel = VecPeel::open_default().expect("artifacts built? run `make artifacts`");
+    if artifacts_missing("vec_engines_match_oracle_on_xla_tier") {
+        return;
+    }
+    let peel = VecPeel::open_default().unwrap();
     let hindex = VecHindex::open_default().unwrap();
     for entry in suite(Tier::Xla) {
         let g = entry.build();
@@ -25,6 +43,9 @@ fn vec_engines_match_oracle_on_xla_tier() {
 
 #[test]
 fn xla_engines_via_scheduler() {
+    if artifacts_missing("xla_engines_via_scheduler") {
+        return;
+    }
     let jobs = vec![
         Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "VecPeel(XLA)").with_threads(1),
         Job::new(DatasetSpec::InMemory(Arc::new(examples::g1())), "VecHindex(XLA)").with_threads(1),
@@ -57,8 +78,11 @@ fn bucket_selection_boundaries() {
 
 #[test]
 fn worker_shared_across_engines() {
+    if artifacts_missing("worker_shared_across_engines") {
+        return;
+    }
     // both engines over one worker (one PJRT client), interleaved calls
-    let worker = default_worker().expect("artifacts");
+    let worker = default_worker().unwrap();
     let peel = VecPeel::new(worker.clone());
     let hindex = VecHindex::new(worker);
     let g = examples::complete(6);
