@@ -1,18 +1,23 @@
-//! End-to-end serving session — the Layer 3.5 walkthrough:
-//! start `pico serve` in-process, stream edits over TCP, and query
-//! coreness concurrently while batches land.
+//! End-to-end serving session — the Layer 3.5/3.6 walkthrough:
+//! start `pico serve` in-process, stream edits over TCP, query coreness
+//! concurrently while batches land, then exercise the sharded backend and
+//! ship a binary snapshot to a replica.
 //!
 //! The same flow over two shells:
 //!
 //! ```text
-//! $ pico serve --dataset social-ba --addr 127.0.0.1:7571
-//! $ pico query --cmd 'CORENESS 0; INSERT 17 99; FLUSH; CORENESS 17; DENSEST'
+//! $ pico serve --dataset social-ba --addr 127.0.0.1:7571 --shards 4
+//! $ pico query --cmd 'CORENESS 0; INSERT 17 99; FLUSH; CORENESS 17; SHARDS'
+//! $ pico query --binary --cmd 'SNAPSHOT 0' --snapshot-file /tmp/shard0.snap
+//! $ pico query --binary --cmd 'RESTORE replica' --snapshot-file /tmp/shard0.snap
 //! ```
 //!
 //!     cargo run --release --example serve_session
 
 use pico::graph::gen;
+use pico::service::server::{read_frame, write_frame, MAX_FRAME_BYTES};
 use pico::service::{serve, BatchConfig, CoreService};
+use pico::shard::PartitionStrategy;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
@@ -27,12 +32,19 @@ fn send(w: &mut TcpStream, r: &mut BufReader<TcpStream>, cmd: &str) -> String {
     reply
 }
 
+/// One length-prefixed frame out, one back (the server's own framing
+/// helpers double as the client side).
+fn send_frame(w: &mut TcpStream, r: &mut BufReader<TcpStream>, body: &[u8]) -> Vec<u8> {
+    write_frame(w, body).unwrap();
+    read_frame(r, MAX_FRAME_BYTES).unwrap().expect("reply frame")
+}
+
 fn main() -> anyhow::Result<()> {
     // 1. Host a social-network graph (port 0: pick any free port).
     let g = gen::barabasi_albert(10_000, 6, 2026);
     let service = Arc::new(CoreService::new(BatchConfig::default()));
     service.open("social", &g);
-    let handle = serve(service, "127.0.0.1:0")?;
+    let handle = serve(service.clone(), "127.0.0.1:0")?;
     println!("serving 'social' on {}\n", handle.addr());
 
     // 2. A writer connection streams edits; they become visible at FLUSH.
@@ -78,6 +90,42 @@ fn main() -> anyhow::Result<()> {
     send(&mut writer, &mut wreader, "FLUSH");
     send(&mut writer, &mut wreader, "EPOCH");
     send(&mut writer, &mut wreader, "QUIT");
+
+    // 4. The sharded backend: same graph partitioned across 4 shards —
+    //    identical answers, merged from per-shard indices at each flush.
+    service.open_sharded("social-sharded", &g, 4, PartitionStrategy::Hash);
+    let ss = TcpStream::connect(handle.addr())?;
+    let mut sw = ss.try_clone()?;
+    let mut sreader = BufReader::new(ss);
+    println!("\nsharded session (same graph, 4 shards):");
+    send(&mut sw, &mut sreader, "USE social-sharded");
+    send(&mut sw, &mut sreader, "SHARDS");
+    send(&mut sw, &mut sreader, "CORENESS 3");
+    send(&mut sw, &mut sreader, "INSERT 3 9006");
+    send(&mut sw, &mut sreader, "FLUSH"); // routes + boundary-refines + merges
+
+    // 5. Snapshot shipping over the binary protocol: upgrade with BINARY,
+    //    pull shard 0's index as one frame, and hydrate it as a *shard*
+    //    replica (the shard's local subgraph + coreness under local ids)
+    //    — no recomputation on the restore path. Shipping an unsharded
+    //    graph's SNAPSHOT the same way yields a full replica with
+    //    identical global answers.
+    send(&mut sw, &mut sreader, "BINARY");
+    let frame = send_frame(&mut sw, &mut sreader, b"SNAPSHOT 0");
+    let nl = frame.iter().position(|&b| b == b'\n').unwrap();
+    println!("  > SNAPSHOT 0         < {}", String::from_utf8_lossy(&frame[..nl]));
+    let snapshot_bytes = &frame[nl + 1..];
+    let mut restore = b"RESTORE social-replica\n".to_vec();
+    restore.extend_from_slice(snapshot_bytes);
+    let reply = send_frame(&mut sw, &mut sreader, &restore);
+    println!(
+        "  > RESTORE ({}B)   < {}",
+        restore.len(),
+        String::from_utf8_lossy(&reply)
+    );
+    let reply = send_frame(&mut sw, &mut sreader, b"GRAPHS");
+    println!("  > GRAPHS             < {}", String::from_utf8_lossy(&reply));
+    let _ = send_frame(&mut sw, &mut sreader, b"QUIT");
 
     handle.stop();
     println!("\ndone — see rust/src/service/server.rs for the full protocol");

@@ -174,10 +174,26 @@ fn bench_crossover(g: &CsrGraph) {
         );
     }
     match crossover {
-        Some(f) => println!(
-            "\nmeasured crossover ≈ {:.2}% of |E| -> suggested BatchConfig.recompute_fraction = {f}",
-            f * 100.0
-        ),
+        Some(f) => {
+            // /etc/hostname first: bash keeps HOSTNAME unexported, so the
+            // env var is absent from most non-interactive runs
+            let host = std::fs::read_to_string("/etc/hostname")
+                .ok()
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .or_else(|| std::env::var("HOSTNAME").ok())
+                .unwrap_or_else(|| "unknown-host".into());
+            println!(
+                "\nmeasured crossover ≈ {:.2}% of |E| -> suggested BatchConfig.recompute_fraction = {f}",
+                f * 100.0
+            );
+            println!(
+                "deploy without rebuilding: PICO_RECOMPUTE_FRACTION={f}\n\
+                 ROADMAP paste line: `recompute_fraction = {f} (measured on {host}, dataset {}, {} edges)`",
+                g.name,
+                fmt::commas(m)
+            );
+        }
         None => println!(
             "\nrecompute never won up to {:.0}% of |E| on this host; keep the incremental path",
             fractions.last().unwrap() * 100.0

@@ -1,0 +1,208 @@
+//! Sharded-serving benchmark: routed query throughput and merge overhead
+//! as the shard count scales 1 → 2 → 4 → 8.
+//!
+//! Three questions per shard count:
+//!
+//! 1. **Build** — what does partition + per-shard decomposition + the
+//!    initial boundary-refinement merge cost versus a single index?
+//! 2. **Queries** — routed point lookups (coreness via the owner shard)
+//!    and fan-out aggregates (histogram merged from per-shard partials),
+//!    in queries/sec.
+//! 3. **Updates** — per-flush latency for a mixed edit batch, split into
+//!    shard-apply time vs merge (refinement) time, with exchange rounds
+//!    and boundary-value refreshes — the price of exact merged answers.
+//!
+//!     cargo bench --bench shard_scaling
+//!     PICO_SUITE=small cargo bench --bench shard_scaling   # quicker
+//!
+//! Every configuration is oracle-checked against `bz_coreness` on the
+//! assembled graph before its numbers are printed.
+
+use pico::bench::suite::Tier;
+use pico::core::bz::bz_coreness;
+use pico::core::maintenance::EdgeEdit;
+use pico::graph::{gen, CsrGraph};
+use pico::service::{BatchConfig, CoreIndex};
+use pico::shard::{PartitionStrategy, ShardedIndex};
+use pico::util::fmt;
+use pico::util::rng::Rng;
+use pico::util::timer::{Samples, Timer};
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const POINT_QUERIES: usize = 200_000;
+const HISTO_QUERIES: usize = 200;
+const FLUSHES: usize = 20;
+const BATCH: usize = 64;
+
+fn workload(tier: Tier) -> CsrGraph {
+    match tier {
+        Tier::Small | Tier::Xla => gen::barabasi_albert(5_000, 6, 42),
+        _ => gen::barabasi_albert(20_000, 8, 42),
+    }
+}
+
+fn random_edits(rng: &mut Rng, n: u32, count: usize) -> Vec<EdgeEdit> {
+    let mut out = Vec::with_capacity(count);
+    while out.len() < count {
+        let u = rng.below(n as u64) as u32;
+        let v = rng.below(n as u64) as u32;
+        if u == v {
+            continue;
+        }
+        out.push(if rng.chance(0.6) {
+            EdgeEdit::Insert(u, v)
+        } else {
+            EdgeEdit::Delete(u, v)
+        });
+    }
+    out
+}
+
+struct Row {
+    shards: usize,
+    build_ms: f64,
+    boundary: u64,
+    point_qps: f64,
+    histo_qps: f64,
+    flush_p50_ms: f64,
+    merge_p50_ms: f64,
+    merge_share: f64,
+    rounds: f64,
+    boundary_updates: f64,
+}
+
+fn bench_shard_count(g: &CsrGraph, shards: usize) -> Row {
+    let n = g.num_vertices() as u32;
+
+    let t = Timer::start();
+    let idx = ShardedIndex::new(
+        "bench",
+        g,
+        shards,
+        PartitionStrategy::Hash,
+        BatchConfig::default(),
+    );
+    let build_ms = t.elapsed_ms();
+
+    // routed point queries (owner-shard lookup per vertex)
+    let mut rng = Rng::new(7 + shards as u64);
+    let mut sink = 0u64;
+    let t = Timer::start();
+    for _ in 0..POINT_QUERIES {
+        let v = rng.below(n as u64) as u32;
+        sink ^= idx.coreness(v).unwrap_or(0) as u64;
+    }
+    let point_qps = POINT_QUERIES as f64 / t.elapsed().as_secs_f64();
+
+    // fan-out aggregates (per-shard histograms merged cell-wise)
+    let t = Timer::start();
+    for _ in 0..HISTO_QUERIES {
+        sink ^= idx.histogram().iter().sum::<u64>();
+    }
+    let histo_qps = HISTO_QUERIES as f64 / t.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+
+    // update path: mixed batches, flush latency split apply vs merge
+    let mut flushes = Samples::default();
+    let mut merges = Samples::default();
+    let mut rounds = 0usize;
+    let mut boundary_updates = 0u64;
+    for _ in 0..FLUSHES {
+        for e in random_edits(&mut rng, n, BATCH) {
+            idx.submit(e);
+        }
+        let out = idx.flush();
+        flushes.push(out.elapsed);
+        merges.push(out.merge_elapsed);
+        rounds += out.merge.rounds;
+        boundary_updates += out.merge.boundary_updates;
+    }
+
+    // correctness backstop: never report numbers for a broken index
+    let (snap, graph) = idx.consistent_view();
+    assert_eq!(
+        snap.core,
+        bz_coreness(&graph),
+        "sharded state diverged from the oracle at {shards} shards"
+    );
+
+    let flush_p50 = flushes.percentile_ms(50.0);
+    let merge_p50 = merges.percentile_ms(50.0);
+    Row {
+        shards,
+        build_ms,
+        boundary: idx.boundary_edges(),
+        point_qps,
+        histo_qps,
+        flush_p50_ms: flush_p50,
+        merge_p50_ms: merge_p50,
+        merge_share: if flush_p50 > 0.0 { merge_p50 / flush_p50 * 100.0 } else { 0.0 },
+        rounds: rounds as f64 / FLUSHES as f64,
+        boundary_updates: boundary_updates as f64 / FLUSHES as f64,
+    }
+}
+
+fn main() {
+    let tier = Tier::from_env();
+    let g = workload(tier);
+    println!(
+        "== shard_scaling == dataset {} (|V|={}, |E|={}, tier {:?})\n",
+        g.name,
+        fmt::si(g.num_vertices() as u64),
+        fmt::si(g.num_edges()),
+        tier
+    );
+
+    // single-index baseline for the build + point-query columns
+    let t = Timer::start();
+    let single = CoreIndex::new("baseline", &g);
+    let single_build = t.elapsed_ms();
+    let snap = single.snapshot();
+    let mut rng = Rng::new(3);
+    let mut sink = 0u64;
+    let t = Timer::start();
+    for _ in 0..POINT_QUERIES {
+        let v = rng.below(g.num_vertices() as u64) as u32;
+        sink ^= snap.coreness(v).unwrap_or(0) as u64;
+    }
+    std::hint::black_box(sink);
+    println!(
+        "single-index baseline: build {} | {} point queries/sec\n",
+        fmt::ms(single_build),
+        fmt::si((POINT_QUERIES as f64 / t.elapsed().as_secs_f64()) as u64)
+    );
+
+    println!(
+        "{:>6}  {:>10}  {:>10}  {:>11}  {:>10}  {:>10}  {:>10}  {:>7}  {:>9}  {:>9}",
+        "shards",
+        "build",
+        "boundary",
+        "point q/s",
+        "histo q/s",
+        "flush p50",
+        "merge p50",
+        "merge%",
+        "rounds",
+        "bnd-upd"
+    );
+    for &shards in &SHARD_COUNTS {
+        let r = bench_shard_count(&g, shards);
+        println!(
+            "{:>6}  {:>10}  {:>10}  {:>11}  {:>10}  {:>10}  {:>10}  {:>6.1}%  {:>9.1}  {:>9.0}",
+            r.shards,
+            fmt::ms(r.build_ms),
+            fmt::commas(r.boundary),
+            fmt::si(r.point_qps as u64),
+            fmt::si(r.histo_qps as u64),
+            fmt::ms(r.flush_p50_ms),
+            fmt::ms(r.merge_p50_ms),
+            r.merge_share,
+            r.rounds,
+            r.boundary_updates
+        );
+    }
+    println!(
+        "\nmerge% = refinement share of flush latency — the overhead the\n\
+         boundary exchange pays for exact merged coreness at each epoch"
+    );
+}

@@ -187,14 +187,23 @@ fn doctor_xla(_store: crate::runtime::ArtifactStore) -> Result<()> {
     Ok(())
 }
 
-/// `pico serve` — host core indices behind the line-protocol TCP server
-/// (see `service::server` docs for the protocol).
+/// `pico serve` — host core indices (optionally sharded) behind the TCP
+/// server (see `service::server` docs for the line + binary protocols).
 pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     use crate::service::{serve, BatchConfig, CoreService};
+    use crate::shard::PartitionStrategy;
 
     let addr = args.get_or("addr", "127.0.0.1:7571").to_string();
     let dataset_name = args.get_or("dataset", "g1").to_string();
     let threads = args.parse_num::<usize>("threads")?.unwrap_or(cfg.threads);
+    let shards = args.parse_num::<usize>("shards")?.unwrap_or(1);
+    if shards == 0 || shards > crate::service::server::MAX_SHARDS {
+        bail!(
+            "--shards must be 1..={} (got {shards})",
+            crate::service::server::MAX_SHARDS
+        );
+    }
+    let strategy = PartitionStrategy::parse(args.get_or("partition", "hash"))?;
     let batch = BatchConfig {
         recompute_fraction: args
             .parse_num::<f64>("batch-fraction")?
@@ -208,8 +217,18 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     let spec = resolve_dataset(&dataset_name)?;
     let g = spec.load()?;
     let service = std::sync::Arc::new(CoreService::new(batch.clone()));
-    let idx = service.open(&spec.name(), &g);
-    let s = idx.snapshot();
+    let s = if shards > 1 {
+        let idx = service.open_sharded(&spec.name(), &g, shards, strategy);
+        println!(
+            "partition: {} shards [{}], {} boundary edges",
+            idx.num_shards(),
+            idx.strategy().name(),
+            idx.boundary_edges()
+        );
+        idx.snapshot()
+    } else {
+        service.open(&spec.name(), &g).snapshot()
+    };
     let handle = serve(service, &addr)?;
     println!(
         "serving '{}' on {} — |V|={} |E|={} k_max={} (epoch {})",
@@ -231,7 +250,10 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
 }
 
 /// `pico query` — one-shot client: send `;`-separated protocol commands,
-/// print each reply line.
+/// print each reply line. With `--binary` the connection upgrades to the
+/// length-prefixed framing, unlocking `SNAPSHOT`/`RESTORE`:
+/// `--snapshot-file PATH` is where a `SNAPSHOT` reply payload is written
+/// and where a `RESTORE` command's payload is read from.
 pub fn cmd_query(args: &Args, _cfg: &Config) -> Result<()> {
     use std::io::{BufRead, BufReader, Write};
 
@@ -239,23 +261,78 @@ pub fn cmd_query(args: &Args, _cfg: &Config) -> Result<()> {
     let Some(script) = args.get("cmd") else {
         bail!("--cmd is required, e.g. --cmd 'INSERT 1 2; FLUSH; CORENESS 1'");
     };
+    let snapshot_file = args.get("snapshot-file");
     let stream = std::net::TcpStream::connect(addr)
         .with_context(|| format!("connecting to pico serve at {addr}"))?;
     let mut writer = stream.try_clone().context("cloning the connection")?;
     let mut reader = BufReader::new(stream);
-    let mut failed = false;
-    for cmd in script.split(';').map(str::trim).filter(|c| !c.is_empty()) {
-        writeln!(writer, "{cmd}")?;
+    let binary = args.has("binary");
+    if binary {
+        writeln!(writer, "BINARY")?;
         writer.flush()?;
         let mut reply = String::new();
-        if reader.read_line(&mut reply)? == 0 {
-            bail!("server closed the connection after '{cmd}'");
+        if reader.read_line(&mut reply)? == 0 || reply.trim_end() != "OK binary" {
+            bail!("binary upgrade refused: {}", reply.trim_end());
         }
-        let reply = reply.trim_end();
+    }
+    let mut failed = false;
+    for cmd in script.split(';').map(str::trim).filter(|c| !c.is_empty()) {
+        let reply = if binary {
+            use crate::service::server::{read_frame, write_frame, MAX_FRAME_BYTES};
+            let mut body = cmd.as_bytes().to_vec();
+            if cmd.to_ascii_uppercase().starts_with("RESTORE") {
+                let Some(path) = snapshot_file else {
+                    bail!("RESTORE needs --snapshot-file PATH for its payload");
+                };
+                body.push(b'\n');
+                body.extend_from_slice(&crate::shard::snapshot::read_file(path)?);
+                if body.len() > MAX_FRAME_BYTES {
+                    bail!(
+                        "snapshot payload is {} bytes, above the server frame cap ({MAX_FRAME_BYTES})",
+                        body.len()
+                    );
+                }
+            }
+            write_frame(&mut writer, &body)?;
+            let frame = read_frame(&mut reader, MAX_FRAME_BYTES)?
+                .with_context(|| format!("server closed the connection after '{cmd}'"))?;
+            let (head, payload) = match frame.iter().position(|&b| b == b'\n') {
+                Some(i) => (&frame[..i], &frame[i + 1..]),
+                None => (&frame[..], &frame[..0]),
+            };
+            let head = String::from_utf8_lossy(head).into_owned();
+            if !payload.is_empty() && head.starts_with("OK snapshot") {
+                println!("{head}");
+                match snapshot_file {
+                    Some(path) => {
+                        crate::shard::snapshot::write_file(payload, path)?;
+                        println!("  ({} snapshot bytes -> {path})", payload.len());
+                    }
+                    None => println!(
+                        "  ({} snapshot bytes discarded; pass --snapshot-file)",
+                        payload.len()
+                    ),
+                }
+                continue;
+            }
+            head
+        } else {
+            writeln!(writer, "{cmd}")?;
+            writer.flush()?;
+            let mut reply = String::new();
+            if reader.read_line(&mut reply)? == 0 {
+                bail!("server closed the connection after '{cmd}'");
+            }
+            reply.trim_end().to_string()
+        };
         println!("{reply}");
         failed |= reply.starts_with("ERR");
     }
-    let _ = writeln!(writer, "QUIT");
+    if binary {
+        let _ = crate::service::server::write_frame(&mut writer, b"QUIT");
+    } else {
+        let _ = writeln!(writer, "QUIT");
+    }
     if failed {
         bail!("at least one command was rejected");
     }

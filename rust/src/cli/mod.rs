@@ -38,21 +38,30 @@ RUN OPTIONS:
 SERVE OPTIONS:
     --addr HOST:PORT     Bind address (default 127.0.0.1:7571)
     --dataset NAME       Initial hosted graph (default g1)
-    --batch-fraction F   Recompute when a batch exceeds F of |E| (default 0.02)
+    --shards N           Partition the hosted graph across N shards (default 1)
+    --partition S        Partition strategy: hash | range (default hash)
+    --batch-fraction F   Recompute when a batch exceeds F of |E| (default 0.02,
+                         or the PICO_RECOMPUTE_FRACTION env override)
     --batch-min N        Never recompute below N coalesced edits (default 64)
 
 QUERY OPTIONS:
-    --addr HOST:PORT   Server address (default 127.0.0.1:7571)
-    --cmd 'A; B; C'    Protocol commands, `;`-separated (see service::server
-                       docs: CORENESS, MEMBERS, HISTO, DENSEST, INSERT,
-                       DELETE, FLUSH, EPOCH, STATS, OPEN, USE, GRAPHS)
+    --addr HOST:PORT     Server address (default 127.0.0.1:7571)
+    --cmd 'A; B; C'      Protocol commands, `;`-separated (see service::server
+                         docs: CORENESS, MEMBERS, HISTO, DENSEST, INSERT,
+                         DELETE, FLUSH, EPOCH, STATS, OPEN, USE, GRAPHS, SHARDS)
+    --binary             Upgrade to the length-prefixed binary protocol
+                         (unlocks SNAPSHOT / RESTORE)
+    --snapshot-file P    Where SNAPSHOT payloads are written and RESTORE
+                         payloads are read from (with --binary)
 
 EXAMPLES:
     pico run --algo HistoCore --dataset social-ba --metrics
     pico run --algo PO-dyn --dataset g1 --json
     pico suite --algos PO-dyn,HistoCore --tier small
-    pico serve --dataset social-ba --addr 127.0.0.1:7571
-    pico query --cmd 'INSERT 3 9; FLUSH; CORENESS 3; DENSEST'
+    pico serve --dataset social-ba --addr 127.0.0.1:7571 --shards 4
+    pico query --cmd 'INSERT 3 9; FLUSH; CORENESS 3; DENSEST; SHARDS'
+    pico query --binary --cmd 'SNAPSHOT' --snapshot-file /tmp/social.snap
+    pico query --binary --cmd 'RESTORE replica' --snapshot-file /tmp/social.snap
     pico stats --tier standard
     pico analyze --dataset social-rmat
 ";

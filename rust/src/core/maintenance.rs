@@ -72,6 +72,22 @@ impl DynamicCore {
         }
     }
 
+    /// Hydrate from a shipped (graph, coreness) pair — **no**
+    /// decomposition runs. The caller vouches for `core` (the snapshot
+    /// decoder validates it against the coreness invariants before
+    /// handing it here).
+    pub fn from_parts(g: &CsrGraph, core: Vec<u32>) -> Self {
+        assert_eq!(
+            core.len(),
+            g.num_vertices(),
+            "coreness length must match the vertex count"
+        );
+        let adj = (0..g.num_vertices() as VertexId)
+            .map(|v| g.neighbors(v).to_vec())
+            .collect();
+        Self { adj, core }
+    }
+
     pub fn num_vertices(&self) -> usize {
         self.adj.len()
     }

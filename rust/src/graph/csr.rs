@@ -36,6 +36,23 @@ impl CsrGraph {
         g
     }
 
+    /// Fallible counterpart of [`Self::from_parts`] for *untrusted* input
+    /// (wire bytes, cache files): runs full validation up front and
+    /// returns the error instead of tripping a debug assertion.
+    pub fn try_from_parts(
+        offsets: Vec<u64>,
+        adjacency: Vec<VertexId>,
+        name: impl Into<String>,
+    ) -> Result<Self, String> {
+        let g = Self {
+            offsets,
+            adjacency,
+            name: name.into(),
+        };
+        g.validate()?;
+        Ok(g)
+    }
+
     /// Number of vertices.
     #[inline]
     pub fn num_vertices(&self) -> usize {

@@ -63,9 +63,10 @@ pub fn read_file(path: impl AsRef<Path>) -> Result<CsrGraph> {
         *a = read_u32(&mut r)?;
     }
 
-    let g = CsrGraph::from_parts(offsets, adjacency, name);
-    g.validate().map_err(|e| anyhow::anyhow!("corrupt .pico file: {e}"))?;
-    Ok(g)
+    // try_from_parts: a corrupt file must come back as an error, not a
+    // debug assertion, whatever the build profile
+    CsrGraph::try_from_parts(offsets, adjacency, name)
+        .map_err(|e| anyhow::anyhow!("corrupt .pico file: {e}"))
 }
 
 fn read_u32(r: &mut impl Read) -> Result<u32> {

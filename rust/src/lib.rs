@@ -13,6 +13,10 @@
 //!   core indices with non-blocking concurrent reads, a coalescing
 //!   batched-update pipeline with an incremental-vs-recompute crossover,
 //!   and a line-protocol TCP server (`pico serve` / `pico query`).
+//! * **Layer 3.6 ([`shard`])** — sharded serving: vertex partitioners,
+//!   a `ShardedIndex` whose router fans queries out and merges per-shard
+//!   answers exactly (boundary refinement), and binary snapshot shipping
+//!   (`SNAPSHOT`/`RESTORE` over the length-prefixed binary protocol).
 //! * **Layer 2 (build-time JAX)** — vectorised peel / h-index step
 //!   functions, AOT-lowered to HLO text and executed from [`runtime`] via
 //!   the PJRT C API.
@@ -41,5 +45,6 @@ pub mod engine;
 pub mod graph;
 pub mod runtime;
 pub mod service;
+pub mod shard;
 pub mod util;
 pub mod vc;

@@ -15,7 +15,7 @@ fn main() {
 
 fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["metrics", "no-validate", "help", "json"])?;
+    let args = Args::parse(&raw, &["metrics", "no-validate", "help", "json", "binary"])?;
 
     let cfg = Config::load(args.get("config").map(std::path::Path::new))?;
 

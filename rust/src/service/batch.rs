@@ -44,11 +44,26 @@ pub struct BatchConfig {
 impl Default for BatchConfig {
     fn default() -> Self {
         Self {
-            recompute_fraction: 0.02,
+            recompute_fraction: default_recompute_fraction(),
             min_recompute_edits: 64,
             threads: crate::util::default_threads(),
         }
     }
+}
+
+/// The crossover default: the compiled-in fallback (0.02), or the
+/// `PICO_RECOMPUTE_FRACTION` env override so a deployment can pin the
+/// value its own `serve_throughput` crossover table measured without
+/// rebuilding. ROADMAP's tuning item records the reference-host number.
+pub fn default_recompute_fraction() -> f64 {
+    static CACHED: std::sync::OnceLock<f64> = std::sync::OnceLock::new();
+    *CACHED.get_or_init(|| {
+        std::env::var("PICO_RECOMPUTE_FRACTION")
+            .ok()
+            .and_then(|s| s.parse::<f64>().ok())
+            .filter(|f| (0.0..=1.0).contains(f))
+            .unwrap_or(0.02)
+    })
 }
 
 impl BatchConfig {

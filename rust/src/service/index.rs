@@ -73,14 +73,27 @@ impl CoreIndex {
 
     /// Wrap an existing maintained structure.
     pub fn from_dynamic(name: impl Into<String>, dc: DynamicCore) -> Self {
-        let snap = Arc::new(CoreSnapshot::capture(0, &dc));
+        Self::from_dynamic_at(name, dc, 0)
+    }
+
+    /// Wrap an existing maintained structure, publishing it as `epoch` —
+    /// the restore path for shipped snapshots, where the replica must
+    /// resume at the primary's epoch rather than 0.
+    pub fn from_dynamic_at(name: impl Into<String>, dc: DynamicCore, epoch: u64) -> Self {
+        let snap = Arc::new(CoreSnapshot::capture(epoch, &dc));
         Self {
             name: name.into(),
             writer: Mutex::new(dc),
             published: RwLock::new(snap),
-            epoch: AtomicU64::new(0),
+            epoch: AtomicU64::new(epoch),
             graph_cache: Mutex::new(None),
         }
+    }
+
+    /// Hydrate from shipped state (`shard::snapshot`) without running any
+    /// decomposition: the given coreness is installed as-is at `epoch`.
+    pub fn hydrate(name: impl Into<String>, g: &CsrGraph, core: Vec<u32>, epoch: u64) -> Self {
+        Self::from_dynamic_at(name, DynamicCore::from_parts(g, core), epoch)
     }
 
     pub fn name(&self) -> &str {

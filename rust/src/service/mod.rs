@@ -12,8 +12,11 @@
 //!   analog of the paper's Peel vs Index2core crossover, Table VII).
 //! * [`queries`] — the read API: coreness, k-core membership,
 //!   degeneracy, core histograms, densest-core extraction.
-//! * [`server`] — a line-protocol TCP server ([`server::serve`]) and the
-//!   multi-graph [`server::CoreService`] behind `pico serve`.
+//! * [`server`] — a line-protocol TCP server ([`server::serve`]) with a
+//!   length-prefixed binary variant (snapshot shipping via
+//!   `SNAPSHOT`/`RESTORE`), and the multi-graph [`server::CoreService`]
+//!   behind `pico serve` — hosting single indices or sharded ones
+//!   ([`crate::shard::ShardedIndex`], `pico serve --shards N`).
 //!
 //! Throughput/latency characteristics are measured by
 //! `benches/serve_throughput.rs`; the crossover default in
@@ -24,7 +27,9 @@ pub mod index;
 pub mod queries;
 pub mod server;
 
-pub use batch::{apply_batch, coalesce, BatchConfig, BatchOutcome, EditQueue};
+pub use batch::{
+    apply_batch, coalesce, default_recompute_fraction, BatchConfig, BatchOutcome, EditQueue,
+};
 pub use index::{CoreIndex, CoreSnapshot, CoreStore};
 pub use queries::{densest_core, DensestCore};
 pub use server::{serve, CoreService, ServerHandle, Session};

@@ -9,7 +9,7 @@
 
 use super::index::{CoreIndex, CoreSnapshot};
 use crate::analysis::CoreHierarchy;
-use crate::graph::VertexId;
+use crate::graph::{CsrGraph, VertexId};
 
 impl CoreSnapshot {
     /// Coreness of `v`; `None` for out-of-range ids.
@@ -64,6 +64,13 @@ pub struct DensestCore {
 /// O(k_max · (|V| + |E|)).
 pub fn densest_core(index: &CoreIndex) -> DensestCore {
     let (snap, g) = index.consistent_view();
+    densest_core_view(&snap, &g)
+}
+
+/// The same extraction over an explicit (snapshot, graph) pair — the
+/// entry point for backends that assemble their view differently (e.g. a
+/// [`crate::shard::ShardedIndex`]'s merged snapshot + assembled graph).
+pub fn densest_core_view(snap: &CoreSnapshot, g: &CsrGraph) -> DensestCore {
     let h = CoreHierarchy::from_coreness(snap.core.clone());
     // base case (k = 0): the whole graph, members listed so the fields
     // stay mutually consistent even when no k-core beats it
@@ -80,7 +87,7 @@ pub fn densest_core(index: &CoreIndex) -> DensestCore {
         members: (0..g.num_vertices() as VertexId).collect(),
     };
     for k in 1..=snap.k_max {
-        let (sub, members) = h.extract_k_core(&g, k);
+        let (sub, members) = h.extract_k_core(g, k);
         if sub.num_vertices() == 0 {
             continue;
         }

@@ -1,5 +1,6 @@
-//! The serving surface: a multi-graph [`CoreService`] and a line-protocol
-//! TCP front end (`pico serve` / `pico query`).
+//! The serving surface: a multi-graph [`CoreService`] hosting single or
+//! sharded backends, a line-protocol TCP front end, and a length-prefixed
+//! binary protocol for snapshot shipping (`pico serve` / `pico query`).
 //!
 //! # Line protocol
 //!
@@ -13,29 +14,58 @@
 //! | `PING` | `OK pong` |
 //! | `GRAPHS` | `OK n=<count> <name>...` |
 //! | `USE <name>` | `OK use=<name>` |
-//! | `OPEN <name> <dataset>` | `OK open=<name> vertices=<n> edges=<m>` — index a suite dataset or graph file |
+//! | `OPEN <name> <dataset> [shards]` | `OK open=<name> vertices=<n> edges=<m>[ shards=<k>]` — index a suite dataset or graph file, optionally partitioned across `shards` |
 //! | `EPOCH` | `OK epoch=<e>` |
 //! | `CORENESS <v>` | `OK core=<c> epoch=<e>` |
 //! | `DEGENERACY` | `OK degeneracy=<k> epoch=<e>` |
 //! | `MEMBERS <k>` | `OK count=<n> epoch=<e> members=<v,v,...>` (capped) |
 //! | `HISTO` | `OK epoch=<e> histo=<k>:<count>,...` |
 //! | `DENSEST` | `OK k=<k> vertices=<n> edges=<m> density=<d> epoch=<e>` |
+//! | `SHARDS` | `OK shards=<n> strategy=<s> ...` (partition + merge stats) |
 //! | `INSERT <u> <v>` | `OK pending=<n>` — queued, not yet visible |
 //! | `DELETE <u> <v>` | `OK pending=<n>` |
-//! | `FLUSH` | `OK epoch=<e> submitted=<s> applied=<a> coalesced=<c> changed=<g> recomputed=<0|1> ms=<t>` |
+//! | `FLUSH` | `OK epoch=<e> submitted=<s> applied=<a> coalesced=<c> changed=<g> recomputed=<r> [shards=<n> rounds=<r> boundary=<b>] ms=<t>` |
 //! | `STATS` | `OK queries=<q> edits=<e> batches=<b> recomputes=<r> graphs=<g>` |
+//! | `BINARY` | `OK binary` — switch this connection to binary framing |
 //! | `QUIT` | `OK bye` (connection closes) |
 //!
 //! Edits become visible only at `FLUSH` (one published epoch per flush),
 //! so a client controls its own read-your-writes boundary. Readers on
 //! other connections keep being served the previous epoch while a flush
-//! is applying — the epoch-snapshot guarantee from [`super::index`].
+//! is applying — the epoch-snapshot guarantee from [`super::index`]. On a
+//! sharded graph the flush routes edits to their owner shards and runs
+//! the boundary-refinement merge before publishing (see [`crate::shard`]).
+//!
+//! # Binary protocol
+//!
+//! After `BINARY`, every subsequent request and reply is one frame:
+//! a little-endian `u32` byte length followed by that many payload bytes
+//! (capped at [`MAX_FRAME_BYTES`]). A request frame's payload is a UTF-8
+//! command line — any line-protocol verb works — optionally followed by
+//! `\n` and raw bytes. Two verbs use the raw-byte side:
+//!
+//! | frame | payload |
+//! |---|---|
+//! | `SNAPSHOT` (single) / `SNAPSHOT <shard>` (sharded) | reply `OK snapshot name=<n> epoch=<e> bytes=<b>` + `\n` + snapshot bytes |
+//! | `RESTORE <name>` + `\n` + snapshot bytes | reply `OK restore=<name> epoch=<e> vertices=<v> edges=<m>` — hydrates a replica **without recomputing** |
+//!
+//! Snapshot bytes are the [`crate::shard::snapshot`] format; `RESTORE`
+//! validates them fully (CSR structure + coreness invariants) before
+//! installing, so corrupt payloads are rejected without leaving a
+//! half-installed graph slot behind.
+//!
+//! A *single-index* snapshot restores a full replica: identical answers
+//! at the identical epoch. `SNAPSHOT <shard>` of a sharded graph ships
+//! that shard's **local** index — its subgraph (owned + ghost vertices,
+//! local ids) and shard-local coreness at the shard's own epoch. That is
+//! the unit a shard replica hydrates; it does not answer global queries
+//! by itself (global answers come from the router's merge).
 //!
 //! The TCP layer is thread-per-connection with the scheduler's
 //! containment idiom: a panicking handler poisons nothing — the
 //! connection reports `ERR internal` and closes, the server keeps
-//! accepting. Abuse bounds: [`MAX_LINE_BYTES`], [`MAX_VERTEX_ID`],
-//! [`MAX_PENDING_EDITS`], [`MAX_HOSTED_GRAPHS`].
+//! accepting. Abuse bounds: [`MAX_LINE_BYTES`], [`MAX_FRAME_BYTES`],
+//! [`MAX_VERTEX_ID`], [`MAX_PENDING_EDITS`], [`MAX_HOSTED_GRAPHS`].
 //!
 //! **Trust model:** the protocol is unauthenticated, and `OPEN` resolves
 //! suite names *and server-local file paths* (CLI parity). The default
@@ -43,14 +73,15 @@
 //! would let run `pico` on the host.
 
 use super::batch::{BatchConfig, EditQueue};
-use super::index::CoreIndex;
-use super::queries::densest_core;
+use super::index::{CoreIndex, CoreSnapshot};
+use super::queries::densest_core_view;
 use crate::core::maintenance::EdgeEdit;
 use crate::engine::metrics::{Metrics, MetricsSnapshot};
 use crate::graph::CsrGraph;
+use crate::shard::{snapshot as shard_snapshot, PartitionStrategy, ShardedIndex};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Write};
+use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
@@ -68,6 +99,11 @@ pub const MAX_REPLY_MEMBERS: usize = 64;
 /// bound (same memory-exhaustion class as [`MAX_VERTEX_ID`]).
 pub const MAX_LINE_BYTES: usize = 4096;
 
+/// Largest binary frame accepted or sent. Bounds the allocation a single
+/// length-prefix can demand; sized for snapshots of the largest suite
+/// graphs with ample headroom.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
 /// Most queued-but-unflushed edits per graph accepted from the wire. A
 /// client that streams INSERTs without ever flushing must not grow the
 /// pending queue without bound; past the cap, edits are rejected until a
@@ -79,6 +115,9 @@ pub const MAX_PENDING_EDITS: usize = 1 << 20;
 /// map, each entry of which owns a full index.
 pub const MAX_HOSTED_GRAPHS: usize = 16;
 
+/// Most shards one OPEN may request (each shard owns a full index).
+pub const MAX_SHARDS: usize = 64;
+
 /// Largest vertex id accepted from the wire. Edits grow the vertex set
 /// (`DynamicCore::ensure_vertex`), so without a bound one
 /// `INSERT 0 4294967295` would make the server allocate tens of GB and
@@ -86,17 +125,51 @@ pub const MAX_HOSTED_GRAPHS: usize = 16;
 /// suite graph; raise it here when hosting genuinely larger graphs.
 pub const MAX_VERTEX_ID: u32 = (1 << 24) - 1;
 
-/// One hosted graph: its index and edit queue, always installed (and
-/// replaced) together so a flush can never reach an orphaned index.
+/// One hosted graph: a single index + its edit queue, or a sharded index
+/// (which owns its shards' queues internally). Installed and replaced as
+/// a unit so a flush can never reach an orphaned index.
 #[derive(Clone)]
-struct Hosted {
-    index: Arc<CoreIndex>,
-    queue: Arc<EditQueue>,
+enum Backend {
+    Single {
+        index: Arc<CoreIndex>,
+        queue: Arc<EditQueue>,
+    },
+    Sharded(Arc<ShardedIndex>),
 }
 
-/// The serving core: named indices, their edit queues, request counters.
+impl Backend {
+    fn snapshot(&self) -> Arc<CoreSnapshot> {
+        match self {
+            Backend::Single { index, .. } => index.snapshot(),
+            Backend::Sharded(sh) => sh.snapshot(),
+        }
+    }
+
+    fn consistent_view(&self) -> (Arc<CoreSnapshot>, Arc<CsrGraph>) {
+        match self {
+            Backend::Single { index, .. } => index.consistent_view(),
+            Backend::Sharded(sh) => sh.consistent_view(),
+        }
+    }
+
+    fn pending(&self) -> usize {
+        match self {
+            Backend::Single { queue, .. } => queue.pending(),
+            Backend::Sharded(sh) => sh.pending(),
+        }
+    }
+
+    fn submit(&self, e: EdgeEdit) -> usize {
+        match self {
+            Backend::Single { queue, .. } => queue.submit(e),
+            Backend::Sharded(sh) => sh.submit(e),
+        }
+    }
+}
+
+/// The serving core: named backends, request counters, batch policy.
 pub struct CoreService {
-    hosted: RwLock<HashMap<String, Hosted>>,
+    hosted: RwLock<HashMap<String, Backend>>,
     batch_cfg: BatchConfig,
     metrics: Metrics,
     default_graph: Mutex<String>,
@@ -112,24 +185,65 @@ impl CoreService {
         }
     }
 
-    /// Host `g` under `name` (first hosted graph becomes the default).
-    /// Re-opening an existing name atomically replaces both the index
-    /// and its queue — any unflushed edits on the old queue are
-    /// discarded by design (OPEN is a reset).
-    pub fn open(&self, name: &str, g: &CsrGraph) -> Arc<CoreIndex> {
-        let idx = Arc::new(CoreIndex::new(name, g));
-        let q = Arc::new(EditQueue::new(idx.clone(), self.batch_cfg.clone()));
-        self.hosted.write().unwrap().insert(
-            name.to_string(),
-            Hosted {
-                index: idx.clone(),
-                queue: q,
-            },
-        );
+    fn install(&self, name: &str, backend: Backend) {
+        self.hosted.write().unwrap().insert(name.to_string(), backend);
         let mut d = self.default_graph.lock().unwrap();
         if d.is_empty() {
             *d = name.to_string();
         }
+    }
+
+    /// Wire-path install: enforce [`MAX_HOSTED_GRAPHS`] *under the map's
+    /// write lock*, so concurrent OPEN/RESTORE connections cannot race
+    /// past the cap between a check and the insert.
+    fn install_checked(&self, name: &str, backend: Backend) -> Result<(), String> {
+        {
+            let mut hosted = self.hosted.write().unwrap();
+            if !hosted.contains_key(name) && hosted.len() >= MAX_HOSTED_GRAPHS {
+                return Err(format!("graph limit reached ({MAX_HOSTED_GRAPHS} hosted)"));
+            }
+            hosted.insert(name.to_string(), backend);
+        }
+        let mut d = self.default_graph.lock().unwrap();
+        if d.is_empty() {
+            *d = name.to_string();
+        }
+        Ok(())
+    }
+
+    /// Host `g` under `name` (first hosted graph becomes the default).
+    /// Re-opening an existing name atomically replaces the whole backend
+    /// — any unflushed edits on the old queue are discarded by design
+    /// (OPEN is a reset).
+    pub fn open(&self, name: &str, g: &CsrGraph) -> Arc<CoreIndex> {
+        let idx = Arc::new(CoreIndex::new(name, g));
+        let queue = Arc::new(EditQueue::new(idx.clone(), self.batch_cfg.clone()));
+        self.install(
+            name,
+            Backend::Single {
+                index: idx.clone(),
+                queue,
+            },
+        );
+        idx
+    }
+
+    /// Host `g` partitioned across `shards` under `name`.
+    pub fn open_sharded(
+        &self,
+        name: &str,
+        g: &CsrGraph,
+        shards: usize,
+        strategy: PartitionStrategy,
+    ) -> Arc<ShardedIndex> {
+        let idx = Arc::new(ShardedIndex::new(
+            name,
+            g,
+            shards,
+            strategy,
+            self.batch_cfg.clone(),
+        ));
+        self.install(name, Backend::Sharded(idx.clone()));
         idx
     }
 
@@ -137,12 +251,32 @@ impl CoreService {
         self.default_graph.lock().unwrap().clone()
     }
 
-    pub fn index(&self, name: &str) -> Option<Arc<CoreIndex>> {
-        self.hosted.read().unwrap().get(name).map(|h| h.index.clone())
+    fn backend(&self, name: &str) -> Option<Backend> {
+        self.hosted.read().unwrap().get(name).cloned()
     }
 
+    /// The single-index backend of `name`, if it is one.
+    pub fn index(&self, name: &str) -> Option<Arc<CoreIndex>> {
+        match self.backend(name)? {
+            Backend::Single { index, .. } => Some(index),
+            Backend::Sharded(_) => None,
+        }
+    }
+
+    /// The sharded backend of `name`, if it is one.
+    pub fn sharded(&self, name: &str) -> Option<Arc<ShardedIndex>> {
+        match self.backend(name)? {
+            Backend::Single { .. } => None,
+            Backend::Sharded(sh) => Some(sh),
+        }
+    }
+
+    /// The edit queue of a single-index graph.
     pub fn queue(&self, name: &str) -> Option<Arc<EditQueue>> {
-        self.hosted.read().unwrap().get(name).map(|h| h.queue.clone())
+        match self.backend(name)? {
+            Backend::Single { queue, .. } => Some(queue),
+            Backend::Sharded(_) => None,
+        }
     }
 
     pub fn graph_names(&self) -> Vec<String> {
@@ -177,7 +311,7 @@ impl CoreService {
                 format!("OK n={} {}", names.len(), names.join(" "))
             }
             "USE" => match args.first() {
-                Some(&name) if self.index(name).is_some() => {
+                Some(&name) if self.backend(name).is_some() => {
                     session.graph = name.to_string();
                     format!("OK use={name}")
                 }
@@ -186,21 +320,53 @@ impl CoreService {
             },
             "OPEN" => {
                 let (Some(&name), Some(&dataset)) = (args.first(), args.get(1)) else {
-                    return "ERR usage: OPEN <name> <dataset>".into();
+                    return "ERR usage: OPEN <name> <dataset> [shards]".into();
                 };
-                if self.index(name).is_none() && self.num_graphs() >= MAX_HOSTED_GRAPHS {
+                let shards = match args.get(2) {
+                    None => 1usize,
+                    Some(s) => match s.parse::<usize>() {
+                        Ok(k) if (1..=MAX_SHARDS).contains(&k) => k,
+                        _ => return format!("ERR shards must be 1..={MAX_SHARDS}, got '{s}'"),
+                    },
+                };
+                // cheap fast-fail; install_checked below is authoritative
+                if self.backend(name).is_none() && self.num_graphs() >= MAX_HOSTED_GRAPHS {
                     return format!("ERR graph limit reached ({MAX_HOSTED_GRAPHS} hosted)");
                 }
                 match load_dataset(dataset) {
                     Ok(g) => {
-                        let idx = self.open(name, &g);
-                        let s = idx.snapshot();
+                        let (backend, vertices, edges, suffix) = if shards > 1 {
+                            let idx = Arc::new(ShardedIndex::new(
+                                name,
+                                &g,
+                                shards,
+                                PartitionStrategy::Hash,
+                                self.batch_cfg.clone(),
+                            ));
+                            let s = idx.snapshot();
+                            (
+                                Backend::Sharded(idx),
+                                s.num_vertices(),
+                                s.num_edges,
+                                format!(" shards={shards}"),
+                            )
+                        } else {
+                            let idx = Arc::new(CoreIndex::new(name, &g));
+                            let queue =
+                                Arc::new(EditQueue::new(idx.clone(), self.batch_cfg.clone()));
+                            let s = idx.snapshot();
+                            (
+                                Backend::Single { index: idx, queue },
+                                s.num_vertices(),
+                                s.num_edges,
+                                String::new(),
+                            )
+                        };
+                        if let Err(e) = self.install_checked(name, backend) {
+                            return format!("ERR {e}");
+                        }
                         session.graph = name.to_string();
-                        format!(
-                            "OK open={name} vertices={} edges={}",
-                            s.num_vertices(),
-                            s.num_edges
-                        )
+                        format!("OK open={name} vertices={vertices} edges={edges}{suffix}")
                     }
                     Err(e) => format!("ERR {e:#}"),
                 }
@@ -216,33 +382,45 @@ impl CoreService {
                     self.num_graphs()
                 )
             }
+            "BINARY" => {
+                session.binary = true;
+                "OK binary".into()
+            }
+            "SNAPSHOT" | "RESTORE" if !session.binary => {
+                format!("ERR {verb} needs the binary protocol (send BINARY first)")
+            }
             "QUIT" => "OK bye".into(),
             // everything below operates on the session's current graph
             _ => {
-                let Some(idx) = self.index(&session.graph) else {
-                    return format!("ERR no graph selected (have: {})", self.graph_names().join(" "));
+                let Some(backend) = self.backend(&session.graph) else {
+                    return format!(
+                        "ERR no graph selected (have: {})",
+                        self.graph_names().join(" ")
+                    );
                 };
                 match verb.as_str() {
                     "EPOCH" => {
                         view.serve_queries(1);
                         // the snapshot's epoch, not the writer counter:
                         // the reply must name an epoch readers can get
-                        format!("OK epoch={}", idx.snapshot().epoch)
+                        format!("OK epoch={}", backend.snapshot().epoch)
                     }
                     "CORENESS" => {
                         view.serve_queries(1);
                         let Some(Ok(v)) = args.first().map(|a| a.parse::<u32>()) else {
                             return "ERR usage: CORENESS <v>".into();
                         };
-                        let s = idx.snapshot();
+                        let s = backend.snapshot();
                         match s.coreness(v) {
                             Some(c) => format!("OK core={c} epoch={}", s.epoch),
-                            None => format!("ERR vertex {v} out of range (|V|={})", s.num_vertices()),
+                            None => {
+                                format!("ERR vertex {v} out of range (|V|={})", s.num_vertices())
+                            }
                         }
                     }
                     "DEGENERACY" => {
                         view.serve_queries(1);
-                        let s = idx.snapshot();
+                        let s = backend.snapshot();
                         format!("OK degeneracy={} epoch={}", s.degeneracy(), s.epoch)
                     }
                     "MEMBERS" => {
@@ -250,7 +428,7 @@ impl CoreService {
                         let Some(Ok(k)) = args.first().map(|a| a.parse::<u32>()) else {
                             return "ERR usage: MEMBERS <k>".into();
                         };
-                        let s = idx.snapshot();
+                        let s = backend.snapshot();
                         // count + capped listing without materialising the
                         // full membership (|V|-sized per request otherwise)
                         let count = s.kcore_size(k);
@@ -271,7 +449,7 @@ impl CoreService {
                     }
                     "HISTO" => {
                         view.serve_queries(1);
-                        let s = idx.snapshot();
+                        let s = backend.snapshot();
                         let cells: Vec<String> = s
                             .histogram()
                             .iter()
@@ -282,11 +460,32 @@ impl CoreService {
                     }
                     "DENSEST" => {
                         view.serve_queries(1);
-                        let d = densest_core(&idx);
+                        let (snap, g) = backend.consistent_view();
+                        let d = densest_core_view(&snap, &g);
                         format!(
                             "OK k={} vertices={} edges={} density={:.4} epoch={}",
                             d.k, d.vertices, d.edges, d.density, d.epoch
                         )
+                    }
+                    "SHARDS" => {
+                        view.serve_queries(1);
+                        match &backend {
+                            Backend::Single { .. } => "OK shards=1 strategy=single".into(),
+                            Backend::Sharded(sh) => {
+                                let epochs: Vec<String> =
+                                    sh.shard_epochs().iter().map(|e| e.to_string()).collect();
+                                let m = sh.merge_stats();
+                                format!(
+                                    "OK shards={} strategy={} boundary_edges={} rounds={} boundary_updates={} epochs={}",
+                                    sh.num_shards(),
+                                    sh.strategy().name(),
+                                    sh.boundary_edges(),
+                                    m.rounds,
+                                    m.boundary_updates,
+                                    epochs.join(",")
+                                )
+                            }
+                        }
                     }
                     "INSERT" | "DELETE" => {
                         let (Some(Ok(u)), Some(Ok(v))) = (
@@ -303,10 +502,7 @@ impl CoreService {
                                 "ERR vertex id above limit {MAX_VERTEX_ID} (see server::MAX_VERTEX_ID)"
                             );
                         }
-                        let Some(q) = self.queue(&session.graph) else {
-                            return format!("ERR no edit queue for '{}'", session.graph);
-                        };
-                        if q.pending() >= MAX_PENDING_EDITS {
+                        if backend.pending() >= MAX_PENDING_EDITS {
                             return format!(
                                 "ERR edit queue full ({MAX_PENDING_EDITS} pending); FLUSH first"
                             );
@@ -317,31 +513,166 @@ impl CoreService {
                         } else {
                             EdgeEdit::Delete(u, v)
                         };
-                        format!("OK pending={}", q.submit(edit))
+                        format!("OK pending={}", backend.submit(edit))
                     }
-                    "FLUSH" => {
-                        let Some(q) = self.queue(&session.graph) else {
-                            return format!("ERR no edit queue for '{}'", session.graph);
-                        };
-                        let out = q.flush();
-                        view.serve_batches(1);
-                        if out.recomputed {
-                            view.serve_recomputes(1);
+                    "FLUSH" => match &backend {
+                        Backend::Single { queue, .. } => {
+                            let out = queue.flush();
+                            view.serve_batches(1);
+                            if out.recomputed {
+                                view.serve_recomputes(1);
+                            }
+                            format!(
+                                "OK epoch={} submitted={} applied={} coalesced={} changed={} recomputed={} ms={:.3}",
+                                out.snapshot.epoch,
+                                out.submitted,
+                                out.applied,
+                                out.coalesced,
+                                out.changed,
+                                out.recomputed as u8,
+                                out.elapsed_ms()
+                            )
                         }
-                        format!(
-                            "OK epoch={} submitted={} applied={} coalesced={} changed={} recomputed={} ms={:.3}",
-                            out.snapshot.epoch,
-                            out.submitted,
-                            out.applied,
-                            out.coalesced,
-                            out.changed,
-                            out.recomputed as u8,
-                            out.elapsed_ms()
-                        )
-                    }
+                        Backend::Sharded(sh) => {
+                            let out = sh.flush();
+                            view.serve_batches(1);
+                            if out.recomputed_shards > 0 {
+                                view.serve_recomputes(out.recomputed_shards as u64);
+                            }
+                            format!(
+                                "OK epoch={} submitted={} applied={} coalesced={} changed={} recomputed={} shards={} rounds={} boundary={} ms={:.3}",
+                                out.snapshot.epoch,
+                                out.submitted,
+                                out.applied,
+                                out.coalesced,
+                                out.changed,
+                                out.recomputed_shards,
+                                sh.num_shards(),
+                                out.merge.rounds,
+                                out.merge.boundary_updates,
+                                out.elapsed_ms()
+                            )
+                        }
+                    },
                     other => format!("ERR unknown command '{other}'"),
                 }
             }
+        }
+    }
+
+    /// Execute one binary-protocol frame; returns the reply frame body.
+    /// `SNAPSHOT`/`RESTORE` carry raw bytes after the first line; every
+    /// other verb delegates to [`Self::handle_command`].
+    pub fn handle_frame(&self, session: &mut Session, body: &[u8], slot: usize) -> Vec<u8> {
+        let (head, payload) = match body.iter().position(|&b| b == b'\n') {
+            Some(i) => (&body[..i], &body[i + 1..]),
+            None => (body, &[][..]),
+        };
+        let Ok(line) = std::str::from_utf8(head) else {
+            return b"ERR command line not UTF-8".to_vec();
+        };
+        let mut parts = line.split_whitespace();
+        let verb = parts.next().unwrap_or("").to_ascii_uppercase();
+        let args: Vec<&str> = parts.collect();
+        match verb.as_str() {
+            "SNAPSHOT" => self.frame_snapshot(session, &args, slot),
+            "RESTORE" => self.frame_restore(session, &args, payload, slot),
+            _ => self.handle_command(session, line, slot).into_bytes(),
+        }
+    }
+
+    fn frame_snapshot(&self, session: &mut Session, args: &[&str], slot: usize) -> Vec<u8> {
+        self.metrics.view(slot % METRIC_SLOTS).serve_queries(1);
+        let Some(backend) = self.backend(&session.graph) else {
+            return format!(
+                "ERR no graph selected (have: {})",
+                self.graph_names().join(" ")
+            )
+            .into_bytes();
+        };
+        let index: Arc<CoreIndex> = match &backend {
+            Backend::Single { index, .. } => {
+                if !args.is_empty() {
+                    return b"ERR SNAPSHOT takes a shard argument only on sharded graphs".to_vec();
+                }
+                index.clone()
+            }
+            Backend::Sharded(sh) => {
+                let Some(Ok(k)) = args.first().map(|a| a.parse::<usize>()) else {
+                    return format!(
+                        "ERR usage: SNAPSHOT <shard> ('{}' has {} shards)",
+                        session.graph,
+                        sh.num_shards()
+                    )
+                    .into_bytes();
+                };
+                match sh.shard_index(k) {
+                    Some(idx) => idx,
+                    None => {
+                        return format!("ERR shard {k} out of range (0..{})", sh.num_shards())
+                            .into_bytes()
+                    }
+                }
+            }
+        };
+        let (snap, g) = index.consistent_view();
+        let bytes = shard_snapshot::encode(index.name(), snap.epoch, &snap.core, &g);
+        let mut out = format!(
+            "OK snapshot name={} epoch={} bytes={}\n",
+            index.name(),
+            snap.epoch,
+            bytes.len()
+        )
+        .into_bytes();
+        out.extend_from_slice(&bytes);
+        // the frame cap applies to replies too ("accepted or sent"): a
+        // snapshot no peer could RESTORE must not be shipped at all
+        if out.len() > MAX_FRAME_BYTES {
+            return format!(
+                "ERR snapshot is {} bytes, above the frame cap ({MAX_FRAME_BYTES}); raise server::MAX_FRAME_BYTES on both ends or ship it out-of-band",
+                out.len()
+            )
+            .into_bytes();
+        }
+        out
+    }
+
+    fn frame_restore(
+        &self,
+        session: &mut Session,
+        args: &[&str],
+        payload: &[u8],
+        slot: usize,
+    ) -> Vec<u8> {
+        self.metrics.view(slot % METRIC_SLOTS).serve_queries(1);
+        let Some(&name) = args.first() else {
+            return b"ERR usage: RESTORE <name> (snapshot bytes follow the command line)".to_vec();
+        };
+        if payload.is_empty() {
+            return b"ERR RESTORE carries no snapshot payload".to_vec();
+        }
+        // cheap fast-fail before the (potentially large) decode; the
+        // install_checked below re-checks the cap under the write lock
+        if self.backend(name).is_none() && self.num_graphs() >= MAX_HOSTED_GRAPHS {
+            return format!("ERR graph limit reached ({MAX_HOSTED_GRAPHS} hosted)").into_bytes();
+        }
+        // decode validates everything before anything is installed: a
+        // rejected payload leaves the hosted map untouched
+        match shard_snapshot::decode(payload) {
+            Ok(snap) => {
+                let epoch = snap.epoch;
+                let vertices = snap.graph.num_vertices();
+                let edges = snap.graph.num_edges();
+                let idx = Arc::new(CoreIndex::hydrate(name, &snap.graph, snap.core, epoch));
+                let queue = Arc::new(EditQueue::new(idx.clone(), self.batch_cfg.clone()));
+                if let Err(e) = self.install_checked(name, Backend::Single { index: idx, queue }) {
+                    return format!("ERR {e}").into_bytes();
+                }
+                session.graph = name.to_string();
+                format!("OK restore={name} epoch={epoch} vertices={vertices} edges={edges}")
+                    .into_bytes()
+            }
+            Err(e) => format!("ERR restore: {e:#}").into_bytes(),
         }
     }
 }
@@ -351,6 +682,17 @@ impl CoreService {
 pub struct Session {
     /// Current graph name.
     pub graph: String,
+    /// Whether the connection has upgraded to binary framing.
+    pub binary: bool,
+}
+
+impl Session {
+    pub fn new(graph: impl Into<String>) -> Self {
+        Self {
+            graph: graph.into(),
+            binary: false,
+        }
+    }
 }
 
 /// Resolve a dataset argument — the same suite-name-then-path rules as
@@ -448,35 +790,97 @@ fn handle_connection(service: Arc<CoreService>, stream: TcpStream, slot: usize) 
         Err(_) => return,
     };
     let mut reader = BufReader::new(stream);
-    let mut session = Session {
-        graph: service.default_graph(),
-    };
+    let mut session = Session::new(service.default_graph());
     loop {
-        let line = match read_line_capped(&mut reader, MAX_LINE_BYTES) {
-            Ok(Some(l)) => l,
-            Ok(None) => break, // EOF
-            Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
-                let _ = writeln!(writer, "ERR line exceeds {MAX_LINE_BYTES} bytes");
+        if session.binary {
+            let body = match read_frame(&mut reader, MAX_FRAME_BYTES) {
+                Ok(Some(b)) => b,
+                Ok(None) => break, // clean close
+                Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                    let _ = write_frame(
+                        &mut writer,
+                        format!("ERR frame exceeds {MAX_FRAME_BYTES} bytes").as_bytes(),
+                    );
+                    break;
+                }
+                Err(_) => break,
+            };
+            // containment: a panicking handler must not take the server down
+            let reply = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                service.handle_frame(&mut session, &body, slot)
+            }))
+            .unwrap_or_else(|_| b"ERR internal handler panic (contained)".to_vec());
+            let quit = reply.as_slice() == b"OK bye";
+            if write_frame(&mut writer, &reply).is_err() {
                 break;
             }
-            Err(_) => break,
-        };
-        if line.trim().is_empty() {
-            continue;
-        }
-        // containment: a panicking handler must not take the server down
-        let reply = std::panic::catch_unwind(AssertUnwindSafe(|| {
-            service.handle_command(&mut session, &line, slot)
-        }))
-        .unwrap_or_else(|_| "ERR internal handler panic (contained)".into());
-        let quit = reply == "OK bye";
-        if writeln!(writer, "{reply}").and_then(|_| writer.flush()).is_err() {
-            break;
-        }
-        if quit {
-            break;
+            if quit {
+                break;
+            }
+        } else {
+            let line = match read_line_capped(&mut reader, MAX_LINE_BYTES) {
+                Ok(Some(l)) => l,
+                Ok(None) => break, // EOF
+                Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                    let _ = writeln!(writer, "ERR line exceeds {MAX_LINE_BYTES} bytes");
+                    break;
+                }
+                Err(_) => break,
+            };
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = std::panic::catch_unwind(AssertUnwindSafe(|| {
+                service.handle_command(&mut session, &line, slot)
+            }))
+            .unwrap_or_else(|_| "ERR internal handler panic (contained)".into());
+            let quit = reply == "OK bye";
+            if writeln!(writer, "{reply}").and_then(|_| writer.flush()).is_err() {
+                break;
+            }
+            if quit {
+                break;
+            }
         }
     }
+}
+
+/// Write one length-prefixed frame — the binary protocol's only framing
+/// primitive, shared by the server, `pico query --binary`, and tests.
+/// Bodies above `u32::MAX` cannot be length-prefixed and error out
+/// instead of silently truncating the prefix.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
+    let Ok(len) = u32::try_from(body.len()) else {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame body exceeds u32::MAX bytes",
+        ));
+    };
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame: `Ok(None)` at a clean EOF,
+/// `ErrorKind::InvalidData` when the declared length exceeds `max`
+/// (nothing past the header is consumed in that case).
+pub fn read_frame(reader: &mut impl Read, max: usize) -> std::io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    match reader.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    if len > max {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame too large",
+        ));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Some(body))
 }
 
 /// `read_line` with a byte cap: returns `Ok(None)` at EOF and
@@ -524,9 +928,7 @@ mod tests {
             ..BatchConfig::default()
         });
         svc.open("g1", &examples::g1());
-        let session = Session {
-            graph: svc.default_graph(),
-        };
+        let session = Session::new(svc.default_graph());
         (svc, session)
     }
 
@@ -548,6 +950,10 @@ mod tests {
         assert_eq!(
             svc.handle_command(&mut s, "HISTO", 0),
             "OK epoch=0 histo=0:0,1:2,2:4"
+        );
+        assert_eq!(
+            svc.handle_command(&mut s, "SHARDS", 0),
+            "OK shards=1 strategy=single"
         );
     }
 
@@ -584,6 +990,16 @@ mod tests {
         assert!(svc.handle_command(&mut s, "NOPE", 0).starts_with("ERR unknown command"));
         assert!(svc.handle_command(&mut s, "USE ghost", 0).starts_with("ERR unknown graph"));
         assert!(svc.handle_command(&mut s, "", 0).starts_with("ERR empty"));
+        // snapshot verbs are binary-only
+        assert!(svc
+            .handle_command(&mut s, "SNAPSHOT", 0)
+            .starts_with("ERR SNAPSHOT needs the binary protocol"));
+        assert!(svc
+            .handle_command(&mut s, "RESTORE r", 0)
+            .starts_with("ERR RESTORE needs the binary protocol"));
+        assert!(svc
+            .handle_command(&mut s, "OPEN x g1 0", 0)
+            .starts_with("ERR shards must be"));
     }
 
     #[test]
@@ -603,10 +1019,86 @@ mod tests {
     }
 
     #[test]
+    fn sharded_graph_over_the_protocol() {
+        let (svc, mut s) = service_with_g1();
+        let open = svc.handle_command(&mut s, "OPEN shg g1 4", 0);
+        assert_eq!(open, "OK open=shg vertices=6 edges=7 shards=4");
+        assert_eq!(s.graph, "shg");
+        let shards = svc.handle_command(&mut s, "SHARDS", 0);
+        assert!(shards.starts_with("OK shards=4 strategy=hash"), "{shards}");
+        // same answers as the single-index backend
+        assert_eq!(svc.handle_command(&mut s, "CORENESS 3", 0), "OK core=2 epoch=0");
+        assert_eq!(
+            svc.handle_command(&mut s, "HISTO", 0),
+            "OK epoch=0 histo=0:0,1:2,2:4"
+        );
+        // edits route through shards; FLUSH reports the merge
+        svc.handle_command(&mut s, "INSERT 2 5", 0);
+        let flush = svc.handle_command(&mut s, "FLUSH", 0);
+        assert!(
+            flush.starts_with("OK epoch=1 submitted=1 applied=1 coalesced=0 changed=1"),
+            "{flush}"
+        );
+        assert!(flush.contains(" shards=4 rounds="), "{flush}");
+        assert_eq!(svc.handle_command(&mut s, "CORENESS 2", 0), "OK core=3 epoch=1");
+        let densest = svc.handle_command(&mut s, "DENSEST", 0);
+        assert!(densest.starts_with("OK k=3 vertices=4 edges=6"), "{densest}");
+    }
+
+    #[test]
+    fn snapshot_restore_frames_round_trip_in_process() {
+        let (svc, mut s) = service_with_g1();
+        assert_eq!(svc.handle_command(&mut s, "BINARY", 0), "OK binary");
+        assert!(s.binary);
+        // SNAPSHOT: header line + payload bytes
+        let frame = svc.handle_frame(&mut s, b"SNAPSHOT", 0);
+        let nl = frame.iter().position(|&b| b == b'\n').expect("header line");
+        let head = std::str::from_utf8(&frame[..nl]).unwrap();
+        assert!(head.starts_with("OK snapshot name=g1 epoch=0 bytes="), "{head}");
+        let payload = frame[nl + 1..].to_vec();
+        assert_eq!(
+            head.rsplit('=').next().unwrap().parse::<usize>().unwrap(),
+            payload.len()
+        );
+        // RESTORE installs a replica serving identical answers
+        let mut req = b"RESTORE replica\n".to_vec();
+        req.extend_from_slice(&payload);
+        let reply = svc.handle_frame(&mut s, &req, 0);
+        assert_eq!(
+            std::str::from_utf8(&reply).unwrap(),
+            "OK restore=replica epoch=0 vertices=6 edges=7"
+        );
+        assert_eq!(s.graph, "replica");
+        assert_eq!(svc.handle_command(&mut s, "CORENESS 3", 0), "OK core=2 epoch=0");
+        assert_eq!(svc.handle_command(&mut s, "GRAPHS", 0), "OK n=2 g1 replica");
+        // corrupt payloads are rejected and leak no slot
+        let reply = svc.handle_frame(&mut s, b"RESTORE evil\nnot-a-snapshot", 0);
+        assert!(std::str::from_utf8(&reply).unwrap().starts_with("ERR restore:"));
+        assert_eq!(svc.handle_command(&mut s, "GRAPHS", 0), "OK n=2 g1 replica");
+    }
+
+    #[test]
+    fn sharded_snapshot_ships_one_shard() {
+        let (svc, mut s) = service_with_g1();
+        svc.handle_command(&mut s, "OPEN shg g1 2", 0);
+        svc.handle_command(&mut s, "BINARY", 0);
+        let err = svc.handle_frame(&mut s, b"SNAPSHOT", 0);
+        assert!(std::str::from_utf8(&err).unwrap().starts_with("ERR usage: SNAPSHOT <shard>"));
+        let frame = svc.handle_frame(&mut s, b"SNAPSHOT 1", 0);
+        let nl = frame.iter().position(|&b| b == b'\n').unwrap();
+        let head = std::str::from_utf8(&frame[..nl]).unwrap();
+        assert!(head.starts_with("OK snapshot name=shg/shard1 epoch=0"), "{head}");
+        let snap = crate::shard::snapshot::decode(&frame[nl + 1..]).unwrap();
+        assert_eq!(snap.name, "shg/shard1");
+        let oob = svc.handle_frame(&mut s, b"SNAPSHOT 9", 0);
+        assert!(std::str::from_utf8(&oob).unwrap().starts_with("ERR shard 9 out of range"));
+    }
+
+    #[test]
     fn members_reply_is_capped() {
         let svc = CoreService::new(BatchConfig::default());
         svc.open("star", &examples::star(200));
-        let mut s = Session { graph: "star".into() };
+        let mut s = Session::new("star");
         let reply = svc.handle_command(&mut s, "MEMBERS 1", 0);
         assert!(reply.starts_with("OK count=201 "), "{reply}");
         let members = reply.split("members=").nth(1).unwrap();
@@ -639,6 +1131,36 @@ mod tests {
         assert!(send("FLUSH", &mut r).starts_with("OK epoch=1"));
         assert_eq!(send("CORENESS 4", &mut r), "OK core=3 epoch=1");
         assert_eq!(send("QUIT", &mut r), "OK bye");
+        handle.stop();
+    }
+
+    #[test]
+    fn tcp_binary_upgrade_round_trip() {
+        let svc = Arc::new(CoreService::new(BatchConfig {
+            threads: 1,
+            ..BatchConfig::default()
+        }));
+        svc.open("g1", &examples::g1());
+        let handle = serve(svc, "127.0.0.1:0").expect("bind");
+
+        let stream = TcpStream::connect(handle.addr()).expect("connect");
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        writeln!(w, "BINARY").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "OK binary");
+
+        let mut send_frame = |body: &[u8], r: &mut BufReader<TcpStream>| -> Vec<u8> {
+            write_frame(&mut w, body).unwrap();
+            read_frame(r, MAX_FRAME_BYTES).unwrap().expect("reply frame")
+        };
+        assert_eq!(send_frame(b"PING", &mut r), b"OK pong");
+        assert_eq!(send_frame(b"CORENESS 3", &mut r), b"OK core=2 epoch=0");
+        let snap = send_frame(b"SNAPSHOT", &mut r);
+        assert!(snap.starts_with(b"OK snapshot name=g1 "));
+        assert_eq!(send_frame(b"QUIT", &mut r), b"OK bye");
         handle.stop();
     }
 }

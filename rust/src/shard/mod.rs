@@ -1,0 +1,37 @@
+//! Layer 3.6 — sharded serving: partition → route → merge.
+//!
+//! The serving layer (Layer 3.5) answers queries from one
+//! [`crate::service::CoreIndex`]; this layer spreads one logical graph
+//! across shards so no single worker has to hold (or re-decompose) the
+//! whole thing, while keeping every answer **exactly** equal to the
+//! single-index answer:
+//!
+//! * [`partition`] — vertex partitioners (stateless hash, degree-balanced
+//!   ranges) producing per-shard subgraphs with boundary-edge
+//!   bookkeeping. Owned vertices keep their complete adjacency; remote
+//!   neighbors become ghosts.
+//! * [`sharded`] — [`sharded::ShardedIndex`]: one epoch-versioned
+//!   `CoreIndex` per shard, a query router (coreness / members /
+//!   histogram / degeneracy fan-out + merge), and the boundary-refinement
+//!   merge (distributed h-index fixpoint) that makes merged coreness
+//!   exact. The TCP server serves the merged published snapshot; the
+//!   fan-out methods are the embedding API and what `shard_scaling`
+//!   measures.
+//! * [`snapshot`] — binary snapshot shipping: serialise a `CoreIndex`
+//!   epoch (graph + coreness + epoch) so a replica hydrates without
+//!   recomputing; the wire side is the server's `SNAPSHOT`/`RESTORE`
+//!   verbs over the length-prefixed binary protocol.
+//!
+//! Scaling behaviour (query throughput, merge overhead per shard count)
+//! is measured by `benches/shard_scaling.rs`; exactness versus a single
+//! index is property-tested in `tests/shard.rs`.
+
+pub mod partition;
+pub mod sharded;
+pub mod snapshot;
+
+pub use partition::{
+    assign_owners, hash_owner, partition, PartitionStrategy, Partitioning, ShardPlan,
+};
+pub use sharded::{MergeStats, ShardView, ShardedIndex, ShardedOutcome};
+pub use snapshot::{decode, encode, encode_index, IndexSnapshot};

@@ -1,0 +1,283 @@
+//! Vertex partitioning: split one [`CsrGraph`] into per-shard subgraphs
+//! with boundary-edge bookkeeping.
+//!
+//! A partition assigns every vertex to exactly one **owner** shard. Each
+//! shard's subgraph then contains:
+//!
+//! * its **owned** vertices with their *complete* global adjacency (every
+//!   edge incident to an owned vertex is present), and
+//! * **ghost** vertices — one-hop neighbors owned by other shards — which
+//!   carry only their edges to this shard's owned vertices.
+//!
+//! Two consequences the sharded index relies on:
+//!
+//! 1. an owned vertex's local degree equals its global degree, so the
+//!    degree initialisation of the boundary refinement is exact; and
+//! 2. a **boundary edge** (endpoints owned by different shards) appears
+//!    in exactly the two endpoint-owner subgraphs, so per-shard edge
+//!    counts merge to the global count as `Σ|E_s| − |E_boundary|`.
+//!
+//! Local vertex ids are dense: owned vertices first (in ascending global
+//! order), ghosts after (in first-encounter order).
+
+use crate::graph::{CsrGraph, GraphBuilder, VertexId};
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// How vertices are assigned to shards.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PartitionStrategy {
+    /// `owner(v) = mix(v) mod shards` — stateless and stable under vertex
+    /// growth, at the cost of ignoring locality entirely.
+    Hash,
+    /// Contiguous id ranges cut so every shard holds roughly the same
+    /// total degree (arc mass), which balances refinement sweep work on
+    /// skewed graphs. Vertices created after partitioning route by hash.
+    DegreeRange,
+}
+
+impl PartitionStrategy {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "hash" => Ok(Self::Hash),
+            "range" | "degree-range" => Ok(Self::DegreeRange),
+            other => bail!("unknown partition strategy '{other}' (hash|range)"),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::Hash => "hash",
+            Self::DegreeRange => "range",
+        }
+    }
+}
+
+/// Deterministic vertex → shard assignment (splitmix64 finaliser). Also
+/// the growth rule for vertices created after partitioning, whatever the
+/// build-time strategy.
+pub fn hash_owner(v: VertexId, num_shards: usize) -> u32 {
+    let mut x = (v as u64) ^ 0x9E37_79B9_7F4A_7C15;
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^= x >> 31;
+    (x % num_shards.max(1) as u64) as u32
+}
+
+/// One shard's slice of the graph.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    pub id: usize,
+    /// Owned vertices (global ids, ascending). Local ids `0..owned.len()`.
+    pub owned: Vec<VertexId>,
+    /// Ghost vertices (global ids). Local ids continue after the owned.
+    pub ghosts: Vec<VertexId>,
+    /// Local-id CSR over owned + ghosts.
+    pub subgraph: CsrGraph,
+    /// Edges with both endpoints owned here.
+    pub internal_edges: u64,
+    /// Edges from an owned vertex to a ghost (each such global edge is a
+    /// boundary edge of exactly two shards).
+    pub boundary_edges: u64,
+}
+
+/// A complete partition of one graph.
+#[derive(Clone, Debug)]
+pub struct Partitioning {
+    pub strategy: PartitionStrategy,
+    pub num_shards: usize,
+    /// `owner[v]` = shard owning global vertex `v`.
+    pub owner: Vec<u32>,
+    pub shards: Vec<ShardPlan>,
+}
+
+impl Partitioning {
+    /// Distinct global boundary edges (each is counted by two shards).
+    pub fn boundary_edges(&self) -> u64 {
+        self.shards.iter().map(|s| s.boundary_edges).sum::<u64>() / 2
+    }
+}
+
+/// Assign owners without building subgraphs.
+pub fn assign_owners(g: &CsrGraph, num_shards: usize, strategy: PartitionStrategy) -> Vec<u32> {
+    let n = g.num_vertices();
+    let num_shards = num_shards.max(1);
+    match strategy {
+        PartitionStrategy::Hash => (0..n as VertexId).map(|v| hash_owner(v, num_shards)).collect(),
+        PartitionStrategy::DegreeRange => {
+            // Weight each vertex by degree + 1 (the +1 spreads isolated
+            // vertices too); cut contiguous ranges at even weight.
+            let total: u64 = g.num_arcs() + n as u64;
+            let target = (total / num_shards as u64).max(1);
+            let mut owner = vec![0u32; n];
+            let mut shard = 0u32;
+            let mut acc = 0u64;
+            for v in 0..n {
+                owner[v] = shard;
+                acc += g.degree(v as VertexId) as u64 + 1;
+                if acc >= target && (shard as usize) < num_shards - 1 {
+                    shard += 1;
+                    acc = 0;
+                }
+            }
+            owner
+        }
+    }
+}
+
+/// Partition `g` into `num_shards` subgraphs under `strategy`.
+pub fn partition(g: &CsrGraph, num_shards: usize, strategy: PartitionStrategy) -> Partitioning {
+    let num_shards = num_shards.max(1);
+    let owner = assign_owners(g, num_shards, strategy);
+    let n = g.num_vertices();
+    let mut shards = Vec::with_capacity(num_shards);
+    for s in 0..num_shards {
+        let sid = s as u32;
+        let owned: Vec<VertexId> =
+            (0..n as VertexId).filter(|&v| owner[v as usize] == sid).collect();
+        let mut local: HashMap<VertexId, u32> = owned
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, i as u32))
+            .collect();
+        let mut ghosts: Vec<VertexId> = Vec::new();
+        for &v in &owned {
+            for &w in g.neighbors(v) {
+                if owner[w as usize] != sid && !local.contains_key(&w) {
+                    local.insert(w, (owned.len() + ghosts.len()) as u32);
+                    ghosts.push(w);
+                }
+            }
+        }
+        let mut b = GraphBuilder::new(owned.len() + ghosts.len());
+        let mut internal_edges = 0u64;
+        let mut boundary_edges = 0u64;
+        for &v in &owned {
+            let lv = local[&v];
+            for &w in g.neighbors(v) {
+                let lw = local[&w];
+                if owner[w as usize] == sid {
+                    // internal edge: both endpoints iterated, add once
+                    if v < w {
+                        b.add_edge(lv, lw);
+                        internal_edges += 1;
+                    }
+                } else {
+                    // boundary edge: only the owned endpoint is iterated
+                    b.add_edge(lv, lw);
+                    boundary_edges += 1;
+                }
+            }
+        }
+        shards.push(ShardPlan {
+            id: s,
+            owned,
+            ghosts,
+            subgraph: b.build(format!("{}::shard{s}", g.name)),
+            internal_edges,
+            boundary_edges,
+        });
+    }
+    Partitioning {
+        strategy,
+        num_shards,
+        owner,
+        shards,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{examples, gen};
+
+    fn check_plan(g: &CsrGraph, p: &Partitioning) {
+        // every vertex owned exactly once
+        let owned_total: usize = p.shards.iter().map(|s| s.owned.len()).sum();
+        assert_eq!(owned_total, g.num_vertices());
+        for s in &p.shards {
+            assert_eq!(s.subgraph.validate(), Ok(()));
+            assert_eq!(s.subgraph.num_vertices(), s.owned.len() + s.ghosts.len());
+            // owned vertices keep their global degree
+            for (l, &v) in s.owned.iter().enumerate() {
+                assert_eq!(s.subgraph.degree(l as u32), g.degree(v), "shard {} v{v}", s.id);
+            }
+            for &gv in &s.ghosts {
+                assert_ne!(p.owner[gv as usize] as usize, s.id);
+            }
+        }
+        // edge conservation: Σ internal + Σ boundary/2 == |E|
+        let internal: u64 = p.shards.iter().map(|s| s.internal_edges).sum();
+        let boundary2: u64 = p.shards.iter().map(|s| s.boundary_edges).sum();
+        assert_eq!(boundary2 % 2, 0);
+        assert_eq!(internal + boundary2 / 2, g.num_edges());
+        assert_eq!(p.boundary_edges(), boundary2 / 2);
+    }
+
+    #[test]
+    fn hash_partition_covers_g1() {
+        let g = examples::g1();
+        for k in [1, 2, 4, 8] {
+            check_plan(&g, &partition(&g, k, PartitionStrategy::Hash));
+        }
+    }
+
+    #[test]
+    fn range_partition_balances_degree() {
+        let g = gen::barabasi_albert(400, 3, 7);
+        let p = partition(&g, 4, PartitionStrategy::DegreeRange);
+        check_plan(&g, &p);
+        // no shard should hold more than half the arc mass
+        for s in &p.shards {
+            let arcs: u64 = s.owned.iter().map(|&v| g.degree(v) as u64).sum();
+            assert!(arcs <= g.num_arcs() / 2 + 1, "shard {} holds {arcs} arcs", s.id);
+        }
+        // ranges are contiguous
+        for w in p.owner.windows(2) {
+            assert!(w[0] <= w[1]);
+        }
+    }
+
+    #[test]
+    fn single_shard_is_identity() {
+        let g = gen::erdos_renyi(60, 150, 3);
+        let p = partition(&g, 1, PartitionStrategy::Hash);
+        assert_eq!(p.shards.len(), 1);
+        let s = &p.shards[0];
+        assert!(s.ghosts.is_empty());
+        assert_eq!(s.boundary_edges, 0);
+        assert_eq!(s.subgraph.num_edges(), g.num_edges());
+    }
+
+    #[test]
+    fn empty_and_tiny_graphs() {
+        let empty = crate::graph::GraphBuilder::new(0).build("empty");
+        let p = partition(&empty, 4, PartitionStrategy::DegreeRange);
+        check_plan(&empty, &p);
+        let one = crate::graph::GraphBuilder::new(1).build("one");
+        let p = partition(&one, 8, PartitionStrategy::Hash);
+        check_plan(&one, &p);
+        // more shards than vertices: some shards are empty
+        assert!(p.shards.iter().any(|s| s.owned.is_empty()));
+    }
+
+    #[test]
+    fn hash_owner_is_stable_and_in_range() {
+        for v in 0..100u32 {
+            let a = hash_owner(v, 4);
+            assert_eq!(a, hash_owner(v, 4));
+            assert!(a < 4);
+        }
+        assert_eq!(hash_owner(7, 1), 0);
+    }
+
+    #[test]
+    fn strategy_parsing() {
+        assert_eq!(PartitionStrategy::parse("hash").unwrap(), PartitionStrategy::Hash);
+        assert_eq!(PartitionStrategy::parse("range").unwrap(), PartitionStrategy::DegreeRange);
+        assert!(PartitionStrategy::parse("nope").is_err());
+        assert_eq!(PartitionStrategy::DegreeRange.name(), "range");
+    }
+}

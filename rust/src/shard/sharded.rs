@@ -1,0 +1,827 @@
+//! The sharded core index: one epoch-versioned [`CoreIndex`] per shard, a
+//! router that fans queries out and merges per-shard answers, and the
+//! boundary refinement that makes the merged coreness *exact*.
+//!
+//! # Why merged answers are exact
+//!
+//! A shard's local coreness (what its own [`CoreIndex`] maintains) is only
+//! a lower bound on global coreness — ghost vertices under-report their
+//! degree. The merge therefore runs the distributed h-index fixpoint
+//! (Montresor et al., the streaming/partitioned k-core line of work): every
+//! owned vertex starts from its *global* degree (exact in our partitions —
+//! owned vertices keep their full adjacency), each shard sweeps
+//! `est[v] ← min(est[v], H(est[N(v)]))` to a local fixpoint, and the
+//! router exchanges boundary-vertex estimates between rounds. Estimates
+//! are always upper bounds and only decrease, so the iteration terminates;
+//! at the global fixpoint `est[v] ≤ H(est[N(v)])` for every vertex, which
+//! (with the upper-bound invariant) forces `est == coreness` — the same
+//! argument as the Index2core paradigm, distributed across shards.
+//!
+//! The number of exchange rounds and refreshed boundary values is reported
+//! per flush ([`MergeStats`]) and measured by `benches/shard_scaling.rs`.
+//!
+//! # Epochs
+//!
+//! The sharded index publishes *global* epochs exactly like a single
+//! [`CoreIndex`]: epoch 0 is the initial decomposition, one epoch per
+//! non-empty flush. Readers grab the published [`CoreSnapshot`] (or the
+//! per-shard [`ShardView`]s) and never block on writers. Per-shard
+//! `CoreIndex` epochs advance independently (one per flush that touched
+//! the shard) and are what [`super::snapshot`] ships to replicas.
+
+use super::partition::{hash_owner, partition, PartitionStrategy};
+use crate::core::hindex::{hindex_capped, HindexScratch};
+use crate::core::maintenance::EdgeEdit;
+use crate::core::Hybrid;
+use crate::graph::{CsrGraph, GraphBuilder, VertexId};
+use crate::service::batch::{coalesce, BatchConfig};
+use crate::service::index::{CoreIndex, CoreSnapshot};
+use crate::util::timer::Timer;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// What one boundary-refinement (merge) pass did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    /// Global exchange rounds until the fixpoint.
+    pub rounds: usize,
+    /// Shard-local sweep passes (a shard sweeps only when dirty).
+    pub sweeps: usize,
+    /// Ghost-copy refreshes that actually changed a value.
+    pub boundary_updates: u64,
+}
+
+/// One shard's published slice of the merged decomposition.
+#[derive(Clone, Debug)]
+pub struct ShardView {
+    pub shard: usize,
+    /// The shard-local `CoreIndex` epoch this view was built from.
+    pub epoch: u64,
+    /// Owned vertices (global ids).
+    pub owned: Vec<VertexId>,
+    /// Refined *global* coreness, aligned with `owned`.
+    pub core: Vec<u32>,
+    /// Max refined coreness among owned vertices.
+    pub k_max: u32,
+}
+
+/// Immutable published state: the merged global snapshot plus the
+/// per-shard views the router fans out over.
+struct Published {
+    global: Arc<CoreSnapshot>,
+    views: Vec<Arc<ShardView>>,
+    owner: Arc<Vec<u32>>,
+    /// `slot[v]` = index of `v` inside its owner's view.
+    slot: Vec<u32>,
+    merge: MergeStats,
+    boundary_edges: u64,
+}
+
+/// Writer-side state of one shard.
+struct Shard {
+    id: usize,
+    index: Arc<CoreIndex>,
+    /// local id → global id.
+    globals: Vec<VertexId>,
+    /// global id → local id.
+    locals: HashMap<VertexId, u32>,
+    /// Local ids owned by this shard.
+    owned_locals: Vec<u32>,
+}
+
+impl Shard {
+    /// Local id of `v`, registering it as a new local (ghost or owned —
+    /// the caller maintains `owned_locals`) if unseen.
+    fn local_id(&mut self, v: VertexId) -> u32 {
+        if let Some(&l) = self.locals.get(&v) {
+            return l;
+        }
+        let l = self.globals.len() as u32;
+        self.globals.push(v);
+        self.locals.insert(v, l);
+        l
+    }
+}
+
+struct WriterState {
+    owner: Vec<u32>,
+    shards: Vec<Shard>,
+}
+
+/// Everything one refinement pass computes.
+struct RefineResult {
+    /// Exact global coreness, indexed by global vertex id.
+    core: Vec<u32>,
+    stats: MergeStats,
+    num_edges: u64,
+    boundary_edges: u64,
+}
+
+/// What one sharded flush did (the sharded analog of
+/// [`crate::service::BatchOutcome`], plus merge accounting).
+#[derive(Clone, Debug)]
+pub struct ShardedOutcome {
+    /// Merged global snapshot published by this flush.
+    pub snapshot: Arc<CoreSnapshot>,
+    pub submitted: usize,
+    pub applied: usize,
+    pub coalesced: usize,
+    /// Edits that changed the global edge set (boundary edits counted
+    /// once, by the owner of their lower endpoint).
+    pub changed: usize,
+    /// Shards whose batch took the full-recompute fallback.
+    pub recomputed_shards: usize,
+    pub merge: MergeStats,
+    /// Time inside the boundary refinement (the merge overhead).
+    pub merge_elapsed: Duration,
+    pub elapsed: Duration,
+}
+
+impl ShardedOutcome {
+    pub fn elapsed_ms(&self) -> f64 {
+        self.elapsed.as_secs_f64() * 1e3
+    }
+
+    pub fn merge_ms(&self) -> f64 {
+        self.merge_elapsed.as_secs_f64() * 1e3
+    }
+}
+
+/// A partitioned, epoch-versioned core index with exact merged answers.
+pub struct ShardedIndex {
+    name: String,
+    strategy: PartitionStrategy,
+    num_shards: usize,
+    cfg: BatchConfig,
+    state: Mutex<WriterState>,
+    published: RwLock<Arc<Published>>,
+    epoch: AtomicU64,
+    /// Per-epoch assembled-global-CSR cache (structure queries).
+    graph_cache: Mutex<Option<(u64, Arc<CsrGraph>)>>,
+    pending: Mutex<Vec<EdgeEdit>>,
+    /// Serialises whole flushes (same contract as `EditQueue`).
+    flush_lock: Mutex<()>,
+}
+
+impl ShardedIndex {
+    /// Partition `g`, build one `CoreIndex` per shard, refine, and publish
+    /// the merged decomposition as epoch 0.
+    pub fn new(
+        name: impl Into<String>,
+        g: &CsrGraph,
+        num_shards: usize,
+        strategy: PartitionStrategy,
+        cfg: BatchConfig,
+    ) -> Self {
+        let name = name.into();
+        let num_shards = num_shards.max(1);
+        let plan = partition(g, num_shards, strategy);
+        let mut shards = Vec::with_capacity(num_shards);
+        for p in plan.shards {
+            let mut globals = p.owned.clone();
+            globals.extend_from_slice(&p.ghosts);
+            let locals: HashMap<VertexId, u32> = globals
+                .iter()
+                .enumerate()
+                .map(|(i, &v)| (v, i as u32))
+                .collect();
+            let owned_locals: Vec<u32> = (0..p.owned.len() as u32).collect();
+            shards.push(Shard {
+                id: p.id,
+                index: Arc::new(CoreIndex::new(format!("{name}/shard{}", p.id), &p.subgraph)),
+                globals,
+                locals,
+                owned_locals,
+            });
+        }
+        let state = WriterState {
+            owner: plan.owner,
+            shards,
+        };
+        let refined = Self::refine(&state);
+        let published = Self::build_published(&state, 0, refined);
+        Self {
+            name,
+            strategy,
+            num_shards,
+            cfg,
+            state: Mutex::new(state),
+            published: RwLock::new(Arc::new(published)),
+            epoch: AtomicU64::new(0),
+            graph_cache: Mutex::new(None),
+            pending: Mutex::new(Vec::new()),
+            flush_lock: Mutex::new(()),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.num_shards
+    }
+
+    pub fn strategy(&self) -> PartitionStrategy {
+        self.strategy
+    }
+
+    /// Last published global epoch.
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// The merged global snapshot — identical in shape and content to a
+    /// single `CoreIndex`'s snapshot over the same graph.
+    pub fn snapshot(&self) -> Arc<CoreSnapshot> {
+        self.published.read().unwrap().global.clone()
+    }
+
+    fn published(&self) -> Arc<Published> {
+        self.published.read().unwrap().clone()
+    }
+
+    /// Routed point query: owner shard's view answers.
+    pub fn coreness(&self, v: VertexId) -> Option<u32> {
+        let p = self.published();
+        let owner = *p.owner.get(v as usize)? as usize;
+        let i = p.slot[v as usize] as usize;
+        Some(p.views[owner].core[i])
+    }
+
+    /// Fan-out + merge: per-shard k-core members, merged into the global
+    /// ascending membership list.
+    pub fn kcore_members(&self, k: u32) -> Vec<VertexId> {
+        let p = self.published();
+        let mut out: Vec<VertexId> = Vec::new();
+        for view in &p.views {
+            out.extend(
+                view.owned
+                    .iter()
+                    .zip(&view.core)
+                    .filter(|&(_, &c)| c >= k)
+                    .map(|(&v, _)| v),
+            );
+        }
+        out.sort_unstable();
+        out
+    }
+
+    /// Fan-out + merge: |k-core| as the sum of per-shard partial counts.
+    pub fn kcore_size(&self, k: u32) -> usize {
+        let p = self.published();
+        p.views
+            .iter()
+            .map(|view| view.core.iter().filter(|&&c| c >= k).count())
+            .sum()
+    }
+
+    /// Fan-out + merge: per-shard histograms summed cell-wise.
+    pub fn histogram(&self) -> Vec<u64> {
+        let p = self.published();
+        let mut hist = vec![0u64; p.global.k_max as usize + 1];
+        for view in &p.views {
+            for &c in &view.core {
+                hist[c as usize] += 1;
+            }
+        }
+        hist
+    }
+
+    /// Fan-out + merge: global degeneracy = max per-shard refined k_max.
+    pub fn degeneracy(&self) -> u32 {
+        let p = self.published();
+        p.views.iter().map(|v| v.k_max).max().unwrap_or(0)
+    }
+
+    /// Merge accounting of the refinement that produced the current epoch.
+    pub fn merge_stats(&self) -> MergeStats {
+        self.published.read().unwrap().merge
+    }
+
+    /// Distinct global boundary edges at the current epoch.
+    pub fn boundary_edges(&self) -> u64 {
+        self.published.read().unwrap().boundary_edges
+    }
+
+    /// Per-shard published views (router inputs).
+    pub fn shard_views(&self) -> Vec<Arc<ShardView>> {
+        self.published.read().unwrap().views.clone()
+    }
+
+    /// Shard-local `CoreIndex` epochs at the current published state.
+    pub fn shard_epochs(&self) -> Vec<u64> {
+        self.published
+            .read()
+            .unwrap()
+            .views
+            .iter()
+            .map(|v| v.epoch)
+            .collect()
+    }
+
+    /// A shard's own epoch-versioned index — what snapshot shipping
+    /// serialises for replicas.
+    pub fn shard_index(&self, shard: usize) -> Option<Arc<CoreIndex>> {
+        self.state
+            .lock()
+            .unwrap()
+            .shards
+            .get(shard)
+            .map(|s| s.index.clone())
+    }
+
+    /// Enqueue one edit; returns the pending count after the push.
+    pub fn submit(&self, e: EdgeEdit) -> usize {
+        let mut p = self.pending.lock().unwrap();
+        p.push(e);
+        p.len()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// Drain pending edits, route them to their owner shards, apply each
+    /// shard's batch through the incremental-vs-recompute pipeline, then
+    /// refine boundary estimates and publish one merged epoch.
+    pub fn flush(&self) -> ShardedOutcome {
+        let _in_flight = self.flush_lock.lock().unwrap();
+        let edits: Vec<EdgeEdit> = std::mem::take(&mut *self.pending.lock().unwrap());
+        if edits.is_empty() {
+            return ShardedOutcome {
+                snapshot: self.snapshot(),
+                submitted: 0,
+                applied: 0,
+                coalesced: 0,
+                changed: 0,
+                recomputed_shards: 0,
+                merge: MergeStats::default(),
+                merge_elapsed: Duration::ZERO,
+                elapsed: Duration::ZERO,
+            };
+        }
+        let timer = Timer::start();
+        let batch = coalesce(&edits);
+        let applied = batch.len();
+        let mut state = self.state.lock().unwrap();
+
+        // 1. Grow the global vertex set exactly like a single index does
+        //    (`ensure_vertex(max endpoint)`: intermediate ids exist too).
+        let mut new_n = state.owner.len();
+        for e in &batch {
+            let (_, hi) = e.endpoints();
+            new_n = new_n.max(hi as usize + 1);
+        }
+        let mut touched = vec![false; state.shards.len()];
+        for v in state.owner.len()..new_n {
+            let s = hash_owner(v as VertexId, self.num_shards);
+            state.owner.push(s);
+            let shard = &mut state.shards[s as usize];
+            let l = shard.local_id(v as VertexId);
+            shard.owned_locals.push(l);
+            touched[s as usize] = true;
+        }
+
+        // 2. Route each edit to its endpoint-owner shard(s), translating
+        //    to local ids. The owner of the lower endpoint is "primary"
+        //    and accounts for the edit's `changed` bit.
+        let mut per_shard: Vec<Vec<(EdgeEdit, bool)>> = vec![Vec::new(); state.shards.len()];
+        for &e in &batch {
+            let (u, v) = e.endpoints();
+            let a = state.owner[u as usize] as usize;
+            let b = state.owner[v as usize] as usize;
+            for &(s, primary) in &[(a, true), (b, false)] {
+                if !primary && s == a {
+                    continue; // shard-internal edit: dispatch once
+                }
+                let shard = &mut state.shards[s];
+                let lu = shard.local_id(u);
+                let lv = shard.local_id(v);
+                let local = match e {
+                    EdgeEdit::Insert(_, _) => EdgeEdit::Insert(lu, lv),
+                    EdgeEdit::Delete(_, _) => EdgeEdit::Delete(lu, lv),
+                };
+                per_shard[s].push((local, primary));
+                touched[s] = true;
+            }
+        }
+
+        // 3. Apply per-shard batches (one shard epoch per touched shard).
+        let mut changed = 0usize;
+        let mut recomputed_shards = 0usize;
+        for (s, shard_edits) in per_shard.iter().enumerate() {
+            if !touched[s] {
+                continue;
+            }
+            let (c, recomputed) = Self::apply_to_shard(&state.shards[s], shard_edits, &self.cfg);
+            changed += c;
+            if recomputed {
+                recomputed_shards += 1;
+            }
+        }
+
+        // 4. Merge: boundary refinement, then publish the new epoch.
+        let merge_timer = Timer::start();
+        let refined = Self::refine(&state);
+        let merge_elapsed = merge_timer.elapsed();
+        let merge = refined.stats;
+        let epoch = self.epoch.load(Ordering::SeqCst) + 1;
+        let published = Self::build_published(&state, epoch, refined);
+        let snapshot = published.global.clone();
+        *self.published.write().unwrap() = Arc::new(published);
+        self.epoch.store(epoch, Ordering::SeqCst);
+
+        ShardedOutcome {
+            snapshot,
+            submitted: edits.len(),
+            applied,
+            coalesced: edits.len() - applied,
+            changed,
+            recomputed_shards,
+            merge,
+            merge_elapsed,
+            elapsed: timer.elapsed(),
+        }
+    }
+
+    /// One shard's batch: grow the local vertex set, then either per-edit
+    /// incremental maintenance or structural edits + full recompute — the
+    /// same crossover policy as `service::batch::apply_batch`.
+    fn apply_to_shard(
+        shard: &Shard,
+        edits: &[(EdgeEdit, bool)],
+        cfg: &BatchConfig,
+    ) -> (usize, bool) {
+        let last_local = shard.globals.len().checked_sub(1).map(|l| l as u32);
+        let ((changed, recomputed), _snap) = shard.index.update(|dc| {
+            if let Some(last) = last_local {
+                dc.ensure_vertex(last);
+            }
+            let threshold = cfg.recompute_threshold(dc.num_edges());
+            let mut changed = 0usize;
+            if !edits.is_empty() && edits.len() >= threshold {
+                for &(e, primary) in edits {
+                    let did = match e {
+                        EdgeEdit::Insert(u, v) => dc.insert_edge_structural(u, v),
+                        EdgeEdit::Delete(u, v) => dc.delete_edge_structural(u, v),
+                    };
+                    if did && primary {
+                        changed += 1;
+                    }
+                }
+                dc.recompute_with(&Hybrid::default(), cfg.threads);
+                (changed, true)
+            } else {
+                for &(e, primary) in edits {
+                    if dc.apply(e) && primary {
+                        changed += 1;
+                    }
+                }
+                (changed, false)
+            }
+        });
+        (changed, recomputed)
+    }
+
+    /// The distributed h-index fixpoint over all shards (see module docs).
+    fn refine(state: &WriterState) -> RefineResult {
+        let n = state.owner.len();
+        let num_shards = state.shards.len();
+        let graphs: Vec<Arc<CsrGraph>> = state.shards.iter().map(|s| s.index.graph()).collect();
+
+        // Per-shard ghost lists + edge accounting in one setup pass.
+        let mut ghost_locals: Vec<Vec<u32>> = Vec::with_capacity(num_shards);
+        let mut internal_arcs = 0u64;
+        let mut boundary_arcs = 0u64;
+        for (shard, g) in state.shards.iter().zip(&graphs) {
+            let sid = shard.id as u32;
+            let ghosts: Vec<u32> = (0..g.num_vertices() as u32)
+                .filter(|&l| state.owner[shard.globals[l as usize] as usize] != sid)
+                .collect();
+            let is_ghost: Vec<bool> = {
+                let mut m = vec![false; g.num_vertices()];
+                for &l in &ghosts {
+                    m[l as usize] = true;
+                }
+                m
+            };
+            for &l in &shard.owned_locals {
+                for &w in g.neighbors(l) {
+                    if is_ghost[w as usize] {
+                        boundary_arcs += 1;
+                    } else {
+                        internal_arcs += 1;
+                    }
+                }
+            }
+            ghost_locals.push(ghosts);
+        }
+
+        // Estimates: owned vertices start at their (global == local)
+        // degree; ghost copies are overwritten from the mailbox before the
+        // first sweep. The mailbox holds every vertex's current estimate
+        // per its owner.
+        let mut est: Vec<Vec<u32>> = graphs
+            .iter()
+            .map(|g| (0..g.num_vertices() as u32).map(|l| g.degree(l)).collect())
+            .collect();
+        let mut mailbox = vec![0u32; n];
+        for (shard, e) in state.shards.iter().zip(&est) {
+            for &l in &shard.owned_locals {
+                mailbox[shard.globals[l as usize] as usize] = e[l as usize];
+            }
+        }
+
+        let mut stats = MergeStats::default();
+        let mut scratch = HindexScratch::new();
+        let mut dirty = vec![true; num_shards];
+        loop {
+            stats.rounds += 1;
+            // Exchange: pull each ghost copy from its owner's estimate.
+            for (si, shard) in state.shards.iter().enumerate() {
+                let e = &mut est[si];
+                for &l in &ghost_locals[si] {
+                    let v = shard.globals[l as usize];
+                    let nv = mailbox[v as usize];
+                    if e[l as usize] != nv {
+                        e[l as usize] = nv;
+                        stats.boundary_updates += 1;
+                        dirty[si] = true;
+                    }
+                }
+            }
+            // Sweep each dirty shard to its local fixpoint, then publish
+            // its owned estimates back into the mailbox.
+            let mut any = false;
+            for (si, shard) in state.shards.iter().enumerate() {
+                if !dirty[si] {
+                    continue;
+                }
+                dirty[si] = false;
+                any = true;
+                stats.sweeps += 1;
+                let g = &graphs[si];
+                let e = &mut est[si];
+                loop {
+                    let mut changed = false;
+                    for &l in &shard.owned_locals {
+                        let cap = e[l as usize];
+                        if cap == 0 {
+                            continue;
+                        }
+                        let h = {
+                            let vals = &*e;
+                            hindex_capped(
+                                g.neighbors(l).iter().map(|&w| vals[w as usize]),
+                                cap,
+                                &mut scratch,
+                            )
+                        };
+                        if h < cap {
+                            e[l as usize] = h;
+                            changed = true;
+                        }
+                    }
+                    if !changed {
+                        break;
+                    }
+                }
+                for &l in &shard.owned_locals {
+                    mailbox[shard.globals[l as usize] as usize] = e[l as usize];
+                }
+            }
+            if !any {
+                break;
+            }
+        }
+
+        RefineResult {
+            core: mailbox,
+            stats,
+            num_edges: (internal_arcs + boundary_arcs) / 2,
+            boundary_edges: boundary_arcs / 2,
+        }
+    }
+
+    /// Assemble the published read-side state for `epoch`.
+    fn build_published(state: &WriterState, epoch: u64, refined: RefineResult) -> Published {
+        let RefineResult {
+            core,
+            stats,
+            num_edges,
+            boundary_edges,
+        } = refined;
+        let k_max = core.iter().copied().max().unwrap_or(0);
+        let mut slot = vec![0u32; core.len()];
+        let mut views = Vec::with_capacity(state.shards.len());
+        for shard in &state.shards {
+            let owned: Vec<VertexId> = shard
+                .owned_locals
+                .iter()
+                .map(|&l| shard.globals[l as usize])
+                .collect();
+            let vcore: Vec<u32> = owned.iter().map(|&v| core[v as usize]).collect();
+            for (i, &v) in owned.iter().enumerate() {
+                slot[v as usize] = i as u32;
+            }
+            views.push(Arc::new(ShardView {
+                shard: shard.id,
+                epoch: shard.index.epoch(),
+                k_max: vcore.iter().copied().max().unwrap_or(0),
+                owned,
+                core: vcore,
+            }));
+        }
+        Published {
+            global: Arc::new(CoreSnapshot {
+                epoch,
+                core,
+                k_max,
+                num_edges,
+            }),
+            views,
+            owner: Arc::new(state.owner.clone()),
+            slot,
+            merge: stats,
+            boundary_edges,
+        }
+    }
+
+    /// Assembled global CSR at the current epoch (per-epoch cached). Like
+    /// `CoreIndex::graph`, this is the one heavyweight read: it serialises
+    /// with writers.
+    pub fn graph(&self) -> Arc<CsrGraph> {
+        let state = self.state.lock().unwrap();
+        self.graph_locked(&state)
+    }
+
+    fn graph_locked(&self, state: &WriterState) -> Arc<CsrGraph> {
+        let epoch = self.epoch.load(Ordering::SeqCst);
+        let mut cache = self.graph_cache.lock().unwrap();
+        if let Some((e, g)) = cache.as_ref() {
+            if *e == epoch {
+                return g.clone();
+            }
+        }
+        let g = Arc::new(Self::assemble_global(state, &self.name));
+        *cache = Some((epoch, g.clone()));
+        g
+    }
+
+    /// A mutually consistent (merged snapshot, assembled graph) pair.
+    pub fn consistent_view(&self) -> (Arc<CoreSnapshot>, Arc<CsrGraph>) {
+        let state = self.state.lock().unwrap();
+        let g = self.graph_locked(&state);
+        (self.published.read().unwrap().global.clone(), g)
+    }
+
+    /// Union of shard subgraphs mapped back to global ids. Boundary edges
+    /// exist in two shards; the builder's dedup collapses them.
+    fn assemble_global(state: &WriterState, name: &str) -> CsrGraph {
+        let mut b = GraphBuilder::new(state.owner.len());
+        for shard in &state.shards {
+            let g = shard.index.graph();
+            for &l in &shard.owned_locals {
+                let gu = shard.globals[l as usize];
+                for &w in g.neighbors(l) {
+                    b.add_edge(gu, shard.globals[w as usize]);
+                }
+            }
+        }
+        b.build(name)
+    }
+}
+
+impl std::fmt::Debug for ShardedIndex {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        write!(
+            f,
+            "ShardedIndex({} x{} [{}] @ epoch {}: |V|={}, |E|={}, k_max={})",
+            self.name,
+            self.num_shards,
+            self.strategy.name(),
+            s.epoch,
+            s.num_vertices(),
+            s.num_edges,
+            s.k_max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::examples;
+
+    fn cfg() -> BatchConfig {
+        BatchConfig {
+            threads: 1,
+            ..BatchConfig::default()
+        }
+    }
+
+    #[test]
+    fn merged_snapshot_matches_single_index_on_g1() {
+        let g = examples::g1();
+        let single = CoreIndex::new("single", &g);
+        for shards in [1, 2, 3, 4, 8] {
+            for strategy in [PartitionStrategy::Hash, PartitionStrategy::DegreeRange] {
+                let sh = ShardedIndex::new("g1", &g, shards, strategy, cfg());
+                let a = sh.snapshot();
+                let b = single.snapshot();
+                assert_eq!(a.core, b.core, "{shards} shards, {}", strategy.name());
+                assert_eq!(a.num_edges, b.num_edges);
+                assert_eq!(a.k_max, b.k_max);
+                assert_eq!(a.epoch, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn routed_queries_agree_with_snapshot() {
+        let g = crate::graph::gen::barabasi_albert(200, 3, 9);
+        let sh = ShardedIndex::new("ba", &g, 4, PartitionStrategy::Hash, cfg());
+        let s = sh.snapshot();
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(sh.coreness(v), s.coreness(v));
+        }
+        assert_eq!(sh.coreness(g.num_vertices() as u32), None);
+        assert_eq!(sh.degeneracy(), s.degeneracy());
+        assert_eq!(sh.histogram(), s.histogram());
+        for k in 0..=s.k_max {
+            assert_eq!(sh.kcore_members(k), s.kcore_members(k));
+            assert_eq!(sh.kcore_size(k), s.kcore_size(k));
+        }
+    }
+
+    #[test]
+    fn edits_flow_through_shards_and_stay_exact() {
+        let g = examples::g1();
+        let sh = ShardedIndex::new("g1", &g, 3, PartitionStrategy::Hash, cfg());
+        sh.submit(EdgeEdit::Insert(2, 5));
+        sh.submit(EdgeEdit::Insert(2, 5)); // coalesces away
+        assert_eq!(sh.pending(), 2);
+        let out = sh.flush();
+        assert_eq!(out.submitted, 2);
+        assert_eq!(out.applied, 1);
+        assert_eq!(out.coalesced, 1);
+        assert_eq!(out.changed, 1);
+        assert_eq!(out.snapshot.epoch, 1);
+        assert_eq!(sh.epoch(), 1);
+        let (snap, graph) = sh.consistent_view();
+        assert_eq!(snap.core, bz_coreness(&graph));
+        assert_eq!(snap.k_max, 3);
+        // empty flush publishes nothing
+        let out = sh.flush();
+        assert_eq!(out.submitted, 0);
+        assert_eq!(sh.epoch(), 1);
+    }
+
+    #[test]
+    fn edits_grow_the_vertex_set_like_a_single_index() {
+        let g = examples::g1();
+        let sh = ShardedIndex::new("g1", &g, 4, PartitionStrategy::Hash, cfg());
+        sh.submit(EdgeEdit::Insert(5, 9));
+        let out = sh.flush();
+        assert_eq!(out.snapshot.num_vertices(), 10);
+        assert_eq!(out.snapshot.core[9], 1);
+        assert_eq!(out.snapshot.core[7], 0); // intermediate isolated id
+        assert_eq!(sh.coreness(7), Some(0));
+        let (snap, graph) = sh.consistent_view();
+        assert_eq!(graph.num_vertices(), 10);
+        assert_eq!(snap.core, bz_coreness(&graph));
+    }
+
+    #[test]
+    fn boundary_deletion_cascades_across_shards() {
+        // complete(6) split across shards: delete edges until the core
+        // collapses; refined answers must track the BZ oracle throughout.
+        let g = examples::complete(6);
+        let sh = ShardedIndex::new("k6", &g, 3, PartitionStrategy::DegreeRange, cfg());
+        assert_eq!(sh.snapshot().k_max, 5);
+        let deletes = [(0u32, 1u32), (2, 3), (4, 5), (0, 2)];
+        for (i, &(u, v)) in deletes.iter().enumerate() {
+            sh.submit(EdgeEdit::Delete(u, v));
+            let out = sh.flush();
+            assert_eq!(out.snapshot.epoch, i as u64 + 1);
+            let (snap, graph) = sh.consistent_view();
+            assert_eq!(snap.core, bz_coreness(&graph), "after delete ({u},{v})");
+        }
+    }
+
+    #[test]
+    fn merge_stats_are_reported() {
+        let g = crate::graph::gen::erdos_renyi(150, 450, 5);
+        let sh = ShardedIndex::new("er", &g, 4, PartitionStrategy::Hash, cfg());
+        let m = sh.merge_stats();
+        assert!(m.rounds >= 1);
+        assert!(m.sweeps >= 4, "every shard sweeps at least once");
+        assert!(sh.boundary_edges() > 0, "hash partition of ER must cut edges");
+        assert_eq!(sh.shard_epochs(), vec![0, 0, 0, 0]);
+    }
+}

@@ -1,0 +1,259 @@
+//! Binary snapshot shipping: serialise one [`CoreIndex`] epoch so a
+//! replica can hydrate it **without recomputing** the decomposition.
+//!
+//! The format follows `graph/io/binfmt`'s framing conventions (magic,
+//! little-endian scalars, length-prefixed name) and extends the CSR
+//! payload with the epoch and the coreness vector:
+//!
+//! ```text
+//! magic     b"PICOSNP1"                       8 bytes
+//! name      u32 length + UTF-8 bytes
+//! epoch     u64
+//! counts    u64 offsets_len, u64 adjacency_len, u64 core_len
+//! offsets   offsets_len × u64
+//! adjacency adjacency_len × u32
+//! core      core_len × u32
+//! ```
+//!
+//! [`decode`] treats input as untrusted wire bytes: besides structural
+//! CSR validation it re-checks the coreness vector against
+//! [`crate::core::verify::check_invariants`], so a tampered or corrupt
+//! snapshot is rejected instead of being served. Hydration
+//! ([`IndexSnapshot::hydrate`]) then installs the shipped coreness
+//! directly — no decomposition runs on the restore path.
+
+use crate::graph::csr::{CsrGraph, VertexId};
+use crate::service::index::CoreIndex;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 8] = b"PICOSNP1";
+
+/// Longest index name accepted by the decoder (same cap as binfmt).
+const MAX_NAME_BYTES: usize = 4096;
+
+/// A decoded snapshot, ready to hydrate.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IndexSnapshot {
+    pub name: String,
+    pub epoch: u64,
+    pub core: Vec<u32>,
+    pub graph: CsrGraph,
+}
+
+impl IndexSnapshot {
+    /// Build a serving index from shipped state. No decomposition runs:
+    /// the decoder already vouched for the coreness.
+    pub fn hydrate(self) -> CoreIndex {
+        CoreIndex::hydrate(self.name, &self.graph, self.core, self.epoch)
+    }
+}
+
+/// Serialise an index state to bytes.
+pub fn encode(name: &str, epoch: u64, core: &[u32], graph: &CsrGraph) -> Vec<u8> {
+    let name = name.as_bytes();
+    let mut out = Vec::with_capacity(
+        MAGIC.len()
+            + 4
+            + name.len()
+            + 8 * 4
+            + graph.offsets().len() * 8
+            + graph.adjacency().len() * 4
+            + core.len() * 4,
+    );
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    out.extend_from_slice(name);
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&(graph.offsets().len() as u64).to_le_bytes());
+    out.extend_from_slice(&(graph.adjacency().len() as u64).to_le_bytes());
+    out.extend_from_slice(&(core.len() as u64).to_le_bytes());
+    for &o in graph.offsets() {
+        out.extend_from_slice(&o.to_le_bytes());
+    }
+    for &a in graph.adjacency() {
+        out.extend_from_slice(&a.to_le_bytes());
+    }
+    for &c in core {
+        out.extend_from_slice(&c.to_le_bytes());
+    }
+    out
+}
+
+/// Serialise one index's current published epoch (a mutually consistent
+/// snapshot + graph pair).
+pub fn encode_index(index: &CoreIndex) -> Vec<u8> {
+    let (snap, g) = index.consistent_view();
+    encode(index.name(), snap.epoch, &snap.core, &g)
+}
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let Some(end) = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len()) else {
+            bail!(
+                "truncated snapshot: needed {n} bytes at offset {}, have {}",
+                self.pos,
+                self.bytes.len() - self.pos
+            );
+        };
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+}
+
+/// Parse and validate untrusted snapshot bytes.
+pub fn decode(bytes: &[u8]) -> Result<IndexSnapshot> {
+    let mut c = Cursor { bytes, pos: 0 };
+    if c.take(MAGIC.len())? != MAGIC {
+        bail!("not a pico snapshot (bad magic)");
+    }
+    let name_len = c.u32()? as usize;
+    if name_len > MAX_NAME_BYTES {
+        bail!("unreasonable name length {name_len}");
+    }
+    let name = String::from_utf8(c.take(name_len)?.to_vec()).context("name not UTF-8")?;
+    let epoch = c.u64()?;
+    let offsets_len = c.u64()? as usize;
+    let adjacency_len = c.u64()? as usize;
+    let core_len = c.u64()? as usize;
+    if offsets_len == 0 {
+        bail!("offsets array empty");
+    }
+    // Exact payload-size check before allocating anything: declared
+    // lengths may not exceed (or undershoot) the bytes actually shipped.
+    let expected = offsets_len
+        .checked_mul(8)
+        .and_then(|b| b.checked_add(adjacency_len.checked_mul(4)?))
+        .and_then(|b| b.checked_add(core_len.checked_mul(4)?));
+    match expected {
+        Some(want) if want == c.remaining() => {}
+        _ => bail!(
+            "payload size mismatch: header declares {offsets_len}/{adjacency_len}/{core_len} entries but {} bytes remain",
+            c.remaining()
+        ),
+    }
+    let mut offsets = Vec::with_capacity(offsets_len);
+    for _ in 0..offsets_len {
+        offsets.push(c.u64()?);
+    }
+    let mut adjacency: Vec<VertexId> = Vec::with_capacity(adjacency_len);
+    for _ in 0..adjacency_len {
+        adjacency.push(c.u32()?);
+    }
+    let mut core = Vec::with_capacity(core_len);
+    for _ in 0..core_len {
+        core.push(c.u32()?);
+    }
+    if core.len() != offsets.len() - 1 {
+        bail!(
+            "coreness length {} does not match vertex count {}",
+            core.len(),
+            offsets.len() - 1
+        );
+    }
+    let graph = CsrGraph::try_from_parts(offsets, adjacency, name.clone())
+        .map_err(|e| anyhow::anyhow!("corrupt snapshot graph: {e}"))?;
+    crate::core::verify::check_invariants(&graph, &core)
+        .map_err(|e| anyhow::anyhow!("snapshot coreness fails invariants: {e}"))?;
+    Ok(IndexSnapshot {
+        name,
+        epoch,
+        core,
+        graph,
+    })
+}
+
+/// Write a snapshot file (`pico query --binary --snapshot-file` sink).
+pub fn write_file(bytes: &[u8], path: impl AsRef<Path>) -> Result<()> {
+    std::fs::write(path.as_ref(), bytes)
+        .with_context(|| format!("writing snapshot {}", path.as_ref().display()))
+}
+
+/// Read a snapshot file back.
+pub fn read_file(path: impl AsRef<Path>) -> Result<Vec<u8>> {
+    std::fs::read(path.as_ref())
+        .with_context(|| format!("reading snapshot {}", path.as_ref().display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{examples, GraphBuilder};
+
+    #[test]
+    fn round_trip_preserves_everything() {
+        let idx = CoreIndex::new("g1", &examples::g1());
+        idx.update(|dc| dc.insert_edge(2, 5));
+        let bytes = encode_index(&idx);
+        let snap = decode(&bytes).unwrap();
+        assert_eq!(snap.name, "g1");
+        assert_eq!(snap.epoch, 1);
+        assert_eq!(snap.core, idx.snapshot().core);
+        // re-encoding the decoded snapshot is byte-identical
+        assert_eq!(encode(&snap.name, snap.epoch, &snap.core, &snap.graph), bytes);
+
+        let restored = snap.hydrate();
+        let (a, b) = (restored.snapshot(), idx.snapshot());
+        assert_eq!(a.epoch, b.epoch);
+        assert_eq!(a.core, b.core);
+        assert_eq!(a.num_edges, b.num_edges);
+        // the restored index keeps serving updates from the shipped epoch
+        let (_, s) = restored.update(|dc| dc.delete_edge(2, 5));
+        assert_eq!(s.epoch, 2);
+    }
+
+    #[test]
+    fn empty_and_isolated_graphs_round_trip() {
+        for g in [
+            GraphBuilder::new(0).build("empty"),
+            GraphBuilder::new(5).build("isolated"),
+        ] {
+            let idx = CoreIndex::new(g.name.clone(), &g);
+            let bytes = encode_index(&idx);
+            let restored = decode(&bytes).unwrap().hydrate();
+            assert_eq!(restored.snapshot().core, idx.snapshot().core);
+            assert_eq!(restored.snapshot().epoch, 0);
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_are_rejected() {
+        let idx = CoreIndex::new("g1", &examples::g1());
+        let good = encode_index(&idx);
+        // bad magic
+        assert!(decode(b"NOTASNAPxxxxxxxx").is_err());
+        // truncations at every length are rejected, never panic
+        for cut in [0, 7, 9, 20, good.len() / 2, good.len() - 1] {
+            assert!(decode(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        // tampered coreness fails the invariant check
+        let mut evil = good.clone();
+        let off = evil.len() - 4; // last core entry
+        evil[off..].copy_from_slice(&99u32.to_le_bytes());
+        let err = decode(&evil).unwrap_err();
+        assert!(format!("{err:#}").contains("invariants"), "{err:#}");
+        // oversize declared lengths are caught by the size check
+        let mut huge = good.clone();
+        let counts_at = 8 + 4 + 2 + 8; // magic + name_len + "g1" + epoch
+        huge[counts_at..counts_at + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode(&huge).is_err());
+    }
+}

@@ -1,0 +1,110 @@
+//! Cross-algorithm conformance suite: every decomposition algorithm ×
+//! every generator family × the BZ oracle × the structural invariants.
+//!
+//! The eight engines (BZ, PeelOne, GPP, PO-dyn, PP-dyn, NbrCore, CntCore,
+//! HistoCore) are resolved through the coordinator registry — the same
+//! construction path `pico run` uses — and run over one representative
+//! graph per `graph::gen` family plus the degenerate shapes (empty,
+//! single-vertex, all-isolated, star, clique, path). Each result must
+//!
+//! 1. agree exactly with `bz_coreness`, and
+//! 2. pass `core::verify::check_invariants` (degree bound, support,
+//!    h-index fixpoint) — so a future engine refactor that breaks any
+//!    algorithm on any structural regime is caught by one `cargo test`.
+//!
+//! Runs are repeated at 1 and 4 SPMD threads: the single-threaded run
+//! pins down sequential semantics, the multi-threaded run catches
+//! synchronisation bugs that only parallel scheduling exposes.
+
+use pico::coordinator::algorithm_by_name;
+use pico::core::bz::bz_coreness;
+use pico::core::verify::check_invariants;
+use pico::core::Decomposer;
+use pico::graph::{examples, gen, CsrGraph, GraphBuilder};
+
+/// The paper's eight decomposition algorithms (registry names).
+const ALGORITHMS: [&str; 8] = [
+    "BZ",
+    "PeelOne",
+    "GPP",
+    "PO-dyn",
+    "PP-dyn",
+    "NbrCore",
+    "CntCore",
+    "HistoCore",
+];
+
+/// One representative per `graph::gen` family plus edge-case shapes.
+fn conformance_graphs() -> Vec<CsrGraph> {
+    vec![
+        // random families
+        gen::erdos_renyi(300, 1100, 13),
+        gen::barabasi_albert(300, 4, 42),
+        gen::rmat(8, 8, 0.57, 0.19, 0.19, 7),
+        gen::power_law_cluster(250, 5, 0.6, 17),
+        gen::star_burst(4, 40, 80, 11),
+        gen::grid2d(12, 14),
+        gen::caveman(10, 7, 19),
+        // planted families (controlled deep hierarchies)
+        gen::nested_cliques(4, 5, 4).0,
+        gen::planted_core(400, 900, &[(80, 10), (20, 24)], 23),
+        gen::core_periphery(400, 20, 3),
+        // edge-case shapes
+        examples::g1(),
+        examples::star(30),
+        examples::complete(15),
+        examples::path(40),
+        examples::cycle(17),
+        GraphBuilder::new(0).build("empty"),
+        GraphBuilder::new(1).build("single-vertex"),
+        GraphBuilder::new(11).build("all-isolated"),
+    ]
+}
+
+#[test]
+fn all_algorithms_match_oracle_and_invariants_on_all_families() {
+    for g in conformance_graphs() {
+        let oracle = bz_coreness(&g);
+        // the oracle itself must satisfy the invariants it anchors
+        check_invariants(&g, &oracle)
+            .unwrap_or_else(|e| panic!("{}: oracle fails invariants: {e}", g.name));
+        for name in ALGORITHMS {
+            let algo = algorithm_by_name(name).expect(name);
+            for threads in [1, 4] {
+                let r = algo.decompose_with(&g, threads, false);
+                assert_eq!(
+                    r.core, oracle,
+                    "{name} on '{}' ({} threads) disagrees with BZ",
+                    g.name, threads
+                );
+                check_invariants(&g, &r.core).unwrap_or_else(|e| {
+                    panic!("{name} on '{}' ({threads} threads): {e}", g.name)
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn all_algorithms_are_deterministic_per_graph() {
+    // same graph, same thread count -> bit-identical coreness across runs
+    let g = gen::barabasi_albert(500, 5, 7);
+    for name in ALGORITHMS {
+        let algo = algorithm_by_name(name).expect(name);
+        let a = algo.decompose_with(&g, 4, false);
+        let b = algo.decompose_with(&g, 4, false);
+        assert_eq!(a.core, b.core, "{name} is nondeterministic");
+    }
+}
+
+#[test]
+fn metrics_runs_do_not_change_results() {
+    // the instrumented path must be observation-only
+    let g = gen::planted_core(300, 700, &[(60, 10)], 5);
+    let oracle = bz_coreness(&g);
+    for name in ALGORITHMS {
+        let algo = algorithm_by_name(name).expect(name);
+        let r = algo.decompose_with(&g, 2, true);
+        assert_eq!(r.core, oracle, "{name} with metrics enabled");
+    }
+}

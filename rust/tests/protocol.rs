@@ -1,0 +1,288 @@
+//! Adversarial protocol tests: malformed, oversized, truncated, and
+//! random-garbage input over both the line protocol and the binary
+//! framing. The server must answer structured `ERR`s (or close the
+//! connection), never panic, and never leak or corrupt a hosted graph
+//! slot — after every attack the service still answers `PING` and hosts
+//! exactly the graphs it hosted before.
+
+use pico::service::server::{read_frame, write_frame, MAX_FRAME_BYTES, MAX_LINE_BYTES};
+use pico::service::{serve, BatchConfig, CoreService, ServerHandle};
+use pico::shard::encode_index;
+use pico::util::rng::Rng;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::Arc;
+
+fn spawn_server() -> (Arc<CoreService>, ServerHandle) {
+    let svc = Arc::new(CoreService::new(BatchConfig {
+        threads: 1,
+        ..BatchConfig::default()
+    }));
+    svc.open("g1", &pico::graph::examples::g1());
+    let handle = serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    (svc, handle)
+}
+
+struct Client {
+    w: TcpStream,
+    r: BufReader<TcpStream>,
+}
+
+impl Client {
+    fn connect(handle: &ServerHandle) -> Self {
+        let stream = TcpStream::connect(handle.addr()).expect("connect");
+        let w = stream.try_clone().unwrap();
+        Self {
+            w,
+            r: BufReader::new(stream),
+        }
+    }
+
+    fn send_line(&mut self, cmd: &str) -> Option<String> {
+        writeln!(self.w, "{cmd}").ok()?;
+        self.w.flush().ok()?;
+        self.read_line()
+    }
+
+    fn read_line(&mut self) -> Option<String> {
+        let mut line = String::new();
+        match self.r.read_line(&mut line) {
+            Ok(0) | Err(_) => None,
+            Ok(_) => Some(line.trim_end().to_string()),
+        }
+    }
+
+    fn upgrade_binary(&mut self) {
+        assert_eq!(self.send_line("BINARY").as_deref(), Some("OK binary"));
+    }
+
+    fn send_frame(&mut self, body: &[u8]) -> Option<Vec<u8>> {
+        write_frame(&mut self.w, body).ok()?;
+        self.read_frame()
+    }
+
+    fn read_frame(&mut self) -> Option<Vec<u8>> {
+        read_frame(&mut self.r, MAX_FRAME_BYTES).ok().flatten()
+    }
+}
+
+/// The liveness + no-slot-leak probe run after every attack.
+fn assert_healthy(handle: &ServerHandle, hosted: &str) {
+    let mut c = Client::connect(handle);
+    assert_eq!(c.send_line("PING").as_deref(), Some("OK pong"));
+    assert_eq!(c.send_line("GRAPHS").as_deref(), Some(hosted));
+    let _ = c.send_line("QUIT");
+}
+
+#[test]
+fn malformed_line_commands_get_structured_errors() {
+    let (_svc, handle) = spawn_server();
+    let mut c = Client::connect(&handle);
+    for cmd in [
+        "NOPE",
+        "CORENESS",
+        "CORENESS x",
+        "CORENESS -1",
+        "CORENESS 999999999999999999999",
+        "MEMBERS",
+        "MEMBERS banana",
+        "INSERT 1",
+        "INSERT 1 1",
+        "INSERT a b",
+        "DELETE 4294967295 0",
+        "USE",
+        "USE nope",
+        "OPEN",
+        "OPEN x",
+        "OPEN x nosuchdataset",
+        "OPEN x g1 0",
+        "OPEN x g1 65",
+        "OPEN x g1 banana",
+        "SNAPSHOT",
+        "RESTORE r",
+        "\u{1F980} unicode verb",
+    ] {
+        let reply = c.send_line(cmd).unwrap_or_else(|| panic!("closed on '{cmd}'"));
+        assert!(reply.starts_with("ERR"), "'{cmd}' -> '{reply}'");
+    }
+    // the connection survived all of it
+    assert_eq!(c.send_line("PING").as_deref(), Some("OK pong"));
+    assert_healthy(&handle, "OK n=1 g1");
+    handle.stop();
+}
+
+#[test]
+fn oversized_line_is_rejected_and_connection_closed() {
+    let (_svc, handle) = spawn_server();
+    let mut c = Client::connect(&handle);
+    let huge = "A".repeat(MAX_LINE_BYTES + 10);
+    let reply = c.send_line(&huge).expect("error reply before close");
+    assert!(reply.starts_with("ERR line exceeds"), "{reply}");
+    // server closes this connection afterwards
+    assert!(c.send_line("PING").is_none());
+    assert_healthy(&handle, "OK n=1 g1");
+    handle.stop();
+}
+
+#[test]
+fn unterminated_line_stream_cannot_grow_the_buffer() {
+    let (_svc, handle) = spawn_server();
+    let mut c = Client::connect(&handle);
+    // stream line-less bytes; the cap must cut the reader off
+    let chunk = vec![b'x'; 1024];
+    let mut rejected = false;
+    for _ in 0..((MAX_LINE_BYTES / 1024) + 2) {
+        if c.w.write_all(&chunk).and_then(|_| c.w.flush()).is_err() {
+            rejected = true; // server already closed on us
+            break;
+        }
+    }
+    if !rejected {
+        let reply = c.read_line();
+        assert!(
+            reply.is_none() || reply.as_deref().unwrap_or("").starts_with("ERR line exceeds"),
+            "{reply:?}"
+        );
+    }
+    assert_healthy(&handle, "OK n=1 g1");
+    handle.stop();
+}
+
+#[test]
+fn oversized_binary_frame_is_rejected() {
+    let (_svc, handle) = spawn_server();
+    let mut c = Client::connect(&handle);
+    c.upgrade_binary();
+    // declare a frame bigger than the cap; send no body
+    c.w
+        .write_all(&((MAX_FRAME_BYTES + 1) as u32).to_le_bytes())
+        .unwrap();
+    c.w.flush().unwrap();
+    let reply = c.read_frame().expect("error frame before close");
+    assert!(
+        std::str::from_utf8(&reply).unwrap().starts_with("ERR frame exceeds"),
+        "{reply:?}"
+    );
+    assert!(c.read_frame().is_none(), "connection must close");
+    assert_healthy(&handle, "OK n=1 g1");
+    handle.stop();
+}
+
+#[test]
+fn truncated_binary_frame_just_closes() {
+    let (_svc, handle) = spawn_server();
+    {
+        let mut c = Client::connect(&handle);
+        c.upgrade_binary();
+        // declare 100 bytes, send 10, then hang up
+        c.w.write_all(&100u32.to_le_bytes()).unwrap();
+        c.w.write_all(b"0123456789").unwrap();
+        c.w.flush().unwrap();
+        let _ = c.w.shutdown(std::net::Shutdown::Write);
+        assert!(c.read_frame().is_none());
+    }
+    // half a header, then hang up
+    {
+        let mut c = Client::connect(&handle);
+        c.upgrade_binary();
+        c.w.write_all(&[0xFF, 0x00]).unwrap();
+        c.w.flush().unwrap();
+        let _ = c.w.shutdown(std::net::Shutdown::Write);
+        assert!(c.read_frame().is_none());
+    }
+    assert_healthy(&handle, "OK n=1 g1");
+    handle.stop();
+}
+
+#[test]
+fn corrupt_restore_payloads_never_leak_a_slot() {
+    let (_svc, handle) = spawn_server();
+    let mut c = Client::connect(&handle);
+    c.upgrade_binary();
+    // take a valid snapshot to mutate
+    let frame = c.send_frame(b"SNAPSHOT").expect("snapshot");
+    let nl = frame.iter().position(|&b| b == b'\n').unwrap();
+    let good = frame[nl + 1..].to_vec();
+
+    let mut corruptions: Vec<Vec<u8>> = vec![
+        Vec::new(),                      // empty payload
+        b"garbage".to_vec(),             // not a snapshot at all
+        good[..good.len() / 2].to_vec(), // truncated
+    ];
+    let mut tampered = good.clone();
+    let off = tampered.len() - 4;
+    tampered[off..].copy_from_slice(&77u32.to_le_bytes()); // bogus coreness
+    corruptions.push(tampered);
+    let mut bad_magic = good.clone();
+    bad_magic[0] ^= 0xFF;
+    corruptions.push(bad_magic);
+
+    for (i, payload) in corruptions.iter().enumerate() {
+        let mut req = b"RESTORE leak\n".to_vec();
+        req.extend_from_slice(payload);
+        let reply = c.send_frame(&req).unwrap_or_else(|| panic!("closed on corruption {i}"));
+        let reply = String::from_utf8_lossy(&reply).into_owned();
+        assert!(reply.starts_with("ERR"), "corruption {i}: {reply}");
+        // no partial slot installed
+        let graphs = c.send_frame(b"GRAPHS").unwrap();
+        assert_eq!(graphs, b"OK n=1 g1", "after corruption {i}");
+    }
+
+    // the genuine payload still restores fine on the same connection
+    let mut req = b"RESTORE replica\n".to_vec();
+    req.extend_from_slice(&good);
+    let reply = c.send_frame(&req).unwrap();
+    assert!(reply.starts_with(b"OK restore=replica"), "{reply:?}");
+    assert_healthy(&handle, "OK n=2 g1 replica");
+    handle.stop();
+}
+
+#[test]
+fn random_byte_corpus_never_kills_the_server() {
+    let (_svc, handle) = spawn_server();
+    let mut rng = Rng::new(0xF0220_5EED);
+    for case in 0..48 {
+        let mut c = Client::connect(&handle);
+        let len = 1 + rng.below_usize(600);
+        let blob: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+        // half the corpus attacks the binary framing, half the line mode
+        if case % 2 == 0 {
+            c.upgrade_binary();
+        }
+        let _ = c.w.write_all(&blob);
+        let _ = c.w.flush();
+        let _ = c.w.shutdown(std::net::Shutdown::Write);
+        // drain whatever the server replies until it closes our end
+        if case % 2 == 0 {
+            while c.read_frame().is_some() {}
+        } else {
+            while c.read_line().is_some() {}
+        }
+        assert_healthy(&handle, "OK n=1 g1");
+    }
+    handle.stop();
+}
+
+#[test]
+fn binary_snapshot_restore_round_trip_over_tcp_matches_in_process() {
+    let (svc, handle) = spawn_server();
+    let expected = encode_index(&svc.index("g1").unwrap());
+    let mut c = Client::connect(&handle);
+    c.upgrade_binary();
+    let frame = c.send_frame(b"SNAPSHOT").unwrap();
+    let nl = frame.iter().position(|&b| b == b'\n').unwrap();
+    assert_eq!(&frame[nl + 1..], &expected[..], "wire bytes == in-process bytes");
+    // restore under a new name, then query it through the same connection
+    let mut req = b"RESTORE replica\n".to_vec();
+    req.extend_from_slice(&expected);
+    assert!(c.send_frame(&req).unwrap().starts_with(b"OK restore=replica"));
+    assert_eq!(c.send_frame(b"CORENESS 3").unwrap(), b"OK core=2 epoch=0");
+    assert_eq!(c.send_frame(b"EPOCH").unwrap(), b"OK epoch=0");
+    // edits on the replica leave the primary untouched
+    assert_eq!(c.send_frame(b"INSERT 2 5").unwrap(), b"OK pending=1");
+    assert!(c.send_frame(b"FLUSH").unwrap().starts_with(b"OK epoch=1"));
+    assert_eq!(c.send_frame(b"USE g1").unwrap(), b"OK use=g1");
+    assert_eq!(c.send_frame(b"EPOCH").unwrap(), b"OK epoch=0");
+    let _ = c.send_frame(b"QUIT");
+    handle.stop();
+}

@@ -438,9 +438,7 @@ fn service_sessions_and_densest_query() {
         ..BatchConfig::default()
     });
     svc.open("g1", &examples::g1());
-    let mut s = Session {
-        graph: svc.default_graph(),
-    };
+    let mut s = Session::new(svc.default_graph());
     let d = svc.handle_command(&mut s, "DENSEST", 0);
     assert!(d.starts_with("OK k=2 vertices=4 edges=5"), "{d}");
     svc.handle_command(&mut s, "INSERT 2 5", 0);

@@ -1,0 +1,384 @@
+//! Sharded-serving acceptance tests:
+//!
+//! 1. **Sharded-vs-single equivalence** — for every generator family and
+//!    shard count in {1, 2, 4, 8} (both partition strategies), the
+//!    `ShardedIndex`'s merged snapshot *and* its routed fan-out answers
+//!    (coreness / members / histogram / degeneracy) are identical to a
+//!    single `CoreIndex` over the same graph.
+//! 2. **Equivalence under updates** — a property test drives random edit
+//!    scripts through a sharded index and a single index in lockstep;
+//!    after every flush both must publish the same epoch and coreness,
+//!    and the final state must match the BZ oracle.
+//! 3. **Snapshot round trip** — `CoreIndex` → binary snapshot → restore
+//!    is exact (coreness, histogram, epoch) for random graphs, the empty
+//!    graph, and graphs with isolated vertices, with byte-identical
+//!    re-encoding.
+
+use pico::core::bz::bz_coreness;
+use pico::core::maintenance::EdgeEdit;
+use pico::graph::{examples, gen, CsrGraph, GraphBuilder};
+use pico::service::{apply_batch, BatchConfig, CoreIndex};
+use pico::shard::{decode, encode, encode_index, PartitionStrategy, ShardedIndex};
+use pico::util::quickcheck::{assert_prop, Arbitrary, Config};
+use pico::util::rng::Rng;
+
+const SHARD_COUNTS: [usize; 4] = [1, 2, 4, 8];
+const STRATEGIES: [PartitionStrategy; 2] =
+    [PartitionStrategy::Hash, PartitionStrategy::DegreeRange];
+
+fn cfg() -> BatchConfig {
+    BatchConfig {
+        threads: 1,
+        ..BatchConfig::default()
+    }
+}
+
+/// One small graph per generator family, plus the degenerate shapes.
+fn families() -> Vec<CsrGraph> {
+    vec![
+        examples::g1(),
+        gen::erdos_renyi(120, 400, 13),
+        gen::barabasi_albert(150, 3, 42),
+        gen::rmat(7, 6, 0.57, 0.19, 0.19, 7),
+        gen::power_law_cluster(100, 4, 0.5, 17),
+        gen::caveman(8, 5, 19),
+        gen::grid2d(8, 9),
+        gen::star_burst(3, 20, 30, 11),
+        gen::nested_cliques(3, 4, 3).0,
+        gen::planted_core(150, 300, &[(40, 8), (10, 16)], 23),
+        gen::core_periphery(200, 12, 3),
+        examples::star(40),
+        examples::complete(12),
+        examples::path(25),
+        GraphBuilder::new(0).build("empty"),
+        GraphBuilder::new(1).build("single-vertex"),
+        GraphBuilder::new(7).build("isolated"),
+    ]
+}
+
+#[test]
+fn sharded_answers_equal_single_index_answers() {
+    for g in families() {
+        let single = CoreIndex::new("single", &g);
+        let want = single.snapshot();
+        for &shards in &SHARD_COUNTS {
+            for strategy in STRATEGIES {
+                let label = format!("{} x{shards} [{}]", g.name, strategy.name());
+                let sh = ShardedIndex::new("sh", &g, shards, strategy, cfg());
+                let got = sh.snapshot();
+                // merged snapshot: identical decomposition + metadata
+                assert_eq!(got.core, want.core, "{label}: coreness");
+                assert_eq!(got.k_max, want.k_max, "{label}: k_max");
+                assert_eq!(got.num_edges, want.num_edges, "{label}: |E|");
+                assert_eq!(got.epoch, 0, "{label}: epoch");
+                // routed answers: coreness via the owner shard, members /
+                // histogram / degeneracy via fan-out + merge
+                for v in 0..g.num_vertices() as u32 {
+                    assert_eq!(sh.coreness(v), want.coreness(v), "{label}: v{v}");
+                }
+                assert_eq!(sh.coreness(g.num_vertices() as u32), None, "{label}");
+                assert_eq!(sh.degeneracy(), want.degeneracy(), "{label}");
+                assert_eq!(sh.histogram(), want.histogram(), "{label}");
+                for k in 0..=want.k_max + 1 {
+                    assert_eq!(sh.kcore_members(k), want.kcore_members(k), "{label}: k={k}");
+                    assert_eq!(sh.kcore_size(k), want.kcore_size(k), "{label}: k={k}");
+                }
+            }
+        }
+    }
+}
+
+/// Random edit script applied in lockstep to a sharded and a single
+/// index; compared after every flush.
+#[derive(Clone, Debug)]
+struct ShardScript {
+    n: u32,
+    shards: usize,
+    strategy_range: bool,
+    edits: Vec<(u32, u32, bool)>,
+    chunk: usize,
+}
+
+impl Arbitrary for ShardScript {
+    fn generate(rng: &mut Rng, size: usize) -> Self {
+        let n = 4 + rng.below(16) as u32; // small id space -> dense collisions
+        let len = rng.below_usize(size.max(1) * 4 + 1);
+        let edits = (0..len)
+            .map(|_| {
+                (
+                    rng.below(n as u64) as u32,
+                    rng.below(n as u64) as u32,
+                    rng.chance(0.6),
+                )
+            })
+            .collect();
+        Self {
+            n,
+            shards: 1 + rng.below_usize(8),
+            strategy_range: rng.chance(0.5),
+            edits,
+            chunk: 1 + rng.below_usize(6),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.edits.len() > 1 {
+            out.push(Self {
+                edits: self.edits[..self.edits.len() / 2].to_vec(),
+                ..self.clone()
+            });
+            out.push(Self {
+                edits: self.edits[1..].to_vec(),
+                ..self.clone()
+            });
+        }
+        if self.shards > 1 {
+            out.push(Self {
+                shards: 1,
+                ..self.clone()
+            });
+        }
+        out
+    }
+}
+
+fn run_lockstep(s: &ShardScript) -> Result<(), String> {
+    let g = GraphBuilder::new(s.n as usize).build("lockstep");
+    let strategy = if s.strategy_range {
+        PartitionStrategy::DegreeRange
+    } else {
+        PartitionStrategy::Hash
+    };
+    let sharded = ShardedIndex::new("sh", &g, s.shards, strategy, cfg());
+    let single = CoreIndex::new("single", &g);
+    for (i, chunk) in s.edits.chunks(s.chunk).enumerate() {
+        let edits: Vec<EdgeEdit> = chunk
+            .iter()
+            .map(|&(u, v, ins)| {
+                if ins {
+                    EdgeEdit::Insert(u, v)
+                } else {
+                    EdgeEdit::Delete(u, v)
+                }
+            })
+            .collect();
+        for &e in &edits {
+            sharded.submit(e);
+        }
+        let out = sharded.flush();
+        let single_out = apply_batch(&single, &edits, &cfg());
+        let (a, b) = (&out.snapshot, &single_out.snapshot);
+        if a.epoch != b.epoch {
+            return Err(format!("batch {i}: epoch {} != {}", a.epoch, b.epoch));
+        }
+        if a.core != b.core {
+            return Err(format!("batch {i}: core {:?} != {:?}", a.core, b.core));
+        }
+        if a.num_edges != b.num_edges {
+            return Err(format!("batch {i}: |E| {} != {}", a.num_edges, b.num_edges));
+        }
+        if out.applied != single_out.applied || out.changed != single_out.changed {
+            return Err(format!(
+                "batch {i}: accounting applied {}/{} changed {}/{}",
+                out.applied, single_out.applied, out.changed, single_out.changed
+            ));
+        }
+    }
+    // final state against the from-scratch oracle on the assembled graph
+    let (snap, graph) = sharded.consistent_view();
+    let expected = bz_coreness(&graph);
+    if snap.core != expected {
+        return Err(format!("final: served {:?} != oracle {expected:?}", snap.core));
+    }
+    Ok(())
+}
+
+#[test]
+fn property_sharded_updates_match_single_index() {
+    let qc = Config {
+        cases: 40,
+        seed: 0x5AA2D,
+        ..Config::default()
+    };
+    assert_prop::<ShardScript>(&qc, "sharded flush == single flush", run_lockstep);
+}
+
+#[test]
+fn sharded_updates_match_on_real_generators() {
+    // denser lockstep runs on structured graphs (boundary cascades cross
+    // shards far more often than on the tiny property-test id spaces)
+    for (g, seed) in [
+        (gen::barabasi_albert(200, 3, 5), 1u64),
+        (gen::erdos_renyi(150, 500, 9), 2),
+        (gen::caveman(6, 6, 3), 3),
+    ] {
+        let sharded = ShardedIndex::new("sh", &g, 4, PartitionStrategy::Hash, cfg());
+        let single = CoreIndex::new("single", &g);
+        let n = g.num_vertices() as u32;
+        let mut rng = Rng::new(seed);
+        for round in 0..10 {
+            let mut edits = Vec::new();
+            while edits.len() < 12 {
+                let u = rng.below(n as u64) as u32;
+                let v = rng.below(n as u64) as u32;
+                if u == v {
+                    continue;
+                }
+                edits.push(if rng.chance(0.6) {
+                    EdgeEdit::Insert(u, v)
+                } else {
+                    EdgeEdit::Delete(u, v)
+                });
+            }
+            for &e in &edits {
+                sharded.submit(e);
+            }
+            let out = sharded.flush();
+            let single_out = apply_batch(&single, &edits, &cfg());
+            assert_eq!(
+                out.snapshot.core, single_out.snapshot.core,
+                "{} round {round}",
+                g.name
+            );
+            assert_eq!(out.snapshot.epoch, single_out.snapshot.epoch);
+        }
+        let (snap, graph) = sharded.consistent_view();
+        assert_eq!(snap.core, bz_coreness(&graph), "{} final", g.name);
+    }
+}
+
+/// Random graph for the snapshot round-trip property.
+#[derive(Clone, Debug)]
+struct SnapGraph {
+    n: usize,
+    edges: Vec<(u32, u32)>,
+    epoch_edits: usize,
+}
+
+impl SnapGraph {
+    fn build(&self) -> CsrGraph {
+        let mut b = GraphBuilder::new(self.n);
+        b.add_edges(self.edges.iter().copied());
+        b.build("snap")
+    }
+}
+
+impl Arbitrary for SnapGraph {
+    fn generate(rng: &mut Rng, size: usize) -> Self {
+        // n can be 0 (empty graph) and edges sparse (isolated vertices)
+        let n = rng.below_usize(size.max(1) * 3 + 1);
+        let m = if n < 2 { 0 } else { rng.below_usize(n * 2 + 1) };
+        let edges = (0..m)
+            .map(|_| (rng.below(n as u64) as u32, rng.below(n as u64) as u32))
+            .filter(|(u, v)| u != v)
+            .collect();
+        Self {
+            n,
+            edges,
+            epoch_edits: rng.below_usize(4),
+        }
+    }
+
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if !self.edges.is_empty() {
+            out.push(Self {
+                edges: self.edges[..self.edges.len() / 2].to_vec(),
+                ..self.clone()
+            });
+        }
+        if self.epoch_edits > 0 {
+            out.push(Self {
+                epoch_edits: 0,
+                ..self.clone()
+            });
+        }
+        out
+    }
+}
+
+#[test]
+fn property_snapshot_round_trip_is_exact() {
+    let qc = Config {
+        cases: 60,
+        seed: 0x54AF,
+        ..Config::default()
+    };
+    assert_prop::<SnapGraph>(&qc, "snapshot -> restore is identity", |sg| {
+        let g = sg.build();
+        let idx = CoreIndex::new("snap", &g);
+        // advance the epoch so restore must preserve a non-zero one
+        for i in 0..sg.epoch_edits {
+            let v = (i as u32) % (sg.n.max(2) as u32);
+            let w = (v + 1) % (sg.n.max(2) as u32);
+            if v != w {
+                idx.update(|dc| {
+                    dc.ensure_vertex(v.max(w));
+                    dc.insert_edge(v, w)
+                });
+            }
+        }
+        let bytes = encode_index(&idx);
+        let snap = decode(&bytes).map_err(|e| format!("decode: {e:#}"))?;
+        // byte-identical re-encoding
+        let re = encode(&snap.name, snap.epoch, &snap.core, &snap.graph);
+        if re != bytes {
+            return Err("re-encoding differs".into());
+        }
+        let restored = snap.hydrate();
+        let (a, b) = (restored.snapshot(), idx.snapshot());
+        if a.epoch != b.epoch {
+            return Err(format!("epoch {} != {}", a.epoch, b.epoch));
+        }
+        if a.core != b.core {
+            return Err(format!("core {:?} != {:?}", a.core, b.core));
+        }
+        if a.histogram() != b.histogram() {
+            return Err("histogram differs".into());
+        }
+        if a.num_edges != b.num_edges {
+            return Err(format!("|E| {} != {}", a.num_edges, b.num_edges));
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn snapshot_round_trip_empty_and_isolated() {
+    for g in [
+        GraphBuilder::new(0).build("empty"),
+        GraphBuilder::new(9).build("isolated"),
+    ] {
+        let idx = CoreIndex::new(g.name.clone(), &g);
+        let restored = decode(&encode_index(&idx)).unwrap().hydrate();
+        let (a, b) = (restored.snapshot(), idx.snapshot());
+        assert_eq!(a.core, b.core, "{}", g.name);
+        assert_eq!(a.epoch, 0);
+        assert_eq!(a.num_edges, 0);
+        assert_eq!(a.histogram(), b.histogram());
+        // the restored index is live, not a dead copy
+        let (changed, s) = restored.update(|dc| {
+            dc.ensure_vertex(1);
+            dc.insert_edge(0, 1)
+        });
+        assert!(changed);
+        assert_eq!(s.epoch, 1);
+    }
+}
+
+#[test]
+fn sharded_snapshot_ships_and_restores_per_shard() {
+    // ship every shard of a sharded index; each replica must serve the
+    // shard's local subgraph at the shard's epoch without recomputation
+    let g = gen::barabasi_albert(120, 3, 77);
+    let sh = ShardedIndex::new("ba", &g, 4, PartitionStrategy::Hash, cfg());
+    for s in 0..4 {
+        let shard_idx = sh.shard_index(s).unwrap();
+        let restored = decode(&encode_index(&shard_idx)).unwrap().hydrate();
+        assert_eq!(restored.name(), format!("ba/shard{s}"));
+        assert_eq!(restored.snapshot().core, shard_idx.snapshot().core);
+        assert_eq!(restored.snapshot().epoch, shard_idx.snapshot().epoch);
+    }
+    assert!(sh.shard_index(4).is_none());
+}
