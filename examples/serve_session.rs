@@ -1,7 +1,8 @@
-//! End-to-end serving session — the Layer 3.5/3.6 walkthrough:
+//! End-to-end serving session — the Layer 3.5/3.6/3.7 walkthrough:
 //! start `pico serve` in-process, stream edits over TCP, query coreness
-//! concurrently while batches land, then exercise the sharded backend and
-//! ship a binary snapshot to a replica.
+//! concurrently while batches land, exercise the sharded backend, ship a
+//! binary snapshot to a replica, then serve the same graph as a
+//! *cluster* with a remote shard and a read replica.
 //!
 //! The same flow over two shells:
 //!
@@ -12,8 +13,35 @@
 //! $ pico query --binary --cmd 'RESTORE replica' --snapshot-file /tmp/shard0.snap
 //! ```
 //!
+//! And the two-host cluster flow (host B is any machine that can reach
+//! host A; loopback works for a dry run):
+//!
+//! ```text
+//! hostB$ pico serve --addr 0.0.0.0:7591          # empty shard host
+//! hostA$ cat cluster.toml
+//!        [cluster]
+//!        name = social
+//!        dataset = social-ba
+//!        shards = 2
+//!        [shard.0]
+//!        primary = local
+//!        replicas = hostB:7591
+//!        [shard.1]
+//!        primary = hostB:7591
+//! hostA$ pico serve --cluster cluster.toml       # ships shards, serves merged answers
+//! hostA$ pico cluster status --cluster cluster.toml
+//! hostA$ pico query --cmd 'CORENESS 3; INSERT 17 99; FLUSH; SHARDS'
+//! ```
+//!
+//! `FLUSH` on the cluster routes edits to owner shards, runs the
+//! boundary-exchange merge across hosts, and re-ships stale replicas
+//! (`synced=`); `CORENESS` reads fan out over the shard's replica group
+//! with epoch-checked failover. ctrl-c / SIGTERM on either host drains
+//! connections and flushes pending edits before exit.
+//!
 //!     cargo run --release --example serve_session
 
+use pico::cluster::{ClusterConfig, ClusterIndex};
 use pico::graph::gen;
 use pico::service::server::{read_frame, write_frame, MAX_FRAME_BYTES};
 use pico::service::{serve, BatchConfig, CoreService};
@@ -126,6 +154,45 @@ fn main() -> anyhow::Result<()> {
     let reply = send_frame(&mut sw, &mut sreader, b"GRAPHS");
     println!("  > GRAPHS             < {}", String::from_utf8_lossy(&reply));
     let _ = send_frame(&mut sw, &mut sreader, b"QUIT");
+
+    // 6. Cluster serving (Layer 3.7): the same graph split across a
+    //    local shard and a *remote* shard — hosted by the very server we
+    //    started above, dialled over loopback TCP exactly as a second
+    //    host would be — plus a read replica for shard 0. The router
+    //    ships shard manifests (no remote recomputation), merges with
+    //    the boundary exchange across the wire, and answers stay
+    //    byte-identical to a single index.
+    let addr = handle.addr().to_string();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = social-cluster\nshards = 2\n\
+         [shard.0]\nprimary = local\nreplicas = {addr}\n\
+         [shard.1]\nprimary = {addr}\n"
+    ))?;
+    let cluster = ClusterIndex::build(&g, &topo, pico::service::BatchConfig::default())?;
+    println!("\ncluster session ({:?}):", cluster);
+    println!("  coreness(3) via the replica group = {:?}", cluster.coreness_routed(3)?);
+    cluster.submit(pico::core::EdgeEdit::Insert(3, 9_006));
+    let out = cluster.flush()?;
+    println!(
+        "  flush: epoch {} in {:.2}ms ({} exchange rounds, merge {:.2}ms)",
+        out.snapshot.epoch,
+        out.elapsed_ms(),
+        out.merge.rounds,
+        out.merge_ms()
+    );
+    let shipped = cluster.sync_replicas()?;
+    println!("  snapshot catch-up re-shipped {shipped} stale replica(s)");
+    for gs in cluster.status() {
+        println!(
+            "  shard {}: {} primary @ {} | {} replica(s), {} failovers, {} stale reads",
+            gs.shard,
+            gs.kind,
+            gs.primary_addr,
+            gs.replicas.len(),
+            gs.failovers,
+            gs.stale_reads
+        );
+    }
 
     handle.stop();
     println!("\ndone — see rust/src/service/server.rs for the full protocol");

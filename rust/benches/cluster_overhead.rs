@@ -1,0 +1,253 @@
+//! Cluster-serving overhead: what does moving a shard behind the binary
+//! protocol cost, per query class and per merge round?
+//!
+//! Three configurations over the same graph and shard count:
+//!
+//! 1. `sharded-local`  — the in-process `ShardedIndex` (no router RPC).
+//! 2. `cluster-local`  — a `ClusterIndex` whose shards are all local:
+//!    the trait-dispatch + router overhead without any network.
+//! 3. `cluster-remote` — the same cluster with every shard hosted by a
+//!    loopback `pico serve` process: each point read, fan-out partial,
+//!    routed batch, and boundary-exchange round is one frame round trip
+//!    per shard.
+//!
+//! Reported per configuration: routed point reads/sec, histogram
+//! fan-outs/sec, flush latency p50, merge p50, exchange rounds per
+//! flush, and the per-round cost — the loopback number is the floor for
+//! what a real network round trip adds.
+//!
+//!     cargo bench --bench cluster_overhead
+//!     PICO_BENCH_QUICK=1 cargo bench --bench cluster_overhead  # CI smoke
+//!
+//! Every configuration is oracle-checked against `bz_coreness` on its
+//! assembled graph before its numbers are printed.
+
+use pico::bench::suite::quick_bench;
+use pico::cluster::{ClusterConfig, ClusterIndex};
+use pico::core::bz::bz_coreness;
+use pico::core::maintenance::EdgeEdit;
+use pico::graph::{gen, CsrGraph};
+use pico::service::{serve, BatchConfig, CoreService};
+use pico::shard::{PartitionStrategy, ShardedIndex, ShardedOutcome};
+use pico::util::fmt;
+use pico::util::rng::Rng;
+use pico::util::timer::{Samples, Timer};
+use std::sync::Arc;
+
+const SHARDS: usize = 4;
+const BATCH: usize = 32;
+
+fn workload() -> CsrGraph {
+    if quick_bench() {
+        gen::barabasi_albert(800, 4, 42)
+    } else {
+        gen::barabasi_albert(5_000, 6, 42)
+    }
+}
+
+fn cfg() -> BatchConfig {
+    BatchConfig {
+        threads: 1,
+        ..BatchConfig::default()
+    }
+}
+
+enum Target {
+    Local(ShardedIndex),
+    Cluster(ClusterIndex),
+}
+
+impl Target {
+    fn coreness(&self, v: u32) -> Option<u32> {
+        match self {
+            Target::Local(s) => s.coreness(v),
+            Target::Cluster(c) => c.coreness_routed(v).expect("cluster read failed"),
+        }
+    }
+
+    fn histogram(&self) -> Vec<u64> {
+        match self {
+            Target::Local(s) => s.histogram(),
+            Target::Cluster(c) => c.histogram_routed().expect("cluster fan-out failed"),
+        }
+    }
+
+    fn submit(&self, e: EdgeEdit) {
+        match self {
+            Target::Local(s) => {
+                s.submit(e);
+            }
+            Target::Cluster(c) => {
+                c.submit(e);
+            }
+        }
+    }
+
+    fn flush(&self) -> ShardedOutcome {
+        match self {
+            Target::Local(s) => s.flush(),
+            Target::Cluster(c) => c.flush().expect("cluster flush failed"),
+        }
+    }
+
+    fn oracle_check(&self, label: &str) {
+        let (snap, graph) = match self {
+            Target::Local(s) => s.consistent_view(),
+            Target::Cluster(c) => c.consistent_view().expect("cluster view failed"),
+        };
+        assert_eq!(
+            snap.core,
+            bz_coreness(&graph),
+            "{label} diverged from the oracle"
+        );
+    }
+}
+
+struct Row {
+    name: &'static str,
+    point_qps: f64,
+    histo_qps: f64,
+    flush_p50: f64,
+    merge_p50: f64,
+    rounds: f64,
+    round_ms: f64,
+}
+
+fn bench_target(name: &'static str, target: &Target, n: u32) -> Row {
+    let points = if quick_bench() { 2_000 } else { 50_000 };
+    let histos = if quick_bench() { 5 } else { 100 };
+    let num_flushes = if quick_bench() { 3 } else { 15 };
+
+    let mut rng = Rng::new(17);
+    let mut sink = 0u64;
+    let t = Timer::start();
+    for _ in 0..points {
+        let v = rng.below(n as u64) as u32;
+        sink ^= target.coreness(v).unwrap_or(0) as u64;
+    }
+    let point_qps = points as f64 / t.elapsed().as_secs_f64();
+
+    let t = Timer::start();
+    for _ in 0..histos {
+        sink ^= target.histogram().iter().sum::<u64>();
+    }
+    let histo_qps = histos as f64 / t.elapsed().as_secs_f64();
+    std::hint::black_box(sink);
+
+    let mut flushes = Samples::default();
+    let mut merges = Samples::default();
+    let mut rounds = 0usize;
+    for _ in 0..num_flushes {
+        let mut queued = 0usize;
+        while queued < BATCH {
+            let u = rng.below(n as u64) as u32;
+            let v = rng.below(n as u64) as u32;
+            if u == v {
+                continue;
+            }
+            target.submit(if rng.chance(0.6) {
+                EdgeEdit::Insert(u, v)
+            } else {
+                EdgeEdit::Delete(u, v)
+            });
+            queued += 1;
+        }
+        let out = target.flush();
+        flushes.push(out.elapsed);
+        merges.push(out.merge_elapsed);
+        rounds += out.merge.rounds;
+    }
+    target.oracle_check(name);
+
+    let merge_p50 = merges.percentile_ms(50.0);
+    let avg_rounds = rounds as f64 / num_flushes as f64;
+    Row {
+        name,
+        point_qps,
+        histo_qps,
+        flush_p50: flushes.percentile_ms(50.0),
+        merge_p50,
+        rounds: avg_rounds,
+        round_ms: if avg_rounds > 0.0 { merge_p50 / avg_rounds } else { 0.0 },
+    }
+}
+
+fn topology(name: &str, primaries: &[String]) -> ClusterConfig {
+    let mut text = format!("[cluster]\nname = {name}\nshards = {}\n", primaries.len());
+    for (i, p) in primaries.iter().enumerate() {
+        text.push_str(&format!("[shard.{i}]\nprimary = {p}\n"));
+    }
+    ClusterConfig::parse(&text).expect("bench topology")
+}
+
+fn main() {
+    let g = workload();
+    let n = g.num_vertices() as u32;
+    println!(
+        "== cluster_overhead == dataset {} (|V|={}, |E|={}, {SHARDS} shards{})\n",
+        g.name,
+        fmt::si(g.num_vertices() as u64),
+        fmt::si(g.num_edges()),
+        if quick_bench() { ", quick mode" } else { "" }
+    );
+
+    let local = Target::Local(ShardedIndex::new(
+        "bench",
+        &g,
+        SHARDS,
+        PartitionStrategy::Hash,
+        cfg(),
+    ));
+
+    let locals: Vec<String> = (0..SHARDS).map(|_| "local".to_string()).collect();
+    let cluster_local = Target::Cluster(
+        ClusterIndex::build(&g, &topology("cl", &locals), cfg()).expect("local cluster"),
+    );
+
+    // one loopback server hosts all four remote shards — every routed
+    // operation is a real TCP frame round trip
+    let svc = Arc::new(CoreService::new(cfg()));
+    let handle = serve(svc, "127.0.0.1:0").expect("bind loopback server");
+    let addr = handle.addr().to_string();
+    let remotes: Vec<String> = (0..SHARDS).map(|_| addr.clone()).collect();
+    let cluster_remote = Target::Cluster(
+        ClusterIndex::build(&g, &topology("cr", &remotes), cfg()).expect("remote cluster"),
+    );
+
+    println!(
+        "{:>16}  {:>11}  {:>10}  {:>10}  {:>10}  {:>7}  {:>9}",
+        "config", "point q/s", "histo q/s", "flush p50", "merge p50", "rounds", "ms/round"
+    );
+    let mut rows = Vec::new();
+    for (name, target) in [
+        ("sharded-local", &local),
+        ("cluster-local", &cluster_local),
+        ("cluster-remote", &cluster_remote),
+    ] {
+        let r = bench_target(name, target, n);
+        println!(
+            "{:>16}  {:>11}  {:>10}  {:>10}  {:>10}  {:>7.1}  {:>9}",
+            r.name,
+            fmt::si(r.point_qps as u64),
+            fmt::si(r.histo_qps as u64),
+            fmt::ms(r.flush_p50),
+            fmt::ms(r.merge_p50),
+            r.rounds,
+            fmt::ms(r.round_ms)
+        );
+        rows.push(r);
+    }
+    if let [ref l, _, ref r] = rows[..] {
+        if r.point_qps > 0.0 && r.round_ms > 0.0 {
+            println!(
+                "\nloopback tax: point reads {:.0}x slower than in-process; one exchange\n\
+                 round costs {} vs {} locally — the floor a real network adds to every\n\
+                 merge round and replica read",
+                l.point_qps / r.point_qps,
+                fmt::ms(r.round_ms),
+                fmt::ms(l.round_ms)
+            );
+        }
+    }
+    handle.stop();
+}

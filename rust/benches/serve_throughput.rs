@@ -10,8 +10,9 @@
 //!
 //!     cargo bench --bench serve_throughput
 //!     PICO_SUITE=small cargo bench --bench serve_throughput   # quicker
+//!     PICO_BENCH_QUICK=1 cargo bench --bench serve_throughput # CI smoke
 
-use pico::bench::suite::Tier;
+use pico::bench::suite::{quick_bench, Tier};
 use pico::core::bz::bz_coreness;
 use pico::core::maintenance::{DynamicCore, EdgeEdit};
 use pico::core::{Decomposer, Hybrid};
@@ -24,6 +25,9 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 fn workload(tier: Tier) -> CsrGraph {
+    if quick_bench() {
+        return gen::barabasi_albert(1_500, 5, 42);
+    }
     match tier {
         Tier::Small | Tier::Xla => gen::barabasi_albert(5_000, 6, 42),
         _ => gen::barabasi_albert(20_000, 8, 42),
@@ -80,10 +84,11 @@ fn bench_concurrent_serving(g: &CsrGraph) {
         }));
     }
 
+    let rounds = if quick_bench() { 8 } else { ROUNDS };
     let mut rng = Rng::new(7);
     let mut flushes = Samples::default();
     let wall = Timer::start();
-    for _ in 0..ROUNDS {
+    for _ in 0..rounds {
         for e in random_edits(&mut rng, n, BATCH, 0.6) {
             queue.submit(e);
         }
@@ -98,7 +103,7 @@ fn bench_concurrent_serving(g: &CsrGraph) {
 
     let q = total_queries.load(Ordering::Relaxed);
     println!(
-        "concurrent serving: {READERS} readers, {ROUNDS} batches x {BATCH} edits over {:.2}s",
+        "concurrent serving: {READERS} readers, {rounds} batches x {BATCH} edits over {:.2}s",
         wall_s
     );
     println!(

@@ -14,11 +14,12 @@
 //!
 //!     cargo bench --bench shard_scaling
 //!     PICO_SUITE=small cargo bench --bench shard_scaling   # quicker
+//!     PICO_BENCH_QUICK=1 cargo bench --bench shard_scaling # CI smoke
 //!
 //! Every configuration is oracle-checked against `bz_coreness` on the
 //! assembled graph before its numbers are printed.
 
-use pico::bench::suite::Tier;
+use pico::bench::suite::{quick_bench, Tier};
 use pico::core::bz::bz_coreness;
 use pico::core::maintenance::EdgeEdit;
 use pico::graph::{gen, CsrGraph};
@@ -35,6 +36,9 @@ const FLUSHES: usize = 20;
 const BATCH: usize = 64;
 
 fn workload(tier: Tier) -> CsrGraph {
+    if quick_bench() {
+        return gen::barabasi_albert(1_200, 4, 42);
+    }
     match tier {
         Tier::Small | Tier::Xla => gen::barabasi_albert(5_000, 6, 42),
         _ => gen::barabasi_albert(20_000, 8, 42),
@@ -73,6 +77,9 @@ struct Row {
 
 fn bench_shard_count(g: &CsrGraph, shards: usize) -> Row {
     let n = g.num_vertices() as u32;
+    let point_queries = if quick_bench() { 2_000 } else { POINT_QUERIES };
+    let histo_queries = if quick_bench() { 10 } else { HISTO_QUERIES };
+    let num_flushes = if quick_bench() { 3 } else { FLUSHES };
 
     let t = Timer::start();
     let idx = ShardedIndex::new(
@@ -88,18 +95,18 @@ fn bench_shard_count(g: &CsrGraph, shards: usize) -> Row {
     let mut rng = Rng::new(7 + shards as u64);
     let mut sink = 0u64;
     let t = Timer::start();
-    for _ in 0..POINT_QUERIES {
+    for _ in 0..point_queries {
         let v = rng.below(n as u64) as u32;
         sink ^= idx.coreness(v).unwrap_or(0) as u64;
     }
-    let point_qps = POINT_QUERIES as f64 / t.elapsed().as_secs_f64();
+    let point_qps = point_queries as f64 / t.elapsed().as_secs_f64();
 
     // fan-out aggregates (per-shard histograms merged cell-wise)
     let t = Timer::start();
-    for _ in 0..HISTO_QUERIES {
+    for _ in 0..histo_queries {
         sink ^= idx.histogram().iter().sum::<u64>();
     }
-    let histo_qps = HISTO_QUERIES as f64 / t.elapsed().as_secs_f64();
+    let histo_qps = histo_queries as f64 / t.elapsed().as_secs_f64();
     std::hint::black_box(sink);
 
     // update path: mixed batches, flush latency split apply vs merge
@@ -107,7 +114,7 @@ fn bench_shard_count(g: &CsrGraph, shards: usize) -> Row {
     let mut merges = Samples::default();
     let mut rounds = 0usize;
     let mut boundary_updates = 0u64;
-    for _ in 0..FLUSHES {
+    for _ in 0..num_flushes {
         for e in random_edits(&mut rng, n, BATCH) {
             idx.submit(e);
         }
@@ -137,8 +144,8 @@ fn bench_shard_count(g: &CsrGraph, shards: usize) -> Row {
         flush_p50_ms: flush_p50,
         merge_p50_ms: merge_p50,
         merge_share: if flush_p50 > 0.0 { merge_p50 / flush_p50 * 100.0 } else { 0.0 },
-        rounds: rounds as f64 / FLUSHES as f64,
-        boundary_updates: boundary_updates as f64 / FLUSHES as f64,
+        rounds: rounds as f64 / num_flushes as f64,
+        boundary_updates: boundary_updates as f64 / num_flushes as f64,
     }
 }
 
@@ -160,8 +167,9 @@ fn main() {
     let snap = single.snapshot();
     let mut rng = Rng::new(3);
     let mut sink = 0u64;
+    let base_queries = if quick_bench() { 2_000 } else { POINT_QUERIES };
     let t = Timer::start();
-    for _ in 0..POINT_QUERIES {
+    for _ in 0..base_queries {
         let v = rng.below(g.num_vertices() as u64) as u32;
         sink ^= snap.coreness(v).unwrap_or(0) as u64;
     }
@@ -169,7 +177,7 @@ fn main() {
     println!(
         "single-index baseline: build {} | {} point queries/sec\n",
         fmt::ms(single_build),
-        fmt::si((POINT_QUERIES as f64 / t.elapsed().as_secs_f64()) as u64)
+        fmt::si((base_queries as f64 / t.elapsed().as_secs_f64()) as u64)
     );
 
     println!(

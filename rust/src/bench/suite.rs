@@ -31,6 +31,16 @@ impl Tier {
     }
 }
 
+/// `PICO_BENCH_QUICK=1` — CI smoke mode for the bench binaries: tiny
+/// graphs and iteration counts, full output shape (the ROADMAP
+/// crossover paste line still prints). Shared here so every bench
+/// agrees on what counts as "on".
+pub fn quick_bench() -> bool {
+    std::env::var("PICO_BENCH_QUICK")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
 /// One dataset definition (generated deterministically on demand).
 pub struct SuiteEntry {
     pub name: &'static str,

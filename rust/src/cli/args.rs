@@ -9,6 +9,9 @@ use std::collections::BTreeMap;
 #[derive(Clone, Debug, Default)]
 pub struct Args {
     pub command: String,
+    /// Second positional token, consumed only for commands listed in
+    /// `sub_commands` (e.g. `pico cluster status`).
+    pub subcommand: String,
     pub options: BTreeMap<String, String>,
     pub switches: Vec<String>,
 }
@@ -17,11 +20,29 @@ impl Args {
     /// Parse raw args (without argv[0]). `switch_names` lists flags that
     /// take no value.
     pub fn parse(raw: &[String], switch_names: &[&str]) -> Result<Args> {
+        Self::parse_with_sub(raw, switch_names, &[])
+    }
+
+    /// Like [`Self::parse`], but commands named in `sub_commands` accept
+    /// one further positional token as their subcommand. Stray
+    /// positionals everywhere else stay hard errors.
+    pub fn parse_with_sub(
+        raw: &[String],
+        switch_names: &[&str],
+        sub_commands: &[&str],
+    ) -> Result<Args> {
         let mut out = Args::default();
         let mut it = raw.iter().peekable();
         if let Some(cmd) = it.peek() {
             if !cmd.starts_with("--") {
                 out.command = it.next().unwrap().clone();
+            }
+        }
+        if sub_commands.contains(&out.command.as_str()) {
+            if let Some(tok) = it.peek() {
+                if !tok.starts_with("--") {
+                    out.subcommand = it.next().unwrap().clone();
+                }
             }
         }
         while let Some(tok) = it.next() {
@@ -98,6 +119,14 @@ mod tests {
     #[test]
     fn stray_positional_is_error() {
         assert!(Args::parse(&s(&["run", "oops"]), &[]).is_err());
+        // ...unless the command is declared to take a subcommand
+        let a = Args::parse_with_sub(&s(&["cluster", "status", "--cluster", "c.toml"]), &[], &["cluster"])
+            .unwrap();
+        assert_eq!(a.command, "cluster");
+        assert_eq!(a.subcommand, "status");
+        assert_eq!(a.get("cluster"), Some("c.toml"));
+        // a third positional is still an error
+        assert!(Args::parse_with_sub(&s(&["cluster", "status", "oops"]), &[], &["cluster"]).is_err());
     }
 
     #[test]

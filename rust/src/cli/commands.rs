@@ -187,14 +187,57 @@ fn doctor_xla(_store: crate::runtime::ArtifactStore) -> Result<()> {
     Ok(())
 }
 
-/// `pico serve` — host core indices (optionally sharded) behind the TCP
-/// server (see `service::server` docs for the line + binary protocols).
+/// Process-wide shutdown request flag, set from SIGINT/SIGTERM. libc is
+/// already linked by std, so the handler is installed through a direct
+/// `signal(2)` declaration — no new dependency.
+#[cfg(unix)]
+mod shutdown {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static REQUESTED: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_signal(_sig: i32) {
+        // async-signal-safe: a single atomic store
+        REQUESTED.store(true, Ordering::SeqCst);
+    }
+
+    extern "C" {
+        fn signal(signum: i32, handler: usize) -> usize;
+    }
+
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGINT, on_signal as usize);
+            signal(SIGTERM, on_signal as usize);
+        }
+    }
+
+    pub fn requested() -> bool {
+        REQUESTED.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod shutdown {
+    /// No signal story off unix: `pico serve` runs until killed.
+    pub fn install() {}
+
+    pub fn requested() -> bool {
+        false
+    }
+}
+
+/// `pico serve` — host core indices (single, sharded, or a whole
+/// cluster via `--cluster <cfg>`) behind the TCP server (see
+/// `service::server` docs for the line + binary protocols). SIGTERM or
+/// ctrl-c drains connections and flushes pending edits before exiting.
 pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     use crate::service::{serve, BatchConfig, CoreService};
     use crate::shard::PartitionStrategy;
 
     let addr = args.get_or("addr", "127.0.0.1:7571").to_string();
-    let dataset_name = args.get_or("dataset", "g1").to_string();
     let threads = args.parse_num::<usize>("threads")?.unwrap_or(cfg.threads);
     let shards = args.parse_num::<usize>("shards")?.unwrap_or(1);
     if shards == 0 || shards > crate::service::server::MAX_SHARDS {
@@ -214,25 +257,59 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         threads,
     };
 
-    let spec = resolve_dataset(&dataset_name)?;
-    let g = spec.load()?;
     let service = std::sync::Arc::new(CoreService::new(batch.clone()));
-    let s = if shards > 1 {
-        let idx = service.open_sharded(&spec.name(), &g, shards, strategy);
-        println!(
-            "partition: {} shards [{}], {} boundary edges",
-            idx.num_shards(),
-            idx.strategy().name(),
-            idx.boundary_edges()
-        );
-        idx.snapshot()
+    let (name, s) = if let Some(path) = args.get("cluster") {
+        // cluster mode: topology comes from the config file; --dataset
+        // overrides its dataset for quick experiments. Shard placement
+        // flags would be silently ignored — reject them instead.
+        if args.get("shards").is_some() || args.get("partition").is_some() {
+            bail!("--shards/--partition come from the topology file in --cluster mode");
+        }
+        let topo = crate::cluster::ClusterConfig::load(path)?;
+        let dataset = args.get("dataset").unwrap_or(&topo.dataset).to_string();
+        let spec = resolve_dataset(&dataset)?;
+        let g = spec.load()?;
+        let idx = std::sync::Arc::new(crate::cluster::ClusterIndex::build(&g, &topo, batch.clone())?);
+        for gs in idx.status() {
+            let state = match &gs.primary {
+                Ok(st) => format!("up (cluster epoch {})", st.cluster_epoch),
+                Err(e) => format!("DOWN: {e}"),
+            };
+            println!(
+                "shard {}: {} primary {} — {}, {} replica(s)",
+                gs.shard,
+                gs.kind,
+                gs.primary_addr,
+                state,
+                gs.replicas.len()
+            );
+        }
+        let name = topo.name.clone();
+        let snap = idx.snapshot();
+        service.open_cluster(&name, idx);
+        (name, snap)
     } else {
-        service.open(&spec.name(), &g).snapshot()
+        let dataset_name = args.get_or("dataset", "g1").to_string();
+        let spec = resolve_dataset(&dataset_name)?;
+        let g = spec.load()?;
+        let snap = if shards > 1 {
+            let idx = service.open_sharded(&spec.name(), &g, shards, strategy);
+            println!(
+                "partition: {} shards [{}], {} boundary edges",
+                idx.num_shards(),
+                idx.strategy().name(),
+                idx.boundary_edges()
+            );
+            idx.snapshot()
+        } else {
+            service.open(&spec.name(), &g).snapshot()
+        };
+        (spec.name(), snap)
     };
-    let handle = serve(service, &addr)?;
+    let handle = serve(service.clone(), &addr)?;
     println!(
         "serving '{}' on {} — |V|={} |E|={} k_max={} (epoch {})",
-        spec.name(),
+        name,
         handle.addr(),
         s.num_vertices(),
         s.num_edges,
@@ -245,7 +322,127 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         batch.recompute_fraction * 100.0
     );
     println!("try: pico query --addr {} --cmd 'CORENESS 0'", handle.addr());
-    handle.join(); // runs until the process is killed
+
+    // run until SIGTERM/ctrl-c, then drain instead of dropping
+    // connections mid-frame
+    shutdown::install();
+    while !shutdown::requested() {
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    println!("shutdown requested — draining connections...");
+    let drained = handle.drain(std::time::Duration::from_secs(5));
+    for (graph, outcome) in service.flush_all() {
+        match outcome {
+            Ok((epoch, applied)) => {
+                println!("flushed {applied} pending edit(s) on '{graph}' -> epoch {epoch}")
+            }
+            Err(e) => println!("WARNING: pending edits on '{graph}' could not be flushed: {e}"),
+        }
+    }
+    if drained {
+        println!("drained cleanly; bye");
+    } else {
+        // a client stalled mid-request pins its handler until the
+        // process exits — be honest about what happens to it
+        println!("drain timed out; exiting with connections still open (process exit closes them)");
+    }
+    Ok(())
+}
+
+/// `pico cluster <subcommand>` — topology tooling. `status` probes every
+/// endpoint of a `--cluster` config over the protocol.
+pub fn cmd_cluster(args: &Args, _cfg: &Config) -> Result<()> {
+    match args.subcommand.as_str() {
+        "status" => cluster_status(args),
+        "" => bail!("usage: pico cluster status --cluster <cfg>"),
+        other => bail!("unknown cluster subcommand '{other}' (have: status)"),
+    }
+}
+
+fn cluster_status(args: &Args) -> Result<()> {
+    use crate::cluster::{ClusterConfig, Endpoint, RemoteShard};
+
+    let path = args
+        .get("cluster")
+        .ok_or_else(|| anyhow::anyhow!("--cluster <cfg> is required"))?;
+    let topo = ClusterConfig::load(path)?;
+    println!(
+        "cluster '{}' — dataset {}, {} shards [{}]",
+        topo.name,
+        topo.dataset,
+        topo.num_shards(),
+        topo.partition.name()
+    );
+    let probe_row = |i: usize, role: &str, endpoint: &str, graph: &str| -> (Vec<String>, bool) {
+        let r = RemoteShard::new(i, endpoint, graph);
+        match r.status() {
+            Ok(st) => (
+                vec![
+                    i.to_string(),
+                    role.to_string(),
+                    endpoint.to_string(),
+                    "up".to_string(),
+                    st.epoch.to_string(),
+                    st.cluster_epoch.to_string(),
+                    st.owned.to_string(),
+                    st.k_max.to_string(),
+                ],
+                true,
+            ),
+            Err(_) => (
+                vec![
+                    i.to_string(),
+                    role.to_string(),
+                    endpoint.to_string(),
+                    "down".to_string(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ],
+                false,
+            ),
+        }
+    };
+    let mut t = Table::new(&[
+        "shard", "role", "endpoint", "state", "epoch", "cluster", "owned", "kmax",
+    ]);
+    let mut down = 0usize;
+    for (i, spec) in topo.shards.iter().enumerate() {
+        let graph = topo.shard_graph(i);
+        match &spec.primary {
+            Endpoint::Local => {
+                t.row(vec![
+                    i.to_string(),
+                    "primary".into(),
+                    "local".into(),
+                    "in-coordinator".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                    "-".into(),
+                ]);
+            }
+            Endpoint::Remote(addr) => {
+                let (row, up) = probe_row(i, "primary", addr, &graph);
+                t.row(row);
+                if !up {
+                    down += 1;
+                }
+            }
+        }
+        for addr in &spec.replicas {
+            let (row, up) = probe_row(i, "replica", addr, &graph);
+            t.row(row);
+            if !up {
+                down += 1;
+            }
+        }
+    }
+    print!("{}", t.render());
+    if down > 0 {
+        bail!("{down} endpoint(s) down");
+    }
     Ok(())
 }
 
@@ -416,5 +613,26 @@ mod tests {
     #[test]
     fn list_command_smoke() {
         cmd_list(&Args::default(), &Config::default()).unwrap();
+    }
+
+    #[test]
+    fn cluster_subcommand_errors_are_structured() {
+        let no_sub = Args::parse_with_sub(&["cluster".into()], &[], &["cluster"]).unwrap();
+        assert!(cmd_cluster(&no_sub, &Config::default())
+            .unwrap_err()
+            .to_string()
+            .contains("usage"));
+        let bogus =
+            Args::parse_with_sub(&["cluster".into(), "bogus".into()], &[], &["cluster"]).unwrap();
+        assert!(cmd_cluster(&bogus, &Config::default())
+            .unwrap_err()
+            .to_string()
+            .contains("unknown cluster subcommand"));
+        let no_cfg =
+            Args::parse_with_sub(&["cluster".into(), "status".into()], &[], &["cluster"]).unwrap();
+        assert!(cmd_cluster(&no_cfg, &Config::default())
+            .unwrap_err()
+            .to_string()
+            .contains("--cluster"));
     }
 }

@@ -17,6 +17,7 @@ COMMANDS:
     run       Decompose one dataset with one algorithm
     suite     Run algorithms across the dataset suite (alias: bench)
     serve     Host core indices behind the line-protocol TCP server
+    cluster   Multi-host topology tooling (`pico cluster status`)
     query     Send protocol commands to a running `pico serve`
     stats     Print Table II-style statistics for the suite
     analyze   Fig. 3-style multi-access analysis of a dataset
@@ -40,9 +41,20 @@ SERVE OPTIONS:
     --dataset NAME       Initial hosted graph (default g1)
     --shards N           Partition the hosted graph across N shards (default 1)
     --partition S        Partition strategy: hash | range (default hash)
+    --cluster CFG        Serve a multi-host cluster from a topology file:
+                         shards placed local or shipped to remote `pico
+                         serve` hosts, replica groups with epoch-checked
+                         read failover and snapshot catch-up (see
+                         cluster::config docs for the format). SIGTERM /
+                         ctrl-c drains connections and flushes pending
+                         edits before exit.
     --batch-fraction F   Recompute when a batch exceeds F of |E| (default 0.02,
                          or the PICO_RECOMPUTE_FRACTION env override)
     --batch-min N        Never recompute below N coalesced edits (default 64)
+
+CLUSTER OPTIONS (pico cluster status):
+    --cluster CFG        Topology file; probes every remote endpoint with
+                         SHARDINFO and prints per-shard epochs and roles
 
 QUERY OPTIONS:
     --addr HOST:PORT     Server address (default 127.0.0.1:7571)
@@ -59,6 +71,8 @@ EXAMPLES:
     pico run --algo PO-dyn --dataset g1 --json
     pico suite --algos PO-dyn,HistoCore --tier small
     pico serve --dataset social-ba --addr 127.0.0.1:7571 --shards 4
+    pico serve --cluster cluster.toml
+    pico cluster status --cluster cluster.toml
     pico query --cmd 'INSERT 3 9; FLUSH; CORENESS 3; DENSEST; SHARDS'
     pico query --binary --cmd 'SNAPSHOT' --snapshot-file /tmp/social.snap
     pico query --binary --cmd 'RESTORE replica' --snapshot-file /tmp/social.snap

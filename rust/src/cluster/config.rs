@@ -1,0 +1,205 @@
+//! Cluster topology configuration — the TOML-style file behind
+//! `pico serve --cluster <cfg>` and `pico cluster status`.
+//!
+//! Parsed with the in-tree [`KvFile`] (the environment is offline; no
+//! serde/toml crates). Format:
+//!
+//! ```text
+//! [cluster]
+//! name = social          # hosted graph name (shards become name/shardN)
+//! dataset = social-ba    # suite name or graph file path
+//! shards = 2
+//! partition = hash       # hash | range
+//!
+//! [shard.0]
+//! primary = local        # in the coordinator process
+//! replicas = 127.0.0.1:7581, 127.0.0.1:7582
+//!
+//! [shard.1]
+//! primary = 127.0.0.1:7591   # a running `pico serve` to ship the shard to
+//! ```
+//!
+//! Every shard needs a `primary` (defaulting to `local`); `replicas` are
+//! optional remote hosts that receive the same shard manifest and serve
+//! epoch-checked reads with failover.
+
+use crate::config::parser::KvFile;
+use crate::service::server::MAX_SHARDS;
+use crate::shard::PartitionStrategy;
+use anyhow::{bail, Context, Result};
+use std::path::Path;
+
+/// Where a shard's primary lives.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    /// In the coordinator process (a plain `LocalShard`).
+    Local,
+    /// Shipped to (and driven over) a remote `pico serve` at `host:port`.
+    Remote(String),
+}
+
+/// One shard's placement.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub primary: Endpoint,
+    /// Remote replica hosts (`host:port`).
+    pub replicas: Vec<String>,
+}
+
+/// A parsed cluster topology.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterConfig {
+    pub name: String,
+    pub dataset: String,
+    pub partition: PartitionStrategy,
+    pub shards: Vec<ShardSpec>,
+}
+
+impl ClusterConfig {
+    pub fn parse(text: &str) -> Result<Self> {
+        let kv = KvFile::parse(text)?;
+        let name = kv.get("cluster.name").unwrap_or("cluster").to_string();
+        if name.is_empty() || name.contains(char::is_whitespace) {
+            bail!("cluster.name '{name}' must be non-empty without whitespace");
+        }
+        let dataset = kv.get("cluster.dataset").unwrap_or("g1").to_string();
+        let partition =
+            PartitionStrategy::parse(kv.get("cluster.partition").unwrap_or("hash"))?;
+        let n: usize = kv
+            .get("cluster.shards")
+            .context("cluster.shards is required")?
+            .parse()
+            .context("cluster.shards must be a number")?;
+        if n == 0 || n > MAX_SHARDS {
+            bail!("cluster.shards must be 1..={MAX_SHARDS}, got {n}");
+        }
+        // reject typo'd / out-of-range shard sections instead of
+        // silently ignoring them
+        for key in kv.keys() {
+            if let Some(rest) = key.strip_prefix("shard.") {
+                let idx = rest.split('.').next().unwrap_or("");
+                match idx.parse::<usize>() {
+                    Ok(i) if i < n => {}
+                    _ => bail!("config names shard '{idx}' but cluster.shards = {n}"),
+                }
+            } else if !key.starts_with("cluster.") {
+                bail!("unknown config key '{key}'");
+            }
+        }
+        let mut shards = Vec::with_capacity(n);
+        for i in 0..n {
+            let primary = match kv.get(&format!("shard.{i}.primary")) {
+                None | Some("local") => Endpoint::Local,
+                Some(addr) => {
+                    check_addr(addr)?;
+                    Endpoint::Remote(addr.to_string())
+                }
+            };
+            let replicas: Vec<String> = match kv.get(&format!("shard.{i}.replicas")) {
+                None => Vec::new(),
+                Some(list) => {
+                    let mut out = Vec::new();
+                    for addr in list.split(',').map(str::trim).filter(|a| !a.is_empty()) {
+                        check_addr(addr)?;
+                        out.push(addr.to_string());
+                    }
+                    out
+                }
+            };
+            shards.push(ShardSpec { primary, replicas });
+        }
+        Ok(Self {
+            name,
+            dataset,
+            partition,
+            shards,
+        })
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let text = std::fs::read_to_string(path.as_ref())
+            .with_context(|| format!("reading {}", path.as_ref().display()))?;
+        Self::parse(&text).with_context(|| format!("parsing {}", path.as_ref().display()))
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The graph name shard `i` is hosted under everywhere.
+    pub fn shard_graph(&self, i: usize) -> String {
+        format!("{}/shard{i}", self.name)
+    }
+}
+
+fn check_addr(addr: &str) -> Result<()> {
+    if !addr.contains(':') {
+        bail!("endpoint '{addr}' is not host:port");
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GOOD: &str = "\
+[cluster]
+name = social
+dataset = social-ba
+shards = 2
+partition = hash
+
+[shard.0]
+primary = local
+replicas = 127.0.0.1:7581, 127.0.0.1:7582
+
+[shard.1]
+primary = 127.0.0.1:7591
+";
+
+    #[test]
+    fn parses_a_mixed_topology() {
+        let c = ClusterConfig::parse(GOOD).unwrap();
+        assert_eq!(c.name, "social");
+        assert_eq!(c.dataset, "social-ba");
+        assert_eq!(c.partition, PartitionStrategy::Hash);
+        assert_eq!(c.num_shards(), 2);
+        assert_eq!(c.shards[0].primary, Endpoint::Local);
+        assert_eq!(c.shards[0].replicas.len(), 2);
+        assert_eq!(
+            c.shards[1].primary,
+            Endpoint::Remote("127.0.0.1:7591".into())
+        );
+        assert!(c.shards[1].replicas.is_empty());
+        assert_eq!(c.shard_graph(1), "social/shard1");
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let c = ClusterConfig::parse("[cluster]\nshards = 1\n").unwrap();
+        assert_eq!(c.name, "cluster");
+        assert_eq!(c.dataset, "g1");
+        assert_eq!(c.shards[0].primary, Endpoint::Local);
+    }
+
+    #[test]
+    fn bad_configs_are_rejected() {
+        assert!(ClusterConfig::parse("").is_err(), "shards is required");
+        assert!(ClusterConfig::parse("[cluster]\nshards = 0\n").is_err());
+        assert!(ClusterConfig::parse("[cluster]\nshards = 9999\n").is_err());
+        // shard section beyond the declared count
+        assert!(
+            ClusterConfig::parse("[cluster]\nshards = 1\n[shard.3]\nprimary = local\n").is_err()
+        );
+        // unknown top-level key
+        assert!(ClusterConfig::parse("bogus = 1\n[cluster]\nshards = 1\n").is_err());
+        // a primary that is not host:port
+        assert!(ClusterConfig::parse(
+            "[cluster]\nshards = 1\n[shard.0]\nprimary = nonsense\n"
+        )
+        .is_err());
+        // whitespace in the name would break the protocol
+        assert!(ClusterConfig::parse("[cluster]\nname = a b\nshards = 1\n").is_err());
+    }
+}

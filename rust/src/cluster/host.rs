@@ -1,0 +1,303 @@
+//! The server side of a remote shard: what a `pico serve` process hosts
+//! when a cluster coordinator ships it a shard manifest (`SHARDHOST`).
+//!
+//! A [`ShardHost`] wraps the same [`LocalShard`] the in-process router
+//! uses — restored from the manifest via the hydration path (no
+//! decomposition runs) — and turns the `SHARD*` verbs into calls on it.
+//! Handlers produce complete reply lines/frames so the TCP layer in
+//! [`crate::service::server`] stays a pure dispatcher.
+
+use super::wire;
+use crate::service::batch::BatchConfig;
+use crate::service::index::CoreIndex;
+use crate::shard::backend::{LocalShard, ShardBackend};
+use anyhow::{Context, Result};
+use std::sync::Arc;
+
+/// One hosted shard of some cluster: primary or replica — the role is
+/// the coordinator's concern; the host just serves the shard interface.
+pub struct ShardHost {
+    name: String,
+    num_shards: u32,
+    shard: LocalShard,
+}
+
+/// Serialise a shard's complete current state as a manifest — the
+/// payload of initial shipping, `SHARDSNAP`, and replica catch-up.
+/// The export is atomic with respect to concurrent applies (see
+/// [`LocalShard::export_state`]).
+pub fn manifest_for(shard: &LocalShard, num_shards: u32) -> Vec<u8> {
+    let (globals, owned_locals, refined, cluster_epoch, snap) = shard.export_state();
+    wire::encode_manifest(
+        shard.id() as u32,
+        num_shards,
+        cluster_epoch,
+        &globals,
+        &owned_locals,
+        &refined,
+        &snap,
+    )
+}
+
+impl ShardHost {
+    /// Validate manifest bytes and hydrate the shard. Nothing is
+    /// installed (and no decomposition runs) on a rejected payload.
+    pub fn from_manifest_bytes(name: &str, bytes: &[u8], cfg: BatchConfig) -> Result<Self> {
+        let m = wire::decode_manifest(bytes).context("shard manifest")?;
+        let index = Arc::new(CoreIndex::hydrate(
+            name,
+            &m.snapshot.graph,
+            m.snapshot.core,
+            m.snapshot.epoch,
+        ));
+        let shard = LocalShard::from_parts(
+            m.shard_id as usize,
+            index,
+            m.globals,
+            m.owned_locals,
+            m.refined,
+            m.cluster_epoch,
+            cfg,
+        )?;
+        Ok(Self {
+            name: name.to_string(),
+            num_shards: m.num_shards,
+            shard,
+        })
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn num_shards(&self) -> u32 {
+        self.num_shards
+    }
+
+    pub fn shard_id(&self) -> usize {
+        self.shard.id()
+    }
+
+    pub fn cluster_epoch(&self) -> u64 {
+        self.shard
+            .status()
+            .expect("local shard status is infallible")
+            .cluster_epoch
+    }
+
+    /// The underlying shard index (EPOCH/CORENESS/SNAPSHOT on a shard
+    /// host read the shard-local view — exact global answers come from
+    /// the cluster router's merge).
+    pub fn index(&self) -> Arc<CoreIndex> {
+        self.shard.index()
+    }
+
+    /// `SHARDINFO` — the health / epoch probe.
+    pub fn info(&self) -> String {
+        let s = self.shard.status().expect("local shard status is infallible");
+        format!(
+            "OK shard={} shards={} epoch={} cluster={} owned={} kmax={}",
+            s.id, self.num_shards, s.epoch, s.cluster_epoch, s.owned, s.k_max
+        )
+    }
+
+    /// `SHARDCORE <v>` — committed refined coreness of an owned vertex.
+    pub fn core_line(&self, args: &[&str]) -> String {
+        let Some(Ok(v)) = args.first().map(|a| a.parse::<u32>()) else {
+            return "ERR usage: SHARDCORE <v>".into();
+        };
+        let (core, cluster) = self
+            .shard
+            .refined_coreness(v)
+            .expect("local shard reads are infallible");
+        match core {
+            Some(c) => format!("OK core={c} cluster={cluster}"),
+            None => format!("OK core=none cluster={cluster}"),
+        }
+    }
+
+    /// `SHARDHISTO` — committed histogram over owned vertices.
+    pub fn histo_line(&self) -> String {
+        let (hist, cluster) = self
+            .shard
+            .histogram_partial()
+            .expect("local shard reads are infallible");
+        let cells: Vec<String> = hist
+            .iter()
+            .enumerate()
+            .map(|(k, n)| format!("{k}:{n}"))
+            .collect();
+        format!("OK cluster={cluster} histo={}", cells.join(","))
+    }
+
+    /// `SHARDMEMBERS <k>` — owned members frame (head + u32 payload).
+    pub fn members_frame(&self, args: &[&str]) -> Vec<u8> {
+        let Some(Ok(k)) = args.first().map(|a| a.parse::<u32>()) else {
+            return b"ERR usage: SHARDMEMBERS <k>".to_vec();
+        };
+        let (members, cluster) = self
+            .shard
+            .members_partial(k)
+            .expect("local shard reads are infallible");
+        let mut out = format!("OK count={} cluster={cluster}\n", members.len()).into_bytes();
+        out.extend_from_slice(&wire::encode_u32s(&members));
+        out
+    }
+
+    /// `SHARDAPPLY` — a routed batch through the shard's pipeline.
+    pub fn apply_frame(&self, payload: &[u8]) -> Vec<u8> {
+        let batch = match wire::decode_batch(payload) {
+            Ok(b) => b,
+            Err(e) => return format!("ERR shardapply: {e:#}").into_bytes(),
+        };
+        match self.shard.apply(&batch) {
+            Ok(out) => format!(
+                "OK changed={} recomputed={} epoch={}",
+                out.changed, out.recomputed as u8, out.epoch
+            )
+            .into_bytes(),
+            Err(e) => format!("ERR shardapply: {e:#}").into_bytes(),
+        }
+    }
+
+    /// `SHARDREFINE START <slack|-> | ROUND | COMMIT <epoch>` — the
+    /// boundary-exchange sub-verbs.
+    pub fn refine_frame(&self, args: &[&str], payload: &[u8]) -> Vec<u8> {
+        let sub = args.first().map(|s| s.to_ascii_uppercase()).unwrap_or_default();
+        match sub.as_str() {
+            "START" => {
+                let slack = match args.get(1) {
+                    None | Some(&"-") => None,
+                    Some(s) => match s.parse::<u32>() {
+                        Ok(v) => Some(v),
+                        Err(_) => {
+                            return format!("ERR bad slack '{s}' (number or -)").into_bytes()
+                        }
+                    },
+                };
+                match self.shard.refine_start(slack) {
+                    Ok(init) => {
+                        let mut out = format!(
+                            "OK refine-init owned={} ghosts={}\n",
+                            init.owned_est.len(),
+                            init.ghosts.len()
+                        )
+                        .into_bytes();
+                        out.extend_from_slice(&wire::encode_refine_init(&init));
+                        out
+                    }
+                    Err(e) => format!("ERR refine start: {e:#}").into_bytes(),
+                }
+            }
+            "ROUND" => {
+                let updates = match wire::decode_pairs(payload) {
+                    Ok(u) => u,
+                    Err(e) => return format!("ERR refine round: {e:#}").into_bytes(),
+                };
+                match self.shard.refine_round(&updates) {
+                    Ok(r) => {
+                        let mut out =
+                            format!("OK sweeps={} ghosts={}\n", r.sweeps, r.ghost_updates)
+                                .into_bytes();
+                        out.extend_from_slice(&wire::encode_pairs(&r.changed));
+                        out
+                    }
+                    Err(e) => format!("ERR refine round: {e:#}").into_bytes(),
+                }
+            }
+            "COMMIT" => {
+                let Some(Ok(epoch)) = args.get(1).map(|a| a.parse::<u64>()) else {
+                    return b"ERR usage: SHARDREFINE COMMIT <epoch>".to_vec();
+                };
+                match self.shard.refine_commit(epoch) {
+                    Ok(()) => format!("OK commit={epoch}").into_bytes(),
+                    Err(e) => format!("ERR refine commit: {e:#}").into_bytes(),
+                }
+            }
+            other => format!("ERR unknown SHARDREFINE sub-verb '{other}' (START|ROUND|COMMIT)")
+                .into_bytes(),
+        }
+    }
+
+    /// `SHARDSNAP` — the full manifest for replica catch-up.
+    pub fn snap_frame(&self) -> Vec<u8> {
+        let manifest = manifest_for(&self.shard, self.num_shards);
+        let mut out = format!("OK shardsnap name={} bytes={}\n", self.name, manifest.len())
+            .into_bytes();
+        out.extend_from_slice(&manifest);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+    use crate::shard::partition::{partition, PartitionStrategy};
+
+    fn cfg() -> BatchConfig {
+        BatchConfig {
+            threads: 1,
+            ..BatchConfig::default()
+        }
+    }
+
+    fn hosted() -> ShardHost {
+        let g = examples::g1();
+        let plan = partition(&g, 2, PartitionStrategy::Hash);
+        let shard = LocalShard::from_plan("c", &plan.shards[0], cfg());
+        shard.refine_start(None).unwrap();
+        shard.refine_round(&[]).unwrap();
+        shard.refine_commit(3).unwrap();
+        let bytes = manifest_for(&shard, 2);
+        ShardHost::from_manifest_bytes("c/shard0", &bytes, cfg()).unwrap()
+    }
+
+    #[test]
+    fn manifest_hosting_preserves_state() {
+        let h = hosted();
+        let info = h.info();
+        assert!(info.starts_with("OK shard=0 shards=2 epoch=0 cluster=3"), "{info}");
+        assert_eq!(h.num_shards(), 2);
+        // refined reads survived the ship (no recompute ran: the index
+        // epoch is still the shard's own epoch 0)
+        let s = h.index().snapshot();
+        assert_eq!(s.epoch, 0);
+        let histo = h.histo_line();
+        assert!(histo.starts_with("OK cluster=3 histo="), "{histo}");
+    }
+
+    #[test]
+    fn verb_error_paths_are_structured() {
+        let h = hosted();
+        assert!(h.core_line(&[]).starts_with("ERR usage"));
+        assert!(h.core_line(&["zzz"]).starts_with("ERR usage"));
+        assert!(String::from_utf8(h.members_frame(&[])).unwrap().starts_with("ERR usage"));
+        assert!(String::from_utf8(h.apply_frame(b"junk")).unwrap().starts_with("ERR shardapply"));
+        assert!(String::from_utf8(h.refine_frame(&["NOPE"], b""))
+            .unwrap()
+            .starts_with("ERR unknown SHARDREFINE"));
+        assert!(String::from_utf8(h.refine_frame(&["START", "x"], b""))
+            .unwrap()
+            .starts_with("ERR bad slack"));
+        assert!(String::from_utf8(h.refine_frame(&["ROUND"], b"junk"))
+            .unwrap()
+            .starts_with("ERR refine round"));
+        assert!(ShardHost::from_manifest_bytes("x", b"garbage", cfg()).is_err());
+    }
+
+    #[test]
+    fn refine_verbs_drive_the_shard() {
+        let h = hosted();
+        let start = h.refine_frame(&["START", "-"], b"");
+        let nl = start.iter().position(|&b| b == b'\n').unwrap();
+        assert!(std::str::from_utf8(&start[..nl]).unwrap().starts_with("OK refine-init"));
+        wire::decode_refine_init(&start[nl + 1..]).unwrap();
+        let round = h.refine_frame(&["ROUND"], &wire::encode_pairs(&[]));
+        let nl = round.iter().position(|&b| b == b'\n').unwrap();
+        assert!(std::str::from_utf8(&round[..nl]).unwrap().starts_with("OK sweeps=1"));
+        let commit = h.refine_frame(&["COMMIT", "9"], b"");
+        assert_eq!(commit, b"OK commit=9");
+        assert!(h.info().contains("cluster=9"));
+    }
+}

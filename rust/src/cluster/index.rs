@@ -1,0 +1,659 @@
+//! The cluster router: one logical core index spread over local and
+//! remote shards, with replica groups per shard.
+//!
+//! A [`ClusterIndex`] is the multi-host sibling of
+//! [`crate::shard::ShardedIndex`]: the same owner map, the same routed
+//! edits, the same warm-started boundary-refinement merge
+//! ([`crate::shard::router`]) — but each shard sits behind the
+//! [`ShardBackend`] trait, so a shard may be an in-process
+//! [`LocalShard`] or a [`RemoteShard`] driven over the binary protocol.
+//! The published merged snapshot is byte-identical to a single
+//! `CoreIndex` over the same graph (pinned by `tests/cluster.rs`).
+//!
+//! # Replica groups
+//!
+//! Each shard has one primary (which takes writes and refinement) and
+//! any number of remote replicas hydrated from shard manifests — no
+//! replica ever recomputes a decomposition. Reads fan out across
+//! replicas round-robin; a reply is accepted only if its committed
+//! cluster epoch matches the router's, so a stale replica (one that
+//! missed a flush) is skipped — counted, not trusted — and a dead one
+//! fails over. The primary is the authoritative fallback.
+//! [`ClusterIndex::sync_replicas`] is snapshot catch-up: it probes every
+//! replica and re-ships the primary's manifest to the stale ones.
+//!
+//! # Failure semantics
+//!
+//! A flush that errors midway (a remote primary died between the apply
+//! and the merge) consumes its edits and surfaces the error; the caller
+//! retries the flush after restoring the host — per-shard state is
+//! always internally consistent because shard application and
+//! refinement commits are atomic per shard.
+
+use super::config::{ClusterConfig, Endpoint};
+use super::host::manifest_for;
+use super::remote::RemoteShard;
+use super::wire;
+use crate::core::maintenance::EdgeEdit;
+use crate::graph::{CsrGraph, GraphBuilder, VertexId};
+use crate::service::batch::{coalesce, BatchConfig};
+use crate::service::index::CoreSnapshot;
+use crate::shard::backend::{LocalShard, ShardBackend, ShardStatus};
+use crate::shard::partition::partition;
+use crate::shard::router::{refine, route, MergeStats};
+use crate::shard::ShardedOutcome;
+use crate::util::timer::Timer;
+use anyhow::{bail, Context, Result};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
+
+/// A shard's primary placement.
+pub enum Primary {
+    Local(Arc<LocalShard>),
+    Remote(Arc<RemoteShard>),
+}
+
+impl Primary {
+    fn backend(&self) -> Arc<dyn ShardBackend> {
+        match self {
+            Primary::Local(s) => s.clone() as Arc<dyn ShardBackend>,
+            Primary::Remote(r) => r.clone() as Arc<dyn ShardBackend>,
+        }
+    }
+
+    fn kind(&self) -> &'static str {
+        match self {
+            Primary::Local(_) => "local",
+            Primary::Remote(_) => "remote",
+        }
+    }
+
+    fn addr(&self) -> String {
+        match self {
+            Primary::Local(_) => "local".into(),
+            Primary::Remote(r) => r.addr().to_string(),
+        }
+    }
+
+    /// The primary's current manifest (replica catch-up source).
+    fn manifest(&self, num_shards: u32) -> Result<Vec<u8>> {
+        match self {
+            Primary::Local(s) => Ok(manifest_for(s, num_shards)),
+            Primary::Remote(r) => r.fetch_manifest(),
+        }
+    }
+}
+
+/// One shard's primary plus its read replicas.
+pub struct ReplicaGroup {
+    primary: Primary,
+    backend: Arc<dyn ShardBackend>,
+    replicas: Vec<Arc<RemoteShard>>,
+    cursor: AtomicUsize,
+    failovers: AtomicU64,
+    stale_reads: AtomicU64,
+}
+
+impl ReplicaGroup {
+    pub fn new(primary: Primary, replicas: Vec<Arc<RemoteShard>>) -> Self {
+        let backend = primary.backend();
+        Self {
+            primary,
+            backend,
+            replicas,
+            cursor: AtomicUsize::new(0),
+            failovers: AtomicU64::new(0),
+            stale_reads: AtomicU64::new(0),
+        }
+    }
+
+    pub fn backend(&self) -> &Arc<dyn ShardBackend> {
+        &self.backend
+    }
+
+    /// `"local"` / `"remote"` — the primary's placement (no probing).
+    pub fn kind(&self) -> &'static str {
+        self.primary.kind()
+    }
+
+    /// The primary's endpoint for display (no probing).
+    pub fn primary_addr(&self) -> String {
+        self.primary.addr()
+    }
+
+    pub fn replicas(&self) -> &[Arc<RemoteShard>] {
+        &self.replicas
+    }
+
+    /// Reads answered by a replica that failed over or was rejected as
+    /// stale, cumulatively (observability + fault-path tests).
+    pub fn failovers(&self) -> u64 {
+        self.failovers.load(Ordering::Relaxed)
+    }
+
+    pub fn stale_reads(&self) -> u64 {
+        self.stale_reads.load(Ordering::Relaxed)
+    }
+
+    /// Run an epoch-stamped read: replicas round-robin first (accepting
+    /// only answers committed at `want_epoch`), the primary as the
+    /// authoritative fallback.
+    pub fn read<T>(
+        &self,
+        want_epoch: u64,
+        f: impl Fn(&dyn ShardBackend) -> Result<(T, u64)>,
+    ) -> Result<T> {
+        let n = self.replicas.len();
+        if n > 0 {
+            let start = self.cursor.fetch_add(1, Ordering::Relaxed);
+            for i in 0..n {
+                let r = &self.replicas[(start + i) % n];
+                match f(r.as_ref()) {
+                    Ok((val, ce)) if ce == want_epoch => return Ok(val),
+                    Ok(_) => {
+                        self.stale_reads.fetch_add(1, Ordering::Relaxed);
+                    }
+                    Err(_) => {
+                        self.failovers.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        }
+        f(self.backend.as_ref()).map(|(v, _)| v)
+    }
+}
+
+/// Probe results for `pico cluster status` / the `SHARDS` verb.
+pub struct GroupStatus {
+    pub shard: usize,
+    pub kind: &'static str,
+    pub primary_addr: String,
+    /// `Err` carries the probe failure text (host down).
+    pub primary: Result<ShardStatus, String>,
+    /// Per-replica `(addr, status)`.
+    pub replicas: Vec<(String, Result<ShardStatus, String>)>,
+    pub failovers: u64,
+    pub stale_reads: u64,
+}
+
+struct Published {
+    global: Arc<CoreSnapshot>,
+    merge: MergeStats,
+    boundary_edges: u64,
+}
+
+/// A cluster-served core index: local/remote shards behind one router,
+/// exact merged answers at every published epoch.
+pub struct ClusterIndex {
+    name: String,
+    cfg: BatchConfig,
+    groups: Vec<ReplicaGroup>,
+    owner: Mutex<Vec<u32>>,
+    published: RwLock<Arc<Published>>,
+    epoch: AtomicU64,
+    graph_cache: Mutex<Option<(u64, Arc<CsrGraph>)>>,
+    pending: Mutex<Vec<EdgeEdit>>,
+    flush_lock: Mutex<()>,
+}
+
+impl ClusterIndex {
+    /// Partition `g` per the topology, place every shard (shipping
+    /// manifests to remote primaries and replicas), run the initial
+    /// merge, and bring replicas up to the committed epoch 0.
+    pub fn build(g: &CsrGraph, topo: &ClusterConfig, cfg: BatchConfig) -> Result<Self> {
+        let k = topo.num_shards();
+        let plan = partition(g, k, topo.partition);
+        let mut groups = Vec::with_capacity(k);
+        for (i, spec) in topo.shards.iter().enumerate() {
+            let local = Arc::new(LocalShard::from_plan(&topo.name, &plan.shards[i], cfg.clone()));
+            let graph_name = topo.shard_graph(i);
+            let primary = match &spec.primary {
+                Endpoint::Local => Primary::Local(local),
+                Endpoint::Remote(addr) => {
+                    // the manifest is only serialised when it actually
+                    // ships (an all-local topology encodes nothing)
+                    let manifest = manifest_for(&local, k as u32);
+                    let remote = Arc::new(RemoteShard::new(i, addr.clone(), graph_name.clone()));
+                    remote
+                        .host(&manifest)
+                        .with_context(|| format!("shipping shard {i} to {addr}"))?;
+                    Primary::Remote(remote)
+                }
+            };
+            // replicas are NOT shipped here: they take no part in the
+            // initial refinement, and shipping a pre-commit manifest
+            // would give them an empty refined state. The
+            // `sync_replicas` below ships the committed epoch-0 state
+            // (an unhosted replica probes as stale).
+            let replicas = spec
+                .replicas
+                .iter()
+                .map(|addr| Arc::new(RemoteShard::new(i, addr.clone(), graph_name.clone())))
+                .collect();
+            groups.push(ReplicaGroup::new(primary, replicas));
+        }
+        let backends: Vec<Arc<dyn ShardBackend>> =
+            groups.iter().map(|gr| gr.backend.clone()).collect();
+        let refined = refine(&backends, plan.owner.len(), None, 0, cfg.threads)
+            .context("initial cluster refinement")?;
+        let k_max = refined.core.iter().copied().max().unwrap_or(0);
+        let idx = Self {
+            name: topo.name.clone(),
+            cfg,
+            groups,
+            owner: Mutex::new(plan.owner),
+            published: RwLock::new(Arc::new(Published {
+                global: Arc::new(CoreSnapshot {
+                    epoch: 0,
+                    core: refined.core,
+                    k_max,
+                    num_edges: refined.num_edges,
+                }),
+                merge: refined.stats,
+                boundary_edges: refined.boundary_edges,
+            })),
+            epoch: AtomicU64::new(0),
+            graph_cache: Mutex::new(None),
+            pending: Mutex::new(Vec::new()),
+            flush_lock: Mutex::new(()),
+        };
+        // the manifests shipped above predate the initial merge commit —
+        // bring replicas to the committed epoch 0 state
+        idx.sync_replicas()
+            .context("hydrating replicas at epoch 0")?;
+        Ok(idx)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.groups.len()
+    }
+
+    pub fn groups(&self) -> &[ReplicaGroup] {
+        &self.groups
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::SeqCst)
+    }
+
+    /// The merged global snapshot — identical in shape and content to a
+    /// single `CoreIndex` snapshot over the same graph.
+    pub fn snapshot(&self) -> Arc<CoreSnapshot> {
+        self.published.read().unwrap().global.clone()
+    }
+
+    pub fn merge_stats(&self) -> MergeStats {
+        self.published.read().unwrap().merge
+    }
+
+    pub fn boundary_edges(&self) -> u64 {
+        self.published.read().unwrap().boundary_edges
+    }
+
+    /// Enqueue one edit; returns the pending count after the push.
+    pub fn submit(&self, e: EdgeEdit) -> usize {
+        let mut p = self.pending.lock().unwrap();
+        p.push(e);
+        p.len()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending.lock().unwrap().len()
+    }
+
+    /// Drain pending edits, route them to their primary shards, merge,
+    /// publish one epoch. Replicas are *not* synced here — call
+    /// [`Self::sync_replicas`] (the serve layer does after each flush).
+    pub fn flush(&self) -> Result<ShardedOutcome> {
+        let _in_flight = self.flush_lock.lock().unwrap();
+        let edits: Vec<EdgeEdit> = std::mem::take(&mut *self.pending.lock().unwrap());
+        if edits.is_empty() {
+            return Ok(ShardedOutcome {
+                snapshot: self.snapshot(),
+                submitted: 0,
+                applied: 0,
+                coalesced: 0,
+                changed: 0,
+                recomputed_shards: 0,
+                merge: MergeStats::default(),
+                merge_elapsed: Duration::ZERO,
+                elapsed: Duration::ZERO,
+            });
+        }
+        let timer = Timer::start();
+        let batch = coalesce(&edits);
+        let applied = batch.len();
+        // route under a short critical section, then release the owner
+        // map before any network I/O: concurrent point reads route with
+        // the (possibly grown) map and stay correct — epoch-checked
+        // replica reads serve the old committed epoch, and not-yet-
+        // refined vertices read as absent until the publish.
+        let (n, plan) = {
+            let mut owner = self.owner.lock().unwrap();
+            let plan = route(&mut owner, self.groups.len(), &batch);
+            (owner.len(), plan)
+        };
+        let mut changed = 0usize;
+        let mut recomputed_shards = 0usize;
+        for (s, gr) in self.groups.iter().enumerate() {
+            if !plan.touched[s] {
+                continue;
+            }
+            let out = gr
+                .backend
+                .apply(&plan.per_shard[s])
+                .with_context(|| format!("routed batch on shard {s} ({})", gr.primary.addr()))?;
+            changed += out.changed;
+            if out.recomputed {
+                recomputed_shards += 1;
+            }
+        }
+        let epoch = self.epoch.load(Ordering::SeqCst) + 1;
+        let merge_timer = Timer::start();
+        let backends: Vec<Arc<dyn ShardBackend>> =
+            self.groups.iter().map(|gr| gr.backend.clone()).collect();
+        let refined = refine(&backends, n, Some(plan.inserts), epoch, self.cfg.threads)
+            .context("cluster refinement")?;
+        let merge_elapsed = merge_timer.elapsed();
+        let merge = refined.stats;
+        let k_max = refined.core.iter().copied().max().unwrap_or(0);
+        let snapshot = Arc::new(CoreSnapshot {
+            epoch,
+            core: refined.core,
+            k_max,
+            num_edges: refined.num_edges,
+        });
+        *self.published.write().unwrap() = Arc::new(Published {
+            global: snapshot.clone(),
+            merge,
+            boundary_edges: refined.boundary_edges,
+        });
+        self.epoch.store(epoch, Ordering::SeqCst);
+        Ok(ShardedOutcome {
+            snapshot,
+            submitted: edits.len(),
+            applied,
+            coalesced: edits.len() - applied,
+            changed,
+            recomputed_shards,
+            merge,
+            merge_elapsed,
+            elapsed: timer.elapsed(),
+        })
+    }
+
+    /// Snapshot catch-up: probe every replica, re-ship the primary's
+    /// manifest to those committed at a different epoch (or unreachable
+    /// at probe time). Returns how many replicas were shipped.
+    pub fn sync_replicas(&self) -> Result<usize> {
+        let want = self.epoch();
+        let num_shards = self.groups.len() as u32;
+        let mut shipped = 0usize;
+        for gr in &self.groups {
+            if gr.replicas.is_empty() {
+                continue;
+            }
+            let mut manifest: Option<Vec<u8>> = None;
+            for r in &gr.replicas {
+                let stale = match r.status() {
+                    Ok(st) => st.cluster_epoch != want,
+                    Err(_) => true,
+                };
+                if !stale {
+                    continue;
+                }
+                if manifest.is_none() {
+                    manifest = Some(gr.primary.manifest(num_shards).with_context(|| {
+                        format!("pulling shard {} manifest for catch-up", gr.backend.id())
+                    })?);
+                }
+                r.host(manifest.as_ref().unwrap())
+                    .with_context(|| format!("catch-up ship to {}", r.addr()))?;
+                shipped += 1;
+            }
+        }
+        Ok(shipped)
+    }
+
+    /// Routed point read: the owner shard's replica group answers, with
+    /// epoch-checked failover (see module docs).
+    pub fn coreness_routed(&self, v: VertexId) -> Result<Option<u32>> {
+        let owner = self.owner.lock().unwrap().get(v as usize).copied();
+        let Some(s) = owner else {
+            return Ok(None);
+        };
+        let want = self.epoch();
+        self.groups[s as usize].read(want, |b| b.refined_coreness(v))
+    }
+
+    /// Fan-out read: per-shard histograms summed cell-wise, padded to
+    /// the published `k_max`.
+    pub fn histogram_routed(&self) -> Result<Vec<u64>> {
+        let want = self.epoch();
+        let k_max = self.snapshot().k_max;
+        let mut hist = vec![0u64; k_max as usize + 1];
+        for gr in &self.groups {
+            let part = gr.read(want, |b| b.histogram_partial())?;
+            for (k, &c) in part.iter().enumerate() {
+                if k >= hist.len() {
+                    hist.resize(k + 1, 0);
+                }
+                hist[k] += c;
+            }
+        }
+        Ok(hist)
+    }
+
+    /// Fan-out read: k-core members merged into the global ascending
+    /// membership list.
+    pub fn members_routed(&self, k: u32) -> Result<Vec<VertexId>> {
+        let want = self.epoch();
+        let mut out = Vec::new();
+        for gr in &self.groups {
+            out.extend(gr.read(want, |b| b.members_partial(k))?);
+        }
+        out.sort_unstable();
+        Ok(out)
+    }
+
+    /// |k-core| from the fan-out histogram.
+    pub fn kcore_size_routed(&self, k: u32) -> Result<usize> {
+        let hist = self.histogram_routed()?;
+        Ok(hist.iter().skip(k as usize).sum::<u64>() as usize)
+    }
+
+    /// Global degeneracy at the published epoch.
+    pub fn degeneracy(&self) -> u32 {
+        self.snapshot().k_max
+    }
+
+    /// Probe the whole topology (primaries and replicas).
+    pub fn status(&self) -> Vec<GroupStatus> {
+        self.groups
+            .iter()
+            .map(|gr| GroupStatus {
+                shard: gr.backend.id(),
+                kind: gr.primary.kind(),
+                primary_addr: gr.primary.addr(),
+                primary: gr.backend.status().map_err(|e| format!("{e:#}")),
+                replicas: gr
+                    .replicas
+                    .iter()
+                    .map(|r| {
+                        (
+                            r.addr().to_string(),
+                            r.status().map_err(|e| format!("{e:#}")),
+                        )
+                    })
+                    .collect(),
+                failovers: gr.failovers(),
+                stale_reads: gr.stale_reads(),
+            })
+            .collect()
+    }
+
+    /// Assembled global CSR at the current epoch (cached per epoch;
+    /// remote shards ship their manifests). The heavyweight read.
+    pub fn graph(&self) -> Result<Arc<CsrGraph>> {
+        let _guard = self.flush_lock.lock().unwrap();
+        self.graph_inner()
+    }
+
+    /// A mutually consistent (merged snapshot, assembled graph) pair.
+    pub fn consistent_view(&self) -> Result<(Arc<CoreSnapshot>, Arc<CsrGraph>)> {
+        let _guard = self.flush_lock.lock().unwrap();
+        let snap = self.snapshot();
+        let g = self.graph_inner()?;
+        Ok((snap, g))
+    }
+
+    fn graph_inner(&self) -> Result<Arc<CsrGraph>> {
+        let epoch = self.epoch.load(Ordering::SeqCst);
+        {
+            let cache = self.graph_cache.lock().unwrap();
+            if let Some((e, g)) = cache.as_ref() {
+                if *e == epoch {
+                    return Ok(g.clone());
+                }
+            }
+        }
+        let n = self.owner.lock().unwrap().len();
+        let mut b = GraphBuilder::new(n);
+        for gr in &self.groups {
+            match &gr.primary {
+                Primary::Local(s) => {
+                    for (u, v) in s.owned_edges() {
+                        b.add_edge(u, v);
+                    }
+                }
+                Primary::Remote(r) => {
+                    let m = wire::decode_manifest(&r.fetch_manifest()?)
+                        .with_context(|| format!("manifest from {}", r.addr()))?;
+                    for &l in &m.owned_locals {
+                        let gu = m.globals[l as usize];
+                        for &w in m.snapshot.graph.neighbors(l) {
+                            let gv = m.globals[w as usize];
+                            if gu as usize >= n || gv as usize >= n {
+                                bail!(
+                                    "shard {} names vertex outside the cluster (|V|={n})",
+                                    gr.backend.id()
+                                );
+                            }
+                            b.add_edge(gu, gv);
+                        }
+                    }
+                }
+            }
+        }
+        let g = Arc::new(b.build(self.name.as_str()));
+        *self.graph_cache.lock().unwrap() = Some((epoch, g.clone()));
+        Ok(g)
+    }
+}
+
+impl std::fmt::Debug for ClusterIndex {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.snapshot();
+        let remote = self
+            .groups
+            .iter()
+            .filter(|g| matches!(g.primary, Primary::Remote(_)))
+            .count();
+        write!(
+            f,
+            "ClusterIndex({} x{} [{} remote] @ epoch {}: |V|={}, |E|={}, k_max={})",
+            self.name,
+            self.groups.len(),
+            remote,
+            s.epoch,
+            s.num_vertices(),
+            s.num_edges,
+            s.k_max
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::gen;
+    use crate::service::index::CoreIndex;
+
+    fn all_local(name: &str, shards: usize) -> ClusterConfig {
+        let mut text = format!("[cluster]\nname = {name}\nshards = {shards}\n");
+        for i in 0..shards {
+            text.push_str(&format!("[shard.{i}]\nprimary = local\n"));
+        }
+        ClusterConfig::parse(&text).unwrap()
+    }
+
+    fn cfg() -> BatchConfig {
+        BatchConfig {
+            threads: 1,
+            ..BatchConfig::default()
+        }
+    }
+
+    #[test]
+    fn all_local_cluster_matches_the_oracle() {
+        let g = gen::barabasi_albert(200, 3, 31);
+        let single = CoreIndex::new("single", &g);
+        let cl = ClusterIndex::build(&g, &all_local("c", 4), cfg()).unwrap();
+        let want = single.snapshot();
+        assert_eq!(cl.snapshot().core, want.core);
+        assert_eq!(cl.snapshot().num_edges, want.num_edges);
+        assert_eq!(cl.degeneracy(), want.degeneracy());
+        assert_eq!(cl.histogram_routed().unwrap(), want.histogram());
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(cl.coreness_routed(v).unwrap(), want.coreness(v), "v{v}");
+        }
+        assert_eq!(cl.coreness_routed(g.num_vertices() as u32).unwrap(), None);
+        for k in 0..=want.k_max {
+            assert_eq!(cl.members_routed(k).unwrap(), want.kcore_members(k));
+            assert_eq!(cl.kcore_size_routed(k).unwrap(), want.kcore_size(k));
+        }
+        let (snap, graph) = cl.consistent_view().unwrap();
+        assert_eq!(snap.core, bz_coreness(&graph));
+    }
+
+    #[test]
+    fn edits_flow_and_epochs_advance() {
+        let g = gen::erdos_renyi(100, 300, 7);
+        let cl = ClusterIndex::build(&g, &all_local("c", 3), cfg()).unwrap();
+        cl.submit(EdgeEdit::Insert(0, 50));
+        cl.submit(EdgeEdit::Insert(150, 160)); // grows the vertex set
+        let out = cl.flush().unwrap();
+        assert_eq!(out.snapshot.epoch, 1);
+        assert_eq!(cl.epoch(), 1);
+        assert_eq!(out.snapshot.num_vertices(), 161);
+        let (snap, graph) = cl.consistent_view().unwrap();
+        assert_eq!(snap.core, bz_coreness(&graph));
+        assert_eq!(cl.coreness_routed(155).unwrap(), Some(0));
+        // empty flush publishes nothing
+        assert_eq!(cl.flush().unwrap().submitted, 0);
+        assert_eq!(cl.epoch(), 1);
+        // no replicas configured: nothing to sync
+        assert_eq!(cl.sync_replicas().unwrap(), 0);
+    }
+
+    #[test]
+    fn status_covers_every_group() {
+        let g = gen::erdos_renyi(60, 150, 3);
+        let cl = ClusterIndex::build(&g, &all_local("c", 2), cfg()).unwrap();
+        let st = cl.status();
+        assert_eq!(st.len(), 2);
+        for (i, gs) in st.iter().enumerate() {
+            assert_eq!(gs.shard, i);
+            assert_eq!(gs.kind, "local");
+            let p = gs.primary.as_ref().unwrap();
+            assert_eq!(p.cluster_epoch, 0);
+            assert!(gs.replicas.is_empty());
+        }
+    }
+}

@@ -1,0 +1,43 @@
+//! Layer 3.7 — multi-host cluster serving: remote shards, replica
+//! groups, and snapshot catch-up.
+//!
+//! Layer 3.6 sharded one graph across in-process indices; this layer
+//! lets those shards live on other hosts. The PR 2 snapshot wire format
+//! and length-prefixed binary protocol are the transport; the missing
+//! piece was a remote-shard client — so the pieces are:
+//!
+//! * [`wire`] — payload codecs for the cluster verbs (routed batches,
+//!   exchange rounds, shard manifests), validated as untrusted input.
+//! * [`remote`] — [`remote::RemoteShard`]: a
+//!   [`crate::shard::ShardBackend`] that drives a shard hosted by a
+//!   remote `pico serve` over the binary protocol, one frame round trip
+//!   per operation, with transparent re-dial of stale connections.
+//! * [`host`] — [`host::ShardHost`]: the server side; wraps the same
+//!   `LocalShard` the in-process router uses, hydrated from a shipped
+//!   manifest (`SHARDHOST`) without recomputing anything.
+//! * [`config`] — [`config::ClusterConfig`]: the TOML-style topology
+//!   file behind `pico serve --cluster` / `pico cluster status`.
+//! * [`index`] — [`index::ClusterIndex`]: the router. Same owner map,
+//!   routed edits, and warm-started boundary-refinement merge as
+//!   `ShardedIndex`, over any mix of local and remote shards; replica
+//!   groups per shard with epoch-checked reads, failover, and
+//!   snapshot-ship catch-up ([`index::ClusterIndex::sync_replicas`]).
+//!
+//! A two-host walkthrough lives in `examples/serve_session.rs`; the
+//! loopback-cluster-vs-oracle equivalence and the fault paths (dead
+//! replicas, truncated connections, stale-epoch catch-up, multi-process
+//! serving) are pinned by `tests/cluster.rs`. Loopback remote-vs-local
+//! overhead per query class and per merge round is measured by
+//! `benches/cluster_overhead.rs`.
+
+pub mod config;
+pub mod host;
+pub mod index;
+pub mod remote;
+pub mod wire;
+
+pub use config::{ClusterConfig, Endpoint, ShardSpec};
+pub use host::{manifest_for, ShardHost};
+pub use index::{ClusterIndex, GroupStatus, Primary, ReplicaGroup};
+pub use remote::RemoteShard;
+pub use wire::ShardManifest;

@@ -1,0 +1,400 @@
+//! The remote shard client: a [`ShardBackend`] whose shard lives behind
+//! a `pico serve` process on another host (or a loopback port — the
+//! tests and `benches/cluster_overhead.rs` drive it that way).
+//!
+//! One `RemoteShard` is one sticky binary-protocol connection to one
+//! server, pinned to one hosted shard graph. Every trait method maps to
+//! exactly one frame round trip (`SHARDAPPLY`, `SHARDREFINE START/ROUND/
+//! COMMIT`, `SHARDINFO`, `SHARDCORE`, …), so a boundary-exchange round
+//! over the cluster costs one frame each way per shard regardless of
+//! batch size.
+//!
+//! A connection that dies between calls is re-dialed once — but a lost
+//! reply is replayed only for *idempotent* verbs (probes, reads,
+//! `REFINE START`/`COMMIT`, manifest shipping). `SHARDAPPLY` and
+//! `REFINE ROUND` mutate state the retry cannot see (a replayed ROUND
+//! whose first reply was lost would re-sweep from an already-swept
+//! state and report no changes, silently corrupting the router's
+//! mailbox), so those surface the error to the router instead — which
+//! is what replica failover and flush error reporting key off. The
+//! client never retries on a *fresh* connection — if a just-dialed
+//! socket fails, the host is down and the caller needs to know now.
+
+use super::wire;
+use crate::graph::VertexId;
+use crate::service::server::{read_frame, write_frame, MAX_FRAME_BYTES};
+use crate::shard::backend::{
+    ApplyOutcome, RefineInit, RefineRound, RoutedBatch, ShardBackend, ShardStatus,
+};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Dial timeout for (re)connects — a dead host must fail over quickly.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
+struct Conn {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    /// Whether the server session is pinned to this client's shard
+    /// graph. Until `USE` succeeds (or `SHARDHOST` installs the graph),
+    /// shard verbs must NOT be sent — the server session would fall
+    /// back to its default graph and silently answer for the wrong
+    /// shard.
+    selected: bool,
+}
+
+/// A shard served by a remote `pico serve` process.
+pub struct RemoteShard {
+    id: usize,
+    addr: String,
+    graph: String,
+    conn: Mutex<Option<Conn>>,
+}
+
+/// `key=value` token lookup in a reply head line.
+fn field<'a>(head: &'a str, key: &str) -> Result<&'a str> {
+    head.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
+        .ok_or_else(|| anyhow!("missing {key}= in reply '{head}'"))
+}
+
+fn field_u64(head: &str, key: &str) -> Result<u64> {
+    field(head, key)?
+        .parse::<u64>()
+        .with_context(|| format!("bad {key}= in reply '{head}'"))
+}
+
+/// Split a reply frame into its head line and raw payload; `ERR` heads
+/// become errors.
+fn split_reply(frame: Vec<u8>) -> Result<(String, Vec<u8>)> {
+    let (head, payload) = match frame.iter().position(|&b| b == b'\n') {
+        Some(i) => (&frame[..i], frame[i + 1..].to_vec()),
+        None => (&frame[..], Vec::new()),
+    };
+    let head = std::str::from_utf8(head)
+        .context("reply head not UTF-8")?
+        .to_string();
+    if head.starts_with("ERR") {
+        bail!("remote shard: {head}");
+    }
+    Ok((head, payload))
+}
+
+impl RemoteShard {
+    /// A client for shard `id`, hosted on the server at `addr` under the
+    /// graph name `graph` (conventionally `<cluster>/shard<id>`).
+    pub fn new(id: usize, addr: impl Into<String>, graph: impl Into<String>) -> Self {
+        Self {
+            id,
+            addr: addr.into(),
+            graph: graph.into(),
+            conn: Mutex::new(None),
+        }
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn graph(&self) -> &str {
+        &self.graph
+    }
+
+    fn connect(&self) -> Result<Conn> {
+        let sockaddr = self
+            .addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {}", self.addr))?
+            .next()
+            .with_context(|| format!("{} resolves to no address", self.addr))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, CONNECT_TIMEOUT)
+            .with_context(|| format!("dialing shard host {}", self.addr))?;
+        let mut writer = stream.try_clone().context("cloning the connection")?;
+        let mut reader = BufReader::new(stream);
+        writeln!(writer, "BINARY").context("binary upgrade")?;
+        writer.flush().context("binary upgrade")?;
+        let mut line = String::new();
+        reader.read_line(&mut line).context("binary upgrade reply")?;
+        if line.trim_end() != "OK binary" {
+            bail!("{} refused the binary upgrade: {}", self.addr, line.trim_end());
+        }
+        Ok(Conn {
+            writer,
+            reader,
+            selected: false,
+        })
+    }
+
+    /// Pin the server session to this shard's graph if it isn't yet.
+    /// Failing (the graph is not hosted there) surfaces to the caller
+    /// instead of letting verbs hit the server's default graph.
+    fn ensure_selected(&self, conn: &mut Conn) -> Result<()> {
+        if conn.selected {
+            return Ok(());
+        }
+        let reply = Self::exchange(conn, format!("USE {}", self.graph).as_bytes())?;
+        let head = String::from_utf8_lossy(&reply);
+        if head.starts_with("OK") {
+            conn.selected = true;
+            Ok(())
+        } else {
+            bail!(
+                "{}: shard graph '{}' is not hosted ({})",
+                self.addr,
+                self.graph,
+                head.trim_end()
+            )
+        }
+    }
+
+    fn exchange(conn: &mut Conn, body: &[u8]) -> Result<Vec<u8>> {
+        if body.len() > MAX_FRAME_BYTES {
+            bail!(
+                "request frame is {} bytes, above the cap ({MAX_FRAME_BYTES})",
+                body.len()
+            );
+        }
+        write_frame(&mut conn.writer, body)?;
+        read_frame(&mut conn.reader, MAX_FRAME_BYTES)?
+            .ok_or_else(|| anyhow!("connection closed mid-reply"))
+    }
+
+    /// One selected exchange: pin the session graph, then send.
+    fn selected_exchange(&self, conn: &mut Conn, body: &[u8], select: bool) -> Result<Vec<u8>> {
+        if select {
+            self.ensure_selected(conn)?;
+        }
+        Self::exchange(conn, body)
+    }
+
+    /// One frame round trip; a stale connection gets one re-dial. With
+    /// `select`, the session is pinned to the shard graph first (every
+    /// verb except the installing `SHARDHOST` needs that). `retry` must
+    /// only be passed for idempotent verbs: a retried request may have
+    /// already executed on the server once (lost reply).
+    fn call_with(&self, body: &[u8], select: bool, retry: bool) -> Result<Vec<u8>> {
+        let mut guard = self.conn.lock().unwrap();
+        let had_conn = guard.is_some();
+        if guard.is_none() {
+            *guard = Some(self.connect()?);
+        }
+        let first = self.selected_exchange(guard.as_mut().unwrap(), body, select);
+        match first {
+            Ok(reply) => Ok(reply),
+            Err(_) if had_conn && retry => {
+                // the pooled connection went stale between calls
+                *guard = None;
+                *guard = Some(self.connect()?);
+                match self.selected_exchange(guard.as_mut().unwrap(), body, select) {
+                    Ok(reply) => Ok(reply),
+                    Err(e) => {
+                        *guard = None;
+                        Err(e)
+                    }
+                }
+            }
+            Err(e) => {
+                *guard = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Mark the pooled connection's session as pinned (after a
+    /// successful `SHARDHOST`, the server selects the new graph itself).
+    fn mark_selected(&self) {
+        if let Some(conn) = self.conn.lock().unwrap().as_mut() {
+            conn.selected = true;
+        }
+    }
+
+    /// Idempotent line verb (probes, reads): safe to replay.
+    fn call_line(&self, line: &str) -> Result<(String, Vec<u8>)> {
+        split_reply(self.call_with(line.as_bytes(), true, true)?)
+    }
+
+    /// Non-idempotent payload verb: never replayed after a lost reply.
+    fn call_payload_once(&self, line: &str, payload: &[u8]) -> Result<(String, Vec<u8>)> {
+        let mut body = line.as_bytes().to_vec();
+        body.push(b'\n');
+        body.extend_from_slice(payload);
+        split_reply(self.call_with(&body, true, false)?)
+    }
+
+    /// Liveness probe (needs no hosted graph).
+    pub fn ping(&self) -> Result<()> {
+        let (head, _) = split_reply(self.call_with(b"PING", false, true)?)?;
+        if head != "OK pong" {
+            bail!("unexpected PING reply '{head}'");
+        }
+        Ok(())
+    }
+
+    /// Install (or overwrite) the shard on the remote from a manifest —
+    /// initial shipping and snapshot catch-up both land here. The remote
+    /// hydrates without recomputing anything.
+    pub fn host(&self, manifest: &[u8]) -> Result<()> {
+        // idempotent: re-installing the same manifest reproduces the
+        // same hosted state, so a lost reply is safe to replay
+        let mut body = format!("SHARDHOST {}", self.graph).into_bytes();
+        body.push(b'\n');
+        body.extend_from_slice(manifest);
+        let (head, _) = split_reply(self.call_with(&body, false, true)?)?;
+        field(&head, "shardhost")?;
+        // the server switched its session to the freshly hosted graph
+        self.mark_selected();
+        Ok(())
+    }
+
+    /// Pull the remote's current manifest (the replica catch-up source
+    /// when this client points at a group's primary).
+    pub fn fetch_manifest(&self) -> Result<Vec<u8>> {
+        let (head, payload) = self.call_line("SHARDSNAP")?;
+        let declared = field_u64(&head, "bytes")? as usize;
+        if declared != payload.len() {
+            bail!(
+                "SHARDSNAP declared {declared} bytes but shipped {}",
+                payload.len()
+            );
+        }
+        Ok(payload)
+    }
+}
+
+impl ShardBackend for RemoteShard {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn kind(&self) -> &'static str {
+        "remote"
+    }
+
+    fn status(&self) -> Result<ShardStatus> {
+        let (head, _) = self.call_line("SHARDINFO")?;
+        Ok(ShardStatus {
+            id: field_u64(&head, "shard")? as usize,
+            epoch: field_u64(&head, "epoch")?,
+            cluster_epoch: field_u64(&head, "cluster")?,
+            owned: field_u64(&head, "owned")? as usize,
+            k_max: field_u64(&head, "kmax")? as u32,
+        })
+    }
+
+    fn apply(&self, batch: &RoutedBatch) -> Result<ApplyOutcome> {
+        // NOT idempotent (toggling edits double-apply); never replayed
+        let (head, _) = self.call_payload_once("SHARDAPPLY", &wire::encode_batch(batch))?;
+        Ok(ApplyOutcome {
+            changed: field_u64(&head, "changed")? as usize,
+            recomputed: field_u64(&head, "recomputed")? != 0,
+            epoch: field_u64(&head, "epoch")?,
+        })
+    }
+
+    fn refine_start(&self, slack: Option<u32>) -> Result<RefineInit> {
+        let arg = match slack {
+            Some(s) => s.to_string(),
+            None => "-".to_string(),
+        };
+        let (_, payload) = self.call_line(&format!("SHARDREFINE START {arg}"))?;
+        wire::decode_refine_init(&payload)
+    }
+
+    fn refine_round(&self, updates: &[(VertexId, u32)]) -> Result<RefineRound> {
+        // NOT idempotent (the first execution clears the dirty flag; a
+        // replay would report an empty sweep); never replayed
+        let (head, payload) =
+            self.call_payload_once("SHARDREFINE ROUND", &wire::encode_pairs(updates))?;
+        Ok(RefineRound {
+            changed: wire::decode_pairs(&payload)?,
+            sweeps: field_u64(&head, "sweeps")? as usize,
+            ghost_updates: field_u64(&head, "ghosts")?,
+        })
+    }
+
+    fn refine_commit(&self, cluster_epoch: u64) -> Result<()> {
+        let (head, _) = self.call_line(&format!("SHARDREFINE COMMIT {cluster_epoch}"))?;
+        if field_u64(&head, "commit")? != cluster_epoch {
+            bail!("commit echoed the wrong epoch: '{head}'");
+        }
+        Ok(())
+    }
+
+    fn refined_coreness(&self, v: VertexId) -> Result<(Option<u32>, u64)> {
+        let (head, _) = self.call_line(&format!("SHARDCORE {v}"))?;
+        let cluster = field_u64(&head, "cluster")?;
+        let core = match field(&head, "core")? {
+            "none" => None,
+            c => Some(c.parse::<u32>().with_context(|| format!("bad core in '{head}'"))?),
+        };
+        Ok((core, cluster))
+    }
+
+    fn histogram_partial(&self) -> Result<(Vec<u64>, u64)> {
+        let (head, _) = self.call_line("SHARDHISTO")?;
+        let cluster = field_u64(&head, "cluster")?;
+        let mut hist: Vec<u64> = Vec::new();
+        for cell in field(&head, "histo")?.split(',').filter(|c| !c.is_empty()) {
+            let (k, n) = cell
+                .split_once(':')
+                .ok_or_else(|| anyhow!("bad histo cell '{cell}'"))?;
+            let k: usize = k.parse().with_context(|| format!("bad histo cell '{cell}'"))?;
+            let n: u64 = n.parse().with_context(|| format!("bad histo cell '{cell}'"))?;
+            if k >= hist.len() {
+                hist.resize(k + 1, 0);
+            }
+            hist[k] += n;
+        }
+        Ok((hist, cluster))
+    }
+
+    fn members_partial(&self, k: u32) -> Result<(Vec<VertexId>, u64)> {
+        let (head, payload) = self.call_line(&format!("SHARDMEMBERS {k}"))?;
+        let cluster = field_u64(&head, "cluster")?;
+        let members = wire::decode_u32s(&payload)?;
+        if members.len() as u64 != field_u64(&head, "count")? {
+            bail!("SHARDMEMBERS count disagrees with payload");
+        }
+        Ok((members, cluster))
+    }
+}
+
+impl std::fmt::Debug for RemoteShard {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "RemoteShard(#{} {} '{}')", self.id, self.addr, self.graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_fields_parse() {
+        let head = "OK shard=3 epoch=9 cluster=2 owned=100 kmax=7";
+        assert_eq!(field(head, "shard").unwrap(), "3");
+        assert_eq!(field_u64(head, "owned").unwrap(), 100);
+        assert!(field(head, "missing").is_err());
+        // prefix keys must not match longer tokens
+        assert!(field("OK clusterx=5", "cluster").is_err());
+    }
+
+    #[test]
+    fn err_replies_become_errors() {
+        assert!(split_reply(b"ERR nope".to_vec()).is_err());
+        let (head, payload) = split_reply(b"OK x=1\nabc".to_vec()).unwrap();
+        assert_eq!(head, "OK x=1");
+        assert_eq!(payload, b"abc");
+    }
+
+    #[test]
+    fn dead_host_fails_fast() {
+        // reserved port: nothing listens; the dial must fail, not hang
+        let r = RemoteShard::new(0, "127.0.0.1:1", "x/shard0");
+        assert!(r.ping().is_err());
+        assert!(r.status().is_err());
+    }
+}

@@ -1,0 +1,461 @@
+//! Wire codecs for the cluster verbs — the payload half of the
+//! length-prefixed binary protocol frames that carry routed batches,
+//! boundary-exchange rounds, and shard manifests between a router and a
+//! remote `pico serve`.
+//!
+//! Everything is little-endian with explicit `u64` counts, decoded with
+//! the same paranoia as [`crate::shard::snapshot`]: counts are checked
+//! against the actual byte budget *before* any allocation, trailing
+//! garbage is rejected, and the shard manifest re-validates the embedded
+//! index snapshot in full (CSR structure + coreness invariants), so a
+//! corrupt or hostile payload is refused without touching server state.
+//!
+//! # Shard manifest
+//!
+//! The manifest is the unit of shard shipping and replica catch-up: the
+//! shard's subgraph snapshot ([`crate::shard::snapshot`] bytes — graph,
+//! local coreness, shard epoch) plus everything the snapshot alone lacks
+//! to serve as a cluster shard — the local→global id table, the owned
+//! set, the committed refined (exact global) coreness, and the cluster
+//! epoch it was committed at:
+//!
+//! ```text
+//! magic         b"PICOSHD1"                               8 bytes
+//! shard_id      u32        num_shards  u32
+//! cluster_epoch u64
+//! counts        u64 globals_len, u64 owned_len, u64 refined_len, u64 snapshot_len
+//! globals       globals_len × u32     (local id -> global id)
+//! owned         owned_len × u32       (owned local ids)
+//! refined       refined_len × u32     (0 or globals_len entries)
+//! snapshot      snapshot_len bytes    (PICOSNP1 payload)
+//! ```
+
+use crate::core::maintenance::EdgeEdit;
+use crate::graph::VertexId;
+use crate::shard::backend::{RefineInit, RoutedBatch};
+use crate::shard::snapshot::{self, IndexSnapshot};
+use anyhow::{bail, Context, Result};
+
+const MANIFEST_MAGIC: &[u8; 8] = b"PICOSHD1";
+
+struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        let Some(end) = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len()) else {
+            bail!(
+                "truncated payload: needed {n} bytes at offset {}, have {}",
+                self.pos,
+                self.bytes.len() - self.pos
+            );
+        };
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` count that must fit `per`-byte elements in what remains.
+    fn count(&mut self, per: usize, what: &str) -> Result<usize> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(per) {
+            Some(bytes) if bytes <= self.bytes.len() - self.pos => Ok(n),
+            _ => bail!("{what} count {n} exceeds the payload"),
+        }
+    }
+
+    fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    fn done(&self, what: &str) -> Result<()> {
+        if self.remaining() != 0 {
+            bail!("{what}: {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+fn put_u32s(out: &mut Vec<u8>, vals: &[u32]) {
+    out.extend_from_slice(&(vals.len() as u64).to_le_bytes());
+    for &v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+}
+
+fn take_u32s(c: &mut Cursor, what: &str) -> Result<Vec<u32>> {
+    let n = c.count(4, what)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(c.u32()?);
+    }
+    Ok(out)
+}
+
+fn put_pairs(out: &mut Vec<u8>, pairs: &[(VertexId, u32)]) {
+    out.extend_from_slice(&(pairs.len() as u64).to_le_bytes());
+    for &(v, e) in pairs {
+        out.extend_from_slice(&v.to_le_bytes());
+        out.extend_from_slice(&e.to_le_bytes());
+    }
+}
+
+fn take_pairs(c: &mut Cursor, what: &str) -> Result<Vec<(VertexId, u32)>> {
+    let n = c.count(8, what)?;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let v = c.u32()?;
+        let e = c.u32()?;
+        out.push((v, e));
+    }
+    Ok(out)
+}
+
+/// `(vertex, estimate)` pairs — exchange-round updates and replies.
+pub fn encode_pairs(pairs: &[(VertexId, u32)]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + pairs.len() * 8);
+    put_pairs(&mut out, pairs);
+    out
+}
+
+pub fn decode_pairs(bytes: &[u8]) -> Result<Vec<(VertexId, u32)>> {
+    let mut c = Cursor::new(bytes);
+    let pairs = take_pairs(&mut c, "pairs")?;
+    c.done("pairs")?;
+    Ok(pairs)
+}
+
+/// Bare vertex lists — `SHARDMEMBERS` replies.
+pub fn encode_u32s(vals: &[u32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + vals.len() * 4);
+    put_u32s(&mut out, vals);
+    out
+}
+
+pub fn decode_u32s(bytes: &[u8]) -> Result<Vec<u32>> {
+    let mut c = Cursor::new(bytes);
+    let vals = take_u32s(&mut c, "u32 list")?;
+    c.done("u32 list")?;
+    Ok(vals)
+}
+
+/// A routed batch (`SHARDAPPLY` request payload). Edit flags: bit 0 =
+/// insert (else delete), bit 1 = primary copy.
+pub fn encode_batch(batch: &RoutedBatch) -> Vec<u8> {
+    let mut out = Vec::with_capacity(16 + batch.new_owned.len() * 4 + batch.edits.len() * 9);
+    put_u32s(&mut out, &batch.new_owned);
+    out.extend_from_slice(&(batch.edits.len() as u64).to_le_bytes());
+    for &(e, primary) in &batch.edits {
+        let (u, v) = match e {
+            EdgeEdit::Insert(u, v) => (u, v),
+            EdgeEdit::Delete(u, v) => (u, v),
+        };
+        let flags = (e.is_insert() as u8) | ((primary as u8) << 1);
+        out.push(flags);
+        out.extend_from_slice(&u.to_le_bytes());
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+pub fn decode_batch(bytes: &[u8]) -> Result<RoutedBatch> {
+    let mut c = Cursor::new(bytes);
+    let new_owned = take_u32s(&mut c, "new-owned")?;
+    let n = c.count(9, "edit")?;
+    let mut edits = Vec::with_capacity(n);
+    for _ in 0..n {
+        let flags = c.u8()?;
+        if flags > 3 {
+            bail!("bad edit flags {flags:#x}");
+        }
+        let u = c.u32()?;
+        let v = c.u32()?;
+        if u == v {
+            bail!("self-loop edit ({u},{u})");
+        }
+        let e = if flags & 1 != 0 {
+            EdgeEdit::Insert(u, v)
+        } else {
+            EdgeEdit::Delete(u, v)
+        };
+        edits.push((e, flags & 2 != 0));
+    }
+    c.done("routed batch")?;
+    Ok(RoutedBatch { new_owned, edits })
+}
+
+/// A refine-start reply (`SHARDREFINE START` payload).
+pub fn encode_refine_init(init: &RefineInit) -> Vec<u8> {
+    let mut out =
+        Vec::with_capacity(32 + init.owned_est.len() * 8 + init.ghosts.len() * 4);
+    put_pairs(&mut out, &init.owned_est);
+    put_u32s(&mut out, &init.ghosts);
+    out.extend_from_slice(&init.arcs.to_le_bytes());
+    out.extend_from_slice(&init.boundary_arcs.to_le_bytes());
+    out
+}
+
+pub fn decode_refine_init(bytes: &[u8]) -> Result<RefineInit> {
+    let mut c = Cursor::new(bytes);
+    let owned_est = take_pairs(&mut c, "owned estimates")?;
+    let ghosts = take_u32s(&mut c, "ghosts")?;
+    let arcs = c.u64()?;
+    let boundary_arcs = c.u64()?;
+    c.done("refine init")?;
+    if boundary_arcs > arcs {
+        bail!("boundary arcs {boundary_arcs} exceed total arcs {arcs}");
+    }
+    Ok(RefineInit {
+        owned_est,
+        ghosts,
+        arcs,
+        boundary_arcs,
+    })
+}
+
+/// A decoded, fully validated shard manifest.
+#[derive(Clone, Debug)]
+pub struct ShardManifest {
+    pub shard_id: u32,
+    pub num_shards: u32,
+    pub cluster_epoch: u64,
+    /// local id → global id (distinctness is checked downstream when the
+    /// shard state is rebuilt).
+    pub globals: Vec<VertexId>,
+    /// Owned local ids.
+    pub owned_locals: Vec<u32>,
+    /// Committed refined coreness per local id (empty if never refined).
+    pub refined: Vec<u32>,
+    /// The embedded, already-validated index snapshot.
+    pub snapshot: IndexSnapshot,
+}
+
+/// Serialise a shard manifest. `snapshot_bytes` must be a
+/// [`crate::shard::snapshot::encode`] payload for the same shard.
+pub fn encode_manifest(
+    shard_id: u32,
+    num_shards: u32,
+    cluster_epoch: u64,
+    globals: &[VertexId],
+    owned_locals: &[u32],
+    refined: &[u32],
+    snapshot_bytes: &[u8],
+) -> Vec<u8> {
+    let mut out = Vec::with_capacity(
+        8 + 8
+            + 8
+            + 32
+            + globals.len() * 4
+            + owned_locals.len() * 4
+            + refined.len() * 4
+            + snapshot_bytes.len(),
+    );
+    out.extend_from_slice(MANIFEST_MAGIC);
+    out.extend_from_slice(&shard_id.to_le_bytes());
+    out.extend_from_slice(&num_shards.to_le_bytes());
+    out.extend_from_slice(&cluster_epoch.to_le_bytes());
+    out.extend_from_slice(&(globals.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(owned_locals.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(refined.len() as u64).to_le_bytes());
+    out.extend_from_slice(&(snapshot_bytes.len() as u64).to_le_bytes());
+    for &v in globals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    for &l in owned_locals {
+        out.extend_from_slice(&l.to_le_bytes());
+    }
+    for &r in refined {
+        out.extend_from_slice(&r.to_le_bytes());
+    }
+    out.extend_from_slice(snapshot_bytes);
+    out
+}
+
+/// Parse and validate untrusted manifest bytes (including the embedded
+/// snapshot's full structural + invariant validation).
+pub fn decode_manifest(bytes: &[u8]) -> Result<ShardManifest> {
+    let mut c = Cursor::new(bytes);
+    if c.take(MANIFEST_MAGIC.len())? != MANIFEST_MAGIC {
+        bail!("not a pico shard manifest (bad magic)");
+    }
+    let shard_id = c.u32()?;
+    let num_shards = c.u32()?;
+    if num_shards == 0 || shard_id >= num_shards {
+        bail!("shard id {shard_id} out of range for {num_shards} shards");
+    }
+    let cluster_epoch = c.u64()?;
+    let globals_len = c.u64()? as usize;
+    let owned_len = c.u64()? as usize;
+    let refined_len = c.u64()? as usize;
+    let snapshot_len = c.u64()? as usize;
+    // exact byte-budget check before any allocation
+    let expected = globals_len
+        .checked_mul(4)
+        .and_then(|b| b.checked_add(owned_len.checked_mul(4)?))
+        .and_then(|b| b.checked_add(refined_len.checked_mul(4)?))
+        .and_then(|b| b.checked_add(snapshot_len));
+    match expected {
+        Some(want) if want == c.remaining() => {}
+        _ => bail!(
+            "manifest size mismatch: header declares {globals_len}/{owned_len}/{refined_len}/{snapshot_len} but {} bytes remain",
+            c.remaining()
+        ),
+    }
+    let mut globals = Vec::with_capacity(globals_len);
+    for _ in 0..globals_len {
+        globals.push(c.u32()?);
+    }
+    let mut owned_locals = Vec::with_capacity(owned_len);
+    for _ in 0..owned_len {
+        let l = c.u32()?;
+        if l as usize >= globals_len {
+            bail!("owned local {l} out of range (n={globals_len})");
+        }
+        owned_locals.push(l);
+    }
+    let mut refined = Vec::with_capacity(refined_len);
+    for _ in 0..refined_len {
+        refined.push(c.u32()?);
+    }
+    if !refined.is_empty() && refined.len() != globals_len {
+        bail!(
+            "refined length {} != vertex count {globals_len}",
+            refined.len()
+        );
+    }
+    let snapshot =
+        snapshot::decode(c.take(snapshot_len)?).context("embedded shard snapshot")?;
+    c.done("manifest")?;
+    if snapshot.graph.num_vertices() != globals_len {
+        bail!(
+            "snapshot has {} vertices but the id table lists {globals_len}",
+            snapshot.graph.num_vertices()
+        );
+    }
+    // refined values for owned vertices are exact global corenesses and
+    // can never exceed the vertex's (complete, by partition invariant)
+    // local degree
+    for &l in &owned_locals {
+        if let Some(&r) = refined.get(l as usize) {
+            let d = snapshot.graph.degree(l);
+            if r > d {
+                bail!("refined[{l}] = {r} exceeds degree {d}");
+            }
+        }
+    }
+    Ok(ShardManifest {
+        shard_id,
+        num_shards,
+        cluster_epoch,
+        globals,
+        owned_locals,
+        refined,
+        snapshot,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+    use crate::service::index::CoreIndex;
+    use crate::shard::snapshot::encode_index;
+
+    #[test]
+    fn batch_and_pairs_round_trip() {
+        let batch = RoutedBatch {
+            new_owned: vec![7, 9],
+            edits: vec![
+                (EdgeEdit::Insert(1, 9), true),
+                (EdgeEdit::Delete(3, 4), false),
+            ],
+        };
+        assert_eq!(decode_batch(&encode_batch(&batch)).unwrap(), batch);
+        let pairs = vec![(0u32, 3u32), (17, 0)];
+        assert_eq!(decode_pairs(&encode_pairs(&pairs)).unwrap(), pairs);
+        assert_eq!(decode_u32s(&encode_u32s(&[5, 6])).unwrap(), vec![5, 6]);
+        let init = RefineInit {
+            owned_est: pairs,
+            ghosts: vec![2],
+            arcs: 10,
+            boundary_arcs: 4,
+        };
+        assert_eq!(decode_refine_init(&encode_refine_init(&init)).unwrap(), init);
+    }
+
+    #[test]
+    fn corrupt_payloads_are_rejected() {
+        let good = encode_batch(&RoutedBatch {
+            new_owned: vec![1],
+            edits: vec![(EdgeEdit::Insert(0, 1), true)],
+        });
+        for cut in 0..good.len() {
+            assert!(decode_batch(&good[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut trailing = good.clone();
+        trailing.push(0);
+        assert!(decode_batch(&trailing).is_err());
+        // a count far beyond the payload must fail before allocating
+        let mut huge = good.clone();
+        huge[0..8].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_batch(&huge).is_err());
+        // self-loop edit refused
+        let evil = encode_batch(&RoutedBatch {
+            new_owned: vec![],
+            edits: vec![(EdgeEdit::Insert(3, 3), true)],
+        });
+        assert!(decode_batch(&evil).is_err());
+        assert!(decode_pairs(&[1, 2, 3]).is_err());
+        assert!(decode_manifest(b"NOTAMANIFESTxxxx").is_err());
+    }
+
+    #[test]
+    fn manifest_round_trips_and_validates() {
+        let g = examples::g1();
+        let idx = CoreIndex::new("m/shard0", &g);
+        let snap_bytes = encode_index(&idx);
+        let n = g.num_vertices();
+        let globals: Vec<u32> = (0..n as u32).collect();
+        let owned: Vec<u32> = (0..n as u32).collect();
+        let refined: Vec<u32> = idx.snapshot().core.clone();
+        let bytes = encode_manifest(0, 2, 5, &globals, &owned, &refined, &snap_bytes);
+        let m = decode_manifest(&bytes).unwrap();
+        assert_eq!(m.shard_id, 0);
+        assert_eq!(m.num_shards, 2);
+        assert_eq!(m.cluster_epoch, 5);
+        assert_eq!(m.globals, globals);
+        assert_eq!(m.owned_locals, owned);
+        assert_eq!(m.refined, refined);
+        assert_eq!(m.snapshot.name, "m/shard0");
+        // out-of-range shard id
+        assert!(decode_manifest(&encode_manifest(2, 2, 0, &globals, &owned, &refined, &snap_bytes)).is_err());
+        // owned local beyond the vertex count
+        assert!(decode_manifest(&encode_manifest(0, 2, 0, &globals, &[99], &refined, &snap_bytes)).is_err());
+        // refined above the degree cap
+        let mut evil = refined.clone();
+        evil[0] = 100;
+        assert!(decode_manifest(&encode_manifest(0, 2, 0, &globals, &owned, &evil, &snap_bytes)).is_err());
+        // truncations never panic
+        for cut in [0, 8, 20, bytes.len() / 2, bytes.len() - 1] {
+            assert!(decode_manifest(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+    }
+}

@@ -17,6 +17,11 @@
 //!   a `ShardedIndex` whose router fans queries out and merges per-shard
 //!   answers exactly (boundary refinement), and binary snapshot shipping
 //!   (`SNAPSHOT`/`RESTORE` over the length-prefixed binary protocol).
+//! * **Layer 3.7 ([`cluster`])** — multi-host cluster serving: a
+//!   `ClusterIndex` routing over local and remote shards (the shard
+//!   interface spoken over the binary protocol), replica groups with
+//!   epoch-checked reads + failover, snapshot-ship catch-up, and the
+//!   `pico serve --cluster` / `pico cluster status` topology tooling.
 //! * **Layer 2 (build-time JAX)** — vectorised peel / h-index step
 //!   functions, AOT-lowered to HLO text and executed from [`runtime`] via
 //!   the PJRT C API.
@@ -38,6 +43,7 @@
 pub mod analysis;
 pub mod bench;
 pub mod cli;
+pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod core;

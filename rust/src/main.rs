@@ -15,7 +15,11 @@ fn main() {
 
 fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
-    let args = Args::parse(&raw, &["metrics", "no-validate", "help", "json", "binary"])?;
+    let args = Args::parse_with_sub(
+        &raw,
+        &["metrics", "no-validate", "help", "json", "binary"],
+        &["cluster"],
+    )?;
 
     let cfg = Config::load(args.get("config").map(std::path::Path::new))?;
 
@@ -24,6 +28,7 @@ fn run() -> Result<()> {
         // `bench` is an alias: the suite runner is the in-CLI benchmark
         "suite" | "bench" => commands::cmd_suite(&args, &cfg),
         "serve" => commands::cmd_serve(&args, &cfg),
+        "cluster" => commands::cmd_cluster(&args, &cfg),
         "query" => commands::cmd_query(&args, &cfg),
         "stats" => commands::cmd_stats(&args, &cfg),
         "analyze" => commands::cmd_analyze(&args, &cfg),

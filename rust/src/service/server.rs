@@ -61,11 +61,45 @@
 //! the unit a shard replica hydrates; it does not answer global queries
 //! by itself (global answers come from the router's merge).
 //!
+//! # Cluster verbs
+//!
+//! The multi-host layer ([`crate::cluster`]) adds verbs in two roles.
+//! On a server *hosting a shard* (installed by `SHARDHOST`), the shard
+//! interface — payload formats in [`crate::cluster::wire`]:
+//!
+//! | frame | payload / reply |
+//! |---|---|
+//! | `SHARDHOST <name>` + manifest | install/overwrite a hosted shard (hydrates, never recomputes) |
+//! | `SHARDSNAP` | reply head + manifest bytes — the replica catch-up source |
+//! | `SHARDAPPLY` + routed batch | `OK changed=<c> recomputed=<r> epoch=<e>` |
+//! | `SHARDREFINE START <slack\|->` | `OK refine-init ...` + estimates/ghosts/arcs payload |
+//! | `SHARDREFINE ROUND` + updates | `OK sweeps=<s> ghosts=<g>` + changed-estimates payload |
+//! | `SHARDREFINE COMMIT <epoch>` | `OK commit=<epoch>` |
+//! | `SHARDMEMBERS <k>` | `OK count=<n> cluster=<ce>` + member-id payload |
+//!
+//! plus line-mode probes `SHARDINFO` (health/epoch), `SHARDCORE <v>`,
+//! and `SHARDHISTO`, each stamped with the committed cluster epoch so
+//! readers can reject stale replicas. On a server *fronting a cluster*
+//! (`pico serve --cluster`), the ordinary verbs serve merged answers:
+//! `CORENESS` routes to the owner shard's replica group (epoch-checked
+//! failover), `FLUSH` routes edits to primaries, runs the boundary
+//! exchange, publishes, and re-ships stale replicas (`synced=<n>`).
+//!
 //! The TCP layer is thread-per-connection with the scheduler's
 //! containment idiom: a panicking handler poisons nothing — the
 //! connection reports `ERR internal` and closes, the server keeps
 //! accepting. Abuse bounds: [`MAX_LINE_BYTES`], [`MAX_FRAME_BYTES`],
 //! [`MAX_VERTEX_ID`], [`MAX_PENDING_EDITS`], [`MAX_HOSTED_GRAPHS`].
+//!
+//! # Graceful shutdown
+//!
+//! [`ServerHandle::drain`] stops the accept loop and asks every
+//! connection to wind down at its next *command boundary*: an in-flight
+//! request is parsed, executed, and answered in full (a half-read frame
+//! is never dropped), idle connections close at their next read
+//! timeout, and [`CoreService::flush_all`] then applies any pending
+//! edits so nothing queued is lost. `pico serve` drives this on
+//! SIGTERM / ctrl-c.
 //!
 //! **Trust model:** the protocol is unauthenticated, and `OPEN` resolves
 //! suite names *and server-local file paths* (CLI parity). The default
@@ -75,17 +109,19 @@
 use super::batch::{BatchConfig, EditQueue};
 use super::index::{CoreIndex, CoreSnapshot};
 use super::queries::densest_core_view;
+use crate::cluster::{ClusterIndex, ShardHost};
 use crate::core::maintenance::EdgeEdit;
 use crate::engine::metrics::{Metrics, MetricsSnapshot};
 use crate::graph::CsrGraph;
 use crate::shard::{snapshot as shard_snapshot, PartitionStrategy, ShardedIndex};
 use anyhow::{Context, Result};
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
 
 /// Metric slots shared by connection threads (round-robin assignment).
 const METRIC_SLOTS: usize = 8;
@@ -135,6 +171,11 @@ enum Backend {
         queue: Arc<EditQueue>,
     },
     Sharded(Arc<ShardedIndex>),
+    /// One shard of some cluster, installed via `SHARDHOST`. Serves the
+    /// shard interface; ordinary read verbs see the shard-local view.
+    ShardHost(Arc<ShardHost>),
+    /// A whole cluster fronted by this server (`pico serve --cluster`).
+    Cluster(Arc<ClusterIndex>),
 }
 
 impl Backend {
@@ -142,13 +183,17 @@ impl Backend {
         match self {
             Backend::Single { index, .. } => index.snapshot(),
             Backend::Sharded(sh) => sh.snapshot(),
+            Backend::ShardHost(h) => h.index().snapshot(),
+            Backend::Cluster(c) => c.snapshot(),
         }
     }
 
-    fn consistent_view(&self) -> (Arc<CoreSnapshot>, Arc<CsrGraph>) {
+    fn consistent_view(&self) -> Result<(Arc<CoreSnapshot>, Arc<CsrGraph>)> {
         match self {
-            Backend::Single { index, .. } => index.consistent_view(),
-            Backend::Sharded(sh) => sh.consistent_view(),
+            Backend::Single { index, .. } => Ok(index.consistent_view()),
+            Backend::Sharded(sh) => Ok(sh.consistent_view()),
+            Backend::ShardHost(h) => Ok(h.index().consistent_view()),
+            Backend::Cluster(c) => c.consistent_view(),
         }
     }
 
@@ -156,13 +201,23 @@ impl Backend {
         match self {
             Backend::Single { queue, .. } => queue.pending(),
             Backend::Sharded(sh) => sh.pending(),
+            Backend::ShardHost(_) => 0,
+            Backend::Cluster(c) => c.pending(),
         }
+    }
+
+    /// Shard hosts take writes only through their cluster router
+    /// (`SHARDAPPLY`) — local INSERTs would silently diverge from it.
+    fn writable(&self) -> bool {
+        !matches!(self, Backend::ShardHost(_))
     }
 
     fn submit(&self, e: EdgeEdit) -> usize {
         match self {
             Backend::Single { queue, .. } => queue.submit(e),
             Backend::Sharded(sh) => sh.submit(e),
+            Backend::ShardHost(_) => 0,
+            Backend::Cluster(c) => c.submit(e),
         }
     }
 }
@@ -245,6 +300,64 @@ impl CoreService {
         ));
         self.install(name, Backend::Sharded(idx.clone()));
         idx
+    }
+
+    /// Front a cluster index under `name` — the `pico serve --cluster`
+    /// install path (the index was built and its shards placed already).
+    pub fn open_cluster(&self, name: &str, idx: Arc<ClusterIndex>) {
+        self.install(name, Backend::Cluster(idx));
+    }
+
+    /// Flush every backend with pending edits — the drain path, so
+    /// nothing a client queued before shutdown is lost. Per graph that
+    /// flushed something (or failed to): `Ok((published epoch, applied
+    /// edits))`, or the error text — a cluster whose remote primary is
+    /// unreachable at shutdown must be reported, not silently skipped.
+    #[allow(clippy::type_complexity)]
+    pub fn flush_all(&self) -> Vec<(String, Result<(u64, usize), String>)> {
+        let hosted: Vec<(String, Backend)> = self
+            .hosted
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect();
+        let mut out = Vec::new();
+        for (name, backend) in hosted {
+            let flushed = match &backend {
+                Backend::Single { queue, .. } => {
+                    let o = queue.flush();
+                    Ok((o.snapshot.epoch, o.applied))
+                }
+                Backend::Sharded(sh) => {
+                    let o = sh.flush();
+                    Ok((o.snapshot.epoch, o.applied))
+                }
+                Backend::Cluster(c) => match c.flush() {
+                    Ok(o) => {
+                        // nothing applied -> replicas are already at the
+                        // published epoch; don't probe them at shutdown
+                        if o.applied > 0 {
+                            // best-effort: the flush result still stands
+                            if let Err(e) = c.sync_replicas() {
+                                eprintln!(
+                                    "warning: replica sync for '{name}' failed during drain: {e:#}"
+                                );
+                            }
+                        }
+                        Ok((o.snapshot.epoch, o.applied))
+                    }
+                    Err(e) => Err(format!("{e:#}")),
+                },
+                // a shard host has no local queue; its router drains it
+                Backend::ShardHost(_) => continue,
+            };
+            match flushed {
+                Ok((_, 0)) => {} // nothing was pending
+                other => out.push((name, other)),
+            }
+        }
+        out
     }
 
     pub fn default_graph(&self) -> String {
@@ -386,7 +499,10 @@ impl CoreService {
                 session.binary = true;
                 "OK binary".into()
             }
-            "SNAPSHOT" | "RESTORE" if !session.binary => {
+            "SNAPSHOT" | "RESTORE" | "SHARDHOST" | "SHARDSNAP" | "SHARDAPPLY" | "SHARDREFINE"
+            | "SHARDMEMBERS"
+                if !session.binary =>
+            {
                 format!("ERR {verb} needs the binary protocol (send BINARY first)")
             }
             "QUIT" => "OK bye".into(),
@@ -410,6 +526,21 @@ impl CoreService {
                         let Some(Ok(v)) = args.first().map(|a| a.parse::<u32>()) else {
                             return "ERR usage: CORENESS <v>".into();
                         };
+                        // a cluster answers from the owner shard's
+                        // replica group (epoch-checked failover) — the
+                        // read path the replicas exist for
+                        if let Backend::Cluster(c) = &backend {
+                            return match c.coreness_routed(v) {
+                                Ok(Some(core)) => {
+                                    format!("OK core={core} epoch={}", c.epoch())
+                                }
+                                Ok(None) => format!(
+                                    "ERR vertex {v} out of range (|V|={})",
+                                    c.snapshot().num_vertices()
+                                ),
+                                Err(e) => format!("ERR cluster read: {e:#}"),
+                            };
+                        }
                         let s = backend.snapshot();
                         match s.coreness(v) {
                             Some(c) => format!("OK core={c} epoch={}", s.epoch),
@@ -460,17 +591,52 @@ impl CoreService {
                     }
                     "DENSEST" => {
                         view.serve_queries(1);
-                        let (snap, g) = backend.consistent_view();
-                        let d = densest_core_view(&snap, &g);
-                        format!(
-                            "OK k={} vertices={} edges={} density={:.4} epoch={}",
-                            d.k, d.vertices, d.edges, d.density, d.epoch
-                        )
+                        match backend.consistent_view() {
+                            Ok((snap, g)) => {
+                                let d = densest_core_view(&snap, &g);
+                                format!(
+                                    "OK k={} vertices={} edges={} density={:.4} epoch={}",
+                                    d.k, d.vertices, d.edges, d.density, d.epoch
+                                )
+                            }
+                            Err(e) => format!("ERR densest: {e:#}"),
+                        }
                     }
                     "SHARDS" => {
                         view.serve_queries(1);
                         match &backend {
                             Backend::Single { .. } => "OK shards=1 strategy=single".into(),
+                            Backend::ShardHost(h) => h.info(),
+                            Backend::Cluster(c) => {
+                                // topology + counters from local state
+                                // only — a serving verb must not probe
+                                // every endpoint over the network (that
+                                // is `pico cluster status`'s job)
+                                let m = c.merge_stats();
+                                let groups: Vec<String> = c
+                                    .groups()
+                                    .iter()
+                                    .map(|g| {
+                                        format!(
+                                            "{}:{}:{}+{}r:fo{}:st{}",
+                                            g.backend().id(),
+                                            g.kind(),
+                                            g.primary_addr(),
+                                            g.replicas().len(),
+                                            g.failovers(),
+                                            g.stale_reads()
+                                        )
+                                    })
+                                    .collect();
+                                format!(
+                                    "OK shards={} strategy=cluster boundary_edges={} rounds={} boundary_updates={} groups={}",
+                                    c.num_shards(),
+                                    c.boundary_edges(),
+                                    m.rounds,
+                                    m.boundary_updates,
+                                    groups.join(",")
+                                )
+                            }
                             Backend::Sharded(sh) => {
                                 let epochs: Vec<String> =
                                     sh.shard_epochs().iter().map(|e| e.to_string()).collect();
@@ -488,6 +654,12 @@ impl CoreService {
                         }
                     }
                     "INSERT" | "DELETE" => {
+                        if !backend.writable() {
+                            return format!(
+                                "ERR '{}' hosts a cluster shard; writes go through its cluster router",
+                                session.graph
+                            );
+                        }
                         let (Some(Ok(u)), Some(Ok(v))) = (
                             args.first().map(|a| a.parse::<u32>()),
                             args.get(1).map(|a| a.parse::<u32>()),
@@ -515,7 +687,62 @@ impl CoreService {
                         };
                         format!("OK pending={}", backend.submit(edit))
                     }
+                    "SHARDINFO" => match &backend {
+                        Backend::ShardHost(h) => {
+                            view.serve_queries(1);
+                            h.info()
+                        }
+                        _ => format!("ERR '{}' is not a hosted shard", session.graph),
+                    },
+                    "SHARDCORE" => match &backend {
+                        Backend::ShardHost(h) => {
+                            view.serve_queries(1);
+                            h.core_line(&args)
+                        }
+                        _ => format!("ERR '{}' is not a hosted shard", session.graph),
+                    },
+                    "SHARDHISTO" => match &backend {
+                        Backend::ShardHost(h) => {
+                            view.serve_queries(1);
+                            h.histo_line()
+                        }
+                        _ => format!("ERR '{}' is not a hosted shard", session.graph),
+                    },
                     "FLUSH" => match &backend {
+                        Backend::ShardHost(_) => format!(
+                            "ERR '{}' hosts a cluster shard; its router flushes it",
+                            session.graph
+                        ),
+                        Backend::Cluster(c) => match c.flush() {
+                            Ok(out) => {
+                                view.serve_batches(1);
+                                if out.recomputed_shards > 0 {
+                                    view.serve_recomputes(out.recomputed_shards as u64);
+                                }
+                                // re-ship stale replicas so epoch-checked
+                                // reads keep landing on them; a failed
+                                // ship must not masquerade as "in sync"
+                                let synced = match c.sync_replicas() {
+                                    Ok(n) => n.to_string(),
+                                    Err(_) => "ERR".to_string(),
+                                };
+                                format!(
+                                    "OK epoch={} submitted={} applied={} coalesced={} changed={} recomputed={} shards={} rounds={} boundary={} synced={} ms={:.3}",
+                                    out.snapshot.epoch,
+                                    out.submitted,
+                                    out.applied,
+                                    out.coalesced,
+                                    out.changed,
+                                    out.recomputed_shards,
+                                    c.num_shards(),
+                                    out.merge.rounds,
+                                    out.merge.boundary_updates,
+                                    synced,
+                                    out.elapsed_ms()
+                                )
+                            }
+                            Err(e) => format!("ERR cluster flush: {e:#}"),
+                        },
                         Backend::Single { queue, .. } => {
                             let out = queue.flush();
                             view.serve_batches(1);
@@ -577,7 +804,71 @@ impl CoreService {
         match verb.as_str() {
             "SNAPSHOT" => self.frame_snapshot(session, &args, slot),
             "RESTORE" => self.frame_restore(session, &args, payload, slot),
+            "SHARDHOST" => self.frame_shardhost(session, &args, payload, slot),
+            "SHARDSNAP" => self.frame_shard(session, slot, |h| h.snap_frame()),
+            "SHARDAPPLY" => self.frame_shard(session, slot, |h| h.apply_frame(payload)),
+            "SHARDREFINE" => self.frame_shard(session, slot, |h| h.refine_frame(&args, payload)),
+            "SHARDMEMBERS" => self.frame_shard(session, slot, |h| h.members_frame(&args)),
             _ => self.handle_command(session, line, slot).into_bytes(),
+        }
+    }
+
+    /// Dispatch a shard-interface frame to the session's hosted shard.
+    fn frame_shard(
+        &self,
+        session: &Session,
+        slot: usize,
+        f: impl FnOnce(&ShardHost) -> Vec<u8>,
+    ) -> Vec<u8> {
+        self.metrics.view(slot % METRIC_SLOTS).serve_queries(1);
+        match self.backend(&session.graph) {
+            Some(Backend::ShardHost(h)) => f(&h),
+            Some(_) => format!("ERR '{}' is not a hosted shard", session.graph).into_bytes(),
+            None => format!(
+                "ERR no graph selected (have: {})",
+                self.graph_names().join(" ")
+            )
+            .into_bytes(),
+        }
+    }
+
+    /// `SHARDHOST <name>` + manifest payload: validate, hydrate, install
+    /// — initial shard shipping and replica catch-up both land here.
+    fn frame_shardhost(
+        &self,
+        session: &mut Session,
+        args: &[&str],
+        payload: &[u8],
+        slot: usize,
+    ) -> Vec<u8> {
+        self.metrics.view(slot % METRIC_SLOTS).serve_queries(1);
+        let Some(&name) = args.first() else {
+            return b"ERR usage: SHARDHOST <name> (manifest bytes follow the command line)"
+                .to_vec();
+        };
+        if payload.is_empty() {
+            return b"ERR SHARDHOST carries no manifest payload".to_vec();
+        }
+        // cheap fast-fail; install_checked below re-checks under the lock
+        if self.backend(name).is_none() && self.num_graphs() >= MAX_HOSTED_GRAPHS {
+            return format!("ERR graph limit reached ({MAX_HOSTED_GRAPHS} hosted)").into_bytes();
+        }
+        match ShardHost::from_manifest_bytes(name, payload, self.batch_cfg.clone()) {
+            Ok(h) => {
+                let reply = format!(
+                    "OK shardhost={name} shard={} shards={} vertices={} cluster={}",
+                    h.shard_id(),
+                    h.num_shards(),
+                    h.index().snapshot().num_vertices(),
+                    h.cluster_epoch()
+                );
+                if let Err(e) = self.install_checked(name, Backend::ShardHost(Arc::new(h))) {
+                    return format!("ERR {e}").into_bytes();
+                }
+                session.graph = name.to_string();
+                reply.into_bytes()
+            }
+            Err(e) => format!("ERR shardhost: {e:#}").into_bytes(),
         }
     }
 
@@ -596,6 +887,16 @@ impl CoreService {
                     return b"ERR SNAPSHOT takes a shard argument only on sharded graphs".to_vec();
                 }
                 index.clone()
+            }
+            Backend::ShardHost(h) => {
+                if !args.is_empty() {
+                    return b"ERR SNAPSHOT takes a shard argument only on sharded graphs".to_vec();
+                }
+                h.index()
+            }
+            Backend::Cluster(_) => {
+                return b"ERR SNAPSHOT of a cluster: ship its shard hosts' manifests (SHARDSNAP) instead"
+                    .to_vec();
             }
             Backend::Sharded(sh) => {
                 let Some(Ok(k)) = args.first().map(|a| a.parse::<usize>()) else {
@@ -705,6 +1006,8 @@ fn load_dataset(name: &str) -> Result<Arc<CsrGraph>> {
 pub struct ServerHandle {
     addr: SocketAddr,
     stop: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
     join: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -717,6 +1020,32 @@ impl ServerHandle {
     /// Signal the accept loop to exit.
     pub fn stop(&self) {
         self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// Connections currently being served.
+    pub fn active_connections(&self) -> usize {
+        self.active.load(Ordering::SeqCst)
+    }
+
+    /// Graceful shutdown: stop accepting, ask every connection to close
+    /// at its next command boundary (in-flight requests finish and get
+    /// their reply; nothing is dropped mid-frame), and wait up to
+    /// `grace` for them. Returns whether every connection drained — a
+    /// `false` means some connection is stalled mid-request; its
+    /// handler thread keeps waiting for the rest of the request and is
+    /// only reclaimed by process exit. Callers flush pending edits
+    /// afterwards via [`CoreService::flush_all`].
+    pub fn drain(&self, grace: Duration) -> bool {
+        self.draining.store(true, Ordering::SeqCst);
+        self.stop();
+        let deadline = std::time::Instant::now() + grace;
+        while self.active.load(Ordering::SeqCst) > 0 {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        true
     }
 
     /// Block until the accept loop exits (`stop()` from another thread,
@@ -747,7 +1076,11 @@ pub fn serve(service: Arc<CoreService>, addr: &str) -> Result<ServerHandle> {
         .set_nonblocking(true)
         .context("setting the listener non-blocking")?;
     let stop = Arc::new(AtomicBool::new(false));
+    let draining = Arc::new(AtomicBool::new(false));
+    let active = Arc::new(AtomicUsize::new(0));
     let stop2 = stop.clone();
+    let draining2 = draining.clone();
+    let active2 = active.clone();
     let conn_counter = Arc::new(AtomicUsize::new(0));
     let join = std::thread::Builder::new()
         .name("pico-serve-accept".into())
@@ -757,16 +1090,20 @@ pub fn serve(service: Arc<CoreService>, addr: &str) -> Result<ServerHandle> {
                     Ok((stream, _peer)) => {
                         let service = service.clone();
                         let slot = conn_counter.fetch_add(1, Ordering::Relaxed);
+                        let draining = draining2.clone();
+                        let active = active2.clone();
                         let _ = std::thread::Builder::new()
                             .name(format!("pico-serve-conn-{slot}"))
-                            .spawn(move || handle_connection(service, stream, slot));
+                            .spawn(move || {
+                                handle_connection(service, stream, slot, draining, active)
+                            });
                     }
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(std::time::Duration::from_millis(10));
+                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(10));
                     }
                     Err(_) => {
                         // transient accept error; keep serving
-                        std::thread::sleep(std::time::Duration::from_millis(10));
+                        std::thread::sleep(Duration::from_millis(10));
                     }
                 }
             }
@@ -775,14 +1112,48 @@ pub fn serve(service: Arc<CoreService>, addr: &str) -> Result<ServerHandle> {
     Ok(ServerHandle {
         addr: local,
         stop,
+        draining,
+        active,
         join: Some(join),
     })
 }
 
-fn handle_connection(service: Arc<CoreService>, stream: TcpStream, slot: usize) {
+/// Decrements the live-connection gauge however the handler exits.
+struct ActiveGuard(Arc<AtomicUsize>);
+
+impl ActiveGuard {
+    fn new(active: Arc<AtomicUsize>) -> Self {
+        active.fetch_add(1, Ordering::SeqCst);
+        Self(active)
+    }
+}
+
+impl Drop for ActiveGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+fn handle_connection(
+    service: Arc<CoreService>,
+    stream: TcpStream,
+    slot: usize,
+    draining: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+) {
+    let _active = ActiveGuard::new(active);
     // the listener is non-blocking (stoppable accept loop); make sure the
-    // per-connection socket blocks — inheritance is platform-dependent
+    // per-connection socket blocks — inheritance is platform-dependent.
+    // The short read timeout is the drain poll: an *idle* connection
+    // notices `draining` at its next timeout; a mid-request read keeps
+    // retrying until the request is complete.
     if stream.set_nonblocking(false).is_err() {
+        return;
+    }
+    if stream
+        .set_read_timeout(Some(Duration::from_millis(200)))
+        .is_err()
+    {
         return;
     }
     let mut writer = match stream.try_clone() {
@@ -791,12 +1162,14 @@ fn handle_connection(service: Arc<CoreService>, stream: TcpStream, slot: usize) 
     };
     let mut reader = BufReader::new(stream);
     let mut session = Session::new(service.default_graph());
+    let stop = || draining.load(Ordering::SeqCst);
     loop {
         if session.binary {
-            let body = match read_frame(&mut reader, MAX_FRAME_BYTES) {
-                Ok(Some(b)) => b,
-                Ok(None) => break, // clean close
-                Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+            let body = match read_frame_interruptible(&mut reader, MAX_FRAME_BYTES, &stop) {
+                Ok(ServerRead::Data(b)) => b,
+                Ok(ServerRead::Closed) => break, // clean close
+                Ok(ServerRead::Drained) => break, // idle at drain time
+                Err(e) if e.kind() == ErrorKind::InvalidData => {
                     let _ = write_frame(
                         &mut writer,
                         format!("ERR frame exceeds {MAX_FRAME_BYTES} bytes").as_bytes(),
@@ -814,14 +1187,14 @@ fn handle_connection(service: Arc<CoreService>, stream: TcpStream, slot: usize) 
             if write_frame(&mut writer, &reply).is_err() {
                 break;
             }
-            if quit {
+            if quit || stop() {
                 break;
             }
         } else {
-            let line = match read_line_capped(&mut reader, MAX_LINE_BYTES) {
+            let line = match read_line_capped(&mut reader, MAX_LINE_BYTES, &stop) {
                 Ok(Some(l)) => l,
-                Ok(None) => break, // EOF
-                Err(e) if e.kind() == std::io::ErrorKind::InvalidData => {
+                Ok(None) => break, // EOF or idle at drain time
+                Err(e) if e.kind() == ErrorKind::InvalidData => {
                     let _ = writeln!(writer, "ERR line exceeds {MAX_LINE_BYTES} bytes");
                     break;
                 }
@@ -838,7 +1211,7 @@ fn handle_connection(service: Arc<CoreService>, stream: TcpStream, slot: usize) 
             if writeln!(writer, "{reply}").and_then(|_| writer.flush()).is_err() {
                 break;
             }
-            if quit {
+            if quit || stop() {
                 break;
             }
         }
@@ -883,15 +1256,102 @@ pub fn read_frame(reader: &mut impl Read, max: usize) -> std::io::Result<Option<
     Ok(Some(body))
 }
 
-/// `read_line` with a byte cap: returns `Ok(None)` at EOF and
-/// `ErrorKind::InvalidData` once a line exceeds `max` bytes.
+/// Outcome of a server-side interruptible read.
+enum ServerRead<T> {
+    Data(T),
+    /// Peer closed the connection at a clean boundary.
+    Closed,
+    /// The drain flag was observed while idle at a boundary.
+    Drained,
+}
+
+/// Fill `buf` completely, retrying read timeouts. `stop` is only
+/// honoured while *nothing* of the item has been consumed — once bytes
+/// arrive, the read runs to completion so a drain never abandons a
+/// half-received request.
+fn fill_interruptible(
+    reader: &mut impl Read,
+    buf: &mut [u8],
+    stop: &dyn Fn() -> bool,
+) -> std::io::Result<ServerRead<()>> {
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match reader.read(&mut buf[filled..]) {
+            Ok(0) => {
+                return if filled == 0 {
+                    Ok(ServerRead::Closed)
+                } else {
+                    Err(std::io::Error::new(
+                        ErrorKind::UnexpectedEof,
+                        "connection closed mid-frame",
+                    ))
+                };
+            }
+            Ok(n) => filled += n,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if filled == 0 && stop() {
+                    return Ok(ServerRead::Drained);
+                }
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ServerRead::Data(()))
+}
+
+/// [`read_frame`] for the server's timeout-polled sockets: idle
+/// connections surface `Drained` at a frame boundary, while a frame
+/// whose header has arrived is always read (and can be answered) in
+/// full.
+fn read_frame_interruptible(
+    reader: &mut impl Read,
+    max: usize,
+    stop: &dyn Fn() -> bool,
+) -> std::io::Result<ServerRead<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    match fill_interruptible(reader, &mut header, stop)? {
+        ServerRead::Data(()) => {}
+        ServerRead::Closed => return Ok(ServerRead::Closed),
+        ServerRead::Drained => return Ok(ServerRead::Drained),
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    if len > max {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame too large",
+        ));
+    }
+    let mut body = vec![0u8; len];
+    // mid-frame: never hand a half-read frame to the drain
+    match fill_interruptible(reader, &mut body, &|| false)? {
+        ServerRead::Data(()) => Ok(ServerRead::Data(body)),
+        _ => Ok(ServerRead::Closed),
+    }
+}
+
+/// `read_line` with a byte cap: returns `Ok(None)` at EOF (or when the
+/// drain flag is observed while idle between lines) and
+/// `ErrorKind::InvalidData` once a line exceeds `max` bytes. A line
+/// whose first bytes have arrived is read to completion.
 fn read_line_capped(
     reader: &mut BufReader<TcpStream>,
     max: usize,
+    stop: &dyn Fn() -> bool,
 ) -> std::io::Result<Option<String>> {
     let mut line: Vec<u8> = Vec::new();
     loop {
-        let buf = reader.fill_buf()?;
+        let buf = match reader.fill_buf() {
+            Ok(b) => b,
+            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                if line.is_empty() && stop() {
+                    return Ok(None);
+                }
+                continue;
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
         if buf.is_empty() {
             // EOF: hand back any trailing unterminated line
             return Ok(if line.is_empty() {
@@ -1132,6 +1592,105 @@ mod tests {
         assert_eq!(send("CORENESS 4", &mut r), "OK core=3 epoch=1");
         assert_eq!(send("QUIT", &mut r), "OK bye");
         handle.stop();
+    }
+
+    #[test]
+    fn shard_host_frames_round_trip_in_process() {
+        use crate::shard::backend::LocalShard;
+        use crate::shard::partition::{partition, PartitionStrategy};
+
+        let (svc, mut s) = service_with_g1();
+        svc.handle_command(&mut s, "BINARY", 0);
+        // build a shard manifest the way a cluster coordinator would
+        let g = examples::g1();
+        let plan = partition(&g, 2, PartitionStrategy::Hash);
+        let shard = LocalShard::from_plan(
+            "c",
+            &plan.shards[0],
+            BatchConfig {
+                threads: 1,
+                ..BatchConfig::default()
+            },
+        );
+        let manifest = crate::cluster::manifest_for(&shard, 2);
+        let mut req = b"SHARDHOST c/shard0\n".to_vec();
+        req.extend_from_slice(&manifest);
+        let reply = svc.handle_frame(&mut s, &req, 0);
+        let head = String::from_utf8(reply).unwrap();
+        assert!(head.starts_with("OK shardhost=c/shard0 shard=0 shards=2"), "{head}");
+        assert_eq!(s.graph, "c/shard0");
+        // line-mode probes answer on the hosted shard
+        let info = svc.handle_command(&mut s, "SHARDINFO", 0);
+        assert!(info.starts_with("OK shard=0 shards=2 epoch=0"), "{info}");
+        // fresh shards have no committed refined state yet: the sentinel
+        // epoch keeps epoch-checked readers from trusting them
+        let histo = svc.handle_command(&mut s, "SHARDHISTO", 0);
+        assert!(histo.starts_with(&format!("OK cluster={}", u64::MAX)), "{histo}");
+        // direct writes are refused — the cluster router owns this shard
+        assert!(svc
+            .handle_command(&mut s, "INSERT 0 1", 0)
+            .starts_with("ERR 'c/shard0' hosts a cluster shard"));
+        assert!(svc
+            .handle_command(&mut s, "FLUSH", 0)
+            .starts_with("ERR 'c/shard0' hosts a cluster shard"));
+        // the shard interface works over frames
+        let refine = svc.handle_frame(&mut s, b"SHARDREFINE START -", 0);
+        let nl = refine.iter().position(|&b| b == b'\n').unwrap();
+        assert!(std::str::from_utf8(&refine[..nl]).unwrap().starts_with("OK refine-init"));
+        let snap = svc.handle_frame(&mut s, b"SHARDSNAP", 0);
+        let nl = snap.iter().position(|&b| b == b'\n').unwrap();
+        assert!(std::str::from_utf8(&snap[..nl]).unwrap().starts_with("OK shardsnap"));
+        crate::cluster::wire::decode_manifest(&snap[nl + 1..]).unwrap();
+        // corrupt manifests are rejected and leak no graph slot
+        let before = svc.handle_command(&mut s, "GRAPHS", 0);
+        let evil = svc.handle_frame(&mut s, b"SHARDHOST evil\nnot-a-manifest", 0);
+        assert!(String::from_utf8(evil).unwrap().starts_with("ERR shardhost:"));
+        assert_eq!(svc.handle_command(&mut s, "GRAPHS", 0), before);
+        // shard verbs on a non-shard graph are structured errors
+        svc.handle_command(&mut s, "USE g1", 0);
+        assert!(svc.handle_command(&mut s, "SHARDINFO", 0).starts_with("ERR 'g1' is not"));
+        assert!(String::from_utf8(svc.handle_frame(&mut s, b"SHARDSNAP", 0))
+            .unwrap()
+            .starts_with("ERR 'g1' is not"));
+    }
+
+    #[test]
+    fn shard_verbs_need_binary_in_line_mode() {
+        let (svc, mut s) = service_with_g1();
+        for verb in ["SHARDHOST x", "SHARDSNAP", "SHARDAPPLY", "SHARDREFINE START -"] {
+            let reply = svc.handle_command(&mut s, verb, 0);
+            assert!(reply.contains("needs the binary protocol"), "{verb}: {reply}");
+        }
+    }
+
+    #[test]
+    fn drain_finishes_connections_and_flush_all_applies_pending() {
+        let svc = Arc::new(CoreService::new(BatchConfig {
+            threads: 1,
+            ..BatchConfig::default()
+        }));
+        svc.open("g1", &examples::g1());
+        let handle = serve(svc.clone(), "127.0.0.1:0").expect("bind");
+        let stream = TcpStream::connect(handle.addr()).expect("connect");
+        let mut w = stream.try_clone().unwrap();
+        let mut r = BufReader::new(stream);
+        writeln!(w, "INSERT 2 5").unwrap();
+        w.flush().unwrap();
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        assert_eq!(line.trim_end(), "OK pending=1");
+        // drain: the idle connection closes at its next read timeout
+        assert!(handle.drain(Duration::from_secs(5)), "connections did not drain");
+        assert_eq!(handle.active_connections(), 0);
+        line.clear();
+        // server closed our connection (EOF), not mid-reply
+        assert_eq!(r.read_line(&mut line).unwrap(), 0);
+        // pending edits survive the drain and land in flush_all
+        let flushed = svc.flush_all();
+        assert_eq!(flushed.len(), 1);
+        assert_eq!(flushed[0].0, "g1");
+        assert_eq!(flushed[0].1, Ok((1, 1))); // (epoch, applied edits)
+        assert_eq!(svc.index("g1").unwrap().snapshot().epoch, 1);
     }
 
     #[test]

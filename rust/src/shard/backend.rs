@@ -1,0 +1,722 @@
+//! The shard interface the routers consume — and its in-process
+//! implementation.
+//!
+//! [`ShardBackend`] is the contract extracted from the original
+//! `ShardedIndex` internals so that a shard can live *anywhere*: in this
+//! process ([`LocalShard`]) or behind a `pico serve` on another host
+//! ([`crate::cluster::RemoteShard`] speaks exactly this interface over
+//! the length-prefixed binary protocol). Everything crosses the boundary
+//! in **global** vertex ids; the shard owns its local-id translation.
+//!
+//! The interface has three facets, mirroring the three things a router
+//! does per flush:
+//!
+//! * **Routed edits** — [`ShardBackend::apply`] takes a [`RoutedBatch`]
+//!   (new owned vertices + the edits touching this shard) through the
+//!   incremental-vs-recompute pipeline of the shard's own `CoreIndex`.
+//! * **Boundary exchange** — [`ShardBackend::refine_start`] /
+//!   [`ShardBackend::refine_round`] / [`ShardBackend::refine_commit`]
+//!   are the distributed h-index fixpoint, cut at its natural network
+//!   boundary: one `refine_round` is one boundary exchange (install
+//!   ghost estimates, sweep to the local fixpoint, report owned
+//!   estimates that changed).
+//! * **Reads** — refined (exact, post-merge) per-shard answers, each
+//!   stamped with the cluster epoch it was committed at so replica
+//!   readers can reject stale state.
+//!
+//! **Warm start.** `refine_start` takes an optional `slack`: when given,
+//! owned estimates start from `min(degree, committed + slack)` instead of
+//! raw degrees, where `committed` is the previous pass's exact coreness.
+//! A single edge insertion raises any coreness by at most one, so with
+//! `slack` = the number of inserted edges in the batch, the warm value is
+//! still a pointwise upper bound — and the fixpoint argument (upper bound
+//! + `est[v] ≤ H(est[N(v)])` everywhere forces `est == coreness`) goes
+//! through unchanged. On small batches this replaces the full
+//! Index2core-shaped pass per flush with a few localised corrections.
+
+use crate::core::hindex::{hindex_capped, HindexScratch};
+use crate::core::maintenance::EdgeEdit;
+use crate::core::Hybrid;
+use crate::graph::VertexId;
+use crate::service::batch::BatchConfig;
+use crate::service::index::CoreIndex;
+use crate::shard::partition::ShardPlan;
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+/// The edits a router dispatches to one shard for one flush.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RoutedBatch {
+    /// Vertices newly assigned to this shard as owned (global ids,
+    /// ascending). May be non-empty with `edits` empty: isolated
+    /// intermediate ids created by an edit like `INSERT 5 9`.
+    pub new_owned: Vec<VertexId>,
+    /// Edits touching this shard (global ids). `true` marks the primary
+    /// copy — the one routed to the first endpoint's owner, which
+    /// accounts for the edit's `changed` bit (boundary edits reach two
+    /// shards but must be counted once).
+    pub edits: Vec<(EdgeEdit, bool)>,
+}
+
+/// What one routed batch did on the shard.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ApplyOutcome {
+    /// Primary edits that changed the edge set.
+    pub changed: usize,
+    /// Whether the shard took the full-recompute fallback.
+    pub recomputed: bool,
+    /// Shard-local `CoreIndex` epoch after the batch.
+    pub epoch: u64,
+}
+
+/// What a refinement pass needs from each shard before the first
+/// exchange round.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RefineInit {
+    /// Initial estimates for every owned vertex (global id, estimate).
+    pub owned_est: Vec<(VertexId, u32)>,
+    /// This shard's ghost vertices (global ids) — the router only ships
+    /// estimate updates a shard can actually use.
+    pub ghosts: Vec<VertexId>,
+    /// Arcs out of owned vertices (internal + boundary). Summed over all
+    /// shards this double-counts every edge: `|E| = Σ arcs / 2`.
+    pub arcs: u64,
+    /// Arcs from an owned vertex to a ghost. Each global boundary edge
+    /// contributes one such arc in exactly two shards.
+    pub boundary_arcs: u64,
+}
+
+/// What one boundary-exchange round did on the shard.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct RefineRound {
+    /// Owned estimates lowered by this round's sweep (global id, value).
+    pub changed: Vec<(VertexId, u32)>,
+    /// 1 if the shard swept (it was dirty or a ghost install changed a
+    /// value), 0 if the round was a no-op.
+    pub sweeps: usize,
+    /// Ghost installs that actually changed a stored value.
+    pub ghost_updates: u64,
+}
+
+/// Probe result for health / epoch checks (`SHARDINFO` on the wire).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardStatus {
+    pub id: usize,
+    /// Shard-local `CoreIndex` epoch (one per applied batch).
+    pub epoch: u64,
+    /// Cluster epoch of the last committed refinement pass.
+    pub cluster_epoch: u64,
+    /// Owned-vertex count.
+    pub owned: usize,
+    /// Max committed refined coreness among owned vertices.
+    pub k_max: u32,
+}
+
+/// The `cluster_epoch` a shard reports before its first
+/// [`ShardBackend::refine_commit`]. Deliberately unequal to every real
+/// epoch so epoch-checked replica reads can never accept answers from a
+/// shard that has no committed refined state yet.
+pub const NEVER_COMMITTED: u64 = u64::MAX;
+
+/// One shard of a partitioned index, local or remote. All ids crossing
+/// this interface are global; fallible methods exist for the sake of
+/// remote implementations (local shards never fail).
+pub trait ShardBackend: Send + Sync {
+    /// Shard id within the partition.
+    fn id(&self) -> usize;
+
+    /// `"local"` or `"remote"` — topology display only.
+    fn kind(&self) -> &'static str;
+
+    /// Health / epoch probe.
+    fn status(&self) -> Result<ShardStatus>;
+
+    /// Apply a routed batch (grow the vertex set, then incremental
+    /// maintenance or structural edits + recompute — the shard decides).
+    fn apply(&self, batch: &RoutedBatch) -> Result<ApplyOutcome>;
+
+    /// Reset refinement estimates (optionally warm-started, see module
+    /// docs) and report the ghost list + arc accounting.
+    fn refine_start(&self, slack: Option<u32>) -> Result<RefineInit>;
+
+    /// One boundary exchange: install `updates` on ghost copies, sweep
+    /// owned vertices to the local h-index fixpoint if anything changed,
+    /// return the owned estimates this round lowered.
+    fn refine_round(&self, updates: &[(VertexId, u32)]) -> Result<RefineRound>;
+
+    /// Freeze the current estimates as the shard's exact refined
+    /// coreness at cluster epoch `cluster_epoch` (read + catch-up state).
+    fn refine_commit(&self, cluster_epoch: u64) -> Result<()>;
+
+    /// Committed refined coreness of an owned vertex, plus the cluster
+    /// epoch it was committed at (`None` for unknown / non-owned ids).
+    fn refined_coreness(&self, v: VertexId) -> Result<(Option<u32>, u64)>;
+
+    /// Committed coreness histogram over owned vertices (index = k),
+    /// plus the commit epoch.
+    fn histogram_partial(&self) -> Result<(Vec<u64>, u64)>;
+
+    /// Owned vertices with committed coreness >= k (unsorted), plus the
+    /// commit epoch.
+    fn members_partial(&self, k: u32) -> Result<(Vec<VertexId>, u64)>;
+
+    /// The in-process `CoreIndex`, when there is one (snapshot shipping
+    /// and global-graph assembly for local shards).
+    fn local_index(&self) -> Option<Arc<CoreIndex>> {
+        None
+    }
+}
+
+/// Writer-side state of an in-process shard.
+struct LocalState {
+    /// local id → global id.
+    globals: Vec<VertexId>,
+    /// global id → local id.
+    locals: HashMap<VertexId, u32>,
+    /// Local ids owned by this shard (registration order == ascending
+    /// global id: new vertices always carry larger ids).
+    owned_locals: Vec<u32>,
+    /// `owned_mask[l]` — is local `l` owned (vs ghost)?
+    owned_mask: Vec<bool>,
+    /// Refinement working estimates, one per local id.
+    est: Vec<u32>,
+    /// Whether the next `refine_round` must sweep even without installs.
+    dirty: bool,
+    /// Committed estimates from the last `refine_commit`.
+    refined: Vec<u32>,
+    /// Cluster epoch of the last commit.
+    cluster_epoch: u64,
+}
+
+impl LocalState {
+    /// Local id of `v`, registering it (as a ghost — callers flip the
+    /// mask for owned adoptions) if unseen.
+    fn local_id(&mut self, v: VertexId) -> u32 {
+        if let Some(&l) = self.locals.get(&v) {
+            return l;
+        }
+        let l = self.globals.len() as u32;
+        self.globals.push(v);
+        self.locals.insert(v, l);
+        self.owned_mask.push(false);
+        l
+    }
+}
+
+/// The in-process [`ShardBackend`]: a shard-local epoch-versioned
+/// [`CoreIndex`] plus the global↔local translation tables.
+pub struct LocalShard {
+    id: usize,
+    index: Arc<CoreIndex>,
+    cfg: BatchConfig,
+    state: Mutex<LocalState>,
+}
+
+impl LocalShard {
+    /// Build from a partition plan (decomposes the subgraph).
+    pub fn from_plan(index_name: &str, plan: &ShardPlan, cfg: BatchConfig) -> Self {
+        let mut globals = plan.owned.clone();
+        globals.extend_from_slice(&plan.ghosts);
+        let index = Arc::new(CoreIndex::new(
+            format!("{index_name}/shard{}", plan.id),
+            &plan.subgraph,
+        ));
+        Self::assemble(
+            plan.id,
+            index,
+            globals,
+            plan.owned.len(),
+            Vec::new(),
+            NEVER_COMMITTED,
+            cfg,
+        )
+    }
+
+    /// Rebuild from shipped state (the `SHARDHOST` restore path): a
+    /// hydrated index plus the translation tables and committed refined
+    /// estimates — no decomposition runs.
+    pub fn from_parts(
+        id: usize,
+        index: Arc<CoreIndex>,
+        globals: Vec<VertexId>,
+        owned_locals: Vec<u32>,
+        refined: Vec<u32>,
+        cluster_epoch: u64,
+        cfg: BatchConfig,
+    ) -> Result<Self> {
+        let n = globals.len();
+        let locals: HashMap<VertexId, u32> = globals
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, i as u32))
+            .collect();
+        if locals.len() != n {
+            bail!("duplicate global ids in shard state");
+        }
+        let mut owned_mask = vec![false; n];
+        for &l in &owned_locals {
+            let Some(m) = owned_mask.get_mut(l as usize) else {
+                bail!("owned local {l} out of range (n={n})");
+            };
+            if *m {
+                bail!("owned local {l} listed twice");
+            }
+            *m = true;
+        }
+        if !refined.is_empty() && refined.len() != n {
+            bail!("refined length {} != vertex count {n}", refined.len());
+        }
+        // no committed refined state must never masquerade as a real
+        // epoch, or epoch-checked replica reads would trust it
+        let cluster_epoch = if refined.is_empty() {
+            NEVER_COMMITTED
+        } else {
+            cluster_epoch
+        };
+        Ok(Self {
+            id,
+            index,
+            cfg,
+            state: Mutex::new(LocalState {
+                globals,
+                locals,
+                owned_locals,
+                owned_mask,
+                est: Vec::new(),
+                dirty: true,
+                refined,
+                cluster_epoch,
+            }),
+        })
+    }
+
+    fn assemble(
+        id: usize,
+        index: Arc<CoreIndex>,
+        globals: Vec<VertexId>,
+        owned_len: usize,
+        refined: Vec<u32>,
+        cluster_epoch: u64,
+        cfg: BatchConfig,
+    ) -> Self {
+        let locals: HashMap<VertexId, u32> = globals
+            .iter()
+            .enumerate()
+            .map(|(i, &v)| (v, i as u32))
+            .collect();
+        let mut owned_mask = vec![false; globals.len()];
+        for m in owned_mask.iter_mut().take(owned_len) {
+            *m = true;
+        }
+        Self {
+            id,
+            index,
+            cfg,
+            state: Mutex::new(LocalState {
+                globals,
+                locals,
+                owned_locals: (0..owned_len as u32).collect(),
+                owned_mask,
+                est: Vec::new(),
+                dirty: true,
+                refined,
+                cluster_epoch,
+            }),
+        }
+    }
+
+    /// The shard's own epoch-versioned index (what snapshot shipping
+    /// serialises).
+    pub fn index(&self) -> Arc<CoreIndex> {
+        self.index.clone()
+    }
+
+    /// Everything a manifest needs — `(globals, owned_locals, refined,
+    /// cluster_epoch, encoded index snapshot)` captured atomically: the
+    /// state lock is held while the snapshot is encoded (state→index is
+    /// the established lock order), so a concurrent apply can never
+    /// produce a torn manifest whose id table disagrees with the graph.
+    pub fn export_state(&self) -> (Vec<VertexId>, Vec<u32>, Vec<u32>, u64, Vec<u8>) {
+        let st = self.state.lock().unwrap();
+        let snapshot = crate::shard::snapshot::encode_index(&self.index);
+        (
+            st.globals.clone(),
+            st.owned_locals.clone(),
+            st.refined.clone(),
+            st.cluster_epoch,
+            snapshot,
+        )
+    }
+
+    /// All arcs out of owned vertices as global-id pairs — the
+    /// assembly input for a router-side global CSR (boundary edges show
+    /// up once per endpoint owner; the builder's dedup collapses them).
+    pub fn owned_edges(&self) -> Vec<(VertexId, VertexId)> {
+        let st = self.state.lock().unwrap();
+        let g = self.index.graph();
+        let mut out = Vec::new();
+        for &l in &st.owned_locals {
+            let gu = st.globals[l as usize];
+            for &w in g.neighbors(l) {
+                out.push((gu, st.globals[w as usize]));
+            }
+        }
+        out
+    }
+}
+
+impl ShardBackend for LocalShard {
+    fn id(&self) -> usize {
+        self.id
+    }
+
+    fn kind(&self) -> &'static str {
+        "local"
+    }
+
+    fn status(&self) -> Result<ShardStatus> {
+        let st = self.state.lock().unwrap();
+        let k_max = st
+            .owned_locals
+            .iter()
+            .filter_map(|&l| st.refined.get(l as usize).copied())
+            .max()
+            .unwrap_or(0);
+        Ok(ShardStatus {
+            id: self.id,
+            epoch: self.index.epoch(),
+            cluster_epoch: st.cluster_epoch,
+            owned: st.owned_locals.len(),
+            k_max,
+        })
+    }
+
+    fn apply(&self, batch: &RoutedBatch) -> Result<ApplyOutcome> {
+        let mut st = self.state.lock().unwrap();
+        for &v in &batch.new_owned {
+            let l = st.local_id(v);
+            if !st.owned_mask[l as usize] {
+                st.owned_mask[l as usize] = true;
+                st.owned_locals.push(l);
+            }
+        }
+        // translate to local ids, registering unseen endpoints as ghosts
+        let mut local_edits: Vec<(EdgeEdit, bool)> = Vec::with_capacity(batch.edits.len());
+        for &(e, primary) in &batch.edits {
+            let (u, v) = e.endpoints();
+            if u == v {
+                bail!("self-loop edit ({u},{u}) routed to shard {}", self.id);
+            }
+            let lu = st.local_id(u);
+            let lv = st.local_id(v);
+            let local = match e {
+                EdgeEdit::Insert(_, _) => EdgeEdit::Insert(lu, lv),
+                EdgeEdit::Delete(_, _) => EdgeEdit::Delete(lu, lv),
+            };
+            local_edits.push((local, primary));
+        }
+        // same crossover policy as `service::batch::apply_batch`
+        let last_local = st.globals.len().checked_sub(1).map(|l| l as u32);
+        let cfg = &self.cfg;
+        let ((changed, recomputed), _snap) = self.index.update(|dc| {
+            if let Some(last) = last_local {
+                dc.ensure_vertex(last);
+            }
+            let threshold = cfg.recompute_threshold(dc.num_edges());
+            let mut changed = 0usize;
+            if !local_edits.is_empty() && local_edits.len() >= threshold {
+                for &(e, primary) in &local_edits {
+                    let did = match e {
+                        EdgeEdit::Insert(u, v) => dc.insert_edge_structural(u, v),
+                        EdgeEdit::Delete(u, v) => dc.delete_edge_structural(u, v),
+                    };
+                    if did && primary {
+                        changed += 1;
+                    }
+                }
+                dc.recompute_with(&Hybrid::default(), cfg.threads);
+                (changed, true)
+            } else {
+                for &(e, primary) in &local_edits {
+                    if dc.apply(e) && primary {
+                        changed += 1;
+                    }
+                }
+                (changed, false)
+            }
+        });
+        st.dirty = true;
+        Ok(ApplyOutcome {
+            changed,
+            recomputed,
+            epoch: self.index.epoch(),
+        })
+    }
+
+    fn refine_start(&self, slack: Option<u32>) -> Result<RefineInit> {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        let g = self.index.graph();
+        let n = g.num_vertices();
+        if n != st.globals.len() {
+            bail!(
+                "shard {}: index has {n} vertices but {} locals are registered",
+                self.id,
+                st.globals.len()
+            );
+        }
+        st.est = (0..n as u32).map(|l| g.degree(l)).collect();
+        if let Some(slack) = slack {
+            // warm start: committed coreness + slack is still an upper
+            // bound (see module docs); degrees stay the cap
+            for l in 0..st.refined.len().min(n) {
+                let warm = st.refined[l].saturating_add(slack);
+                if warm < st.est[l] {
+                    st.est[l] = warm;
+                }
+            }
+        }
+        st.dirty = true;
+        let mut owned_est = Vec::with_capacity(st.owned_locals.len());
+        let mut arcs = 0u64;
+        let mut boundary_arcs = 0u64;
+        for &l in &st.owned_locals {
+            owned_est.push((st.globals[l as usize], st.est[l as usize]));
+            for &w in g.neighbors(l) {
+                arcs += 1;
+                if !st.owned_mask[w as usize] {
+                    boundary_arcs += 1;
+                }
+            }
+        }
+        let ghosts: Vec<VertexId> = (0..n as u32)
+            .filter(|&l| !st.owned_mask[l as usize])
+            .map(|l| st.globals[l as usize])
+            .collect();
+        Ok(RefineInit {
+            owned_est,
+            ghosts,
+            arcs,
+            boundary_arcs,
+        })
+    }
+
+    fn refine_round(&self, updates: &[(VertexId, u32)]) -> Result<RefineRound> {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        let g = self.index.graph();
+        let mut ghost_updates = 0u64;
+        for &(v, val) in updates {
+            if let Some(&l) = st.locals.get(&v) {
+                let l = l as usize;
+                if !st.owned_mask[l] && l < st.est.len() && st.est[l] != val {
+                    st.est[l] = val;
+                    ghost_updates += 1;
+                    st.dirty = true;
+                }
+            }
+        }
+        if !st.dirty {
+            return Ok(RefineRound {
+                changed: Vec::new(),
+                sweeps: 0,
+                ghost_updates,
+            });
+        }
+        st.dirty = false;
+        let mut changed_mask = vec![false; st.est.len()];
+        let mut scratch = HindexScratch::new();
+        loop {
+            let mut changed = false;
+            for &l in &st.owned_locals {
+                let cap = st.est[l as usize];
+                if cap == 0 {
+                    continue;
+                }
+                let h = {
+                    let vals: &[u32] = &st.est;
+                    hindex_capped(
+                        g.neighbors(l).iter().map(|&w| vals[w as usize]),
+                        cap,
+                        &mut scratch,
+                    )
+                };
+                if h < cap {
+                    st.est[l as usize] = h;
+                    changed_mask[l as usize] = true;
+                    changed = true;
+                }
+            }
+            if !changed {
+                break;
+            }
+        }
+        let changed: Vec<(VertexId, u32)> = st
+            .owned_locals
+            .iter()
+            .filter(|&&l| changed_mask[l as usize])
+            .map(|&l| (st.globals[l as usize], st.est[l as usize]))
+            .collect();
+        Ok(RefineRound {
+            changed,
+            sweeps: 1,
+            ghost_updates,
+        })
+    }
+
+    fn refine_commit(&self, cluster_epoch: u64) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        st.refined = st.est.clone();
+        st.cluster_epoch = cluster_epoch;
+        Ok(())
+    }
+
+    fn refined_coreness(&self, v: VertexId) -> Result<(Option<u32>, u64)> {
+        let st = self.state.lock().unwrap();
+        let val = st.locals.get(&v).and_then(|&l| {
+            let l = l as usize;
+            if st.owned_mask[l] {
+                st.refined.get(l).copied()
+            } else {
+                None
+            }
+        });
+        Ok((val, st.cluster_epoch))
+    }
+
+    fn histogram_partial(&self) -> Result<(Vec<u64>, u64)> {
+        let st = self.state.lock().unwrap();
+        let mut hist: Vec<u64> = Vec::new();
+        for &l in &st.owned_locals {
+            let Some(&c) = st.refined.get(l as usize) else {
+                continue;
+            };
+            let c = c as usize;
+            if c >= hist.len() {
+                hist.resize(c + 1, 0);
+            }
+            hist[c] += 1;
+        }
+        Ok((hist, st.cluster_epoch))
+    }
+
+    fn members_partial(&self, k: u32) -> Result<(Vec<VertexId>, u64)> {
+        let st = self.state.lock().unwrap();
+        let members: Vec<VertexId> = st
+            .owned_locals
+            .iter()
+            .filter(|&&l| st.refined.get(l as usize).is_some_and(|&c| c >= k))
+            .map(|&l| st.globals[l as usize])
+            .collect();
+        Ok((members, st.cluster_epoch))
+    }
+
+    fn local_index(&self) -> Option<Arc<CoreIndex>> {
+        Some(self.index.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::examples;
+    use crate::shard::partition::{partition, PartitionStrategy};
+
+    fn cfg() -> BatchConfig {
+        BatchConfig {
+            threads: 1,
+            ..BatchConfig::default()
+        }
+    }
+
+    fn shards_for(g: &crate::graph::CsrGraph, k: usize) -> Vec<LocalShard> {
+        partition(g, k, PartitionStrategy::Hash)
+            .shards
+            .iter()
+            .map(|p| LocalShard::from_plan("t", p, cfg()))
+            .collect()
+    }
+
+    #[test]
+    fn refine_init_accounts_arcs_exactly() {
+        let g = examples::g1();
+        let shards = shards_for(&g, 3);
+        let mut arcs = 0u64;
+        let mut boundary = 0u64;
+        for s in &shards {
+            let init = s.refine_start(None).unwrap();
+            arcs += init.arcs;
+            boundary += init.boundary_arcs;
+            for &(_, e) in &init.owned_est {
+                assert!(e <= g.max_degree());
+            }
+        }
+        assert_eq!(arcs / 2, g.num_edges());
+        assert_eq!(boundary % 2, 0);
+    }
+
+    #[test]
+    fn apply_routes_and_counts_primaries_once() {
+        let g = examples::g1();
+        let shards = shards_for(&g, 2);
+        // find an edit and dispatch to both endpoint owners, primary once
+        let out0 = shards[0]
+            .apply(&RoutedBatch {
+                new_owned: vec![],
+                edits: vec![(EdgeEdit::Insert(2, 5), true)],
+            })
+            .unwrap();
+        let out1 = shards[1]
+            .apply(&RoutedBatch {
+                new_owned: vec![],
+                edits: vec![(EdgeEdit::Insert(2, 5), false)],
+            })
+            .unwrap();
+        assert_eq!(out0.changed + out1.changed, 1);
+        assert!(shards[0].apply(&RoutedBatch {
+            new_owned: vec![],
+            edits: vec![(EdgeEdit::Insert(7, 7), true)],
+        }).is_err());
+    }
+
+    #[test]
+    fn commit_freezes_reads_with_epoch() {
+        let g = examples::complete(4);
+        let shards = shards_for(&g, 1);
+        let s = &shards[0];
+        let init = s.refine_start(None).unwrap();
+        assert_eq!(init.ghosts.len(), 0);
+        let round = s.refine_round(&[]).unwrap();
+        assert_eq!(round.sweeps, 1);
+        s.refine_commit(7).unwrap();
+        let (c, ce) = s.refined_coreness(0).unwrap();
+        assert_eq!((c, ce), (Some(3), 7));
+        let (hist, _) = s.histogram_partial().unwrap();
+        assert_eq!(hist, vec![0, 0, 0, 4]);
+        let (members, _) = s.members_partial(3).unwrap();
+        assert_eq!(members.len(), 4);
+        let st = s.status().unwrap();
+        assert_eq!((st.cluster_epoch, st.owned, st.k_max), (7, 4, 3));
+    }
+
+    #[test]
+    fn warm_start_is_capped_by_degree() {
+        let g = examples::complete(4);
+        let shards = shards_for(&g, 1);
+        let s = &shards[0];
+        s.refine_start(None).unwrap();
+        s.refine_round(&[]).unwrap();
+        s.refine_commit(1).unwrap();
+        // slack 100 must not push estimates above the degree cap
+        let init = s.refine_start(Some(100)).unwrap();
+        for &(_, e) in &init.owned_est {
+            assert_eq!(e, 3);
+        }
+        // slack 0 warm-starts directly at the committed coreness
+        let init = s.refine_start(Some(0)).unwrap();
+        for &(_, e) in &init.owned_est {
+            assert_eq!(e, 3);
+        }
+    }
+}

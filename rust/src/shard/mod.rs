@@ -10,13 +10,20 @@
 //!   ranges) producing per-shard subgraphs with boundary-edge
 //!   bookkeeping. Owned vertices keep their complete adjacency; remote
 //!   neighbors become ghosts.
+//! * [`backend`] — the [`backend::ShardBackend`] interface (routed
+//!   edits, boundary-exchange rounds, refined reads) and its in-process
+//!   implementation [`backend::LocalShard`]. The multi-host
+//!   implementation is [`crate::cluster::RemoteShard`], which speaks the
+//!   same interface over the binary protocol — routers cannot tell the
+//!   difference.
+//! * [`router`] — edit routing over the owner map and the
+//!   boundary-exchange loop ([`router::refine`]) shared by the local and
+//!   cluster routers: warm-started estimates, concurrent per-shard
+//!   sweeps, exact merged coreness at the fixpoint.
 //! * [`sharded`] — [`sharded::ShardedIndex`]: one epoch-versioned
 //!   `CoreIndex` per shard, a query router (coreness / members /
 //!   histogram / degeneracy fan-out + merge), and the boundary-refinement
-//!   merge (distributed h-index fixpoint) that makes merged coreness
-//!   exact. The TCP server serves the merged published snapshot; the
-//!   fan-out methods are the embedding API and what `shard_scaling`
-//!   measures.
+//!   merge publishing single-index-identical snapshots.
 //! * [`snapshot`] — binary snapshot shipping: serialise a `CoreIndex`
 //!   epoch (graph + coreness + epoch) so a replica hydrates without
 //!   recomputing; the wire side is the server's `SNAPSHOT`/`RESTORE`
@@ -24,14 +31,21 @@
 //!
 //! Scaling behaviour (query throughput, merge overhead per shard count)
 //! is measured by `benches/shard_scaling.rs`; exactness versus a single
-//! index is property-tested in `tests/shard.rs`.
+//! index is property-tested in `tests/shard.rs`. The multi-host cluster
+//! built on this layer lives in [`crate::cluster`].
 
+pub mod backend;
 pub mod partition;
+pub mod router;
 pub mod sharded;
 pub mod snapshot;
 
+pub use backend::{
+    ApplyOutcome, LocalShard, RefineInit, RefineRound, RoutedBatch, ShardBackend, ShardStatus,
+};
 pub use partition::{
     assign_owners, hash_owner, partition, PartitionStrategy, Partitioning, ShardPlan,
 };
-pub use sharded::{MergeStats, ShardView, ShardedIndex, ShardedOutcome};
+pub use router::{refine, route, MergeStats, RefineOutcome, RoutePlan};
+pub use sharded::{ShardView, ShardedIndex, ShardedOutcome};
 pub use snapshot::{decode, encode, encode_index, IndexSnapshot};

@@ -1,0 +1,290 @@
+//! Router-side flush machinery shared by the in-process
+//! [`crate::shard::ShardedIndex`] and the multi-host
+//! [`crate::cluster::ClusterIndex`]: edit routing over an owner map, and
+//! the boundary-exchange loop of the distributed h-index fixpoint over
+//! any mix of [`ShardBackend`]s.
+//!
+//! # The exchange loop
+//!
+//! [`refine`] is round-based (bulk-synchronous): every round it ships
+//! each shard the ghost estimates that changed since the previous round,
+//! the shards sweep to their local fixpoints **concurrently** (dirty
+//! shards are distributed over the batch thread pool — for remote shards
+//! the round is one frame each way, so parallelism hides network latency
+//! too), and the returned owned-estimate deltas feed the next round.
+//! Estimates start as upper bounds (degrees, or warm-started committed
+//! coreness + insert slack) and the router only accepts strict
+//! decreases, so the loop terminates; at the fixpoint the merged values
+//! equal global coreness exactly (see `shard::sharded` module docs for
+//! the argument).
+
+use super::backend::{RefineRound, RoutedBatch, ShardBackend};
+use super::partition::hash_owner;
+use crate::core::maintenance::EdgeEdit;
+use crate::graph::VertexId;
+use anyhow::{bail, Result};
+use std::sync::Arc;
+
+/// What one boundary-refinement (merge) pass did.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct MergeStats {
+    /// Global exchange rounds until the fixpoint.
+    pub rounds: usize,
+    /// Shard-local sweep passes (a shard sweeps only when dirty).
+    pub sweeps: usize,
+    /// Ghost-copy refreshes that actually changed a value.
+    pub boundary_updates: u64,
+}
+
+/// Everything one refinement pass computes.
+pub struct RefineOutcome {
+    /// Exact global coreness, indexed by global vertex id.
+    pub core: Vec<u32>,
+    pub stats: MergeStats,
+    /// Undirected global edge count (`Σ per-shard owned arcs / 2`).
+    pub num_edges: u64,
+    /// Distinct global boundary edges.
+    pub boundary_edges: u64,
+}
+
+/// One flush's dispatch: per-shard routed batches plus accounting.
+pub struct RoutePlan {
+    pub per_shard: Vec<RoutedBatch>,
+    /// Shards that received new owned vertices or edits.
+    pub touched: Vec<bool>,
+    /// Insert edits in the batch — the warm-start slack (each inserted
+    /// edge can raise any coreness by at most one).
+    pub inserts: u32,
+}
+
+/// Route a coalesced batch: grow the owner map exactly like a single
+/// index grows its vertex set (intermediate ids exist too, owned by
+/// [`hash_owner`]), then dispatch each edit to its endpoint-owner
+/// shard(s) with the first endpoint's owner as the primary copy.
+pub fn route(owner: &mut Vec<u32>, num_shards: usize, batch: &[EdgeEdit]) -> RoutePlan {
+    let num_shards = num_shards.max(1);
+    let mut per_shard: Vec<RoutedBatch> = vec![RoutedBatch::default(); num_shards];
+    let mut touched = vec![false; num_shards];
+    let mut new_n = owner.len();
+    for e in batch {
+        let (_, hi) = e.endpoints();
+        new_n = new_n.max(hi as usize + 1);
+    }
+    for v in owner.len()..new_n {
+        let s = hash_owner(v as VertexId, num_shards);
+        owner.push(s);
+        per_shard[s as usize].new_owned.push(v as VertexId);
+        touched[s as usize] = true;
+    }
+    let mut inserts = 0u32;
+    for &e in batch {
+        if e.is_insert() {
+            inserts = inserts.saturating_add(1);
+        }
+        let (u, v) = e.endpoints();
+        let a = owner[u as usize] as usize;
+        let b = owner[v as usize] as usize;
+        for &(s, primary) in &[(a, true), (b, false)] {
+            if !primary && s == a {
+                continue; // shard-internal edit: dispatch once
+            }
+            per_shard[s].edits.push((e, primary));
+            touched[s] = true;
+        }
+    }
+    RoutePlan {
+        per_shard,
+        touched,
+        inserts,
+    }
+}
+
+/// One exchange round on every shard, dirty sweeps running concurrently.
+/// `threads` bounds the worker count (1 falls back to in-place calls).
+fn round_all(
+    backends: &[Arc<dyn ShardBackend>],
+    updates: &[Vec<(VertexId, u32)>],
+    threads: usize,
+) -> Vec<Result<RefineRound>> {
+    let k = backends.len();
+    let workers = threads.max(1).min(k.max(1));
+    if workers <= 1 || k <= 1 {
+        return backends
+            .iter()
+            .zip(updates)
+            .map(|(b, u)| b.refine_round(u))
+            .collect();
+    }
+    let mut out: Vec<Option<Result<RefineRound>>> = (0..k).map(|_| None).collect();
+    let per = k.div_ceil(workers);
+    crossbeam_utils::thread::scope(|scope| {
+        for ((bs, us), os) in backends
+            .chunks(per)
+            .zip(updates.chunks(per))
+            .zip(out.chunks_mut(per))
+        {
+            scope.spawn(move |_| {
+                for ((b, u), o) in bs.iter().zip(us).zip(os.iter_mut()) {
+                    *o = Some(b.refine_round(u));
+                }
+            });
+        }
+    })
+    .expect("refine sweep worker panicked");
+    out.into_iter()
+        .map(|o| o.expect("uncovered shard in refine round"))
+        .collect()
+}
+
+/// Run the distributed h-index fixpoint over `backends` and commit the
+/// result at `cluster_epoch`. `n` is the global vertex count; `slack`
+/// warm-starts estimates from each shard's committed coreness (pass
+/// `None` for the cold, degree-initialised pass of an initial build).
+pub fn refine(
+    backends: &[Arc<dyn ShardBackend>],
+    n: usize,
+    slack: Option<u32>,
+    cluster_epoch: u64,
+    threads: usize,
+) -> Result<RefineOutcome> {
+    let mut mailbox = vec![0u32; n];
+    let mut stats = MergeStats::default();
+    let mut arcs = 0u64;
+    let mut boundary_arcs = 0u64;
+    let mut ghost_lists: Vec<Vec<VertexId>> = Vec::with_capacity(backends.len());
+    for b in backends {
+        let init = b.refine_start(slack)?;
+        for &(v, e) in &init.owned_est {
+            let Some(slot) = mailbox.get_mut(v as usize) else {
+                bail!("shard {} reports owned vertex {v} outside 0..{n}", b.id());
+            };
+            *slot = e;
+        }
+        arcs += init.arcs;
+        boundary_arcs += init.boundary_arcs;
+        ghost_lists.push(init.ghosts);
+    }
+    // `changed[v]` — did v's mailbox value change since the last round?
+    // Round 1 delivers every ghost its owner's initial estimate.
+    let mut changed = vec![true; n];
+    loop {
+        stats.rounds += 1;
+        let updates: Vec<Vec<(VertexId, u32)>> = ghost_lists
+            .iter()
+            .map(|gl| {
+                gl.iter()
+                    .filter(|&&v| (v as usize) < n && changed[v as usize])
+                    .map(|&v| (v, mailbox[v as usize]))
+                    .collect()
+            })
+            .collect();
+        let replies = round_all(backends, &updates, threads);
+        for c in changed.iter_mut() {
+            *c = false;
+        }
+        let mut any = false;
+        for (i, reply) in replies.into_iter().enumerate() {
+            let r = reply?;
+            stats.sweeps += r.sweeps;
+            stats.boundary_updates += r.ghost_updates;
+            for (v, e) in r.changed {
+                let Some(slot) = mailbox.get_mut(v as usize) else {
+                    bail!("shard {} refined vertex {v} outside 0..{n}", backends[i].id());
+                };
+                // estimates only ever decrease; rejecting anything else
+                // keeps the loop terminating even against a misbehaving
+                // remote shard
+                if e < *slot {
+                    *slot = e;
+                    changed[v as usize] = true;
+                    any = true;
+                }
+            }
+        }
+        if !any {
+            break;
+        }
+    }
+    for b in backends {
+        b.refine_commit(cluster_epoch)?;
+    }
+    Ok(RefineOutcome {
+        core: mailbox,
+        stats,
+        num_edges: arcs / 2,
+        boundary_edges: boundary_arcs / 2,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::gen;
+    use crate::service::batch::BatchConfig;
+    use crate::shard::backend::LocalShard;
+    use crate::shard::partition::{partition, PartitionStrategy};
+
+    fn backends(g: &crate::graph::CsrGraph, k: usize) -> Vec<Arc<dyn ShardBackend>> {
+        partition(g, k, PartitionStrategy::Hash)
+            .shards
+            .iter()
+            .map(|p| {
+                Arc::new(LocalShard::from_plan(
+                    "t",
+                    p,
+                    BatchConfig {
+                        threads: 1,
+                        ..BatchConfig::default()
+                    },
+                )) as Arc<dyn ShardBackend>
+            })
+            .collect()
+    }
+
+    #[test]
+    fn refine_reaches_the_oracle_cold_and_warm() {
+        let g = gen::erdos_renyi(120, 420, 11);
+        let want = bz_coreness(&g);
+        for threads in [1, 4] {
+            let bs = backends(&g, 4);
+            let cold = refine(&bs, g.num_vertices(), None, 0, threads).unwrap();
+            assert_eq!(cold.core, want, "cold, {threads} threads");
+            assert_eq!(cold.num_edges, g.num_edges());
+            assert!(cold.stats.rounds >= 1 && cold.stats.sweeps >= 4);
+            // warm restart from the committed pass: slack 0, same answer
+            let warm = refine(&bs, g.num_vertices(), Some(0), 1, threads).unwrap();
+            assert_eq!(warm.core, want, "warm, {threads} threads");
+            // warm start should not sweep harder than the cold pass
+            assert!(warm.stats.sweeps <= cold.stats.sweeps);
+        }
+    }
+
+    #[test]
+    fn route_grows_owner_map_and_dispatches_once() {
+        let mut owner = vec![0u32, 1, 0, 1];
+        let plan = route(
+            &mut owner,
+            2,
+            &[
+                EdgeEdit::Insert(0, 2), // internal to shard 0
+                EdgeEdit::Insert(0, 1), // boundary: two copies, one primary
+                EdgeEdit::Insert(3, 6), // grows vertex set to 7
+            ],
+        );
+        assert_eq!(owner.len(), 7);
+        assert_eq!(plan.inserts, 3);
+        let copies: usize = plan.per_shard.iter().map(|b| b.edits.len()).sum();
+        let primaries: usize = plan
+            .per_shard
+            .iter()
+            .flat_map(|b| b.edits.iter())
+            .filter(|&&(_, p)| p)
+            .count();
+        assert_eq!(primaries, 3);
+        assert!(copies >= 4 && copies <= 6, "boundary edits ship twice");
+        let new_owned: usize = plan.per_shard.iter().map(|b| b.new_owned.len()).sum();
+        assert_eq!(new_owned, 3); // vertices 4, 5, 6
+        assert!(plan.touched.iter().any(|&t| t));
+    }
+}

@@ -1,6 +1,7 @@
-//! The sharded core index: one epoch-versioned [`CoreIndex`] per shard, a
-//! router that fans queries out and merges per-shard answers, and the
-//! boundary refinement that makes the merged coreness *exact*.
+//! The sharded core index: one epoch-versioned [`CoreIndex`] per shard
+//! behind the [`ShardBackend`] interface, a router that fans queries out
+//! and merges per-shard answers, and the boundary refinement that makes
+//! the merged coreness *exact*.
 //!
 //! # Why merged answers are exact
 //!
@@ -8,14 +9,17 @@
 //! a lower bound on global coreness — ghost vertices under-report their
 //! degree. The merge therefore runs the distributed h-index fixpoint
 //! (Montresor et al., the streaming/partitioned k-core line of work): every
-//! owned vertex starts from its *global* degree (exact in our partitions —
-//! owned vertices keep their full adjacency), each shard sweeps
-//! `est[v] ← min(est[v], H(est[N(v)]))` to a local fixpoint, and the
-//! router exchanges boundary-vertex estimates between rounds. Estimates
-//! are always upper bounds and only decrease, so the iteration terminates;
-//! at the global fixpoint `est[v] ≤ H(est[N(v)])` for every vertex, which
-//! (with the upper-bound invariant) forces `est == coreness` — the same
-//! argument as the Index2core paradigm, distributed across shards.
+//! owned vertex starts from a *global upper bound* (its degree on a cold
+//! pass; its previous exact coreness plus the batch's insert count on a
+//! warm pass — each inserted edge raises any coreness by at most one),
+//! each shard sweeps `est[v] ← min(est[v], H(est[N(v)]))` to a local
+//! fixpoint, and the router exchanges boundary-vertex estimates between
+//! rounds ([`crate::shard::router::refine`]; dirty shards sweep
+//! concurrently on the batch thread pool). Estimates are always upper
+//! bounds and only decrease, so the iteration terminates; at the global
+//! fixpoint `est[v] ≤ H(est[N(v)])` for every vertex, which (with the
+//! upper-bound invariant) forces `est == coreness` — the same argument as
+//! the Index2core paradigm, distributed across shards.
 //!
 //! The number of exchange rounds and refreshed boundary values is reported
 //! per flush ([`MergeStats`]) and measured by `benches/shard_scaling.rs`.
@@ -29,29 +33,17 @@
 //! `CoreIndex` epochs advance independently (one per flush that touched
 //! the shard) and are what [`super::snapshot`] ships to replicas.
 
-use super::partition::{hash_owner, partition, PartitionStrategy};
-use crate::core::hindex::{hindex_capped, HindexScratch};
+use super::backend::{LocalShard, ShardBackend};
+use super::partition::{partition, PartitionStrategy};
+use super::router::{refine, route, MergeStats, RefineOutcome};
 use crate::core::maintenance::EdgeEdit;
-use crate::core::Hybrid;
 use crate::graph::{CsrGraph, GraphBuilder, VertexId};
 use crate::service::batch::{coalesce, BatchConfig};
 use crate::service::index::{CoreIndex, CoreSnapshot};
 use crate::util::timer::Timer;
-use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
-
-/// What one boundary-refinement (merge) pass did.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct MergeStats {
-    /// Global exchange rounds until the fixpoint.
-    pub rounds: usize,
-    /// Shard-local sweep passes (a shard sweeps only when dirty).
-    pub sweeps: usize,
-    /// Ghost-copy refreshes that actually changed a value.
-    pub boundary_updates: u64,
-}
 
 /// One shard's published slice of the merged decomposition.
 #[derive(Clone, Debug)]
@@ -76,46 +68,6 @@ struct Published {
     /// `slot[v]` = index of `v` inside its owner's view.
     slot: Vec<u32>,
     merge: MergeStats,
-    boundary_edges: u64,
-}
-
-/// Writer-side state of one shard.
-struct Shard {
-    id: usize,
-    index: Arc<CoreIndex>,
-    /// local id → global id.
-    globals: Vec<VertexId>,
-    /// global id → local id.
-    locals: HashMap<VertexId, u32>,
-    /// Local ids owned by this shard.
-    owned_locals: Vec<u32>,
-}
-
-impl Shard {
-    /// Local id of `v`, registering it as a new local (ghost or owned —
-    /// the caller maintains `owned_locals`) if unseen.
-    fn local_id(&mut self, v: VertexId) -> u32 {
-        if let Some(&l) = self.locals.get(&v) {
-            return l;
-        }
-        let l = self.globals.len() as u32;
-        self.globals.push(v);
-        self.locals.insert(v, l);
-        l
-    }
-}
-
-struct WriterState {
-    owner: Vec<u32>,
-    shards: Vec<Shard>,
-}
-
-/// Everything one refinement pass computes.
-struct RefineResult {
-    /// Exact global coreness, indexed by global vertex id.
-    core: Vec<u32>,
-    stats: MergeStats,
-    num_edges: u64,
     boundary_edges: u64,
 }
 
@@ -150,12 +102,17 @@ impl ShardedOutcome {
 }
 
 /// A partitioned, epoch-versioned core index with exact merged answers.
+/// All shards are in-process [`LocalShard`]s; the multi-host variant
+/// with the same merge is [`crate::cluster::ClusterIndex`].
 pub struct ShardedIndex {
     name: String,
     strategy: PartitionStrategy,
     num_shards: usize,
     cfg: BatchConfig,
-    state: Mutex<WriterState>,
+    shards: Vec<Arc<LocalShard>>,
+    backends: Vec<Arc<dyn ShardBackend>>,
+    /// `owner[v]` = shard owning global vertex `v` (grown per flush).
+    owner: Mutex<Vec<u32>>,
     published: RwLock<Arc<Published>>,
     epoch: AtomicU64,
     /// Per-epoch assembled-global-CSR cache (structure queries).
@@ -178,36 +135,26 @@ impl ShardedIndex {
         let name = name.into();
         let num_shards = num_shards.max(1);
         let plan = partition(g, num_shards, strategy);
-        let mut shards = Vec::with_capacity(num_shards);
-        for p in plan.shards {
-            let mut globals = p.owned.clone();
-            globals.extend_from_slice(&p.ghosts);
-            let locals: HashMap<VertexId, u32> = globals
-                .iter()
-                .enumerate()
-                .map(|(i, &v)| (v, i as u32))
-                .collect();
-            let owned_locals: Vec<u32> = (0..p.owned.len() as u32).collect();
-            shards.push(Shard {
-                id: p.id,
-                index: Arc::new(CoreIndex::new(format!("{name}/shard{}", p.id), &p.subgraph)),
-                globals,
-                locals,
-                owned_locals,
-            });
-        }
-        let state = WriterState {
-            owner: plan.owner,
-            shards,
-        };
-        let refined = Self::refine(&state);
-        let published = Self::build_published(&state, 0, refined);
+        let shards: Vec<Arc<LocalShard>> = plan
+            .shards
+            .iter()
+            .map(|p| Arc::new(LocalShard::from_plan(&name, p, cfg.clone())))
+            .collect();
+        let backends: Vec<Arc<dyn ShardBackend>> = shards
+            .iter()
+            .map(|s| s.clone() as Arc<dyn ShardBackend>)
+            .collect();
+        let refined = refine(&backends, plan.owner.len(), None, 0, cfg.threads)
+            .expect("local refinement cannot fail");
+        let published = Self::build_published(&plan.owner, &shards, 0, refined);
         Self {
             name,
             strategy,
             num_shards,
             cfg,
-            state: Mutex::new(state),
+            shards,
+            backends,
+            owner: Mutex::new(plan.owner),
             published: RwLock::new(Arc::new(published)),
             epoch: AtomicU64::new(0),
             graph_cache: Mutex::new(None),
@@ -325,12 +272,12 @@ impl ShardedIndex {
     /// A shard's own epoch-versioned index — what snapshot shipping
     /// serialises for replicas.
     pub fn shard_index(&self, shard: usize) -> Option<Arc<CoreIndex>> {
-        self.state
-            .lock()
-            .unwrap()
-            .shards
-            .get(shard)
-            .map(|s| s.index.clone())
+        self.shards.get(shard).map(|s| s.index())
+    }
+
+    /// The shard backends (trait view) — what the router refines over.
+    pub fn shard_backends(&self) -> &[Arc<dyn ShardBackend>] {
+        &self.backends
     }
 
     /// Enqueue one edit; returns the pending count after the push.
@@ -346,7 +293,8 @@ impl ShardedIndex {
 
     /// Drain pending edits, route them to their owner shards, apply each
     /// shard's batch through the incremental-vs-recompute pipeline, then
-    /// refine boundary estimates and publish one merged epoch.
+    /// refine boundary estimates (warm-started from the previous epoch)
+    /// and publish one merged epoch.
     pub fn flush(&self) -> ShardedOutcome {
         let _in_flight = self.flush_lock.lock().unwrap();
         let edits: Vec<EdgeEdit> = std::mem::take(&mut *self.pending.lock().unwrap());
@@ -366,70 +314,35 @@ impl ShardedIndex {
         let timer = Timer::start();
         let batch = coalesce(&edits);
         let applied = batch.len();
-        let mut state = self.state.lock().unwrap();
-
-        // 1. Grow the global vertex set exactly like a single index does
-        //    (`ensure_vertex(max endpoint)`: intermediate ids exist too).
-        let mut new_n = state.owner.len();
-        for e in &batch {
-            let (_, hi) = e.endpoints();
-            new_n = new_n.max(hi as usize + 1);
-        }
-        let mut touched = vec![false; state.shards.len()];
-        for v in state.owner.len()..new_n {
-            let s = hash_owner(v as VertexId, self.num_shards);
-            state.owner.push(s);
-            let shard = &mut state.shards[s as usize];
-            let l = shard.local_id(v as VertexId);
-            shard.owned_locals.push(l);
-            touched[s as usize] = true;
-        }
-
-        // 2. Route each edit to its endpoint-owner shard(s), translating
-        //    to local ids. The owner of the lower endpoint is "primary"
-        //    and accounts for the edit's `changed` bit.
-        let mut per_shard: Vec<Vec<(EdgeEdit, bool)>> = vec![Vec::new(); state.shards.len()];
-        for &e in &batch {
-            let (u, v) = e.endpoints();
-            let a = state.owner[u as usize] as usize;
-            let b = state.owner[v as usize] as usize;
-            for &(s, primary) in &[(a, true), (b, false)] {
-                if !primary && s == a {
-                    continue; // shard-internal edit: dispatch once
-                }
-                let shard = &mut state.shards[s];
-                let lu = shard.local_id(u);
-                let lv = shard.local_id(v);
-                let local = match e {
-                    EdgeEdit::Insert(_, _) => EdgeEdit::Insert(lu, lv),
-                    EdgeEdit::Delete(_, _) => EdgeEdit::Delete(lu, lv),
-                };
-                per_shard[s].push((local, primary));
-                touched[s] = true;
-            }
-        }
-
-        // 3. Apply per-shard batches (one shard epoch per touched shard).
+        let mut owner = self.owner.lock().unwrap();
+        let plan = route(&mut owner, self.num_shards, &batch);
         let mut changed = 0usize;
         let mut recomputed_shards = 0usize;
-        for (s, shard_edits) in per_shard.iter().enumerate() {
-            if !touched[s] {
+        for (s, backend) in self.backends.iter().enumerate() {
+            if !plan.touched[s] {
                 continue;
             }
-            let (c, recomputed) = Self::apply_to_shard(&state.shards[s], shard_edits, &self.cfg);
-            changed += c;
-            if recomputed {
+            let out = backend
+                .apply(&plan.per_shard[s])
+                .expect("local shard apply cannot fail");
+            changed += out.changed;
+            if out.recomputed {
                 recomputed_shards += 1;
             }
         }
-
-        // 4. Merge: boundary refinement, then publish the new epoch.
+        let epoch = self.epoch.load(Ordering::SeqCst) + 1;
         let merge_timer = Timer::start();
-        let refined = Self::refine(&state);
+        let refined = refine(
+            &self.backends,
+            owner.len(),
+            Some(plan.inserts),
+            epoch,
+            self.cfg.threads,
+        )
+        .expect("local refinement cannot fail");
         let merge_elapsed = merge_timer.elapsed();
         let merge = refined.stats;
-        let epoch = self.epoch.load(Ordering::SeqCst) + 1;
-        let published = Self::build_published(&state, epoch, refined);
+        let published = Self::build_published(&owner, &self.shards, epoch, refined);
         let snapshot = published.global.clone();
         *self.published.write().unwrap() = Arc::new(published);
         self.epoch.store(epoch, Ordering::SeqCst);
@@ -447,194 +360,44 @@ impl ShardedIndex {
         }
     }
 
-    /// One shard's batch: grow the local vertex set, then either per-edit
-    /// incremental maintenance or structural edits + full recompute — the
-    /// same crossover policy as `service::batch::apply_batch`.
-    fn apply_to_shard(
-        shard: &Shard,
-        edits: &[(EdgeEdit, bool)],
-        cfg: &BatchConfig,
-    ) -> (usize, bool) {
-        let last_local = shard.globals.len().checked_sub(1).map(|l| l as u32);
-        let ((changed, recomputed), _snap) = shard.index.update(|dc| {
-            if let Some(last) = last_local {
-                dc.ensure_vertex(last);
-            }
-            let threshold = cfg.recompute_threshold(dc.num_edges());
-            let mut changed = 0usize;
-            if !edits.is_empty() && edits.len() >= threshold {
-                for &(e, primary) in edits {
-                    let did = match e {
-                        EdgeEdit::Insert(u, v) => dc.insert_edge_structural(u, v),
-                        EdgeEdit::Delete(u, v) => dc.delete_edge_structural(u, v),
-                    };
-                    if did && primary {
-                        changed += 1;
-                    }
-                }
-                dc.recompute_with(&Hybrid::default(), cfg.threads);
-                (changed, true)
-            } else {
-                for &(e, primary) in edits {
-                    if dc.apply(e) && primary {
-                        changed += 1;
-                    }
-                }
-                (changed, false)
-            }
-        });
-        (changed, recomputed)
-    }
-
-    /// The distributed h-index fixpoint over all shards (see module docs).
-    fn refine(state: &WriterState) -> RefineResult {
-        let n = state.owner.len();
-        let num_shards = state.shards.len();
-        let graphs: Vec<Arc<CsrGraph>> = state.shards.iter().map(|s| s.index.graph()).collect();
-
-        // Per-shard ghost lists + edge accounting in one setup pass.
-        let mut ghost_locals: Vec<Vec<u32>> = Vec::with_capacity(num_shards);
-        let mut internal_arcs = 0u64;
-        let mut boundary_arcs = 0u64;
-        for (shard, g) in state.shards.iter().zip(&graphs) {
-            let sid = shard.id as u32;
-            let ghosts: Vec<u32> = (0..g.num_vertices() as u32)
-                .filter(|&l| state.owner[shard.globals[l as usize] as usize] != sid)
-                .collect();
-            let is_ghost: Vec<bool> = {
-                let mut m = vec![false; g.num_vertices()];
-                for &l in &ghosts {
-                    m[l as usize] = true;
-                }
-                m
-            };
-            for &l in &shard.owned_locals {
-                for &w in g.neighbors(l) {
-                    if is_ghost[w as usize] {
-                        boundary_arcs += 1;
-                    } else {
-                        internal_arcs += 1;
-                    }
-                }
-            }
-            ghost_locals.push(ghosts);
-        }
-
-        // Estimates: owned vertices start at their (global == local)
-        // degree; ghost copies are overwritten from the mailbox before the
-        // first sweep. The mailbox holds every vertex's current estimate
-        // per its owner.
-        let mut est: Vec<Vec<u32>> = graphs
-            .iter()
-            .map(|g| (0..g.num_vertices() as u32).map(|l| g.degree(l)).collect())
-            .collect();
-        let mut mailbox = vec![0u32; n];
-        for (shard, e) in state.shards.iter().zip(&est) {
-            for &l in &shard.owned_locals {
-                mailbox[shard.globals[l as usize] as usize] = e[l as usize];
-            }
-        }
-
-        let mut stats = MergeStats::default();
-        let mut scratch = HindexScratch::new();
-        let mut dirty = vec![true; num_shards];
-        loop {
-            stats.rounds += 1;
-            // Exchange: pull each ghost copy from its owner's estimate.
-            for (si, shard) in state.shards.iter().enumerate() {
-                let e = &mut est[si];
-                for &l in &ghost_locals[si] {
-                    let v = shard.globals[l as usize];
-                    let nv = mailbox[v as usize];
-                    if e[l as usize] != nv {
-                        e[l as usize] = nv;
-                        stats.boundary_updates += 1;
-                        dirty[si] = true;
-                    }
-                }
-            }
-            // Sweep each dirty shard to its local fixpoint, then publish
-            // its owned estimates back into the mailbox.
-            let mut any = false;
-            for (si, shard) in state.shards.iter().enumerate() {
-                if !dirty[si] {
-                    continue;
-                }
-                dirty[si] = false;
-                any = true;
-                stats.sweeps += 1;
-                let g = &graphs[si];
-                let e = &mut est[si];
-                loop {
-                    let mut changed = false;
-                    for &l in &shard.owned_locals {
-                        let cap = e[l as usize];
-                        if cap == 0 {
-                            continue;
-                        }
-                        let h = {
-                            let vals = &*e;
-                            hindex_capped(
-                                g.neighbors(l).iter().map(|&w| vals[w as usize]),
-                                cap,
-                                &mut scratch,
-                            )
-                        };
-                        if h < cap {
-                            e[l as usize] = h;
-                            changed = true;
-                        }
-                    }
-                    if !changed {
-                        break;
-                    }
-                }
-                for &l in &shard.owned_locals {
-                    mailbox[shard.globals[l as usize] as usize] = e[l as usize];
-                }
-            }
-            if !any {
-                break;
-            }
-        }
-
-        RefineResult {
-            core: mailbox,
-            stats,
-            num_edges: (internal_arcs + boundary_arcs) / 2,
-            boundary_edges: boundary_arcs / 2,
-        }
-    }
-
     /// Assemble the published read-side state for `epoch`.
-    fn build_published(state: &WriterState, epoch: u64, refined: RefineResult) -> Published {
-        let RefineResult {
+    fn build_published(
+        owner: &[u32],
+        shards: &[Arc<LocalShard>],
+        epoch: u64,
+        refined: RefineOutcome,
+    ) -> Published {
+        let RefineOutcome {
             core,
             stats,
             num_edges,
             boundary_edges,
         } = refined;
         let k_max = core.iter().copied().max().unwrap_or(0);
+        // per-shard owned lists in ascending global order — the same
+        // order the shards themselves registered them in
+        let mut owned_lists: Vec<Vec<VertexId>> = vec![Vec::new(); shards.len()];
         let mut slot = vec![0u32; core.len()];
-        let mut views = Vec::with_capacity(state.shards.len());
-        for shard in &state.shards {
-            let owned: Vec<VertexId> = shard
-                .owned_locals
-                .iter()
-                .map(|&l| shard.globals[l as usize])
-                .collect();
-            let vcore: Vec<u32> = owned.iter().map(|&v| core[v as usize]).collect();
-            for (i, &v) in owned.iter().enumerate() {
-                slot[v as usize] = i as u32;
-            }
-            views.push(Arc::new(ShardView {
-                shard: shard.id,
-                epoch: shard.index.epoch(),
-                k_max: vcore.iter().copied().max().unwrap_or(0),
-                owned,
-                core: vcore,
-            }));
+        for (v, &s) in owner.iter().enumerate() {
+            let list = &mut owned_lists[s as usize];
+            slot[v] = list.len() as u32;
+            list.push(v as VertexId);
         }
+        let views: Vec<Arc<ShardView>> = shards
+            .iter()
+            .enumerate()
+            .map(|(s, shard)| {
+                let owned = std::mem::take(&mut owned_lists[s]);
+                let vcore: Vec<u32> = owned.iter().map(|&v| core[v as usize]).collect();
+                Arc::new(ShardView {
+                    shard: s,
+                    epoch: shard.index().epoch(),
+                    k_max: vcore.iter().copied().max().unwrap_or(0),
+                    owned,
+                    core: vcore,
+                })
+            })
+            .collect();
         Published {
             global: Arc::new(CoreSnapshot {
                 epoch,
@@ -643,7 +406,7 @@ impl ShardedIndex {
                 num_edges,
             }),
             views,
-            owner: Arc::new(state.owner.clone()),
+            owner: Arc::new(owner.to_vec()),
             slot,
             merge: stats,
             boundary_edges,
@@ -654,11 +417,11 @@ impl ShardedIndex {
     /// `CoreIndex::graph`, this is the one heavyweight read: it serialises
     /// with writers.
     pub fn graph(&self) -> Arc<CsrGraph> {
-        let state = self.state.lock().unwrap();
-        self.graph_locked(&state)
+        let owner = self.owner.lock().unwrap();
+        self.graph_locked(owner.len())
     }
 
-    fn graph_locked(&self, state: &WriterState) -> Arc<CsrGraph> {
+    fn graph_locked(&self, n: usize) -> Arc<CsrGraph> {
         let epoch = self.epoch.load(Ordering::SeqCst);
         let mut cache = self.graph_cache.lock().unwrap();
         if let Some((e, g)) = cache.as_ref() {
@@ -666,32 +429,28 @@ impl ShardedIndex {
                 return g.clone();
             }
         }
-        let g = Arc::new(Self::assemble_global(state, &self.name));
+        let g = Arc::new(self.assemble_global(n));
         *cache = Some((epoch, g.clone()));
         g
     }
 
     /// A mutually consistent (merged snapshot, assembled graph) pair.
     pub fn consistent_view(&self) -> (Arc<CoreSnapshot>, Arc<CsrGraph>) {
-        let state = self.state.lock().unwrap();
-        let g = self.graph_locked(&state);
+        let owner = self.owner.lock().unwrap();
+        let g = self.graph_locked(owner.len());
         (self.published.read().unwrap().global.clone(), g)
     }
 
     /// Union of shard subgraphs mapped back to global ids. Boundary edges
     /// exist in two shards; the builder's dedup collapses them.
-    fn assemble_global(state: &WriterState, name: &str) -> CsrGraph {
-        let mut b = GraphBuilder::new(state.owner.len());
-        for shard in &state.shards {
-            let g = shard.index.graph();
-            for &l in &shard.owned_locals {
-                let gu = shard.globals[l as usize];
-                for &w in g.neighbors(l) {
-                    b.add_edge(gu, shard.globals[w as usize]);
-                }
+    fn assemble_global(&self, n: usize) -> CsrGraph {
+        let mut b = GraphBuilder::new(n);
+        for shard in &self.shards {
+            for (u, v) in shard.owned_edges() {
+                b.add_edge(u, v);
             }
         }
-        b.build(name)
+        b.build(self.name.as_str())
     }
 }
 
@@ -823,5 +582,35 @@ mod tests {
         assert!(m.sweeps >= 4, "every shard sweeps at least once");
         assert!(sh.boundary_edges() > 0, "hash partition of ER must cut edges");
         assert_eq!(sh.shard_epochs(), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn warm_started_flushes_stay_exact_and_cheaper() {
+        // a long run of small batches: every flush after the first is
+        // warm-started; answers must track the oracle and the warm merge
+        // should not sweep more than a vertex-count-bounded cold pass
+        let g = crate::graph::gen::barabasi_albert(150, 3, 21);
+        let sh = ShardedIndex::new("ba", &g, 4, PartitionStrategy::Hash, cfg());
+        let mut rng = crate::util::rng::Rng::new(99);
+        for _ in 0..6 {
+            for _ in 0..4 {
+                let u = rng.below(150) as u32;
+                let v = rng.below(150) as u32;
+                if u != v {
+                    sh.submit(if rng.chance(0.5) {
+                        EdgeEdit::Insert(u, v)
+                    } else {
+                        EdgeEdit::Delete(u, v)
+                    });
+                }
+            }
+            let out = sh.flush();
+            if out.submitted == 0 {
+                continue;
+            }
+            let (snap, graph) = sh.consistent_view();
+            assert_eq!(snap.core, bz_coreness(&graph));
+            assert!(out.merge.rounds >= 1);
+        }
     }
 }

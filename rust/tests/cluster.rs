@@ -1,0 +1,338 @@
+//! Cluster-serving acceptance tests:
+//!
+//! 1. **Loopback cluster vs oracle** — a `ClusterIndex` whose shards are
+//!    split between the coordinator and remote `pico serve` loopback
+//!    servers returns coreness / members / histogram / degeneracy
+//!    answers byte-identical to a single `CoreIndex`, before and after
+//!    routed edit batches (flushed in lockstep with the single index).
+//! 2. **Fault paths** — replica failover on dead hosts and truncated
+//!    connections, stale-epoch replicas rejected by epoch-checked reads,
+//!    and snapshot-ship catch-up restoring them *without recomputing*.
+//! 3. **Multi-process equivalence** — the same pinning against real
+//!    `pico serve` child processes, plus graceful SIGTERM shutdown.
+
+use pico::cluster::{manifest_for, ClusterConfig, ClusterIndex, Primary, RemoteShard, ReplicaGroup};
+use pico::core::bz::bz_coreness;
+use pico::core::maintenance::EdgeEdit;
+use pico::graph::gen;
+use pico::service::{apply_batch, serve, BatchConfig, CoreIndex, CoreService, ServerHandle};
+use pico::shard::backend::{LocalShard, ShardBackend};
+use pico::shard::partition::{partition, PartitionStrategy};
+use pico::shard::router::refine;
+use pico::util::rng::Rng;
+use std::sync::Arc;
+
+fn cfg() -> BatchConfig {
+    BatchConfig {
+        threads: 1,
+        ..BatchConfig::default()
+    }
+}
+
+/// An in-process `pico serve` on a loopback port — "remote" to every
+/// `RemoteShard` that dials it.
+fn spawn_server() -> (Arc<CoreService>, ServerHandle, String) {
+    let svc = Arc::new(CoreService::new(cfg()));
+    let handle = serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    let addr = handle.addr().to_string();
+    (svc, handle, addr)
+}
+
+fn check_against_oracle(cl: &ClusterIndex, single: &CoreIndex) {
+    let want = single.snapshot();
+    let got = cl.snapshot();
+    assert_eq!(got.core, want.core, "merged snapshot must be byte-identical");
+    assert_eq!(got.epoch, want.epoch);
+    assert_eq!(got.num_edges, want.num_edges);
+    assert_eq!(cl.degeneracy(), want.degeneracy());
+    assert_eq!(cl.histogram_routed().unwrap(), want.histogram());
+    for v in 0..want.num_vertices() as u32 {
+        assert_eq!(cl.coreness_routed(v).unwrap(), want.coreness(v), "v{v}");
+    }
+    assert_eq!(
+        cl.coreness_routed(want.num_vertices() as u32).unwrap(),
+        None
+    );
+    for k in 0..=want.k_max + 1 {
+        assert_eq!(cl.members_routed(k).unwrap(), want.kcore_members(k), "k={k}");
+        assert_eq!(cl.kcore_size_routed(k).unwrap(), want.kcore_size(k), "k={k}");
+    }
+}
+
+#[test]
+fn loopback_cluster_matches_single_index_oracle() {
+    let g = gen::barabasi_albert(120, 3, 7);
+    let (_svc_a, _handle_a, addr_a) = spawn_server();
+    let (_svc_b, _handle_b, addr_b) = spawn_server();
+    // mixed topology: a local shard (with remote replicas on both
+    // servers) and one remote primary on each server
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = soc\nshards = 3\n\
+         [shard.0]\nprimary = local\nreplicas = {addr_a}, {addr_b}\n\
+         [shard.1]\nprimary = {addr_a}\n\
+         [shard.2]\nprimary = {addr_b}\n"
+    ))
+    .unwrap();
+    let cl = ClusterIndex::build(&g, &topo, cfg()).unwrap();
+    let single = CoreIndex::new("single", &g);
+    check_against_oracle(&cl, &single);
+
+    // routed edit batches in lockstep with the single index; ids may
+    // exceed |V| so the vertex set grows across hosts too
+    let mut rng = Rng::new(0xC1);
+    let mut n = g.num_vertices() as u64;
+    for round in 0..4 {
+        let mut edits = Vec::new();
+        while edits.len() < 10 {
+            let u = rng.below(n + 8) as u32;
+            let v = rng.below(n + 8) as u32;
+            if u == v {
+                continue;
+            }
+            edits.push(if rng.chance(0.6) {
+                EdgeEdit::Insert(u, v)
+            } else {
+                EdgeEdit::Delete(u, v)
+            });
+        }
+        for &e in &edits {
+            cl.submit(e);
+        }
+        let out = cl.flush().unwrap();
+        let single_out = apply_batch(&single, &edits, &cfg());
+        assert_eq!(out.snapshot.epoch, single_out.snapshot.epoch, "round {round}");
+        assert_eq!(out.snapshot.core, single_out.snapshot.core, "round {round}");
+        assert_eq!(out.applied, single_out.applied, "round {round}");
+        assert_eq!(out.changed, single_out.changed, "round {round}");
+        n = out.snapshot.num_vertices() as u64;
+        cl.sync_replicas().unwrap();
+        check_against_oracle(&cl, &single);
+    }
+    let (snap, graph) = cl.consistent_view().unwrap();
+    assert_eq!(snap.core, bz_coreness(&graph), "assembled graph vs BZ oracle");
+}
+
+#[test]
+fn replica_failover_and_stale_rejection() {
+    let g = gen::erdos_renyi(80, 200, 11);
+    let oracle = bz_coreness(&g);
+    let plan = partition(&g, 1, PartitionStrategy::Hash);
+    let local = Arc::new(LocalShard::from_plan("f", &plan.shards[0], cfg()));
+    let backends: Vec<Arc<dyn ShardBackend>> = vec![local.clone() as Arc<dyn ShardBackend>];
+    let refined = refine(&backends, g.num_vertices(), None, 0, 1).unwrap();
+    assert_eq!(refined.core, oracle);
+
+    let (_svc, _handle, addr) = spawn_server();
+    let live = Arc::new(RemoteShard::new(0, addr, "f/shard0"));
+    live.host(&manifest_for(&local, 1)).unwrap();
+    // reserved port: every dial is refused
+    let dead = Arc::new(RemoteShard::new(0, "127.0.0.1:1", "f/shard0"));
+    let group = ReplicaGroup::new(Primary::Local(local.clone()), vec![dead, live.clone()]);
+
+    for v in 0..g.num_vertices() as u32 {
+        let got = group.read(0, |b| b.refined_coreness(v)).unwrap();
+        assert_eq!(got, Some(oracle[v as usize]), "v{v}");
+    }
+    assert!(group.failovers() > 0, "dead replica must fail over");
+    assert_eq!(group.stale_reads(), 0);
+
+    // advance the primary one committed epoch: the live replica is now
+    // stale, must be rejected, and answers still come out correct
+    refine(&backends, g.num_vertices(), Some(0), 1, 1).unwrap();
+    let before = group.stale_reads();
+    for v in 0..20u32 {
+        let got = group.read(1, |b| b.refined_coreness(v)).unwrap();
+        assert_eq!(got, Some(oracle[v as usize]));
+    }
+    assert!(group.stale_reads() > before, "stale replies must be rejected");
+
+    // snapshot catch-up: after re-shipping the committed manifest the
+    // live replica serves epoch-1 reads without further rejections
+    live.host(&manifest_for(&local, 1)).unwrap();
+    let frozen = group.stale_reads();
+    for v in 0..20u32 {
+        let got = group.read(1, |b| b.refined_coreness(v)).unwrap();
+        assert_eq!(got, Some(oracle[v as usize]));
+    }
+    assert_eq!(group.stale_reads(), frozen);
+}
+
+#[test]
+fn truncated_and_garbage_connections_error_cleanly() {
+    use std::io::{Read, Write};
+    use std::net::TcpListener;
+
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let fake = std::thread::spawn(move || {
+        // first connection truncates a reply frame mid-body; the second
+        // answers the upgrade with garbage
+        for (i, stream) in listener.incoming().take(2).enumerate() {
+            let mut s = stream.unwrap();
+            let mut buf = [0u8; 256];
+            let _ = s.read(&mut buf); // swallow "BINARY\n"
+            if i == 0 {
+                let _ = s.write_all(b"OK binary\n");
+                let _ = s.read(&mut buf); // the USE frame
+                // length prefix promises 100 bytes; ship 4 and close
+                let _ = s.write_all(&100u32.to_le_bytes());
+                let _ = s.write_all(b"oops");
+            } else {
+                let _ = s.write_all(b"garbage\n");
+            }
+        }
+    });
+    let truncated = RemoteShard::new(0, addr.clone(), "x/shard0");
+    assert!(truncated.status().is_err(), "truncated reply must error");
+    let garbage = RemoteShard::new(0, addr, "x/shard0");
+    assert!(garbage.status().is_err(), "bad upgrade ack must error");
+    fake.join().unwrap();
+}
+
+#[test]
+fn stale_replicas_catch_up_via_snapshot_ship() {
+    let g = gen::barabasi_albert(100, 3, 13);
+    let (_svc, _handle, addr) = spawn_server();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = cc\nshards = 2\n\
+         [shard.0]\nprimary = local\nreplicas = {addr}\n\
+         [shard.1]\nprimary = local\n"
+    ))
+    .unwrap();
+    let cl = ClusterIndex::build(&g, &topo, cfg()).unwrap();
+    let st = cl.status();
+    assert_eq!(st[0].replicas[0].1.as_ref().unwrap().cluster_epoch, 0);
+
+    // flush without syncing: the replica misses epoch 1
+    for i in 0..6u32 {
+        cl.submit(EdgeEdit::Insert(i, i + 40));
+    }
+    cl.flush().unwrap();
+    let stale_before = cl.groups()[0].stale_reads();
+    for v in 0..g.num_vertices() as u32 {
+        cl.coreness_routed(v).unwrap();
+    }
+    assert!(
+        cl.groups()[0].stale_reads() > stale_before,
+        "epoch-checked reads must reject the stale replica"
+    );
+    assert_eq!(cl.status()[0].replicas[0].1.as_ref().unwrap().cluster_epoch, 0);
+
+    // snapshot catch-up
+    assert_eq!(cl.sync_replicas().unwrap(), 1);
+    let rs = cl.status();
+    let replica = rs[0].replicas[0].1.as_ref().unwrap();
+    assert_eq!(replica.cluster_epoch, 1, "replica caught up to the flush epoch");
+    // hydrated, not recomputed: the replica resumes at the primary's own
+    // shard epoch (a recompute would have published a fresh one)
+    assert_eq!(replica.epoch, rs[0].primary.as_ref().unwrap().epoch);
+
+    // reads at the new epoch land on the replica with no rejections
+    let frozen = cl.groups()[0].stale_reads();
+    let (snap, graph) = cl.consistent_view().unwrap();
+    assert_eq!(snap.core, bz_coreness(&graph));
+    for v in 0..snap.num_vertices() as u32 {
+        assert_eq!(cl.coreness_routed(v).unwrap(), snap.coreness(v));
+    }
+    assert_eq!(cl.groups()[0].stale_reads(), frozen);
+    // everything already in sync: nothing ships
+    assert_eq!(cl.sync_replicas().unwrap(), 0);
+}
+
+/// Kills the `pico serve` child even when an assertion fails first.
+#[cfg(unix)]
+struct ChildGuard(std::process::Child);
+
+#[cfg(unix)]
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        let _ = self.0.kill();
+        let _ = self.0.wait();
+    }
+}
+
+#[cfg(unix)]
+fn spawn_pico_serve() -> (
+    ChildGuard,
+    std::io::BufReader<std::process::ChildStdout>,
+    String,
+) {
+    use std::io::BufRead;
+    use std::process::{Command, Stdio};
+
+    let mut child = Command::new(env!("CARGO_BIN_EXE_pico"))
+        .args(["serve", "--addr", "127.0.0.1:0", "--dataset", "g1", "--threads", "1"])
+        .stdout(Stdio::piped())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawning pico serve");
+    let stdout = child.stdout.take().unwrap();
+    let mut reader = std::io::BufReader::new(stdout);
+    let mut addr = String::new();
+    for _ in 0..50 {
+        let mut line = String::new();
+        if reader.read_line(&mut line).unwrap() == 0 {
+            break;
+        }
+        if line.starts_with("serving") {
+            if let Some(rest) = line.split(" on ").nth(1) {
+                addr = rest.split_whitespace().next().unwrap_or("").to_string();
+                break;
+            }
+        }
+    }
+    assert!(!addr.is_empty(), "child never printed its bound address");
+    (ChildGuard(child), reader, addr)
+}
+
+#[cfg(unix)]
+#[test]
+fn multiprocess_cluster_equivalence_and_graceful_shutdown() {
+    use std::io::Read;
+
+    let g = gen::erdos_renyi(90, 260, 17);
+    let (mut child_a, mut out_a, addr_a) = spawn_pico_serve();
+    let (child_b, _out_b, addr_b) = spawn_pico_serve();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = mp\nshards = 2\n\
+         [shard.0]\nprimary = {addr_a}\nreplicas = {addr_b}\n\
+         [shard.1]\nprimary = {addr_b}\n"
+    ))
+    .unwrap();
+    let cl = ClusterIndex::build(&g, &topo, cfg()).unwrap();
+    let single = CoreIndex::new("single", &g);
+    check_against_oracle(&cl, &single);
+
+    // one routed batch across both processes (including vertex growth)
+    let edits = vec![
+        EdgeEdit::Insert(0, 1),
+        EdgeEdit::Insert(2, 95),
+        EdgeEdit::Delete(3, 4),
+    ];
+    for &e in &edits {
+        cl.submit(e);
+    }
+    let out = cl.flush().unwrap();
+    let single_out = apply_batch(&single, &edits, &cfg());
+    assert_eq!(out.snapshot.core, single_out.snapshot.core);
+    assert_eq!(out.snapshot.epoch, single_out.snapshot.epoch);
+    cl.sync_replicas().unwrap();
+    check_against_oracle(&cl, &single);
+
+    // graceful shutdown: SIGTERM drains and exits 0, announcing it
+    let pid = child_a.0.id().to_string();
+    let killed = std::process::Command::new("kill")
+        .args(["-TERM", &pid])
+        .status()
+        .unwrap();
+    assert!(killed.success());
+    let status = child_a.0.wait().unwrap();
+    assert!(status.success(), "pico serve must exit cleanly on SIGTERM");
+    let mut rest = String::new();
+    out_a.read_to_string(&mut rest).unwrap();
+    assert!(
+        rest.contains("draining"),
+        "shutdown must announce the drain, got: {rest}"
+    );
+    drop(child_b);
+}
