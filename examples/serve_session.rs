@@ -34,10 +34,19 @@
 //! ```
 //!
 //! `FLUSH` on the cluster routes edits to owner shards, runs the
-//! boundary-exchange merge across hosts, and re-ships stale replicas
-//! (`synced=`); `CORENESS` reads fan out over the shard's replica group
-//! with epoch-checked failover. ctrl-c / SIGTERM on either host drains
-//! connections and flushes pending edits before exit.
+//! boundary-exchange merge across hosts, journals the epoch's per-shard
+//! deltas, and returns — it never blocks on replicas. Replica
+//! convergence is the background sync daemon's job (`pico serve
+//! --sync-interval`, prints `replica-sync ... synced=` lines): a
+//! lagging replica is caught up with a `SHARDDELTA` chain (the journal's
+//! routed batches + refined-coreness diffs — bytes scale with the edits,
+//! not the graph), falling back to a full `SHARDHOST` manifest re-ship
+//! on any gap or corruption. `CORENESS` reads fan out over the shard's
+//! replica group with epoch-checked failover. ctrl-c / SIGTERM on
+//! either host drains connections, runs one final sync, and flushes
+//! pending edits before exit. `pico cluster status` shows each
+//! replica's lag in epochs and the state bytes a full re-ship would
+//! cost.
 //!
 //!     cargo run --release --example serve_session
 
@@ -180,17 +189,76 @@ fn main() -> anyhow::Result<()> {
         out.merge.rounds,
         out.merge_ms()
     );
-    let shipped = cluster.sync_replicas()?;
-    println!("  snapshot catch-up re-shipped {shipped} stale replica(s)");
+    let report = cluster.sync_replicas()?;
+    println!(
+        "  catch-up: {} delta(s) + {} snapshot(s) shipped ({} + {} bytes)",
+        report.deltas, report.snapshots, report.delta_bytes, report.snapshot_bytes
+    );
+
+    // 7. Delta catch-up: let the replica lag three epochs, then watch the
+    //    journal serve a SHARDDELTA chain that is a fraction of the full
+    //    manifest — catch-up bytes scale with the edit batches, not the
+    //    graph.
+    let cluster = Arc::new(cluster);
+    let base = cluster.epoch();
+    for i in 0..3u32 {
+        cluster.submit(pico::core::EdgeEdit::Insert(10 + i, 9_500 + i));
+        cluster.flush()?; // publishes + journals; replicas untouched
+    }
+    let chain = cluster
+        .journal_chain_bytes(0, base, cluster.epoch())
+        .expect("journal covers the lag");
+    let full = cluster.groups()[0].primary_manifest(2)?.len();
+    println!(
+        "\ndelta catch-up (replica {} epochs behind):\n  \
+         SHARDDELTA chain = {chain} bytes vs full manifest = {full} bytes ({:.0}x smaller)",
+        cluster.epoch() - base,
+        full as f64 / chain as f64
+    );
+    let report = cluster.sync_replicas()?;
+    println!(
+        "  synced {} replica(s) via deltas ({} bytes); snapshots needed: {}",
+        report.deltas, report.delta_bytes, report.snapshots
+    );
+
+    // 8. In `pico serve --cluster` the same convergence runs off the
+    //    flush path: a jittered background daemon (--sync-interval)
+    //    probes replica epochs and prints `replica-sync ... synced=`
+    //    lines whenever it ships something. Same machinery, driven here
+    //    directly:
+    let daemon = pico::service::ReplicaSyncDaemon::spawn(
+        cluster.clone(),
+        std::time::Duration::from_millis(50),
+    );
+    cluster.submit(pico::core::EdgeEdit::Insert(0, 9_700));
+    cluster.flush()?; // returns immediately; the daemon converges replicas
+    for _ in 0..100 {
+        let caught_up = cluster.status()[0].replicas[0]
+            .1
+            .as_ref()
+            .map(|st| st.cluster_epoch == cluster.epoch())
+            .unwrap_or(false);
+        if caught_up {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(20));
+    }
+    println!(
+        "\nbackground daemon: {} sync pass(es); group 0 stats: {:?}",
+        daemon.syncs(),
+        cluster.groups()[0].sync_stats()
+    );
+    drop(daemon);
     for gs in cluster.status() {
         println!(
-            "  shard {}: {} primary @ {} | {} replica(s), {} failovers, {} stale reads",
+            "  shard {}: {} primary @ {} | {} replica(s), {} failovers, {} stale reads, lag {}",
             gs.shard,
             gs.kind,
             gs.primary_addr,
             gs.replicas.len(),
             gs.failovers,
-            gs.stale_reads
+            gs.stale_reads,
+            gs.sync.lag_epochs
         );
     }
 

@@ -26,17 +26,19 @@ def _hindex_tile_kernel(vals_ref, cap_ref, out_ref):
     """One tile: vals[B, D] i32, cap[B] i32 -> h[B] i32."""
     vals = vals_ref[...]
     cap = cap_ref[...]
-    d = vals.shape[1]
-    thresholds = jnp.arange(1, d + 1, dtype=jnp.int32)  # [D]
+    b, d = vals.shape
+    # Thresholds h = 1..D as an in-kernel iota: materialising them with
+    # jnp.arange would make the kernel close over a traced constant,
+    # which pallas_call rejects ("captures constants ... pass them as
+    # inputs") — and Mosaic wants rank >= 2 iota on real TPUs anyway.
+    thr = jax.lax.broadcasted_iota(jnp.int32, (b, d), 1) + 1  # [B, D]
     # Step I (dense histogram analog): cnt[b, h] = #{j : vals[b, j] >= h}.
     cnt = jnp.sum(
-        (vals[:, :, None] >= thresholds[None, None, :]).astype(jnp.int32), axis=1
+        (vals[:, :, None] >= thr[:, None, :]).astype(jnp.int32), axis=1
     )  # [B, D]
     # Step II: h = max{h : cnt >= h, h <= cap}.
-    ok = (cnt >= thresholds[None, :]) & (thresholds[None, :] <= cap[:, None])
-    out_ref[...] = jnp.max(
-        jnp.where(ok, thresholds[None, :], 0), axis=1
-    ).astype(jnp.int32)
+    ok = (cnt >= thr) & (thr <= cap[:, None])
+    out_ref[...] = jnp.max(jnp.where(ok, thr, 0), axis=1).astype(jnp.int32)
 
 
 @functools.partial(jax.jit, static_argnames=("block",))

@@ -16,13 +16,21 @@
 //! flush, and the per-round cost — the loopback number is the floor for
 //! what a real network round trip adds.
 //!
+//! A second section measures **replica catch-up**: a loopback replica is
+//! left 1/4/16 epochs behind, then caught up via the journal's delta
+//! chain and (for comparison) via a full-manifest re-ship — bytes and
+//! latency for both, across two graph sizes, to show delta catch-up
+//! cost scaling with the edit batches instead of the graph.
+//!
 //!     cargo bench --bench cluster_overhead
 //!     PICO_BENCH_QUICK=1 cargo bench --bench cluster_overhead  # CI smoke
 //!
 //! Every configuration is oracle-checked against `bz_coreness` on its
-//! assembled graph before its numbers are printed.
+//! assembled graph before its numbers are printed. In quick mode the
+//! headline numbers land in `BENCH_cluster_overhead.json` (uploaded as
+//! a CI artifact).
 
-use pico::bench::suite::quick_bench;
+use pico::bench::suite::{quick_bench, write_bench_json};
 use pico::cluster::{ClusterConfig, ClusterIndex};
 use pico::core::bz::bz_coreness;
 use pico::core::maintenance::EdgeEdit;
@@ -180,6 +188,110 @@ fn topology(name: &str, primaries: &[String]) -> ClusterConfig {
     ClusterConfig::parse(&text).expect("bench topology")
 }
 
+/// Replica catch-up: delta-chain replay vs full-manifest re-ship at
+/// increasing lag, across two graph sizes. The point the table makes:
+/// delta bytes track `lag × batch` (plus coreness churn) while the
+/// manifest tracks `|V| + |E|` — the asymptotics the journal exists for.
+fn bench_catchup(json: &mut Vec<(&'static str, f64)>) {
+    let sizes: &[(&str, usize)] = if quick_bench() {
+        &[("ba-800", 800), ("ba-2400", 2400)]
+    } else {
+        &[("ba-5000", 5_000), ("ba-20000", 20_000)]
+    };
+    println!(
+        "\n== replica catch-up == (batch {BATCH} edits/epoch; delta = journal chain, full = manifest re-ship)\n"
+    );
+    println!(
+        "{:>10}  {:>5}  {:>12}  {:>10}  {:>12}  {:>10}  {:>7}  {}",
+        "graph", "lag", "delta bytes", "delta ms", "full bytes", "full ms", "ratio", "path"
+    );
+    for &(label, n) in sizes {
+        let g = gen::barabasi_albert(n, 4, 99);
+        let svc = Arc::new(CoreService::new(cfg()));
+        let handle = serve(svc, "127.0.0.1:0").expect("bind loopback server");
+        let topo_text = format!(
+            "[cluster]\nname = cu\nshards = 1\njournal = 64\n\
+             [shard.0]\nprimary = local\nreplicas = {}\n",
+            handle.addr()
+        );
+        let topo = ClusterConfig::parse(&topo_text).expect("catch-up topology");
+        let cl = ClusterIndex::build(&g, &topo, cfg()).expect("catch-up cluster");
+        let mut rng = Rng::new(7 + n as u64);
+        for &lag in &[1usize, 4, 16] {
+            let base = cl.epoch();
+            for _ in 0..lag {
+                let mut queued = 0usize;
+                while queued < BATCH {
+                    let u = rng.below(n as u64) as u32;
+                    let v = rng.below(n as u64) as u32;
+                    if u == v {
+                        continue;
+                    }
+                    cl.submit(if rng.chance(0.7) {
+                        EdgeEdit::Insert(u, v)
+                    } else {
+                        EdgeEdit::Delete(u, v)
+                    });
+                    queued += 1;
+                }
+                cl.flush().expect("catch-up flush");
+            }
+            let want = cl.epoch();
+            let delta_bytes = cl
+                .journal_chain_bytes(0, base, want)
+                .expect("journal must cover the lag") as u64;
+            let t = Timer::start();
+            let report = cl.sync_replicas().expect("delta sync");
+            let delta_ms = t.elapsed_ms();
+            // the sync picks by encoded size, so a pathologically churny
+            // chain may legitimately lose to the manifest — report which
+            // path actually served instead of asserting it
+            let path = if report.deltas > 0 { "delta" } else { "full*" };
+            // full-ship comparison against the same (now-current) replica
+            let manifest = cl.groups()[0].primary_manifest(1).expect("manifest");
+            let t = Timer::start();
+            cl.groups()[0].replicas()[0].host(&manifest).expect("full re-ship");
+            let full_ms = t.elapsed_ms();
+            println!(
+                "{:>10}  {:>5}  {:>12}  {:>10}  {:>12}  {:>10}  {:>6.1}x  {}",
+                label,
+                lag,
+                delta_bytes,
+                fmt::ms(delta_ms),
+                manifest.len(),
+                fmt::ms(full_ms),
+                manifest.len() as f64 / delta_bytes.max(1) as f64,
+                path
+            );
+            if lag == 4 {
+                if label == sizes[0].0 {
+                    json.push(("catchup_delta_bytes_lag4_small", delta_bytes as f64));
+                    json.push(("catchup_full_bytes_small", manifest.len() as f64));
+                    json.push(("catchup_delta_ms_lag4_small", delta_ms));
+                    json.push(("catchup_full_ms_small", full_ms));
+                } else {
+                    json.push(("catchup_delta_bytes_lag4_large", delta_bytes as f64));
+                    json.push(("catchup_full_bytes_large", manifest.len() as f64));
+                }
+            }
+        }
+        // same guarantee as the main configurations: the merged snapshot
+        // still equals BZ on the assembled graph after all the churn
+        let (snap, graph) = cl.consistent_view().expect("catch-up view");
+        assert_eq!(
+            snap.core,
+            bz_coreness(&graph),
+            "catch-up cluster {label} diverged from the oracle"
+        );
+        handle.stop();
+    }
+    println!(
+        "\ndelta bytes grow with lag × batch (edit volume); full-manifest bytes grow\n\
+         with the graph — the journal turns replica catch-up from O(|V|+|E|) into\n\
+         O(changes), which is what keeps lagging replicas cheap at scale"
+    );
+}
+
 fn main() {
     let g = workload();
     let n = g.num_vertices() as u32;
@@ -250,4 +362,20 @@ fn main() {
         }
     }
     handle.stop();
+
+    let mut json: Vec<(&'static str, f64)> = Vec::new();
+    for r in &rows {
+        match r.name {
+            "sharded-local" => json.push(("local_point_qps", r.point_qps)),
+            "cluster-local" => json.push(("cluster_local_point_qps", r.point_qps)),
+            "cluster-remote" => {
+                json.push(("cluster_remote_point_qps", r.point_qps));
+                json.push(("cluster_remote_flush_p50_ms", r.flush_p50));
+                json.push(("cluster_remote_round_ms", r.round_ms));
+            }
+            _ => {}
+        }
+    }
+    bench_catchup(&mut json);
+    write_bench_json("cluster_overhead", &g.name, &json);
 }

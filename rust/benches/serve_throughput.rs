@@ -52,8 +52,9 @@ fn random_edits(rng: &mut Rng, n: u32, count: usize, p_insert: f64) -> Vec<EdgeE
 }
 
 /// Part 1 — queries/sec under 4 concurrent readers while a writer
-/// streams batches, plus per-flush latency percentiles.
-fn bench_concurrent_serving(g: &CsrGraph) {
+/// streams batches, plus per-flush latency percentiles. Returns the
+/// headline numbers for the CI json artifact.
+fn bench_concurrent_serving(g: &CsrGraph) -> Vec<(&'static str, f64)> {
     const READERS: usize = 4;
     const ROUNDS: usize = 60;
     const BATCH: usize = 32;
@@ -123,11 +124,16 @@ fn bench_concurrent_serving(g: &CsrGraph) {
     let (snap, graph) = idx.consistent_view();
     assert_eq!(snap.core, bz_coreness(&graph), "served state diverged from oracle");
     println!("  oracle check: ok\n");
+    vec![
+        ("reads_per_sec", q as f64 / wall_s),
+        ("flush_p50_ms", flushes.percentile_ms(50.0)),
+        ("flush_p99_ms", flushes.percentile_ms(99.0)),
+    ]
 }
 
 /// Part 2 — the crossover: per-batch-size cost of incremental
 /// maintenance vs structural-edits + full recompute.
-fn bench_crossover(g: &CsrGraph) {
+fn bench_crossover(g: &CsrGraph) -> Option<f64> {
     let n = g.num_vertices() as u32;
     let m = g.num_edges();
     let base = DynamicCore::new(g);
@@ -204,19 +210,22 @@ fn bench_crossover(g: &CsrGraph) {
             fractions.last().unwrap() * 100.0
         ),
     }
+    crossover
 }
 
 /// Part 3 — one full-recompute decomposition on the serving graph, for
 /// scale: what a cold index build / worst-case fallback costs.
-fn bench_cold_build(g: &CsrGraph) {
+fn bench_cold_build(g: &CsrGraph) -> f64 {
     let t = Timer::start();
     let r = Hybrid::default().decompose(g);
+    let ms = t.elapsed_ms();
     println!(
         "\ncold index build (Hybrid): {} ms, k_max {}, {}",
-        fmt::ms(t.elapsed_ms()),
+        fmt::ms(ms),
         r.k_max(),
-        fmt::meps(g.num_edges(), t.elapsed_ms())
+        fmt::meps(g.num_edges(), ms)
     );
+    ms
 }
 
 fn main() {
@@ -229,7 +238,10 @@ fn main() {
         fmt::si(g.num_edges()),
         tier
     );
-    bench_concurrent_serving(&g);
-    bench_crossover(&g);
-    bench_cold_build(&g);
+    let mut json = bench_concurrent_serving(&g);
+    let crossover = bench_crossover(&g);
+    let cold_ms = bench_cold_build(&g);
+    json.push(("crossover_fraction", crossover.unwrap_or(f64::NAN)));
+    json.push(("cold_build_ms", cold_ms));
+    pico::bench::suite::write_bench_json("serve_throughput", &g.name, &json);
 }

@@ -193,6 +193,7 @@ fn main() {
         "rounds",
         "bnd-upd"
     );
+    let mut json: Vec<(String, f64)> = Vec::new();
     for &shards in &SHARD_COUNTS {
         let r = bench_shard_count(&g, shards);
         println!(
@@ -208,9 +209,14 @@ fn main() {
             r.rounds,
             r.boundary_updates
         );
+        json.push((format!("point_qps_{shards}shards"), r.point_qps));
+        json.push((format!("flush_p50_ms_{shards}shards"), r.flush_p50_ms));
+        json.push((format!("merge_p50_ms_{shards}shards"), r.merge_p50_ms));
     }
     println!(
         "\nmerge% = refinement share of flush latency — the overhead the\n\
          boundary exchange pays for exact merged coreness at each epoch"
     );
+    let borrowed: Vec<(&str, f64)> = json.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    pico::bench::suite::write_bench_json("shard_scaling", &g.name, &borrowed);
 }

@@ -41,6 +41,45 @@ pub fn quick_bench() -> bool {
         .unwrap_or(false)
 }
 
+/// Machine-readable bench results for CI's perf trail: in quick mode
+/// (or when `PICO_BENCH_JSON=1` forces it), write `BENCH_<name>.json`
+/// — `{bench, dataset, quick, metrics: {key: value}}` — into
+/// `PICO_BENCH_JSON_DIR` (default: the working directory). The CI
+/// `bench-smoke` job uploads these as artifacts, so the per-commit
+/// numbers are recorded instead of scrolling away in a log. Handwritten
+/// JSON: the environment is offline, no serde. Failures are reported,
+/// never fatal — a bench must not die on a read-only filesystem.
+pub fn write_bench_json(name: &str, dataset: &str, metrics: &[(&str, f64)]) {
+    let forced = std::env::var("PICO_BENCH_JSON")
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false);
+    if !quick_bench() && !forced {
+        return;
+    }
+    let dir = std::env::var("PICO_BENCH_JSON_DIR").unwrap_or_else(|_| ".".into());
+    let path = std::path::Path::new(&dir).join(format!("BENCH_{name}.json"));
+    let cells: Vec<String> = metrics
+        .iter()
+        .map(|(k, v)| {
+            // JSON has no NaN/Inf; clamp to null so consumers stay happy
+            if v.is_finite() {
+                format!("\"{k}\": {v:.6}")
+            } else {
+                format!("\"{k}\": null")
+            }
+        })
+        .collect();
+    let body = format!(
+        "{{\"bench\": \"{name}\", \"dataset\": \"{dataset}\", \"quick\": {}, \"metrics\": {{{}}}}}\n",
+        quick_bench(),
+        cells.join(", ")
+    );
+    match std::fs::write(&path, body) {
+        Ok(()) => println!("bench json -> {}", path.display()),
+        Err(e) => eprintln!("warning: could not write {}: {e}", path.display()),
+    }
+}
+
 /// One dataset definition (generated deterministically on demand).
 pub struct SuiteEntry {
     pub name: &'static str,

@@ -247,6 +247,7 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         );
     }
     let strategy = PartitionStrategy::parse(args.get_or("partition", "hash"))?;
+    let sync_interval_ms = args.parse_num::<u64>("sync-interval")?.unwrap_or(1000);
     let batch = BatchConfig {
         recompute_fraction: args
             .parse_num::<f64>("batch-fraction")?
@@ -258,6 +259,7 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     };
 
     let service = std::sync::Arc::new(CoreService::new(batch.clone()));
+    let mut sync_daemon: Option<crate::service::ReplicaSyncDaemon> = None;
     let (name, s) = if let Some(path) = args.get("cluster") {
         // cluster mode: topology comes from the config file; --dataset
         // overrides its dataset for quick experiments. Shard placement
@@ -286,9 +288,22 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         }
         let name = topo.name.clone();
         let snap = idx.snapshot();
-        service.open_cluster(&name, idx);
+        service.open_cluster(&name, idx.clone());
+        // replica convergence runs off the flush path: a jittered
+        // background daemon ships delta chains (full manifests as the
+        // fallback) to lagging replicas
+        if sync_interval_ms > 0 {
+            let interval = std::time::Duration::from_millis(sync_interval_ms);
+            sync_daemon = Some(crate::service::ReplicaSyncDaemon::spawn(idx, interval));
+            println!("replica-sync daemon: probing every ~{sync_interval_ms}ms (jittered)");
+        } else {
+            println!("replica-sync daemon: disabled (--sync-interval 0); sync only at drain");
+        }
         (name, snap)
     } else {
+        if args.get("sync-interval").is_some() {
+            bail!("--sync-interval only applies to --cluster mode (replica sync)");
+        }
         let dataset_name = args.get_or("dataset", "g1").to_string();
         let spec = resolve_dataset(&dataset_name)?;
         let g = spec.load()?;
@@ -330,6 +345,9 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         std::thread::sleep(std::time::Duration::from_millis(50));
     }
     println!("shutdown requested — draining connections...");
+    // stop the sync daemon first: flush_all below runs one final
+    // deterministic sync, and two concurrent passes would double-ship
+    drop(sync_daemon);
     let drained = handle.drain(std::time::Duration::from_secs(5));
     for (graph, outcome) in service.flush_all() {
         match outcome {
@@ -361,89 +379,157 @@ pub fn cmd_cluster(args: &Args, _cfg: &Config) -> Result<()> {
 
 fn cluster_status(args: &Args) -> Result<()> {
     use crate::cluster::{ClusterConfig, Endpoint, RemoteShard};
+    use crate::shard::backend::{ShardStatus, NEVER_COMMITTED};
 
     let path = args
         .get("cluster")
         .ok_or_else(|| anyhow::anyhow!("--cluster <cfg> is required"))?;
     let topo = ClusterConfig::load(path)?;
     println!(
-        "cluster '{}' — dataset {}, {} shards [{}]",
+        "cluster '{}' — dataset {}, {} shards [{}], journal {} epoch(s)",
         topo.name,
         topo.dataset,
         topo.num_shards(),
-        topo.partition.name()
+        topo.partition.name(),
+        topo.journal_epochs
     );
-    let probe_row = |i: usize, role: &str, endpoint: &str, graph: &str| -> (Vec<String>, bool) {
-        let r = RemoteShard::new(i, endpoint, graph);
-        match r.status() {
-            Ok(st) => (
-                vec![
-                    i.to_string(),
-                    role.to_string(),
-                    endpoint.to_string(),
-                    "up".to_string(),
-                    st.epoch.to_string(),
-                    st.cluster_epoch.to_string(),
-                    st.owned.to_string(),
-                    st.k_max.to_string(),
-                ],
-                true,
-            ),
-            Err(_) => (
-                vec![
-                    i.to_string(),
-                    role.to_string(),
-                    endpoint.to_string(),
-                    "down".to_string(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                ],
-                false,
-            ),
-        }
-    };
-    let mut t = Table::new(&[
-        "shard", "role", "endpoint", "state", "epoch", "cluster", "owned", "kmax",
-    ]);
-    let mut down = 0usize;
+    // Probe everything first: replica lag is relative to the committed
+    // head. The authoritative head is the coordinator's published epoch
+    // (probe it with --addr); without that, fall back to the newest
+    // cluster epoch among probed *primaries* (they commit every epoch),
+    // then among all probes — replicas alone can only give a lower
+    // bound, so an all-local-primary topology with one lagging replica
+    // would otherwise report lag 0.
+    struct Probe {
+        shard: usize,
+        role: &'static str,
+        endpoint: String,
+        status: Option<Option<ShardStatus>>, // None = local primary (unprobed)
+    }
+    let mut probes = Vec::new();
     for (i, spec) in topo.shards.iter().enumerate() {
         let graph = topo.shard_graph(i);
+        let probe = |role: &'static str, addr: &str| Probe {
+            shard: i,
+            role,
+            endpoint: addr.to_string(),
+            status: Some(RemoteShard::new(i, addr, &graph).status().ok()),
+        };
         match &spec.primary {
-            Endpoint::Local => {
-                t.row(vec![
-                    i.to_string(),
-                    "primary".into(),
-                    "local".into(),
-                    "in-coordinator".into(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                    "-".into(),
-                ]);
-            }
-            Endpoint::Remote(addr) => {
-                let (row, up) = probe_row(i, "primary", addr, &graph);
-                t.row(row);
-                if !up {
-                    down += 1;
-                }
-            }
+            Endpoint::Local => probes.push(Probe {
+                shard: i,
+                role: "primary",
+                endpoint: "local".into(),
+                status: None,
+            }),
+            Endpoint::Remote(addr) => probes.push(probe("primary", addr)),
         }
         for addr in &spec.replicas {
-            let (row, up) = probe_row(i, "replica", addr, &graph);
-            t.row(row);
-            if !up {
-                down += 1;
-            }
+            probes.push(probe("replica", addr));
         }
+    }
+    let probed_head = |role: &str| {
+        probes
+            .iter()
+            .filter(|p| role.is_empty() || p.role == role)
+            .filter_map(|p| p.status.as_ref()?.as_ref())
+            .map(|st| st.cluster_epoch)
+            .filter(|&e| e != NEVER_COMMITTED)
+            .max()
+    };
+    let head = match args.get("addr") {
+        Some(addr) => Some(coordinator_epoch(addr, &topo.name).with_context(|| {
+            format!("probing the coordinator at {addr} for the published epoch")
+        })?),
+        None => probed_head("primary").or_else(|| probed_head("")),
+    };
+    let mut t = Table::new(&[
+        "shard", "role", "endpoint", "state", "epoch", "cluster", "lag", "owned", "kmax",
+        "state bytes",
+    ]);
+    let mut down = 0usize;
+    for p in &probes {
+        let dash = || "-".to_string();
+        let row = match &p.status {
+            None => vec![
+                "in-coordinator".into(),
+                dash(),
+                dash(),
+                dash(),
+                dash(),
+                dash(),
+                dash(),
+            ],
+            Some(None) => {
+                down += 1;
+                vec!["down".into(), dash(), dash(), dash(), dash(), dash(), dash()]
+            }
+            Some(Some(st)) => {
+                // lag in epochs behind the head; `bytes` is the exact
+                // full-manifest size — the cost of a snapshot catch-up
+                // (a delta chain is cheaper whenever the journal covers
+                // the gap)
+                let (cluster, lag) = match (head, st.cluster_epoch) {
+                    (_, NEVER_COMMITTED) => ("never".to_string(), "full".to_string()),
+                    (Some(h), e) if e < h => (e.to_string(), (h - e).to_string()),
+                    (_, e) => (e.to_string(), "0".to_string()),
+                };
+                vec![
+                    "up".into(),
+                    st.epoch.to_string(),
+                    cluster,
+                    lag,
+                    st.owned.to_string(),
+                    st.k_max.to_string(),
+                    fmt::si(st.state_bytes),
+                ]
+            }
+        };
+        let mut cells = vec![p.shard.to_string(), p.role.to_string(), p.endpoint.clone()];
+        cells.extend(row);
+        t.row(cells);
     }
     print!("{}", t.render());
     if down > 0 {
         bail!("{down} endpoint(s) down");
     }
     Ok(())
+}
+
+/// The coordinator's published cluster epoch — the authoritative lag
+/// baseline for `pico cluster status --addr`. One line-protocol session:
+/// `USE <cluster name>` then `EPOCH`.
+fn coordinator_epoch(addr: &str, name: &str) -> Result<u64> {
+    use std::io::{BufRead, BufReader, Write};
+
+    let stream = std::net::TcpStream::connect(addr)
+        .with_context(|| format!("connecting to the coordinator at {addr}"))?;
+    let mut writer = stream.try_clone().context("cloning the connection")?;
+    let mut reader = BufReader::new(stream);
+    let mut send = |cmd: String| -> Result<String> {
+        writeln!(writer, "{cmd}")?;
+        writer.flush()?;
+        let mut line = String::new();
+        if reader.read_line(&mut line)? == 0 {
+            bail!("coordinator closed the connection after '{cmd}'");
+        }
+        let line = line.trim_end().to_string();
+        if line.starts_with("ERR") {
+            bail!("coordinator rejected '{cmd}': {line}");
+        }
+        Ok(line)
+    };
+    send(format!("USE {name}"))?;
+    let reply = send("EPOCH".to_string())?;
+    let epoch = reply
+        .split_whitespace()
+        .find_map(|tok| tok.strip_prefix("epoch="))
+        .ok_or_else(|| anyhow::anyhow!("no epoch= in reply '{reply}'"))?;
+    let epoch = epoch
+        .parse::<u64>()
+        .with_context(|| format!("bad epoch in reply '{reply}'"))?;
+    let _ = send("QUIT".to_string());
+    Ok(epoch)
 }
 
 /// `pico query` — one-shot client: send `;`-separated protocol commands,

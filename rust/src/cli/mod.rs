@@ -44,17 +44,32 @@ SERVE OPTIONS:
     --cluster CFG        Serve a multi-host cluster from a topology file:
                          shards placed local or shipped to remote `pico
                          serve` hosts, replica groups with epoch-checked
-                         read failover and snapshot catch-up (see
-                         cluster::config docs for the format). SIGTERM /
-                         ctrl-c drains connections and flushes pending
-                         edits before exit.
+                         read failover and journal-first delta catch-up
+                         (full-manifest re-ship as the fallback; see
+                         cluster::config docs for the format, incl. the
+                         `journal = N` retention key). SIGTERM / ctrl-c
+                         drains connections and flushes pending edits
+                         before exit.
+    --sync-interval MS   Replica-sync daemon probe interval in ms
+                         (default 1000, jittered ±25%; 0 disables —
+                         replicas then converge only at drain). Cluster
+                         mode only: served FLUSH never blocks on
+                         replica sync.
     --batch-fraction F   Recompute when a batch exceeds F of |E| (default 0.02,
                          or the PICO_RECOMPUTE_FRACTION env override)
     --batch-min N        Never recompute below N coalesced edits (default 64)
 
 CLUSTER OPTIONS (pico cluster status):
     --cluster CFG        Topology file; probes every remote endpoint with
-                         SHARDINFO and prints per-shard epochs and roles
+                         SHARDINFO and prints per-shard epochs, roles,
+                         replica lag (epochs behind the committed head),
+                         and state bytes (the full re-ship cost a delta
+                         catch-up avoids)
+    --addr HOST:PORT     The coordinator's serve address: its published
+                         EPOCH becomes the authoritative lag baseline.
+                         Without it the head is inferred from probed
+                         primaries (replicas alone only lower-bound it,
+                         e.g. with an all-local-primary topology)
 
 QUERY OPTIONS:
     --addr HOST:PORT     Server address (default 127.0.0.1:7571)

@@ -10,6 +10,8 @@
 //! dataset = social-ba    # suite name or graph file path
 //! shards = 2
 //! partition = hash       # hash | range
+//! journal = 64           # epochs of per-shard deltas kept for replica
+//!                        # catch-up (0 disables: always full re-ship)
 //!
 //! [shard.0]
 //! primary = local        # in the coordinator process
@@ -52,6 +54,10 @@ pub struct ClusterConfig {
     pub name: String,
     pub dataset: String,
     pub partition: PartitionStrategy,
+    /// Epochs of per-shard deltas the coordinator journals for replica
+    /// catch-up (see [`crate::cluster::journal`]); 0 disables the
+    /// journal so every catch-up re-ships the full manifest.
+    pub journal_epochs: usize,
     pub shards: Vec<ShardSpec>,
 }
 
@@ -65,6 +71,12 @@ impl ClusterConfig {
         let dataset = kv.get("cluster.dataset").unwrap_or("g1").to_string();
         let partition =
             PartitionStrategy::parse(kv.get("cluster.partition").unwrap_or("hash"))?;
+        let journal_epochs: usize = match kv.get("cluster.journal") {
+            None => super::journal::DEFAULT_JOURNAL_EPOCHS,
+            Some(v) => v
+                .parse()
+                .context("cluster.journal must be a number of epochs (0 disables)")?,
+        };
         let n: usize = kv
             .get("cluster.shards")
             .context("cluster.shards is required")?
@@ -112,6 +124,7 @@ impl ClusterConfig {
             name,
             dataset,
             partition,
+            journal_epochs,
             shards,
         })
     }
@@ -180,7 +193,17 @@ primary = 127.0.0.1:7591
         let c = ClusterConfig::parse("[cluster]\nshards = 1\n").unwrap();
         assert_eq!(c.name, "cluster");
         assert_eq!(c.dataset, "g1");
+        assert_eq!(c.journal_epochs, crate::cluster::journal::DEFAULT_JOURNAL_EPOCHS);
         assert_eq!(c.shards[0].primary, Endpoint::Local);
+    }
+
+    #[test]
+    fn journal_retention_parses_and_validates() {
+        let c = ClusterConfig::parse("[cluster]\nshards = 1\njournal = 0\n").unwrap();
+        assert_eq!(c.journal_epochs, 0);
+        let c = ClusterConfig::parse("[cluster]\nshards = 1\njournal = 7\n").unwrap();
+        assert_eq!(c.journal_epochs, 7);
+        assert!(ClusterConfig::parse("[cluster]\nshards = 1\njournal = lots\n").is_err());
     }
 
     #[test]

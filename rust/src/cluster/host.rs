@@ -92,12 +92,15 @@ impl ShardHost {
         self.shard.index()
     }
 
-    /// `SHARDINFO` — the health / epoch probe.
+    /// `SHARDINFO` — the health / epoch probe. `bytes=` is the exact
+    /// size of this shard's full manifest — the cost of a snapshot
+    /// re-ship, which `pico cluster status` reports as the full
+    /// catch-up price next to the epoch lag.
     pub fn info(&self) -> String {
         let s = self.shard.status().expect("local shard status is infallible");
         format!(
-            "OK shard={} shards={} epoch={} cluster={} owned={} kmax={}",
-            s.id, self.num_shards, s.epoch, s.cluster_epoch, s.owned, s.k_max
+            "OK shard={} shards={} epoch={} cluster={} owned={} kmax={} bytes={}",
+            s.id, self.num_shards, s.epoch, s.cluster_epoch, s.owned, s.k_max, s.state_bytes
         )
     }
 
@@ -210,7 +213,15 @@ impl ShardHost {
                     return b"ERR usage: SHARDREFINE COMMIT <epoch>".to_vec();
                 };
                 match self.shard.refine_commit(epoch) {
-                    Ok(()) => format!("OK commit={epoch}").into_bytes(),
+                    Ok(diff) => {
+                        // the commit's refined diff rides the reply so
+                        // the router can journal it for delta catch-up
+                        // without another round trip
+                        let mut out =
+                            format!("OK commit={epoch} changed={}\n", diff.len()).into_bytes();
+                        out.extend_from_slice(&wire::encode_pairs(&diff));
+                        out
+                    }
                     Err(e) => format!("ERR refine commit: {e:#}").into_bytes(),
                 }
             }
@@ -226,6 +237,55 @@ impl ShardHost {
             .into_bytes();
         out.extend_from_slice(&manifest);
         out
+    }
+
+    /// `SHARDDELTA <from> <to>` + chain payload — delta replica
+    /// catch-up. The chain is validated in full (codec + base-epoch
+    /// match) before anything is applied; each step then replays the
+    /// primary's routed batch through the shard's own apply path and
+    /// installs the committed refined diff, so the replica ends
+    /// byte-identical to the primary **without recomputing anything**.
+    /// Any rejection surfaces as `ERR` and the router falls back to a
+    /// full-manifest re-ship.
+    pub fn delta_frame(&self, args: &[&str], payload: &[u8]) -> Vec<u8> {
+        let (Some(Ok(from)), Some(Ok(to))) = (
+            args.first().map(|a| a.parse::<u64>()),
+            args.get(1).map(|a| a.parse::<u64>()),
+        ) else {
+            return b"ERR usage: SHARDDELTA <from_epoch> <to_epoch> (chain bytes follow)".to_vec();
+        };
+        let (chain_from, chain_to, deltas) = match wire::decode_delta_chain(payload) {
+            Ok(c) => c,
+            Err(e) => return format!("ERR sharddelta: {e:#}").into_bytes(),
+        };
+        if (chain_from, chain_to) != (from, to) {
+            return format!(
+                "ERR sharddelta: payload covers {chain_from}..{chain_to}, command says {from}..{to}"
+            )
+            .into_bytes();
+        }
+        let current = self.cluster_epoch();
+        if current != from {
+            return format!(
+                "ERR sharddelta: chain starts at epoch {from} but this replica is at {current}"
+            )
+            .into_bytes();
+        }
+        for d in &deltas {
+            // untouched shards never saw an apply on the primary either —
+            // skipping keeps the shard-local index epoch in lockstep
+            if !d.batch.is_empty() {
+                if let Err(e) = self.shard.apply(&d.batch) {
+                    return format!("ERR sharddelta: replaying epoch {}: {e:#}", d.to_epoch)
+                        .into_bytes();
+                }
+            }
+            if let Err(e) = self.shard.install_refined_diff(&d.diff, d.to_epoch) {
+                return format!("ERR sharddelta: committing epoch {}: {e:#}", d.to_epoch)
+                    .into_bytes();
+            }
+        }
+        format!("OK sharddelta={} epochs={} cluster={to}", self.name, deltas.len()).into_bytes()
     }
 }
 
@@ -297,7 +357,58 @@ mod tests {
         let nl = round.iter().position(|&b| b == b'\n').unwrap();
         assert!(std::str::from_utf8(&round[..nl]).unwrap().starts_with("OK sweeps=1"));
         let commit = h.refine_frame(&["COMMIT", "9"], b"");
-        assert_eq!(commit, b"OK commit=9");
+        let nl = commit.iter().position(|&b| b == b'\n').unwrap();
+        assert!(std::str::from_utf8(&commit[..nl]).unwrap().starts_with("OK commit=9 changed="));
+        wire::decode_pairs(&commit[nl + 1..]).unwrap();
         assert!(h.info().contains("cluster=9"));
+    }
+
+    #[test]
+    fn delta_frames_validate_before_touching_state() {
+        use crate::cluster::journal::EpochDelta;
+
+        let h = hosted(); // replica committed at cluster epoch 3
+        let info_before = h.info();
+        // usage / codec errors
+        assert!(String::from_utf8(h.delta_frame(&[], b"")).unwrap().starts_with("ERR usage"));
+        assert!(String::from_utf8(h.delta_frame(&["3", "4"], b"garbage"))
+            .unwrap()
+            .starts_with("ERR sharddelta:"));
+        // a chain whose base is not the replica's epoch is refused
+        let stale = [EpochDelta {
+            to_epoch: 8,
+            batch: Default::default(),
+            diff: vec![],
+        }];
+        let refs: Vec<&EpochDelta> = stale.iter().collect();
+        let bytes = wire::encode_delta_chain(7, 8, &refs);
+        let reply = String::from_utf8(h.delta_frame(&["7", "8"], &bytes)).unwrap();
+        assert!(reply.contains("this replica is at 3"), "{reply}");
+        // command/payload range disagreement is refused
+        let reply = String::from_utf8(h.delta_frame(&["3", "4"], &bytes)).unwrap();
+        assert!(reply.contains("command says"), "{reply}");
+        // a diff naming an unknown vertex is refused
+        let evil = [EpochDelta {
+            to_epoch: 4,
+            batch: Default::default(),
+            diff: vec![(999_999, 1)],
+        }];
+        let refs: Vec<&EpochDelta> = evil.iter().collect();
+        let chain = wire::encode_delta_chain(3, 4, &refs);
+        let reply = String::from_utf8(h.delta_frame(&["3", "4"], &chain)).unwrap();
+        assert!(reply.starts_with("ERR sharddelta: committing epoch 4"), "{reply}");
+        assert_eq!(h.info(), info_before, "rejected deltas must not move the epoch");
+
+        // a well-formed empty-batch, empty-diff step advances the epoch
+        let ok = [EpochDelta {
+            to_epoch: 4,
+            batch: Default::default(),
+            diff: vec![],
+        }];
+        let refs: Vec<&EpochDelta> = ok.iter().collect();
+        let chain = wire::encode_delta_chain(3, 4, &refs);
+        let reply = String::from_utf8(h.delta_frame(&["3", "4"], &chain)).unwrap();
+        assert!(reply.starts_with("OK sharddelta="), "{reply}");
+        assert!(h.info().contains("cluster=4"), "{}", h.info());
     }
 }

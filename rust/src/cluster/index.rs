@@ -19,8 +19,16 @@
 //! cluster epoch matches the router's, so a stale replica (one that
 //! missed a flush) is skipped — counted, not trusted — and a dead one
 //! fails over. The primary is the authoritative fallback.
-//! [`ClusterIndex::sync_replicas`] is snapshot catch-up: it probes every
-//! replica and re-ships the primary's manifest to the stale ones.
+//! [`ClusterIndex::sync_replicas`] is catch-up: it probes every replica
+//! and brings the stale ones to the published epoch — preferably by
+//! replaying the per-shard **epoch journal**'s delta chain
+//! ([`crate::cluster::journal`]: routed batch + refined-coreness diff
+//! per epoch, so bytes scale with the edits, not the graph), falling
+//! back to a full-manifest re-ship on any gap, rejection, or when the
+//! chain would be larger than the manifest. Flushes never sync
+//! replicas inline — the serve layer runs a background sync daemon
+//! ([`crate::service::server::ReplicaSyncDaemon`]) instead, so flush
+//! latency is independent of replica health.
 //!
 //! # Failure semantics
 //!
@@ -28,10 +36,15 @@
 //! and the merge) consumes its edits and surfaces the error; the caller
 //! retries the flush after restoring the host — per-shard state is
 //! always internally consistent because shard application and
-//! refinement commits are atomic per shard.
+//! refinement commits are atomic per shard. A failed flush also clears
+//! the epoch journals and forces each replicated group through one
+//! full-manifest re-ship before delta catch-up may resume: primaries
+//! may then hold edits no published epoch accounts for, so a delta
+//! chain built on top of them would diverge replicas silently.
 
 use super::config::{ClusterConfig, Endpoint};
 use super::host::manifest_for;
+use super::journal::{EpochDelta, EpochJournal};
 use super::remote::RemoteShard;
 use super::wire;
 use crate::core::maintenance::EdgeEdit;
@@ -44,7 +57,7 @@ use crate::shard::router::{refine, route, MergeStats};
 use crate::shard::ShardedOutcome;
 use crate::util::timer::Timer;
 use anyhow::{bail, Context, Result};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
@@ -85,6 +98,22 @@ impl Primary {
     }
 }
 
+/// Cumulative replica-sync counters for one group — what the daemon,
+/// the `SHARDS` verb, and the tests observe.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct SyncStats {
+    /// Catch-ups served by a delta chain.
+    pub deltas_shipped: u64,
+    /// Catch-ups that re-shipped the full manifest.
+    pub snapshots_shipped: u64,
+    /// Bytes shipped over each path.
+    pub delta_bytes: u64,
+    pub snapshot_bytes: u64,
+    /// Max replica lag (epochs behind the router) observed at the last
+    /// sync probe; `want + 1` stands for "never committed / unreachable".
+    pub lag_epochs: u64,
+}
+
 /// One shard's primary plus its read replicas.
 pub struct ReplicaGroup {
     primary: Primary,
@@ -93,6 +122,28 @@ pub struct ReplicaGroup {
     cursor: AtomicUsize,
     failovers: AtomicU64,
     stale_reads: AtomicU64,
+    // replica-sync observability (see SyncStats)
+    deltas_shipped: AtomicU64,
+    snapshots_shipped: AtomicU64,
+    delta_bytes: AtomicU64,
+    snapshot_bytes: AtomicU64,
+    lag_epochs: AtomicU64,
+    /// Size of the last full manifest actually encoded for this group —
+    /// the exact byte count a snapshot re-ship would cost, against which
+    /// delta chains are compared (0 = none encoded yet: the first
+    /// catch-up takes the full path and initialises it).
+    manifest_bytes_hint: AtomicU64,
+    /// Set when a flush died midway: the primary may then hold edits no
+    /// published epoch (and no journal chain) accounts for, so every
+    /// replica of the group — *including* ones whose committed epoch
+    /// still matches, since epoch equality no longer implies state
+    /// equality — must take one full-manifest re-ship before delta
+    /// catch-up may resume. Cleared only after a sync pass full-ships
+    /// the whole group without failures. Merely clearing the journal is
+    /// not enough: the next successful flush would re-seed a contiguous
+    /// chain starting exactly at the replicas' epoch, and a delta replay
+    /// on top of the diverged base would silently break byte-identity.
+    force_full_ship: AtomicBool,
 }
 
 impl ReplicaGroup {
@@ -105,6 +156,13 @@ impl ReplicaGroup {
             cursor: AtomicUsize::new(0),
             failovers: AtomicU64::new(0),
             stale_reads: AtomicU64::new(0),
+            deltas_shipped: AtomicU64::new(0),
+            snapshots_shipped: AtomicU64::new(0),
+            delta_bytes: AtomicU64::new(0),
+            snapshot_bytes: AtomicU64::new(0),
+            lag_epochs: AtomicU64::new(0),
+            manifest_bytes_hint: AtomicU64::new(0),
+            force_full_ship: AtomicBool::new(false),
         }
     }
 
@@ -134,6 +192,24 @@ impl ReplicaGroup {
 
     pub fn stale_reads(&self) -> u64 {
         self.stale_reads.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative replica-sync counters.
+    pub fn sync_stats(&self) -> SyncStats {
+        SyncStats {
+            deltas_shipped: self.deltas_shipped.load(Ordering::Relaxed),
+            snapshots_shipped: self.snapshots_shipped.load(Ordering::Relaxed),
+            delta_bytes: self.delta_bytes.load(Ordering::Relaxed),
+            snapshot_bytes: self.snapshot_bytes.load(Ordering::Relaxed),
+            lag_epochs: self.lag_epochs.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The primary's current full manifest — the catch-up comparison
+    /// baseline (tests pin delta-caught-up replicas byte-identical to
+    /// it; benches read its size as the full-ship cost).
+    pub fn primary_manifest(&self, num_shards: u32) -> Result<Vec<u8>> {
+        self.primary.manifest(num_shards)
     }
 
     /// Run an epoch-stamped read: replicas round-robin first (accepting
@@ -175,6 +251,40 @@ pub struct GroupStatus {
     pub replicas: Vec<(String, Result<ShardStatus, String>)>,
     pub failovers: u64,
     pub stale_reads: u64,
+    /// Cumulative delta/snapshot catch-up counters for the group.
+    pub sync: SyncStats,
+}
+
+/// What one [`ClusterIndex::sync_replicas`] pass did. Ship failures are
+/// counted, not fatal — the background sync daemon has to outlive a
+/// down host — with `first_error` carrying the first failure's text for
+/// callers that want hard errors (initial build does).
+#[derive(Debug, Default)]
+pub struct SyncReport {
+    /// Replicas caught up by a delta chain.
+    pub deltas: usize,
+    /// Replicas caught up by a full-manifest re-ship.
+    pub snapshots: usize,
+    pub delta_bytes: u64,
+    pub snapshot_bytes: u64,
+    /// Replicas that could not be caught up (host or primary down).
+    pub failed: usize,
+    /// Max lag observed across all groups (epochs; `epoch + 1` stands
+    /// for never-committed/unreachable replicas).
+    pub max_lag_epochs: u64,
+    pub first_error: Option<String>,
+}
+
+impl SyncReport {
+    /// Replicas brought up to date, over either path.
+    pub fn shipped(&self) -> usize {
+        self.deltas + self.snapshots
+    }
+
+    fn note_failure(&mut self, err: String) {
+        self.failed += 1;
+        self.first_error.get_or_insert(err);
+    }
 }
 
 struct Published {
@@ -195,6 +305,9 @@ pub struct ClusterIndex {
     graph_cache: Mutex<Option<(u64, Arc<CsrGraph>)>>,
     pending: Mutex<Vec<EdgeEdit>>,
     flush_lock: Mutex<()>,
+    /// Per-shard epoch journals (delta replica catch-up; bounded by the
+    /// topology's `cluster.journal` retention).
+    journals: Vec<Mutex<EpochJournal>>,
 }
 
 impl ClusterIndex {
@@ -238,6 +351,9 @@ impl ClusterIndex {
         let refined = refine(&backends, plan.owner.len(), None, 0, cfg.threads)
             .context("initial cluster refinement")?;
         let k_max = refined.core.iter().copied().max().unwrap_or(0);
+        let journals = (0..groups.len())
+            .map(|_| Mutex::new(EpochJournal::new(topo.journal_epochs)))
+            .collect();
         let idx = Self {
             name: topo.name.clone(),
             cfg,
@@ -257,11 +373,20 @@ impl ClusterIndex {
             graph_cache: Mutex::new(None),
             pending: Mutex::new(Vec::new()),
             flush_lock: Mutex::new(()),
+            journals,
         };
         // the manifests shipped above predate the initial merge commit —
-        // bring replicas to the committed epoch 0 state
-        idx.sync_replicas()
-            .context("hydrating replicas at epoch 0")?;
+        // bring replicas to the committed epoch 0 state. Build is strict
+        // where the sync daemon is tolerant: a replica that cannot be
+        // hydrated now is a topology error the operator must see.
+        let report = idx.sync_replicas().context("hydrating replicas at epoch 0")?;
+        if report.failed > 0 {
+            bail!(
+                "hydrating replicas at epoch 0: {} replica(s) failed ({})",
+                report.failed,
+                report.first_error.as_deref().unwrap_or("unknown error")
+            );
+        }
         Ok(idx)
     }
 
@@ -307,8 +432,11 @@ impl ClusterIndex {
     }
 
     /// Drain pending edits, route them to their primary shards, merge,
-    /// publish one epoch. Replicas are *not* synced here — call
-    /// [`Self::sync_replicas`] (the serve layer does after each flush).
+    /// publish one epoch, and journal the per-shard deltas for replica
+    /// catch-up. Replicas are *not* synced here — that is
+    /// [`Self::sync_replicas`]'s job, which the serve layer runs from
+    /// its background sync daemon so the flush path never blocks on a
+    /// slow or dead replica.
     pub fn flush(&self) -> Result<ShardedOutcome> {
         let _in_flight = self.flush_lock.lock().unwrap();
         let edits: Vec<EdgeEdit> = std::mem::take(&mut *self.pending.lock().unwrap());
@@ -325,6 +453,27 @@ impl ClusterIndex {
                 elapsed: Duration::ZERO,
             });
         }
+        let out = self.flush_inner(edits);
+        if out.is_err() {
+            // A flush that died midway may leave primaries holding edits
+            // no recorded chain (and no published epoch) reproduces.
+            // Clear the journals AND force each replicated group through
+            // one full-manifest re-ship — clearing alone would not do:
+            // the next successful flush re-seeds a contiguous chain
+            // starting at exactly the replicas' committed epoch, and a
+            // delta replay on the diverged base would silently break the
+            // byte-identity invariant (see ReplicaGroup::force_full_ship).
+            for (j, gr) in self.journals.iter().zip(&self.groups) {
+                j.lock().unwrap().clear();
+                if !gr.replicas.is_empty() {
+                    gr.force_full_ship.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+        out
+    }
+
+    fn flush_inner(&self, edits: Vec<EdgeEdit>) -> Result<ShardedOutcome> {
         let timer = Timer::start();
         let batch = coalesce(&edits);
         let applied = batch.len();
@@ -357,11 +506,25 @@ impl ClusterIndex {
         let merge_timer = Timer::start();
         let backends: Vec<Arc<dyn ShardBackend>> =
             self.groups.iter().map(|gr| gr.backend.clone()).collect();
-        let refined = refine(&backends, n, Some(plan.inserts), epoch, self.cfg.threads)
+        let mut refined = refine(&backends, n, Some(plan.inserts), epoch, self.cfg.threads)
             .context("cluster refinement")?;
         let merge_elapsed = merge_timer.elapsed();
         let merge = refined.stats;
         let k_max = refined.core.iter().copied().max().unwrap_or(0);
+        // journal the epoch for delta catch-up — the routed batch plus
+        // the commit's refined diff reproduce this epoch exactly on a
+        // replica (only groups that actually have replicas pay for it)
+        let mut plan = plan;
+        for (s, gr) in self.groups.iter().enumerate() {
+            if gr.replicas.is_empty() {
+                continue;
+            }
+            self.journals[s].lock().unwrap().record(EpochDelta {
+                to_epoch: epoch,
+                batch: std::mem::take(&mut plan.per_shard[s]),
+                diff: std::mem::take(&mut refined.diffs[s]),
+            });
+        }
         let snapshot = Arc::new(CoreSnapshot {
             epoch,
             core: refined.core,
@@ -387,37 +550,112 @@ impl ClusterIndex {
         })
     }
 
-    /// Snapshot catch-up: probe every replica, re-ship the primary's
-    /// manifest to those committed at a different epoch (or unreachable
-    /// at probe time). Returns how many replicas were shipped.
-    pub fn sync_replicas(&self) -> Result<usize> {
+    /// Catch every lagging replica up to the published epoch —
+    /// incrementally where possible, by full re-ship otherwise.
+    ///
+    /// Per stale replica, the router prefers the journal's encoded delta
+    /// chain when it exists **and** its encoding is smaller than a full
+    /// manifest (compared against the last manifest this group actually
+    /// encoded — exact bytes, refreshed on every full ship; an unknown
+    /// size takes the full path once to initialise it). Any journal gap,
+    /// size loss, or delta rejection falls back to re-shipping the
+    /// primary's full manifest, which repairs whatever state the replica
+    /// is in. Ship failures are counted per replica rather than aborting
+    /// the pass — the background sync daemon has to outlive a dead host
+    /// — and surface in the returned [`SyncReport`].
+    pub fn sync_replicas(&self) -> Result<SyncReport> {
         let want = self.epoch();
         let num_shards = self.groups.len() as u32;
-        let mut shipped = 0usize;
-        for gr in &self.groups {
+        let mut report = SyncReport::default();
+        for (s, gr) in self.groups.iter().enumerate() {
             if gr.replicas.is_empty() {
                 continue;
             }
             let mut manifest: Option<Vec<u8>> = None;
+            let mut primary_down = false;
+            let mut group_lag = 0u64;
+            let group_failed_before = report.failed;
+            // after a failed flush, epoch equality no longer implies
+            // state equality: ship the full manifest to every replica
+            // of the group, deltas suspended (see force_full_ship docs)
+            let forced = gr.force_full_ship.load(Ordering::SeqCst);
             for r in &gr.replicas {
-                let stale = match r.status() {
-                    Ok(st) => st.cluster_epoch != want,
-                    Err(_) => true,
+                let committed = match r.status() {
+                    Ok(st) => Some(st.cluster_epoch),
+                    Err(_) => None, // down or not hosted yet: full ship
                 };
-                if !stale {
+                if !forced && committed == Some(want) {
+                    continue;
+                }
+                group_lag = group_lag.max(match committed {
+                    Some(e) if e == want => 0,
+                    // the sentinel for never-committed (u64::MAX) and
+                    // any ahead-of-router state both need a full ship
+                    Some(e) if e <= want => want - e,
+                    _ => want + 1,
+                });
+                let chain = committed
+                    .filter(|&e| e < want && !forced)
+                    .and_then(|e| self.journals[s].lock().unwrap().encode_chain(e, want));
+                if let (Some(bytes), Some(from)) = (chain, committed) {
+                    let hint = gr.manifest_bytes_hint.load(Ordering::Relaxed);
+                    // a rejected or lost delta ship is not an error: the
+                    // full-manifest path below repairs whatever state the
+                    // replica is in
+                    if hint > 0
+                        && (bytes.len() as u64) < hint
+                        && r.apply_delta(from, want, &bytes).is_ok()
+                    {
+                        gr.deltas_shipped.fetch_add(1, Ordering::Relaxed);
+                        gr.delta_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                        report.deltas += 1;
+                        report.delta_bytes += bytes.len() as u64;
+                        continue;
+                    }
+                }
+                if primary_down {
+                    report.note_failure(format!(
+                        "shard {} primary unreachable for catch-up",
+                        gr.backend.id()
+                    ));
                     continue;
                 }
                 if manifest.is_none() {
-                    manifest = Some(gr.primary.manifest(num_shards).with_context(|| {
-                        format!("pulling shard {} manifest for catch-up", gr.backend.id())
-                    })?);
+                    match gr.primary.manifest(num_shards) {
+                        Ok(m) => {
+                            gr.manifest_bytes_hint.store(m.len() as u64, Ordering::Relaxed);
+                            manifest = Some(m);
+                        }
+                        Err(e) => {
+                            primary_down = true;
+                            report.note_failure(format!(
+                                "pulling shard {} manifest for catch-up: {e:#}",
+                                gr.backend.id()
+                            ));
+                            continue;
+                        }
+                    }
                 }
-                r.host(manifest.as_ref().unwrap())
-                    .with_context(|| format!("catch-up ship to {}", r.addr()))?;
-                shipped += 1;
+                let m = manifest.as_ref().unwrap();
+                match r.host(m) {
+                    Ok(()) => {
+                        gr.snapshots_shipped.fetch_add(1, Ordering::Relaxed);
+                        gr.snapshot_bytes.fetch_add(m.len() as u64, Ordering::Relaxed);
+                        report.snapshots += 1;
+                        report.snapshot_bytes += m.len() as u64;
+                    }
+                    Err(e) => report.note_failure(format!("ship to {}: {e:#}", r.addr())),
+                }
+            }
+            gr.lag_epochs.store(group_lag, Ordering::Relaxed);
+            report.max_lag_epochs = report.max_lag_epochs.max(group_lag);
+            if forced && report.failed == group_failed_before {
+                // every replica of the group now holds the primary's
+                // exact state again — deltas may resume
+                gr.force_full_ship.store(false, Ordering::SeqCst);
             }
         }
-        Ok(shipped)
+        Ok(report)
     }
 
     /// Routed point read: the owner shard's replica group answers, with
@@ -493,8 +731,21 @@ impl ClusterIndex {
                     .collect(),
                 failovers: gr.failovers(),
                 stale_reads: gr.stale_reads(),
+                sync: gr.sync_stats(),
             })
             .collect()
+    }
+
+    /// The encoded delta chain `(from, to]` for one shard, if the
+    /// journal still holds it (benches read its size; `None` past the
+    /// retention window or for an unjournalled shard).
+    pub fn journal_chain_bytes(&self, shard: usize, from: u64, to: u64) -> Option<usize> {
+        self.journals
+            .get(shard)?
+            .lock()
+            .unwrap()
+            .encode_chain(from, to)
+            .map(|b| b.len())
     }
 
     /// Assembled global CSR at the current epoch (cached per epoch;
@@ -639,7 +890,9 @@ mod tests {
         assert_eq!(cl.flush().unwrap().submitted, 0);
         assert_eq!(cl.epoch(), 1);
         // no replicas configured: nothing to sync
-        assert_eq!(cl.sync_replicas().unwrap(), 0);
+        let report = cl.sync_replicas().unwrap();
+        assert_eq!(report.shipped(), 0);
+        assert_eq!(report.failed, 0);
     }
 
     #[test]

@@ -1,0 +1,198 @@
+//! The per-shard epoch journal — the source of delta catch-up.
+//!
+//! Snapshot-ship catch-up ([`crate::cluster::ClusterIndex`]'s original
+//! `sync_replicas`) re-sends the shard's *entire* manifest — graph,
+//! coreness, id tables — so catch-up bytes scale with graph size even
+//! when the replica missed a single 10-edit flush. The journal fixes the
+//! asymptotics: for every published cluster epoch it keeps what that
+//! epoch actually changed on the shard —
+//!
+//! * the [`RoutedBatch`] the router dispatched to the shard (empty for
+//!   shards the flush never touched), and
+//! * the refined-coreness **diff** the merge committed: `(global vertex,
+//!   new refined value)` pairs for exactly the entries `refine_commit`
+//!   changed, plus every vertex the batch newly registered.
+//!
+//! A replica lagging from epoch `a` to head `b` replays the contiguous
+//! chain `(a, b]` through the *same* apply path the primary used
+//! (`LocalShard::apply` + `install_refined_diff`), so its state — graph,
+//! id tables, shard-local index epoch, refined coreness — ends
+//! **byte-identical** to the primary's manifest (`tests/cluster.rs` pins
+//! this). The bytes shipped scale with the edit batches and the coreness
+//! churn, not with |V| + |E|.
+//!
+//! The journal is bounded: `retention` epochs are kept (configured by
+//! `cluster.journal` in the topology file; 0 disables journalling), older
+//! entries are dropped, and a replica whose lag falls off the tail takes
+//! the full-manifest path instead. Entries must stay contiguous — a
+//! non-consecutive [`EpochJournal::record`] (or an explicit
+//! [`EpochJournal::clear`] after a failed flush) resets the journal
+//! rather than ever serving a chain with a hole in it.
+
+use crate::graph::VertexId;
+use crate::shard::backend::RoutedBatch;
+use std::collections::VecDeque;
+
+/// Default `cluster.journal` retention (epochs kept per shard).
+pub const DEFAULT_JOURNAL_EPOCHS: usize = 64;
+
+/// Everything one published cluster epoch changed on one shard.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EpochDelta {
+    /// The cluster epoch this delta produces (it applies on top of
+    /// `to_epoch - 1`).
+    pub to_epoch: u64,
+    /// The routed edits the flush dispatched to this shard (possibly
+    /// empty: untouched shards still commit a refinement epoch).
+    pub batch: RoutedBatch,
+    /// Refined-coreness entries this epoch's commit changed, as
+    /// `(global vertex, new refined value)` — including every local the
+    /// batch newly registered, so a replayer can grow its vector.
+    pub diff: Vec<(VertexId, u32)>,
+}
+
+/// A bounded, contiguous ring of [`EpochDelta`]s for one shard.
+#[derive(Debug)]
+pub struct EpochJournal {
+    retention: usize,
+    deltas: VecDeque<EpochDelta>,
+}
+
+impl EpochJournal {
+    /// A journal keeping at most `retention` epochs (0 = disabled: every
+    /// `record` is dropped and every chain lookup misses).
+    pub fn new(retention: usize) -> Self {
+        Self {
+            retention,
+            deltas: VecDeque::new(),
+        }
+    }
+
+    pub fn retention(&self) -> usize {
+        self.retention
+    }
+
+    /// Epochs currently held.
+    pub fn len(&self) -> usize {
+        self.deltas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.deltas.is_empty()
+    }
+
+    /// Append the delta for a freshly published epoch. A gap (the epoch
+    /// is not `last + 1`) resets the journal to just this entry — a
+    /// chain with a hole must never be servable.
+    pub fn record(&mut self, delta: EpochDelta) {
+        if self.retention == 0 {
+            return;
+        }
+        if let Some(last) = self.deltas.back() {
+            if delta.to_epoch != last.to_epoch + 1 {
+                self.deltas.clear();
+            }
+        }
+        self.deltas.push_back(delta);
+        while self.deltas.len() > self.retention {
+            self.deltas.pop_front();
+        }
+    }
+
+    /// Drop everything — called when a flush fails midway, because the
+    /// primary may then hold state no recorded chain reproduces.
+    pub fn clear(&mut self) {
+        self.deltas.clear();
+    }
+
+    /// The contiguous chain taking a replica from `from` to `to`
+    /// (entries with `to_epoch` in `(from, to]`), or `None` if any part
+    /// has been evicted (or `from >= to`).
+    pub fn chain(&self, from: u64, to: u64) -> Option<Vec<&EpochDelta>> {
+        if from >= to {
+            return None;
+        }
+        let first = self.deltas.front()?.to_epoch;
+        let last = self.deltas.back()?.to_epoch;
+        if from + 1 < first || to > last {
+            return None;
+        }
+        let skip = (from + 1 - first) as usize;
+        let take = (to - from) as usize;
+        let out: Vec<&EpochDelta> = self.deltas.iter().skip(skip).take(take).collect();
+        debug_assert_eq!(out.len(), take);
+        Some(out)
+    }
+
+    /// The wire-encoded chain `(from, to]`, if fully retained.
+    pub fn encode_chain(&self, from: u64, to: u64) -> Option<Vec<u8>> {
+        let chain = self.chain(from, to)?;
+        Some(super::wire::encode_delta_chain(from, to, &chain))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn delta(to_epoch: u64) -> EpochDelta {
+        EpochDelta {
+            to_epoch,
+            batch: RoutedBatch::default(),
+            diff: vec![(to_epoch as u32, 1)],
+        }
+    }
+
+    #[test]
+    fn records_serve_contiguous_chains() {
+        let mut j = EpochJournal::new(8);
+        for e in 1..=5 {
+            j.record(delta(e));
+        }
+        assert_eq!(j.len(), 5);
+        let chain = j.chain(2, 5).unwrap();
+        assert_eq!(
+            chain.iter().map(|d| d.to_epoch).collect::<Vec<_>>(),
+            vec![3, 4, 5]
+        );
+        assert_eq!(j.chain(0, 5).unwrap().len(), 5);
+        // beyond the head, empty ranges, inverted ranges: all misses
+        assert!(j.chain(2, 6).is_none());
+        assert!(j.chain(5, 5).is_none());
+        assert!(j.chain(5, 2).is_none());
+    }
+
+    #[test]
+    fn retention_evicts_the_tail() {
+        let mut j = EpochJournal::new(3);
+        for e in 1..=10 {
+            j.record(delta(e));
+        }
+        assert_eq!(j.len(), 3);
+        assert!(j.chain(6, 10).is_none(), "epoch 7 was evicted");
+        assert_eq!(j.chain(7, 10).unwrap().len(), 3);
+    }
+
+    #[test]
+    fn gaps_reset_instead_of_lying() {
+        let mut j = EpochJournal::new(8);
+        j.record(delta(1));
+        j.record(delta(2));
+        j.record(delta(5)); // skipped 3 and 4
+        assert_eq!(j.len(), 1);
+        assert!(j.chain(1, 5).is_none());
+        assert_eq!(j.chain(4, 5).unwrap().len(), 1);
+        j.clear();
+        assert!(j.is_empty());
+        assert!(j.chain(4, 5).is_none());
+    }
+
+    #[test]
+    fn zero_retention_disables_everything() {
+        let mut j = EpochJournal::new(0);
+        j.record(delta(1));
+        assert!(j.is_empty());
+        assert!(j.chain(0, 1).is_none());
+        assert!(j.encode_chain(0, 1).is_none());
+    }
+}

@@ -21,23 +21,35 @@
 //!   routed edits, and warm-started boundary-refinement merge as
 //!   `ShardedIndex`, over any mix of local and remote shards; replica
 //!   groups per shard with epoch-checked reads, failover, and
-//!   snapshot-ship catch-up ([`index::ClusterIndex::sync_replicas`]).
+//!   journal-first catch-up ([`index::ClusterIndex::sync_replicas`]).
+//! * [`journal`] — [`journal::EpochJournal`]: the bounded per-shard
+//!   delta log behind incremental catch-up. Each published epoch
+//!   records its routed batch plus the refined-coreness diff; a lagging
+//!   replica replays the chain (`SHARDDELTA`) and ends byte-identical
+//!   to the primary without recomputing, with full-manifest re-ship as
+//!   the fallback for gaps, corruption, or chains larger than the
+//!   manifest. The serve layer keeps replicas converged from a
+//!   background daemon (`pico serve --sync-interval`) instead of on the
+//!   flush path.
 //!
 //! A two-host walkthrough lives in `examples/serve_session.rs`; the
 //! loopback-cluster-vs-oracle equivalence and the fault paths (dead
-//! replicas, truncated connections, stale-epoch catch-up, multi-process
-//! serving) are pinned by `tests/cluster.rs`. Loopback remote-vs-local
-//! overhead per query class and per merge round is measured by
+//! replicas, truncated connections, stale-epoch catch-up over both the
+//! delta and full-ship paths, multi-process serving) are pinned by
+//! `tests/cluster.rs`. Loopback remote-vs-local overhead per query
+//! class, per merge round, and per catch-up path is measured by
 //! `benches/cluster_overhead.rs`.
 
 pub mod config;
 pub mod host;
 pub mod index;
+pub mod journal;
 pub mod remote;
 pub mod wire;
 
 pub use config::{ClusterConfig, Endpoint, ShardSpec};
 pub use host::{manifest_for, ShardHost};
-pub use index::{ClusterIndex, GroupStatus, Primary, ReplicaGroup};
+pub use index::{ClusterIndex, GroupStatus, Primary, ReplicaGroup, SyncReport, SyncStats};
+pub use journal::{EpochDelta, EpochJournal, DEFAULT_JOURNAL_EPOCHS};
 pub use remote::RemoteShard;
 pub use wire::ShardManifest;

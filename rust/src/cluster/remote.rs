@@ -11,14 +11,16 @@
 //!
 //! A connection that dies between calls is re-dialed once — but a lost
 //! reply is replayed only for *idempotent* verbs (probes, reads,
-//! `REFINE START`/`COMMIT`, manifest shipping). `SHARDAPPLY` and
-//! `REFINE ROUND` mutate state the retry cannot see (a replayed ROUND
-//! whose first reply was lost would re-sweep from an already-swept
-//! state and report no changes, silently corrupting the router's
-//! mailbox), so those surface the error to the router instead — which
-//! is what replica failover and flush error reporting key off. The
-//! client never retries on a *fresh* connection — if a just-dialed
-//! socket fails, the host is down and the caller needs to know now.
+//! `REFINE START`, manifest shipping). `SHARDAPPLY`, `REFINE ROUND`,
+//! `REFINE COMMIT`, and `SHARDDELTA` mutate state the retry cannot see
+//! (a replayed ROUND whose first reply was lost would re-sweep from an
+//! already-swept state and report no changes, silently corrupting the
+//! router's mailbox; a replayed COMMIT would report an empty refined
+//! diff and the journal would ship deltas that skip real changes), so
+//! those surface the error to the router instead — which is what
+//! replica failover and flush error reporting key off. The client never
+//! retries on a *fresh* connection — if a just-dialed socket fails, the
+//! host is down and the caller needs to know now.
 
 use super::wire;
 use crate::graph::VertexId;
@@ -249,6 +251,19 @@ impl RemoteShard {
         Ok(())
     }
 
+    /// Ship a delta chain (`(from, to]` epochs) to a lagging replica —
+    /// the incremental alternative to [`Self::host`]. NOT idempotent
+    /// (a replayed chain would double-apply its routed batches), so a
+    /// lost reply surfaces as an error and the caller falls back to a
+    /// full-manifest ship.
+    pub fn apply_delta(&self, from: u64, to: u64, chain: &[u8]) -> Result<()> {
+        let (head, _) = self.call_payload_once(&format!("SHARDDELTA {from} {to}"), chain)?;
+        if field_u64(&head, "cluster")? != to {
+            bail!("SHARDDELTA landed on the wrong epoch: '{head}'");
+        }
+        Ok(())
+    }
+
     /// Pull the remote's current manifest (the replica catch-up source
     /// when this client points at a group's primary).
     pub fn fetch_manifest(&self) -> Result<Vec<u8>> {
@@ -281,6 +296,7 @@ impl ShardBackend for RemoteShard {
             cluster_epoch: field_u64(&head, "cluster")?,
             owned: field_u64(&head, "owned")? as usize,
             k_max: field_u64(&head, "kmax")? as u32,
+            state_bytes: field_u64(&head, "bytes")?,
         })
     }
 
@@ -315,12 +331,21 @@ impl ShardBackend for RemoteShard {
         })
     }
 
-    fn refine_commit(&self, cluster_epoch: u64) -> Result<()> {
-        let (head, _) = self.call_line(&format!("SHARDREFINE COMMIT {cluster_epoch}"))?;
+    fn refine_commit(&self, cluster_epoch: u64) -> Result<Vec<(VertexId, u32)>> {
+        // NOT idempotent any more: the first execution freezes est into
+        // refined, so a replayed COMMIT after a lost reply would report
+        // an *empty* diff and the journal would ship a delta that skips
+        // real coreness changes; never replayed
+        let (head, payload) =
+            self.call_payload_once(&format!("SHARDREFINE COMMIT {cluster_epoch}"), b"")?;
         if field_u64(&head, "commit")? != cluster_epoch {
             bail!("commit echoed the wrong epoch: '{head}'");
         }
-        Ok(())
+        let diff = wire::decode_pairs(&payload)?;
+        if diff.len() as u64 != field_u64(&head, "changed")? {
+            bail!("SHARDREFINE COMMIT changed= disagrees with the diff payload");
+        }
+        Ok(diff)
     }
 
     fn refined_coreness(&self, v: VertexId) -> Result<(Option<u32>, u64)> {

@@ -30,6 +30,7 @@
 //! snapshot      snapshot_len bytes    (PICOSNP1 payload)
 //! ```
 
+use super::journal::EpochDelta;
 use crate::core::maintenance::EdgeEdit;
 use crate::graph::VertexId;
 use crate::shard::backend::{RefineInit, RoutedBatch};
@@ -37,6 +38,7 @@ use crate::shard::snapshot::{self, IndexSnapshot};
 use anyhow::{bail, Context, Result};
 
 const MANIFEST_MAGIC: &[u8; 8] = b"PICOSHD1";
+const DELTA_MAGIC: &[u8; 8] = b"PICODLT1";
 
 struct Cursor<'a> {
     bytes: &'a [u8],
@@ -229,6 +231,79 @@ pub fn decode_refine_init(bytes: &[u8]) -> Result<RefineInit> {
         arcs,
         boundary_arcs,
     })
+}
+
+/// Serialise a contiguous delta chain (`SHARDDELTA <from> <to>`
+/// payload). `deltas` must cover epochs `(from, to]` in order — the
+/// journal guarantees it; the encoder asserts it in debug builds.
+///
+/// ```text
+/// magic      b"PICODLT1"                       8 bytes
+/// from,to    u64, u64
+/// count      u64          (== to - from)
+/// per step:  u64 to_epoch
+///            u64 batch_len + batch bytes       (a routed-batch payload)
+///            diff pairs                        (vertex, new refined)
+/// ```
+pub fn encode_delta_chain(from: u64, to: u64, deltas: &[&EpochDelta]) -> Vec<u8> {
+    debug_assert_eq!(deltas.len() as u64, to - from);
+    let mut out = Vec::with_capacity(32 + deltas.len() * 64);
+    out.extend_from_slice(DELTA_MAGIC);
+    out.extend_from_slice(&from.to_le_bytes());
+    out.extend_from_slice(&to.to_le_bytes());
+    out.extend_from_slice(&(deltas.len() as u64).to_le_bytes());
+    for (i, d) in deltas.iter().enumerate() {
+        debug_assert_eq!(d.to_epoch, from + i as u64 + 1);
+        out.extend_from_slice(&d.to_epoch.to_le_bytes());
+        let batch = encode_batch(&d.batch);
+        out.extend_from_slice(&(batch.len() as u64).to_le_bytes());
+        out.extend_from_slice(&batch);
+        put_pairs(&mut out, &d.diff);
+    }
+    out
+}
+
+/// Parse and validate untrusted delta-chain bytes: magic, declared
+/// epoch range, step contiguity, and every embedded routed batch go
+/// through the same checks as the rest of the wire. Returns
+/// `(from, to, deltas)`.
+pub fn decode_delta_chain(bytes: &[u8]) -> Result<(u64, u64, Vec<EpochDelta>)> {
+    let mut c = Cursor::new(bytes);
+    if c.take(DELTA_MAGIC.len())? != DELTA_MAGIC {
+        bail!("not a pico shard delta chain (bad magic)");
+    }
+    let from = c.u64()?;
+    let to = c.u64()?;
+    if from >= to {
+        bail!("delta chain range {from}..{to} is empty or inverted");
+    }
+    // each step is at least to_epoch + batch_len + empty batch (two u64
+    // counts) + empty diff count — a budget check before any allocation
+    let count = c.count(8 + 8 + 16 + 8, "delta step")?;
+    if count as u64 != to - from {
+        bail!("delta chain declares {count} steps for range {from}..{to}");
+    }
+    let mut deltas = Vec::with_capacity(count);
+    for i in 0..count {
+        let to_epoch = c.u64()?;
+        if to_epoch != from + i as u64 + 1 {
+            bail!(
+                "delta step {i} is epoch {to_epoch}, expected {} (chain must be contiguous)",
+                from + i as u64 + 1
+            );
+        }
+        let batch_len = c.count(1, "delta batch")?;
+        let batch = decode_batch(c.take(batch_len)?)
+            .with_context(|| format!("delta step {i} routed batch"))?;
+        let diff = take_pairs(&mut c, "delta refined diff")?;
+        deltas.push(EpochDelta {
+            to_epoch,
+            batch,
+            diff,
+        });
+    }
+    c.done("delta chain")?;
+    Ok((from, to, deltas))
 }
 
 /// A decoded, fully validated shard manifest.
@@ -425,6 +500,64 @@ mod tests {
         assert!(decode_batch(&evil).is_err());
         assert!(decode_pairs(&[1, 2, 3]).is_err());
         assert!(decode_manifest(b"NOTAMANIFESTxxxx").is_err());
+    }
+
+    #[test]
+    fn delta_chains_round_trip_and_validate() {
+        let deltas = [
+            EpochDelta {
+                to_epoch: 4,
+                batch: RoutedBatch {
+                    new_owned: vec![9],
+                    edits: vec![(EdgeEdit::Insert(1, 9), true)],
+                },
+                diff: vec![(1, 3), (9, 1)],
+            },
+            EpochDelta {
+                to_epoch: 5,
+                batch: RoutedBatch::default(),
+                diff: vec![],
+            },
+        ];
+        let refs: Vec<&EpochDelta> = deltas.iter().collect();
+        let bytes = encode_delta_chain(3, 5, &refs);
+        let (from, to, got) = decode_delta_chain(&bytes).unwrap();
+        assert_eq!((from, to), (3, 5));
+        assert_eq!(got, deltas);
+
+        // truncations at every length never panic, always reject
+        for cut in 0..bytes.len() {
+            assert!(decode_delta_chain(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        // trailing garbage rejected
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(decode_delta_chain(&trailing).is_err());
+        // bad magic
+        assert!(decode_delta_chain(b"NOTADELTAxxxxxxxxxxxxxxxxxxxxxxx").is_err());
+        // inverted / empty ranges
+        let mut inverted = bytes.clone();
+        inverted[8..16].copy_from_slice(&9u64.to_le_bytes());
+        assert!(decode_delta_chain(&inverted).is_err());
+        // a step count far beyond the payload fails before allocating
+        let mut huge = bytes.clone();
+        huge[24..32].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_delta_chain(&huge).is_err());
+        // non-contiguous step epoch rejected
+        let mut skewed = bytes.clone();
+        skewed[32..40].copy_from_slice(&9u64.to_le_bytes());
+        assert!(decode_delta_chain(&skewed).is_err());
+        // a corrupt embedded batch (self-loop) is refused
+        let evil = [EpochDelta {
+            to_epoch: 1,
+            batch: RoutedBatch {
+                new_owned: vec![],
+                edits: vec![(EdgeEdit::Insert(3, 3), true)],
+            },
+            diff: vec![],
+        }];
+        let refs: Vec<&EpochDelta> = evil.iter().collect();
+        assert!(decode_delta_chain(&encode_delta_chain(0, 1, &refs)).is_err());
     }
 
     #[test]

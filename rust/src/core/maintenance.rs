@@ -115,6 +115,12 @@ impl DynamicCore {
         self.adj[u as usize].contains(&v)
     }
 
+    /// Current degree of `v` — O(1), no CSR rebuild (delta replay
+    /// validates refined corenesses against it per entry).
+    pub fn degree(&self, v: VertexId) -> u32 {
+        self.adj[v as usize].len() as u32
+    }
+
     /// Rebuild an immutable CSR snapshot (for oracle checks / export).
     pub fn snapshot(&self) -> CsrGraph {
         let mut b = GraphBuilder::new(self.num_vertices());

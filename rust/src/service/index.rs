@@ -147,6 +147,15 @@ impl CoreIndex {
         self.graph_locked(&dc)
     }
 
+    /// Run a read-only closure against the writer structure — for O(1)
+    /// structural probes (degrees, edge membership) where a full
+    /// [`Self::graph`] CSR rebuild would dominate the caller's cost.
+    /// Briefly serialises with writers; do not do heavy work inside.
+    pub fn with_dynamic<R>(&self, f: impl FnOnce(&DynamicCore) -> R) -> R {
+        let dc = self.writer.lock().unwrap();
+        f(&dc)
+    }
+
     /// A mutually consistent (snapshot, graph) pair from one epoch —
     /// what structure queries like densest-core extraction need.
     pub fn consistent_view(&self) -> (Arc<CoreSnapshot>, Arc<CsrGraph>) {

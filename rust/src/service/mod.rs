@@ -32,4 +32,4 @@ pub use batch::{
 };
 pub use index::{CoreIndex, CoreSnapshot, CoreStore};
 pub use queries::{densest_core, DensestCore};
-pub use server::{serve, CoreService, ServerHandle, Session};
+pub use server::{serve, CoreService, ReplicaSyncDaemon, ServerHandle, Session};

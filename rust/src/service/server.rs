@@ -70,20 +70,26 @@
 //! | frame | payload / reply |
 //! |---|---|
 //! | `SHARDHOST <name>` + manifest | install/overwrite a hosted shard (hydrates, never recomputes) |
-//! | `SHARDSNAP` | reply head + manifest bytes — the replica catch-up source |
+//! | `SHARDSNAP` | reply head + manifest bytes — the full-catch-up source |
+//! | `SHARDDELTA <from> <to>` + delta chain | replay epochs `(from, to]` on a lagging replica: per epoch, the routed batch + the refined-coreness diff ([`crate::cluster::journal`]); validated in full (base epoch must match) and never recomputes — `OK sharddelta=<name> epochs=<k> cluster=<to>`, or `ERR` and the router falls back to `SHARDHOST` |
 //! | `SHARDAPPLY` + routed batch | `OK changed=<c> recomputed=<r> epoch=<e>` |
 //! | `SHARDREFINE START <slack\|->` | `OK refine-init ...` + estimates/ghosts/arcs payload |
 //! | `SHARDREFINE ROUND` + updates | `OK sweeps=<s> ghosts=<g>` + changed-estimates payload |
-//! | `SHARDREFINE COMMIT <epoch>` | `OK commit=<epoch>` |
+//! | `SHARDREFINE COMMIT <epoch>` | `OK commit=<epoch> changed=<n>` + refined-diff payload (the journal entry's diff half) |
 //! | `SHARDMEMBERS <k>` | `OK count=<n> cluster=<ce>` + member-id payload |
 //!
-//! plus line-mode probes `SHARDINFO` (health/epoch), `SHARDCORE <v>`,
-//! and `SHARDHISTO`, each stamped with the committed cluster epoch so
-//! readers can reject stale replicas. On a server *fronting a cluster*
-//! (`pico serve --cluster`), the ordinary verbs serve merged answers:
-//! `CORENESS` routes to the owner shard's replica group (epoch-checked
-//! failover), `FLUSH` routes edits to primaries, runs the boundary
-//! exchange, publishes, and re-ships stale replicas (`synced=<n>`).
+//! plus line-mode probes `SHARDINFO` (health/epoch/state bytes),
+//! `SHARDCORE <v>`, and `SHARDHISTO`, each stamped with the committed
+//! cluster epoch so readers can reject stale replicas. On a server
+//! *fronting a cluster* (`pico serve --cluster`), the ordinary verbs
+//! serve merged answers: `CORENESS` routes to the owner shard's replica
+//! group (epoch-checked failover); `FLUSH` routes edits to primaries,
+//! runs the boundary exchange, journals the epoch's per-shard deltas,
+//! and publishes — it does **not** touch replicas, so flush latency is
+//! independent of replica health. Replica convergence belongs to the
+//! background [`ReplicaSyncDaemon`] (`pico serve --sync-interval`,
+//! jittered probing), which ships delta chains to lagging replicas and
+//! full manifests when the journal cannot cover the gap.
 //!
 //! The TCP layer is thread-per-connection with the scheduler's
 //! containment idiom: a panicking handler poisons nothing — the
@@ -335,15 +341,19 @@ impl CoreService {
                 }
                 Backend::Cluster(c) => match c.flush() {
                     Ok(o) => {
-                        // nothing applied -> replicas are already at the
-                        // published epoch; don't probe them at shutdown
-                        if o.applied > 0 {
-                            // best-effort: the flush result still stands
-                            if let Err(e) = c.sync_replicas() {
-                                eprintln!(
-                                    "warning: replica sync for '{name}' failed during drain: {e:#}"
-                                );
-                            }
+                        // drain-time convergence: the daemon is stopping,
+                        // so give replicas one last best-effort sync (the
+                        // flush result stands either way)
+                        match c.sync_replicas() {
+                            Ok(r) if r.failed > 0 => eprintln!(
+                                "warning: {} replica(s) of '{name}' not synced during drain: {}",
+                                r.failed,
+                                r.first_error.as_deref().unwrap_or("unknown error")
+                            ),
+                            Ok(_) => {}
+                            Err(e) => eprintln!(
+                                "warning: replica sync for '{name}' failed during drain: {e:#}"
+                            ),
                         }
                         Ok((o.snapshot.epoch, o.applied))
                     }
@@ -500,7 +510,7 @@ impl CoreService {
                 "OK binary".into()
             }
             "SNAPSHOT" | "RESTORE" | "SHARDHOST" | "SHARDSNAP" | "SHARDAPPLY" | "SHARDREFINE"
-            | "SHARDMEMBERS"
+            | "SHARDMEMBERS" | "SHARDDELTA"
                 if !session.binary =>
             {
                 format!("ERR {verb} needs the binary protocol (send BINARY first)")
@@ -613,27 +623,40 @@ impl CoreService {
                                 // every endpoint over the network (that
                                 // is `pico cluster status`'s job)
                                 let m = c.merge_stats();
+                                let mut sync = crate::cluster::SyncStats::default();
                                 let groups: Vec<String> = c
                                     .groups()
                                     .iter()
                                     .map(|g| {
+                                        let s = g.sync_stats();
+                                        sync.deltas_shipped += s.deltas_shipped;
+                                        sync.snapshots_shipped += s.snapshots_shipped;
+                                        sync.delta_bytes += s.delta_bytes;
+                                        sync.snapshot_bytes += s.snapshot_bytes;
+                                        sync.lag_epochs = sync.lag_epochs.max(s.lag_epochs);
                                         format!(
-                                            "{}:{}:{}+{}r:fo{}:st{}",
+                                            "{}:{}:{}+{}r:fo{}:st{}:lag{}",
                                             g.backend().id(),
                                             g.kind(),
                                             g.primary_addr(),
                                             g.replicas().len(),
                                             g.failovers(),
-                                            g.stale_reads()
+                                            g.stale_reads(),
+                                            s.lag_epochs
                                         )
                                     })
                                     .collect();
                                 format!(
-                                    "OK shards={} strategy=cluster boundary_edges={} rounds={} boundary_updates={} groups={}",
+                                    "OK shards={} strategy=cluster boundary_edges={} rounds={} boundary_updates={} deltas={} snapshots={} delta_bytes={} snapshot_bytes={} lag={} groups={}",
                                     c.num_shards(),
                                     c.boundary_edges(),
                                     m.rounds,
                                     m.boundary_updates,
+                                    sync.deltas_shipped,
+                                    sync.snapshots_shipped,
+                                    sync.delta_bytes,
+                                    sync.snapshot_bytes,
+                                    sync.lag_epochs,
                                     groups.join(",")
                                 )
                             }
@@ -719,15 +742,14 @@ impl CoreService {
                                 if out.recomputed_shards > 0 {
                                     view.serve_recomputes(out.recomputed_shards as u64);
                                 }
-                                // re-ship stale replicas so epoch-checked
-                                // reads keep landing on them; a failed
-                                // ship must not masquerade as "in sync"
-                                let synced = match c.sync_replicas() {
-                                    Ok(n) => n.to_string(),
-                                    Err(_) => "ERR".to_string(),
-                                };
+                                // replicas are NOT synced here: the flush
+                                // only journals the epoch's deltas and
+                                // publishes, so its latency never depends
+                                // on replica health — the background sync
+                                // daemon (or an explicit sync) converges
+                                // the replicas afterwards
                                 format!(
-                                    "OK epoch={} submitted={} applied={} coalesced={} changed={} recomputed={} shards={} rounds={} boundary={} synced={} ms={:.3}",
+                                    "OK epoch={} submitted={} applied={} coalesced={} changed={} recomputed={} shards={} rounds={} boundary={} ms={:.3}",
                                     out.snapshot.epoch,
                                     out.submitted,
                                     out.applied,
@@ -737,7 +759,6 @@ impl CoreService {
                                     c.num_shards(),
                                     out.merge.rounds,
                                     out.merge.boundary_updates,
-                                    synced,
                                     out.elapsed_ms()
                                 )
                             }
@@ -808,6 +829,7 @@ impl CoreService {
             "SHARDSNAP" => self.frame_shard(session, slot, |h| h.snap_frame()),
             "SHARDAPPLY" => self.frame_shard(session, slot, |h| h.apply_frame(payload)),
             "SHARDREFINE" => self.frame_shard(session, slot, |h| h.refine_frame(&args, payload)),
+            "SHARDDELTA" => self.frame_shard(session, slot, |h| h.delta_frame(&args, payload)),
             "SHARDMEMBERS" => self.frame_shard(session, slot, |h| h.members_frame(&args)),
             _ => self.handle_command(session, line, slot).into_bytes(),
         }
@@ -1000,6 +1022,102 @@ impl Session {
 /// the CLI ([`crate::coordinator::DatasetSpec::resolve`]).
 fn load_dataset(name: &str) -> Result<Arc<CsrGraph>> {
     crate::coordinator::DatasetSpec::resolve(name)?.load()
+}
+
+/// The background replica-sync daemon: probes replica epochs on a
+/// jittered interval and runs [`ClusterIndex::sync_replicas`] (delta
+/// chains first, full manifests as the fallback), so served `FLUSH`es
+/// never block on replica health. Jitter (±25% of the interval) keeps a
+/// fleet of coordinators from probing their shard hosts in lockstep.
+///
+/// Dropping (or [`ReplicaSyncDaemon::stop`]-ping) the handle stops the
+/// loop at its next poll tick; `pico serve --sync-interval` owns one per
+/// cluster backend and stops it before the final drain-time sync.
+pub struct ReplicaSyncDaemon {
+    stop: Arc<AtomicBool>,
+    syncs: Arc<AtomicUsize>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ReplicaSyncDaemon {
+    /// Spawn the daemon for `cluster`, probing every ~`interval`.
+    pub fn spawn(cluster: Arc<ClusterIndex>, interval: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let syncs = Arc::new(AtomicUsize::new(0));
+        let stop2 = stop.clone();
+        let syncs2 = syncs.clone();
+        let join = std::thread::Builder::new()
+            .name("pico-replica-sync".into())
+            .spawn(move || {
+                let seed = std::time::SystemTime::now()
+                    .duration_since(std::time::UNIX_EPOCH)
+                    .map(|d| d.subsec_nanos() as u64 ^ d.as_secs())
+                    .unwrap_or(0x5EED);
+                let mut rng = crate::util::rng::Rng::new(seed | 1);
+                while !stop2.load(Ordering::SeqCst) {
+                    // jittered sleep, polled in short slices so stop()
+                    // takes effect promptly even with long intervals
+                    let target = interval.mul_f64(0.75 + 0.5 * rng.f64());
+                    let deadline = std::time::Instant::now() + target;
+                    while std::time::Instant::now() < deadline {
+                        if stop2.load(Ordering::SeqCst) {
+                            return;
+                        }
+                        std::thread::sleep(Duration::from_millis(
+                            10u64.min(target.as_millis().max(1) as u64),
+                        ));
+                    }
+                    match cluster.sync_replicas() {
+                        Ok(r) => {
+                            syncs2.fetch_add(1, Ordering::SeqCst);
+                            // quiet when idle; one line whenever the pass
+                            // actually moved (or failed to move) a replica
+                            if r.shipped() > 0 || r.failed > 0 {
+                                println!(
+                                    "replica-sync '{}': synced={} (deltas={} snapshots={}) bytes={}+{} lag={} failed={}",
+                                    cluster.name(),
+                                    r.shipped(),
+                                    r.deltas,
+                                    r.snapshots,
+                                    r.delta_bytes,
+                                    r.snapshot_bytes,
+                                    r.max_lag_epochs,
+                                    r.failed
+                                );
+                            }
+                        }
+                        Err(e) => {
+                            println!("replica-sync '{}': pass failed: {e:#}", cluster.name())
+                        }
+                    }
+                }
+            })
+            .expect("spawning the replica-sync daemon");
+        Self {
+            stop,
+            syncs,
+            join: Some(join),
+        }
+    }
+
+    /// Completed sync passes (successful probe rounds, shipped or not).
+    pub fn syncs(&self) -> usize {
+        self.syncs.load(Ordering::SeqCst)
+    }
+
+    /// Ask the loop to exit at its next poll tick.
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+impl Drop for ReplicaSyncDaemon {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
 }
 
 /// A running TCP server. Dropping the handle stops the accept loop.

@@ -59,6 +59,16 @@ pub struct RoutedBatch {
     pub edits: Vec<(EdgeEdit, bool)>,
 }
 
+impl RoutedBatch {
+    /// Whether this batch would leave the shard untouched — the exact
+    /// condition under which a router skips [`ShardBackend::apply`], so
+    /// delta replay must skip it too to reproduce the shard's index
+    /// epoch.
+    pub fn is_empty(&self) -> bool {
+        self.new_owned.is_empty() && self.edits.is_empty()
+    }
+}
+
 /// What one routed batch did on the shard.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct ApplyOutcome {
@@ -111,6 +121,11 @@ pub struct ShardStatus {
     pub owned: usize,
     /// Max committed refined coreness among owned vertices.
     pub k_max: u32,
+    /// Exact encoded size of this shard's full manifest — what a
+    /// snapshot re-ship would put on the wire (`pico cluster status`
+    /// reports it as the full-catch-up cost; deltas are measured against
+    /// it). Pinned to `cluster::manifest_for(...).len()` by a test.
+    pub state_bytes: u64,
 }
 
 /// The `cluster_epoch` a shard reports before its first
@@ -146,8 +161,13 @@ pub trait ShardBackend: Send + Sync {
     fn refine_round(&self, updates: &[(VertexId, u32)]) -> Result<RefineRound>;
 
     /// Freeze the current estimates as the shard's exact refined
-    /// coreness at cluster epoch `cluster_epoch` (read + catch-up state).
-    fn refine_commit(&self, cluster_epoch: u64) -> Result<()>;
+    /// coreness at cluster epoch `cluster_epoch` (read + catch-up
+    /// state). Returns the **refined diff**: `(global vertex, new
+    /// value)` for every entry this commit changed, plus every local the
+    /// shard registered since the previous commit — exactly what a
+    /// lagging replica needs to replay the epoch without recomputing
+    /// (the epoch-journal payload, see [`crate::cluster::journal`]).
+    fn refine_commit(&self, cluster_epoch: u64) -> Result<Vec<(VertexId, u32)>>;
 
     /// Committed refined coreness of an owned vertex, plus the cluster
     /// epoch it was committed at (`None` for unknown / non-owned ids).
@@ -349,6 +369,72 @@ impl LocalShard {
         )
     }
 
+    /// Replica-side delta replay, step 2 of 2: after the epoch's routed
+    /// batch has been replayed through [`ShardBackend::apply`], install
+    /// the refined-coreness diff the primary's commit produced and stamp
+    /// the new cluster epoch. The diff is untrusted wire input: every
+    /// vertex must be a known local, every new local must be covered
+    /// (the primary's commit diff always covers them), and owned values
+    /// are capped by the owned vertex's (complete) local degree — the
+    /// same invariant `cluster::wire::decode_manifest` enforces. Nothing
+    /// is installed on a rejected diff.
+    pub fn install_refined_diff(
+        &self,
+        diff: &[(VertexId, u32)],
+        cluster_epoch: u64,
+    ) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        let n = st.globals.len();
+        let old_len = st.refined.len();
+        // Pass 1 — validate everything, mutate nothing. Degrees come
+        // from the maintained structure directly (O(1) per entry); a
+        // per-step CSR rebuild or a scratch copy of the refined vector
+        // would make delta replay O(|V|+|E|) per epoch — the exact
+        // asymptotics the journal exists to avoid.
+        let mut covered = vec![false; n - old_len.min(n)];
+        self.index.with_dynamic(|dc| {
+            if dc.num_vertices() != n {
+                bail!(
+                    "shard {}: index has {} vertices but {n} locals are registered",
+                    self.id,
+                    dc.num_vertices()
+                );
+            }
+            for &(v, c) in diff {
+                let Some(&l) = st.locals.get(&v) else {
+                    bail!("refined diff names vertex {v}, unknown to shard {}", self.id);
+                };
+                let l = l as usize;
+                if st.owned_mask[l] {
+                    let d = dc.degree(l as u32);
+                    if c > d {
+                        bail!("refined diff sets owned {v} to {c}, above its degree {d}");
+                    }
+                }
+                if l >= old_len {
+                    covered[l - old_len] = true;
+                }
+            }
+            Ok(())
+        })?;
+        if let Some(l) = covered.iter().position(|&c| !c) {
+            bail!(
+                "refined diff leaves new local {} (vertex {}) uninitialised",
+                old_len + l,
+                st.globals[old_len + l]
+            );
+        }
+        // Pass 2 — apply in place (every entry pre-validated; new slots
+        // all proven covered, so the resize fill is always overwritten).
+        st.refined.resize(n, 0);
+        for &(v, c) in diff {
+            st.refined[st.locals[&v] as usize] = c;
+        }
+        st.cluster_epoch = cluster_epoch;
+        Ok(())
+    }
+
     /// All arcs out of owned vertices as global-id pairs — the
     /// assembly input for a router-side global CSR (boundary edges show
     /// up once per endpoint owner; the builder's dedup collapses them).
@@ -383,12 +469,30 @@ impl ShardBackend for LocalShard {
             .filter_map(|&l| st.refined.get(l as usize).copied())
             .max()
             .unwrap_or(0);
+        // Exact manifest size from counts alone, without encoding
+        // anything: the manifest header (8 magic + 2×u32 + u64 + 4×u64
+        // counts = 56) + the three u32 tables + the embedded snapshot
+        // (8 magic + u32 name length + name + u64 epoch + 3×u64 counts
+        // = 44 + name, then (n+1) u64 offsets + 2m u32 adjacency + n u32
+        // core). Keep in lockstep with `cluster::wire::encode_manifest`
+        // and `shard::snapshot::encode` — pinned by a test against
+        // `cluster::manifest_for(...).len()`.
+        let snap = self.index.snapshot();
+        let n = snap.num_vertices() as u64;
+        let snapshot_bytes =
+            44 + self.index.name().len() as u64 + 8 * (n + 1) + 4 * 2 * snap.num_edges + 4 * n;
+        let state_bytes = 56
+            + 4 * st.globals.len() as u64
+            + 4 * st.owned_locals.len() as u64
+            + 4 * st.refined.len() as u64
+            + snapshot_bytes;
         Ok(ShardStatus {
             id: self.id,
             epoch: self.index.epoch(),
             cluster_epoch: st.cluster_epoch,
             owned: st.owned_locals.len(),
             k_max,
+            state_bytes,
         })
     }
 
@@ -565,11 +669,22 @@ impl ShardBackend for LocalShard {
         })
     }
 
-    fn refine_commit(&self, cluster_epoch: u64) -> Result<()> {
+    fn refine_commit(&self, cluster_epoch: u64) -> Result<Vec<(VertexId, u32)>> {
         let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        // the journal payload: entries the commit changes, plus every
+        // local registered since the previous commit (est is full-length
+        // after refine_start; refined may still have the old length)
+        let diff: Vec<(VertexId, u32)> = st
+            .est
+            .iter()
+            .enumerate()
+            .filter(|&(l, &e)| st.refined.get(l).copied() != Some(e))
+            .map(|(l, &e)| (st.globals[l], e))
+            .collect();
         st.refined = st.est.clone();
         st.cluster_epoch = cluster_epoch;
-        Ok(())
+        Ok(diff)
     }
 
     fn refined_coreness(&self, v: VertexId) -> Result<(Option<u32>, u64)> {
@@ -698,6 +813,82 @@ mod tests {
         assert_eq!(members.len(), 4);
         let st = s.status().unwrap();
         assert_eq!((st.cluster_epoch, st.owned, st.k_max), (7, 4, 3));
+    }
+
+    #[test]
+    fn commit_diff_names_exactly_what_changed() {
+        let g = examples::complete(4);
+        let shards = shards_for(&g, 1);
+        let s = &shards[0];
+        s.refine_start(None).unwrap();
+        s.refine_round(&[]).unwrap();
+        // first commit: everything is new (refined was empty)
+        let diff = s.refine_commit(1).unwrap();
+        assert_eq!(diff.len(), 4);
+        assert!(diff.iter().all(|&(_, c)| c == 3));
+        // a second pass over the unchanged graph commits an empty diff
+        s.refine_start(Some(0)).unwrap();
+        s.refine_round(&[]).unwrap();
+        assert!(s.refine_commit(2).unwrap().is_empty());
+        // growth: a new owned vertex appears in the next commit's diff
+        s.apply(&RoutedBatch {
+            new_owned: vec![9],
+            edits: vec![(EdgeEdit::Insert(0, 9), true)],
+        })
+        .unwrap();
+        s.refine_start(Some(1)).unwrap();
+        s.refine_round(&[]).unwrap();
+        let diff = s.refine_commit(3).unwrap();
+        assert!(diff.iter().any(|&(v, _)| v == 9), "{diff:?}");
+    }
+
+    #[test]
+    fn install_refined_diff_validates_and_mirrors_commits() {
+        let g = examples::complete(4);
+        let primaries = shards_for(&g, 1);
+        let replicas = shards_for(&g, 1);
+        let (primary, replica) = (&primaries[0], &replicas[0]);
+        primary.refine_start(None).unwrap();
+        primary.refine_round(&[]).unwrap();
+        let diff = primary.refine_commit(5).unwrap();
+        replica.install_refined_diff(&diff, 5).unwrap();
+        for v in 0..4u32 {
+            assert_eq!(
+                replica.refined_coreness(v).unwrap(),
+                primary.refined_coreness(v).unwrap()
+            );
+        }
+        // unknown vertex refused
+        assert!(replica.install_refined_diff(&[(99, 1)], 6).is_err());
+        // owned value above its degree refused
+        assert!(replica.install_refined_diff(&[(0, 50)], 6).is_err());
+        // a batch registering a vertex the diff does not cover is refused
+        replica
+            .apply(&RoutedBatch {
+                new_owned: vec![7],
+                edits: vec![],
+            })
+            .unwrap();
+        let err = replica.install_refined_diff(&[], 6).unwrap_err();
+        assert!(format!("{err:#}").contains("uninitialised"), "{err:#}");
+        // rejected installs leave the committed epoch untouched
+        assert_eq!(replica.refined_coreness(0).unwrap().1, 5);
+        // covering the new local succeeds
+        replica.install_refined_diff(&[(7, 0)], 6).unwrap();
+        assert_eq!(replica.refined_coreness(7).unwrap(), (Some(0), 6));
+    }
+
+    #[test]
+    fn state_bytes_matches_the_encoded_manifest() {
+        let g = examples::g1();
+        let shards = shards_for(&g, 2);
+        for s in &shards {
+            s.refine_start(None).unwrap();
+            s.refine_round(&[]).unwrap();
+            s.refine_commit(1).unwrap();
+            let want = crate::cluster::manifest_for(s, 2).len() as u64;
+            assert_eq!(s.status().unwrap().state_bytes, want);
+        }
     }
 
     #[test]

@@ -45,6 +45,10 @@ pub struct RefineOutcome {
     pub num_edges: u64,
     /// Distinct global boundary edges.
     pub boundary_edges: u64,
+    /// Per-shard refined diffs from the commit (backend order) — what
+    /// each shard's `refine_commit` changed. The cluster router journals
+    /// these for delta replica catch-up.
+    pub diffs: Vec<Vec<(VertexId, u32)>>,
 }
 
 /// One flush's dispatch: per-shard routed batches plus accounting.
@@ -205,14 +209,16 @@ pub fn refine(
             break;
         }
     }
+    let mut diffs = Vec::with_capacity(backends.len());
     for b in backends {
-        b.refine_commit(cluster_epoch)?;
+        diffs.push(b.refine_commit(cluster_epoch)?);
     }
     Ok(RefineOutcome {
         core: mailbox,
         stats,
         num_edges: arcs / 2,
         boundary_edges: boundary_arcs / 2,
+        diffs,
     })
 }
 

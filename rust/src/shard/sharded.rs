@@ -372,6 +372,8 @@ impl ShardedIndex {
             stats,
             num_edges,
             boundary_edges,
+            // in-process shards have no replicas to journal for
+            diffs: _,
         } = refined;
         let k_max = core.iter().copied().max().unwrap_or(0);
         // per-shard owned lists in ascending global order — the same

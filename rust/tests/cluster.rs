@@ -7,8 +7,13 @@
 //!    routed edit batches (flushed in lockstep with the single index).
 //! 2. **Fault paths** — replica failover on dead hosts and truncated
 //!    connections, stale-epoch replicas rejected by epoch-checked reads,
-//!    and snapshot-ship catch-up restoring them *without recomputing*.
-//! 3. **Multi-process equivalence** — the same pinning against real
+//!    and catch-up restoring them *without recomputing*.
+//! 3. **Delta catch-up** — a replica lagging N epochs catches up via the
+//!    journal's `SHARDDELTA` chain to a manifest byte-identical to the
+//!    primary's; journal gaps and corrupt/mismatched chains fall back to
+//!    the full-manifest re-ship; served `FLUSH` never blocks on replica
+//!    sync (the background daemon converges the replicas).
+//! 4. **Multi-process equivalence** — the same pinning against real
 //!    `pico serve` child processes, plus graceful SIGTERM shutdown.
 
 use pico::cluster::{manifest_for, ClusterConfig, ClusterIndex, Primary, RemoteShard, ReplicaGroup};
@@ -193,8 +198,10 @@ fn truncated_and_garbage_connections_error_cleanly() {
 fn stale_replicas_catch_up_via_snapshot_ship() {
     let g = gen::barabasi_albert(100, 3, 13);
     let (_svc, _handle, addr) = spawn_server();
+    // journal = 0 pins the *full-manifest* path: with the journal
+    // disabled, every catch-up must re-ship the whole shard
     let topo = ClusterConfig::parse(&format!(
-        "[cluster]\nname = cc\nshards = 2\n\
+        "[cluster]\nname = cc\nshards = 2\njournal = 0\n\
          [shard.0]\nprimary = local\nreplicas = {addr}\n\
          [shard.1]\nprimary = local\n"
     ))
@@ -219,7 +226,11 @@ fn stale_replicas_catch_up_via_snapshot_ship() {
     assert_eq!(cl.status()[0].replicas[0].1.as_ref().unwrap().cluster_epoch, 0);
 
     // snapshot catch-up
-    assert_eq!(cl.sync_replicas().unwrap(), 1);
+    let report = cl.sync_replicas().unwrap();
+    assert_eq!(report.shipped(), 1);
+    assert_eq!(report.snapshots, 1, "journal disabled: the full path must serve");
+    assert_eq!(report.deltas, 0);
+    assert!(report.snapshot_bytes > 0);
     let rs = cl.status();
     let replica = rs[0].replicas[0].1.as_ref().unwrap();
     assert_eq!(replica.cluster_epoch, 1, "replica caught up to the flush epoch");
@@ -236,7 +247,299 @@ fn stale_replicas_catch_up_via_snapshot_ship() {
     }
     assert_eq!(cl.groups()[0].stale_reads(), frozen);
     // everything already in sync: nothing ships
-    assert_eq!(cl.sync_replicas().unwrap(), 0);
+    assert_eq!(cl.sync_replicas().unwrap().shipped(), 0);
+}
+
+#[test]
+fn lagging_replica_catches_up_via_delta_chain() {
+    let g = gen::barabasi_albert(120, 3, 19);
+    let (_svc, _handle, addr) = spawn_server();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = dc\nshards = 2\n\
+         [shard.0]\nprimary = local\nreplicas = {addr}\n\
+         [shard.1]\nprimary = local\n"
+    ))
+    .unwrap();
+    let cl = ClusterIndex::build(&g, &topo, cfg()).unwrap();
+    let single = CoreIndex::new("single", &g);
+
+    // let the replica fall 3 epochs behind (no sync between flushes),
+    // in lockstep with the single-index oracle
+    let mut rng = Rng::new(0xDE17A);
+    let mut n = g.num_vertices() as u64;
+    for _ in 0..3 {
+        let mut edits = Vec::new();
+        while edits.len() < 8 {
+            let u = rng.below(n + 6) as u32;
+            let v = rng.below(n + 6) as u32;
+            if u == v {
+                continue;
+            }
+            edits.push(if rng.chance(0.7) {
+                EdgeEdit::Insert(u, v)
+            } else {
+                EdgeEdit::Delete(u, v)
+            });
+        }
+        for &e in &edits {
+            cl.submit(e);
+        }
+        let out = cl.flush().unwrap();
+        apply_batch(&single, &edits, &cfg());
+        n = out.snapshot.num_vertices() as u64;
+    }
+    assert_eq!(cl.epoch(), 3);
+    let st = cl.status();
+    assert_eq!(
+        st[0].replicas[0].1.as_ref().unwrap().cluster_epoch,
+        0,
+        "replica must be 3 epochs behind before the sync"
+    );
+
+    // catch-up must take the delta path, and the chain must be smaller
+    // than the full manifest it replaces
+    let report = cl.sync_replicas().unwrap();
+    assert_eq!(report.deltas, 1, "the journal covers the lag: delta path");
+    assert_eq!(report.snapshots, 0);
+    assert_eq!(report.failed, 0);
+    assert_eq!(report.max_lag_epochs, 3);
+    let full = cl.groups()[0].primary_manifest(2).unwrap();
+    assert!(
+        report.delta_bytes < full.len() as u64,
+        "delta chain ({} B) must undercut the manifest ({} B)",
+        report.delta_bytes,
+        full.len()
+    );
+    assert_eq!(cl.groups()[0].sync_stats().deltas_shipped, 1);
+
+    // the replayed replica is byte-identical to the primary: same
+    // manifest (graph, id tables, refined coreness, both epochs) —
+    // nothing was recomputed, everything was replayed
+    let replica_manifest = cl.groups()[0].replicas()[0].fetch_manifest().unwrap();
+    assert_eq!(replica_manifest, full, "replica manifest must equal the primary's");
+    let rs = cl.status();
+    let replica = rs[0].replicas[0].1.as_ref().unwrap();
+    assert_eq!(replica.cluster_epoch, 3);
+    assert_eq!(replica.epoch, rs[0].primary.as_ref().unwrap().epoch);
+
+    // reads at the head land on the replica with no stale rejections,
+    // and the merged answers still equal the single-index oracle
+    let frozen = cl.groups()[0].stale_reads();
+    check_against_oracle(&cl, &single);
+    assert_eq!(cl.groups()[0].stale_reads(), frozen);
+    // a second pass has nothing to do
+    assert_eq!(cl.sync_replicas().unwrap().shipped(), 0);
+}
+
+#[test]
+fn journal_gap_falls_back_to_full_manifest_ship() {
+    let g = gen::erdos_renyi(80, 220, 23);
+    let (_svc, _handle, addr) = spawn_server();
+    // retention 2 < the 4 epochs of lag we create: the chain has a gap
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = gap\nshards = 1\njournal = 2\n\
+         [shard.0]\nprimary = local\nreplicas = {addr}\n"
+    ))
+    .unwrap();
+    let cl = ClusterIndex::build(&g, &topo, cfg()).unwrap();
+    for i in 0..4u32 {
+        cl.submit(EdgeEdit::Insert(i, i + 30));
+        cl.submit(EdgeEdit::Insert(i + 1, i + 50));
+        cl.flush().unwrap();
+    }
+    assert_eq!(cl.epoch(), 4);
+    let gap = cl.journal_chain_bytes(0, 0, 4);
+    assert!(gap.is_none(), "retention 2 cannot cover a 4-epoch chain");
+    assert!(cl.journal_chain_bytes(0, 2, 4).is_some());
+
+    let report = cl.sync_replicas().unwrap();
+    assert_eq!(report.snapshots, 1, "the gap forces the full-manifest path");
+    assert_eq!(report.deltas, 0);
+    assert_eq!(report.failed, 0);
+    // the re-shipped replica equals the primary byte-for-byte too
+    let full = cl.groups()[0].primary_manifest(1).unwrap();
+    assert_eq!(cl.groups()[0].replicas()[0].fetch_manifest().unwrap(), full);
+    let (snap, graph) = cl.consistent_view().unwrap();
+    assert_eq!(snap.core, bz_coreness(&graph));
+
+    // ...and now that the replica is within retention, deltas serve again
+    cl.submit(EdgeEdit::Insert(2, 70));
+    cl.flush().unwrap();
+    let report = cl.sync_replicas().unwrap();
+    assert_eq!((report.deltas, report.snapshots), (1, 0));
+}
+
+#[test]
+fn corrupt_or_mismatched_deltas_fall_back_to_full_ship() {
+    use pico::cluster::EpochDelta;
+    use pico::cluster::wire;
+
+    let g = gen::erdos_renyi(60, 150, 29);
+    let plan = partition(&g, 1, PartitionStrategy::Hash);
+    let primary = Arc::new(LocalShard::from_plan("cx", &plan.shards[0], cfg()));
+    let backends: Vec<Arc<dyn ShardBackend>> = vec![primary.clone() as Arc<dyn ShardBackend>];
+    refine(&backends, g.num_vertices(), None, 0, 1).unwrap();
+
+    let (_svc, _handle, addr) = spawn_server();
+    let replica = RemoteShard::new(0, addr, "cx/shard0");
+    replica.host(&manifest_for(&primary, 1)).unwrap();
+    let epoch_before = replica.status().unwrap().cluster_epoch;
+    assert_eq!(epoch_before, 0);
+
+    // a chain whose base is ahead of the replica's epoch is refused
+    let stray = [EpochDelta {
+        to_epoch: 6,
+        batch: Default::default(),
+        diff: vec![],
+    }];
+    let refs: Vec<&EpochDelta> = stray.iter().collect();
+    let chain = wire::encode_delta_chain(5, 6, &refs);
+    let err = replica.apply_delta(5, 6, &chain).unwrap_err();
+    assert!(format!("{err:#}").contains("replica is at 0"), "{err:#}");
+
+    // corrupt payloads (truncated, bit-flipped magic) are refused
+    let ok = [EpochDelta {
+        to_epoch: 1,
+        batch: Default::default(),
+        diff: vec![],
+    }];
+    let refs: Vec<&EpochDelta> = ok.iter().collect();
+    let chain = wire::encode_delta_chain(0, 1, &refs);
+    assert!(replica.apply_delta(0, 1, &chain[..chain.len() - 1]).is_err());
+    let mut evil = chain.clone();
+    evil[0] ^= 0xFF;
+    assert!(replica.apply_delta(0, 1, &evil).is_err());
+    // a diff claiming an impossible coreness is refused
+    let lying = [EpochDelta {
+        to_epoch: 1,
+        batch: Default::default(),
+        diff: vec![(0, 10_000)],
+    }];
+    let refs: Vec<&EpochDelta> = lying.iter().collect();
+    let lying_chain = wire::encode_delta_chain(0, 1, &refs);
+    assert!(replica.apply_delta(0, 1, &lying_chain).is_err());
+
+    // every rejection left the replica untouched at its old epoch...
+    assert_eq!(replica.status().unwrap().cluster_epoch, epoch_before);
+    // ...and a full-manifest re-ship still recovers it completely
+    refine(&backends, g.num_vertices(), Some(0), 1, 1).unwrap();
+    replica.host(&manifest_for(&primary, 1)).unwrap();
+    assert_eq!(replica.status().unwrap().cluster_epoch, 1);
+    assert_eq!(replica.fetch_manifest().unwrap(), manifest_for(&primary, 1));
+}
+
+#[test]
+fn failed_flush_forces_full_ship_before_deltas_resume() {
+    use pico::shard::hash_owner;
+
+    let g = gen::erdos_renyi(70, 180, 37);
+    let (_rsvc, _rhandle, replica_addr) = spawn_server();
+    let (doomed_svc, doomed_handle, doomed_addr) = spawn_server();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = po\nshards = 2\n\
+         [shard.0]\nprimary = local\nreplicas = {replica_addr}\n\
+         [shard.1]\nprimary = {doomed_addr}\n"
+    ))
+    .unwrap();
+    let cl = ClusterIndex::build(&g, &topo, cfg()).unwrap();
+    // shard-internal edits, one per shard, so the failing flush below
+    // applies shard 0 (local) first and then dies on shard 1 (remote)
+    let pick = |shard: u32| -> (u32, u32) {
+        let mut it = (0..70u32).filter(|&v| hash_owner(v, 2) == shard);
+        (it.next().unwrap(), it.next().unwrap())
+    };
+    let (a0, b0) = pick(0);
+    let (a1, b1) = pick(1);
+
+    // healthy round first: the delta path serves
+    cl.submit(EdgeEdit::Insert(a0, b0));
+    cl.submit(EdgeEdit::Insert(a1, b1));
+    cl.flush().unwrap();
+    assert_eq!(cl.sync_replicas().unwrap().deltas, 1);
+
+    // kill shard 1's primary mid-life (drain closes its connections so
+    // the next SHARDAPPLY fails instead of reusing the pooled socket)
+    doomed_handle.drain(std::time::Duration::from_secs(5));
+    drop(doomed_handle);
+    drop(doomed_svc);
+    cl.submit(EdgeEdit::Delete(a0, b0));
+    cl.submit(EdgeEdit::Delete(a1, b1));
+    assert!(cl.flush().is_err(), "shard 1's primary is gone");
+
+    // shard 0's primary now holds the orphaned delete with no published
+    // epoch: the replica's committed epoch still MATCHES the router's,
+    // but epoch equality no longer implies state equality — the next
+    // sync must re-ship the full manifest, not trust a delta chain
+    let report = cl.sync_replicas().unwrap();
+    assert_eq!(
+        (report.deltas, report.snapshots),
+        (0, 1),
+        "poisoned group must full-ship even an epoch-matching replica"
+    );
+    // ...and the re-shipped replica carries the orphaned edit too
+    let full = cl.groups()[0].primary_manifest(2).unwrap();
+    assert_eq!(cl.groups()[0].replicas()[0].fetch_manifest().unwrap(), full);
+    // the poison clears once the group is whole again
+    assert_eq!(cl.sync_replicas().unwrap().shipped(), 0);
+}
+
+#[test]
+fn served_flush_never_blocks_on_sync_and_the_daemon_converges() {
+    use pico::service::{ReplicaSyncDaemon, Session};
+    use std::time::{Duration, Instant};
+
+    let g = gen::barabasi_albert(90, 3, 31);
+    let (_replica_svc, _replica_handle, addr) = spawn_server();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = async\nshards = 2\n\
+         [shard.0]\nprimary = local\nreplicas = {addr}\n\
+         [shard.1]\nprimary = local\n"
+    ))
+    .unwrap();
+    let cl = Arc::new(ClusterIndex::build(&g, &topo, cfg()).unwrap());
+    let svc = CoreService::new(cfg());
+    svc.open_cluster("async", cl.clone());
+    let mut session = Session::new("async");
+
+    // a served FLUSH publishes the primary epoch and returns — it must
+    // not probe or ship replicas (no synced= field, replica still stale)
+    svc.handle_command(&mut session, "INSERT 0 44", 0);
+    svc.handle_command(&mut session, "INSERT 2 61", 0);
+    let flush = svc.handle_command(&mut session, "FLUSH", 0);
+    assert!(flush.starts_with("OK epoch=1"), "{flush}");
+    assert!(!flush.contains("synced="), "FLUSH must not sync inline: {flush}");
+    assert_eq!(
+        cl.status()[0].replicas[0].1.as_ref().unwrap().cluster_epoch,
+        0,
+        "the replica must still be stale right after FLUSH"
+    );
+
+    // the background daemon converges it without any further flushes
+    let daemon = ReplicaSyncDaemon::spawn(cl.clone(), Duration::from_millis(20));
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let caught_up = cl.status()[0].replicas[0]
+            .1
+            .as_ref()
+            .map(|st| st.cluster_epoch == cl.epoch())
+            .unwrap_or(false);
+        if caught_up {
+            break;
+        }
+        assert!(Instant::now() < deadline, "daemon never converged the replica");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    assert!(daemon.syncs() >= 1);
+    daemon.stop();
+    let stats = cl.groups()[0].sync_stats();
+    assert!(
+        stats.deltas_shipped + stats.snapshots_shipped >= 1,
+        "the daemon's ship must be visible in the group counters: {stats:?}"
+    );
+    // the SHARDS verb surfaces the aggregate sync metrics
+    let shards = svc.handle_command(&mut session, "SHARDS", 0);
+    assert!(shards.contains("deltas="), "{shards}");
+    assert!(shards.contains("lag="), "{shards}");
 }
 
 /// Kills the `pico serve` child even when an assertion fails first.
