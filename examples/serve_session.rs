@@ -4,11 +4,42 @@
 //! binary snapshot to a replica, then serve the same graph as a
 //! *cluster* with a remote shard and a read replica.
 //!
+//! # Who owns what
+//!
+//! The protocol's *transport* — line/frame codec and every wire magic
+//! (`rust/src/net/codec.rs`), the per-connection session state machine
+//! with `AUTH` gating and `METRICS` (`net/conn.rs`), the bounded
+//! worker-pool server (`net/pool.rs`), and the one shared client
+//! (`net/client.rs`) — lives in the `net` module. Verb *semantics* live
+//! in `service::server`, which also carries the authoritative protocol
+//! table (CI greps the dispatch tables in `net/conn.rs` against it, so
+//! the table cannot drift).
+//!
+//! Transport knobs on `pico serve`:
+//!
+//! * `--workers N` — pool threads multiplexing all connections
+//!   (default `min(cores, 16)`): connections are queue entries, not
+//!   threads.
+//! * `--max-conns N` — hard connection cap (default 1024); accept
+//!   #cap+1 is answered `ERR server at connection capacity (...)` and
+//!   closed.
+//! * `PICO_AUTH_TOKEN` env (or `auth_token` in the cluster topology) —
+//!   gates the state-mutating shard verbs (`SHARDHOST`, `SHARDAPPLY`,
+//!   `SHARDREFINE`, `SHARDSNAP`, `SHARDDELTA`) behind an
+//!   `AUTH <token>` preamble, compared in constant time. `pico query`
+//!   and the cluster router send it automatically when configured.
+//! * `METRICS` (any session) — transport counters:
+//!   `OK workers= conn_cap= accepted= active= queued= rejected=
+//!   timed_out= reclaimed=` (`rejected` = refused over the cap,
+//!   `timed_out` = slow-loris requests cut off mid-read, `reclaimed` =
+//!   idle connections closed to free slots while the pool sat at its
+//!   cap).
+//!
 //! The same flow over two shells:
 //!
 //! ```text
-//! $ pico serve --dataset social-ba --addr 127.0.0.1:7571 --shards 4
-//! $ pico query --cmd 'CORENESS 0; INSERT 17 99; FLUSH; CORENESS 17; SHARDS'
+//! $ pico serve --dataset social-ba --addr 127.0.0.1:7571 --shards 4 --workers 8
+//! $ pico query --cmd 'CORENESS 0; INSERT 17 99; FLUSH; CORENESS 17; SHARDS; METRICS'
 //! $ pico query --binary --cmd 'SNAPSHOT 0' --snapshot-file /tmp/shard0.snap
 //! $ pico query --binary --cmd 'RESTORE replica' --snapshot-file /tmp/shard0.snap
 //! ```
@@ -42,11 +73,14 @@
 //! routed batches + refined-coreness diffs — bytes scale with the edits,
 //! not the graph), falling back to a full `SHARDHOST` manifest re-ship
 //! on any gap or corruption. `CORENESS` reads fan out over the shard's
-//! replica group with epoch-checked failover. ctrl-c / SIGTERM on
-//! either host drains connections, runs one final sync, and flushes
-//! pending edits before exit. `pico cluster status` shows each
-//! replica's lag in epochs and the state bytes a full re-ship would
-//! cost.
+//! replica group with epoch-checked failover, and a shard-local probe
+//! (`SHARDCORE <v>`) for a remotely-owned vertex answers
+//! `REDIRECT shard= addr= graph=` — `pico query` follows it one hop to
+//! the shard host. ctrl-c / SIGTERM on either host drains connections
+//! (in-flight requests finish; the bounded pool closes idle ones at
+//! their next poll), runs one final sync, and flushes pending edits
+//! before exit. `pico cluster status` shows each replica's lag in
+//! epochs and the state bytes a full re-ship would cost.
 //!
 //!     cargo run --release --example serve_session
 
@@ -118,6 +152,7 @@ fn main() -> anyhow::Result<()> {
             send(&mut w, &mut r, "HISTO");
             send(&mut w, &mut r, "DENSEST");
             send(&mut w, &mut r, "STATS");
+            send(&mut w, &mut r, "METRICS"); // transport counters (net::pool)
             send(&mut w, &mut r, "QUIT");
         }
     });

@@ -1,6 +1,10 @@
 //! Serving-layer benchmark: concurrent read throughput under batched
-//! updates, batched-update latency (p50/p99), and the incremental-vs-
-//! recompute crossover that calibrates `BatchConfig::recompute_fraction`.
+//! updates, batched-update latency (p50/p99), the incremental-vs-
+//! recompute crossover that calibrates `BatchConfig::recompute_fraction`,
+//! and a connection-churn section over the bounded `net::pool`
+//! transport (accept→first-reply latency + sustained qps at rising
+//! concurrent-client counts — the capacity claim of the worker-pool
+//! refactor, recorded in the CI `BENCH_*.json` artifact).
 //!
 //! The crossover table is the serving analog of the paper's Table VII
 //! peel-vs-index2core crossover: below it, per-edit subcore maintenance
@@ -213,7 +217,121 @@ fn bench_crossover(g: &CsrGraph) -> Option<f64> {
     crossover
 }
 
-/// Part 3 — one full-recompute decomposition on the serving graph, for
+/// Part 3 — connection churn over the bounded worker pool: per client
+/// count, every client dials fresh (accept→first-PING-reply latency),
+/// then hammers CORENESS queries for a fixed window (sustained qps
+/// across all live connections). Client counts far above the worker
+/// count are the point: the pool multiplexes them instead of spawning
+/// a thread per connection.
+fn bench_connection_churn(g: &CsrGraph) -> Vec<(&'static str, f64)> {
+    use pico::net::NetConfig;
+    use pico::service::{serve_with, CoreService};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::{Duration, Instant};
+
+    // (count, latency key, qps key): static keys for the json artifact
+    let plans: &[(usize, &'static str, &'static str)] = if quick_bench() {
+        &[
+            (8, "churn_accept_p99_ms_8", "churn_qps_8"),
+            (32, "churn_accept_p99_ms_32", "churn_qps_32"),
+        ]
+    } else {
+        &[
+            (64, "churn_accept_p99_ms_64", "churn_qps_64"),
+            (256, "churn_accept_p99_ms_256", "churn_qps_256"),
+            (1024, "churn_accept_p99_ms_1024", "churn_qps_1024"),
+        ]
+    };
+    let window = if quick_bench() {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+
+    let svc = Arc::new(CoreService::new(BatchConfig::default()));
+    svc.open("bench", g);
+    // cap comfortably above the largest client count: the previous
+    // plan's sockets are reaped asynchronously, and a capacity
+    // rejection here would panic the bench instead of measuring it
+    let net = NetConfig {
+        max_connections: 4096,
+        ..Default::default()
+    };
+    let handle = serve_with(svc, "127.0.0.1:0", net).expect("bind churn server");
+    let addr = handle.addr();
+    let n = g.num_vertices() as u32;
+
+    println!("connection churn (bounded pool, default workers):");
+    println!(
+        "{:>8}  {:>16}  {:>16}  {:>12}",
+        "clients", "accept p50", "accept p99", "qps"
+    );
+    let mut json = Vec::new();
+    for &(clients, lat_key, qps_key) in plans {
+        let queries = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut joins = Vec::with_capacity(clients);
+        // the wall clock covers the same interval the query counter
+        // does: from before the first client spawns to the stop store
+        // (join time excluded) — at 1024 clients the spawn loop is a
+        // real fraction of the window and must not skew qps
+        let wall = Timer::start();
+        for c in 0..clients {
+            let queries = queries.clone();
+            let stop = stop.clone();
+            joins.push(std::thread::spawn(move || {
+                // fresh dial: connection churn is part of the measurement
+                let stream = TcpStream::connect(addr).expect("dial");
+                let mut w = stream.try_clone().unwrap();
+                let mut r = BufReader::new(stream);
+                let mut line = String::new();
+                let t = Instant::now();
+                writeln!(w, "PING").unwrap();
+                w.flush().unwrap();
+                r.read_line(&mut line).unwrap();
+                assert_eq!(line.trim_end(), "OK pong");
+                let first_reply = t.elapsed();
+                // sustained load until the window closes
+                let mut rng = Rng::new(0xC0DE + c as u64);
+                let mut local = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    line.clear();
+                    writeln!(w, "CORENESS {}", rng.below(n as u64)).unwrap();
+                    w.flush().unwrap();
+                    r.read_line(&mut line).unwrap();
+                    assert!(line.starts_with("OK core="), "{line}");
+                    local += 1;
+                }
+                queries.fetch_add(local, Ordering::Relaxed);
+                let _ = writeln!(w, "QUIT");
+                first_reply
+            }));
+        }
+        std::thread::sleep(window);
+        stop.store(true, Ordering::Relaxed);
+        let wall_s = wall.elapsed().as_secs_f64();
+        let mut accepts = Samples::default();
+        for j in joins {
+            accepts.push(j.join().expect("churn client"));
+        }
+        let qps = queries.load(Ordering::Relaxed) as f64 / wall_s;
+        println!(
+            "{:>8}  {:>16}  {:>16}  {:>12}",
+            clients,
+            fmt::ms(accepts.percentile_ms(50.0)),
+            fmt::ms(accepts.percentile_ms(99.0)),
+            fmt::si(qps as u64)
+        );
+        json.push((lat_key, accepts.percentile_ms(99.0)));
+        json.push((qps_key, qps));
+    }
+    handle.stop();
+    println!();
+    json
+}
+
+/// Part 4 — one full-recompute decomposition on the serving graph, for
 /// scale: what a cold index build / worst-case fallback costs.
 fn bench_cold_build(g: &CsrGraph) -> f64 {
     let t = Timer::start();
@@ -239,6 +357,7 @@ fn main() {
         tier
     );
     let mut json = bench_concurrent_serving(&g);
+    json.extend(bench_connection_churn(&g));
     let crossover = bench_crossover(&g);
     let cold_ms = bench_cold_build(&g);
     json.push(("crossover_fraction", crossover.unwrap_or(f64::NAN)));

@@ -230,11 +230,15 @@ mod shutdown {
 }
 
 /// `pico serve` — host core indices (single, sharded, or a whole
-/// cluster via `--cluster <cfg>`) behind the TCP server (see
-/// `service::server` docs for the line + binary protocols). SIGTERM or
-/// ctrl-c drains connections and flushes pending edits before exiting.
+/// cluster via `--cluster <cfg>`) behind the bounded `net` transport
+/// (see `service::server` docs for the line + binary protocols, and
+/// `net::pool` for `--workers` / `--max-conns`). The shard verbs are
+/// gated behind `AUTH` when `PICO_AUTH_TOKEN` (or the topology's
+/// `auth_token`) is set. SIGTERM or ctrl-c drains connections and
+/// flushes pending edits before exiting.
 pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
-    use crate::service::{serve, BatchConfig, CoreService};
+    use crate::net::{default_workers, NetConfig};
+    use crate::service::{serve_with, BatchConfig, CoreService};
     use crate::shard::PartitionStrategy;
 
     let addr = args.get_or("addr", "127.0.0.1:7571").to_string();
@@ -248,6 +252,22 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     }
     let strategy = PartitionStrategy::parse(args.get_or("partition", "hash"))?;
     let sync_interval_ms = args.parse_num::<u64>("sync-interval")?.unwrap_or(1000);
+    let max_connections = match args.parse_num::<usize>("max-conns")? {
+        Some(0) => bail!("--max-conns must be at least 1"),
+        Some(cap) => cap,
+        None => NetConfig::default().max_connections,
+    };
+    // a bare `pico serve` reads the env token; --cluster mode below may
+    // supply the topology's token as the fallback
+    let env_token = crate::net::env_auth_token();
+    let mut net = NetConfig {
+        workers: args.parse_num::<usize>("workers")?.unwrap_or(0),
+        max_connections,
+        conn: crate::net::ConnConfig {
+            auth_token: env_token,
+            ..Default::default()
+        },
+    };
     let batch = BatchConfig {
         recompute_fraction: args
             .parse_num::<f64>("batch-fraction")?
@@ -268,6 +288,11 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             bail!("--shards/--partition come from the topology file in --cluster mode");
         }
         let topo = crate::cluster::ClusterConfig::load(path)?;
+        // the coordinator both dials shard hosts with the token (inside
+        // ClusterIndex::build) and gates its own shard verbs on it
+        if net.conn.auth_token.is_none() {
+            net.conn.auth_token = topo.effective_auth_token();
+        }
         let dataset = args.get("dataset").unwrap_or(&topo.dataset).to_string();
         let spec = resolve_dataset(&dataset)?;
         let g = spec.load()?;
@@ -321,7 +346,14 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         };
         (spec.name(), snap)
     };
-    let handle = serve(service.clone(), &addr)?;
+    let authed = net.conn.auth_token.is_some();
+    let workers = if net.workers == 0 {
+        default_workers()
+    } else {
+        net.workers
+    };
+    let max_conns = net.max_connections;
+    let handle = serve_with(service.clone(), &addr, net)?;
     println!(
         "serving '{}' on {} — |V|={} |E|={} k_max={} (epoch {})",
         name,
@@ -330,6 +362,10 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         s.num_edges,
         s.k_max,
         s.epoch
+    );
+    println!(
+        "transport: {workers} workers, {max_conns} connection cap, shard verbs {}",
+        if authed { "AUTH-gated" } else { "open (set PICO_AUTH_TOKEN to gate)" }
     );
     println!(
         "batch policy: recompute above max({}, {:.1}% of |E|) coalesced edits",
@@ -497,71 +533,55 @@ fn cluster_status(args: &Args) -> Result<()> {
 }
 
 /// The coordinator's published cluster epoch — the authoritative lag
-/// baseline for `pico cluster status --addr`. One line-protocol session:
+/// baseline for `pico cluster status --addr`. One shared-client session:
 /// `USE <cluster name>` then `EPOCH`.
 fn coordinator_epoch(addr: &str, name: &str) -> Result<u64> {
-    use std::io::{BufRead, BufReader, Write};
+    use crate::net::client::{field_u64, Client};
 
-    let stream = std::net::TcpStream::connect(addr)
+    let mut client = Client::connect(addr)
         .with_context(|| format!("connecting to the coordinator at {addr}"))?;
-    let mut writer = stream.try_clone().context("cloning the connection")?;
-    let mut reader = BufReader::new(stream);
-    let mut send = |cmd: String| -> Result<String> {
-        writeln!(writer, "{cmd}")?;
-        writer.flush()?;
-        let mut line = String::new();
-        if reader.read_line(&mut line)? == 0 {
-            bail!("coordinator closed the connection after '{cmd}'");
-        }
-        let line = line.trim_end().to_string();
-        if line.starts_with("ERR") {
-            bail!("coordinator rejected '{cmd}': {line}");
-        }
-        Ok(line)
-    };
-    send(format!("USE {name}"))?;
-    let reply = send("EPOCH".to_string())?;
-    let epoch = reply
-        .split_whitespace()
-        .find_map(|tok| tok.strip_prefix("epoch="))
-        .ok_or_else(|| anyhow::anyhow!("no epoch= in reply '{reply}'"))?;
-    let epoch = epoch
-        .parse::<u64>()
-        .with_context(|| format!("bad epoch in reply '{reply}'"))?;
-    let _ = send("QUIT".to_string());
+    client
+        .use_graph(name)
+        .with_context(|| format!("selecting '{name}' on the coordinator"))?;
+    let reply = client.send_line("EPOCH")?;
+    if reply.starts_with("ERR") {
+        bail!("coordinator rejected 'EPOCH': {reply}");
+    }
+    let epoch = field_u64(&reply, "epoch")?;
+    client.quit();
     Ok(epoch)
 }
 
-/// `pico query` — one-shot client: send `;`-separated protocol commands,
-/// print each reply line. With `--binary` the connection upgrades to the
-/// length-prefixed framing, unlocking `SNAPSHOT`/`RESTORE`:
-/// `--snapshot-file PATH` is where a `SNAPSHOT` reply payload is written
-/// and where a `RESTORE` command's payload is read from.
+/// `pico query` — one-shot client over the shared `net` client: send
+/// `;`-separated protocol commands, print each reply line. With
+/// `--binary` the connection upgrades to the length-prefixed framing,
+/// unlocking `SNAPSHOT`/`RESTORE`: `--snapshot-file PATH` is where a
+/// `SNAPSHOT` reply payload is written and where a `RESTORE` command's
+/// payload is read from. `PICO_AUTH_TOKEN` (when set) is sent as the
+/// `AUTH` preamble so gated shard verbs work from the CLI, and a
+/// cluster coordinator's `REDIRECT` reply to a shard-local probe is
+/// followed for one hop to the owning shard host.
 pub fn cmd_query(args: &Args, _cfg: &Config) -> Result<()> {
-    use std::io::{BufRead, BufReader, Write};
+    use crate::net::client::{follow_redirect, parse_redirect, Client};
+    use crate::net::codec::MAX_FRAME_BYTES;
 
     let addr = args.get_or("addr", "127.0.0.1:7571");
     let Some(script) = args.get("cmd") else {
         bail!("--cmd is required, e.g. --cmd 'INSERT 1 2; FLUSH; CORENESS 1'");
     };
     let snapshot_file = args.get("snapshot-file");
-    let stream = std::net::TcpStream::connect(addr)
-        .with_context(|| format!("connecting to pico serve at {addr}"))?;
-    let mut writer = stream.try_clone().context("cloning the connection")?;
-    let mut reader = BufReader::new(stream);
-    let binary = args.has("binary");
-    if binary {
-        writeln!(writer, "BINARY")?;
-        writer.flush()?;
-        let mut reply = String::new();
-        if reader.read_line(&mut reply)? == 0 || reply.trim_end() != "OK binary" {
-            bail!("binary upgrade refused: {}", reply.trim_end());
-        }
+    let auth = crate::net::env_auth_token();
+    let mut client = Client::connect(addr)?;
+    if let Some(token) = &auth {
+        client.auth(token)?;
     }
+    if args.has("binary") {
+        client.upgrade_binary()?;
+    }
+    let binary = client.is_binary();
     let mut failed = false;
     for cmd in script.split(';').map(str::trim).filter(|c| !c.is_empty()) {
         let reply = if binary {
-            use crate::service::server::{read_frame, write_frame, MAX_FRAME_BYTES};
             let mut body = cmd.as_bytes().to_vec();
             if cmd.to_ascii_uppercase().starts_with("RESTORE") {
                 let Some(path) = snapshot_file else {
@@ -576,13 +596,10 @@ pub fn cmd_query(args: &Args, _cfg: &Config) -> Result<()> {
                     );
                 }
             }
-            write_frame(&mut writer, &body)?;
-            let frame = read_frame(&mut reader, MAX_FRAME_BYTES)?
-                .with_context(|| format!("server closed the connection after '{cmd}'"))?;
-            let (head, payload) = match frame.iter().position(|&b| b == b'\n') {
-                Some(i) => (&frame[..i], &frame[i + 1..]),
-                None => (&frame[..], &frame[..0]),
-            };
+            let frame = client
+                .call_raw(&body)
+                .with_context(|| format!("exchanging '{cmd}' with {addr}"))?;
+            let (head, payload) = crate::net::codec::split_frame(&frame);
             let head = String::from_utf8_lossy(head).into_owned();
             if !payload.is_empty() && head.starts_with("OK snapshot") {
                 println!("{head}");
@@ -600,22 +617,22 @@ pub fn cmd_query(args: &Args, _cfg: &Config) -> Result<()> {
             }
             head
         } else {
-            writeln!(writer, "{cmd}")?;
-            writer.flush()?;
-            let mut reply = String::new();
-            if reader.read_line(&mut reply)? == 0 {
-                bail!("server closed the connection after '{cmd}'");
+            client.send_line(cmd)?
+        };
+        // cluster-aware probes: the coordinator names the shard host,
+        // the client hops there once and prints the real answer
+        let reply = match parse_redirect(&reply) {
+            Some(rd) => {
+                println!("{reply}");
+                let hop = follow_redirect(&rd, cmd, auth.as_deref())?;
+                format!("{hop}  (via {})", rd.addr)
             }
-            reply.trim_end().to_string()
+            None => reply,
         };
         println!("{reply}");
         failed |= reply.starts_with("ERR");
     }
-    if binary {
-        let _ = crate::service::server::write_frame(&mut writer, b"QUIT");
-    } else {
-        let _ = writeln!(writer, "QUIT");
-    }
+    client.quit();
     if failed {
         bail!("at least one command was rejected");
     }

@@ -41,6 +41,14 @@ SERVE OPTIONS:
     --dataset NAME       Initial hosted graph (default g1)
     --shards N           Partition the hosted graph across N shards (default 1)
     --partition S        Partition strategy: hash | range (default hash)
+    --workers N          Transport worker threads multiplexing the
+                         connections (default min(cores, 16); net::pool)
+    --max-conns N        Hard cap on live connections (default 1024);
+                         accept #cap+1 gets one ERR line and a close.
+                         Transport counters surface on the METRICS verb.
+                         Set PICO_AUTH_TOKEN (or the topology's
+                         auth_token) to gate the shard verbs behind an
+                         AUTH preamble.
     --cluster CFG        Serve a multi-host cluster from a topology file:
                          shards placed local or shipped to remote `pico
                          serve` hosts, replica groups with epoch-checked
@@ -75,7 +83,12 @@ QUERY OPTIONS:
     --addr HOST:PORT     Server address (default 127.0.0.1:7571)
     --cmd 'A; B; C'      Protocol commands, `;`-separated (see service::server
                          docs: CORENESS, MEMBERS, HISTO, DENSEST, INSERT,
-                         DELETE, FLUSH, EPOCH, STATS, OPEN, USE, GRAPHS, SHARDS)
+                         DELETE, FLUSH, EPOCH, STATS, METRICS, OPEN, USE,
+                         GRAPHS, SHARDS). A coordinator's REDIRECT reply
+                         to a shard-local probe (e.g. SHARDCORE) is
+                         followed one hop to the owning shard host;
+                         PICO_AUTH_TOKEN is sent as the AUTH preamble
+                         when set.
     --binary             Upgrade to the length-prefixed binary protocol
                          (unlocks SNAPSHOT / RESTORE)
     --snapshot-file P    Where SNAPSHOT payloads are written and RESTORE

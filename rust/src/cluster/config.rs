@@ -12,6 +12,15 @@
 //! partition = hash       # hash | range
 //! journal = 64           # epochs of per-shard deltas kept for replica
 //!                        # catch-up (0 disables: always full re-ship)
+//! journal_bytes = 1048576  # optional byte budget per shard journal
+//!                          # (encoded delta bytes; 0 = unbounded)
+//! auth_token = s3cret    # optional: the coordinator gates its own
+//!                        # shard verbs on it and sends it as the AUTH
+//!                        # preamble when dialing. NOTE: it is NOT
+//!                        # shipped to remote hosts — start each
+//!                        # remote `pico serve` with PICO_AUTH_TOKEN
+//!                        # set to the same value, or that host's
+//!                        # shard verbs stay open
 //!
 //! [shard.0]
 //! primary = local        # in the coordinator process
@@ -58,6 +67,18 @@ pub struct ClusterConfig {
     /// catch-up (see [`crate::cluster::journal`]); 0 disables the
     /// journal so every catch-up re-ships the full manifest.
     pub journal_epochs: usize,
+    /// Byte budget per shard journal (encoded delta bytes; 0 =
+    /// unbounded). Evicts oldest epochs when it trips, independently of
+    /// `journal_epochs`.
+    pub journal_bytes: usize,
+    /// Shared token the *coordinator* gates its shard verbs on and
+    /// sends as the `AUTH` preamble when dialing shard hosts; `None`
+    /// leaves them open. The token is never shipped over the wire to
+    /// configure a host — each remote `pico serve` must be started
+    /// with `PICO_AUTH_TOKEN` set to the same value to actually gate
+    /// its own verbs (an unguarded host accepts any preamble). The env
+    /// var overrides this field at serve/dial time.
+    pub auth_token: Option<String>,
     pub shards: Vec<ShardSpec>,
 }
 
@@ -76,6 +97,19 @@ impl ClusterConfig {
             Some(v) => v
                 .parse()
                 .context("cluster.journal must be a number of epochs (0 disables)")?,
+        };
+        let journal_bytes: usize = match kv.get("cluster.journal_bytes") {
+            None => 0,
+            Some(v) => v
+                .parse()
+                .context("cluster.journal_bytes must be a byte count (0 = unbounded)")?,
+        };
+        let auth_token = match kv.get("cluster.auth_token") {
+            None => None,
+            Some(t) if t.is_empty() || t.contains(char::is_whitespace) => {
+                bail!("cluster.auth_token must be non-empty without whitespace")
+            }
+            Some(t) => Some(t.to_string()),
         };
         let n: usize = kv
             .get("cluster.shards")
@@ -125,6 +159,8 @@ impl ClusterConfig {
             dataset,
             partition,
             journal_epochs,
+            journal_bytes,
+            auth_token,
             shards,
         })
     }
@@ -142,6 +178,13 @@ impl ClusterConfig {
     /// The graph name shard `i` is hosted under everywhere.
     pub fn shard_graph(&self, i: usize) -> String {
         format!("{}/shard{i}", self.name)
+    }
+
+    /// The auth token this topology dials and serves with: the
+    /// `PICO_AUTH_TOKEN` env var when set (non-empty), else the
+    /// topology's `auth_token`.
+    pub fn effective_auth_token(&self) -> Option<String> {
+        crate::net::env_auth_token().or_else(|| self.auth_token.clone())
     }
 }
 
@@ -201,9 +244,27 @@ primary = 127.0.0.1:7591
     fn journal_retention_parses_and_validates() {
         let c = ClusterConfig::parse("[cluster]\nshards = 1\njournal = 0\n").unwrap();
         assert_eq!(c.journal_epochs, 0);
-        let c = ClusterConfig::parse("[cluster]\nshards = 1\njournal = 7\n").unwrap();
+        assert_eq!(c.journal_bytes, 0, "byte budget defaults to unbounded");
+        let c =
+            ClusterConfig::parse("[cluster]\nshards = 1\njournal = 7\njournal_bytes = 4096\n")
+                .unwrap();
         assert_eq!(c.journal_epochs, 7);
+        assert_eq!(c.journal_bytes, 4096);
         assert!(ClusterConfig::parse("[cluster]\nshards = 1\njournal = lots\n").is_err());
+        assert!(
+            ClusterConfig::parse("[cluster]\nshards = 1\njournal_bytes = many\n").is_err()
+        );
+    }
+
+    #[test]
+    fn auth_token_parses_and_validates() {
+        let c = ClusterConfig::parse("[cluster]\nshards = 1\n").unwrap();
+        assert_eq!(c.auth_token, None);
+        let c = ClusterConfig::parse("[cluster]\nshards = 1\nauth_token = s3cret\n").unwrap();
+        assert_eq!(c.auth_token.as_deref(), Some("s3cret"));
+        assert!(
+            ClusterConfig::parse("[cluster]\nshards = 1\nauth_token = two words\n").is_err()
+        );
     }
 
     #[test]

@@ -212,6 +212,17 @@ impl ReplicaGroup {
         self.primary.manifest(num_shards)
     }
 
+    /// The primary's remote endpoint and hosted graph name when the
+    /// shard lives on another host — the coordinator's `REDIRECT` hint
+    /// for shard-local probes. `None` for in-coordinator primaries
+    /// (answered inline; there is no host to redirect to).
+    pub fn remote_primary(&self) -> Option<(String, String)> {
+        match &self.primary {
+            Primary::Remote(r) => Some((r.addr().to_string(), r.graph().to_string())),
+            Primary::Local(_) => None,
+        }
+    }
+
     /// Run an epoch-stamped read: replicas round-robin first (accepting
     /// only answers committed at `want_epoch`), the primary as the
     /// authoritative fallback.
@@ -317,6 +328,10 @@ impl ClusterIndex {
     pub fn build(g: &CsrGraph, topo: &ClusterConfig, cfg: BatchConfig) -> Result<Self> {
         let k = topo.num_shards();
         let plan = partition(g, k, topo.partition);
+        // every dialer of this topology sends the AUTH preamble when a
+        // token is configured — shard hosts run with the same token and
+        // gate the shard verbs on it
+        let auth = topo.effective_auth_token();
         let mut groups = Vec::with_capacity(k);
         for (i, spec) in topo.shards.iter().enumerate() {
             let local = Arc::new(LocalShard::from_plan(&topo.name, &plan.shards[i], cfg.clone()));
@@ -327,7 +342,10 @@ impl ClusterIndex {
                     // the manifest is only serialised when it actually
                     // ships (an all-local topology encodes nothing)
                     let manifest = manifest_for(&local, k as u32);
-                    let remote = Arc::new(RemoteShard::new(i, addr.clone(), graph_name.clone()));
+                    let remote = Arc::new(
+                        RemoteShard::new(i, addr.clone(), graph_name.clone())
+                            .with_auth(auth.clone()),
+                    );
                     remote
                         .host(&manifest)
                         .with_context(|| format!("shipping shard {i} to {addr}"))?;
@@ -342,7 +360,12 @@ impl ClusterIndex {
             let replicas = spec
                 .replicas
                 .iter()
-                .map(|addr| Arc::new(RemoteShard::new(i, addr.clone(), graph_name.clone())))
+                .map(|addr| {
+                    Arc::new(
+                        RemoteShard::new(i, addr.clone(), graph_name.clone())
+                            .with_auth(auth.clone()),
+                    )
+                })
                 .collect();
             groups.push(ReplicaGroup::new(primary, replicas));
         }
@@ -352,7 +375,7 @@ impl ClusterIndex {
             .context("initial cluster refinement")?;
         let k_max = refined.core.iter().copied().max().unwrap_or(0);
         let journals = (0..groups.len())
-            .map(|_| Mutex::new(EpochJournal::new(topo.journal_epochs)))
+            .map(|_| Mutex::new(EpochJournal::bounded(topo.journal_epochs, topo.journal_bytes)))
             .collect();
         let idx = Self {
             name: topo.name.clone(),
@@ -656,6 +679,17 @@ impl ClusterIndex {
             }
         }
         Ok(report)
+    }
+
+    /// The shard owning vertex `v`, if `v` is inside the cluster's
+    /// vertex set — what the serve layer redirects shard-local probes
+    /// with.
+    pub fn owner_of(&self, v: VertexId) -> Option<usize> {
+        self.owner
+            .lock()
+            .unwrap()
+            .get(v as usize)
+            .map(|&s| s as usize)
     }
 
     /// Routed point read: the owner shard's replica group answers, with

@@ -21,11 +21,14 @@
 //! this). The bytes shipped scale with the edit batches and the coreness
 //! churn, not with |V| + |E|.
 //!
-//! The journal is bounded: `retention` epochs are kept (configured by
-//! `cluster.journal` in the topology file; 0 disables journalling), older
-//! entries are dropped, and a replica whose lag falls off the tail takes
-//! the full-manifest path instead. Entries must stay contiguous — a
-//! non-consecutive [`EpochJournal::record`] (or an explicit
+//! The journal is bounded on two axes: `retention` epochs are kept
+//! (configured by `cluster.journal` in the topology file; 0 disables
+//! journalling), and when a byte budget is set (`cluster.journal_bytes`,
+//! 0 = unbounded) the *encoded* sizes of the held deltas may not exceed
+//! it — one big epoch can evict many small ones. Either bound tripping
+//! drops the oldest entries, and a replica whose lag falls off the tail
+//! takes the full-manifest path instead. Entries must stay contiguous —
+//! a non-consecutive [`EpochJournal::record`] (or an explicit
 //! [`EpochJournal::clear`] after a failed flush) resets the journal
 //! rather than ever serving a chain with a hole in it.
 
@@ -51,25 +54,60 @@ pub struct EpochDelta {
     pub diff: Vec<(VertexId, u32)>,
 }
 
+impl EpochDelta {
+    /// Exact size of this delta's step in an encoded chain
+    /// ([`super::wire::encode_delta_chain`]'s per-step layout: epoch +
+    /// batch length prefix + encoded batch + diff pairs) — what the
+    /// byte-bounded retention accounts against.
+    pub fn encoded_size(&self) -> usize {
+        let batch = 8 + self.batch.new_owned.len() * 4 + 8 + self.batch.edits.len() * 9;
+        8 + 8 + batch + 8 + self.diff.len() * 8
+    }
+}
+
 /// A bounded, contiguous ring of [`EpochDelta`]s for one shard.
 #[derive(Debug)]
 pub struct EpochJournal {
     retention: usize,
+    /// Encoded-bytes budget across held deltas (0 = unbounded).
+    byte_budget: usize,
+    /// Running sum of the held deltas' [`EpochDelta::encoded_size`].
+    bytes: usize,
     deltas: VecDeque<EpochDelta>,
 }
 
 impl EpochJournal {
     /// A journal keeping at most `retention` epochs (0 = disabled: every
-    /// `record` is dropped and every chain lookup misses).
+    /// `record` is dropped and every chain lookup misses), with no byte
+    /// budget.
     pub fn new(retention: usize) -> Self {
+        Self::bounded(retention, 0)
+    }
+
+    /// A journal bounded by epochs *and* encoded bytes (`byte_budget`
+    /// 0 = unbounded). When a freshly recorded delta pushes the held
+    /// total past the budget, the oldest epochs are evicted first; a
+    /// single delta larger than the whole budget empties the journal.
+    pub fn bounded(retention: usize, byte_budget: usize) -> Self {
         Self {
             retention,
+            byte_budget,
+            bytes: 0,
             deltas: VecDeque::new(),
         }
     }
 
     pub fn retention(&self) -> usize {
         self.retention
+    }
+
+    pub fn byte_budget(&self) -> usize {
+        self.byte_budget
+    }
+
+    /// Total [`EpochDelta::encoded_size`] of the held epochs.
+    pub fn held_bytes(&self) -> usize {
+        self.bytes
     }
 
     /// Epochs currently held.
@@ -83,19 +121,26 @@ impl EpochJournal {
 
     /// Append the delta for a freshly published epoch. A gap (the epoch
     /// is not `last + 1`) resets the journal to just this entry — a
-    /// chain with a hole must never be servable.
+    /// chain with a hole must never be servable. Eviction then enforces
+    /// both bounds, oldest epochs first.
     pub fn record(&mut self, delta: EpochDelta) {
         if self.retention == 0 {
             return;
         }
         if let Some(last) = self.deltas.back() {
             if delta.to_epoch != last.to_epoch + 1 {
-                self.deltas.clear();
+                self.clear();
             }
         }
+        self.bytes += delta.encoded_size();
         self.deltas.push_back(delta);
-        while self.deltas.len() > self.retention {
-            self.deltas.pop_front();
+        while self.deltas.len() > self.retention
+            || (self.byte_budget > 0 && self.bytes > self.byte_budget)
+        {
+            match self.deltas.pop_front() {
+                Some(evicted) => self.bytes -= evicted.encoded_size(),
+                None => break,
+            }
         }
     }
 
@@ -103,6 +148,7 @@ impl EpochJournal {
     /// primary may then hold state no recorded chain reproduces.
     pub fn clear(&mut self) {
         self.deltas.clear();
+        self.bytes = 0;
     }
 
     /// The contiguous chain taking a replica from `from` to `to`
@@ -185,6 +231,55 @@ mod tests {
         j.clear();
         assert!(j.is_empty());
         assert!(j.chain(4, 5).is_none());
+    }
+
+    #[test]
+    fn encoded_size_matches_the_wire_encoding() {
+        let d = EpochDelta {
+            to_epoch: 3,
+            batch: RoutedBatch {
+                new_owned: vec![7, 9],
+                edits: vec![(crate::core::maintenance::EdgeEdit::Insert(1, 9), true)],
+            },
+            diff: vec![(1, 3), (9, 1)],
+        };
+        // one-step chain = magic + from + to + count + the step
+        let encoded = super::super::wire::encode_delta_chain(2, 3, &[&d]);
+        assert_eq!(encoded.len(), 8 + 8 + 8 + 8 + d.encoded_size());
+    }
+
+    #[test]
+    fn byte_budget_evicts_oldest_first() {
+        // each test delta encodes to 8+8+(8+0+8+0)+8+8 = 48 bytes
+        let per = delta(1).encoded_size();
+        let mut j = EpochJournal::bounded(100, 3 * per);
+        for e in 1..=5 {
+            j.record(delta(e));
+        }
+        assert_eq!(j.len(), 3, "budget holds exactly three deltas");
+        assert_eq!(j.held_bytes(), 3 * per);
+        assert!(j.chain(1, 5).is_none(), "epoch 2 fell off the byte budget");
+        assert_eq!(j.chain(2, 5).unwrap().len(), 3);
+
+        // a single delta bigger than the whole budget empties the journal
+        let mut j = EpochJournal::bounded(100, 10);
+        j.record(delta(1));
+        assert!(j.is_empty());
+        assert_eq!(j.held_bytes(), 0);
+
+        // the epoch bound still applies independently
+        let mut j = EpochJournal::bounded(2, 100 * per);
+        for e in 1..=5 {
+            j.record(delta(e));
+        }
+        assert_eq!(j.len(), 2);
+        assert_eq!(j.held_bytes(), 2 * per);
+
+        // clear() resets the byte accounting too
+        j.clear();
+        assert_eq!(j.held_bytes(), 0);
+        j.record(delta(9));
+        assert_eq!(j.held_bytes(), per);
     }
 
     #[test]

@@ -7,11 +7,15 @@
 //! piece was a remote-shard client — so the pieces are:
 //!
 //! * [`wire`] — payload codecs for the cluster verbs (routed batches,
-//!   exchange rounds, shard manifests), validated as untrusted input.
+//!   exchange rounds, shard manifests), validated as untrusted input
+//!   through the shared [`crate::net::codec::Cursor`] (the magics live
+//!   in [`crate::net::codec`] with every other wire magic).
 //! * [`remote`] — [`remote::RemoteShard`]: a
 //!   [`crate::shard::ShardBackend`] that drives a shard hosted by a
 //!   remote `pico serve` over the binary protocol, one frame round trip
-//!   per operation, with transparent re-dial of stale connections.
+//!   per operation, on the shared reconnecting
+//!   [`crate::net::client::FrameClient`] (re-dial of stale connections,
+//!   `AUTH` preamble when the topology configures a token).
 //! * [`host`] — [`host::ShardHost`]: the server side; wraps the same
 //!   `LocalShard` the in-process router uses, hydrated from a shipped
 //!   manifest (`SHARDHOST`) without recomputing anything.

@@ -3,11 +3,14 @@
 //! tests and `benches/cluster_overhead.rs` drive it that way).
 //!
 //! One `RemoteShard` is one sticky binary-protocol connection to one
-//! server, pinned to one hosted shard graph. Every trait method maps to
-//! exactly one frame round trip (`SHARDAPPLY`, `SHARDREFINE START/ROUND/
-//! COMMIT`, `SHARDINFO`, `SHARDCORE`, …), so a boundary-exchange round
-//! over the cluster costs one frame each way per shard regardless of
-//! batch size.
+//! server, pinned to one hosted shard graph — a thin verb layer over
+//! the shared [`crate::net::client::FrameClient`] (dialing, the
+//! `BINARY` upgrade, the `AUTH` preamble, graph pinning, and the
+//! re-dial-once policy all live there). Every trait method maps to
+//! exactly one frame round trip (`SHARDAPPLY`, `SHARDREFINE START/
+//! ROUND/COMMIT`, `SHARDINFO`, `SHARDCORE`, …), so a boundary-exchange
+//! round over the cluster costs one frame each way per shard regardless
+//! of batch size.
 //!
 //! A connection that dies between calls is re-dialed once — but a lost
 //! reply is replayed only for *idempotent* verbs (probes, reads,
@@ -24,65 +27,16 @@
 
 use super::wire;
 use crate::graph::VertexId;
-use crate::service::server::{read_frame, write_frame, MAX_FRAME_BYTES};
+use crate::net::client::{field, field_u64, FrameClient};
 use crate::shard::backend::{
     ApplyOutcome, RefineInit, RefineRound, RoutedBatch, ShardBackend, ShardStatus,
 };
 use anyhow::{anyhow, bail, Context, Result};
-use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpStream, ToSocketAddrs};
-use std::sync::Mutex;
-use std::time::Duration;
-
-/// Dial timeout for (re)connects — a dead host must fail over quickly.
-const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
-
-struct Conn {
-    writer: TcpStream,
-    reader: BufReader<TcpStream>,
-    /// Whether the server session is pinned to this client's shard
-    /// graph. Until `USE` succeeds (or `SHARDHOST` installs the graph),
-    /// shard verbs must NOT be sent — the server session would fall
-    /// back to its default graph and silently answer for the wrong
-    /// shard.
-    selected: bool,
-}
 
 /// A shard served by a remote `pico serve` process.
 pub struct RemoteShard {
     id: usize,
-    addr: String,
-    graph: String,
-    conn: Mutex<Option<Conn>>,
-}
-
-/// `key=value` token lookup in a reply head line.
-fn field<'a>(head: &'a str, key: &str) -> Result<&'a str> {
-    head.split_whitespace()
-        .find_map(|tok| tok.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
-        .ok_or_else(|| anyhow!("missing {key}= in reply '{head}'"))
-}
-
-fn field_u64(head: &str, key: &str) -> Result<u64> {
-    field(head, key)?
-        .parse::<u64>()
-        .with_context(|| format!("bad {key}= in reply '{head}'"))
-}
-
-/// Split a reply frame into its head line and raw payload; `ERR` heads
-/// become errors.
-fn split_reply(frame: Vec<u8>) -> Result<(String, Vec<u8>)> {
-    let (head, payload) = match frame.iter().position(|&b| b == b'\n') {
-        Some(i) => (&frame[..i], frame[i + 1..].to_vec()),
-        None => (&frame[..], Vec::new()),
-    };
-    let head = std::str::from_utf8(head)
-        .context("reply head not UTF-8")?
-        .to_string();
-    if head.starts_with("ERR") {
-        bail!("remote shard: {head}");
-    }
-    Ok((head, payload))
+    client: FrameClient,
 }
 
 impl RemoteShard {
@@ -91,131 +45,29 @@ impl RemoteShard {
     pub fn new(id: usize, addr: impl Into<String>, graph: impl Into<String>) -> Self {
         Self {
             id,
-            addr: addr.into(),
-            graph: graph.into(),
-            conn: Mutex::new(None),
+            client: FrameClient::new(addr, graph),
         }
+    }
+
+    /// Send `AUTH <token>` on every (re)connect — required when the
+    /// shard host gates its shard verbs (topology `auth_token` /
+    /// `PICO_AUTH_TOKEN`).
+    pub fn with_auth(mut self, token: Option<String>) -> Self {
+        self.client = self.client.with_auth(token);
+        self
     }
 
     pub fn addr(&self) -> &str {
-        &self.addr
+        self.client.addr()
     }
 
     pub fn graph(&self) -> &str {
-        &self.graph
-    }
-
-    fn connect(&self) -> Result<Conn> {
-        let sockaddr = self
-            .addr
-            .to_socket_addrs()
-            .with_context(|| format!("resolving {}", self.addr))?
-            .next()
-            .with_context(|| format!("{} resolves to no address", self.addr))?;
-        let stream = TcpStream::connect_timeout(&sockaddr, CONNECT_TIMEOUT)
-            .with_context(|| format!("dialing shard host {}", self.addr))?;
-        let mut writer = stream.try_clone().context("cloning the connection")?;
-        let mut reader = BufReader::new(stream);
-        writeln!(writer, "BINARY").context("binary upgrade")?;
-        writer.flush().context("binary upgrade")?;
-        let mut line = String::new();
-        reader.read_line(&mut line).context("binary upgrade reply")?;
-        if line.trim_end() != "OK binary" {
-            bail!("{} refused the binary upgrade: {}", self.addr, line.trim_end());
-        }
-        Ok(Conn {
-            writer,
-            reader,
-            selected: false,
-        })
-    }
-
-    /// Pin the server session to this shard's graph if it isn't yet.
-    /// Failing (the graph is not hosted there) surfaces to the caller
-    /// instead of letting verbs hit the server's default graph.
-    fn ensure_selected(&self, conn: &mut Conn) -> Result<()> {
-        if conn.selected {
-            return Ok(());
-        }
-        let reply = Self::exchange(conn, format!("USE {}", self.graph).as_bytes())?;
-        let head = String::from_utf8_lossy(&reply);
-        if head.starts_with("OK") {
-            conn.selected = true;
-            Ok(())
-        } else {
-            bail!(
-                "{}: shard graph '{}' is not hosted ({})",
-                self.addr,
-                self.graph,
-                head.trim_end()
-            )
-        }
-    }
-
-    fn exchange(conn: &mut Conn, body: &[u8]) -> Result<Vec<u8>> {
-        if body.len() > MAX_FRAME_BYTES {
-            bail!(
-                "request frame is {} bytes, above the cap ({MAX_FRAME_BYTES})",
-                body.len()
-            );
-        }
-        write_frame(&mut conn.writer, body)?;
-        read_frame(&mut conn.reader, MAX_FRAME_BYTES)?
-            .ok_or_else(|| anyhow!("connection closed mid-reply"))
-    }
-
-    /// One selected exchange: pin the session graph, then send.
-    fn selected_exchange(&self, conn: &mut Conn, body: &[u8], select: bool) -> Result<Vec<u8>> {
-        if select {
-            self.ensure_selected(conn)?;
-        }
-        Self::exchange(conn, body)
-    }
-
-    /// One frame round trip; a stale connection gets one re-dial. With
-    /// `select`, the session is pinned to the shard graph first (every
-    /// verb except the installing `SHARDHOST` needs that). `retry` must
-    /// only be passed for idempotent verbs: a retried request may have
-    /// already executed on the server once (lost reply).
-    fn call_with(&self, body: &[u8], select: bool, retry: bool) -> Result<Vec<u8>> {
-        let mut guard = self.conn.lock().unwrap();
-        let had_conn = guard.is_some();
-        if guard.is_none() {
-            *guard = Some(self.connect()?);
-        }
-        let first = self.selected_exchange(guard.as_mut().unwrap(), body, select);
-        match first {
-            Ok(reply) => Ok(reply),
-            Err(_) if had_conn && retry => {
-                // the pooled connection went stale between calls
-                *guard = None;
-                *guard = Some(self.connect()?);
-                match self.selected_exchange(guard.as_mut().unwrap(), body, select) {
-                    Ok(reply) => Ok(reply),
-                    Err(e) => {
-                        *guard = None;
-                        Err(e)
-                    }
-                }
-            }
-            Err(e) => {
-                *guard = None;
-                Err(e)
-            }
-        }
-    }
-
-    /// Mark the pooled connection's session as pinned (after a
-    /// successful `SHARDHOST`, the server selects the new graph itself).
-    fn mark_selected(&self) {
-        if let Some(conn) = self.conn.lock().unwrap().as_mut() {
-            conn.selected = true;
-        }
+        self.client.graph()
     }
 
     /// Idempotent line verb (probes, reads): safe to replay.
     fn call_line(&self, line: &str) -> Result<(String, Vec<u8>)> {
-        split_reply(self.call_with(line.as_bytes(), true, true)?)
+        self.client.call_idempotent(line.as_bytes(), true)
     }
 
     /// Non-idempotent payload verb: never replayed after a lost reply.
@@ -223,12 +75,12 @@ impl RemoteShard {
         let mut body = line.as_bytes().to_vec();
         body.push(b'\n');
         body.extend_from_slice(payload);
-        split_reply(self.call_with(&body, true, false)?)
+        self.client.call_once(&body, true)
     }
 
     /// Liveness probe (needs no hosted graph).
     pub fn ping(&self) -> Result<()> {
-        let (head, _) = split_reply(self.call_with(b"PING", false, true)?)?;
+        let (head, _) = self.client.call_idempotent(b"PING", false)?;
         if head != "OK pong" {
             bail!("unexpected PING reply '{head}'");
         }
@@ -241,13 +93,13 @@ impl RemoteShard {
     pub fn host(&self, manifest: &[u8]) -> Result<()> {
         // idempotent: re-installing the same manifest reproduces the
         // same hosted state, so a lost reply is safe to replay
-        let mut body = format!("SHARDHOST {}", self.graph).into_bytes();
+        let mut body = format!("SHARDHOST {}", self.client.graph()).into_bytes();
         body.push(b'\n');
         body.extend_from_slice(manifest);
-        let (head, _) = split_reply(self.call_with(&body, false, true)?)?;
+        let (head, _) = self.client.call_idempotent(&body, false)?;
         field(&head, "shardhost")?;
         // the server switched its session to the freshly hosted graph
-        self.mark_selected();
+        self.client.mark_selected();
         Ok(())
     }
 
@@ -332,9 +184,9 @@ impl ShardBackend for RemoteShard {
     }
 
     fn refine_commit(&self, cluster_epoch: u64) -> Result<Vec<(VertexId, u32)>> {
-        // NOT idempotent any more: the first execution freezes est into
-        // refined, so a replayed COMMIT after a lost reply would report
-        // an *empty* diff and the journal would ship a delta that skips
+        // NOT idempotent: the first execution freezes est into refined,
+        // so a replayed COMMIT after a lost reply would report an
+        // *empty* diff and the journal would ship a delta that skips
         // real coreness changes; never replayed
         let (head, payload) =
             self.call_payload_once(&format!("SHARDREFINE COMMIT {cluster_epoch}"), b"")?;
@@ -389,31 +241,19 @@ impl ShardBackend for RemoteShard {
 
 impl std::fmt::Debug for RemoteShard {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        write!(f, "RemoteShard(#{} {} '{}')", self.id, self.addr, self.graph)
+        write!(
+            f,
+            "RemoteShard(#{} {} '{}')",
+            self.id,
+            self.client.addr(),
+            self.client.graph()
+        )
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    #[test]
-    fn reply_fields_parse() {
-        let head = "OK shard=3 epoch=9 cluster=2 owned=100 kmax=7";
-        assert_eq!(field(head, "shard").unwrap(), "3");
-        assert_eq!(field_u64(head, "owned").unwrap(), 100);
-        assert!(field(head, "missing").is_err());
-        // prefix keys must not match longer tokens
-        assert!(field("OK clusterx=5", "cluster").is_err());
-    }
-
-    #[test]
-    fn err_replies_become_errors() {
-        assert!(split_reply(b"ERR nope".to_vec()).is_err());
-        let (head, payload) = split_reply(b"OK x=1\nabc".to_vec()).unwrap();
-        assert_eq!(head, "OK x=1");
-        assert_eq!(payload, b"abc");
-    }
 
     #[test]
     fn dead_host_fails_fast() {

@@ -17,84 +17,31 @@
 //! local coreness, shard epoch) plus everything the snapshot alone lacks
 //! to serve as a cluster shard — the local→global id table, the owned
 //! set, the committed refined (exact global) coreness, and the cluster
-//! epoch it was committed at:
+//! epoch it was committed at. Both magics here
+//! ([`crate::net::codec::MANIFEST_MAGIC`],
+//! [`crate::net::codec::DELTA_MAGIC`]) are defined in
+//! [`crate::net::codec`] — the single home of every wire magic — and
+//! decoding reads through its shared bounds-checked
+//! [`crate::net::codec::Cursor`]:
 //!
 //! ```text
-//! magic         b"PICOSHD1"                               8 bytes
+//! magic         MANIFEST_MAGIC                           8 bytes
 //! shard_id      u32        num_shards  u32
 //! cluster_epoch u64
 //! counts        u64 globals_len, u64 owned_len, u64 refined_len, u64 snapshot_len
 //! globals       globals_len × u32     (local id -> global id)
 //! owned         owned_len × u32       (owned local ids)
 //! refined       refined_len × u32     (0 or globals_len entries)
-//! snapshot      snapshot_len bytes    (PICOSNP1 payload)
+//! snapshot      snapshot_len bytes    (a SNAPSHOT_MAGIC payload)
 //! ```
 
 use super::journal::EpochDelta;
 use crate::core::maintenance::EdgeEdit;
 use crate::graph::VertexId;
+use crate::net::codec::{Cursor, DELTA_MAGIC, MANIFEST_MAGIC};
 use crate::shard::backend::{RefineInit, RoutedBatch};
 use crate::shard::snapshot::{self, IndexSnapshot};
 use anyhow::{bail, Context, Result};
-
-const MANIFEST_MAGIC: &[u8; 8] = b"PICOSHD1";
-const DELTA_MAGIC: &[u8; 8] = b"PICODLT1";
-
-struct Cursor<'a> {
-    bytes: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Cursor<'a> {
-    fn new(bytes: &'a [u8]) -> Self {
-        Self { bytes, pos: 0 }
-    }
-
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        let Some(end) = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len()) else {
-            bail!(
-                "truncated payload: needed {n} bytes at offset {}, have {}",
-                self.pos,
-                self.bytes.len() - self.pos
-            );
-        };
-        let s = &self.bytes[self.pos..end];
-        self.pos = end;
-        Ok(s)
-    }
-
-    fn u8(&mut self) -> Result<u8> {
-        Ok(self.take(1)?[0])
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    /// A `u64` count that must fit `per`-byte elements in what remains.
-    fn count(&mut self, per: usize, what: &str) -> Result<usize> {
-        let n = self.u64()? as usize;
-        match n.checked_mul(per) {
-            Some(bytes) if bytes <= self.bytes.len() - self.pos => Ok(n),
-            _ => bail!("{what} count {n} exceeds the payload"),
-        }
-    }
-
-    fn remaining(&self) -> usize {
-        self.bytes.len() - self.pos
-    }
-
-    fn done(&self, what: &str) -> Result<()> {
-        if self.remaining() != 0 {
-            bail!("{what}: {} trailing bytes", self.remaining());
-        }
-        Ok(())
-    }
-}
 
 fn put_u32s(out: &mut Vec<u8>, vals: &[u32]) {
     out.extend_from_slice(&(vals.len() as u64).to_le_bytes());
@@ -238,7 +185,7 @@ pub fn decode_refine_init(bytes: &[u8]) -> Result<RefineInit> {
 /// journal guarantees it; the encoder asserts it in debug builds.
 ///
 /// ```text
-/// magic      b"PICODLT1"                       8 bytes
+/// magic      DELTA_MAGIC                       8 bytes
 /// from,to    u64, u64
 /// count      u64          (== to - from)
 /// per step:  u64 to_epoch

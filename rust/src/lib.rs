@@ -22,6 +22,12 @@
 //!   interface spoken over the binary protocol), replica groups with
 //!   epoch-checked reads + failover, snapshot-ship catch-up, and the
 //!   `pico serve --cluster` / `pico cluster status` topology tooling.
+//! * **Transport ([`net`])** — the unified wire layer under all of the
+//!   above: one frame/line codec owning every protocol magic, a
+//!   bounded worker-pool server (connections are queue entries, not
+//!   threads), the per-connection session state machine with `AUTH`
+//!   gating and transport `METRICS`, and the one reconnecting client
+//!   shared by the cluster router and the CLI.
 //! * **Layer 2 (build-time JAX)** — vectorised peel / h-index step
 //!   functions, AOT-lowered to HLO text and executed from [`runtime`] via
 //!   the PJRT C API.
@@ -49,6 +55,7 @@ pub mod coordinator;
 pub mod core;
 pub mod engine;
 pub mod graph;
+pub mod net;
 pub mod runtime;
 pub mod service;
 pub mod shard;

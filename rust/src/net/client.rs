@@ -1,0 +1,404 @@
+//! The one protocol client everything dials through: `pico query`,
+//! `pico cluster status`, and the remote-shard backend
+//! ([`crate::cluster::remote::RemoteShard`]) all share this module
+//! instead of hand-rolling three dialers.
+//!
+//! Two layers:
+//!
+//! * [`Client`] — one live connection: line mode after connect, binary
+//!   frame mode after [`Client::upgrade_binary`], optional `AUTH`
+//!   preamble, `USE` graph pinning, and redirect parsing
+//!   ([`parse_redirect`] / [`follow_redirect`]) for cluster
+//!   coordinators that answer a shard-local probe with the owning
+//!   shard host's address.
+//! * [`FrameClient`] — a reconnecting binary-frame client: a sticky
+//!   connection with explicit graph pinning that re-dials once when a
+//!   pooled connection has gone stale between calls. Replay is the
+//!   caller's decision per verb: [`FrameClient::call_idempotent`]
+//!   retries a lost reply, [`FrameClient::call_once`] never does (the
+//!   distinction the shard protocol's mutation verbs depend on — see
+//!   [`crate::cluster::remote`]).
+
+use super::codec::{read_frame, split_frame, write_frame, MAX_FRAME_BYTES};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpStream, ToSocketAddrs};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Dial timeout for every connect in this module — a dead host must
+/// fail over quickly, and a CLI probe must not hang.
+pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
+
+/// `key=value` token lookup in a reply head line.
+pub fn field<'a>(head: &'a str, key: &str) -> Result<&'a str> {
+    head.split_whitespace()
+        .find_map(|tok| tok.strip_prefix(key).and_then(|r| r.strip_prefix('=')))
+        .ok_or_else(|| anyhow!("missing {key}= in reply '{head}'"))
+}
+
+pub fn field_u64(head: &str, key: &str) -> Result<u64> {
+    field(head, key)?
+        .parse::<u64>()
+        .with_context(|| format!("bad {key}= in reply '{head}'"))
+}
+
+/// Split a reply frame into its head line and raw payload; `ERR` heads
+/// become errors.
+pub fn split_reply(frame: Vec<u8>) -> Result<(String, Vec<u8>)> {
+    let (head, payload) = split_frame(&frame);
+    let head = std::str::from_utf8(head)
+        .context("reply head not UTF-8")?
+        .to_string();
+    let payload = payload.to_vec();
+    if head.starts_with("ERR") {
+        bail!("remote: {head}");
+    }
+    Ok((head, payload))
+}
+
+/// A one-hop redirect target parsed from a coordinator reply.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Redirect {
+    pub addr: String,
+    pub graph: String,
+}
+
+/// Parse a `REDIRECT shard=<s> addr=<host:port> graph=<name>` reply
+/// line (the cluster coordinator's answer to a shard-local probe whose
+/// shard lives on another host). `None` for every other reply.
+pub fn parse_redirect(reply: &str) -> Option<Redirect> {
+    let rest = reply.strip_prefix("REDIRECT ")?;
+    Some(Redirect {
+        addr: field(rest, "addr").ok()?.to_string(),
+        graph: field(rest, "graph").ok()?.to_string(),
+    })
+}
+
+/// Follow one redirect hop: dial the named shard host, pin its graph,
+/// re-send the command, and return the remote reply. One hop max — a
+/// redirect answering a redirect is an error, never a loop.
+pub fn follow_redirect(rd: &Redirect, cmd: &str, auth: Option<&str>) -> Result<String> {
+    let mut c = Client::connect(&rd.addr)
+        .with_context(|| format!("following redirect to {}", rd.addr))?;
+    if let Some(token) = auth {
+        c.auth(token)?;
+    }
+    c.use_graph(&rd.graph)?;
+    let reply = c.send_line(cmd)?;
+    if parse_redirect(&reply).is_some() {
+        bail!("{} answered the redirected '{cmd}' with another redirect", rd.addr);
+    }
+    Ok(reply)
+}
+
+/// One live protocol connection (line mode until upgraded).
+pub struct Client {
+    addr: String,
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+    binary: bool,
+}
+
+impl Client {
+    /// Dial `addr` (within [`CONNECT_TIMEOUT`]); the session starts in
+    /// line mode on the server's default graph.
+    pub fn connect(addr: &str) -> Result<Self> {
+        let sockaddr = addr
+            .to_socket_addrs()
+            .with_context(|| format!("resolving {addr}"))?
+            .next()
+            .with_context(|| format!("{addr} resolves to no address"))?;
+        let stream = TcpStream::connect_timeout(&sockaddr, CONNECT_TIMEOUT)
+            .with_context(|| format!("connecting to pico serve at {addr}"))?;
+        let writer = stream.try_clone().context("cloning the connection")?;
+        Ok(Self {
+            addr: addr.to_string(),
+            writer,
+            reader: BufReader::new(stream),
+            binary: false,
+        })
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn is_binary(&self) -> bool {
+        self.binary
+    }
+
+    /// Send one line-mode command and read its reply line. `ERR`
+    /// replies are returned, not raised — line mode is the CLI surface
+    /// and the caller decides what a rejection means.
+    pub fn send_line(&mut self, cmd: &str) -> Result<String> {
+        assert!(!self.binary, "send_line on an upgraded connection");
+        writeln!(self.writer, "{cmd}")?;
+        self.writer.flush()?;
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("{} closed the connection after '{cmd}'", self.addr);
+        }
+        Ok(line.trim_end().to_string())
+    }
+
+    /// Upgrade to binary framing (`BINARY` handshake).
+    pub fn upgrade_binary(&mut self) -> Result<()> {
+        let reply = self.send_line("BINARY").context("binary upgrade")?;
+        if !reply.starts_with("OK binary") {
+            bail!("{} refused the binary upgrade: {reply}", self.addr);
+        }
+        self.binary = true;
+        Ok(())
+    }
+
+    /// Authenticate the connection for the shard verbs (`AUTH`
+    /// preamble; works in both modes, a no-op reply on open servers).
+    pub fn auth(&mut self, token: &str) -> Result<()> {
+        let reply = if self.binary {
+            let (head, _) = split_reply(self.call_raw(format!("AUTH {token}").as_bytes())?)?;
+            head
+        } else {
+            self.send_line(&format!("AUTH {token}"))?
+        };
+        if !reply.starts_with("OK auth") {
+            bail!("{} rejected the auth token: {reply}", self.addr);
+        }
+        Ok(())
+    }
+
+    /// Pin the session to `graph` (`USE`); an unhosted graph is an
+    /// error, not a silent fall-through to the server's default.
+    pub fn use_graph(&mut self, graph: &str) -> Result<()> {
+        let reply = if self.binary {
+            String::from_utf8_lossy(&self.call_raw(format!("USE {graph}").as_bytes())?)
+                .into_owned()
+        } else {
+            self.send_line(&format!("USE {graph}"))?
+        };
+        if !reply.starts_with("OK") {
+            bail!(
+                "{}: graph '{graph}' is not hosted ({})",
+                self.addr,
+                reply.trim_end()
+            );
+        }
+        Ok(())
+    }
+
+    /// One binary frame out, one back (raw body, `ERR` not inspected).
+    pub fn call_raw(&mut self, body: &[u8]) -> Result<Vec<u8>> {
+        assert!(self.binary, "call_raw before the binary upgrade");
+        if body.len() > MAX_FRAME_BYTES {
+            bail!(
+                "request frame is {} bytes, above the cap ({MAX_FRAME_BYTES})",
+                body.len()
+            );
+        }
+        write_frame(&mut self.writer, body)?;
+        read_frame(&mut self.reader, MAX_FRAME_BYTES)?
+            .ok_or_else(|| anyhow!("connection closed mid-reply"))
+    }
+
+    /// One frame round trip, reply split into `(head, payload)` with
+    /// `ERR` heads raised.
+    pub fn call(&mut self, body: &[u8]) -> Result<(String, Vec<u8>)> {
+        split_reply(self.call_raw(body)?)
+    }
+
+    /// Best-effort goodbye (`QUIT`) — for CLI sessions that want the
+    /// server, not a RST, to close the connection.
+    pub fn quit(mut self) {
+        if self.binary {
+            let _ = write_frame(&mut self.writer, b"QUIT");
+        } else {
+            let _ = writeln!(self.writer, "QUIT");
+        }
+    }
+}
+
+/// A sticky, reconnecting binary-frame connection pinned to one hosted
+/// graph on one server.
+struct PinnedConn {
+    client: Client,
+    /// Whether the server session is pinned to `graph`. Until `USE`
+    /// succeeds (or `SHARDHOST` installs the graph), pinned verbs must
+    /// NOT be sent — the server session would fall back to its default
+    /// graph and silently answer for the wrong one.
+    selected: bool,
+}
+
+/// The reconnecting frame client shared by every long-lived dialer.
+///
+/// A connection that dies between calls is re-dialed once — but a lost
+/// reply is replayed only through [`FrameClient::call_idempotent`];
+/// verbs that mutate remote state go through [`FrameClient::call_once`]
+/// and surface the error instead. The client never retries on a
+/// *fresh* connection — if a just-dialed socket fails, the host is down
+/// and the caller needs to know now.
+pub struct FrameClient {
+    addr: String,
+    graph: String,
+    auth: Option<String>,
+    conn: Mutex<Option<PinnedConn>>,
+}
+
+impl FrameClient {
+    /// A client for the hosted graph `graph` on the server at `addr`.
+    pub fn new(addr: impl Into<String>, graph: impl Into<String>) -> Self {
+        Self {
+            addr: addr.into(),
+            graph: graph.into(),
+            auth: None,
+            conn: Mutex::new(None),
+        }
+    }
+
+    /// Send `AUTH <token>` on every (re)connect — required whenever the
+    /// far server gates its shard verbs.
+    pub fn with_auth(mut self, token: Option<String>) -> Self {
+        self.auth = token;
+        self
+    }
+
+    pub fn addr(&self) -> &str {
+        &self.addr
+    }
+
+    pub fn graph(&self) -> &str {
+        &self.graph
+    }
+
+    fn connect(&self) -> Result<PinnedConn> {
+        let mut client =
+            Client::connect(&self.addr).with_context(|| format!("dialing {}", self.addr))?;
+        client.upgrade_binary()?;
+        if let Some(token) = &self.auth {
+            client.auth(token)?;
+        }
+        Ok(PinnedConn {
+            client,
+            selected: false,
+        })
+    }
+
+    /// Pin the server session to this client's graph if it isn't yet.
+    fn ensure_selected(&self, conn: &mut PinnedConn) -> Result<()> {
+        if conn.selected {
+            return Ok(());
+        }
+        conn.client
+            .use_graph(&self.graph)
+            .with_context(|| format!("pinning shard graph on {}", self.addr))?;
+        conn.selected = true;
+        Ok(())
+    }
+
+    fn exchange(&self, conn: &mut PinnedConn, body: &[u8], select: bool) -> Result<Vec<u8>> {
+        if select {
+            self.ensure_selected(conn)?;
+        }
+        conn.client.call_raw(body)
+    }
+
+    /// One frame round trip; a stale pooled connection gets one
+    /// re-dial. With `select`, the session is pinned to the graph
+    /// first. `retry` must only be true for idempotent verbs: a
+    /// retried request may have already executed once (lost reply).
+    fn call_with(&self, body: &[u8], select: bool, retry: bool) -> Result<Vec<u8>> {
+        let mut guard = self.conn.lock().unwrap();
+        let had_conn = guard.is_some();
+        if guard.is_none() {
+            *guard = Some(self.connect()?);
+        }
+        let first = self.exchange(guard.as_mut().unwrap(), body, select);
+        match first {
+            Ok(reply) => Ok(reply),
+            Err(_) if had_conn && retry => {
+                // the pooled connection went stale between calls
+                *guard = None;
+                *guard = Some(self.connect()?);
+                match self.exchange(guard.as_mut().unwrap(), body, select) {
+                    Ok(reply) => Ok(reply),
+                    Err(e) => {
+                        *guard = None;
+                        Err(e)
+                    }
+                }
+            }
+            Err(e) => {
+                *guard = None;
+                Err(e)
+            }
+        }
+    }
+
+    /// Idempotent request (probes, reads, installs that reproduce the
+    /// same state): safe to replay after a lost reply. With `select`
+    /// the session is pinned to the graph first.
+    pub fn call_idempotent(&self, body: &[u8], select: bool) -> Result<(String, Vec<u8>)> {
+        split_reply(self.call_with(body, select, true)?)
+    }
+
+    /// Non-idempotent request: never replayed after a lost reply; the
+    /// error surfaces to the caller instead.
+    pub fn call_once(&self, body: &[u8], select: bool) -> Result<(String, Vec<u8>)> {
+        split_reply(self.call_with(body, select, false)?)
+    }
+
+    /// Mark the pooled connection's session as pinned (after a
+    /// successful `SHARDHOST`, the server selects the new graph
+    /// itself).
+    pub fn mark_selected(&self) {
+        if let Some(conn) = self.conn.lock().unwrap().as_mut() {
+            conn.selected = true;
+        }
+    }
+}
+
+impl std::fmt::Debug for FrameClient {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "FrameClient({} '{}')", self.addr, self.graph)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reply_fields_parse() {
+        let head = "OK shard=3 epoch=9 cluster=2 owned=100 kmax=7";
+        assert_eq!(field(head, "shard").unwrap(), "3");
+        assert_eq!(field_u64(head, "owned").unwrap(), 100);
+        assert!(field(head, "missing").is_err());
+        // prefix keys must not match longer tokens
+        assert!(field("OK clusterx=5", "cluster").is_err());
+    }
+
+    #[test]
+    fn err_replies_become_errors() {
+        assert!(split_reply(b"ERR nope".to_vec()).is_err());
+        let (head, payload) = split_reply(b"OK x=1\nabc".to_vec()).unwrap();
+        assert_eq!(head, "OK x=1");
+        assert_eq!(payload, b"abc");
+    }
+
+    #[test]
+    fn redirects_parse_and_reject_noise() {
+        let rd = parse_redirect("REDIRECT shard=1 addr=10.0.0.7:7571 graph=soc/shard1").unwrap();
+        assert_eq!(rd.addr, "10.0.0.7:7571");
+        assert_eq!(rd.graph, "soc/shard1");
+        assert!(parse_redirect("OK core=3 epoch=1").is_none());
+        assert!(parse_redirect("REDIRECT addr=onlyaddr:1").is_none(), "graph missing");
+        assert!(parse_redirect("ERR nope").is_none());
+    }
+
+    #[test]
+    fn dead_host_fails_fast() {
+        // reserved port: nothing listens; the dial must fail, not hang
+        assert!(Client::connect("127.0.0.1:1").is_err());
+        let fc = FrameClient::new("127.0.0.1:1", "x/shard0");
+        assert!(fc.call_idempotent(b"PING", false).is_err());
+    }
+}

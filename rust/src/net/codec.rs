@@ -1,0 +1,232 @@
+//! The wire codec — the single source of truth for everything that
+//! frames bytes on a pico connection.
+//!
+//! Every protocol magic lives here and **only** here (CI greps for
+//! stray re-definitions):
+//!
+//! * [`FRAME_PROTO`] — the binary framing protocol identifier, echoed
+//!   by the `BINARY` upgrade handshake (`OK binary proto=...`). A frame
+//!   is a little-endian `u32` byte length followed by that many payload
+//!   bytes, capped at [`MAX_FRAME_BYTES`].
+//! * [`SNAPSHOT_MAGIC`] — index snapshots ([`crate::shard::snapshot`]).
+//! * [`MANIFEST_MAGIC`] — shard manifests ([`crate::cluster::wire`]).
+//! * [`DELTA_MAGIC`] — epoch delta chains ([`crate::cluster::wire`]).
+//!
+//! The read/write path here is shared by the server ([`crate::net::pool`]
+//! / [`crate::net::conn`]), the remote-shard client
+//! ([`crate::cluster::remote`] via [`crate::net::client`]), snapshot
+//! shipping, and the CLI — none of them hand-roll framing any more.
+//! [`Cursor`] is the shared bounds-checked reader every payload decoder
+//! (snapshots, manifests, delta chains) parses untrusted bytes with:
+//! counts are checked against the remaining byte budget *before* any
+//! allocation, and [`Cursor::done`] rejects trailing garbage.
+
+use std::io::{Read, Write};
+
+/// Binary framing protocol identifier (`BINARY` upgrade handshake).
+pub const FRAME_PROTO: &str = "PICOBIN1";
+
+/// Index-snapshot payload magic (see [`crate::shard::snapshot`]).
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"PICOSNP1";
+
+/// Shard-manifest payload magic (see [`crate::cluster::wire`]).
+pub const MANIFEST_MAGIC: &[u8; 8] = b"PICOSHD1";
+
+/// Epoch-delta-chain payload magic (see [`crate::cluster::wire`]).
+pub const DELTA_MAGIC: &[u8; 8] = b"PICODLT1";
+
+/// Longest protocol line accepted from the wire. A client streaming
+/// bytes with no newline must not grow the server's line buffer without
+/// bound (memory-exhaustion class).
+pub const MAX_LINE_BYTES: usize = 4096;
+
+/// Largest binary frame accepted or sent. Bounds the allocation a single
+/// length-prefix can demand; sized for snapshots of the largest suite
+/// graphs with ample headroom.
+pub const MAX_FRAME_BYTES: usize = 64 << 20;
+
+/// Write one length-prefixed frame — the binary protocol's only framing
+/// primitive, shared by the server, every client, and the tests.
+/// Bodies above `u32::MAX` cannot be length-prefixed and error out
+/// instead of silently truncating the prefix.
+pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
+    let Ok(len) = u32::try_from(body.len()) else {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame body exceeds u32::MAX bytes",
+        ));
+    };
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Read one length-prefixed frame: `Ok(None)` at a clean EOF,
+/// `ErrorKind::InvalidData` when the declared length exceeds `max`
+/// (nothing past the header is consumed in that case).
+pub fn read_frame(reader: &mut impl Read, max: usize) -> std::io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    match reader.read_exact(&mut header) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(e),
+    }
+    let len = u32::from_le_bytes(header) as usize;
+    if len > max {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "frame too large",
+        ));
+    }
+    let mut body = vec![0u8; len];
+    reader.read_exact(&mut body)?;
+    Ok(Some(body))
+}
+
+/// Split a frame body into its head line and the raw payload after the
+/// first `\n` (empty when there is none) — the request *and* reply
+/// convention of the binary protocol.
+pub fn split_frame(body: &[u8]) -> (&[u8], &[u8]) {
+    match body.iter().position(|&b| b == b'\n') {
+        Some(i) => (&body[..i], &body[i + 1..]),
+        None => (body, &[][..]),
+    }
+}
+
+/// A bounds-checked reader over untrusted payload bytes — the one
+/// decoder primitive snapshots, manifests, and delta chains all parse
+/// with. Never panics on truncated input; every `take` is checked.
+pub struct Cursor<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    pub fn new(bytes: &'a [u8]) -> Self {
+        Self { bytes, pos: 0 }
+    }
+
+    /// The next `n` bytes, or an error naming the offset when the
+    /// payload is truncated.
+    pub fn take(&mut self, n: usize) -> anyhow::Result<&'a [u8]> {
+        let Some(end) = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len()) else {
+            anyhow::bail!(
+                "truncated payload: needed {n} bytes at offset {}, have {}",
+                self.pos,
+                self.bytes.len() - self.pos
+            );
+        };
+        let s = &self.bytes[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> anyhow::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> anyhow::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> anyhow::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// A `u64` count that must fit `per`-byte elements in what remains —
+    /// the pre-allocation budget check every length-prefixed list goes
+    /// through.
+    pub fn count(&mut self, per: usize, what: &str) -> anyhow::Result<usize> {
+        let n = self.u64()? as usize;
+        match n.checked_mul(per) {
+            Some(bytes) if bytes <= self.bytes.len() - self.pos => Ok(n),
+            _ => anyhow::bail!("{what} count {n} exceeds the payload"),
+        }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.bytes.len() - self.pos
+    }
+
+    /// Reject trailing garbage once a decoder believes it is finished.
+    pub fn done(&self, what: &str) -> anyhow::Result<()> {
+        if self.remaining() != 0 {
+            anyhow::bail!("{what}: {} trailing bytes", self.remaining());
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"hello").unwrap();
+        write_frame(&mut buf, b"").unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        assert_eq!(read_frame(&mut r, 1024).unwrap().unwrap(), b"hello");
+        assert_eq!(read_frame(&mut r, 1024).unwrap().unwrap(), b"");
+        assert!(read_frame(&mut r, 1024).unwrap().is_none(), "clean EOF");
+    }
+
+    #[test]
+    fn oversized_declared_length_is_invalid_data() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &vec![0u8; 64]).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let err = read_frame(&mut r, 8).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    }
+
+    #[test]
+    fn truncated_body_is_unexpected_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, b"0123456789").unwrap();
+        buf.truncate(buf.len() - 3);
+        let mut r = std::io::Cursor::new(buf);
+        let err = read_frame(&mut r, 1024).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof);
+    }
+
+    #[test]
+    fn split_frame_handles_missing_payload() {
+        assert_eq!(split_frame(b"OK x=1\nabc"), (&b"OK x=1"[..], &b"abc"[..]));
+        assert_eq!(split_frame(b"OK bare"), (&b"OK bare"[..], &b""[..]));
+        assert_eq!(split_frame(b"head\n"), (&b"head"[..], &b""[..]));
+    }
+
+    #[test]
+    fn cursor_checks_every_read() {
+        let bytes = [1u8, 2, 3, 4, 5, 6, 7, 8, 9];
+        let mut c = Cursor::new(&bytes);
+        assert_eq!(c.u8().unwrap(), 1);
+        assert_eq!(c.u32().unwrap(), u32::from_le_bytes([2, 3, 4, 5]));
+        assert_eq!(c.remaining(), 4);
+        assert!(c.u64().is_err(), "truncated");
+        assert!(c.done("x").is_err(), "trailing bytes flagged");
+        // counts beyond the budget fail before any allocation
+        let huge = u64::MAX.to_le_bytes();
+        let mut c = Cursor::new(&huge);
+        assert!(c.count(4, "list").is_err());
+        // a zero count on an exactly-empty tail passes
+        let empty = 0u64.to_le_bytes();
+        let mut c = Cursor::new(&empty);
+        assert_eq!(c.count(8, "list").unwrap(), 0);
+        c.done("list").unwrap();
+    }
+
+    #[test]
+    fn magics_are_distinct() {
+        let all = [SNAPSHOT_MAGIC, MANIFEST_MAGIC, DELTA_MAGIC];
+        for (i, a) in all.iter().enumerate() {
+            assert_eq!(a.len(), 8);
+            for b in &all[i + 1..] {
+                assert_ne!(a, b);
+            }
+        }
+        assert_eq!(FRAME_PROTO.len(), 8);
+    }
+}

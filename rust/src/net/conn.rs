@@ -1,0 +1,744 @@
+//! The per-connection session state machine, extracted from the old
+//! thread-per-connection server: line mode, the `BINARY` framing
+//! upgrade, graph pinning, `AUTH` gating of the shard verbs, drain
+//! awareness, and slow-loris timeouts.
+//!
+//! A [`Connection`] owns one socket plus its [`Session`] and is driven
+//! cooperatively by the worker pool ([`crate::net::pool`]): each
+//! [`Connection::serve_slice`] call reads and answers at most
+//! [`MAX_REQUESTS_PER_SLICE`] requests, then yields the connection back
+//! to the pool's run queue so a bounded set of workers can multiplex
+//! far more connections than threads. Application verbs are delegated
+//! through the [`Handler`] trait (implemented by
+//! [`crate::service::server::CoreService`]); the transport-owned verbs
+//! — `AUTH`, `METRICS`, and the auth gate in front of the shard verbs
+//! — are dispatched right here.
+//!
+//! # Read discipline (slow-loris protection)
+//!
+//! Reads never pin a worker. A half-received request is *resumable
+//! state on the connection* (the partial line / frame buffer lives in
+//! the [`Connection`], not on the worker's stack), so a slow sender is
+//! yielded back to the run queue like an idle one and costs the pool
+//! nothing but its memory. What a slow sender cannot do is hold a
+//! request open forever: a request that stops making progress (no bytes
+//! for [`ConnConfig::stall_timeout`]) is answered with a structured
+//! `ERR` and the connection is closed, counted in
+//! [`TransportStats::timed_out`]. Draining is honoured at request
+//! boundaries only — an in-flight request keeps being served across
+//! slices until it completes and is answered in full; a half-read frame
+//! is never dropped.
+
+use super::codec::{self, MAX_FRAME_BYTES, MAX_LINE_BYTES};
+use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
+use std::net::TcpStream;
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+/// Most requests one [`Connection::serve_slice`] answers before the
+/// connection yields back to the run queue — fairness: a client
+/// pipelining thousands of commands must not starve the other
+/// connections sharing its worker.
+pub const MAX_REQUESTS_PER_SLICE: usize = 32;
+
+/// Socket read timeout while the pool is oversubscribed (more live
+/// connections than workers): long enough to actually sleep in the
+/// kernel, short enough that a worker skims past an idle connection
+/// instead of pinning a ready one behind a full poll interval.
+const QUICK_POLL: Duration = Duration::from_millis(2);
+
+/// Every line-protocol verb this layer dispatches (transport-owned or
+/// delegated to the [`Handler`]). CI greps this table against the
+/// protocol docs in [`crate::service::server`] — a verb added here
+/// without a documentation row fails the lint job.
+pub const LINE_VERBS: &[&str] = &[
+    "PING",
+    "GRAPHS",
+    "USE",
+    "OPEN",
+    "EPOCH",
+    "CORENESS",
+    "DEGENERACY",
+    "MEMBERS",
+    "HISTO",
+    "DENSEST",
+    "SHARDS",
+    "INSERT",
+    "DELETE",
+    "FLUSH",
+    "STATS",
+    "METRICS",
+    "AUTH",
+    "BINARY",
+    "QUIT",
+    "SHARDINFO",
+    "SHARDCORE",
+    "SHARDHISTO",
+];
+
+/// The binary-frame verbs (head line of a frame; any line verb works in
+/// a frame too). Drift-checked against the docs like [`LINE_VERBS`].
+pub const FRAME_VERBS: &[&str] = &[
+    "SNAPSHOT",
+    "RESTORE",
+    "SHARDHOST",
+    "SHARDSNAP",
+    "SHARDAPPLY",
+    "SHARDREFINE",
+    "SHARDDELTA",
+    "SHARDMEMBERS",
+];
+
+/// Verbs gated behind an `AUTH <token>` preamble whenever the server
+/// has a token configured ([`ConnConfig::auth_token`]): everything that
+/// installs or mutates hosted shard state.
+pub const AUTH_VERBS: &[&str] = &[
+    "SHARDHOST",
+    "SHARDAPPLY",
+    "SHARDREFINE",
+    "SHARDSNAP",
+    "SHARDDELTA",
+];
+
+/// Per-connection state.
+#[derive(Clone, Debug)]
+pub struct Session {
+    /// Current graph name.
+    pub graph: String,
+    /// Whether the connection has upgraded to binary framing.
+    pub binary: bool,
+    /// Whether an `AUTH` preamble matched the server's token (stays
+    /// `false` on open servers; the gate only checks it when a token is
+    /// configured).
+    pub authed: bool,
+}
+
+impl Session {
+    pub fn new(graph: impl Into<String>) -> Self {
+        Self {
+            graph: graph.into(),
+            binary: false,
+            authed: false,
+        }
+    }
+}
+
+/// The application half of the protocol: everything that is not
+/// transport (framing, auth, metrics) is delegated here.
+pub trait Handler: Send + Sync + 'static {
+    /// The graph a fresh session starts on.
+    fn default_graph(&self) -> String;
+    /// Execute one protocol line; returns the reply line (no newline).
+    fn handle_line(&self, session: &mut Session, line: &str, slot: usize) -> String;
+    /// Execute one binary frame body; returns the reply frame body.
+    fn handle_frame(&self, session: &mut Session, body: &[u8], slot: usize) -> Vec<u8>;
+}
+
+/// Transport knobs shared by every connection of one server.
+#[derive(Clone, Debug)]
+pub struct ConnConfig {
+    /// Socket read timeout — the granularity at which an idle,
+    /// fully-subscribed pool notices new bytes and a drain.
+    pub poll_timeout: Duration,
+    /// Longest a started request may go without delivering a byte
+    /// before the connection is timed out (slow-loris bound).
+    pub stall_timeout: Duration,
+    /// Once the pool is at its connection cap (and only then), idle
+    /// connections that have not completed a request for this long are
+    /// reclaimed — a clean `ERR` and a close — so a horde of cheap idle
+    /// sockets bounds new-client lockout instead of making it
+    /// permanent. Off the cap, idle connections live forever (sticky
+    /// cluster clients depend on that).
+    pub idle_reclaim: Duration,
+    /// When set, the shard verbs in [`AUTH_VERBS`] require a matching
+    /// `AUTH <token>` preamble on the connection first.
+    pub auth_token: Option<String>,
+}
+
+impl Default for ConnConfig {
+    fn default() -> Self {
+        Self {
+            poll_timeout: Duration::from_millis(100),
+            stall_timeout: Duration::from_secs(30),
+            idle_reclaim: Duration::from_secs(60),
+            auth_token: None,
+        }
+    }
+}
+
+/// Shared transport counters, surfaced by the `METRICS` verb and
+/// [`crate::net::pool::ServerHandle`].
+#[derive(Debug, Default)]
+pub struct TransportStats {
+    /// Connections the accept loop took off the listener.
+    pub accepted: AtomicU64,
+    /// Connections refused because the server was at its connection cap.
+    pub rejected: AtomicU64,
+    /// Connections closed for stalling mid-request (slow-loris).
+    pub timed_out: AtomicU64,
+    /// Idle connections reclaimed while the pool sat at its cap.
+    pub reclaimed: AtomicU64,
+    /// Live connections (queued or being served).
+    pub active: AtomicUsize,
+    /// Connections sitting in the run queue right now.
+    pub queued: AtomicUsize,
+    /// Pool size / connection cap, fixed at serve time (stored here so
+    /// the `METRICS` reply needs no reach into the pool).
+    pub workers: AtomicUsize,
+    pub max_connections: AtomicUsize,
+}
+
+impl TransportStats {
+    /// The `METRICS` reply line.
+    pub fn metrics_line(&self) -> String {
+        format!(
+            "OK workers={} conn_cap={} accepted={} active={} queued={} rejected={} timed_out={} reclaimed={}",
+            self.workers.load(Ordering::Relaxed),
+            self.max_connections.load(Ordering::Relaxed),
+            self.accepted.load(Ordering::Relaxed),
+            self.active.load(Ordering::Relaxed),
+            self.queued.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.timed_out.load(Ordering::Relaxed),
+            self.reclaimed.load(Ordering::Relaxed),
+        )
+    }
+}
+
+/// The `PICO_AUTH_TOKEN` env token, when set non-empty — the one
+/// lookup the serve side (the gate in [`ConnConfig::auth_token`]) and
+/// every dialer (the `AUTH` preamble) share, so the two cannot drift.
+/// A token containing whitespace cannot be carried by the line-based
+/// `AUTH <token>` verb (only the first token would survive parsing),
+/// so it is rejected loudly here — the same rule the topology parser
+/// enforces — instead of configuring a gate no client could pass.
+pub fn env_auth_token() -> Option<String> {
+    match std::env::var("PICO_AUTH_TOKEN") {
+        Ok(t) if t.contains(char::is_whitespace) => {
+            eprintln!(
+                "warning: PICO_AUTH_TOKEN contains whitespace, which the AUTH verb cannot carry; ignoring it"
+            );
+            None
+        }
+        Ok(t) if !t.is_empty() => Some(t),
+        _ => None,
+    }
+}
+
+/// Constant-time byte equality for equal-length inputs: the comparison
+/// touches every byte regardless of where they first differ, so reply
+/// timing does not leak a prefix match of the auth token. A length
+/// mismatch returns early — length is not secret material here, and
+/// folding it into a narrowed accumulator is exactly the bug class
+/// (lengths differing by a multiple of 256 comparing equal) this
+/// explicit check rules out.
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut diff = 0u8;
+    for (x, y) in a.iter().zip(b) {
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
+/// Why a [`Connection::serve_slice`] returned.
+#[derive(Debug, PartialEq, Eq)]
+pub enum Slice {
+    /// Idle, mid-request without new bytes, or out of slice budget —
+    /// requeue and serve again later.
+    Yield,
+    /// Peer closed, `QUIT`, a fatal protocol error, or drained — drop.
+    Closed,
+    /// Stalled mid-request past the stall timeout — drop and count.
+    TimedOut,
+    /// Idle past [`ConnConfig::idle_reclaim`] while the pool sat at its
+    /// connection cap — drop and count, freeing the slot.
+    Reclaimed,
+}
+
+/// What one read step produced.
+enum ReadStep<T> {
+    /// A complete request.
+    Data(T),
+    /// No request pending at all (a drainable boundary).
+    Idle,
+    /// Mid-request, peer alive but slow — yield, resume next slice.
+    Pending,
+    /// Clean EOF at a request boundary.
+    Closed,
+}
+
+impl<T> ReadStep<T> {
+    fn map<U>(self, f: impl FnOnce(T) -> U) -> ReadStep<U> {
+        match self {
+            ReadStep::Data(t) => ReadStep::Data(f(t)),
+            ReadStep::Idle => ReadStep::Idle,
+            ReadStep::Pending => ReadStep::Pending,
+            ReadStep::Closed => ReadStep::Closed,
+        }
+    }
+}
+
+/// A complete request in either mode.
+enum Req {
+    Line(String),
+    Frame(Vec<u8>),
+}
+
+/// Resumable read state for the request currently crossing the wire —
+/// this living on the connection (not a worker's stack) is what lets a
+/// bounded pool survive slow senders.
+enum Partial {
+    None,
+    Line(Vec<u8>),
+    Frame(FramePartial),
+}
+
+struct FramePartial {
+    header: [u8; 4],
+    hfilled: usize,
+    /// Allocated once the header completes.
+    body: Option<Vec<u8>>,
+    bfilled: usize,
+}
+
+impl FramePartial {
+    fn fresh() -> Self {
+        Self {
+            header: [0u8; 4],
+            hfilled: 0,
+            body: None,
+            bfilled: 0,
+        }
+    }
+}
+
+/// One live connection: socket, buffered reader, session, and the
+/// resumable read state of the in-flight request.
+pub struct Connection {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+    session: Session,
+    slot: usize,
+    partial: Partial,
+    /// Last time the in-flight request delivered a byte (stall clock).
+    last_progress: Instant,
+    /// Last time a request completed (idle-reclaim clock).
+    last_active: Instant,
+    /// The read timeout currently set on the socket (tracked to avoid
+    /// a redundant syscall per slice).
+    poll: Duration,
+}
+
+impl Connection {
+    /// Wrap an accepted stream. The socket is switched to blocking mode
+    /// with `poll` as its read timeout (accept listeners are
+    /// non-blocking and inheritance is platform-dependent).
+    pub fn new(
+        stream: TcpStream,
+        default_graph: String,
+        slot: usize,
+        poll: Duration,
+    ) -> std::io::Result<Self> {
+        stream.set_nonblocking(false)?;
+        stream.set_read_timeout(Some(poll))?;
+        let writer = stream.try_clone()?;
+        Ok(Self {
+            reader: BufReader::new(stream),
+            writer,
+            session: Session::new(default_graph),
+            slot,
+            partial: Partial::None,
+            last_progress: Instant::now(),
+            last_active: Instant::now(),
+            poll,
+        })
+    }
+
+    /// Serve up to [`MAX_REQUESTS_PER_SLICE`] requests, then yield.
+    /// `draining` is honoured at request boundaries only. With
+    /// `oversubscribed` (more live connections than pool workers), the
+    /// read poll drops to [`QUICK_POLL`] so a worker skims past
+    /// idle/slow connections instead of making ready ones wait a full
+    /// poll interval behind each.
+    pub fn serve_slice(
+        &mut self,
+        handler: &dyn Handler,
+        cfg: &ConnConfig,
+        stats: &TransportStats,
+        draining: &AtomicBool,
+        oversubscribed: bool,
+        at_capacity: bool,
+    ) -> Slice {
+        let want = if oversubscribed {
+            QUICK_POLL.min(cfg.poll_timeout)
+        } else {
+            cfg.poll_timeout
+        };
+        if want != self.poll && self.reader.get_ref().set_read_timeout(Some(want)).is_ok() {
+            self.poll = want;
+        }
+        for served in 0..MAX_REQUESTS_PER_SLICE {
+            // only block on the socket for the first request of a
+            // slice; afterwards keep going just while data is already
+            // buffered, so one chatty client cannot pin its worker
+            if served > 0 && self.reader.buffer().is_empty() {
+                return Slice::Yield;
+            }
+            let step = if self.session.binary {
+                match self.read_frame_step(cfg.stall_timeout) {
+                    Ok(s) => s.map(Req::Frame),
+                    Err(e) => return self.read_error(e),
+                }
+            } else {
+                match self.read_line_step(cfg.stall_timeout) {
+                    Ok(s) => s.map(Req::Line),
+                    Err(e) => return self.read_error(e),
+                }
+            };
+            match step {
+                ReadStep::Data(req) => {
+                    if !self.answer(handler, cfg, stats, req) {
+                        return Slice::Closed;
+                    }
+                    self.last_active = Instant::now();
+                }
+                ReadStep::Idle => {
+                    if draining.load(Ordering::SeqCst) {
+                        return Slice::Closed;
+                    }
+                    // at the connection cap, long-idle sockets give
+                    // their slot back (a horde of cheap idle sockets
+                    // must not lock new clients out forever); off the
+                    // cap, idle connections live indefinitely
+                    if at_capacity && self.last_active.elapsed() >= cfg.idle_reclaim {
+                        self.send_err("ERR connection reclaimed (server at capacity, idle too long)");
+                        return Slice::Reclaimed;
+                    }
+                    return Slice::Yield;
+                }
+                // mid-request: requeue with the partial state kept —
+                // drain waits for the boundary, the stall clock runs
+                ReadStep::Pending => return Slice::Yield,
+                ReadStep::Closed => return Slice::Closed,
+            }
+            if draining.load(Ordering::SeqCst) {
+                return Slice::Closed;
+            }
+        }
+        Slice::Yield
+    }
+
+    /// Best-effort structured `ERR` in whichever framing the session
+    /// speaks — the one place the mode branch lives, so line and
+    /// binary error behavior cannot drift apart.
+    fn send_err(&mut self, msg: &str) {
+        let _ = if self.session.binary {
+            codec::write_frame(&mut self.writer, msg.as_bytes())
+        } else {
+            writeln!(self.writer, "{msg}").and_then(|_| self.writer.flush())
+        };
+    }
+
+    /// Map a fatal read error to a slice outcome, sending the
+    /// structured `ERR` the protocol promises where one applies.
+    fn read_error(&mut self, e: std::io::Error) -> Slice {
+        match e.kind() {
+            ErrorKind::TimedOut => {
+                // slow-loris: a started request stopped making progress
+                self.send_err("ERR read timed out mid-request (slow sender)");
+                Slice::TimedOut
+            }
+            ErrorKind::InvalidData => {
+                // oversized line/frame: structured error, then close
+                let msg = if self.session.binary {
+                    format!("ERR frame exceeds {MAX_FRAME_BYTES} bytes")
+                } else {
+                    format!("ERR line exceeds {MAX_LINE_BYTES} bytes")
+                };
+                self.send_err(&msg);
+                Slice::Closed
+            }
+            _ => Slice::Closed,
+        }
+    }
+
+    /// Dispatch one complete request and write its reply. Returns
+    /// whether the connection stays open.
+    fn answer(
+        &mut self,
+        handler: &dyn Handler,
+        cfg: &ConnConfig,
+        stats: &TransportStats,
+        req: Req,
+    ) -> bool {
+        match req {
+            Req::Line(line) => {
+                if line.trim().is_empty() {
+                    return true;
+                }
+                let reply = match self.transport_reply(cfg, stats, &line) {
+                    Some(r) => r,
+                    // containment: a panicking handler must not take
+                    // the server down — the connection reports and
+                    // closes, the pool lives
+                    None => std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        handler.handle_line(&mut self.session, &line, self.slot)
+                    }))
+                    .unwrap_or_else(|_| "ERR internal handler panic (contained)".into()),
+                };
+                let quit = reply == "OK bye";
+                if writeln!(self.writer, "{reply}")
+                    .and_then(|_| self.writer.flush())
+                    .is_err()
+                {
+                    return false;
+                }
+                !quit
+            }
+            Req::Frame(body) => {
+                let (head, _) = codec::split_frame(&body);
+                let reply = match std::str::from_utf8(head)
+                    .ok()
+                    .and_then(|h| self.transport_reply(cfg, stats, h))
+                {
+                    Some(r) => r.into_bytes(),
+                    None => std::panic::catch_unwind(AssertUnwindSafe(|| {
+                        handler.handle_frame(&mut self.session, &body, self.slot)
+                    }))
+                    .unwrap_or_else(|_| b"ERR internal handler panic (contained)".to_vec()),
+                };
+                let quit = reply.as_slice() == b"OK bye";
+                if codec::write_frame(&mut self.writer, &reply).is_err() {
+                    return false;
+                }
+                !quit
+            }
+        }
+    }
+
+    /// Transport-owned dispatch: `AUTH`, `METRICS`, and the auth gate.
+    /// `None` hands the command to the application [`Handler`].
+    fn transport_reply(
+        &mut self,
+        cfg: &ConnConfig,
+        stats: &TransportStats,
+        line: &str,
+    ) -> Option<String> {
+        let mut parts = line.split_whitespace();
+        let verb = parts.next()?.to_ascii_uppercase();
+        match verb.as_str() {
+            "AUTH" => Some(match (&cfg.auth_token, parts.next()) {
+                // open server: accept any preamble so clients can send
+                // one unconditionally
+                (None, _) => "OK auth".into(),
+                (Some(want), Some(got)) if ct_eq(want.as_bytes(), got.as_bytes()) => {
+                    self.session.authed = true;
+                    "OK auth".into()
+                }
+                (Some(_), _) => "ERR bad auth token".into(),
+            }),
+            "METRICS" => Some(stats.metrics_line()),
+            v if cfg.auth_token.is_some() && !self.session.authed && AUTH_VERBS.contains(&v) => {
+                Some(format!("ERR auth required for {v} (send AUTH <token> first)"))
+            }
+            _ => None,
+        }
+    }
+
+    /// Resume (or start) reading one line. At most one socket timeout
+    /// is absorbed per call — the caller yields on [`ReadStep::Pending`]
+    /// and this picks the buffer back up next slice.
+    fn read_line_step(&mut self, stall: Duration) -> std::io::Result<ReadStep<String>> {
+        let mut line = match std::mem::replace(&mut self.partial, Partial::None) {
+            Partial::None => {
+                self.last_progress = Instant::now();
+                Vec::new()
+            }
+            Partial::Line(l) => l,
+            Partial::Frame(_) => unreachable!("line step with a frame partial"),
+        };
+        loop {
+            let (upto, newline) = match self.reader.fill_buf() {
+                Ok(buf) if buf.is_empty() => {
+                    // EOF: hand back any trailing unterminated line
+                    return Ok(if line.is_empty() {
+                        ReadStep::Closed
+                    } else {
+                        ReadStep::Data(String::from_utf8_lossy(&line).into_owned())
+                    });
+                }
+                Ok(buf) => {
+                    let newline = buf.iter().position(|&b| b == b'\n');
+                    let upto = newline.unwrap_or(buf.len());
+                    if line.len() + upto > MAX_LINE_BYTES {
+                        return Err(std::io::Error::new(
+                            ErrorKind::InvalidData,
+                            "protocol line too long",
+                        ));
+                    }
+                    line.extend_from_slice(&buf[..upto]);
+                    (upto, newline.is_some())
+                }
+                Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                    if line.is_empty() {
+                        return Ok(ReadStep::Idle);
+                    }
+                    if self.last_progress.elapsed() >= stall {
+                        return Err(std::io::Error::new(
+                            ErrorKind::TimedOut,
+                            "line stalled mid-request",
+                        ));
+                    }
+                    self.partial = Partial::Line(line);
+                    return Ok(ReadStep::Pending);
+                }
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            };
+            self.reader.consume(if newline { upto + 1 } else { upto });
+            self.last_progress = Instant::now();
+            if newline {
+                return Ok(ReadStep::Data(String::from_utf8_lossy(&line).into_owned()));
+            }
+        }
+    }
+
+    /// Resume (or start) reading one frame. At most one socket timeout
+    /// is absorbed per call — the caller yields on [`ReadStep::Pending`]
+    /// and this picks the header/body back up next slice.
+    fn read_frame_step(&mut self, stall: Duration) -> std::io::Result<ReadStep<Vec<u8>>> {
+        let mut st = match std::mem::replace(&mut self.partial, Partial::None) {
+            Partial::None => {
+                self.last_progress = Instant::now();
+                FramePartial::fresh()
+            }
+            Partial::Frame(f) => f,
+            Partial::Line(_) => unreachable!("frame step with a line partial"),
+        };
+        loop {
+            if st.hfilled < st.header.len() {
+                match self.reader.read(&mut st.header[st.hfilled..]) {
+                    Ok(0) => {
+                        return if st.hfilled == 0 {
+                            Ok(ReadStep::Closed)
+                        } else {
+                            Err(std::io::Error::new(
+                                ErrorKind::UnexpectedEof,
+                                "connection closed mid-frame",
+                            ))
+                        };
+                    }
+                    Ok(n) => {
+                        st.hfilled += n;
+                        self.last_progress = Instant::now();
+                        if st.hfilled == st.header.len() {
+                            let len = u32::from_le_bytes(st.header) as usize;
+                            if len > MAX_FRAME_BYTES {
+                                return Err(std::io::Error::new(
+                                    ErrorKind::InvalidData,
+                                    "frame too large",
+                                ));
+                            }
+                            st.body = Some(vec![0u8; len]);
+                        }
+                    }
+                    Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                        if st.hfilled == 0 {
+                            return Ok(ReadStep::Idle);
+                        }
+                        if self.last_progress.elapsed() >= stall {
+                            return Err(std::io::Error::new(
+                                ErrorKind::TimedOut,
+                                "frame stalled mid-request",
+                            ));
+                        }
+                        self.partial = Partial::Frame(st);
+                        return Ok(ReadStep::Pending);
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e),
+                }
+                continue;
+            }
+            let at = st.bfilled;
+            let body = st.body.as_mut().expect("allocated with the header");
+            if at < body.len() {
+                match self.reader.read(&mut body[at..]) {
+                    Ok(0) => {
+                        return Err(std::io::Error::new(
+                            ErrorKind::UnexpectedEof,
+                            "connection closed mid-frame",
+                        ));
+                    }
+                    Ok(n) => {
+                        st.bfilled += n;
+                        self.last_progress = Instant::now();
+                    }
+                    Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
+                        if self.last_progress.elapsed() >= stall {
+                            return Err(std::io::Error::new(
+                                ErrorKind::TimedOut,
+                                "frame stalled mid-request",
+                            ));
+                        }
+                        self.partial = Partial::Frame(st);
+                        return Ok(ReadStep::Pending);
+                    }
+                    Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                    Err(e) => return Err(e),
+                }
+                continue;
+            }
+            return Ok(ReadStep::Data(st.body.take().expect("complete body")));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ct_eq_matches_plain_equality() {
+        assert!(ct_eq(b"secret", b"secret"));
+        assert!(!ct_eq(b"secret", b"secreT"));
+        assert!(!ct_eq(b"secret", b"secre"));
+        assert!(!ct_eq(b"", b"x"));
+        assert!(ct_eq(b"", b""));
+        // a length delta that is a multiple of 256 must still mismatch
+        // (a u8-narrowed length fold would wrap to 0 and accept this)
+        let mut padded = b"secret".to_vec();
+        padded.extend(std::iter::repeat(0u8).take(256));
+        assert!(!ct_eq(b"secret", &padded));
+    }
+
+    #[test]
+    fn verb_tables_have_no_duplicates_and_cover_the_gate() {
+        let mut all: Vec<&str> = LINE_VERBS.iter().chain(FRAME_VERBS).copied().collect();
+        let n = all.len();
+        all.sort_unstable();
+        all.dedup();
+        assert_eq!(all.len(), n, "duplicate verb across the tables");
+        for v in AUTH_VERBS {
+            assert!(
+                FRAME_VERBS.contains(v),
+                "auth-gated verb {v} missing from FRAME_VERBS"
+            );
+        }
+    }
+
+    #[test]
+    fn metrics_line_is_structured() {
+        let stats = TransportStats::default();
+        stats.workers.store(4, Ordering::Relaxed);
+        stats.accepted.fetch_add(7, Ordering::Relaxed);
+        let line = stats.metrics_line();
+        assert!(line.starts_with("OK workers=4 "), "{line}");
+        assert!(line.contains(" accepted=7 "), "{line}");
+        assert!(line.contains(" timed_out=0"), "{line}");
+    }
+}

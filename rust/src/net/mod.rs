@@ -1,0 +1,40 @@
+//! The unified transport layer: every byte that crosses a pico socket
+//! goes through this module.
+//!
+//! Before this layer existed, the frame/line codec was re-implemented
+//! in five places (server, remote shard, cluster wire, snapshot
+//! shipping, CLI) and the server spawned one unbounded OS thread per
+//! accepted connection. Following the project's own thesis —
+//! restructure the synchronization skeleton so the same work costs
+//! less — the wire plumbing now has one home:
+//!
+//! * [`codec`] — the single source of truth for the line protocol
+//!   limits, the length-prefixed binary framing, every payload magic,
+//!   and the bounds-checked [`codec::Cursor`] all untrusted payload
+//!   decoders share.
+//! * [`conn`] — the per-connection session state machine (line mode,
+//!   `BINARY` upgrade, graph pinning, `AUTH` gating of the shard
+//!   verbs, `METRICS`, drain awareness, slow-loris timeouts),
+//!   delegating application verbs through the [`conn::Handler`] trait.
+//! * [`pool`] — the bounded server: one accept thread feeding a fixed
+//!   worker pool over a connection run queue, with a hard connection
+//!   cap and accepted/active/queued/rejected/timed-out counters.
+//! * [`client`] — the one reconnecting protocol client shared by the
+//!   remote-shard backend, `pico query` (including one-hop cluster
+//!   redirects), and `pico cluster status`.
+//!
+//! The application protocol itself (verb semantics, backends, the
+//! multi-graph service) stays in [`crate::service::server`], which
+//! implements [`conn::Handler`].
+
+pub mod client;
+pub mod codec;
+pub mod conn;
+pub mod pool;
+
+pub use client::{follow_redirect, parse_redirect, Client, FrameClient, Redirect};
+pub use codec::{
+    read_frame, split_frame, write_frame, Cursor, MAX_FRAME_BYTES, MAX_LINE_BYTES,
+};
+pub use conn::{env_auth_token, ConnConfig, Handler, Session, TransportStats};
+pub use pool::{default_workers, serve_handler, NetConfig, ServerHandle};

@@ -1,0 +1,369 @@
+//! The bounded transport: one accept thread feeding a fixed worker pool
+//! over a run queue of [`Connection`]s — the replacement for the old
+//! thread-per-connection server.
+//!
+//! Capacity is explicit instead of emergent: `workers` threads
+//! (default [`default_workers`]) cooperatively multiplex up to
+//! `max_connections` live connections. A connection is a queue entry,
+//! not a thread — a worker pops one, serves a bounded slice of requests
+//! ([`Connection::serve_slice`]), and requeues it, so 16 workers hold
+//! thousands of mostly-idle connections at a per-connection cost of one
+//! socket + one buffered reader. Accepts past the connection cap are
+//! answered with one structured `ERR` line and closed (counted in
+//! [`TransportStats::rejected`]); requests that stall mid-read are
+//! timed out (slow-loris, [`TransportStats::timed_out`]); and while
+//! the pool sits *at* the cap, connections idle past
+//! [`ConnConfig::idle_reclaim`] give their slot back
+//! ([`TransportStats::reclaimed`]) — a horde of cheap idle sockets
+//! bounds new-client lockout instead of making it permanent. All
+//! counters surface on the `METRICS` verb.
+//!
+//! # Shutdown
+//!
+//! [`ServerHandle::stop`] stops the accept loop; live connections keep
+//! being served. [`ServerHandle::drain`] additionally asks every
+//! connection to close at its next request boundary (in-flight requests
+//! finish and get their reply) and waits for the active gauge to reach
+//! zero. Dropping the handle is the hard stop: workers abandon whatever
+//! is queued and join.
+
+use super::conn::{ConnConfig, Connection, Handler, Slice, TransportStats};
+use anyhow::{Context, Result};
+use std::collections::VecDeque;
+use std::io::{ErrorKind, Write};
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// Pool size when none is configured: one worker per core, capped — a
+/// serving box does not need more request-execution threads than that,
+/// and the cap keeps `--workers`-less deployments from ballooning on
+/// 128-core hosts.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .min(16)
+}
+
+/// Transport configuration for [`serve_handler`].
+#[derive(Clone, Debug)]
+pub struct NetConfig {
+    /// Worker threads (0 = [`default_workers`]).
+    pub workers: usize,
+    /// Hard cap on live connections; accept #cap+1 is answered with an
+    /// `ERR` line and closed.
+    pub max_connections: usize,
+    /// Per-connection read/drain knobs + the shard-verb auth token.
+    pub conn: ConnConfig,
+}
+
+impl Default for NetConfig {
+    fn default() -> Self {
+        Self {
+            workers: 0,
+            max_connections: 1024,
+            conn: ConnConfig::default(),
+        }
+    }
+}
+
+/// The run queue shared by the accept loop and the workers.
+struct RunQueue {
+    queue: Mutex<VecDeque<Connection>>,
+    ready: Condvar,
+}
+
+impl RunQueue {
+    fn push(&self, conn: Connection, stats: &TransportStats) {
+        let mut q = self.queue.lock().unwrap();
+        q.push_back(conn);
+        stats.queued.store(q.len(), Ordering::Relaxed);
+        drop(q);
+        self.ready.notify_one();
+    }
+
+    /// Pop the next connection, waiting briefly; `None` on timeout so
+    /// callers can re-check their stop flags.
+    fn pop_wait(&self, stats: &TransportStats) -> Option<Connection> {
+        let mut q = self.queue.lock().unwrap();
+        if q.is_empty() {
+            let (guard, _timeout) = self
+                .ready
+                .wait_timeout(q, Duration::from_millis(50))
+                .unwrap();
+            q = guard;
+        }
+        let conn = q.pop_front();
+        stats.queued.store(q.len(), Ordering::Relaxed);
+        conn
+    }
+
+    fn clear(&self, stats: &TransportStats) {
+        let mut q = self.queue.lock().unwrap();
+        q.clear(); // dropping a Connection closes its socket
+        stats.queued.store(0, Ordering::Relaxed);
+    }
+}
+
+/// Decrements the live-connection gauge when the connection it still
+/// holds is retired (dropping the socket with it). [`ActiveConn::keep`]
+/// disarms the guard for connections going back on the run queue.
+struct ActiveConn {
+    conn: Option<Connection>,
+    stats: Arc<TransportStats>,
+}
+
+impl ActiveConn {
+    /// Take the connection back out without retiring it (it stays
+    /// live, so the gauge is untouched).
+    fn keep(mut self) -> Connection {
+        self.conn.take().expect("connection already retired")
+    }
+}
+
+impl Drop for ActiveConn {
+    fn drop(&mut self) {
+        if self.conn.is_some() {
+            self.stats.active.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+}
+
+/// A running TCP server. Dropping the handle hard-stops the pool.
+pub struct ServerHandle {
+    addr: SocketAddr,
+    stop_accept: Arc<AtomicBool>,
+    draining: Arc<AtomicBool>,
+    hard_stop: Arc<AtomicBool>,
+    stats: Arc<TransportStats>,
+    queue: Arc<RunQueue>,
+    joins: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Signal the accept loop to exit; live connections keep being
+    /// served until the handle drops (or [`Self::drain`]).
+    pub fn stop(&self) {
+        self.stop_accept.store(true, Ordering::SeqCst);
+    }
+
+    /// Connections currently live (queued or being served).
+    pub fn active_connections(&self) -> usize {
+        self.stats.active.load(Ordering::SeqCst)
+    }
+
+    /// The shared transport counters (the `METRICS` verb's source).
+    pub fn stats(&self) -> &Arc<TransportStats> {
+        &self.stats
+    }
+
+    /// Graceful shutdown: stop accepting, ask every connection to close
+    /// at its next request boundary (in-flight requests finish and get
+    /// their reply; nothing is dropped mid-frame), and wait up to
+    /// `grace` for them. Returns whether every connection drained — a
+    /// `false` means some connection is stalled mid-request; it is
+    /// reclaimed by its stall timeout or by dropping the handle.
+    /// Callers flush pending edits afterwards (e.g.
+    /// [`crate::service::server::CoreService::flush_all`]).
+    pub fn drain(&self, grace: Duration) -> bool {
+        self.draining.store(true, Ordering::SeqCst);
+        self.stop();
+        let deadline = std::time::Instant::now() + grace;
+        while self.active_connections() > 0 {
+            if std::time::Instant::now() >= deadline {
+                return false;
+            }
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        true
+    }
+
+    /// Block until another thread requests a stop ([`Self::stop`] or
+    /// [`Self::drain`]), then tear the pool down and return. Useful for
+    /// servers run to end-of-process: the calling thread parks here
+    /// instead of busy-looping on a flag.
+    pub fn join(mut self) {
+        while !self.stop_accept.load(Ordering::SeqCst) {
+            std::thread::sleep(Duration::from_millis(50));
+        }
+        // joining consumes the handle; the Drop impl then has nothing
+        // left to do
+        self.hard_stop_and_join();
+    }
+
+    fn hard_stop_and_join(&mut self) {
+        self.stop();
+        self.hard_stop.store(true, Ordering::SeqCst);
+        self.queue.ready.notify_all();
+        for j in self.joins.drain(..) {
+            let _ = j.join();
+        }
+        self.queue.clear(&self.stats);
+    }
+}
+
+impl Drop for ServerHandle {
+    fn drop(&mut self) {
+        self.hard_stop_and_join();
+    }
+}
+
+/// Bind `addr` and serve `handler` on a bounded worker pool until the
+/// handle is stopped. The accept thread and all workers run in the
+/// background; panics in application handlers are contained per
+/// request (see [`Connection::serve_slice`]).
+pub fn serve_handler(
+    handler: Arc<dyn Handler>,
+    addr: &str,
+    cfg: NetConfig,
+) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
+    let local = listener.local_addr().context("reading bound address")?;
+    listener
+        .set_nonblocking(true)
+        .context("setting the listener non-blocking")?;
+    let workers = if cfg.workers == 0 {
+        default_workers()
+    } else {
+        cfg.workers
+    };
+    let stats = Arc::new(TransportStats::default());
+    stats.workers.store(workers, Ordering::Relaxed);
+    stats
+        .max_connections
+        .store(cfg.max_connections, Ordering::Relaxed);
+    let stop_accept = Arc::new(AtomicBool::new(false));
+    let draining = Arc::new(AtomicBool::new(false));
+    let hard_stop = Arc::new(AtomicBool::new(false));
+    let queue = Arc::new(RunQueue {
+        queue: Mutex::new(VecDeque::new()),
+        ready: Condvar::new(),
+    });
+    let mut joins = Vec::with_capacity(workers + 1);
+
+    // the accept loop: admission control + enqueue
+    {
+        let stop = stop_accept.clone();
+        let stats = stats.clone();
+        let queue = queue.clone();
+        let default_graph = handler.default_graph();
+        let poll = cfg.conn.poll_timeout;
+        let cap = cfg.max_connections;
+        let slot_counter = AtomicUsize::new(0);
+        joins.push(
+            std::thread::Builder::new()
+                .name("pico-serve-accept".into())
+                .spawn(move || {
+                    while !stop.load(Ordering::SeqCst) {
+                        match listener.accept() {
+                            Ok((mut stream, _peer)) => {
+                                stats.accepted.fetch_add(1, Ordering::Relaxed);
+                                if stats.active.load(Ordering::SeqCst) >= cap {
+                                    // one clean error line, then close —
+                                    // the client gets a reason, not a RST
+                                    stats.rejected.fetch_add(1, Ordering::Relaxed);
+                                    let _ = stream.set_nonblocking(false);
+                                    let _ = writeln!(
+                                        stream,
+                                        "ERR server at connection capacity ({cap}); retry later"
+                                    );
+                                    continue; // dropping the stream closes it
+                                }
+                                let slot = slot_counter.fetch_add(1, Ordering::Relaxed);
+                                match Connection::new(stream, default_graph.clone(), slot, poll) {
+                                    Ok(conn) => {
+                                        stats.active.fetch_add(1, Ordering::SeqCst);
+                                        queue.push(conn, &stats);
+                                    }
+                                    Err(_) => {} // socket died during setup
+                                }
+                            }
+                            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                            Err(_) => {
+                                // transient accept error; keep serving
+                                std::thread::sleep(Duration::from_millis(10));
+                            }
+                        }
+                    }
+                })
+                .context("spawning the accept thread")?,
+        );
+    }
+
+    // the workers: pop, serve a slice, requeue or retire
+    for w in 0..workers {
+        let handler = handler.clone();
+        let stats = stats.clone();
+        let queue = queue.clone();
+        let draining = draining.clone();
+        let hard_stop = hard_stop.clone();
+        let conn_cfg = cfg.conn.clone();
+        let cap = cfg.max_connections;
+        joins.push(
+            std::thread::Builder::new()
+                .name(format!("pico-serve-worker-{w}"))
+                .spawn(move || {
+                    while !hard_stop.load(Ordering::SeqCst) {
+                        let Some(conn) = queue.pop_wait(&stats) else {
+                            continue;
+                        };
+                        let mut active = ActiveConn {
+                            conn: Some(conn),
+                            stats: stats.clone(),
+                        };
+                        // more live connections than workers: skim idle
+                        // ones quickly so ready ones are not held back
+                        let live = stats.active.load(Ordering::SeqCst);
+                        let oversubscribed = live > workers;
+                        // at the cap, accepts are being rejected: long-
+                        // idle connections give their slots back
+                        let at_capacity = live >= cap;
+                        let outcome = active.conn.as_mut().expect("just wrapped").serve_slice(
+                            handler.as_ref(),
+                            &conn_cfg,
+                            &stats,
+                            &draining,
+                            oversubscribed,
+                            at_capacity,
+                        );
+                        match outcome {
+                            Slice::Yield if !hard_stop.load(Ordering::SeqCst) => {
+                                // still live: back on the run queue
+                                // without touching the active gauge
+                                queue.push(active.keep(), &stats);
+                            }
+                            // on hard stop, dropping `active` closes the
+                            // socket and decrements the gauge
+                            Slice::Yield | Slice::Closed => {}
+                            Slice::TimedOut => {
+                                stats.timed_out.fetch_add(1, Ordering::Relaxed);
+                            }
+                            Slice::Reclaimed => {
+                                stats.reclaimed.fetch_add(1, Ordering::Relaxed);
+                            }
+                        }
+                    }
+                })
+                .context("spawning a pool worker")?,
+        );
+    }
+
+    Ok(ServerHandle {
+        addr: local,
+        stop_accept,
+        draining,
+        hard_stop,
+        stats,
+        queue,
+        joins,
+    })
+}

@@ -12,11 +12,14 @@
 //!   analog of the paper's Peel vs Index2core crossover, Table VII).
 //! * [`queries`] — the read API: coreness, k-core membership,
 //!   degeneracy, core histograms, densest-core extraction.
-//! * [`server`] — a line-protocol TCP server ([`server::serve`]) with a
-//!   length-prefixed binary variant (snapshot shipping via
-//!   `SNAPSHOT`/`RESTORE`), and the multi-graph [`server::CoreService`]
-//!   behind `pico serve` — hosting single indices or sharded ones
-//!   ([`crate::shard::ShardedIndex`], `pico serve --shards N`).
+//! * [`server`] — the application protocol: the multi-graph
+//!   [`server::CoreService`] behind `pico serve` — hosting single
+//!   indices, sharded ones ([`crate::shard::ShardedIndex`],
+//!   `pico serve --shards N`), shard hosts, and whole clusters — served
+//!   over the [`crate::net`] transport layer ([`server::serve`] /
+//!   [`server::serve_with`]; framing, worker pool, auth, and transport
+//!   metrics live in `net`, which drives `CoreService` through
+//!   [`crate::net::conn::Handler`]).
 //!
 //! Throughput/latency characteristics are measured by
 //! `benches/serve_throughput.rs`; the crossover default in
@@ -32,4 +35,4 @@ pub use batch::{
 };
 pub use index::{CoreIndex, CoreSnapshot, CoreStore};
 pub use queries::{densest_core, DensestCore};
-pub use server::{serve, CoreService, ReplicaSyncDaemon, ServerHandle, Session};
+pub use server::{serve, serve_with, CoreService, ReplicaSyncDaemon, ServerHandle, Session};

@@ -1,13 +1,21 @@
 //! The serving surface: a multi-graph [`CoreService`] hosting single or
-//! sharded backends, a line-protocol TCP front end, and a length-prefixed
-//! binary protocol for snapshot shipping (`pico serve` / `pico query`).
+//! sharded backends behind the [`crate::net`] transport layer — a
+//! line-protocol front end plus a length-prefixed binary protocol for
+//! snapshot shipping (`pico serve` / `pico query`).
+//!
+//! This module owns the *application* protocol only: verb semantics and
+//! the backends they act on. Framing, connection scheduling, `AUTH`,
+//! `METRICS`, and the read-abuse bounds belong to [`crate::net`]
+//! ([`crate::net::codec`] / [`crate::net::conn`] / [`crate::net::pool`]),
+//! which drives [`CoreService`] through the [`crate::net::conn::Handler`]
+//! trait.
 //!
 //! # Line protocol
 //!
 //! One UTF-8 command per line, one reply line per command. Replies start
-//! with `OK` or `ERR`. Verbs are case-insensitive; vertex ids are decimal
-//! `u32`. A session has a *current graph* (the server's default graph
-//! until `USE` switches it).
+//! with `OK` or `ERR` (or `REDIRECT`, below). Verbs are case-insensitive;
+//! vertex ids are decimal `u32`. A session has a *current graph* (the
+//! server's default graph until `USE` switches it).
 //!
 //! | command | reply |
 //! |---|---|
@@ -26,8 +34,17 @@
 //! | `DELETE <u> <v>` | `OK pending=<n>` |
 //! | `FLUSH` | `OK epoch=<e> submitted=<s> applied=<a> coalesced=<c> changed=<g> recomputed=<r> [shards=<n> rounds=<r> boundary=<b>] ms=<t>` |
 //! | `STATS` | `OK queries=<q> edits=<e> batches=<b> recomputes=<r> graphs=<g>` |
-//! | `BINARY` | `OK binary` — switch this connection to binary framing |
+//! | `METRICS` | `OK workers=<w> conn_cap=<c> accepted=<a> active=<n> queued=<q> rejected=<r> timed_out=<t> reclaimed=<i>` — transport counters, answered by [`crate::net::conn`] (`reclaimed` = idle connections closed while the pool sat at its cap) |
+//! | `AUTH <token>` | `OK auth` / `ERR bad auth token` — unlocks the gated shard verbs when the server has a token configured (answered by [`crate::net::conn`], constant-time compare) |
+//! | `BINARY` | `OK binary proto=<id>` — switch this connection to binary framing (the id names the framing codec, [`crate::net::codec::FRAME_PROTO`]) |
 //! | `QUIT` | `OK bye` (connection closes) |
+//!
+//! `SHARDINFO`, `SHARDCORE <v>`, and `SHARDHISTO` are the line-mode
+//! shard probes (documented under *Cluster verbs* below). On a server
+//! *fronting a cluster*, `SHARDCORE <v>` for a vertex whose shard lives
+//! on another host answers `REDIRECT shard=<s> addr=<host:port>
+//! graph=<name>` — a hint the shared client (`pico query`) follows for
+//! one hop instead of erroring; locally-owned shards answer inline.
 //!
 //! Edits become visible only at `FLUSH` (one published epoch per flush),
 //! so a client controls its own read-your-writes boundary. Readers on
@@ -40,7 +57,8 @@
 //!
 //! After `BINARY`, every subsequent request and reply is one frame:
 //! a little-endian `u32` byte length followed by that many payload bytes
-//! (capped at [`MAX_FRAME_BYTES`]). A request frame's payload is a UTF-8
+//! (capped at [`MAX_FRAME_BYTES`]; framing lives in
+//! [`crate::net::codec`]). A request frame's payload is a UTF-8
 //! command line — any line-protocol verb works — optionally followed by
 //! `\n` and raw bytes. Two verbs use the raw-byte side:
 //!
@@ -91,26 +109,36 @@
 //! jittered probing), which ships delta chains to lagging replicas and
 //! full manifests when the journal cannot cover the gap.
 //!
-//! The TCP layer is thread-per-connection with the scheduler's
+//! The TCP layer is [`crate::net::pool`]: one accept thread feeding a
+//! bounded worker pool (`pico serve --workers N`, default
+//! `min(cores, 16)`) over a connection run queue, with a hard
+//! connection cap (`--max-conns`, accept #cap+1 gets one `ERR` line and
+//! a close), per-request slow-loris timeouts, and the scheduler's
 //! containment idiom: a panicking handler poisons nothing — the
-//! connection reports `ERR internal` and closes, the server keeps
-//! accepting. Abuse bounds: [`MAX_LINE_BYTES`], [`MAX_FRAME_BYTES`],
-//! [`MAX_VERTEX_ID`], [`MAX_PENDING_EDITS`], [`MAX_HOSTED_GRAPHS`].
+//! connection reports `ERR internal` and closes, the pool keeps
+//! serving. The transport counters surface on `METRICS`. Abuse bounds:
+//! [`MAX_LINE_BYTES`], [`MAX_FRAME_BYTES`], [`MAX_VERTEX_ID`],
+//! [`MAX_PENDING_EDITS`], [`MAX_HOSTED_GRAPHS`].
 //!
 //! # Graceful shutdown
 //!
 //! [`ServerHandle::drain`] stops the accept loop and asks every
 //! connection to wind down at its next *command boundary*: an in-flight
 //! request is parsed, executed, and answered in full (a half-read frame
-//! is never dropped), idle connections close at their next read
+//! is never dropped), idle connections close at their next poll
 //! timeout, and [`CoreService::flush_all`] then applies any pending
 //! edits so nothing queued is lost. `pico serve` drives this on
 //! SIGTERM / ctrl-c.
 //!
-//! **Trust model:** the protocol is unauthenticated, and `OPEN` resolves
-//! suite names *and server-local file paths* (CLI parity). The default
-//! bind is loopback; expose a non-loopback `--addr` only to clients you
-//! would let run `pico` on the host.
+//! **Trust model:** when an auth token is configured (`auth_token` in
+//! the cluster topology, or the `PICO_AUTH_TOKEN` env var for any
+//! `pico serve`), the state-mutating shard verbs
+//! ([`crate::net::conn::AUTH_VERBS`]) require the `AUTH <token>`
+//! preamble on the connection; everything else — reads, and `OPEN`,
+//! which resolves suite names *and server-local file paths* (CLI
+//! parity) — stays open. The default bind is loopback; expose a
+//! non-loopback `--addr` only to clients you would let run `pico` on
+//! the host.
 
 use super::batch::{BatchConfig, EditQueue};
 use super::index::{CoreIndex, CoreSnapshot};
@@ -119,32 +147,28 @@ use crate::cluster::{ClusterIndex, ShardHost};
 use crate::core::maintenance::EdgeEdit;
 use crate::engine::metrics::{Metrics, MetricsSnapshot};
 use crate::graph::CsrGraph;
+use crate::net::conn::Handler;
+use crate::net::{codec, NetConfig};
 use crate::shard::{snapshot as shard_snapshot, PartitionStrategy, ShardedIndex};
-use anyhow::{Context, Result};
+use anyhow::Result;
 use std::collections::HashMap;
-use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
-use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::Duration;
 
-/// Metric slots shared by connection threads (round-robin assignment).
+// The transport surface moved to `crate::net`; these re-exports keep
+// the long-standing `service::server::{...}` import paths working for
+// tests, benches, and downstream code.
+pub use crate::net::codec::{read_frame, write_frame, MAX_FRAME_BYTES, MAX_LINE_BYTES};
+pub use crate::net::conn::Session;
+pub use crate::net::pool::ServerHandle;
+
+/// Metric slots shared by pool workers (round-robin assignment).
 const METRIC_SLOTS: usize = 8;
 
 /// Reply cap for `MEMBERS` (a serving system never streams a million ids
 /// down one reply line; `count=` always carries the true size).
 pub const MAX_REPLY_MEMBERS: usize = 64;
-
-/// Longest protocol line accepted from the wire. A client streaming
-/// bytes with no newline must not grow the server's line buffer without
-/// bound (same memory-exhaustion class as [`MAX_VERTEX_ID`]).
-pub const MAX_LINE_BYTES: usize = 4096;
-
-/// Largest binary frame accepted or sent. Bounds the allocation a single
-/// length-prefix can demand; sized for snapshots of the largest suite
-/// graphs with ample headroom.
-pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
 /// Most queued-but-unflushed edits per graph accepted from the wire. A
 /// client that streams INSERTs without ever flushing must not grow the
@@ -507,7 +531,7 @@ impl CoreService {
             }
             "BINARY" => {
                 session.binary = true;
-                "OK binary".into()
+                format!("OK binary proto={}", codec::FRAME_PROTO)
             }
             "SNAPSHOT" | "RESTORE" | "SHARDHOST" | "SHARDSNAP" | "SHARDAPPLY" | "SHARDREFINE"
             | "SHARDMEMBERS" | "SHARDDELTA"
@@ -721,6 +745,34 @@ impl CoreService {
                         Backend::ShardHost(h) => {
                             view.serve_queries(1);
                             h.core_line(&args)
+                        }
+                        // a cluster coordinator knows the owner shard:
+                        // redirect the probe to its host (the shared
+                        // client follows one hop), or answer inline for
+                        // in-coordinator shards
+                        Backend::Cluster(c) => {
+                            view.serve_queries(1);
+                            let Some(Ok(v)) = args.first().map(|a| a.parse::<u32>()) else {
+                                return "ERR usage: SHARDCORE <v>".into();
+                            };
+                            let Some(s) = c.owner_of(v) else {
+                                return format!(
+                                    "ERR vertex {v} out of range (|V|={})",
+                                    c.snapshot().num_vertices()
+                                );
+                            };
+                            match c.groups()[s].remote_primary() {
+                                Some((addr, graph)) => {
+                                    format!("REDIRECT shard={s} addr={addr} graph={graph}")
+                                }
+                                None => match c.groups()[s].backend().refined_coreness(v) {
+                                    Ok((Some(core), ce)) => {
+                                        format!("OK core={core} cluster={ce}")
+                                    }
+                                    Ok((None, ce)) => format!("OK core=none cluster={ce}"),
+                                    Err(e) => format!("ERR shard read: {e:#}"),
+                                },
+                            }
                         }
                         _ => format!("ERR '{}' is not a hosted shard", session.graph),
                     },
@@ -1000,21 +1052,19 @@ impl CoreService {
     }
 }
 
-/// Per-connection state.
-#[derive(Clone, Debug)]
-pub struct Session {
-    /// Current graph name.
-    pub graph: String,
-    /// Whether the connection has upgraded to binary framing.
-    pub binary: bool,
-}
+/// The application half of the transport contract: the worker pool
+/// drives [`CoreService`] through this.
+impl Handler for CoreService {
+    fn default_graph(&self) -> String {
+        CoreService::default_graph(self)
+    }
 
-impl Session {
-    pub fn new(graph: impl Into<String>) -> Self {
-        Self {
-            graph: graph.into(),
-            binary: false,
-        }
+    fn handle_line(&self, session: &mut Session, line: &str, slot: usize) -> String {
+        self.handle_command(session, line, slot)
+    }
+
+    fn handle_frame(&self, session: &mut Session, body: &[u8], slot: usize) -> Vec<u8> {
+        CoreService::handle_frame(self, session, body, slot)
     }
 }
 
@@ -1120,385 +1170,26 @@ impl Drop for ReplicaSyncDaemon {
     }
 }
 
-/// A running TCP server. Dropping the handle stops the accept loop.
-pub struct ServerHandle {
-    addr: SocketAddr,
-    stop: Arc<AtomicBool>,
-    draining: Arc<AtomicBool>,
-    active: Arc<AtomicUsize>,
-    join: Option<std::thread::JoinHandle<()>>,
-}
-
-impl ServerHandle {
-    /// The bound address (useful with port 0).
-    pub fn addr(&self) -> SocketAddr {
-        self.addr
-    }
-
-    /// Signal the accept loop to exit.
-    pub fn stop(&self) {
-        self.stop.store(true, Ordering::SeqCst);
-    }
-
-    /// Connections currently being served.
-    pub fn active_connections(&self) -> usize {
-        self.active.load(Ordering::SeqCst)
-    }
-
-    /// Graceful shutdown: stop accepting, ask every connection to close
-    /// at its next command boundary (in-flight requests finish and get
-    /// their reply; nothing is dropped mid-frame), and wait up to
-    /// `grace` for them. Returns whether every connection drained — a
-    /// `false` means some connection is stalled mid-request; its
-    /// handler thread keeps waiting for the rest of the request and is
-    /// only reclaimed by process exit. Callers flush pending edits
-    /// afterwards via [`CoreService::flush_all`].
-    pub fn drain(&self, grace: Duration) -> bool {
-        self.draining.store(true, Ordering::SeqCst);
-        self.stop();
-        let deadline = std::time::Instant::now() + grace;
-        while self.active.load(Ordering::SeqCst) > 0 {
-            if std::time::Instant::now() >= deadline {
-                return false;
-            }
-            std::thread::sleep(Duration::from_millis(10));
-        }
-        true
-    }
-
-    /// Block until the accept loop exits (`stop()` from another thread,
-    /// or process teardown).
-    pub fn join(mut self) {
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-impl Drop for ServerHandle {
-    fn drop(&mut self) {
-        self.stop();
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
-    }
-}
-
-/// Bind `addr` and serve `service` until the handle is stopped.
-/// The accept loop runs on a background thread; connections get a thread
-/// each, wrapped in `catch_unwind` containment.
+/// Bind `addr` and serve `service` with the default transport
+/// configuration (see [`NetConfig`]): a bounded worker pool, a hard
+/// connection cap, and slow-loris timeouts — the accept loop and
+/// workers run on background threads ([`crate::net::pool`]).
 pub fn serve(service: Arc<CoreService>, addr: &str) -> Result<ServerHandle> {
-    let listener = TcpListener::bind(addr).with_context(|| format!("binding {addr}"))?;
-    let local = listener.local_addr().context("reading bound address")?;
-    listener
-        .set_nonblocking(true)
-        .context("setting the listener non-blocking")?;
-    let stop = Arc::new(AtomicBool::new(false));
-    let draining = Arc::new(AtomicBool::new(false));
-    let active = Arc::new(AtomicUsize::new(0));
-    let stop2 = stop.clone();
-    let draining2 = draining.clone();
-    let active2 = active.clone();
-    let conn_counter = Arc::new(AtomicUsize::new(0));
-    let join = std::thread::Builder::new()
-        .name("pico-serve-accept".into())
-        .spawn(move || {
-            while !stop2.load(Ordering::SeqCst) {
-                match listener.accept() {
-                    Ok((stream, _peer)) => {
-                        let service = service.clone();
-                        let slot = conn_counter.fetch_add(1, Ordering::Relaxed);
-                        let draining = draining2.clone();
-                        let active = active2.clone();
-                        let _ = std::thread::Builder::new()
-                            .name(format!("pico-serve-conn-{slot}"))
-                            .spawn(move || {
-                                handle_connection(service, stream, slot, draining, active)
-                            });
-                    }
-                    Err(e) if e.kind() == ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
-                    Err(_) => {
-                        // transient accept error; keep serving
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
-                }
-            }
-        })
-        .context("spawning the accept thread")?;
-    Ok(ServerHandle {
-        addr: local,
-        stop,
-        draining,
-        active,
-        join: Some(join),
-    })
+    serve_with(service, addr, NetConfig::default())
 }
 
-/// Decrements the live-connection gauge however the handler exits.
-struct ActiveGuard(Arc<AtomicUsize>);
-
-impl ActiveGuard {
-    fn new(active: Arc<AtomicUsize>) -> Self {
-        active.fetch_add(1, Ordering::SeqCst);
-        Self(active)
-    }
-}
-
-impl Drop for ActiveGuard {
-    fn drop(&mut self) {
-        self.0.fetch_sub(1, Ordering::SeqCst);
-    }
-}
-
-fn handle_connection(
-    service: Arc<CoreService>,
-    stream: TcpStream,
-    slot: usize,
-    draining: Arc<AtomicBool>,
-    active: Arc<AtomicUsize>,
-) {
-    let _active = ActiveGuard::new(active);
-    // the listener is non-blocking (stoppable accept loop); make sure the
-    // per-connection socket blocks — inheritance is platform-dependent.
-    // The short read timeout is the drain poll: an *idle* connection
-    // notices `draining` at its next timeout; a mid-request read keeps
-    // retrying until the request is complete.
-    if stream.set_nonblocking(false).is_err() {
-        return;
-    }
-    if stream
-        .set_read_timeout(Some(Duration::from_millis(200)))
-        .is_err()
-    {
-        return;
-    }
-    let mut writer = match stream.try_clone() {
-        Ok(w) => w,
-        Err(_) => return,
-    };
-    let mut reader = BufReader::new(stream);
-    let mut session = Session::new(service.default_graph());
-    let stop = || draining.load(Ordering::SeqCst);
-    loop {
-        if session.binary {
-            let body = match read_frame_interruptible(&mut reader, MAX_FRAME_BYTES, &stop) {
-                Ok(ServerRead::Data(b)) => b,
-                Ok(ServerRead::Closed) => break, // clean close
-                Ok(ServerRead::Drained) => break, // idle at drain time
-                Err(e) if e.kind() == ErrorKind::InvalidData => {
-                    let _ = write_frame(
-                        &mut writer,
-                        format!("ERR frame exceeds {MAX_FRAME_BYTES} bytes").as_bytes(),
-                    );
-                    break;
-                }
-                Err(_) => break,
-            };
-            // containment: a panicking handler must not take the server down
-            let reply = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                service.handle_frame(&mut session, &body, slot)
-            }))
-            .unwrap_or_else(|_| b"ERR internal handler panic (contained)".to_vec());
-            let quit = reply.as_slice() == b"OK bye";
-            if write_frame(&mut writer, &reply).is_err() {
-                break;
-            }
-            if quit || stop() {
-                break;
-            }
-        } else {
-            let line = match read_line_capped(&mut reader, MAX_LINE_BYTES, &stop) {
-                Ok(Some(l)) => l,
-                Ok(None) => break, // EOF or idle at drain time
-                Err(e) if e.kind() == ErrorKind::InvalidData => {
-                    let _ = writeln!(writer, "ERR line exceeds {MAX_LINE_BYTES} bytes");
-                    break;
-                }
-                Err(_) => break,
-            };
-            if line.trim().is_empty() {
-                continue;
-            }
-            let reply = std::panic::catch_unwind(AssertUnwindSafe(|| {
-                service.handle_command(&mut session, &line, slot)
-            }))
-            .unwrap_or_else(|_| "ERR internal handler panic (contained)".into());
-            let quit = reply == "OK bye";
-            if writeln!(writer, "{reply}").and_then(|_| writer.flush()).is_err() {
-                break;
-            }
-            if quit || stop() {
-                break;
-            }
-        }
-    }
-}
-
-/// Write one length-prefixed frame — the binary protocol's only framing
-/// primitive, shared by the server, `pico query --binary`, and tests.
-/// Bodies above `u32::MAX` cannot be length-prefixed and error out
-/// instead of silently truncating the prefix.
-pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
-    let Ok(len) = u32::try_from(body.len()) else {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "frame body exceeds u32::MAX bytes",
-        ));
-    };
-    w.write_all(&len.to_le_bytes())?;
-    w.write_all(body)?;
-    w.flush()
-}
-
-/// Read one length-prefixed frame: `Ok(None)` at a clean EOF,
-/// `ErrorKind::InvalidData` when the declared length exceeds `max`
-/// (nothing past the header is consumed in that case).
-pub fn read_frame(reader: &mut impl Read, max: usize) -> std::io::Result<Option<Vec<u8>>> {
-    let mut header = [0u8; 4];
-    match reader.read_exact(&mut header) {
-        Ok(()) => {}
-        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
-        Err(e) => return Err(e),
-    }
-    let len = u32::from_le_bytes(header) as usize;
-    if len > max {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "frame too large",
-        ));
-    }
-    let mut body = vec![0u8; len];
-    reader.read_exact(&mut body)?;
-    Ok(Some(body))
-}
-
-/// Outcome of a server-side interruptible read.
-enum ServerRead<T> {
-    Data(T),
-    /// Peer closed the connection at a clean boundary.
-    Closed,
-    /// The drain flag was observed while idle at a boundary.
-    Drained,
-}
-
-/// Fill `buf` completely, retrying read timeouts. `stop` is only
-/// honoured while *nothing* of the item has been consumed — once bytes
-/// arrive, the read runs to completion so a drain never abandons a
-/// half-received request.
-fn fill_interruptible(
-    reader: &mut impl Read,
-    buf: &mut [u8],
-    stop: &dyn Fn() -> bool,
-) -> std::io::Result<ServerRead<()>> {
-    let mut filled = 0usize;
-    while filled < buf.len() {
-        match reader.read(&mut buf[filled..]) {
-            Ok(0) => {
-                return if filled == 0 {
-                    Ok(ServerRead::Closed)
-                } else {
-                    Err(std::io::Error::new(
-                        ErrorKind::UnexpectedEof,
-                        "connection closed mid-frame",
-                    ))
-                };
-            }
-            Ok(n) => filled += n,
-            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                if filled == 0 && stop() {
-                    return Ok(ServerRead::Drained);
-                }
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => {}
-            Err(e) => return Err(e),
-        }
-    }
-    Ok(ServerRead::Data(()))
-}
-
-/// [`read_frame`] for the server's timeout-polled sockets: idle
-/// connections surface `Drained` at a frame boundary, while a frame
-/// whose header has arrived is always read (and can be answered) in
-/// full.
-fn read_frame_interruptible(
-    reader: &mut impl Read,
-    max: usize,
-    stop: &dyn Fn() -> bool,
-) -> std::io::Result<ServerRead<Vec<u8>>> {
-    let mut header = [0u8; 4];
-    match fill_interruptible(reader, &mut header, stop)? {
-        ServerRead::Data(()) => {}
-        ServerRead::Closed => return Ok(ServerRead::Closed),
-        ServerRead::Drained => return Ok(ServerRead::Drained),
-    }
-    let len = u32::from_le_bytes(header) as usize;
-    if len > max {
-        return Err(std::io::Error::new(
-            std::io::ErrorKind::InvalidData,
-            "frame too large",
-        ));
-    }
-    let mut body = vec![0u8; len];
-    // mid-frame: never hand a half-read frame to the drain
-    match fill_interruptible(reader, &mut body, &|| false)? {
-        ServerRead::Data(()) => Ok(ServerRead::Data(body)),
-        _ => Ok(ServerRead::Closed),
-    }
-}
-
-/// `read_line` with a byte cap: returns `Ok(None)` at EOF (or when the
-/// drain flag is observed while idle between lines) and
-/// `ErrorKind::InvalidData` once a line exceeds `max` bytes. A line
-/// whose first bytes have arrived is read to completion.
-fn read_line_capped(
-    reader: &mut BufReader<TcpStream>,
-    max: usize,
-    stop: &dyn Fn() -> bool,
-) -> std::io::Result<Option<String>> {
-    let mut line: Vec<u8> = Vec::new();
-    loop {
-        let buf = match reader.fill_buf() {
-            Ok(b) => b,
-            Err(e) if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut) => {
-                if line.is_empty() && stop() {
-                    return Ok(None);
-                }
-                continue;
-            }
-            Err(e) if e.kind() == ErrorKind::Interrupted => continue,
-            Err(e) => return Err(e),
-        };
-        if buf.is_empty() {
-            // EOF: hand back any trailing unterminated line
-            return Ok(if line.is_empty() {
-                None
-            } else {
-                Some(String::from_utf8_lossy(&line).into_owned())
-            });
-        }
-        let newline = buf.iter().position(|&b| b == b'\n');
-        let upto = newline.unwrap_or(buf.len());
-        if line.len() + upto > max {
-            return Err(std::io::Error::new(
-                std::io::ErrorKind::InvalidData,
-                "protocol line too long",
-            ));
-        }
-        line.extend_from_slice(&buf[..upto]);
-        let consumed = if newline.is_some() { upto + 1 } else { upto };
-        reader.consume(consumed);
-        if newline.is_some() {
-            return Ok(Some(String::from_utf8_lossy(&line).into_owned()));
-        }
-    }
+/// [`serve`] with explicit transport knobs (`pico serve --workers /
+/// --max-conns`, auth token, timeouts).
+pub fn serve_with(service: Arc<CoreService>, addr: &str, cfg: NetConfig) -> Result<ServerHandle> {
+    crate::net::pool::serve_handler(service, addr, cfg)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::graph::examples;
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
 
     fn service_with_g1() -> (CoreService, Session) {
         let svc = CoreService::new(BatchConfig {
@@ -1626,7 +1317,8 @@ mod tests {
     #[test]
     fn snapshot_restore_frames_round_trip_in_process() {
         let (svc, mut s) = service_with_g1();
-        assert_eq!(svc.handle_command(&mut s, "BINARY", 0), "OK binary");
+        let upgrade = svc.handle_command(&mut s, "BINARY", 0);
+        assert!(upgrade.starts_with("OK binary proto="), "{upgrade}");
         assert!(s.binary);
         // SNAPSHOT: header line + payload bytes
         let frame = svc.handle_frame(&mut s, b"SNAPSHOT", 0);
@@ -1827,7 +1519,7 @@ mod tests {
         w.flush().unwrap();
         let mut line = String::new();
         r.read_line(&mut line).unwrap();
-        assert_eq!(line.trim_end(), "OK binary");
+        assert!(line.trim_end().starts_with("OK binary"), "{line}");
 
         let mut send_frame = |body: &[u8], r: &mut BufReader<TcpStream>| -> Vec<u8> {
             write_frame(&mut w, body).unwrap();

@@ -3,10 +3,13 @@
 //!
 //! The format follows `graph/io/binfmt`'s framing conventions (magic,
 //! little-endian scalars, length-prefixed name) and extends the CSR
-//! payload with the epoch and the coreness vector:
+//! payload with the epoch and the coreness vector. The magic is
+//! [`crate::net::codec::SNAPSHOT_MAGIC`] — defined there, like every
+//! other wire magic — and the decode path reads through the shared
+//! bounds-checked [`crate::net::codec::Cursor`]:
 //!
 //! ```text
-//! magic     b"PICOSNP1"                       8 bytes
+//! magic     SNAPSHOT_MAGIC                   8 bytes
 //! name      u32 length + UTF-8 bytes
 //! epoch     u64
 //! counts    u64 offsets_len, u64 adjacency_len, u64 core_len
@@ -23,11 +26,10 @@
 //! directly — no decomposition runs on the restore path.
 
 use crate::graph::csr::{CsrGraph, VertexId};
+use crate::net::codec::{Cursor, SNAPSHOT_MAGIC as MAGIC};
 use crate::service::index::CoreIndex;
 use anyhow::{bail, Context, Result};
 use std::path::Path;
-
-const MAGIC: &[u8; 8] = b"PICOSNP1";
 
 /// Longest index name accepted by the decoder (same cap as binfmt).
 const MAX_NAME_BYTES: usize = 4096;
@@ -87,41 +89,9 @@ pub fn encode_index(index: &CoreIndex) -> Vec<u8> {
     encode(index.name(), snap.epoch, &snap.core, &g)
 }
 
-struct Cursor<'a> {
-    bytes: &'a [u8],
-    pos: usize,
-}
-
-impl<'a> Cursor<'a> {
-    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
-        let Some(end) = self.pos.checked_add(n).filter(|&e| e <= self.bytes.len()) else {
-            bail!(
-                "truncated snapshot: needed {n} bytes at offset {}, have {}",
-                self.pos,
-                self.bytes.len() - self.pos
-            );
-        };
-        let s = &self.bytes[self.pos..end];
-        self.pos = end;
-        Ok(s)
-    }
-
-    fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
-    }
-
-    fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
-    }
-
-    fn remaining(&self) -> usize {
-        self.bytes.len() - self.pos
-    }
-}
-
 /// Parse and validate untrusted snapshot bytes.
 pub fn decode(bytes: &[u8]) -> Result<IndexSnapshot> {
-    let mut c = Cursor { bytes, pos: 0 };
+    let mut c = Cursor::new(bytes);
     if c.take(MAGIC.len())? != MAGIC {
         bail!("not a pico snapshot (bad magic)");
     }

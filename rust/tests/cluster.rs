@@ -639,3 +639,116 @@ fn multiprocess_cluster_equivalence_and_graceful_shutdown() {
     );
     drop(child_b);
 }
+
+#[test]
+fn auth_gated_shard_verbs_reject_then_accept() {
+    use pico::net::{ConnConfig, NetConfig};
+    use pico::service::serve_with;
+
+    let g = gen::erdos_renyi(50, 120, 17);
+    let plan = partition(&g, 1, PartitionStrategy::Hash);
+    let primary = Arc::new(LocalShard::from_plan("au", &plan.shards[0], cfg()));
+    let backends: Vec<Arc<dyn ShardBackend>> = vec![primary.clone() as Arc<dyn ShardBackend>];
+    refine(&backends, g.num_vertices(), None, 0, 1).unwrap();
+    let manifest = manifest_for(&primary, 1);
+
+    // a shard host serving with a configured token
+    let svc = Arc::new(CoreService::new(cfg()));
+    let net = NetConfig {
+        conn: ConnConfig {
+            auth_token: Some("s3cret".into()),
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let handle = serve_with(svc, "127.0.0.1:0", net).expect("bind");
+    let addr = handle.addr().to_string();
+
+    // no AUTH preamble: the gated install is rejected before dispatch
+    let unauthed = RemoteShard::new(0, addr.clone(), "au/shard0");
+    let err = unauthed.host(&manifest).unwrap_err();
+    assert!(
+        format!("{err:#}").contains("auth required for SHARDHOST"),
+        "{err:#}"
+    );
+
+    // wrong token: the preamble itself is refused (constant-time compare)
+    let wrong = RemoteShard::new(0, addr.clone(), "au/shard0").with_auth(Some("nope".into()));
+    let err = wrong.ping().unwrap_err();
+    assert!(format!("{err:#}").contains("auth token"), "{err:#}");
+
+    // right token: install, probe, and re-fetch all work
+    let authed =
+        Arc::new(RemoteShard::new(0, addr.clone(), "au/shard0").with_auth(Some("s3cret".into())));
+    authed.host(&manifest).unwrap();
+    assert_eq!(authed.status().unwrap().cluster_epoch, 0);
+    assert_eq!(authed.fetch_manifest().unwrap(), manifest);
+
+    // with the graph hosted, a token-less session can pin it (USE) but
+    // still may not touch the gated verbs…
+    let err = unauthed.fetch_manifest().unwrap_err();
+    assert!(
+        format!("{err:#}").contains("auth required for SHARDSNAP"),
+        "{err:#}"
+    );
+    // …while ungated probes (SHARDINFO) never needed the token
+    assert_eq!(unauthed.status().unwrap().cluster_epoch, 0);
+    handle.stop();
+}
+
+#[test]
+fn cluster_coordinator_redirects_shard_probes_one_hop() {
+    use pico::net::client::{follow_redirect, parse_redirect, Client};
+    use pico::service::serve;
+
+    let g = gen::barabasi_albert(90, 3, 23);
+    let (_shard_svc, _shard_handle, shard_addr) = spawn_server();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = rd\nshards = 2\n\
+         [shard.0]\nprimary = local\n\
+         [shard.1]\nprimary = {shard_addr}\n"
+    ))
+    .unwrap();
+    let cl = Arc::new(ClusterIndex::build(&g, &topo, cfg()).unwrap());
+    let oracle = bz_coreness(&g);
+
+    // front the cluster with a serve process, as `pico serve --cluster`
+    let front = Arc::new(CoreService::new(cfg()));
+    front.open_cluster("rd", cl.clone());
+    let front_handle = serve(front, "127.0.0.1:0").expect("bind");
+    let mut probe = Client::connect(&front_handle.addr().to_string()).unwrap();
+
+    let mut redirected = 0usize;
+    let mut inline = 0usize;
+    for v in 0..g.num_vertices() as u32 {
+        let reply = probe.send_line(&format!("SHARDCORE {v}")).unwrap();
+        let line = match parse_redirect(&reply) {
+            Some(rd) => {
+                // the hint names the remote shard host and its graph
+                assert_eq!(rd.addr, shard_addr, "v{v}: {reply}");
+                assert_eq!(rd.graph, "rd/shard1", "v{v}: {reply}");
+                redirected += 1;
+                follow_redirect(&rd, &format!("SHARDCORE {v}"), None).unwrap()
+            }
+            None => {
+                inline += 1;
+                reply
+            }
+        };
+        // redirected or inline, the answer is the exact coreness
+        assert_eq!(
+            line,
+            format!("OK core={} cluster=0", oracle[v as usize]),
+            "v{v}"
+        );
+    }
+    assert!(redirected > 0, "shard 1 probes must redirect");
+    assert!(inline > 0, "shard 0 probes answer in the coordinator");
+
+    // out-of-range vertices stay structured errors
+    let reply = probe
+        .send_line(&format!("SHARDCORE {}", g.num_vertices()))
+        .unwrap();
+    assert!(reply.starts_with("ERR vertex"), "{reply}");
+    front_handle.stop();
+}

@@ -5,13 +5,16 @@
 //! slot — after every attack the service still answers `PING` and hosts
 //! exactly the graphs it hosted before.
 
+use pico::net::codec;
+use pico::net::{ConnConfig, NetConfig};
 use pico::service::server::{read_frame, write_frame, MAX_FRAME_BYTES, MAX_LINE_BYTES};
-use pico::service::{serve, BatchConfig, CoreService, ServerHandle};
+use pico::service::{serve, serve_with, BatchConfig, CoreService, ServerHandle};
 use pico::shard::encode_index;
 use pico::util::rng::Rng;
 use std::io::{BufRead, BufReader, Write};
 use std::net::TcpStream;
 use std::sync::Arc;
+use std::time::Duration;
 
 fn spawn_server() -> (Arc<CoreService>, ServerHandle) {
     let svc = Arc::new(CoreService::new(BatchConfig {
@@ -20,6 +23,31 @@ fn spawn_server() -> (Arc<CoreService>, ServerHandle) {
     }));
     svc.open("g1", &pico::graph::examples::g1());
     let handle = serve(svc.clone(), "127.0.0.1:0").expect("bind");
+    (svc, handle)
+}
+
+/// A server with a tiny bounded pool — the worker/cap/timeout paths
+/// under test, on top of the same service.
+fn spawn_bounded(
+    workers: usize,
+    max_conns: usize,
+    stall_ms: u64,
+) -> (Arc<CoreService>, ServerHandle) {
+    let svc = Arc::new(CoreService::new(BatchConfig {
+        threads: 1,
+        ..BatchConfig::default()
+    }));
+    svc.open("g1", &pico::graph::examples::g1());
+    let cfg = NetConfig {
+        workers,
+        max_connections: max_conns,
+        conn: ConnConfig {
+            poll_timeout: Duration::from_millis(20),
+            stall_timeout: Duration::from_millis(stall_ms),
+            ..Default::default()
+        },
+    };
+    let handle = serve_with(svc.clone(), "127.0.0.1:0", cfg).expect("bind");
     (svc, handle)
 }
 
@@ -53,7 +81,8 @@ impl Client {
     }
 
     fn upgrade_binary(&mut self) {
-        assert_eq!(self.send_line("BINARY").as_deref(), Some("OK binary"));
+        let reply = self.send_line("BINARY").expect("upgrade reply");
+        assert!(reply.starts_with("OK binary proto="), "{reply}");
     }
 
     fn send_frame(&mut self, body: &[u8]) -> Option<Vec<u8>> {
@@ -260,6 +289,211 @@ fn random_byte_corpus_never_kills_the_server() {
         }
         assert_healthy(&handle, "OK n=1 g1");
     }
+    handle.stop();
+}
+
+// ---- codec-direct adversarial corpus -------------------------------
+// The frame codec and the payload magics live in `net::codec`; drive
+// them without a socket so a framing regression fails here before any
+// network test touches it.
+
+#[test]
+fn codec_rejects_oversized_and_truncated_frames_directly() {
+    // declared length above the cap: InvalidData, nothing consumed past
+    // the header
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&((MAX_FRAME_BYTES + 1) as u32).to_le_bytes());
+    buf.extend_from_slice(b"should never be read");
+    let mut r = std::io::Cursor::new(buf);
+    let err = codec::read_frame(&mut r, MAX_FRAME_BYTES).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+    assert_eq!(r.position(), 4, "only the header may be consumed");
+
+    // body shorter than declared: UnexpectedEof at every truncation
+    let mut good = Vec::new();
+    codec::write_frame(&mut good, b"0123456789").unwrap();
+    for cut in 4..good.len() {
+        let mut r = std::io::Cursor::new(good[..cut].to_vec());
+        let err = codec::read_frame(&mut r, MAX_FRAME_BYTES).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::UnexpectedEof, "cut at {cut}");
+    }
+    // a cut inside the header is a clean EOF only at exactly zero bytes
+    let mut r = std::io::Cursor::new(Vec::<u8>::new());
+    assert!(codec::read_frame(&mut r, MAX_FRAME_BYTES).unwrap().is_none());
+}
+
+#[test]
+fn codec_cursor_rejects_truncated_magic_and_hostile_counts() {
+    // every payload decoder starts by taking its 8-byte magic off the
+    // shared cursor; a short buffer must error, never panic
+    for cut in 0..8 {
+        let mut c = codec::Cursor::new(&codec::SNAPSHOT_MAGIC[..cut]);
+        assert!(c.take(8).is_err(), "cut at {cut}");
+    }
+    let mut c = codec::Cursor::new(codec::MANIFEST_MAGIC);
+    assert_eq!(c.take(8).unwrap(), codec::MANIFEST_MAGIC);
+    c.done("manifest magic").unwrap();
+    // wrong magic still reads — rejection is the decoder's job — but a
+    // count pointing past the payload must fail before any allocation
+    let mut evil = codec::DELTA_MAGIC.to_vec();
+    evil.extend_from_slice(&u64::MAX.to_le_bytes());
+    let mut c = codec::Cursor::new(&evil);
+    c.take(8).unwrap();
+    assert!(c.count(8, "steps").is_err());
+}
+
+#[test]
+fn mid_upgrade_garbage_is_contained() {
+    let (_svc, handle) = spawn_server();
+    // upgrade, then stream bytes that parse as a frame whose body is
+    // garbage — the server must answer a structured ERR per frame and
+    // stay healthy
+    let mut c = Client::connect(&handle);
+    c.upgrade_binary();
+    let blob: Vec<u8> = (0..64u8).map(|b| b.wrapping_mul(37) ^ 0xA5).collect();
+    let reply = c.send_frame(&blob).expect("structured reply to garbage");
+    assert!(reply.starts_with(b"ERR"), "{reply:?}");
+    // a declared length with a half-shipped body, then hangup
+    let mut c = Client::connect(&handle);
+    c.upgrade_binary();
+    c.w.write_all(&64u32.to_le_bytes()).unwrap();
+    c.w.write_all(b"half").unwrap();
+    c.w.flush().unwrap();
+    let _ = c.w.shutdown(std::net::Shutdown::Write);
+    assert!(c.read_frame().is_none(), "mid-frame hangup closes cleanly");
+    assert_healthy(&handle, "OK n=1 g1");
+    handle.stop();
+}
+
+// ---- bounded-pool behaviour ----------------------------------------
+
+#[test]
+fn pool_stays_responsive_with_all_workers_busy() {
+    // 2 workers; pin both behind *slow* requests (bytes trickling in
+    // with no newline) and prove a third connection is still served —
+    // i.e. a slow sender yields its worker instead of pinning it
+    let (_svc, handle) = spawn_bounded(2, 16, 60_000);
+    let mut slow = Vec::new();
+    for _ in 0..2 {
+        let mut c = Client::connect(&handle);
+        c.w.write_all(b"CORENESS").unwrap(); // a started, unfinished line
+        c.w.flush().unwrap();
+        slow.push(c);
+    }
+    // give the pool a beat to pick both up
+    std::thread::sleep(Duration::from_millis(100));
+    let mut live = Client::connect(&handle);
+    for _ in 0..5 {
+        assert_eq!(live.send_line("PING").as_deref(), Some("OK pong"));
+    }
+    // the slow requests complete once their bytes arrive
+    for c in &mut slow {
+        c.w.write_all(b" 3\n").unwrap();
+        c.w.flush().unwrap();
+    }
+    for c in &mut slow {
+        assert_eq!(c.read_line().as_deref(), Some("OK core=2 epoch=0"));
+    }
+    let _ = live.send_line("QUIT");
+    handle.stop();
+}
+
+#[test]
+fn pool_rejects_connection_over_the_cap_with_a_clean_error_line() {
+    let cap = 4;
+    let (_svc, handle) = spawn_bounded(2, cap, 60_000);
+    let mut held = Vec::new();
+    for i in 0..cap {
+        let mut c = Client::connect(&handle);
+        assert_eq!(c.send_line("PING").as_deref(), Some("OK pong"), "conn {i}");
+        held.push(c);
+    }
+    // connection #cap+1: one structured error line, then close
+    let mut over = Client::connect(&handle);
+    let reply = over.read_line().expect("rejection line");
+    assert!(
+        reply.starts_with("ERR server at connection capacity"),
+        "{reply}"
+    );
+    assert!(over.read_line().is_none(), "rejected connection must close");
+    // held connections keep working, and the rejection is counted
+    let metrics = held[0].send_line("METRICS").expect("metrics");
+    assert!(metrics.starts_with("OK workers=2 "), "{metrics}");
+    assert!(metrics.contains(&format!("conn_cap={cap}")), "{metrics}");
+    assert!(metrics.contains("rejected=1"), "{metrics}");
+    assert!(metrics.contains(&format!("active={cap}")), "{metrics}");
+    // freeing a slot lets a new connection in
+    let _ = held.pop().unwrap().send_line("QUIT");
+    std::thread::sleep(Duration::from_millis(100));
+    let mut fresh = Client::connect(&handle);
+    assert_eq!(fresh.send_line("PING").as_deref(), Some("OK pong"));
+    handle.stop();
+}
+
+#[test]
+fn slow_loris_requests_are_timed_out_and_counted() {
+    // stall budget of 150ms: a started-but-never-finished request gets
+    // a structured timeout error and the connection is closed
+    let (_svc, handle) = spawn_bounded(2, 8, 150);
+    let mut c = Client::connect(&handle);
+    c.w.write_all(b"CORENESS").unwrap(); // no newline, ever
+    c.w.flush().unwrap();
+    let reply = c.read_line().expect("timeout error line");
+    assert!(reply.starts_with("ERR read timed out mid-request"), "{reply}");
+    assert!(c.read_line().is_none(), "timed-out connection must close");
+    let mut probe = Client::connect(&handle);
+    let metrics = probe.send_line("METRICS").expect("metrics");
+    assert!(metrics.contains("timed_out=1"), "{metrics}");
+    assert_healthy(&handle, "OK n=1 g1");
+    handle.stop();
+}
+
+#[test]
+fn idle_connections_are_reclaimed_only_at_the_cap() {
+    let svc = Arc::new(CoreService::new(BatchConfig {
+        threads: 1,
+        ..BatchConfig::default()
+    }));
+    svc.open("g1", &pico::graph::examples::g1());
+    let cfg = NetConfig {
+        workers: 2,
+        max_connections: 2,
+        conn: ConnConfig {
+            poll_timeout: Duration::from_millis(20),
+            idle_reclaim: Duration::from_millis(150),
+            ..Default::default()
+        },
+    };
+    let handle = serve_with(svc, "127.0.0.1:0", cfg).expect("bind");
+    // two idle holders fill the cap…
+    let mut holders = [Client::connect(&handle), Client::connect(&handle)];
+    for h in &mut holders {
+        assert_eq!(h.send_line("PING").as_deref(), Some("OK pong"));
+    }
+    // …so the next accept is rejected with the capacity line…
+    let mut over = Client::connect(&handle);
+    let reply = over.read_line().expect("rejection line");
+    assert!(reply.starts_with("ERR server at connection capacity"), "{reply}");
+    // …but once a holder sits idle past the reclaim budget, its slot
+    // comes back and a fresh client gets served
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let mut fresh = None;
+    while std::time::Instant::now() < deadline {
+        let mut c = Client::connect(&handle);
+        if c.send_line("PING").as_deref() == Some("OK pong") {
+            fresh = Some(c);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    let mut fresh = fresh.expect("an idle slot must be reclaimed at the cap");
+    let metrics = fresh.send_line("METRICS").expect("metrics");
+    let reclaimed: u64 = metrics
+        .rsplit("reclaimed=")
+        .next()
+        .and_then(|v| v.trim().parse().ok())
+        .unwrap_or_else(|| panic!("no reclaimed= in {metrics}"));
+    assert!(reclaimed >= 1, "{metrics}");
     handle.stop();
 }
 
