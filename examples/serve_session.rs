@@ -34,6 +34,12 @@
 //!   `timed_out` = slow-loris requests cut off mid-read, `reclaimed` =
 //!   idle connections closed to free slots while the pool sat at its
 //!   cap).
+//! * `METRICS PROM` / `METRICS JSON`, `TRACES [n]` — the [`pico::obs`]
+//!   registry: per-graph serve counters, query-latency and per-stage
+//!   flush histograms, and the recent-flush trace ring (span trees with
+//!   `remote=` attribution for cross-host stages). Section 9 below
+//!   walks through them; `pico cluster status --metrics` scrapes and
+//!   merges the PROM exposition across every host in a topology.
 //!
 //! The same flow over two shells:
 //!
@@ -101,6 +107,24 @@ fn send(w: &mut TcpStream, r: &mut BufReader<TcpStream>, cmd: &str) -> String {
     let reply = line.trim_end().to_string();
     println!("  > {cmd:<18} < {reply}");
     reply
+}
+
+/// A verb whose reply is `OK ... lines=<n>` followed by `n` body lines
+/// (`METRICS PROM|JSON`, `TRACES`).
+fn send_lines(w: &mut TcpStream, r: &mut BufReader<TcpStream>, cmd: &str) -> Vec<String> {
+    let head = send(w, r, cmd);
+    let n: usize = head
+        .split_whitespace()
+        .find_map(|t| t.strip_prefix("lines="))
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0);
+    let mut body = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut line = String::new();
+        r.read_line(&mut line).unwrap();
+        body.push(line.trim_end().to_string());
+    }
+    body
 }
 
 /// One length-prefixed frame out, one back (the server's own framing
@@ -296,6 +320,35 @@ fn main() -> anyhow::Result<()> {
             gs.sync.lag_epochs
         );
     }
+
+    // 9. Observability: everything above also landed in the
+    //    process-global `obs` registry — per-graph serve counters and
+    //    query-latency histograms, per-stage flush timings (queue,
+    //    route, apply, refine, commit, publish), replica-sync traffic,
+    //    and a bounded ring of flush traces. `METRICS PROM` is the
+    //    scrapeable Prometheus exposition, `METRICS JSON` the same
+    //    snapshot for tooling, and `TRACES n` replays the most recent
+    //    span trees: the cluster flushes above left *stitched* traces
+    //    whose remote spans carry the shard host's address and
+    //    server-side apply time, so coordinator-vs-network cost is
+    //    readable per stage.
+    let os = TcpStream::connect(handle.addr())?;
+    let mut ow = os.try_clone()?;
+    let mut oreader = BufReader::new(os);
+    println!("\nobservability session:");
+    let prom = send_lines(&mut ow, &mut oreader, "METRICS PROM");
+    for line in prom.iter().filter(|l| {
+        l.starts_with("pico_flush_total_seconds_count")
+            || l.starts_with("pico_serve_queries_total")
+            || l.starts_with("pico_sync_deltas_total")
+    }) {
+        println!("      {line}");
+    }
+    println!("      ... ({} exposition lines in all)", prom.len());
+    for line in send_lines(&mut ow, &mut oreader, "TRACES 1") {
+        println!("      {line}");
+    }
+    send(&mut ow, &mut oreader, "QUIT");
 
     handle.stop();
     println!("\ndone — see rust/src/service/server.rs for the full protocol");

@@ -128,11 +128,24 @@ fn bench_concurrent_serving(g: &CsrGraph) -> Vec<(&'static str, f64)> {
     let (snap, graph) = idx.consistent_view();
     assert_eq!(snap.core, bz_coreness(&graph), "served state diverged from oracle");
     println!("  oracle check: ok\n");
-    vec![
+    let mut json = vec![
         ("reads_per_sec", q as f64 / wall_s),
         ("flush_p50_ms", flushes.percentile_ms(50.0)),
         ("flush_p99_ms", flushes.percentile_ms(99.0)),
-    ]
+    ];
+    // the obs registry's per-stage flush histograms for this graph — CI's
+    // bench smoke asserts these keys land in BENCH_serve_throughput.json
+    let reg = pico::obs::global();
+    let labels: &[(&str, &str)] = &[("graph", "bench")];
+    for (key, name) in [
+        ("flush_stage_queue_p99_us", pico::obs::names::FLUSH_QUEUE_SECONDS),
+        ("flush_stage_apply_p99_us", pico::obs::names::FLUSH_APPLY_SECONDS),
+        ("flush_stage_total_p99_us", pico::obs::names::FLUSH_TOTAL_SECONDS),
+    ] {
+        let h = reg.histogram(name, labels).snapshot();
+        json.push((key, h.quantile(0.99) as f64));
+    }
+    json
 }
 
 /// Part 2 — the crossover: per-batch-size cost of incremental
@@ -331,7 +344,47 @@ fn bench_connection_churn(g: &CsrGraph) -> Vec<(&'static str, f64)> {
     json
 }
 
-/// Part 4 — one full-recompute decomposition on the serving graph, for
+/// Part 4 — registry hot-path overhead: ns per counter bump and per
+/// histogram record, and the share of the sustained served query rate
+/// that cost amounts to (the acceptance bar is ≤ 2%).
+fn bench_registry_overhead(served_qps: f64) -> Vec<(&'static str, f64)> {
+    use pico::obs::names;
+
+    let iters: u64 = if quick_bench() { 200_000 } else { 2_000_000 };
+    let reg = pico::obs::global();
+    let labels: &[(&str, &str)] = &[("graph", "bench")];
+    let counter = reg.counter(names::SERVE_QUERIES, labels);
+    let t = Timer::start();
+    for _ in 0..iters {
+        counter.inc();
+    }
+    let counter_ns = t.elapsed().as_nanos() as f64 / iters as f64;
+    let hist = reg.histogram(names::QUERY_SECONDS, labels);
+    let t = Timer::start();
+    for i in 0..iters {
+        hist.record(i & 0xFFF);
+    }
+    let hist_ns = t.elapsed().as_nanos() as f64 / iters as f64;
+    // one served query records one counter bump and one latency sample
+    let per_query_ns = counter_ns + hist_ns;
+    let overhead_pct = if served_qps > 0.0 {
+        served_qps * per_query_ns / 1e9 * 100.0
+    } else {
+        0.0
+    };
+    println!(
+        "registry overhead: counter {counter_ns:.1} ns, histogram record {hist_ns:.1} ns \
+         -> {overhead_pct:.3}% of the sustained {} qps",
+        fmt::si(served_qps as u64)
+    );
+    vec![
+        ("obs_counter_ns", counter_ns),
+        ("obs_hist_record_ns", hist_ns),
+        ("obs_overhead_pct", overhead_pct),
+    ]
+}
+
+/// Part 5 — one full-recompute decomposition on the serving graph, for
 /// scale: what a cold index build / worst-case fallback costs.
 fn bench_cold_build(g: &CsrGraph) -> f64 {
     let t = Timer::start();
@@ -358,6 +411,13 @@ fn main() {
     );
     let mut json = bench_concurrent_serving(&g);
     json.extend(bench_connection_churn(&g));
+    let served_qps = json
+        .iter()
+        .rev()
+        .find(|(k, _)| k.starts_with("churn_qps"))
+        .map(|&(_, v)| v)
+        .unwrap_or(0.0);
+    json.extend(bench_registry_overhead(served_qps));
     let crossover = bench_crossover(&g);
     let cold_ms = bench_cold_build(&g);
     json.push(("crossover_fraction", crossover.unwrap_or(f64::NAN)));

@@ -404,7 +404,9 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
 }
 
 /// `pico cluster <subcommand>` — topology tooling. `status` probes every
-/// endpoint of a `--cluster` config over the protocol.
+/// endpoint of a `--cluster` config over the protocol; with `--metrics`
+/// it scrapes `METRICS PROM` from every host instead and prints one
+/// merged cluster-wide exposition.
 pub fn cmd_cluster(args: &Args, _cfg: &Config) -> Result<()> {
     match args.subcommand.as_str() {
         "status" => cluster_status(args),
@@ -421,6 +423,9 @@ fn cluster_status(args: &Args) -> Result<()> {
         .get("cluster")
         .ok_or_else(|| anyhow::anyhow!("--cluster <cfg> is required"))?;
     let topo = ClusterConfig::load(path)?;
+    if args.has("metrics") {
+        return cluster_metrics(args, &topo);
+    }
     println!(
         "cluster '{}' — dataset {}, {} shards [{}], journal {} epoch(s)",
         topo.name,
@@ -530,6 +535,69 @@ fn cluster_status(args: &Args) -> Result<()> {
         bail!("{down} endpoint(s) down");
     }
     Ok(())
+}
+
+/// `pico cluster status --metrics`: scrape `METRICS PROM` from the
+/// coordinator (`--addr`) and every remote endpoint of the topology,
+/// then print one merged exposition — counters and histogram cells
+/// sum across hosts, gauges take the max (see [`crate::obs::expo`]).
+fn cluster_metrics(args: &Args, topo: &crate::cluster::ClusterConfig) -> Result<()> {
+    use crate::cluster::Endpoint;
+    use crate::obs::merge_prom;
+
+    let auth = crate::net::env_auth_token().or_else(|| topo.effective_auth_token());
+    let mut endpoints: Vec<String> = Vec::new();
+    if let Some(addr) = args.get("addr") {
+        endpoints.push(addr.to_string());
+    }
+    for spec in &topo.shards {
+        if let Endpoint::Remote(addr) = &spec.primary {
+            endpoints.push(addr.clone());
+        }
+        endpoints.extend(spec.replicas.iter().cloned());
+    }
+    // several shards may share a host — scrape each address once
+    let mut seen = std::collections::BTreeSet::new();
+    endpoints.retain(|a| seen.insert(a.clone()));
+    if endpoints.is_empty() {
+        bail!("nothing to scrape: all-local topology and no --addr for the coordinator");
+    }
+    let mut texts = Vec::new();
+    let mut down = 0usize;
+    for addr in &endpoints {
+        match scrape_prom(addr, auth.as_deref()) {
+            Ok(text) => {
+                println!("# scraped {addr}");
+                texts.push(text);
+            }
+            Err(e) => {
+                down += 1;
+                eprintln!("WARNING: scraping {addr}: {e:#}");
+            }
+        }
+    }
+    if texts.is_empty() {
+        bail!("no endpoint could be scraped ({down} down)");
+    }
+    print!("{}", merge_prom(&texts));
+    if down > 0 {
+        bail!("{down} endpoint(s) down");
+    }
+    Ok(())
+}
+
+/// One `METRICS PROM` scrape over the line protocol.
+fn scrape_prom(addr: &str, auth: Option<&str>) -> Result<String> {
+    use crate::net::client::Client;
+
+    let mut client = Client::connect(addr)?;
+    if let Some(token) = auth {
+        client.auth(token)?;
+    }
+    // send_multiline raises ERR heads, so a rejection surfaces here
+    let (_head, lines) = client.send_multiline("METRICS PROM")?;
+    client.quit();
+    Ok(lines.join("\n"))
 }
 
 /// The coordinator's published cluster epoch — the authoritative lag

@@ -78,12 +78,17 @@ CLUSTER OPTIONS (pico cluster status):
                          Without it the head is inferred from probed
                          primaries (replicas alone only lower-bound it,
                          e.g. with an all-local-primary topology)
+    --metrics            Scrape METRICS PROM from the coordinator
+                         (--addr) and every remote endpoint, and print
+                         one merged exposition: counters and histogram
+                         cells sum across hosts, gauges take the max
 
 QUERY OPTIONS:
     --addr HOST:PORT     Server address (default 127.0.0.1:7571)
     --cmd 'A; B; C'      Protocol commands, `;`-separated (see service::server
                          docs: CORENESS, MEMBERS, HISTO, DENSEST, INSERT,
-                         DELETE, FLUSH, EPOCH, STATS, METRICS, OPEN, USE,
+                         DELETE, FLUSH, EPOCH, STATS, METRICS [PROM|JSON],
+                         TRACES [n], OPEN, USE,
                          GRAPHS, SHARDS). A coordinator's REDIRECT reply
                          to a shard-local probe (e.g. SHARDCORE) is
                          followed one hop to the owning shard host;
@@ -101,6 +106,7 @@ EXAMPLES:
     pico serve --dataset social-ba --addr 127.0.0.1:7571 --shards 4
     pico serve --cluster cluster.toml
     pico cluster status --cluster cluster.toml
+    pico cluster status --cluster cluster.toml --addr 127.0.0.1:7571 --metrics
     pico query --cmd 'INSERT 3 9; FLUSH; CORENESS 3; DENSEST; SHARDS'
     pico query --binary --cmd 'SNAPSHOT' --snapshot-file /tmp/social.snap
     pico query --binary --cmd 'RESTORE replica' --snapshot-file /tmp/social.snap

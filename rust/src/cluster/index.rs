@@ -49,17 +49,18 @@ use super::remote::RemoteShard;
 use super::wire;
 use crate::core::maintenance::EdgeEdit;
 use crate::graph::{CsrGraph, GraphBuilder, VertexId};
+use crate::obs::{self, names, FlushStages, FlushTrace, Span};
 use crate::service::batch::{coalesce, BatchConfig};
 use crate::service::index::CoreSnapshot;
 use crate::shard::backend::{LocalShard, ShardBackend, ShardStatus};
 use crate::shard::partition::partition;
-use crate::shard::router::{refine, route, MergeStats};
+use crate::shard::router::{refine, refine_traced, route, MergeStats};
 use crate::shard::ShardedOutcome;
 use crate::util::timer::Timer;
 use anyhow::{bail, Context, Result};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// A shard's primary placement.
 pub enum Primary {
@@ -315,6 +316,9 @@ pub struct ClusterIndex {
     epoch: AtomicU64,
     graph_cache: Mutex<Option<(u64, Arc<CsrGraph>)>>,
     pending: Mutex<Vec<EdgeEdit>>,
+    /// When the oldest pending edit arrived — the flush's queue-wait
+    /// stage. Lock order: always `pending` first.
+    queued_since: Mutex<Option<Instant>>,
     flush_lock: Mutex<()>,
     /// Per-shard epoch journals (delta replica catch-up; bounded by the
     /// topology's `cluster.journal` retention).
@@ -395,6 +399,7 @@ impl ClusterIndex {
             epoch: AtomicU64::new(0),
             graph_cache: Mutex::new(None),
             pending: Mutex::new(Vec::new()),
+            queued_since: Mutex::new(None),
             flush_lock: Mutex::new(()),
             journals,
         };
@@ -446,6 +451,9 @@ impl ClusterIndex {
     /// Enqueue one edit; returns the pending count after the push.
     pub fn submit(&self, e: EdgeEdit) -> usize {
         let mut p = self.pending.lock().unwrap();
+        if p.is_empty() {
+            *self.queued_since.lock().unwrap() = Some(Instant::now());
+        }
         p.push(e);
         p.len()
     }
@@ -462,7 +470,12 @@ impl ClusterIndex {
     /// slow or dead replica.
     pub fn flush(&self) -> Result<ShardedOutcome> {
         let _in_flight = self.flush_lock.lock().unwrap();
-        let edits: Vec<EdgeEdit> = std::mem::take(&mut *self.pending.lock().unwrap());
+        let (edits, queued_at) = {
+            let mut p = self.pending.lock().unwrap();
+            let edits = std::mem::take(&mut *p);
+            let queued_at = self.queued_since.lock().unwrap().take();
+            (edits, queued_at)
+        };
         if edits.is_empty() {
             return Ok(ShardedOutcome {
                 snapshot: self.snapshot(),
@@ -476,7 +489,7 @@ impl ClusterIndex {
                 elapsed: Duration::ZERO,
             });
         }
-        let out = self.flush_inner(edits);
+        let out = self.flush_inner(edits, queued_at);
         if out.is_err() {
             // A flush that died midway may leave primaries holding edits
             // no recorded chain (and no published epoch) reproduces.
@@ -492,11 +505,37 @@ impl ClusterIndex {
                     gr.force_full_ship.store(true, Ordering::SeqCst);
                 }
             }
+            // disarm any trace scopes the failed flush left armed, so
+            // later reads through the same primaries go untagged
+            for gr in &self.groups {
+                if let Primary::Remote(r) = &gr.primary {
+                    r.trace_scope().end();
+                }
+            }
         }
         out
     }
 
-    fn flush_inner(&self, edits: Vec<EdgeEdit>) -> Result<ShardedOutcome> {
+    fn flush_inner(
+        &self,
+        edits: Vec<EdgeEdit>,
+        queued_at: Option<Instant>,
+    ) -> Result<ShardedOutcome> {
+        let ft = FlushTrace::new(obs::next_trace_id());
+        let queue_wait = queued_at.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+        if let Some(t) = queued_at {
+            // started before the trace: the offset saturates to 0, which
+            // is exactly where the queue-wait stage belongs
+            ft.stage("queue", t, queue_wait);
+        }
+        // arm the remote primaries' trace mailboxes: their shard verbs
+        // now carry this flush's trace id, and the hosts' measured
+        // handler times come back as remote child spans
+        for gr in &self.groups {
+            if let Primary::Remote(r) = &gr.primary {
+                r.trace_scope().begin(ft.id(), ft.t0());
+            }
+        }
         let timer = Timer::start();
         let batch = coalesce(&edits);
         let applied = batch.len();
@@ -505,34 +544,61 @@ impl ClusterIndex {
         // the (possibly grown) map and stay correct — epoch-checked
         // replica reads serve the old committed epoch, and not-yet-
         // refined vertices read as absent until the publish.
+        let route_start = Instant::now();
         let (n, plan) = {
             let mut owner = self.owner.lock().unwrap();
             let plan = route(&mut owner, self.groups.len(), &batch);
             (owner.len(), plan)
         };
+        let route_elapsed = route_start.elapsed();
+        ft.stage("route", route_start, route_elapsed);
+        let apply_start = Instant::now();
         let mut changed = 0usize;
         let mut recomputed_shards = 0usize;
         for (s, gr) in self.groups.iter().enumerate() {
             if !plan.touched[s] {
                 continue;
             }
+            let shard_start = Instant::now();
             let out = gr
                 .backend
                 .apply(&plan.per_shard[s])
                 .with_context(|| format!("routed batch on shard {s} ({})", gr.primary.addr()))?;
+            // coordinator-side wall time; a remote primary additionally
+            // reports its own host-side span through the trace scope
+            ft.child(
+                "apply",
+                Span {
+                    name: format!("apply shard={s}"),
+                    start_us: shard_start.saturating_duration_since(ft.t0()).as_micros() as u64,
+                    dur_us: shard_start.elapsed().as_micros() as u64,
+                    remote: None,
+                    children: Vec::new(),
+                },
+            );
             changed += out.changed;
             if out.recomputed {
                 recomputed_shards += 1;
             }
         }
+        let apply_elapsed = apply_start.elapsed();
+        ft.stage("apply", apply_start, apply_elapsed);
         let epoch = self.epoch.load(Ordering::SeqCst) + 1;
         let merge_timer = Timer::start();
         let backends: Vec<Arc<dyn ShardBackend>> =
             self.groups.iter().map(|gr| gr.backend.clone()).collect();
-        let mut refined = refine(&backends, n, Some(plan.inserts), epoch, self.cfg.threads)
-            .context("cluster refinement")?;
+        let mut refined = refine_traced(
+            &backends,
+            n,
+            Some(plan.inserts),
+            epoch,
+            self.cfg.threads,
+            Some(&ft),
+        )
+        .context("cluster refinement")?;
         let merge_elapsed = merge_timer.elapsed();
         let merge = refined.stats;
+        let (refine_elapsed, commit_elapsed) = (refined.refine_elapsed, refined.commit_elapsed);
         let k_max = refined.core.iter().copied().max().unwrap_or(0);
         // journal the epoch for delta catch-up — the routed batch plus
         // the commit's refined diff reproduce this epoch exactly on a
@@ -548,6 +614,7 @@ impl ClusterIndex {
                 diff: std::mem::take(&mut refined.diffs[s]),
             });
         }
+        let publish_start = Instant::now();
         let snapshot = Arc::new(CoreSnapshot {
             epoch,
             core: refined.core,
@@ -560,6 +627,35 @@ impl ClusterIndex {
             boundary_edges: refined.boundary_edges,
         });
         self.epoch.store(epoch, Ordering::SeqCst);
+        let publish_elapsed = publish_start.elapsed();
+        ft.stage("publish", publish_start, publish_elapsed);
+        // stitch: drain the hosts' measured spans into this flush's
+        // trace, nested under their stages with the remote addr kept
+        for gr in &self.groups {
+            if let Primary::Remote(r) = &gr.primary {
+                for (stage, span) in r.trace_scope().end() {
+                    ft.child(&stage, span);
+                }
+            }
+        }
+        let elapsed = timer.elapsed();
+        obs::record_flush_stages(
+            &self.name,
+            &FlushStages {
+                queue: queue_wait,
+                route: route_elapsed,
+                apply: apply_elapsed,
+                refine: refine_elapsed,
+                commit: commit_elapsed,
+                publish: publish_elapsed,
+                total: queue_wait + elapsed,
+                refine_rounds: merge.rounds as u64,
+                boundary_updates: merge.boundary_updates,
+                boundary_bytes: merge.boundary_bytes,
+                epoch,
+            },
+        );
+        obs::record_trace(ft.finish("flush", &self.name));
         Ok(ShardedOutcome {
             snapshot,
             submitted: edits.len(),
@@ -569,7 +665,7 @@ impl ClusterIndex {
             recomputed_shards,
             merge,
             merge_elapsed,
-            elapsed: timer.elapsed(),
+            elapsed,
         })
     }
 
@@ -594,6 +690,11 @@ impl ClusterIndex {
             if gr.replicas.is_empty() {
                 continue;
             }
+            // mirror the group's sync counters into the registry — the
+            // atomics behind sync_stats() stay authoritative for the
+            // SHARDS verb, the registry feeds the scrapeable exposition
+            let shard_label = s.to_string();
+            let labels: &[(&str, &str)] = &[("graph", &self.name), ("shard", &shard_label)];
             let mut manifest: Option<Vec<u8>> = None;
             let mut primary_down = false;
             let mut group_lag = 0u64;
@@ -631,6 +732,10 @@ impl ClusterIndex {
                     {
                         gr.deltas_shipped.fetch_add(1, Ordering::Relaxed);
                         gr.delta_bytes.fetch_add(bytes.len() as u64, Ordering::Relaxed);
+                        obs::global().counter(names::SYNC_DELTAS, labels).inc();
+                        obs::global()
+                            .counter(names::SYNC_DELTA_BYTES, labels)
+                            .add(bytes.len() as u64);
                         report.deltas += 1;
                         report.delta_bytes += bytes.len() as u64;
                         continue;
@@ -664,6 +769,10 @@ impl ClusterIndex {
                     Ok(()) => {
                         gr.snapshots_shipped.fetch_add(1, Ordering::Relaxed);
                         gr.snapshot_bytes.fetch_add(m.len() as u64, Ordering::Relaxed);
+                        obs::global().counter(names::SYNC_SNAPSHOTS, labels).inc();
+                        obs::global()
+                            .counter(names::SYNC_SNAPSHOT_BYTES, labels)
+                            .add(m.len() as u64);
                         report.snapshots += 1;
                         report.snapshot_bytes += m.len() as u64;
                     }
@@ -671,6 +780,7 @@ impl ClusterIndex {
                 }
             }
             gr.lag_epochs.store(group_lag, Ordering::Relaxed);
+            obs::global().gauge(names::SYNC_LAG_EPOCHS, labels).set(group_lag);
             report.max_lag_epochs = report.max_lag_epochs.max(group_lag);
             if forced && report.failed == group_failed_before {
                 // every replica of the group now holds the primary's

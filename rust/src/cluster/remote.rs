@@ -28,6 +28,8 @@
 use super::wire;
 use crate::graph::VertexId;
 use crate::net::client::{field, field_u64, FrameClient};
+use crate::net::codec;
+use crate::obs::TraceScope;
 use crate::shard::backend::{
     ApplyOutcome, RefineInit, RefineRound, RoutedBatch, ShardBackend, ShardStatus,
 };
@@ -37,6 +39,11 @@ use anyhow::{anyhow, bail, Context, Result};
 pub struct RemoteShard {
     id: usize,
     client: FrameClient,
+    /// Flush-trace mailbox: while the coordinator has armed it, the
+    /// mutating shard verbs carry a trailing ` trace=<hex>` token and
+    /// the host's measured `us=` comes back as a remote child span
+    /// (see [`crate::obs::trace`]).
+    scope: TraceScope,
 }
 
 impl RemoteShard {
@@ -46,6 +53,7 @@ impl RemoteShard {
         Self {
             id,
             client: FrameClient::new(addr, graph),
+            scope: TraceScope::default(),
         }
     }
 
@@ -63,6 +71,32 @@ impl RemoteShard {
 
     pub fn graph(&self) -> &str {
         self.client.graph()
+    }
+
+    /// The flush-trace mailbox the cluster router arms around a flush.
+    pub fn trace_scope(&self) -> &TraceScope {
+        &self.scope
+    }
+
+    /// The head line with the active trace id attached, when a flush
+    /// trace is in progress.
+    fn traced(&self, line: &str) -> String {
+        match self.scope.active() {
+            Some(id) => codec::attach_trace(line, id),
+            None => line.to_string(),
+        }
+    }
+
+    /// Record the host's measured handler time (the reply's `us=`
+    /// field) as a remote child span under `stage`. Pre-trace servers
+    /// send no `us=` and record nothing.
+    fn note_remote(&self, stage: &str, name_prefix: &str, head: &str) {
+        if self.scope.active().is_some() {
+            if let Some(us) = codec::reply_us(head) {
+                let name = format!("{name_prefix} shard={}", self.id);
+                self.scope.record_remote(stage, name, self.addr(), us);
+            }
+        }
     }
 
     /// Idempotent line verb (probes, reads): safe to replay.
@@ -154,7 +188,9 @@ impl ShardBackend for RemoteShard {
 
     fn apply(&self, batch: &RoutedBatch) -> Result<ApplyOutcome> {
         // NOT idempotent (toggling edits double-apply); never replayed
-        let (head, _) = self.call_payload_once("SHARDAPPLY", &wire::encode_batch(batch))?;
+        let (head, _) =
+            self.call_payload_once(&self.traced("SHARDAPPLY"), &wire::encode_batch(batch))?;
+        self.note_remote("apply", "apply", &head);
         Ok(ApplyOutcome {
             changed: field_u64(&head, "changed")? as usize,
             recomputed: field_u64(&head, "recomputed")? != 0,
@@ -174,8 +210,9 @@ impl ShardBackend for RemoteShard {
     fn refine_round(&self, updates: &[(VertexId, u32)]) -> Result<RefineRound> {
         // NOT idempotent (the first execution clears the dirty flag; a
         // replay would report an empty sweep); never replayed
-        let (head, payload) =
-            self.call_payload_once("SHARDREFINE ROUND", &wire::encode_pairs(updates))?;
+        let line = self.traced("SHARDREFINE ROUND");
+        let (head, payload) = self.call_payload_once(&line, &wire::encode_pairs(updates))?;
+        self.note_remote("refine", "round", &head);
         Ok(RefineRound {
             changed: wire::decode_pairs(&payload)?,
             sweeps: field_u64(&head, "sweeps")? as usize,
@@ -188,8 +225,9 @@ impl ShardBackend for RemoteShard {
         // so a replayed COMMIT after a lost reply would report an
         // *empty* diff and the journal would ship a delta that skips
         // real coreness changes; never replayed
-        let (head, payload) =
-            self.call_payload_once(&format!("SHARDREFINE COMMIT {cluster_epoch}"), b"")?;
+        let line = self.traced(&format!("SHARDREFINE COMMIT {cluster_epoch}"));
+        let (head, payload) = self.call_payload_once(&line, b"")?;
+        self.note_remote("commit", "commit", &head);
         if field_u64(&head, "commit")? != cluster_epoch {
             bail!("commit echoed the wrong epoch: '{head}'");
         }

@@ -1,8 +1,9 @@
 //! Instrumentation counters for the quantities the paper reports:
 //! atomic-op counts (Fig. 4's `2n−m` vs `n−m` claim), edge accesses
-//! (Fig. 3), h-index summations, and kernel launches — plus the serving
-//! layer's request-path counters (queries answered, edits queued,
-//! batches applied, recompute fallbacks taken).
+//! (Fig. 3), h-index summations, and kernel launches. The serving
+//! layer's request-path counters used to ride along in these slots;
+//! they now live in the observability registry ([`crate::obs`]) so the
+//! algorithm-cost counters here stay exactly the paper's quantities.
 //!
 //! Counters are per-worker, cache-line padded, and relaxed — a worker only
 //! ever touches its own slot on the hot path, so enabling metrics costs a
@@ -20,10 +21,6 @@ struct Slot {
     edge_accesses: AtomicU64,
     hindex_evals: AtomicU64,
     frontier_pushes: AtomicU64,
-    serve_queries: AtomicU64,
-    serve_edits: AtomicU64,
-    serve_batches: AtomicU64,
-    serve_recomputes: AtomicU64,
 }
 
 /// Shared metrics sink, one padded slot per worker.
@@ -69,10 +66,6 @@ impl Metrics {
             s.edge_accesses += slot.edge_accesses.load(Ordering::Relaxed);
             s.hindex_evals += slot.hindex_evals.load(Ordering::Relaxed);
             s.frontier_pushes += slot.frontier_pushes.load(Ordering::Relaxed);
-            s.serve_queries += slot.serve_queries.load(Ordering::Relaxed);
-            s.serve_edits += slot.serve_edits.load(Ordering::Relaxed);
-            s.serve_batches += slot.serve_batches.load(Ordering::Relaxed);
-            s.serve_recomputes += slot.serve_recomputes.load(Ordering::Relaxed);
         }
         s
     }
@@ -103,10 +96,6 @@ impl MetricsView<'_> {
     bump!(edge_accesses);
     bump!(hindex_evals);
     bump!(frontier_pushes);
-    bump!(serve_queries);
-    bump!(serve_edits);
-    bump!(serve_batches);
-    bump!(serve_recomputes);
 }
 
 /// Aggregated counter values.
@@ -118,10 +107,6 @@ pub struct MetricsSnapshot {
     pub edge_accesses: u64,
     pub hindex_evals: u64,
     pub frontier_pushes: u64,
-    pub serve_queries: u64,
-    pub serve_edits: u64,
-    pub serve_batches: u64,
-    pub serve_recomputes: u64,
 }
 
 impl MetricsSnapshot {
@@ -145,23 +130,6 @@ mod tests {
         assert_eq!(s.atomic_subs, 7);
         assert_eq!(s.edge_accesses, 10);
         assert_eq!(s.total_atomics(), 7);
-    }
-
-    #[test]
-    fn serve_counters_aggregate() {
-        let m = Metrics::new(2, true);
-        m.view(0).serve_queries(5);
-        m.view(1).serve_queries(2);
-        m.view(0).serve_edits(3);
-        m.view(1).serve_batches(1);
-        m.view(1).serve_recomputes(1);
-        let s = m.snapshot();
-        assert_eq!(s.serve_queries, 7);
-        assert_eq!(s.serve_edits, 3);
-        assert_eq!(s.serve_batches, 1);
-        assert_eq!(s.serve_recomputes, 1);
-        // serving counters are not atomics-budget counters
-        assert_eq!(s.total_atomics(), 0);
     }
 
     #[test]

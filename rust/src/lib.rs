@@ -28,6 +28,10 @@
 //!   threads), the per-connection session state machine with `AUTH`
 //!   gating and transport `METRICS`, and the one reconnecting client
 //!   shared by the cluster router and the CLI.
+//! * **Observability ([`obs`])** — the unified metrics registry
+//!   (counters, gauges, latency histograms), stage-level flush tracing
+//!   with cross-host span stitching, and the `METRICS PROM|JSON` /
+//!   `TRACES` expositions scraped by `pico cluster status --metrics`.
 //! * **Layer 2 (build-time JAX)** — vectorised peel / h-index step
 //!   functions, AOT-lowered to HLO text and executed from [`runtime`] via
 //!   the PJRT C API.
@@ -56,6 +60,7 @@ pub mod core;
 pub mod engine;
 pub mod graph;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod service;
 pub mod shard;

@@ -142,6 +142,27 @@ impl Client {
         Ok(line.trim_end().to_string())
     }
 
+    /// Send one line-mode command whose reply spans multiple lines: the
+    /// head line declares `lines=<n>` and exactly `n` body lines follow
+    /// (`METRICS PROM|JSON`, `TRACES`). `ERR` heads are raised so the
+    /// caller never desyncs the stream guessing at a body.
+    pub fn send_multiline(&mut self, cmd: &str) -> Result<(String, Vec<String>)> {
+        let head = self.send_line(cmd)?;
+        if head.starts_with("ERR") {
+            bail!("{}: {head}", self.addr);
+        }
+        let n = field_u64(&head, "lines")? as usize;
+        let mut body = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            let mut line = String::new();
+            if self.reader.read_line(&mut line)? == 0 {
+                bail!("{} closed mid multi-line reply to '{cmd}'", self.addr);
+            }
+            body.push(line.trim_end().to_string());
+        }
+        Ok((head, body))
+    }
+
     /// Upgrade to binary framing (`BINARY` handshake).
     pub fn upgrade_binary(&mut self) -> Result<()> {
         let reply = self.send_line("BINARY").context("binary upgrade")?;

@@ -93,6 +93,59 @@ pub fn split_frame(body: &[u8]) -> (&[u8], &[u8]) {
     }
 }
 
+// --- the trace-id head-line field ----------------------------------------
+//
+// Cross-host flush tracing ([`crate::obs::trace`]) rides the existing
+// verbs instead of growing the frame format: the coordinator appends a
+// trailing ` trace=<hex>` token to a shard-verb head line, and the host
+// answers with ` trace=<hex> us=<micros>` appended to its reply head.
+// Both sides degrade cleanly — a host that predates the field ignores
+// the trailing token (arg parsers are positional), and a coordinator
+// simply finds no `us=` in the reply.
+
+/// Append the trace-id field to a request head line.
+pub fn attach_trace(line: &str, id: u64) -> String {
+    format!("{line} trace={id:x}")
+}
+
+/// Split a trailing `trace=<hex>` token off a request head line; lines
+/// without one come back unchanged.
+pub fn extract_trace(head: &str) -> (&str, Option<u64>) {
+    if let Some(idx) = head.rfind(" trace=") {
+        let tok = &head[idx + " trace=".len()..];
+        if !tok.is_empty() && !tok.contains(' ') {
+            if let Ok(id) = u64::from_str_radix(tok, 16) {
+                return (&head[..idx], Some(id));
+            }
+        }
+    }
+    (head, None)
+}
+
+/// Tag a reply frame's head line with `trace=<hex> us=<micros>` —
+/// inserted before the first `\n` so any payload stays untouched.
+pub fn tag_reply_trace(reply: &mut Vec<u8>, id: u64, us: u64) {
+    let tag = format!(" trace={id:x} us={us}");
+    match reply.iter().position(|&b| b == b'\n') {
+        Some(i) => {
+            let mut out = Vec::with_capacity(reply.len() + tag.len());
+            out.extend_from_slice(&reply[..i]);
+            out.extend_from_slice(tag.as_bytes());
+            out.extend_from_slice(&reply[i..]);
+            *reply = out;
+        }
+        None => reply.extend_from_slice(tag.as_bytes()),
+    }
+}
+
+/// The `us=<micros>` field of a tagged reply head — the remote
+/// handler's own measured time. `None` from pre-trace servers.
+pub fn reply_us(head: &str) -> Option<u64> {
+    head.split_whitespace()
+        .find_map(|t| t.strip_prefix("us="))
+        .and_then(|v| v.parse().ok())
+}
+
 /// A bounds-checked reader over untrusted payload bytes — the one
 /// decoder primitive snapshots, manifests, and delta chains all parse
 /// with. Never panics on truncated input; every `take` is checked.
@@ -216,6 +269,28 @@ mod tests {
         let mut c = Cursor::new(&empty);
         assert_eq!(c.count(8, "list").unwrap(), 0);
         c.done("list").unwrap();
+    }
+
+    #[test]
+    fn trace_tokens_round_trip_on_heads_and_replies() {
+        let line = attach_trace("APPLY 3 1 0 2", 0xbeef);
+        assert_eq!(line, "APPLY 3 1 0 2 trace=beef");
+        assert_eq!(extract_trace(&line), ("APPLY 3 1 0 2", Some(0xbeef)));
+        // untraced and malformed heads pass through unchanged
+        assert_eq!(extract_trace("APPLY 3 1 0 2"), ("APPLY 3 1 0 2", None));
+        assert_eq!(extract_trace("GET trace=zz"), ("GET trace=zz", None));
+        assert_eq!(extract_trace("GET trace=7 x"), ("GET trace=7 x", None));
+
+        let mut reply = b"OK applied=3\npayload".to_vec();
+        tag_reply_trace(&mut reply, 0xbeef, 120);
+        assert_eq!(reply, b"OK applied=3 trace=beef us=120\npayload");
+        let (head, _) = split_frame(&reply);
+        assert_eq!(reply_us(std::str::from_utf8(head).unwrap()), Some(120));
+
+        let mut bare = b"OK done".to_vec();
+        tag_reply_trace(&mut bare, 1, 7);
+        assert_eq!(bare, b"OK done trace=1 us=7");
+        assert_eq!(reply_us("OK done"), None);
     }
 
     #[test]

@@ -11,8 +11,9 @@
 //! far more connections than threads. Application verbs are delegated
 //! through the [`Handler`] trait (implemented by
 //! [`crate::service::server::CoreService`]); the transport-owned verbs
-//! — `AUTH`, `METRICS`, and the auth gate in front of the shard verbs
-//! — are dispatched right here.
+//! — `AUTH`, `METRICS` (bare line plus the `PROM`/`JSON` registry
+//! expositions), `TRACES`, and the auth gate in front of the shard
+//! verbs — are dispatched right here.
 //!
 //! # Read discipline (slow-loris protection)
 //!
@@ -69,6 +70,7 @@ pub const LINE_VERBS: &[&str] = &[
     "FLUSH",
     "STATS",
     "METRICS",
+    "TRACES",
     "AUTH",
     "BINARY",
     "QUIT",
@@ -190,6 +192,30 @@ pub struct TransportStats {
 }
 
 impl TransportStats {
+    /// Publish the transport counters into the global observability
+    /// registry — called at scrape time (`METRICS PROM|JSON`), so the
+    /// accept/serve hot paths keep their existing single atomics.
+    pub fn publish(&self) {
+        use crate::obs::names;
+        let reg = crate::obs::global();
+        reg.counter(names::NET_ACCEPTED, &[])
+            .set_total(self.accepted.load(Ordering::Relaxed));
+        reg.counter(names::NET_REJECTED, &[])
+            .set_total(self.rejected.load(Ordering::Relaxed));
+        reg.counter(names::NET_TIMED_OUT, &[])
+            .set_total(self.timed_out.load(Ordering::Relaxed));
+        reg.counter(names::NET_RECLAIMED, &[])
+            .set_total(self.reclaimed.load(Ordering::Relaxed));
+        reg.gauge(names::NET_ACTIVE, &[])
+            .set(self.active.load(Ordering::Relaxed) as u64);
+        reg.gauge(names::NET_QUEUED, &[])
+            .set(self.queued.load(Ordering::Relaxed) as u64);
+        reg.gauge(names::NET_WORKERS, &[])
+            .set(self.workers.load(Ordering::Relaxed) as u64);
+        reg.gauge(names::NET_CONN_CAP, &[])
+            .set(self.max_connections.load(Ordering::Relaxed) as u64);
+    }
+
     /// The `METRICS` reply line.
     pub fn metrics_line(&self) -> String {
         format!(
@@ -541,7 +567,42 @@ impl Connection {
                 }
                 (Some(_), _) => "ERR bad auth token".into(),
             }),
-            "METRICS" => Some(stats.metrics_line()),
+            "METRICS" => Some(match parts.next().map(|f| f.to_ascii_uppercase()) {
+                // the bare reply line predates the registry and stays
+                // byte-for-byte stable for existing scrapers
+                None => stats.metrics_line(),
+                Some(f) if f == "PROM" || f == "JSON" => {
+                    stats.publish();
+                    let reg = crate::obs::global();
+                    let body = if f == "PROM" {
+                        crate::obs::render_prom(reg)
+                    } else {
+                        crate::obs::render_json(reg)
+                    };
+                    let body = body.trim_end_matches('\n');
+                    format!(
+                        "OK metrics format={} lines={} bytes={}\n{body}",
+                        f.to_ascii_lowercase(),
+                        body.lines().count(),
+                        body.len(),
+                    )
+                }
+                Some(other) => format!("ERR unknown METRICS format {other} (want PROM or JSON)"),
+            }),
+            "TRACES" => {
+                let n = parts
+                    .next()
+                    .and_then(|t| t.parse::<usize>().ok())
+                    .unwrap_or(5);
+                let traces = crate::obs::recent_traces(n);
+                let lines: Vec<String> = traces.iter().flat_map(|t| t.render()).collect();
+                let mut reply = format!("OK traces n={} lines={}", traces.len(), lines.len());
+                for l in &lines {
+                    reply.push('\n');
+                    reply.push_str(l);
+                }
+                Some(reply)
+            }
             v if cfg.auth_token.is_some() && !self.session.authed && AUTH_VERBS.contains(&v) => {
                 Some(format!("ERR auth required for {v} (send AUTH <token> first)"))
             }
@@ -728,6 +789,20 @@ mod tests {
                 FRAME_VERBS.contains(v),
                 "auth-gated verb {v} missing from FRAME_VERBS"
             );
+        }
+    }
+
+    #[test]
+    fn publish_mirrors_transport_counters_into_the_registry() {
+        let stats = TransportStats::default();
+        stats.workers.store(3, Ordering::Relaxed);
+        stats.accepted.fetch_add(11, Ordering::Relaxed);
+        stats.publish();
+        // the global registry is shared with concurrently running tests,
+        // so assert the series exist rather than pin exact values
+        let text = crate::obs::render_prom(crate::obs::global());
+        for series in ["pico_net_workers", "pico_net_accepted_total", "pico_net_conn_cap"] {
+            assert!(text.contains(series), "missing {series} in:\n{text}");
         }
     }
 

@@ -1,0 +1,330 @@
+//! Exposition: render a [`Registry`] snapshot as Prometheus text or
+//! JSON, and parse/merge Prometheus text from several hosts into one
+//! cluster view (`pico cluster status --metrics`).
+//!
+//! Hand-rolled on both sides — the environment is offline, no serde —
+//! and line-based: the parser accepts exactly what the renderer emits
+//! (plus whitespace slack), which is all the merger needs.
+
+use super::hist::{bucket_bound, HistSnapshot, NUM_BUCKETS};
+use super::names;
+use super::registry::{Registry, Series, Value};
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+/// Does this histogram record microseconds (rendered as seconds in the
+/// Prometheus exposition), or raw counts?
+fn is_seconds(name: &str) -> bool {
+    name.ends_with("_seconds")
+}
+
+fn escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn label_block(labels: &[(String, String)], extra: Option<(&str, &str)>) -> String {
+    let mut parts: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("{k}=\"{}\"", escape(v)))
+        .collect();
+    if let Some((k, v)) = extra {
+        parts.push(format!("{k}=\"{v}\""));
+    }
+    if parts.is_empty() {
+        String::new()
+    } else {
+        format!("{{{}}}", parts.join(","))
+    }
+}
+
+fn le_text(name: &str, i: usize) -> String {
+    let b = bucket_bound(i);
+    if b == u64::MAX {
+        "+Inf".to_string()
+    } else if is_seconds(name) {
+        format!("{}", b as f64 / 1e6)
+    } else {
+        format!("{b}")
+    }
+}
+
+fn render_hist_prom(out: &mut String, name: &str, labels: &[(String, String)], h: &HistSnapshot) {
+    let mut cum = 0u64;
+    for i in 0..NUM_BUCKETS {
+        cum += h.buckets[i];
+        let lb = label_block(labels, Some(("le", &le_text(name, i))));
+        let _ = writeln!(out, "{name}_bucket{lb} {cum}");
+    }
+    let lb = label_block(labels, None);
+    if is_seconds(name) {
+        let _ = writeln!(out, "{name}_sum{lb} {}", h.sum as f64 / 1e6);
+    } else {
+        let _ = writeln!(out, "{name}_sum{lb} {}", h.sum);
+    }
+    let _ = writeln!(out, "{name}_count{lb} {}", h.count());
+}
+
+/// Render the registry as Prometheus exposition text. `_seconds`
+/// histograms convert their microsecond buckets to seconds on the way
+/// out; `pico_uptime_seconds` is synthesized from the registry clock.
+pub fn render_prom(reg: &Registry) -> String {
+    let mut out = String::new();
+    let mut series = reg.snapshot();
+    series.sort_by(|a, b| (a.name.as_str(), &a.labels).cmp(&(b.name.as_str(), &b.labels)));
+    let mut typed = std::collections::BTreeSet::new();
+    for s in &series {
+        if typed.insert(s.name.clone()) {
+            let _ = writeln!(out, "# TYPE {} {}", s.name, s.value.type_name());
+        }
+        match &s.value {
+            Value::Counter(v) | Value::Gauge(v) => {
+                let _ = writeln!(out, "{}{} {v}", s.name, label_block(&s.labels, None));
+            }
+            Value::Histogram(h) => render_hist_prom(&mut out, &s.name, &s.labels, h),
+        }
+    }
+    let _ = writeln!(out, "# TYPE {} gauge", names::UPTIME_SECONDS);
+    let _ = writeln!(out, "{} {:.3}", names::UPTIME_SECONDS, reg.uptime_seconds());
+    out
+}
+
+fn json_escape(v: &str) -> String {
+    v.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn json_labels(labels: &[(String, String)]) -> String {
+    let cells: Vec<String> = labels
+        .iter()
+        .map(|(k, v)| format!("\"{}\": \"{}\"", json_escape(k), json_escape(v)))
+        .collect();
+    format!("{{{}}}", cells.join(", "))
+}
+
+/// Render the registry as JSON. Histogram values stay in their recorded
+/// unit (microseconds for `_seconds` series, marked `"unit": "us"`),
+/// with p50/p90/p99 readouts precomputed.
+pub fn render_json(reg: &Registry) -> String {
+    let mut cells = Vec::new();
+    for s in reg.snapshot() {
+        let head = format!(
+            "\"name\": \"{}\", \"labels\": {}, \"type\": \"{}\"",
+            json_escape(&s.name),
+            json_labels(&s.labels),
+            s.value.type_name()
+        );
+        cells.push(match &s.value {
+            Value::Counter(v) | Value::Gauge(v) => format!("{{{head}, \"value\": {v}}}"),
+            Value::Histogram(h) => {
+                let unit = if is_seconds(&s.name) { "us" } else { "raw" };
+                let mut cum = 0u64;
+                let buckets: Vec<String> = (0..NUM_BUCKETS)
+                    .map(|i| {
+                        cum += h.buckets[i];
+                        let b = bucket_bound(i);
+                        if b == u64::MAX {
+                            format!("[null, {cum}]")
+                        } else {
+                            format!("[{b}, {cum}]")
+                        }
+                    })
+                    .collect();
+                format!(
+                    "{{{head}, \"unit\": \"{unit}\", \"count\": {}, \"sum\": {}, \
+                     \"p50\": {}, \"p90\": {}, \"p99\": {}, \"buckets\": [{}]}}",
+                    h.count(),
+                    h.sum,
+                    h.quantile(0.5),
+                    h.quantile(0.9),
+                    h.quantile(0.99),
+                    buckets.join(", ")
+                )
+            }
+        });
+    }
+    format!(
+        "{{\"uptime_seconds\": {:.3}, \"series\": [{}]}}\n",
+        reg.uptime_seconds(),
+        cells.join(", ")
+    )
+}
+
+/// One parsed Prometheus exposition: `# TYPE` declarations plus every
+/// sample line, keyed by the full `name{labels}` series string.
+#[derive(Debug, Default)]
+pub struct PromText {
+    /// metric name -> declared type.
+    pub types: BTreeMap<String, String>,
+    /// `name{labels}` -> value, in first-seen order via BTreeMap.
+    pub samples: BTreeMap<String, f64>,
+}
+
+/// Parse Prometheus text (what [`render_prom`] emits). Unparseable
+/// lines are skipped, not fatal — the merger must survive a host
+/// running a newer build with extra series.
+pub fn parse_prom(text: &str) -> PromText {
+    let mut out = PromText::default();
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split_whitespace();
+            if let (Some(name), Some(kind)) = (it.next(), it.next()) {
+                out.types.insert(name.to_string(), kind.to_string());
+            }
+            continue;
+        }
+        if line.starts_with('#') {
+            continue;
+        }
+        // `name{labels} value` or `name value`; labels may hold spaces
+        // only inside quotes, which our own renderer never emits
+        let Some(split_at) = line.rfind(' ') else { continue };
+        let (series, value) = line.split_at(split_at);
+        let Ok(v) = value.trim().parse::<f64>() else { continue };
+        out.samples.insert(series.trim().to_string(), v);
+    }
+    out
+}
+
+/// The base metric name of a series key (strips labels and histogram
+/// `_bucket`/`_sum`/`_count` suffixes when the base is a declared
+/// histogram).
+fn base_name<'a>(series: &'a str, types: &BTreeMap<String, String>) -> &'a str {
+    let name = series.split('{').next().unwrap_or(series);
+    for suffix in ["_bucket", "_sum", "_count"] {
+        if let Some(base) = name.strip_suffix(suffix) {
+            if types.get(base).map(String::as_str) == Some("histogram") {
+                return base;
+            }
+        }
+    }
+    name
+}
+
+/// Merge expositions from several hosts into one: counters and
+/// histogram cells sum; gauges take the max (a merged "epoch" or "lag"
+/// is the worst case across hosts, not their sum).
+pub fn merge_prom(texts: &[String]) -> String {
+    let parsed: Vec<PromText> = texts.iter().map(|t| parse_prom(t)).collect();
+    let mut types: BTreeMap<String, String> = BTreeMap::new();
+    for p in &parsed {
+        for (k, v) in &p.types {
+            types.entry(k.clone()).or_insert_with(|| v.clone());
+        }
+    }
+    let mut merged: BTreeMap<String, f64> = BTreeMap::new();
+    for p in &parsed {
+        for (series, &v) in &p.samples {
+            let base = base_name(series, &types);
+            let gauge = types.get(base).map(String::as_str) == Some("gauge");
+            merged
+                .entry(series.clone())
+                .and_modify(|cur| {
+                    if gauge {
+                        *cur = cur.max(v);
+                    } else {
+                        *cur += v;
+                    }
+                })
+                .or_insert(v);
+        }
+    }
+    let mut out = String::new();
+    let mut typed = std::collections::BTreeSet::new();
+    for (series, v) in &merged {
+        let base = base_name(series, &types).to_string();
+        if typed.insert(base.clone()) {
+            if let Some(kind) = types.get(&base) {
+                let _ = writeln!(out, "# TYPE {base} {kind}");
+            }
+        }
+        let _ = writeln!(out, "{series} {v}");
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_registry() -> Registry {
+        let r = Registry::new();
+        r.counter(names::SERVE_QUERIES, &[("graph", "g1")]).add(3);
+        r.gauge(names::GRAPH_EPOCH, &[("graph", "g1")]).set(2);
+        let h = r.histogram(names::QUERY_SECONDS, &[("graph", "g1")]);
+        h.record(1); // -> le 1e-06 bucket
+        h.record(3); // -> le 4e-06 bucket
+        r
+    }
+
+    /// The golden-format pin for `METRICS PROM`: exact lines, exact
+    /// order, exact histogram shape. A fresh local registry keeps the
+    /// process-global counters out of the assertion.
+    #[test]
+    fn prom_exposition_golden_format() {
+        let text = render_prom(&sample_registry());
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines[0], "# TYPE pico_graph_epoch gauge");
+        assert_eq!(lines[1], "pico_graph_epoch{graph=\"g1\"} 2");
+        assert_eq!(lines[2], "# TYPE pico_query_seconds histogram");
+        assert_eq!(lines[3], "pico_query_seconds_bucket{graph=\"g1\",le=\"0.000001\"} 1");
+        assert_eq!(lines[4], "pico_query_seconds_bucket{graph=\"g1\",le=\"0.000002\"} 1");
+        assert_eq!(lines[5], "pico_query_seconds_bucket{graph=\"g1\",le=\"0.000004\"} 2");
+        // cumulative counts carry through to +Inf
+        assert_eq!(
+            lines[2 + NUM_BUCKETS],
+            "pico_query_seconds_bucket{graph=\"g1\",le=\"+Inf\"} 2"
+        );
+        assert_eq!(lines[3 + NUM_BUCKETS], "pico_query_seconds_sum{graph=\"g1\"} 0.000004");
+        assert_eq!(lines[4 + NUM_BUCKETS], "pico_query_seconds_count{graph=\"g1\"} 2");
+        assert_eq!(lines[5 + NUM_BUCKETS], "# TYPE pico_serve_queries_total counter");
+        assert_eq!(lines[6 + NUM_BUCKETS], "pico_serve_queries_total{graph=\"g1\"} 3");
+        assert_eq!(lines[7 + NUM_BUCKETS], "# TYPE pico_uptime_seconds gauge");
+        assert!(lines[8 + NUM_BUCKETS].starts_with("pico_uptime_seconds "));
+        assert_eq!(lines.len(), 9 + NUM_BUCKETS);
+    }
+
+    #[test]
+    fn json_exposition_is_structured() {
+        let text = render_json(&sample_registry());
+        assert!(text.starts_with("{\"uptime_seconds\": "));
+        assert!(text.contains("\"name\": \"pico_serve_queries_total\""));
+        assert!(text.contains("\"type\": \"histogram\""));
+        assert!(text.contains("\"p99\": 4"));
+        assert!(text.contains("[null, 2]"), "+Inf bucket renders as null: {text}");
+    }
+
+    #[test]
+    fn parse_round_trips_and_merge_sums_counters_maxes_gauges() {
+        let a = render_prom(&sample_registry());
+        let p = parse_prom(&a);
+        assert_eq!(p.types.get("pico_query_seconds").map(String::as_str), Some("histogram"));
+        assert_eq!(p.samples.get("pico_serve_queries_total{graph=\"g1\"}"), Some(&3.0));
+
+        let b = {
+            let r = Registry::new();
+            r.counter(names::SERVE_QUERIES, &[("graph", "g1")]).add(5);
+            r.gauge(names::GRAPH_EPOCH, &[("graph", "g1")]).set(9);
+            r.histogram(names::QUERY_SECONDS, &[("graph", "g1")]).record(1);
+            render_prom(&r)
+        };
+        let merged = merge_prom(&[a, b]);
+        let m = parse_prom(&merged);
+        assert_eq!(
+            m.samples.get("pico_serve_queries_total{graph=\"g1\"}"),
+            Some(&8.0),
+            "counters sum"
+        );
+        assert_eq!(m.samples.get("pico_graph_epoch{graph=\"g1\"}"), Some(&9.0), "gauges max");
+        assert_eq!(
+            m.samples
+                .get("pico_query_seconds_bucket{graph=\"g1\",le=\"0.000001\"}"),
+            Some(&2.0),
+            "histogram buckets sum"
+        );
+        assert_eq!(m.samples.get("pico_query_seconds_count{graph=\"g1\"}"), Some(&3.0));
+        assert!(merged.contains("# TYPE pico_query_seconds histogram"));
+    }
+}

@@ -1,0 +1,242 @@
+//! Log-bucketed histograms: fixed power-of-two buckets over
+//! microseconds (or raw counts), lock-free recording, mergeable
+//! snapshots, and conservative quantile readouts.
+//!
+//! Recording is three relaxed atomic adds plus one release bump of an
+//! operation counter; [`Histogram::snapshot`] uses that counter as an
+//! optimistic concurrency check so a scan that raced a writer is
+//! retried instead of returning a torn `sum`/`buckets` pair.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Bucket `i < NUM_BUCKETS - 1` counts samples with value `<= 2^i`;
+/// the last bucket is `+Inf`. `2^25` µs ≈ 33.5 s, so every realistic
+/// flush or query latency lands in a finite bucket.
+pub const NUM_BUCKETS: usize = 27;
+
+/// Upper bound of bucket `i`; `u64::MAX` encodes `+Inf`.
+pub fn bucket_bound(i: usize) -> u64 {
+    if i >= NUM_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        1u64 << i
+    }
+}
+
+fn bucket_index(v: u64) -> usize {
+    // first i with 2^i >= v (v=0 and v=1 both land in bucket 0)
+    let idx = (64 - v.saturating_sub(1).leading_zeros()) as usize;
+    idx.min(NUM_BUCKETS - 1)
+}
+
+/// A concurrently-recordable histogram. Values are unitless `u64`s;
+/// the `_seconds` series record microseconds and the exposition layer
+/// converts bounds on the way out.
+pub struct Histogram {
+    buckets: [AtomicU64; NUM_BUCKETS],
+    sum: AtomicU64,
+    /// Bumped (release) after every record; snapshot readers verify it
+    /// did not move across their scan (acquire) and retry if it did.
+    ops: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum: AtomicU64::new(0),
+            ops: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.ops.fetch_add(1, Ordering::Release);
+    }
+
+    /// Record a duration in microseconds.
+    pub fn record_duration(&self, d: Duration) {
+        self.record(d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// An atomic snapshot: retried while writers race the scan, so the
+    /// returned `sum` and `buckets` belong to one consistent prefix of
+    /// the recorded samples (no torn reads).
+    pub fn snapshot(&self) -> HistSnapshot {
+        for _ in 0..64 {
+            let before = self.ops.load(Ordering::Acquire);
+            let buckets = std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed));
+            let sum = self.sum.load(Ordering::Relaxed);
+            if self.ops.load(Ordering::Acquire) == before {
+                return HistSnapshot { buckets, sum };
+            }
+        }
+        // writers never went quiet; return the last scan (still a valid
+        // lower bound on every cell) rather than spinning forever
+        HistSnapshot {
+            buckets: std::array::from_fn(|i| self.buckets[i].load(Ordering::Relaxed)),
+            sum: self.sum.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A point-in-time copy of a [`Histogram`], mergeable across shards and
+/// hosts by bucket-wise addition.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct HistSnapshot {
+    pub buckets: [u64; NUM_BUCKETS],
+    pub sum: u64,
+}
+
+impl HistSnapshot {
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().sum()
+    }
+
+    /// Bucket-wise merge — associative and commutative, so snapshots
+    /// from any number of hosts combine in any order.
+    pub fn merge(&mut self, other: &HistSnapshot) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.sum += other.sum;
+    }
+
+    /// Conservative quantile: the upper bound of the bucket holding the
+    /// rank-`ceil(p·n)` sample. Never below the true quantile and less
+    /// than 2x above it (for samples in the finite buckets).
+    pub fn quantile(&self, p: f64) -> u64 {
+        let n = self.count();
+        if n == 0 {
+            return 0;
+        }
+        let rank = ((p * n as f64).ceil() as u64).clamp(1, n);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return if i == NUM_BUCKETS - 1 {
+                    // +Inf bucket: the sum bounds any single sample
+                    self.sum
+                } else {
+                    bucket_bound(i)
+                };
+            }
+        }
+        self.sum
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucketing_is_monotone_and_capped() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 2);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(5), 3);
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        for i in 0..NUM_BUCKETS - 1 {
+            assert_eq!(bucket_index(bucket_bound(i)), i, "bound lands in its own bucket");
+        }
+    }
+
+    #[test]
+    fn quantiles_bound_the_sorted_vector_oracle() {
+        let mut rng = Rng::new(42);
+        for round in 0..20 {
+            let h = Histogram::default();
+            let n = 1 + rng.below(400) as usize;
+            let mut vals: Vec<u64> = (0..n).map(|_| rng.below(1 << 20)).collect();
+            for &v in &vals {
+                h.record(v);
+            }
+            vals.sort_unstable();
+            let snap = h.snapshot();
+            assert_eq!(snap.count(), n as u64);
+            assert_eq!(snap.sum, vals.iter().sum::<u64>());
+            for p in [0.5, 0.9, 0.99] {
+                let rank = ((p * n as f64).ceil() as usize).clamp(1, n);
+                let oracle = vals[rank - 1];
+                let got = snap.quantile(p);
+                assert!(got >= oracle, "round {round} p{p}: {got} < oracle {oracle}");
+                assert!(
+                    got <= oracle.saturating_mul(2).max(1),
+                    "round {round} p{p}: {got} > 2x oracle {oracle}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        let mut rng = Rng::new(7);
+        let snaps: Vec<HistSnapshot> = (0..3)
+            .map(|_| {
+                let h = Histogram::default();
+                for _ in 0..rng.below(100) {
+                    h.record(rng.below(1 << 24));
+                }
+                h.snapshot()
+            })
+            .collect();
+        let (a, b, c) = (&snaps[0], &snaps[1], &snaps[2]);
+        // (a + b) + c
+        let mut left = a.clone();
+        left.merge(b);
+        left.merge(c);
+        // a + (b + c)
+        let mut bc = b.clone();
+        bc.merge(c);
+        let mut right = a.clone();
+        right.merge(&bc);
+        assert_eq!(left, right, "associativity");
+        // b + a == a + b
+        let mut ab = a.clone();
+        ab.merge(b);
+        let mut ba = b.clone();
+        ba.merge(a);
+        assert_eq!(ab, ba, "commutativity");
+        assert_eq!(left.count(), a.count() + b.count() + c.count());
+    }
+
+    #[test]
+    fn snapshots_are_not_torn_under_concurrent_recording() {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        use std::sync::Arc;
+
+        // every sample is exactly 1000, so any internally-consistent
+        // snapshot must satisfy sum == 1000 * count — a torn read of
+        // sum vs buckets breaks the equality
+        let h = Arc::new(Histogram::default());
+        let stop = Arc::new(AtomicBool::new(false));
+        let writers: Vec<_> = (0..3)
+            .map(|_| {
+                let h = h.clone();
+                let stop = stop.clone();
+                std::thread::spawn(move || {
+                    while !stop.load(Ordering::Relaxed) {
+                        h.record(1000);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..200 {
+            let s = h.snapshot();
+            assert_eq!(s.sum, 1000 * s.count(), "torn snapshot");
+        }
+        stop.store(true, Ordering::Relaxed);
+        for w in writers {
+            w.join().unwrap();
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! The unified observability layer: one zero-dependency metrics
+//! registry (counters, gauges, log-bucketed latency histograms with
+//! mergeable snapshots), stage-level span tracing with cross-host
+//! stitching, and a scrapeable exposition.
+//!
+//! Before this layer existed the crate's telemetry was three
+//! disconnected islands — `engine::Metrics` worker slots, the transport
+//! counters behind `METRICS`, and per-group replica `SyncStats` — with
+//! no latency distributions outside the offline benches and no view of
+//! *where inside a flush* time went. Now every subsystem records into
+//! [`registry::global`]:
+//!
+//! * [`registry`] — named series with label sets, handed out as `Arc`
+//!   handles so the hot path pays one atomic op per event.
+//! * [`hist`] — power-of-two-bucketed histograms: lock-free recording,
+//!   atomic (non-torn) snapshots, bucket-wise merging, conservative
+//!   p50/p90/p99 readouts.
+//! * [`trace`] — a trace id per flush (and slow query), stage spans
+//!   (queue wait → route → apply → refine rounds → commit → publish),
+//!   remote child spans stitched from shard-host replies, and the
+//!   bounded ring behind the `TRACES` verb.
+//! * [`expo`] — Prometheus-text and JSON renderings (`METRICS PROM`,
+//!   `METRICS JSON`), plus the parser/merger behind
+//!   `pico cluster status --metrics`.
+//!
+//! # Metric-name reference
+//!
+//! Every exported series, its type, and its labels. CI greps the
+//! constants in [`names`] against this table, so a new metric cannot
+//! land undocumented.
+//!
+//! | series | type | labels |
+//! |---|---|---|
+//! | `pico_serve_queries_total` | counter | `graph` |
+//! | `pico_serve_edits_total` | counter | `graph` |
+//! | `pico_serve_batches_total` | counter | `graph` |
+//! | `pico_serve_recomputes_total` | counter | `graph` |
+//! | `pico_refine_boundary_updates_total` | counter | `graph` |
+//! | `pico_refine_boundary_bytes_total` | counter | `graph` |
+//! | `pico_sync_deltas_total` | counter | `graph`, `shard` |
+//! | `pico_sync_snapshots_total` | counter | `graph`, `shard` |
+//! | `pico_sync_delta_bytes_total` | counter | `graph`, `shard` |
+//! | `pico_sync_snapshot_bytes_total` | counter | `graph`, `shard` |
+//! | `pico_net_accepted_total` | counter | — |
+//! | `pico_net_rejected_total` | counter | — |
+//! | `pico_net_timed_out_total` | counter | — |
+//! | `pico_net_reclaimed_total` | counter | — |
+//! | `pico_net_active` | gauge | — |
+//! | `pico_net_queued` | gauge | — |
+//! | `pico_net_workers` | gauge | — |
+//! | `pico_net_conn_cap` | gauge | — |
+//! | `pico_sync_lag_epochs` | gauge | `graph`, `shard` |
+//! | `pico_graph_epoch` | gauge | `graph` |
+//! | `pico_uptime_seconds` | gauge | — |
+//! | `pico_query_seconds` | histogram | `graph` |
+//! | `pico_flush_queue_seconds` | histogram | `graph` |
+//! | `pico_flush_route_seconds` | histogram | `graph` |
+//! | `pico_flush_apply_seconds` | histogram | `graph` |
+//! | `pico_flush_refine_seconds` | histogram | `graph` |
+//! | `pico_flush_commit_seconds` | histogram | `graph` |
+//! | `pico_flush_publish_seconds` | histogram | `graph` |
+//! | `pico_flush_total_seconds` | histogram | `graph` |
+//! | `pico_flush_refine_rounds` | histogram | `graph` |
+//! | `pico_shard_apply_seconds` | histogram | `graph` |
+//! | `pico_shard_refine_round_seconds` | histogram | `graph` |
+//! | `pico_shard_commit_seconds` | histogram | `graph` |
+//!
+//! `_seconds` histograms record microseconds internally and expose
+//! second-denominated buckets; `pico_flush_refine_rounds` is a plain
+//! count distribution. Single-backend graphs record `queue`, `apply`,
+//! `publish`, and `total` flush stages; sharded and cluster graphs add
+//! `route`, `refine`, and `commit`. The `pico_shard_*` histograms are
+//! recorded host-side under the shard's hosted graph name (e.g.
+//! `soc/shard1`), so a coordinator scrape and a shard-host scrape stay
+//! distinguishable after a merge.
+
+pub mod expo;
+pub mod hist;
+pub mod names;
+pub mod registry;
+pub mod trace;
+
+pub use expo::{merge_prom, parse_prom, render_json, render_prom};
+pub use hist::{HistSnapshot, Histogram};
+pub use registry::{global, Counter, Gauge, Registry, Series, Value};
+pub use trace::{
+    next_trace_id, recent_traces, record_slow_query, record_trace, FlushTrace, Span, Trace,
+    TraceScope,
+};
+
+use std::time::Duration;
+
+/// Stage durations and merge accounting of one routed flush — recorded
+/// into the per-graph stage histograms in one call, so the sharded and
+/// cluster flush paths cannot drift apart in what they export.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FlushStages {
+    pub queue: Duration,
+    pub route: Duration,
+    pub apply: Duration,
+    pub refine: Duration,
+    pub commit: Duration,
+    pub publish: Duration,
+    pub total: Duration,
+    pub refine_rounds: u64,
+    pub boundary_updates: u64,
+    pub boundary_bytes: u64,
+    /// The epoch this flush published (lands in `pico_graph_epoch`).
+    pub epoch: u64,
+}
+
+/// Record one flush's stages under `graph`'s label set.
+pub fn record_flush_stages(graph: &str, s: &FlushStages) {
+    let us = |d: Duration| d.as_micros().min(u64::MAX as u128) as u64;
+    let reg = global();
+    let l: &[(&str, &str)] = &[("graph", graph)];
+    reg.histogram(names::FLUSH_QUEUE_SECONDS, l).record(us(s.queue));
+    reg.histogram(names::FLUSH_ROUTE_SECONDS, l).record(us(s.route));
+    reg.histogram(names::FLUSH_APPLY_SECONDS, l).record(us(s.apply));
+    reg.histogram(names::FLUSH_REFINE_SECONDS, l).record(us(s.refine));
+    reg.histogram(names::FLUSH_COMMIT_SECONDS, l).record(us(s.commit));
+    reg.histogram(names::FLUSH_PUBLISH_SECONDS, l).record(us(s.publish));
+    reg.histogram(names::FLUSH_TOTAL_SECONDS, l).record(us(s.total));
+    reg.histogram(names::FLUSH_REFINE_ROUNDS, l).record(s.refine_rounds);
+    reg.counter(names::REFINE_BOUNDARY_UPDATES, l).add(s.boundary_updates);
+    reg.counter(names::REFINE_BOUNDARY_BYTES, l).add(s.boundary_bytes);
+    reg.gauge(names::GRAPH_EPOCH, l).set(s.epoch);
+}

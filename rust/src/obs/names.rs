@@ -1,0 +1,79 @@
+//! Every metric name this crate registers, as constants — one place to
+//! rename, and the anchor for the CI lint that keeps the metric-name
+//! reference in [`crate::obs`]'s module docs complete (each `pico_*`
+//! constant here must appear, backticked, in that table).
+
+// --- counters -----------------------------------------------------------
+
+/// Queries answered by the serving layer, per graph.
+pub const SERVE_QUERIES: &str = "pico_serve_queries_total";
+/// Edits accepted into a pending batch, per graph.
+pub const SERVE_EDITS: &str = "pico_serve_edits_total";
+/// Flushed batches, per graph.
+pub const SERVE_BATCHES: &str = "pico_serve_batches_total";
+/// Batches that took the full-recompute path, per graph.
+pub const SERVE_RECOMPUTES: &str = "pico_serve_recomputes_total";
+/// Ghost-copy refreshes that changed a value during boundary refinement.
+pub const REFINE_BOUNDARY_UPDATES: &str = "pico_refine_boundary_updates_total";
+/// Bytes exchanged (both directions) by the boundary-refinement rounds.
+pub const REFINE_BOUNDARY_BYTES: &str = "pico_refine_boundary_bytes_total";
+/// Delta chains shipped to lagging replicas, per shard.
+pub const SYNC_DELTAS: &str = "pico_sync_deltas_total";
+/// Full-manifest snapshots shipped to replicas, per shard.
+pub const SYNC_SNAPSHOTS: &str = "pico_sync_snapshots_total";
+/// Bytes shipped over the delta catch-up path, per shard.
+pub const SYNC_DELTA_BYTES: &str = "pico_sync_delta_bytes_total";
+/// Bytes shipped over the full-manifest catch-up path, per shard.
+pub const SYNC_SNAPSHOT_BYTES: &str = "pico_sync_snapshot_bytes_total";
+/// Connections accepted by the transport pool.
+pub const NET_ACCEPTED: &str = "pico_net_accepted_total";
+/// Connections refused over the connection cap.
+pub const NET_REJECTED: &str = "pico_net_rejected_total";
+/// Requests cut off mid-read by the slow-loris stall timeout.
+pub const NET_TIMED_OUT: &str = "pico_net_timed_out_total";
+/// Idle connections reclaimed while the pool sat at its cap.
+pub const NET_RECLAIMED: &str = "pico_net_reclaimed_total";
+
+// --- gauges -------------------------------------------------------------
+
+/// Live connections right now.
+pub const NET_ACTIVE: &str = "pico_net_active";
+/// Connections parked on the run queue right now.
+pub const NET_QUEUED: &str = "pico_net_queued";
+/// Worker threads in the transport pool.
+pub const NET_WORKERS: &str = "pico_net_workers";
+/// The hard connection cap.
+pub const NET_CONN_CAP: &str = "pico_net_conn_cap";
+/// Epochs a replica trails the committed head, per shard.
+pub const SYNC_LAG_EPOCHS: &str = "pico_sync_lag_epochs";
+/// The published epoch of a hosted graph.
+pub const GRAPH_EPOCH: &str = "pico_graph_epoch";
+/// Seconds since the registry (process) started.
+pub const UPTIME_SECONDS: &str = "pico_uptime_seconds";
+
+// --- histograms ---------------------------------------------------------
+
+/// Query latency through the serving layer, per graph.
+pub const QUERY_SECONDS: &str = "pico_query_seconds";
+/// Queue wait: first pending submit until its flush started, per graph.
+pub const FLUSH_QUEUE_SECONDS: &str = "pico_flush_queue_seconds";
+/// Routing (owner-map growth + per-shard dispatch), per graph.
+pub const FLUSH_ROUTE_SECONDS: &str = "pico_flush_route_seconds";
+/// Per-shard apply of the routed batches, per graph.
+pub const FLUSH_APPLY_SECONDS: &str = "pico_flush_apply_seconds";
+/// The whole boundary-refinement exchange loop, per graph.
+pub const FLUSH_REFINE_SECONDS: &str = "pico_flush_refine_seconds";
+/// The per-shard refine commits, per graph.
+pub const FLUSH_COMMIT_SECONDS: &str = "pico_flush_commit_seconds";
+/// Snapshot assembly + epoch publish, per graph.
+pub const FLUSH_PUBLISH_SECONDS: &str = "pico_flush_publish_seconds";
+/// End-to-end flush latency, per graph.
+pub const FLUSH_TOTAL_SECONDS: &str = "pico_flush_total_seconds";
+/// Exchange rounds per refinement pass, per graph (a count, not time).
+pub const FLUSH_REFINE_ROUNDS: &str = "pico_flush_refine_rounds";
+/// Host-side `SHARDAPPLY` handler latency, per graph.
+pub const SHARD_APPLY_SECONDS: &str = "pico_shard_apply_seconds";
+/// Host-side `SHARDREFINE START|ROUND` handler latency, per graph.
+pub const SHARD_REFINE_ROUND_SECONDS: &str = "pico_shard_refine_round_seconds";
+/// Host-side `SHARDREFINE COMMIT` handler latency, per graph.
+pub const SHARD_COMMIT_SECONDS: &str = "pico_shard_commit_seconds";

@@ -1,0 +1,241 @@
+//! The metrics registry: named counters, gauges, and histograms with
+//! `{label="value"}` label sets, handed out as cheap `Arc` handles so
+//! hot paths pay one atomic op per event — never a map lookup.
+//!
+//! One process-wide registry ([`global`]) absorbs what used to be three
+//! disconnected telemetry islands (engine serve slots, transport
+//! counters, replica-sync stats); tests that need isolation construct
+//! their own [`Registry`].
+
+use super::hist::{HistSnapshot, Histogram};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Mirror an externally maintained monotonic total — for publishing
+    /// pre-existing atomics (the transport counters) at scrape time
+    /// without double-counting.
+    pub fn set_total(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// A last-write-wins instantaneous value.
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// One registered metric (the registry's storage side).
+#[derive(Clone)]
+enum Metric {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<Histogram>),
+}
+
+/// A point-in-time value in a registry [`Series`].
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Counter(u64),
+    Gauge(u64),
+    Histogram(HistSnapshot),
+}
+
+impl Value {
+    pub fn type_name(&self) -> &'static str {
+        match self {
+            Value::Counter(_) => "counter",
+            Value::Gauge(_) => "gauge",
+            Value::Histogram(_) => "histogram",
+        }
+    }
+}
+
+/// One exported series: a metric name, its label set, and its value.
+#[derive(Clone, Debug)]
+pub struct Series {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: Value,
+}
+
+struct Entry {
+    name: String,
+    labels: Vec<(String, String)>,
+    metric: Metric,
+}
+
+/// The registry proper. Series are keyed by `name{labels}` and kept in
+/// a `BTreeMap`, so expositions come out in one deterministic order.
+pub struct Registry {
+    start: Instant,
+    series: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl Default for Registry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Registry {
+    pub fn new() -> Self {
+        Self {
+            start: Instant::now(),
+            series: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Seconds since this registry was created (process start for the
+    /// global one) — the exposition's `pico_uptime_seconds`.
+    pub fn uptime_seconds(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+
+    fn key(name: &str, labels: &[(&str, &str)]) -> String {
+        let mut k = String::with_capacity(name.len() + 16 * labels.len());
+        k.push_str(name);
+        k.push('{');
+        for (i, (lk, lv)) in labels.iter().enumerate() {
+            if i > 0 {
+                k.push(',');
+            }
+            k.push_str(lk);
+            k.push('=');
+            k.push_str(lv);
+        }
+        k.push('}');
+        k
+    }
+
+    fn get_or_insert(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        make: impl FnOnce() -> Metric,
+    ) -> Metric {
+        let mut map = self.series.lock().unwrap();
+        let entry = map.entry(Self::key(name, labels)).or_insert_with(|| Entry {
+            name: name.to_string(),
+            labels: labels
+                .iter()
+                .map(|(k, v)| (k.to_string(), v.to_string()))
+                .collect(),
+            metric: make(),
+        });
+        entry.metric.clone()
+    }
+
+    /// The counter `name{labels}`, created on first use. Re-registering
+    /// an existing series with a different kind is a programmer error.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        match self.get_or_insert(name, labels, || Metric::Counter(Arc::new(Counter::default()))) {
+            Metric::Counter(c) => c,
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// The gauge `name{labels}`, created on first use.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        match self.get_or_insert(name, labels, || Metric::Gauge(Arc::new(Gauge::default()))) {
+            Metric::Gauge(g) => g,
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// The histogram `name{labels}`, created on first use.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Histogram> {
+        let make = || Metric::Histogram(Arc::new(Histogram::default()));
+        match self.get_or_insert(name, labels, make) {
+            Metric::Histogram(h) => h,
+            _ => panic!("metric {name} already registered with a different kind"),
+        }
+    }
+
+    /// Snapshot every registered series (histograms atomically — see
+    /// [`Histogram::snapshot`]), in deterministic key order.
+    pub fn snapshot(&self) -> Vec<Series> {
+        let map = self.series.lock().unwrap();
+        map.values()
+            .map(|e| Series {
+                name: e.name.clone(),
+                labels: e.labels.clone(),
+                value: match &e.metric {
+                    Metric::Counter(c) => Value::Counter(c.get()),
+                    Metric::Gauge(g) => Value::Gauge(g.get()),
+                    Metric::Histogram(h) => Value::Histogram(h.snapshot()),
+                },
+            })
+            .collect()
+    }
+}
+
+/// The process-wide registry every subsystem records into.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_are_shared_and_series_sorted() {
+        let r = Registry::new();
+        let a = r.counter("pico_test_total", &[("graph", "g1")]);
+        let b = r.counter("pico_test_total", &[("graph", "g1")]);
+        a.add(2);
+        b.inc();
+        assert_eq!(a.get(), 3, "same series, same atomic");
+        r.counter("pico_test_total", &[("graph", "g0")]).inc();
+        r.gauge("pico_test_gauge", &[]).set(7);
+        r.histogram("pico_test_seconds", &[]).record(5);
+        let snap = r.snapshot();
+        assert_eq!(snap.len(), 4);
+        // BTreeMap order: g0 before g1, gauge/histogram names sorted
+        assert_eq!(snap[0].labels, vec![("graph".to_string(), "g0".to_string())]);
+        assert_eq!(snap[0].value, Value::Counter(1));
+        assert_eq!(snap[1].value, Value::Counter(3));
+        match &snap[3].value {
+            Value::Histogram(h) => assert_eq!(h.count(), 1),
+            v => panic!("expected histogram, got {v:?}"),
+        }
+        assert!(r.uptime_seconds() >= 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "different kind")]
+    fn kind_mismatch_panics() {
+        let r = Registry::new();
+        r.counter("pico_x_total", &[]);
+        r.gauge("pico_x_total", &[]);
+    }
+}

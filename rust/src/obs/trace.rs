@@ -1,0 +1,361 @@
+//! Stage-level span tracing: a trace id minted per flush (and per slow
+//! query), stage spans recorded as the flush progresses, remote child
+//! spans stitched in from shard-host replies, and a bounded ring of
+//! recent span trees behind the `TRACES` verb.
+//!
+//! Two builder shapes:
+//!
+//! * [`FlushTrace`] — owned by one flush on the coordinator: top-level
+//!   stage spans (`queue`, `route`, `apply`, `refine`, `commit`,
+//!   `publish`) plus children nested under a named stage (per-round
+//!   spans, remote sub-spans).
+//! * [`TraceScope`] — the shared mailbox a [`crate::cluster::RemoteShard`]
+//!   records into while a flush is active: the active trace id travels
+//!   out on the shard verbs as a `trace=<hex>` head-line token, the
+//!   remote handler answers with its own `us=<micros>`, and the scope
+//!   turns that into a child span under the right stage. The flush lock
+//!   serializes flushes, so one scope per cluster is race-free.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
+
+/// How many recent traces the ring keeps.
+pub const TRACE_RING_CAP: usize = 64;
+
+/// Queries at or above this (µs) land in the trace ring; faster ones
+/// only feed the latency histograms (the ring would otherwise be all
+/// point queries and no flushes).
+pub const SLOW_QUERY_US: u64 = 10_000;
+
+/// Mint a fresh trace id: a counter seeded from the wall clock at first
+/// use, so ids from different hosts almost never collide.
+pub fn next_trace_id() -> u64 {
+    static NEXT: OnceLock<AtomicU64> = OnceLock::new();
+    let next = NEXT.get_or_init(|| {
+        let seed = SystemTime::now()
+            .duration_since(UNIX_EPOCH)
+            .map(|d| d.as_nanos() as u64)
+            .unwrap_or(1);
+        AtomicU64::new(seed | 1)
+    });
+    next.fetch_add(1, Ordering::Relaxed)
+}
+
+/// One timed stage, with offsets relative to its trace's start.
+#[derive(Clone, Debug)]
+pub struct Span {
+    pub name: String,
+    pub start_us: u64,
+    pub dur_us: u64,
+    /// The remote host that executed this span, when it crossed the wire.
+    pub remote: Option<String>,
+    pub children: Vec<Span>,
+}
+
+/// A finished span tree.
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub id: u64,
+    pub kind: &'static str,
+    pub graph: String,
+    pub total_us: u64,
+    pub spans: Vec<Span>,
+}
+
+impl Trace {
+    /// Render as indented text lines (the `TRACES` reply body).
+    pub fn render(&self) -> Vec<String> {
+        let mut lines = vec![format!(
+            "trace=0x{:x} kind={} graph={} total_us={}",
+            self.id, self.kind, self.graph, self.total_us
+        )];
+        for s in &self.spans {
+            render_span(s, 1, &mut lines);
+        }
+        lines
+    }
+}
+
+fn render_span(s: &Span, depth: usize, out: &mut Vec<String>) {
+    let indent = "  ".repeat(depth);
+    let remote = match &s.remote {
+        Some(addr) => format!(" remote={addr}"),
+        None => String::new(),
+    };
+    out.push(format!(
+        "{indent}{} start_us={} dur_us={}{remote}",
+        s.name, s.start_us, s.dur_us
+    ));
+    for c in &s.children {
+        render_span(c, depth + 1, out);
+    }
+}
+
+fn ring() -> &'static Mutex<VecDeque<Trace>> {
+    static RING: OnceLock<Mutex<VecDeque<Trace>>> = OnceLock::new();
+    RING.get_or_init(|| Mutex::new(VecDeque::with_capacity(TRACE_RING_CAP)))
+}
+
+/// Push a finished trace into the bounded ring (oldest evicted).
+pub fn record_trace(t: Trace) {
+    let mut r = ring().lock().unwrap();
+    if r.len() == TRACE_RING_CAP {
+        r.pop_front();
+    }
+    r.push_back(t);
+}
+
+/// The `n` most recent traces, newest first.
+pub fn recent_traces(n: usize) -> Vec<Trace> {
+    let r = ring().lock().unwrap();
+    r.iter().rev().take(n).cloned().collect()
+}
+
+/// Record a single-span query trace — only when it was slow enough to
+/// be worth a ring slot (see [`SLOW_QUERY_US`]).
+pub fn record_slow_query(graph: &str, verb: &str, dur: Duration) {
+    let dur_us = dur.as_micros().min(u64::MAX as u128) as u64;
+    if dur_us < SLOW_QUERY_US {
+        return;
+    }
+    record_trace(Trace {
+        id: next_trace_id(),
+        kind: "query",
+        graph: graph.to_string(),
+        total_us: dur_us,
+        spans: vec![Span {
+            name: verb.to_string(),
+            start_us: 0,
+            dur_us,
+            remote: None,
+            children: Vec::new(),
+        }],
+    });
+}
+
+/// The span-tree builder one flush owns.
+pub struct FlushTrace {
+    id: u64,
+    t0: Instant,
+    /// `(parent stage name, span)` — `None` parents are top-level
+    /// stages; named parents nest under the stage of that name at
+    /// [`FlushTrace::finish`] time.
+    entries: Mutex<Vec<(Option<String>, Span)>>,
+}
+
+impl FlushTrace {
+    pub fn new(id: u64) -> Self {
+        Self {
+            id,
+            t0: Instant::now(),
+            entries: Mutex::new(Vec::new()),
+        }
+    }
+
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn t0(&self) -> Instant {
+        self.t0
+    }
+
+    fn offset(&self, at: Instant) -> u64 {
+        at.saturating_duration_since(self.t0).as_micros() as u64
+    }
+
+    /// Record a top-level stage span.
+    pub fn stage(&self, name: &str, start: Instant, dur: Duration) {
+        let span = Span {
+            name: name.to_string(),
+            start_us: self.offset(start),
+            dur_us: dur.as_micros().min(u64::MAX as u128) as u64,
+            remote: None,
+            children: Vec::new(),
+        };
+        self.entries.lock().unwrap().push((None, span));
+    }
+
+    /// Record a child span to be nested under the stage named `stage`.
+    pub fn child(&self, stage: &str, span: Span) {
+        self.entries.lock().unwrap().push((Some(stage.to_string()), span));
+    }
+
+    /// Assemble the tree: children attach to their named stage (falling
+    /// back to top level if the stage never materialized), everything
+    /// sorts by start offset.
+    pub fn finish(self, kind: &'static str, graph: &str) -> Trace {
+        let total_us = self.t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        let entries = self.entries.into_inner().unwrap();
+        let mut spans: Vec<Span> = Vec::new();
+        let mut nested: Vec<(String, Span)> = Vec::new();
+        for (parent, span) in entries {
+            match parent {
+                None => spans.push(span),
+                Some(p) => nested.push((p, span)),
+            }
+        }
+        for (p, span) in nested {
+            match spans.iter_mut().find(|s| s.name == p) {
+                Some(stage) => stage.children.push(span),
+                None => spans.push(span),
+            }
+        }
+        spans.sort_by_key(|s| s.start_us);
+        for s in &mut spans {
+            s.children.sort_by_key(|c| c.start_us);
+        }
+        Trace {
+            id: self.id,
+            kind,
+            graph: graph.to_string(),
+            total_us,
+            spans,
+        }
+    }
+}
+
+/// The shared mailbox remote-shard backends record spans into while a
+/// flush is active (see the module docs for the wire protocol).
+#[derive(Default)]
+pub struct TraceScope {
+    /// The active trace id (0 = no flush in progress).
+    active: AtomicU64,
+    inner: Mutex<ScopeInner>,
+}
+
+#[derive(Default)]
+struct ScopeInner {
+    t0: Option<Instant>,
+    spans: Vec<(String, Span)>,
+}
+
+impl TraceScope {
+    /// Arm the scope for one flush.
+    pub fn begin(&self, id: u64, t0: Instant) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.t0 = Some(t0);
+        inner.spans.clear();
+        self.active.store(id, Ordering::Release);
+    }
+
+    /// The active trace id, if a flush is in progress.
+    pub fn active(&self) -> Option<u64> {
+        match self.active.load(Ordering::Acquire) {
+            0 => None,
+            id => Some(id),
+        }
+    }
+
+    /// Record a remote child span under `stage`. `dur_us` came back on
+    /// the wire; the start offset is reconstructed as now − duration.
+    pub fn record_remote(&self, stage: &str, name: String, addr: &str, dur_us: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(t0) = inner.t0 else { return };
+        let end_us = Instant::now().saturating_duration_since(t0).as_micros() as u64;
+        let span = Span {
+            name,
+            start_us: end_us.saturating_sub(dur_us),
+            dur_us,
+            remote: Some(addr.to_string()),
+            children: Vec::new(),
+        };
+        inner.spans.push((stage.to_string(), span));
+    }
+
+    /// Disarm and drain: the collected `(stage, span)` pairs, ready for
+    /// [`FlushTrace::child`].
+    pub fn end(&self) -> Vec<(String, Span)> {
+        self.active.store(0, Ordering::Release);
+        let mut inner = self.inner.lock().unwrap();
+        inner.t0 = None;
+        std::mem::take(&mut inner.spans)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_are_distinct() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert_ne!(a, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn finish_nests_children_under_their_stage() {
+        let ft = FlushTrace::new(7);
+        let t0 = ft.t0();
+        ft.stage("route", t0, Duration::from_micros(10));
+        ft.stage("apply", t0, Duration::from_micros(50));
+        ft.child(
+            "apply",
+            Span {
+                name: "apply shard=1".into(),
+                start_us: 5,
+                dur_us: 40,
+                remote: Some("10.0.0.7:7571".into()),
+                children: Vec::new(),
+            },
+        );
+        ft.child(
+            "missing-stage",
+            Span {
+                name: "orphan".into(),
+                start_us: 1,
+                dur_us: 1,
+                remote: None,
+                children: Vec::new(),
+            },
+        );
+        let t = ft.finish("flush", "g1");
+        assert_eq!(t.id, 7);
+        assert_eq!(t.spans.len(), 3, "two stages + the orphan fallback");
+        let apply = t.spans.iter().find(|s| s.name == "apply").unwrap();
+        assert_eq!(apply.children.len(), 1);
+        assert_eq!(apply.children[0].remote.as_deref(), Some("10.0.0.7:7571"));
+        let lines = t.render();
+        assert!(lines[0].starts_with("trace=0x7 kind=flush graph=g1"), "{}", lines[0]);
+        assert!(lines.iter().any(|l| l.contains("remote=10.0.0.7:7571")));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_newest_first() {
+        for i in 0..TRACE_RING_CAP + 5 {
+            record_trace(Trace {
+                id: 1_000_000 + i as u64,
+                kind: "flush",
+                graph: "ring-test".into(),
+                total_us: i as u64,
+                spans: Vec::new(),
+            });
+        }
+        // other tests in this binary may be recording concurrently:
+        // assert only on this test's own traces
+        let all = recent_traces(usize::MAX);
+        assert!(all.len() <= TRACE_RING_CAP);
+        let mine: Vec<&Trace> = all.iter().filter(|t| t.graph == "ring-test").collect();
+        assert!(mine.len() >= 2, "ring must retain recent traces");
+        assert!(mine[0].total_us > mine[1].total_us, "newest first");
+    }
+
+    #[test]
+    fn scope_collects_remote_spans_only_while_armed() {
+        let scope = TraceScope::default();
+        assert_eq!(scope.active(), None);
+        scope.record_remote("apply", "early".into(), "h:1", 5);
+        scope.begin(42, Instant::now());
+        assert_eq!(scope.active(), Some(42));
+        scope.record_remote("apply", "apply shard=1".into(), "h:1", 500);
+        let spans = scope.end();
+        assert_eq!(scope.active(), None);
+        assert_eq!(spans.len(), 1, "pre-arm span dropped at begin()");
+        assert_eq!(spans[0].0, "apply");
+        assert_eq!(spans[0].1.dur_us, 500);
+    }
+}

@@ -22,10 +22,11 @@ use super::index::{CoreIndex, CoreSnapshot};
 use crate::core::maintenance::EdgeEdit;
 use crate::core::traits::Decomposer;
 use crate::core::Hybrid;
+use crate::obs::{self, names};
 use crate::util::timer::Timer;
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Tuning for the batch pipeline.
 #[derive(Clone, Debug)]
@@ -169,6 +170,9 @@ pub struct EditQueue {
     index: Arc<CoreIndex>,
     cfg: BatchConfig,
     pending: Mutex<Vec<EdgeEdit>>,
+    /// When the oldest pending edit arrived — the flush's queue-wait
+    /// stage (`pico_flush_queue_seconds`) measures from here.
+    queued_since: Mutex<Option<Instant>>,
     /// Serialises whole flushes (drain *and* apply). Without it, a flush
     /// arriving while another one is mid-apply would find the queue empty
     /// and return the pre-batch snapshot — breaking the protocol's
@@ -182,6 +186,7 @@ impl EditQueue {
             index,
             cfg,
             pending: Mutex::new(Vec::new()),
+            queued_since: Mutex::new(None),
             flush_lock: Mutex::new(()),
         }
     }
@@ -197,6 +202,9 @@ impl EditQueue {
     /// Enqueue one edit; returns the pending count after the push.
     pub fn submit(&self, e: EdgeEdit) -> usize {
         let mut p = self.pending.lock().unwrap();
+        if p.is_empty() {
+            *self.queued_since.lock().unwrap() = Some(Instant::now());
+        }
         p.push(e);
         p.len()
     }
@@ -212,7 +220,11 @@ impl EditQueue {
     /// edit submitted before this call.
     pub fn flush(&self) -> BatchOutcome {
         let _in_flight = self.flush_lock.lock().unwrap();
-        let edits: Vec<EdgeEdit> = std::mem::take(&mut *self.pending.lock().unwrap());
+        let (edits, queued_at) = {
+            let mut p = self.pending.lock().unwrap();
+            let edits: Vec<EdgeEdit> = std::mem::take(&mut *p);
+            (edits, self.queued_since.lock().unwrap().take())
+        };
         if edits.is_empty() {
             return BatchOutcome {
                 snapshot: self.index.snapshot(),
@@ -224,8 +236,27 @@ impl EditQueue {
                 elapsed: Duration::ZERO,
             };
         }
-        apply_batch(&self.index, &edits, &self.cfg)
+        let queue_wait = queued_at.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+        let out = apply_batch(&self.index, &edits, &self.cfg);
+        record_flush_obs(self.index.name(), queue_wait, &out);
+        out
     }
+}
+
+/// Land one applied single-index batch in the observability registry:
+/// queue-wait / apply / total stage histograms plus the published-epoch
+/// gauge, all under the graph's label. The sharded and cluster flush
+/// paths record their richer stage set (route, refine, commit) in
+/// [`crate::shard`] and [`crate::cluster`].
+fn record_flush_obs(graph: &str, queue_wait: Duration, out: &BatchOutcome) {
+    let us = |d: Duration| d.as_micros().min(u64::MAX as u128) as u64;
+    let reg = obs::global();
+    let l: &[(&str, &str)] = &[("graph", graph)];
+    reg.histogram(names::FLUSH_QUEUE_SECONDS, l).record(us(queue_wait));
+    reg.histogram(names::FLUSH_APPLY_SECONDS, l).record(us(out.elapsed));
+    reg.histogram(names::FLUSH_TOTAL_SECONDS, l)
+        .record(us(queue_wait + out.elapsed));
+    reg.gauge(names::GRAPH_EPOCH, l).set(out.snapshot.epoch);
 }
 
 #[cfg(test)]

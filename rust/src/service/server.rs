@@ -35,6 +35,8 @@
 //! | `FLUSH` | `OK epoch=<e> submitted=<s> applied=<a> coalesced=<c> changed=<g> recomputed=<r> [shards=<n> rounds=<r> boundary=<b>] ms=<t>` |
 //! | `STATS` | `OK queries=<q> edits=<e> batches=<b> recomputes=<r> graphs=<g>` |
 //! | `METRICS` | `OK workers=<w> conn_cap=<c> accepted=<a> active=<n> queued=<q> rejected=<r> timed_out=<t> reclaimed=<i>` — transport counters, answered by [`crate::net::conn`] (`reclaimed` = idle connections closed while the pool sat at its cap) |
+//! | `METRICS PROM` / `METRICS JSON` | `OK metrics format=<f> lines=<n> bytes=<b>` + `\n`-joined exposition of the whole [`crate::obs`] registry (serve counters, flush-stage histograms, transport + sync series); `PROM` is the Prometheus text format `pico cluster status --metrics` scrapes and merges |
+//! | `TRACES [n]` | `OK traces n=<t> lines=<l>` + the `l` rendered span-tree lines of the `n` most recent flush/slow-query traces from the [`crate::obs::trace`] ring (default 5) |
 //! | `AUTH <token>` | `OK auth` / `ERR bad auth token` — unlocks the gated shard verbs when the server has a token configured (answered by [`crate::net::conn`], constant-time compare) |
 //! | `BINARY` | `OK binary proto=<id>` — switch this connection to binary framing (the id names the framing codec, [`crate::net::codec::FRAME_PROTO`]) |
 //! | `QUIT` | `OK bye` (connection closes) |
@@ -145,16 +147,16 @@ use super::index::{CoreIndex, CoreSnapshot};
 use super::queries::densest_core_view;
 use crate::cluster::{ClusterIndex, ShardHost};
 use crate::core::maintenance::EdgeEdit;
-use crate::engine::metrics::{Metrics, MetricsSnapshot};
 use crate::graph::CsrGraph;
 use crate::net::conn::Handler;
 use crate::net::{codec, NetConfig};
+use crate::obs::{self, names};
 use crate::shard::{snapshot as shard_snapshot, PartitionStrategy, ShardedIndex};
 use anyhow::Result;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 // The transport surface moved to `crate::net`; these re-exports keep
 // the long-standing `service::server::{...}` import paths working for
@@ -163,8 +165,41 @@ pub use crate::net::codec::{read_frame, write_frame, MAX_FRAME_BYTES, MAX_LINE_B
 pub use crate::net::conn::Session;
 pub use crate::net::pool::ServerHandle;
 
-/// Metric slots shared by pool workers (round-robin assignment).
-const METRIC_SLOTS: usize = 8;
+/// The read verbs whose latency lands in `pico_query_seconds` (and
+/// whose count feeds the query counters — serve-path accounting lives
+/// in the observability registry, [`crate::obs`], one series per
+/// graph).
+const QUERY_VERBS: &[&str] = &[
+    "EPOCH",
+    "CORENESS",
+    "DEGENERACY",
+    "MEMBERS",
+    "HISTO",
+    "DENSEST",
+    "SHARDS",
+    "SHARDINFO",
+    "SHARDCORE",
+    "SHARDHISTO",
+];
+
+/// Host-side stage histogram for a timed shard-mutation frame, if the
+/// verb is one of the flush stages a coordinator traces: `SHARDAPPLY`
+/// lands in `pico_shard_apply_seconds`, `SHARDREFINE COMMIT` in
+/// `pico_shard_commit_seconds`, and the other `SHARDREFINE` phases in
+/// `pico_shard_refine_round_seconds`. Read/ship verbs return `None`.
+fn shard_stage_histogram(verb: &str, first_arg: Option<&str>) -> Option<&'static str> {
+    match verb {
+        "SHARDAPPLY" => Some(names::SHARD_APPLY_SECONDS),
+        "SHARDREFINE" => {
+            if first_arg.is_some_and(|a| a.eq_ignore_ascii_case("COMMIT")) {
+                Some(names::SHARD_COMMIT_SECONDS)
+            } else {
+                Some(names::SHARD_REFINE_ROUND_SECONDS)
+            }
+        }
+        _ => None,
+    }
+}
 
 /// Reply cap for `MEMBERS` (a serving system never streams a million ids
 /// down one reply line; `count=` always carries the true size).
@@ -252,11 +287,64 @@ impl Backend {
     }
 }
 
+/// Per-graph observability handles ([`crate::obs`]), resolved once at
+/// install and carried alongside the backend in the hosted map — the
+/// request path pays atomic bumps, never a registry lookup.
+struct GraphObs {
+    queries: Arc<obs::Counter>,
+    edits: Arc<obs::Counter>,
+    batches: Arc<obs::Counter>,
+    recomputes: Arc<obs::Counter>,
+    query_seconds: Arc<obs::Histogram>,
+}
+
+impl GraphObs {
+    fn register(graph: &str) -> Arc<Self> {
+        let reg = obs::global();
+        let l: &[(&str, &str)] = &[("graph", graph)];
+        Arc::new(Self {
+            queries: reg.counter(names::SERVE_QUERIES, l),
+            edits: reg.counter(names::SERVE_EDITS, l),
+            batches: reg.counter(names::SERVE_BATCHES, l),
+            recomputes: reg.counter(names::SERVE_RECOMPUTES, l),
+            query_seconds: reg.histogram(names::QUERY_SECONDS, l),
+        })
+    }
+}
+
+/// A hosted graph slot: the backend plus its registry handles.
+#[derive(Clone)]
+struct Hosted {
+    backend: Backend,
+    obs: Arc<GraphObs>,
+}
+
+/// Service-local `STATS` totals. The canonical per-graph series live in
+/// the process-global observability registry; these four stay on the
+/// service so embedded services (tests host several per process) keep
+/// independent `STATS` readouts.
+#[derive(Default)]
+struct Totals {
+    queries: AtomicU64,
+    edits: AtomicU64,
+    batches: AtomicU64,
+    recomputes: AtomicU64,
+}
+
+/// Aggregated serve-path counters, as the `STATS` verb reports them.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub serve_queries: u64,
+    pub serve_edits: u64,
+    pub serve_batches: u64,
+    pub serve_recomputes: u64,
+}
+
 /// The serving core: named backends, request counters, batch policy.
 pub struct CoreService {
-    hosted: RwLock<HashMap<String, Backend>>,
+    hosted: RwLock<HashMap<String, Hosted>>,
     batch_cfg: BatchConfig,
-    metrics: Metrics,
+    totals: Totals,
     default_graph: Mutex<String>,
 }
 
@@ -265,13 +353,17 @@ impl CoreService {
         Self {
             hosted: RwLock::new(HashMap::new()),
             batch_cfg,
-            metrics: Metrics::new(METRIC_SLOTS, true),
+            totals: Totals::default(),
             default_graph: Mutex::new(String::new()),
         }
     }
 
     fn install(&self, name: &str, backend: Backend) {
-        self.hosted.write().unwrap().insert(name.to_string(), backend);
+        let slot = Hosted {
+            backend,
+            obs: GraphObs::register(name),
+        };
+        self.hosted.write().unwrap().insert(name.to_string(), slot);
         let mut d = self.default_graph.lock().unwrap();
         if d.is_empty() {
             *d = name.to_string();
@@ -282,12 +374,16 @@ impl CoreService {
     /// write lock*, so concurrent OPEN/RESTORE connections cannot race
     /// past the cap between a check and the insert.
     fn install_checked(&self, name: &str, backend: Backend) -> Result<(), String> {
+        let slot = Hosted {
+            backend,
+            obs: GraphObs::register(name),
+        };
         {
             let mut hosted = self.hosted.write().unwrap();
             if !hosted.contains_key(name) && hosted.len() >= MAX_HOSTED_GRAPHS {
                 return Err(format!("graph limit reached ({MAX_HOSTED_GRAPHS} hosted)"));
             }
-            hosted.insert(name.to_string(), backend);
+            hosted.insert(name.to_string(), slot);
         }
         let mut d = self.default_graph.lock().unwrap();
         if d.is_empty() {
@@ -350,7 +446,7 @@ impl CoreService {
             .read()
             .unwrap()
             .iter()
-            .map(|(k, v)| (k.clone(), v.clone()))
+            .map(|(k, v)| (k.clone(), v.backend.clone()))
             .collect();
         let mut out = Vec::new();
         for (name, backend) in hosted {
@@ -399,22 +495,35 @@ impl CoreService {
     }
 
     fn backend(&self, name: &str) -> Option<Backend> {
+        self.hosted.read().unwrap().get(name).map(|h| h.backend.clone())
+    }
+
+    fn hosted_of(&self, name: &str) -> Option<Hosted> {
         self.hosted.read().unwrap().get(name).cloned()
+    }
+
+    /// Count one served query against `graph` (frame-path verbs; the
+    /// line path counts in [`Self::handle_command`]).
+    fn count_query(&self, graph: &str) {
+        self.totals.queries.fetch_add(1, Ordering::Relaxed);
+        if let Some(h) = self.hosted_of(graph) {
+            h.obs.queries.inc();
+        }
     }
 
     /// The single-index backend of `name`, if it is one.
     pub fn index(&self, name: &str) -> Option<Arc<CoreIndex>> {
         match self.backend(name)? {
             Backend::Single { index, .. } => Some(index),
-            Backend::Sharded(_) => None,
+            _ => None,
         }
     }
 
     /// The sharded backend of `name`, if it is one.
     pub fn sharded(&self, name: &str) -> Option<Arc<ShardedIndex>> {
         match self.backend(name)? {
-            Backend::Single { .. } => None,
             Backend::Sharded(sh) => Some(sh),
+            _ => None,
         }
     }
 
@@ -422,7 +531,7 @@ impl CoreService {
     pub fn queue(&self, name: &str) -> Option<Arc<EditQueue>> {
         match self.backend(name)? {
             Backend::Single { queue, .. } => Some(queue),
-            Backend::Sharded(_) => None,
+            _ => None,
         }
     }
 
@@ -436,15 +545,42 @@ impl CoreService {
         self.hosted.read().unwrap().len()
     }
 
-    /// Aggregated serve-path counters.
-    pub fn stats(&self) -> MetricsSnapshot {
-        self.metrics.snapshot()
+    /// Aggregated serve-path counters (this service only; the per-graph
+    /// series live in [`crate::obs::global`]).
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            serve_queries: self.totals.queries.load(Ordering::Relaxed),
+            serve_edits: self.totals.edits.load(Ordering::Relaxed),
+            serve_batches: self.totals.batches.load(Ordering::Relaxed),
+            serve_recomputes: self.totals.recomputes.load(Ordering::Relaxed),
+        }
     }
 
     /// Execute one protocol line for a session on `graph`; returns the
-    /// reply line (without newline). `slot` picks the metrics slot.
+    /// reply line (without newline). Read verbs are timed into the
+    /// graph's `pico_query_seconds` histogram here (slow ones also land
+    /// in the trace ring), wrapping [`Self::dispatch_command`] so the
+    /// early returns inside the verb arms stay simple.
     pub fn handle_command(&self, session: &mut Session, line: &str, slot: usize) -> String {
-        let view = self.metrics.view(slot % METRIC_SLOTS);
+        let verb = line.split_whitespace().next().unwrap_or("");
+        if !QUERY_VERBS.iter().any(|q| verb.eq_ignore_ascii_case(q)) {
+            return self.dispatch_command(session, line, slot);
+        }
+        let t0 = Instant::now();
+        let reply = self.dispatch_command(session, line, slot);
+        if let Some(h) = self.hosted_of(&session.graph) {
+            let dur = t0.elapsed();
+            self.totals.queries.fetch_add(1, Ordering::Relaxed);
+            h.obs.queries.inc();
+            h.obs
+                .query_seconds
+                .record(dur.as_micros().min(u64::MAX as u128) as u64);
+            obs::record_slow_query(&session.graph, &verb.to_ascii_uppercase(), dur);
+        }
+        reply
+    }
+
+    fn dispatch_command(&self, session: &mut Session, line: &str, _slot: usize) -> String {
         let mut parts = line.split_whitespace();
         let Some(raw_verb) = parts.next() else {
             return "ERR empty command".into();
@@ -542,7 +678,7 @@ impl CoreService {
             "QUIT" => "OK bye".into(),
             // everything below operates on the session's current graph
             _ => {
-                let Some(backend) = self.backend(&session.graph) else {
+                let Some(Hosted { backend, obs: gobs }) = self.hosted_of(&session.graph) else {
                     return format!(
                         "ERR no graph selected (have: {})",
                         self.graph_names().join(" ")
@@ -550,13 +686,11 @@ impl CoreService {
                 };
                 match verb.as_str() {
                     "EPOCH" => {
-                        view.serve_queries(1);
                         // the snapshot's epoch, not the writer counter:
                         // the reply must name an epoch readers can get
                         format!("OK epoch={}", backend.snapshot().epoch)
                     }
                     "CORENESS" => {
-                        view.serve_queries(1);
                         let Some(Ok(v)) = args.first().map(|a| a.parse::<u32>()) else {
                             return "ERR usage: CORENESS <v>".into();
                         };
@@ -584,12 +718,10 @@ impl CoreService {
                         }
                     }
                     "DEGENERACY" => {
-                        view.serve_queries(1);
                         let s = backend.snapshot();
                         format!("OK degeneracy={} epoch={}", s.degeneracy(), s.epoch)
                     }
                     "MEMBERS" => {
-                        view.serve_queries(1);
                         let Some(Ok(k)) = args.first().map(|a| a.parse::<u32>()) else {
                             return "ERR usage: MEMBERS <k>".into();
                         };
@@ -613,7 +745,6 @@ impl CoreService {
                         )
                     }
                     "HISTO" => {
-                        view.serve_queries(1);
                         let s = backend.snapshot();
                         let cells: Vec<String> = s
                             .histogram()
@@ -624,7 +755,6 @@ impl CoreService {
                         format!("OK epoch={} histo={}", s.epoch, cells.join(","))
                     }
                     "DENSEST" => {
-                        view.serve_queries(1);
                         match backend.consistent_view() {
                             Ok((snap, g)) => {
                                 let d = densest_core_view(&snap, &g);
@@ -637,7 +767,6 @@ impl CoreService {
                         }
                     }
                     "SHARDS" => {
-                        view.serve_queries(1);
                         match &backend {
                             Backend::Single { .. } => "OK shards=1 strategy=single".into(),
                             Backend::ShardHost(h) => h.info(),
@@ -726,7 +855,8 @@ impl CoreService {
                                 "ERR edit queue full ({MAX_PENDING_EDITS} pending); FLUSH first"
                             );
                         }
-                        view.serve_edits(1);
+                        self.totals.edits.fetch_add(1, Ordering::Relaxed);
+                        gobs.edits.inc();
                         let edit = if verb == "INSERT" {
                             EdgeEdit::Insert(u, v)
                         } else {
@@ -735,23 +865,16 @@ impl CoreService {
                         format!("OK pending={}", backend.submit(edit))
                     }
                     "SHARDINFO" => match &backend {
-                        Backend::ShardHost(h) => {
-                            view.serve_queries(1);
-                            h.info()
-                        }
+                        Backend::ShardHost(h) => h.info(),
                         _ => format!("ERR '{}' is not a hosted shard", session.graph),
                     },
                     "SHARDCORE" => match &backend {
-                        Backend::ShardHost(h) => {
-                            view.serve_queries(1);
-                            h.core_line(&args)
-                        }
+                        Backend::ShardHost(h) => h.core_line(&args),
                         // a cluster coordinator knows the owner shard:
                         // redirect the probe to its host (the shared
                         // client follows one hop), or answer inline for
                         // in-coordinator shards
                         Backend::Cluster(c) => {
-                            view.serve_queries(1);
                             let Some(Ok(v)) = args.first().map(|a| a.parse::<u32>()) else {
                                 return "ERR usage: SHARDCORE <v>".into();
                             };
@@ -777,10 +900,7 @@ impl CoreService {
                         _ => format!("ERR '{}' is not a hosted shard", session.graph),
                     },
                     "SHARDHISTO" => match &backend {
-                        Backend::ShardHost(h) => {
-                            view.serve_queries(1);
-                            h.histo_line()
-                        }
+                        Backend::ShardHost(h) => h.histo_line(),
                         _ => format!("ERR '{}' is not a hosted shard", session.graph),
                     },
                     "FLUSH" => match &backend {
@@ -790,9 +910,12 @@ impl CoreService {
                         ),
                         Backend::Cluster(c) => match c.flush() {
                             Ok(out) => {
-                                view.serve_batches(1);
+                                self.totals.batches.fetch_add(1, Ordering::Relaxed);
+                                gobs.batches.inc();
                                 if out.recomputed_shards > 0 {
-                                    view.serve_recomputes(out.recomputed_shards as u64);
+                                    let n = out.recomputed_shards as u64;
+                                    self.totals.recomputes.fetch_add(n, Ordering::Relaxed);
+                                    gobs.recomputes.add(n);
                                 }
                                 // replicas are NOT synced here: the flush
                                 // only journals the epoch's deltas and
@@ -818,9 +941,11 @@ impl CoreService {
                         },
                         Backend::Single { queue, .. } => {
                             let out = queue.flush();
-                            view.serve_batches(1);
+                            self.totals.batches.fetch_add(1, Ordering::Relaxed);
+                            gobs.batches.inc();
                             if out.recomputed {
-                                view.serve_recomputes(1);
+                                self.totals.recomputes.fetch_add(1, Ordering::Relaxed);
+                                gobs.recomputes.inc();
                             }
                             format!(
                                 "OK epoch={} submitted={} applied={} coalesced={} changed={} recomputed={} ms={:.3}",
@@ -835,9 +960,12 @@ impl CoreService {
                         }
                         Backend::Sharded(sh) => {
                             let out = sh.flush();
-                            view.serve_batches(1);
+                            self.totals.batches.fetch_add(1, Ordering::Relaxed);
+                            gobs.batches.inc();
                             if out.recomputed_shards > 0 {
-                                view.serve_recomputes(out.recomputed_shards as u64);
+                                let n = out.recomputed_shards as u64;
+                                self.totals.recomputes.fetch_add(n, Ordering::Relaxed);
+                                gobs.recomputes.add(n);
                             }
                             format!(
                                 "OK epoch={} submitted={} applied={} coalesced={} changed={} recomputed={} shards={} rounds={} boundary={} ms={:.3}",
@@ -863,18 +991,28 @@ impl CoreService {
     /// Execute one binary-protocol frame; returns the reply frame body.
     /// `SNAPSHOT`/`RESTORE` carry raw bytes after the first line; every
     /// other verb delegates to [`Self::handle_command`].
+    ///
+    /// A trailing `trace=<hex>` head-line token (attached by a cluster
+    /// coordinator's flush — see [`crate::obs::trace`]) is stripped
+    /// before dispatch; the handler is timed, the mutation-path shard
+    /// verbs land in the host-side `pico_shard_*_seconds` histograms
+    /// under the hosted shard's graph name, and `OK` replies are tagged
+    /// `trace=<hex> us=<micros>` so the coordinator can stitch this
+    /// host's time into its flush span tree.
     pub fn handle_frame(&self, session: &mut Session, body: &[u8], slot: usize) -> Vec<u8> {
         let (head, payload) = match body.iter().position(|&b| b == b'\n') {
             Some(i) => (&body[..i], &body[i + 1..]),
             None => (body, &[][..]),
         };
-        let Ok(line) = std::str::from_utf8(head) else {
+        let Ok(raw_line) = std::str::from_utf8(head) else {
             return b"ERR command line not UTF-8".to_vec();
         };
+        let (line, trace) = codec::extract_trace(raw_line);
         let mut parts = line.split_whitespace();
         let verb = parts.next().unwrap_or("").to_ascii_uppercase();
         let args: Vec<&str> = parts.collect();
-        match verb.as_str() {
+        let t0 = Instant::now();
+        let mut reply = match verb.as_str() {
             "SNAPSHOT" => self.frame_snapshot(session, &args, slot),
             "RESTORE" => self.frame_restore(session, &args, payload, slot),
             "SHARDHOST" => self.frame_shardhost(session, &args, payload, slot),
@@ -884,17 +1022,29 @@ impl CoreService {
             "SHARDDELTA" => self.frame_shard(session, slot, |h| h.delta_frame(&args, payload)),
             "SHARDMEMBERS" => self.frame_shard(session, slot, |h| h.members_frame(&args)),
             _ => self.handle_command(session, line, slot).into_bytes(),
+        };
+        let dur_us = t0.elapsed().as_micros().min(u64::MAX as u128) as u64;
+        if let Some(hist) = shard_stage_histogram(&verb, args.first().copied()) {
+            obs::global()
+                .histogram(hist, &[("graph", &session.graph)])
+                .record(dur_us);
         }
+        if let Some(id) = trace {
+            if reply.starts_with(b"OK") {
+                codec::tag_reply_trace(&mut reply, id, dur_us);
+            }
+        }
+        reply
     }
 
     /// Dispatch a shard-interface frame to the session's hosted shard.
     fn frame_shard(
         &self,
         session: &Session,
-        slot: usize,
+        _slot: usize,
         f: impl FnOnce(&ShardHost) -> Vec<u8>,
     ) -> Vec<u8> {
-        self.metrics.view(slot % METRIC_SLOTS).serve_queries(1);
+        self.count_query(&session.graph);
         match self.backend(&session.graph) {
             Some(Backend::ShardHost(h)) => f(&h),
             Some(_) => format!("ERR '{}' is not a hosted shard", session.graph).into_bytes(),
@@ -913,9 +1063,9 @@ impl CoreService {
         session: &mut Session,
         args: &[&str],
         payload: &[u8],
-        slot: usize,
+        _slot: usize,
     ) -> Vec<u8> {
-        self.metrics.view(slot % METRIC_SLOTS).serve_queries(1);
+        self.count_query(&session.graph);
         let Some(&name) = args.first() else {
             return b"ERR usage: SHARDHOST <name> (manifest bytes follow the command line)"
                 .to_vec();
@@ -946,8 +1096,8 @@ impl CoreService {
         }
     }
 
-    fn frame_snapshot(&self, session: &mut Session, args: &[&str], slot: usize) -> Vec<u8> {
-        self.metrics.view(slot % METRIC_SLOTS).serve_queries(1);
+    fn frame_snapshot(&self, session: &mut Session, args: &[&str], _slot: usize) -> Vec<u8> {
+        self.count_query(&session.graph);
         let Some(backend) = self.backend(&session.graph) else {
             return format!(
                 "ERR no graph selected (have: {})",
@@ -1017,9 +1167,9 @@ impl CoreService {
         session: &mut Session,
         args: &[&str],
         payload: &[u8],
-        slot: usize,
+        _slot: usize,
     ) -> Vec<u8> {
-        self.metrics.view(slot % METRIC_SLOTS).serve_queries(1);
+        self.count_query(&session.graph);
         let Some(&name) = args.first() else {
             return b"ERR usage: RESTORE <name> (snapshot bytes follow the command line)".to_vec();
         };
@@ -1462,6 +1612,23 @@ mod tests {
         assert!(String::from_utf8(svc.handle_frame(&mut s, b"SHARDSNAP", 0))
             .unwrap()
             .starts_with("ERR 'g1' is not"));
+    }
+
+    #[test]
+    fn frame_trace_token_is_echoed_with_host_time() {
+        let (svc, mut s) = service_with_g1();
+        svc.handle_command(&mut s, "BINARY", 0);
+        // a traced frame answers with the same id plus the host's time
+        let reply = svc.handle_frame(&mut s, b"PING trace=ab12", 0);
+        let head = std::str::from_utf8(&reply).unwrap();
+        assert!(head.starts_with("OK pong trace=ab12 us="), "{head}");
+        assert!(codec::reply_us(head).is_some(), "{head}");
+        // untraced frames answer byte-identically to before
+        assert_eq!(svc.handle_frame(&mut s, b"PING", 0), b"OK pong");
+        // ERR replies are never tagged — the coordinator only stitches
+        // successful stages
+        let err = svc.handle_frame(&mut s, b"NOPE trace=ab12", 0);
+        assert!(!String::from_utf8(err).unwrap().contains("us="));
     }
 
     #[test]

@@ -46,6 +46,6 @@ pub use backend::{
 pub use partition::{
     assign_owners, hash_owner, partition, PartitionStrategy, Partitioning, ShardPlan,
 };
-pub use router::{refine, route, MergeStats, RefineOutcome, RoutePlan};
+pub use router::{refine, refine_traced, route, MergeStats, RefineOutcome, RoutePlan};
 pub use sharded::{ShardView, ShardedIndex, ShardedOutcome};
 pub use snapshot::{decode, encode, encode_index, IndexSnapshot};

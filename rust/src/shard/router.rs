@@ -22,8 +22,10 @@ use super::backend::{RefineRound, RoutedBatch, ShardBackend};
 use super::partition::hash_owner;
 use crate::core::maintenance::EdgeEdit;
 use crate::graph::VertexId;
+use crate::obs::{FlushTrace, Span};
 use anyhow::{bail, Result};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// What one boundary-refinement (merge) pass did.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -34,6 +36,11 @@ pub struct MergeStats {
     pub sweeps: usize,
     /// Ghost-copy refreshes that actually changed a value.
     pub boundary_updates: u64,
+    /// Estimate bytes exchanged across shard boundaries: every shipped
+    /// ghost update and every returned owned-estimate delta is one
+    /// `(vertex, estimate)` pair, 8 bytes on the wire. Feeds the
+    /// `pico_refine_boundary_bytes_total` counter.
+    pub boundary_bytes: u64,
 }
 
 /// Everything one refinement pass computes.
@@ -49,6 +56,11 @@ pub struct RefineOutcome {
     /// each shard's `refine_commit` changed. The cluster router journals
     /// these for delta replica catch-up.
     pub diffs: Vec<Vec<(VertexId, u32)>>,
+    /// Time in the estimate-exchange loop (init + rounds) — the flush's
+    /// `refine` stage.
+    pub refine_elapsed: std::time::Duration,
+    /// Time in the per-shard commit pass — the flush's `commit` stage.
+    pub commit_elapsed: std::time::Duration,
 }
 
 /// One flush's dispatch: per-shard routed batches plus accounting.
@@ -151,6 +163,26 @@ pub fn refine(
     cluster_epoch: u64,
     threads: usize,
 ) -> Result<RefineOutcome> {
+    refine_traced(backends, n, slack, cluster_epoch, threads, None)
+}
+
+/// [`refine`] with an optional flush trace: each exchange round lands as
+/// a child span under the `refine` stage and each shard's commit under
+/// the `commit` stage, so `TRACES` shows where a slow merge spent its
+/// rounds. Remote shards additionally report their own handler time
+/// through the trace-id wire field (see [`crate::obs::trace`]).
+pub fn refine_traced(
+    backends: &[Arc<dyn ShardBackend>],
+    n: usize,
+    slack: Option<u32>,
+    cluster_epoch: u64,
+    threads: usize,
+    trace: Option<&FlushTrace>,
+) -> Result<RefineOutcome> {
+    let offset_of = |ft: &FlushTrace, at: Instant| {
+        at.saturating_duration_since(ft.t0()).as_micros() as u64
+    };
+    let refine_start = Instant::now();
     let mut mailbox = vec![0u32; n];
     let mut stats = MergeStats::default();
     let mut arcs = 0u64;
@@ -173,6 +205,7 @@ pub fn refine(
     let mut changed = vec![true; n];
     loop {
         stats.rounds += 1;
+        let round_start = Instant::now();
         let updates: Vec<Vec<(VertexId, u32)>> = ghost_lists
             .iter()
             .map(|gl| {
@@ -182,6 +215,9 @@ pub fn refine(
                     .collect()
             })
             .collect();
+        for u in &updates {
+            stats.boundary_bytes += 8 * u.len() as u64;
+        }
         let replies = round_all(backends, &updates, threads);
         for c in changed.iter_mut() {
             *c = false;
@@ -191,6 +227,7 @@ pub fn refine(
             let r = reply?;
             stats.sweeps += r.sweeps;
             stats.boundary_updates += r.ghost_updates;
+            stats.boundary_bytes += 8 * r.changed.len() as u64;
             for (v, e) in r.changed {
                 let Some(slot) = mailbox.get_mut(v as usize) else {
                     bail!("shard {} refined vertex {v} outside 0..{n}", backends[i].id());
@@ -205,13 +242,47 @@ pub fn refine(
                 }
             }
         }
+        if let Some(ft) = trace {
+            ft.child(
+                "refine",
+                Span {
+                    name: format!("round {}", stats.rounds),
+                    start_us: offset_of(ft, round_start),
+                    dur_us: round_start.elapsed().as_micros() as u64,
+                    remote: None,
+                    children: Vec::new(),
+                },
+            );
+        }
         if !any {
             break;
         }
     }
+    let refine_elapsed = refine_start.elapsed();
+    if let Some(ft) = trace {
+        ft.stage("refine", refine_start, refine_elapsed);
+    }
+    let commit_all = Instant::now();
     let mut diffs = Vec::with_capacity(backends.len());
     for b in backends {
+        let commit_start = Instant::now();
         diffs.push(b.refine_commit(cluster_epoch)?);
+        if let Some(ft) = trace {
+            ft.child(
+                "commit",
+                Span {
+                    name: format!("commit shard={}", b.id()),
+                    start_us: offset_of(ft, commit_start),
+                    dur_us: commit_start.elapsed().as_micros() as u64,
+                    remote: None,
+                    children: Vec::new(),
+                },
+            );
+        }
+    }
+    let commit_elapsed = commit_all.elapsed();
+    if let Some(ft) = trace {
+        ft.stage("commit", commit_all, commit_elapsed);
     }
     Ok(RefineOutcome {
         core: mailbox,
@@ -219,6 +290,8 @@ pub fn refine(
         num_edges: arcs / 2,
         boundary_edges: boundary_arcs / 2,
         diffs,
+        refine_elapsed,
+        commit_elapsed,
     })
 }
 
@@ -258,12 +331,34 @@ mod tests {
             assert_eq!(cold.core, want, "cold, {threads} threads");
             assert_eq!(cold.num_edges, g.num_edges());
             assert!(cold.stats.rounds >= 1 && cold.stats.sweeps >= 4);
+            // round 1 ships every ghost its owner's estimate: a 4-way
+            // hash partition of an ER graph always crosses boundaries
+            assert!(cold.stats.boundary_bytes > 0);
             // warm restart from the committed pass: slack 0, same answer
             let warm = refine(&bs, g.num_vertices(), Some(0), 1, threads).unwrap();
             assert_eq!(warm.core, want, "warm, {threads} threads");
             // warm start should not sweep harder than the cold pass
             assert!(warm.stats.sweeps <= cold.stats.sweeps);
         }
+    }
+
+    #[test]
+    fn traced_refine_records_round_and_commit_spans() {
+        let g = gen::erdos_renyi(60, 180, 7);
+        let bs = backends(&g, 2);
+        let ft = FlushTrace::new(0x51);
+        let out = refine_traced(&bs, g.num_vertices(), None, 0, 1, Some(&ft)).unwrap();
+        assert_eq!(out.core, bz_coreness(&g));
+        let t = ft.finish("flush", "t");
+        // per-round spans nest under the refine stage, per-shard commits
+        // under the commit stage
+        let refine_stage = t.spans.iter().find(|s| s.name == "refine").unwrap();
+        assert!(!refine_stage.children.is_empty(), "round spans under refine");
+        assert_eq!(refine_stage.children[0].name, "round 1");
+        let commit_stage = t.spans.iter().find(|s| s.name == "commit").unwrap();
+        assert_eq!(commit_stage.children.len(), 2, "one commit span per shard");
+        let lines = t.render();
+        assert!(lines.iter().any(|l| l.trim_start().starts_with("commit shard=0")), "{lines:?}");
     }
 
     #[test]

@@ -35,15 +35,16 @@
 
 use super::backend::{LocalShard, ShardBackend};
 use super::partition::{partition, PartitionStrategy};
-use super::router::{refine, route, MergeStats, RefineOutcome};
+use super::router::{refine, refine_traced, route, MergeStats, RefineOutcome};
 use crate::core::maintenance::EdgeEdit;
 use crate::graph::{CsrGraph, GraphBuilder, VertexId};
+use crate::obs::{self, FlushStages, FlushTrace, Span};
 use crate::service::batch::{coalesce, BatchConfig};
 use crate::service::index::{CoreIndex, CoreSnapshot};
 use crate::util::timer::Timer;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// One shard's published slice of the merged decomposition.
 #[derive(Clone, Debug)]
@@ -118,6 +119,9 @@ pub struct ShardedIndex {
     /// Per-epoch assembled-global-CSR cache (structure queries).
     graph_cache: Mutex<Option<(u64, Arc<CsrGraph>)>>,
     pending: Mutex<Vec<EdgeEdit>>,
+    /// When the oldest pending edit arrived (the flush's queue-wait
+    /// stage, like `EditQueue`'s).
+    queued_since: Mutex<Option<Instant>>,
     /// Serialises whole flushes (same contract as `EditQueue`).
     flush_lock: Mutex<()>,
 }
@@ -159,6 +163,7 @@ impl ShardedIndex {
             epoch: AtomicU64::new(0),
             graph_cache: Mutex::new(None),
             pending: Mutex::new(Vec::new()),
+            queued_since: Mutex::new(None),
             flush_lock: Mutex::new(()),
         }
     }
@@ -283,6 +288,9 @@ impl ShardedIndex {
     /// Enqueue one edit; returns the pending count after the push.
     pub fn submit(&self, e: EdgeEdit) -> usize {
         let mut p = self.pending.lock().unwrap();
+        if p.is_empty() {
+            *self.queued_since.lock().unwrap() = Some(Instant::now());
+        }
         p.push(e);
         p.len()
     }
@@ -294,10 +302,16 @@ impl ShardedIndex {
     /// Drain pending edits, route them to their owner shards, apply each
     /// shard's batch through the incremental-vs-recompute pipeline, then
     /// refine boundary estimates (warm-started from the previous epoch)
-    /// and publish one merged epoch.
+    /// and publish one merged epoch. Each stage lands in the graph's
+    /// `pico_flush_*` histograms and the whole flush in the trace ring
+    /// (`TRACES`).
     pub fn flush(&self) -> ShardedOutcome {
         let _in_flight = self.flush_lock.lock().unwrap();
-        let edits: Vec<EdgeEdit> = std::mem::take(&mut *self.pending.lock().unwrap());
+        let (edits, queued_at) = {
+            let mut p = self.pending.lock().unwrap();
+            let edits: Vec<EdgeEdit> = std::mem::take(&mut *p);
+            (edits, self.queued_since.lock().unwrap().take())
+        };
         if edits.is_empty() {
             return ShardedOutcome {
                 snapshot: self.snapshot(),
@@ -311,41 +325,89 @@ impl ShardedIndex {
                 elapsed: Duration::ZERO,
             };
         }
+        let ft = FlushTrace::new(obs::next_trace_id());
+        let queue_wait = queued_at.map(|t| t.elapsed()).unwrap_or(Duration::ZERO);
+        if let Some(t) = queued_at {
+            // started before the trace: the offset saturates to 0, which
+            // is exactly where the queue-wait stage belongs
+            ft.stage("queue", t, queue_wait);
+        }
         let timer = Timer::start();
         let batch = coalesce(&edits);
         let applied = batch.len();
         let mut owner = self.owner.lock().unwrap();
+        let route_start = Instant::now();
         let plan = route(&mut owner, self.num_shards, &batch);
+        let route_elapsed = route_start.elapsed();
+        ft.stage("route", route_start, route_elapsed);
+        let apply_start = Instant::now();
         let mut changed = 0usize;
         let mut recomputed_shards = 0usize;
         for (s, backend) in self.backends.iter().enumerate() {
             if !plan.touched[s] {
                 continue;
             }
+            let shard_start = Instant::now();
             let out = backend
                 .apply(&plan.per_shard[s])
                 .expect("local shard apply cannot fail");
+            ft.child(
+                "apply",
+                Span {
+                    name: format!("apply shard={s}"),
+                    start_us: shard_start.saturating_duration_since(ft.t0()).as_micros() as u64,
+                    dur_us: shard_start.elapsed().as_micros() as u64,
+                    remote: None,
+                    children: Vec::new(),
+                },
+            );
             changed += out.changed;
             if out.recomputed {
                 recomputed_shards += 1;
             }
         }
+        let apply_elapsed = apply_start.elapsed();
+        ft.stage("apply", apply_start, apply_elapsed);
         let epoch = self.epoch.load(Ordering::SeqCst) + 1;
         let merge_timer = Timer::start();
-        let refined = refine(
+        let refined = refine_traced(
             &self.backends,
             owner.len(),
             Some(plan.inserts),
             epoch,
             self.cfg.threads,
+            Some(&ft),
         )
         .expect("local refinement cannot fail");
         let merge_elapsed = merge_timer.elapsed();
         let merge = refined.stats;
+        let (refine_elapsed, commit_elapsed) = (refined.refine_elapsed, refined.commit_elapsed);
+        let publish_start = Instant::now();
         let published = Self::build_published(&owner, &self.shards, epoch, refined);
         let snapshot = published.global.clone();
         *self.published.write().unwrap() = Arc::new(published);
         self.epoch.store(epoch, Ordering::SeqCst);
+        let publish_elapsed = publish_start.elapsed();
+        ft.stage("publish", publish_start, publish_elapsed);
+
+        let elapsed = timer.elapsed();
+        obs::record_flush_stages(
+            &self.name,
+            &FlushStages {
+                queue: queue_wait,
+                route: route_elapsed,
+                apply: apply_elapsed,
+                refine: refine_elapsed,
+                commit: commit_elapsed,
+                publish: publish_elapsed,
+                total: queue_wait + elapsed,
+                refine_rounds: merge.rounds as u64,
+                boundary_updates: merge.boundary_updates,
+                boundary_bytes: merge.boundary_bytes,
+                epoch,
+            },
+        );
+        obs::record_trace(ft.finish("flush", &self.name));
 
         ShardedOutcome {
             snapshot,
@@ -356,7 +418,7 @@ impl ShardedIndex {
             recomputed_shards,
             merge,
             merge_elapsed,
-            elapsed: timer.elapsed(),
+            elapsed,
         }
     }
 
@@ -374,6 +436,9 @@ impl ShardedIndex {
             boundary_edges,
             // in-process shards have no replicas to journal for
             diffs: _,
+            // stage timings were pulled out by the caller already
+            refine_elapsed: _,
+            commit_elapsed: _,
         } = refined;
         let k_max = core.iter().copied().max().unwrap_or(0);
         // per-shard owned lists in ascending global order — the same
@@ -584,6 +649,32 @@ mod tests {
         assert!(m.sweeps >= 4, "every shard sweeps at least once");
         assert!(sh.boundary_edges() > 0, "hash partition of ER must cut edges");
         assert_eq!(sh.shard_epochs(), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn flush_records_stage_trace_and_histograms() {
+        // unique graph name: the trace ring and registry are process-wide
+        // and other tests in this binary flush concurrently
+        let g = examples::g1();
+        let sh = ShardedIndex::new("sharded-trace-test", &g, 2, PartitionStrategy::Hash, cfg());
+        sh.submit(EdgeEdit::Insert(2, 5));
+        sh.flush();
+        let t = obs::recent_traces(usize::MAX)
+            .into_iter()
+            .find(|t| t.graph == "sharded-trace-test")
+            .expect("flush trace recorded");
+        assert_eq!(t.kind, "flush");
+        let stages: Vec<&str> = t.spans.iter().map(|s| s.name.as_str()).collect();
+        for want in ["queue", "route", "apply", "refine", "commit", "publish"] {
+            assert!(stages.contains(&want), "missing stage {want} in {stages:?}");
+        }
+        let snap = obs::global().snapshot();
+        assert!(snap.iter().any(|s| {
+            s.name == obs::names::FLUSH_REFINE_SECONDS
+                && s.labels
+                    .iter()
+                    .any(|(k, v)| k == "graph" && v == "sharded-trace-test")
+        }));
     }
 
     #[test]

@@ -752,3 +752,90 @@ fn cluster_coordinator_redirects_shard_probes_one_hop() {
     assert!(reply.starts_with("ERR vertex"), "{reply}");
     front_handle.stop();
 }
+
+#[test]
+fn flush_through_a_remote_shard_stitches_a_cross_host_trace() {
+    use pico::net::client::Client;
+    use pico::obs::recent_traces;
+    use pico::obs::trace::TRACE_RING_CAP;
+
+    let g = gen::barabasi_albert(80, 3, 41);
+    let (_shard_svc, _shard_handle, shard_addr) = spawn_server();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = trace-e2e\nshards = 2\n\
+         [shard.0]\nprimary = local\n\
+         [shard.1]\nprimary = {shard_addr}\n"
+    ))
+    .unwrap();
+    let cl = Arc::new(ClusterIndex::build(&g, &topo, cfg()).unwrap());
+    cl.submit(EdgeEdit::Insert(0, 1));
+    cl.submit(EdgeEdit::Insert(2, 50));
+    cl.flush().unwrap();
+
+    // the coordinator's ring holds the flush as one span tree: stage
+    // spans measured on the coordinator, host-side spans stitched in
+    // from the shard host's `us=` reply fields, all under one trace id
+    let trace = recent_traces(TRACE_RING_CAP)
+        .into_iter()
+        .find(|t| t.graph == "trace-e2e" && t.kind == "flush")
+        .expect("the flush must land in the trace ring");
+    assert_ne!(trace.id, 0);
+    for stage in ["queue", "route", "apply", "refine", "commit", "publish"] {
+        assert!(
+            trace.spans.iter().any(|s| s.name == stage),
+            "missing stage '{stage}' in {:?}",
+            trace.spans.iter().map(|s| &s.name).collect::<Vec<_>>()
+        );
+    }
+    let remote_spans: Vec<_> = trace
+        .spans
+        .iter()
+        .flat_map(|s| s.children.iter())
+        .filter(|c| c.remote.is_some())
+        .collect();
+    assert!(
+        !remote_spans.is_empty(),
+        "host-side spans must be stitched under the coordinator's trace"
+    );
+    for c in &remote_spans {
+        assert_eq!(c.remote.as_deref(), Some(shard_addr.as_str()), "{c:?}");
+    }
+
+    // front the cluster as `pico serve --cluster` would, and read the
+    // same stitched trace plus the stage histograms over the wire
+    let front = Arc::new(CoreService::new(cfg()));
+    front.open_cluster("trace-e2e", cl.clone());
+    let front_handle = serve(front, "127.0.0.1:0").expect("bind");
+    let mut client = Client::connect(&front_handle.addr().to_string()).unwrap();
+    let (head, lines) = client
+        .send_multiline(&format!("TRACES {TRACE_RING_CAP}"))
+        .unwrap();
+    assert!(head.starts_with("OK traces"), "{head}");
+    let header = format!("trace=0x{:x} kind=flush graph=trace-e2e", trace.id);
+    assert!(
+        lines.iter().any(|l| l.starts_with(&header)),
+        "TRACES must carry the stitched flush ({header}): {head}"
+    );
+    assert!(
+        lines
+            .iter()
+            .any(|l| l.contains(&format!("remote={shard_addr}"))),
+        "the rendered tree must show the remote host's span"
+    );
+
+    let (mhead, mlines) = client.send_multiline("METRICS PROM").unwrap();
+    assert!(mhead.starts_with("OK metrics"), "{mhead}");
+    let body = mlines.join("\n");
+    for name in [
+        "pico_flush_refine_seconds",
+        "pico_flush_commit_seconds",
+        "pico_flush_total_seconds",
+    ] {
+        assert!(
+            body.contains(&format!("{name}_count{{graph=\"trace-e2e\"}}")),
+            "missing {name} for the cluster graph in the exposition"
+        );
+    }
+    client.quit();
+    front_handle.stop();
+}
