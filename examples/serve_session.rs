@@ -9,8 +9,9 @@
 //! The protocol's *transport* — line/frame codec and every wire magic
 //! (`rust/src/net/codec.rs`), the per-connection session state machine
 //! with `AUTH` gating and `METRICS` (`net/conn.rs`), the bounded
-//! worker-pool server (`net/pool.rs`), and the one shared client
-//! (`net/client.rs`) — lives in the `net` module. Verb *semantics* live
+//! worker-pool server (`net/pool.rs`) with its readiness event thread
+//! (`net/poller.rs`), and the one shared client (`net/client.rs`) —
+//! lives in the `net` module. Verb *semantics* live
 //! in `service::server`, which also carries the authoritative protocol
 //! table (CI greps the dispatch tables in `net/conn.rs` against it, so
 //! the table cannot drift).
@@ -19,10 +20,25 @@
 //!
 //! * `--workers N` — pool threads multiplexing all connections
 //!   (default `min(cores, 16)`): connections are queue entries, not
-//!   threads.
+//!   threads. A worker only ever touches a connection whose socket
+//!   the readiness poller (`net/poller.rs`) reported readable,
+//!   writable, or past a deadline — an *idle* connection costs one
+//!   slot in a single `poll(2)` set and zero worker time, so holding
+//!   tens of thousands of mostly-idle clients leaves the hot path's
+//!   qps flat (the `serve_throughput` bench's idle-fleet section
+//!   measures exactly this).
 //! * `--max-conns N` — hard connection cap (default 1024); accept
 //!   #cap+1 is answered `ERR server at connection capacity (...)` and
-//!   closed.
+//!   closed. The reject line is written best-effort with a short
+//!   bounded deadline, so a rejected client that never reads cannot
+//!   block the accept thread.
+//! * Replies are staged in a bounded per-connection outbound buffer
+//!   and flushed by non-blocking writes as the socket turns writable.
+//!   Past the buffer's high-water mark the server stops *reading*
+//!   that connection (pipelined requests queue in the kernel, not in
+//!   server memory), and a peer that stops draining its replies for a
+//!   full stall window is cut off and counted in `write_stalled` — a
+//!   non-reading client can never pin a worker or wedge a drain.
 //! * `PICO_AUTH_TOKEN` env (or `auth_token` in the cluster topology) —
 //!   gates the state-mutating shard verbs (`SHARDHOST`, `SHARDAPPLY`,
 //!   `SHARDREFINE`, `SHARDSNAP`, `SHARDDELTA`) behind an
@@ -30,10 +46,11 @@
 //!   and the cluster router send it automatically when configured.
 //! * `METRICS` (any session) — transport counters:
 //!   `OK workers= conn_cap= accepted= active= queued= rejected=
-//!   timed_out= reclaimed=` (`rejected` = refused over the cap,
-//!   `timed_out` = slow-loris requests cut off mid-read, `reclaimed` =
-//!   idle connections closed to free slots while the pool sat at its
-//!   cap).
+//!   timed_out= write_stalled= reclaimed=` (`rejected` = refused over
+//!   the cap, `timed_out` = slow-loris requests cut off mid-read,
+//!   `write_stalled` = peers cut off for not draining their replies,
+//!   `reclaimed` = idle connections closed to free slots while the
+//!   pool sat at its cap).
 //! * `METRICS PROM` / `METRICS JSON`, `TRACES [n]` — the [`pico::obs`]
 //!   registry: per-graph serve counters, query-latency and per-stage
 //!   flush histograms, and the recent-flush trace ring (span trees with

@@ -1,10 +1,13 @@
 //! Serving-layer benchmark: concurrent read throughput under batched
 //! updates, batched-update latency (p50/p99), the incremental-vs-
 //! recompute crossover that calibrates `BatchConfig::recompute_fraction`,
-//! and a connection-churn section over the bounded `net::pool`
-//! transport (accept→first-reply latency + sustained qps at rising
-//! concurrent-client counts — the capacity claim of the worker-pool
-//! refactor, recorded in the CI `BENCH_*.json` artifact).
+//! and two connection-churn sections over the bounded `net::pool`
+//! transport: accept→first-reply latency + sustained qps at rising
+//! concurrent-client counts (the capacity claim of the worker-pool
+//! refactor), and sustained qps against a growing fleet of *idle*
+//! parked connections (the capacity claim of the readiness poller —
+//! an idle socket costs one `poll(2)` slot, not a worker). Both are
+//! recorded in the CI `BENCH_*.json` artifact.
 //!
 //! The crossover table is the serving analog of the paper's Table VII
 //! peel-vs-index2core crossover: below it, per-edit subcore maintenance
@@ -344,6 +347,140 @@ fn bench_connection_churn(g: &CsrGraph) -> Vec<(&'static str, f64)> {
     json
 }
 
+/// Part 3b — idle-fleet churn: the readiness poller's capacity claim.
+/// A fleet of N connections goes idle (one `PING` round-trip each,
+/// then silence) while 8 hammer clients drive `CORENESS` round-trips
+/// for a fixed window. Sustained qps must stay flat as N grows 1k →
+/// 10k (100k un-quick): a parked connection costs one slot in the
+/// poller's `poll(2)` set and zero worker time, so the hammers never
+/// queue behind the idle horde. Both ends of every idle connection
+/// live in this process (~2 fds each), so the fd rlimit is raised
+/// up-front and the fleet degrades — with a log line and an honest
+/// `*_clients` json key — to whatever the limit affords.
+fn bench_idle_churn(g: &CsrGraph) -> Vec<(&'static str, f64)> {
+    use pico::net::{raise_nofile_limit, NetConfig};
+    use pico::service::{serve_with, CoreService};
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    use std::time::Duration;
+
+    const HAMMERS: usize = 8;
+    // (idle count, qps key, held-clients key): static keys for the CI
+    // json artifact — the bench smoke asserts the quick-mode qps keys
+    let plans: &[(usize, &'static str, &'static str)] = if quick_bench() {
+        &[
+            (1_000, "churn_idle1k_qps", "churn_idle1k_clients"),
+            (10_000, "churn_idle10k_qps", "churn_idle10k_clients"),
+        ]
+    } else {
+        &[
+            (1_000, "churn_idle1k_qps", "churn_idle1k_clients"),
+            (10_000, "churn_idle10k_qps", "churn_idle10k_clients"),
+            (100_000, "churn_idle100k_qps", "churn_idle100k_clients"),
+        ]
+    };
+    let window = if quick_bench() {
+        Duration::from_millis(300)
+    } else {
+        Duration::from_secs(2)
+    };
+    let max_idle = plans.iter().map(|p| p.0).max().unwrap();
+    let limit = raise_nofile_limit((2 * max_idle + 1024) as u64);
+    let affordable = if limit == 0 {
+        max_idle // no rlimit probe on this platform; let dial errors surface
+    } else {
+        (limit.saturating_sub(1024) / 2) as usize
+    };
+
+    let svc = Arc::new(CoreService::new(BatchConfig::default()));
+    svc.open("bench", g);
+    let net = NetConfig {
+        max_connections: max_idle + HAMMERS + 64,
+        ..Default::default()
+    };
+    let handle = serve_with(svc, "127.0.0.1:0", net).expect("bind idle-churn server");
+    let addr = handle.addr();
+    let n = g.num_vertices() as u32;
+
+    println!("idle-fleet churn ({HAMMERS} hammer clients over the readiness poller):");
+    println!("{:>10}  {:>10}  {:>12}", "idle", "held", "qps");
+    let mut json = Vec::new();
+    let mut fleet: Vec<(TcpStream, BufReader<TcpStream>)> = Vec::new();
+    for &(want_idle, qps_key, clients_key) in plans {
+        let target = want_idle.min(affordable);
+        if target < want_idle {
+            println!("  (fd limit {limit}: holding {target} of {want_idle} idle clients)");
+        }
+        // grow the fleet, in chunks small enough to stay inside the
+        // listener backlog: dial + PING a chunk, then read every reply
+        // (the reply proves the server accepted and parked the socket)
+        while fleet.len() < target {
+            let chunk = (target - fleet.len()).min(128);
+            let mut fresh = Vec::with_capacity(chunk);
+            for _ in 0..chunk {
+                let stream = TcpStream::connect(addr).expect("idle dial");
+                let mut w = stream.try_clone().unwrap();
+                writeln!(w, "PING").unwrap();
+                w.flush().unwrap();
+                fresh.push((w, BufReader::new(stream)));
+            }
+            for (w, mut r) in fresh {
+                let mut line = String::new();
+                r.read_line(&mut line).expect("idle PING reply");
+                assert_eq!(line.trim_end(), "OK pong");
+                fleet.push((w, r));
+            }
+        }
+
+        let queries = Arc::new(AtomicU64::new(0));
+        let stop = Arc::new(AtomicBool::new(false));
+        let mut joins = Vec::with_capacity(HAMMERS);
+        let wall = Timer::start();
+        for c in 0..HAMMERS {
+            let queries = queries.clone();
+            let stop = stop.clone();
+            joins.push(std::thread::spawn(move || {
+                let stream = TcpStream::connect(addr).expect("hammer dial");
+                let mut w = stream.try_clone().unwrap();
+                let mut r = BufReader::new(stream);
+                let mut line = String::new();
+                let mut rng = Rng::new(0x1D7E + c as u64);
+                let mut local = 0u64;
+                while !stop.load(Ordering::Relaxed) {
+                    line.clear();
+                    writeln!(w, "CORENESS {}", rng.below(n as u64)).unwrap();
+                    w.flush().unwrap();
+                    r.read_line(&mut line).unwrap();
+                    assert!(line.starts_with("OK core="), "{line}");
+                    local += 1;
+                }
+                queries.fetch_add(local, Ordering::Relaxed);
+                let _ = writeln!(w, "QUIT");
+            }));
+        }
+        std::thread::sleep(window);
+        stop.store(true, Ordering::Relaxed);
+        let wall_s = wall.elapsed().as_secs_f64();
+        for j in joins {
+            j.join().expect("hammer client");
+        }
+        let qps = queries.load(Ordering::Relaxed) as f64 / wall_s;
+        println!(
+            "{:>10}  {:>10}  {:>12}",
+            want_idle,
+            fleet.len(),
+            fmt::si(qps as u64)
+        );
+        json.push((qps_key, qps));
+        json.push((clients_key, fleet.len() as f64));
+    }
+    // dropping the fleet closes every idle socket; the server reaps them
+    drop(fleet);
+    handle.stop();
+    println!();
+    json
+}
+
 /// Part 4 — registry hot-path overhead: ns per counter bump and per
 /// histogram record, and the share of the sustained served query rate
 /// that cost amounts to (the acceptance bar is ≤ 2%).
@@ -411,6 +548,7 @@ fn main() {
     );
     let mut json = bench_concurrent_serving(&g);
     json.extend(bench_connection_churn(&g));
+    json.extend(bench_idle_churn(&g));
     let served_qps = json
         .iter()
         .rev()

@@ -30,6 +30,18 @@ use std::time::Duration;
 /// fail over quickly, and a CLI probe must not hang.
 pub const CONNECT_TIMEOUT: Duration = Duration::from_secs(2);
 
+/// Dial attempts one logical [`FrameClient`] connect gets before the
+/// error surfaces. A remote shard host mid-restart answers
+/// `ECONNREFUSED` for a few tens of milliseconds — without a retry,
+/// the first probe after every host restart fails spuriously.
+const CONNECT_ATTEMPTS: u32 = 3;
+
+/// Pause before dial attempt `n` (linear: 25ms, 50ms). Deliberately
+/// small and bounded: anything down for longer than this should
+/// surface as an error to the caller's own failover policy, not hide
+/// inside the transport.
+const CONNECT_BACKOFF: Duration = Duration::from_millis(25);
+
 /// `key=value` token lookup in a reply head line.
 pub fn field<'a>(head: &'a str, key: &str) -> Result<&'a str> {
     head.split_whitespace()
@@ -254,9 +266,11 @@ struct PinnedConn {
 /// A connection that dies between calls is re-dialed once — but a lost
 /// reply is replayed only through [`FrameClient::call_idempotent`];
 /// verbs that mutate remote state go through [`FrameClient::call_once`]
-/// and surface the error instead. The client never retries on a
-/// *fresh* connection — if a just-dialed socket fails, the host is down
-/// and the caller needs to know now.
+/// and surface the error instead. Dialing itself gets a small bounded
+/// backoff (a restarting host refuses connections for a few tens of
+/// milliseconds), but a *request* that fails on a just-dialed socket
+/// is never retried — the host is down and the caller needs to know
+/// now.
 pub struct FrameClient {
     addr: String,
     graph: String,
@@ -290,7 +304,26 @@ impl FrameClient {
         &self.graph
     }
 
+    /// Dial with a small bounded backoff ([`CONNECT_ATTEMPTS`] tries,
+    /// [`CONNECT_BACKOFF`] apart): a host mid-restart gets a moment to
+    /// finish binding before the error surfaces. The whole handshake
+    /// (dial, `BINARY` upgrade, `AUTH`) is retried — none of it sends
+    /// application state, so replaying it is always safe.
     fn connect(&self) -> Result<PinnedConn> {
+        let mut last_err = None;
+        for attempt in 0..CONNECT_ATTEMPTS {
+            if attempt > 0 {
+                std::thread::sleep(CONNECT_BACKOFF * attempt);
+            }
+            match self.connect_once() {
+                Ok(conn) => return Ok(conn),
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(last_err.expect("at least one connect attempt"))
+    }
+
+    fn connect_once(&self) -> Result<PinnedConn> {
         let mut client =
             Client::connect(&self.addr).with_context(|| format!("dialing {}", self.addr))?;
         client.upgrade_binary()?;

@@ -45,6 +45,11 @@ pub const MAX_LINE_BYTES: usize = 4096;
 /// graphs with ample headroom.
 pub const MAX_FRAME_BYTES: usize = 64 << 20;
 
+/// Size of the length prefix in front of every binary frame — shared
+/// with the resumable frame reader in [`crate::net::conn`], which
+/// reassembles the header across non-blocking reads.
+pub const FRAME_HEADER_BYTES: usize = 4;
+
 /// Write one length-prefixed frame — the binary protocol's only framing
 /// primitive, shared by the server, every client, and the tests.
 /// Bodies above `u32::MAX` cannot be length-prefixed and error out
@@ -65,7 +70,7 @@ pub fn write_frame(w: &mut impl Write, body: &[u8]) -> std::io::Result<()> {
 /// `ErrorKind::InvalidData` when the declared length exceeds `max`
 /// (nothing past the header is consumed in that case).
 pub fn read_frame(reader: &mut impl Read, max: usize) -> std::io::Result<Option<Vec<u8>>> {
-    let mut header = [0u8; 4];
+    let mut header = [0u8; FRAME_HEADER_BYTES];
     match reader.read_exact(&mut header) {
         Ok(()) => {}
         Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),

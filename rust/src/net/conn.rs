@@ -17,18 +17,33 @@
 //!
 //! # Read discipline (slow-loris protection)
 //!
-//! Reads never pin a worker. A half-received request is *resumable
-//! state on the connection* (the partial line / frame buffer lives in
-//! the [`Connection`], not on the worker's stack), so a slow sender is
-//! yielded back to the run queue like an idle one and costs the pool
-//! nothing but its memory. What a slow sender cannot do is hold a
-//! request open forever: a request that stops making progress (no bytes
-//! for [`ConnConfig::stall_timeout`]) is answered with a structured
-//! `ERR` and the connection is closed, counted in
+//! Reads never pin a worker. The socket is permanently non-blocking; a
+//! half-received request is *resumable state on the connection* (the
+//! partial line / frame buffer lives in the [`Connection`], not on the
+//! worker's stack), so a slow sender is parked with the readiness
+//! poller ([`crate::net::poller`]) and costs the pool nothing but its
+//! memory until bytes actually arrive. What a slow sender cannot do is
+//! hold a request open forever: a request that stops making progress
+//! (no bytes for [`ConnConfig::stall_timeout`]) is answered with a
+//! structured `ERR` and the connection is closed, counted in
 //! [`TransportStats::timed_out`]. Draining is honoured at request
 //! boundaries only — an in-flight request keeps being served across
 //! slices until it completes and is answered in full; a half-read frame
 //! is never dropped.
+//!
+//! # Write discipline (backpressure)
+//!
+//! Writes never pin a worker either. Replies are *staged* on the
+//! connection's bounded outbound buffer ([`OutBuf`], internal) and
+//! flushed with non-blocking writes, driven by writability events from
+//! the poller. A peer that reads slowly accumulates staged bytes up to
+//! [`ConnConfig::out_hwm`], at which point the connection stops
+//! *reading* (explicit backpressure — no new requests are consumed
+//! until the peer drains replies); a peer that stops reading entirely
+//! is cut off once the staged output makes no progress for a full
+//! [`ConnConfig::stall_timeout`], counted in
+//! [`TransportStats::write_stalled`]. Per-connection memory is thereby
+//! bounded by the high-water mark plus one in-flight reply.
 
 use super::codec::{self, MAX_FRAME_BYTES, MAX_LINE_BYTES};
 use std::io::{BufRead, BufReader, ErrorKind, Read, Write};
@@ -42,12 +57,6 @@ use std::time::{Duration, Instant};
 /// pipelining thousands of commands must not starve the other
 /// connections sharing its worker.
 pub const MAX_REQUESTS_PER_SLICE: usize = 32;
-
-/// Socket read timeout while the pool is oversubscribed (more live
-/// connections than workers): long enough to actually sleep in the
-/// kernel, short enough that a worker skims past an idle connection
-/// instead of pinning a ready one behind a full poll interval.
-const QUICK_POLL: Duration = Duration::from_millis(2);
 
 /// Every line-protocol verb this layer dispatches (transport-owned or
 /// delegated to the [`Handler`]). CI greps this table against the
@@ -140,11 +149,15 @@ pub trait Handler: Send + Sync + 'static {
 /// Transport knobs shared by every connection of one server.
 #[derive(Clone, Debug)]
 pub struct ConnConfig {
-    /// Socket read timeout — the granularity at which an idle,
-    /// fully-subscribed pool notices new bytes and a drain.
+    /// Upper bound on the readiness thread's poll tick — how stale the
+    /// deadline sweep (stall, write-stall, at-cap idle reclaim, drain)
+    /// can get. Readable/writable sockets wake the poller immediately
+    /// regardless of this.
     pub poll_timeout: Duration,
-    /// Longest a started request may go without delivering a byte
-    /// before the connection is timed out (slow-loris bound).
+    /// Longest a started request may go without delivering a byte —
+    /// and, symmetrically, the longest staged output may go without
+    /// the peer accepting a byte — before the connection is cut off
+    /// (slow-loris bound, both directions).
     pub stall_timeout: Duration,
     /// Once the pool is at its connection cap (and only then), idle
     /// connections that have not completed a request for this long are
@@ -153,6 +166,13 @@ pub struct ConnConfig {
     /// permanent. Off the cap, idle connections live forever (sticky
     /// cluster clients depend on that).
     pub idle_reclaim: Duration,
+    /// High-water mark on a connection's staged outbound bytes: while
+    /// more than this is waiting to flush, the connection stops
+    /// *reading* (backpressure) until the peer drains its replies.
+    /// Per-connection memory is bounded by this plus one in-flight
+    /// reply (a single reply — e.g. a snapshot frame — may itself
+    /// exceed the mark; it is staged whole, then gates further reads).
+    pub out_hwm: usize,
     /// When set, the shard verbs in [`AUTH_VERBS`] require a matching
     /// `AUTH <token>` preamble on the connection first.
     pub auth_token: Option<String>,
@@ -164,6 +184,7 @@ impl Default for ConnConfig {
             poll_timeout: Duration::from_millis(100),
             stall_timeout: Duration::from_secs(30),
             idle_reclaim: Duration::from_secs(60),
+            out_hwm: 256 << 10,
             auth_token: None,
         }
     }
@@ -179,6 +200,9 @@ pub struct TransportStats {
     pub rejected: AtomicU64,
     /// Connections closed for stalling mid-request (slow-loris).
     pub timed_out: AtomicU64,
+    /// Connections cut off because the peer stopped draining staged
+    /// replies for a full stall window (write-side slow-loris).
+    pub write_stalled: AtomicU64,
     /// Idle connections reclaimed while the pool sat at its cap.
     pub reclaimed: AtomicU64,
     /// Live connections (queued or being served).
@@ -204,6 +228,8 @@ impl TransportStats {
             .set_total(self.rejected.load(Ordering::Relaxed));
         reg.counter(names::NET_TIMED_OUT, &[])
             .set_total(self.timed_out.load(Ordering::Relaxed));
+        reg.counter(names::NET_WRITE_STALLED, &[])
+            .set_total(self.write_stalled.load(Ordering::Relaxed));
         reg.counter(names::NET_RECLAIMED, &[])
             .set_total(self.reclaimed.load(Ordering::Relaxed));
         reg.gauge(names::NET_ACTIVE, &[])
@@ -219,7 +245,7 @@ impl TransportStats {
     /// The `METRICS` reply line.
     pub fn metrics_line(&self) -> String {
         format!(
-            "OK workers={} conn_cap={} accepted={} active={} queued={} rejected={} timed_out={} reclaimed={}",
+            "OK workers={} conn_cap={} accepted={} active={} queued={} rejected={} timed_out={} write_stalled={} reclaimed={}",
             self.workers.load(Ordering::Relaxed),
             self.max_connections.load(Ordering::Relaxed),
             self.accepted.load(Ordering::Relaxed),
@@ -227,6 +253,7 @@ impl TransportStats {
             self.queued.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
             self.timed_out.load(Ordering::Relaxed),
+            self.write_stalled.load(Ordering::Relaxed),
             self.reclaimed.load(Ordering::Relaxed),
         )
     }
@@ -273,13 +300,20 @@ pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
 /// Why a [`Connection::serve_slice`] returned.
 #[derive(Debug, PartialEq, Eq)]
 pub enum Slice {
-    /// Idle, mid-request without new bytes, or out of slice budget —
-    /// requeue and serve again later.
+    /// Out of slice budget with the connection still runnable —
+    /// requeue directly (fairness, not idleness).
     Yield,
+    /// Nothing to do until the socket turns readable — or writable,
+    /// with staged output pending — hand to the readiness poller.
+    Park,
     /// Peer closed, `QUIT`, a fatal protocol error, or drained — drop.
     Closed,
     /// Stalled mid-request past the stall timeout — drop and count.
     TimedOut,
+    /// The peer stopped accepting staged replies for a full stall
+    /// window — drop and count ([`TransportStats::write_stalled`]).
+    /// No goodbye is flushed: the peer provably is not reading.
+    WriteStalled,
     /// Idle past [`ConnConfig::idle_reclaim`] while the pool sat at its
     /// connection cap — drop and count, freeing the slot.
     Reclaimed,
@@ -324,7 +358,7 @@ enum Partial {
 }
 
 struct FramePartial {
-    header: [u8; 4],
+    header: [u8; codec::FRAME_HEADER_BYTES],
     hfilled: usize,
     /// Allocated once the header completes.
     body: Option<Vec<u8>>,
@@ -334,7 +368,7 @@ struct FramePartial {
 impl FramePartial {
     fn fresh() -> Self {
         Self {
-            header: [0u8; 4],
+            header: [0u8; codec::FRAME_HEADER_BYTES],
             hfilled: 0,
             body: None,
             bfilled: 0,
@@ -342,11 +376,86 @@ impl FramePartial {
     }
 }
 
-/// One live connection: socket, buffered reader, session, and the
-/// resumable read state of the in-flight request.
+/// The bounded staging buffer for one connection's outbound bytes.
+/// Replies are staged here and flushed with non-blocking writes — a
+/// worker never blocks in `write(2)` on a peer that stopped reading.
+struct OutBuf {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already written to the socket.
+    pos: usize,
+    /// Last time the socket accepted a byte (write-stall clock; reset
+    /// when staging into an empty buffer).
+    last_progress: Instant,
+}
+
+impl OutBuf {
+    fn new() -> Self {
+        Self {
+            buf: Vec::new(),
+            pos: 0,
+            last_progress: Instant::now(),
+        }
+    }
+
+    /// Bytes staged but not yet accepted by the socket.
+    fn pending(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Write as much staged output as the socket takes right now.
+    /// `WouldBlock` is not an error here (the poller's writability
+    /// event resumes the flush); `Err` means the peer is gone.
+    fn flush_to(&mut self, w: &mut impl Write) -> std::io::Result<()> {
+        while self.pending() > 0 {
+            match w.write(&self.buf[self.pos..]) {
+                Ok(0) => return Err(std::io::Error::from(ErrorKind::WriteZero)),
+                Ok(n) => {
+                    self.pos += n;
+                    self.last_progress = Instant::now();
+                }
+                Err(e) if e.kind() == ErrorKind::WouldBlock => break,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if self.pending() == 0 {
+            self.buf.clear();
+            self.pos = 0;
+        } else if self.pos >= 64 << 10 {
+            // keep the resident tail small while a slow peer drains
+            self.buf.drain(..self.pos);
+            self.pos = 0;
+        }
+        Ok(())
+    }
+}
+
+impl Write for OutBuf {
+    /// Staging is infallible — bounding happens at the read side
+    /// (backpressure over [`ConnConfig::out_hwm`]) and the write-stall
+    /// cutoff, never by failing a reply mid-format.
+    fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+        if self.pending() == 0 {
+            self.buf.clear();
+            self.pos = 0;
+            self.last_progress = Instant::now();
+        }
+        self.buf.extend_from_slice(data);
+        Ok(data.len())
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+/// One live connection: socket, buffered reader, staged outbound
+/// bytes, session, and the resumable read state of the in-flight
+/// request.
 pub struct Connection {
     reader: BufReader<TcpStream>,
     writer: TcpStream,
+    out: OutBuf,
     session: Session,
     slot: usize,
     partial: Partial,
@@ -354,66 +463,53 @@ pub struct Connection {
     last_progress: Instant,
     /// Last time a request completed (idle-reclaim clock).
     last_active: Instant,
-    /// The read timeout currently set on the socket (tracked to avoid
-    /// a redundant syscall per slice).
-    poll: Duration,
 }
 
 impl Connection {
-    /// Wrap an accepted stream. The socket is switched to blocking mode
-    /// with `poll` as its read timeout (accept listeners are
-    /// non-blocking and inheritance is platform-dependent).
-    pub fn new(
-        stream: TcpStream,
-        default_graph: String,
-        slot: usize,
-        poll: Duration,
-    ) -> std::io::Result<Self> {
-        stream.set_nonblocking(false)?;
-        stream.set_read_timeout(Some(poll))?;
+    /// Wrap an accepted stream. The socket goes (and stays)
+    /// non-blocking: reads return `WouldBlock` instead of waiting, and
+    /// the readiness poller decides when the connection runs again.
+    pub fn new(stream: TcpStream, default_graph: String, slot: usize) -> std::io::Result<Self> {
+        stream.set_nonblocking(true)?;
         let writer = stream.try_clone()?;
         Ok(Self {
             reader: BufReader::new(stream),
             writer,
+            out: OutBuf::new(),
             session: Session::new(default_graph),
             slot,
             partial: Partial::None,
             last_progress: Instant::now(),
             last_active: Instant::now(),
-            poll,
         })
     }
 
     /// Serve up to [`MAX_REQUESTS_PER_SLICE`] requests, then yield.
-    /// `draining` is honoured at request boundaries only. With
-    /// `oversubscribed` (more live connections than pool workers), the
-    /// read poll drops to [`QUICK_POLL`] so a worker skims past
-    /// idle/slow connections instead of making ready ones wait a full
-    /// poll interval behind each.
+    /// `draining` is honoured at request boundaries only. The write
+    /// side runs first: staged output is flushed, a peer that stopped
+    /// accepting bytes for a full stall window is cut off
+    /// ([`Slice::WriteStalled`]), and a connection over its outbound
+    /// high-water mark parks without reading (backpressure).
     pub fn serve_slice(
         &mut self,
         handler: &dyn Handler,
         cfg: &ConnConfig,
         stats: &TransportStats,
         draining: &AtomicBool,
-        oversubscribed: bool,
         at_capacity: bool,
     ) -> Slice {
-        let want = if oversubscribed {
-            QUICK_POLL.min(cfg.poll_timeout)
-        } else {
-            cfg.poll_timeout
-        };
-        if want != self.poll && self.reader.get_ref().set_read_timeout(Some(want)).is_ok() {
-            self.poll = want;
+        if self.out.flush_to(&mut self.writer).is_err() {
+            return Slice::Closed;
         }
-        for served in 0..MAX_REQUESTS_PER_SLICE {
-            // only block on the socket for the first request of a
-            // slice; afterwards keep going just while data is already
-            // buffered, so one chatty client cannot pin its worker
-            if served > 0 && self.reader.buffer().is_empty() {
-                return Slice::Yield;
+        if self.out.pending() > 0 {
+            if self.out.last_progress.elapsed() >= cfg.stall_timeout {
+                return Slice::WriteStalled;
             }
+            if self.out.pending() > cfg.out_hwm {
+                return Slice::Park;
+            }
+        }
+        for _served in 0..MAX_REQUESTS_PER_SLICE {
             let step = if self.session.binary {
                 match self.read_frame_step(cfg.stall_timeout) {
                     Ok(s) => s.map(Req::Frame),
@@ -431,8 +527,21 @@ impl Connection {
                         return Slice::Closed;
                     }
                     self.last_active = Instant::now();
+                    if self.out.flush_to(&mut self.writer).is_err() {
+                        return Slice::Closed;
+                    }
+                    if self.out.pending() > cfg.out_hwm {
+                        // backpressure: no read-ahead for a peer that
+                        // is not draining its replies
+                        return Slice::Park;
+                    }
                 }
                 ReadStep::Idle => {
+                    if self.out.pending() > 0 {
+                        // boundary with staged output: park on
+                        // writability and finish the flush first
+                        return Slice::Park;
+                    }
                     if draining.load(Ordering::SeqCst) {
                         return Slice::Closed;
                     }
@@ -441,14 +550,16 @@ impl Connection {
                     // must not lock new clients out forever); off the
                     // cap, idle connections live indefinitely
                     if at_capacity && self.last_active.elapsed() >= cfg.idle_reclaim {
-                        self.send_err("ERR connection reclaimed (server at capacity, idle too long)");
+                        self.send_err(
+                            "ERR connection reclaimed (server at capacity, idle too long)",
+                        );
                         return Slice::Reclaimed;
                     }
-                    return Slice::Yield;
+                    return Slice::Park;
                 }
-                // mid-request: requeue with the partial state kept —
+                // mid-request: park with the partial state kept —
                 // drain waits for the boundary, the stall clock runs
-                ReadStep::Pending => return Slice::Yield,
+                ReadStep::Pending => return Slice::Park,
                 ReadStep::Closed => return Slice::Closed,
             }
             if draining.load(Ordering::SeqCst) {
@@ -458,14 +569,110 @@ impl Connection {
         Slice::Yield
     }
 
-    /// Best-effort structured `ERR` in whichever framing the session
+    /// Whether the connection sits at a request boundary (no partial
+    /// request buffered).
+    pub(crate) fn at_boundary(&self) -> bool {
+        matches!(self.partial, Partial::None)
+    }
+
+    /// A drain can close this connection as-is: request boundary and
+    /// nothing left to flush.
+    pub(crate) fn drain_closable(&self) -> bool {
+        self.at_boundary() && self.out.pending() == 0
+    }
+
+    /// The readiness the poller should watch, as `(read, write)`:
+    /// write interest while staged output is pending, read interest
+    /// unless backpressure (staged output over the high-water mark)
+    /// says the peer has to drain first.
+    pub(crate) fn poll_interest(&self, cfg: &ConnConfig) -> (bool, bool) {
+        let pending = self.out.pending();
+        (pending <= cfg.out_hwm, pending > 0)
+    }
+
+    /// When the poller must hand this connection back to a worker even
+    /// without socket readiness: read-stall, write-stall, or (at the
+    /// connection cap) idle reclaim. `None` parks indefinitely.
+    pub(crate) fn next_deadline(&self, cfg: &ConnConfig, at_capacity: bool) -> Option<Instant> {
+        let mut due: Option<Instant> = None;
+        let mut fold = |d: Instant| due = Some(due.map_or(d, |cur: Instant| cur.min(d)));
+        if !self.at_boundary() {
+            fold(self.last_progress + cfg.stall_timeout);
+        }
+        if self.out.pending() > 0 {
+            fold(self.out.last_progress + cfg.stall_timeout);
+        }
+        if at_capacity && self.drain_closable() {
+            fold(self.last_active + cfg.idle_reclaim);
+        }
+        due
+    }
+
+    /// The socket fd the poller watches.
+    #[cfg(unix)]
+    pub(crate) fn fd(&self) -> std::os::unix::io::RawFd {
+        use std::os::unix::io::AsRawFd;
+        self.writer.as_raw_fd()
+    }
+
+    /// Wait up to `timeout` for this socket to match the connection's
+    /// current interest — the worker "linger" that keeps a chatty
+    /// request/reply client off the poller's O(parked) scan entirely.
+    pub(crate) fn ready_within(&self, cfg: &ConnConfig, timeout: Duration) -> bool {
+        #[cfg(unix)]
+        {
+            use super::poller::sys;
+            let (read, write) = self.poll_interest(cfg);
+            let mut events = 0i16;
+            if read {
+                events |= sys::POLLIN;
+            }
+            if write {
+                events |= sys::POLLOUT;
+            }
+            sys::poll_one(self.fd(), events, timeout)
+        }
+        #[cfg(not(unix))]
+        {
+            let _ = (cfg, timeout);
+            false
+        }
+    }
+
+    /// Last-gasp bounded flush for a closing connection: the promised
+    /// `ERR`/goodbye line should reach a live peer, but a dead or
+    /// malicious one must not hold a worker past `budget`.
+    pub(crate) fn flush_before_close(&mut self, budget: Duration) {
+        let deadline = Instant::now() + budget;
+        loop {
+            if self.out.flush_to(&mut self.writer).is_err() || self.out.pending() == 0 {
+                return;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return;
+            }
+            let wait = (deadline - now).min(Duration::from_millis(20));
+            #[cfg(unix)]
+            {
+                use super::poller::sys;
+                sys::poll_one(self.fd(), sys::POLLOUT, wait);
+            }
+            #[cfg(not(unix))]
+            std::thread::sleep(wait);
+        }
+    }
+
+    /// Stage a structured `ERR` in whichever framing the session
     /// speaks — the one place the mode branch lives, so line and
-    /// binary error behavior cannot drift apart.
+    /// binary error behavior cannot drift apart. Delivery happens on
+    /// the connection's final bounded flush
+    /// ([`Connection::flush_before_close`]).
     fn send_err(&mut self, msg: &str) {
         let _ = if self.session.binary {
-            codec::write_frame(&mut self.writer, msg.as_bytes())
+            codec::write_frame(&mut self.out, msg.as_bytes())
         } else {
-            writeln!(self.writer, "{msg}").and_then(|_| self.writer.flush())
+            writeln!(self.out, "{msg}")
         };
     }
 
@@ -492,8 +699,9 @@ impl Connection {
         }
     }
 
-    /// Dispatch one complete request and write its reply. Returns
-    /// whether the connection stays open.
+    /// Dispatch one complete request and *stage* its reply on the
+    /// outbound buffer (the caller flushes). Returns whether the
+    /// connection stays open.
     fn answer(
         &mut self,
         handler: &dyn Handler,
@@ -517,10 +725,7 @@ impl Connection {
                     .unwrap_or_else(|_| "ERR internal handler panic (contained)".into()),
                 };
                 let quit = reply == "OK bye";
-                if writeln!(self.writer, "{reply}")
-                    .and_then(|_| self.writer.flush())
-                    .is_err()
-                {
+                if writeln!(self.out, "{reply}").is_err() {
                     return false;
                 }
                 !quit
@@ -538,7 +743,7 @@ impl Connection {
                     .unwrap_or_else(|_| b"ERR internal handler panic (contained)".to_vec()),
                 };
                 let quit = reply.as_slice() == b"OK bye";
-                if codec::write_frame(&mut self.writer, &reply).is_err() {
+                if codec::write_frame(&mut self.out, &reply).is_err() {
                     return false;
                 }
                 !quit
@@ -811,9 +1016,114 @@ mod tests {
         let stats = TransportStats::default();
         stats.workers.store(4, Ordering::Relaxed);
         stats.accepted.fetch_add(7, Ordering::Relaxed);
+        stats.write_stalled.fetch_add(2, Ordering::Relaxed);
         let line = stats.metrics_line();
         assert!(line.starts_with("OK workers=4 "), "{line}");
         assert!(line.contains(" accepted=7 "), "{line}");
         assert!(line.contains(" timed_out=0"), "{line}");
+        assert!(line.contains(" write_stalled=2"), "{line}");
+    }
+
+    /// A sink that accepts a fixed number of bytes per call, then
+    /// turns `WouldBlock` — the shape of a peer with a full socket
+    /// buffer.
+    struct Trickle {
+        taken: Vec<u8>,
+        per_call: usize,
+        budget: usize,
+    }
+
+    impl Write for Trickle {
+        fn write(&mut self, data: &[u8]) -> std::io::Result<usize> {
+            if self.budget == 0 {
+                return Err(std::io::Error::from(ErrorKind::WouldBlock));
+            }
+            let n = data.len().min(self.per_call).min(self.budget);
+            self.taken.extend_from_slice(&data[..n]);
+            self.budget -= n;
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn outbuf_stages_flushes_partially_and_resumes() {
+        let mut out = OutBuf::new();
+        writeln!(out, "OK first").unwrap();
+        writeln!(out, "OK second").unwrap();
+        let staged = out.pending();
+        assert_eq!(staged, "OK first\nOK second\n".len());
+
+        // the peer takes 4 bytes per write and 10 in total, then blocks
+        let mut sink = Trickle {
+            taken: Vec::new(),
+            per_call: 4,
+            budget: 10,
+        };
+        out.flush_to(&mut sink).unwrap();
+        assert_eq!(sink.taken, b"OK first\nO");
+        assert_eq!(out.pending(), staged - 10, "partial flush is resumable");
+
+        // the peer drains; the rest goes out and the buffer resets
+        sink.budget = usize::MAX;
+        out.flush_to(&mut sink).unwrap();
+        assert_eq!(sink.taken, b"OK first\nOK second\n");
+        assert_eq!(out.pending(), 0);
+        assert_eq!(out.buf.len(), 0, "fully flushed buffer is released");
+    }
+
+    #[test]
+    fn outbuf_write_frame_stays_single_site() {
+        // frames stage through the same codec primitive the blocking
+        // path used, so framing cannot drift between code paths
+        let mut out = OutBuf::new();
+        codec::write_frame(&mut out, b"OK pong").unwrap();
+        let mut sink = Trickle {
+            taken: Vec::new(),
+            per_call: usize::MAX,
+            budget: usize::MAX,
+        };
+        out.flush_to(&mut sink).unwrap();
+        let mut r = std::io::Cursor::new(sink.taken);
+        let body = codec::read_frame(&mut r, 1024).unwrap().unwrap();
+        assert_eq!(body, b"OK pong");
+    }
+
+    #[test]
+    fn deadlines_and_interest_track_connection_state() {
+        let cfg = ConnConfig::default();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let _peer = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = Connection::new(stream, "g".into(), 0).unwrap();
+
+        // boundary-idle off the cap: parked indefinitely, read-only
+        assert!(conn.at_boundary() && conn.drain_closable());
+        assert_eq!(conn.next_deadline(&cfg, false), None);
+        assert_eq!(conn.poll_interest(&cfg), (true, false));
+
+        // at the cap the idle-reclaim clock arms
+        assert!(conn.next_deadline(&cfg, true).is_some());
+
+        // staged output adds write interest and a write-stall deadline
+        writeln!(conn.out, "OK reply").unwrap();
+        assert_eq!(conn.poll_interest(&cfg), (true, true));
+        assert!(!conn.drain_closable());
+        let stall = conn.next_deadline(&cfg, false).expect("write deadline");
+        assert!(stall <= Instant::now() + cfg.stall_timeout);
+
+        // over the high-water mark, read interest drops (backpressure)
+        conn.out.buf = vec![b'x'; cfg.out_hwm + 2];
+        conn.out.pos = 0;
+        assert_eq!(conn.poll_interest(&cfg), (false, true));
+
+        // mid-request, the read-stall deadline arms
+        conn.out = OutBuf::new();
+        conn.partial = Partial::Line(b"PIN".to_vec());
+        assert!(!conn.at_boundary());
+        assert!(conn.next_deadline(&cfg, false).is_some());
     }
 }

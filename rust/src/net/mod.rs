@@ -14,11 +14,17 @@
 //!   decoders share.
 //! * [`conn`] — the per-connection session state machine (line mode,
 //!   `BINARY` upgrade, graph pinning, `AUTH` gating of the shard
-//!   verbs, `METRICS`, drain awareness, slow-loris timeouts),
-//!   delegating application verbs through the [`conn::Handler`] trait.
-//! * [`pool`] — the bounded server: one accept thread feeding a fixed
+//!   verbs, `METRICS`, drain awareness, slow-loris timeouts, and the
+//!   bounded outbound buffer with write backpressure), delegating
+//!   application verbs through the [`conn::Handler`] trait.
+//! * [`pool`] — the bounded server: one accept thread and a fixed
 //!   worker pool over a connection run queue, with a hard connection
-//!   cap and accepted/active/queued/rejected/timed-out counters.
+//!   cap and accepted/active/queued/rejected/timed-out/write-stalled
+//!   counters.
+//! * [`poller`] — the readiness thread: every parked (idle) connection
+//!   waits in one raw `poll(2)` set and reaches a worker only when its
+//!   socket turns readable/writable or a deadline expires, so idle
+//!   connections cost the pool nothing per poll interval.
 //! * [`client`] — the one reconnecting protocol client shared by the
 //!   remote-shard backend, `pico query` (including one-hop cluster
 //!   redirects), and `pico cluster status`.
@@ -30,6 +36,7 @@
 pub mod client;
 pub mod codec;
 pub mod conn;
+pub mod poller;
 pub mod pool;
 
 pub use client::{follow_redirect, parse_redirect, Client, FrameClient, Redirect};
@@ -37,4 +44,5 @@ pub use codec::{
     read_frame, split_frame, write_frame, Cursor, MAX_FRAME_BYTES, MAX_LINE_BYTES,
 };
 pub use conn::{env_auth_token, ConnConfig, Handler, Session, TransportStats};
+pub use poller::raise_nofile_limit;
 pub use pool::{default_workers, serve_handler, NetConfig, ServerHandle};

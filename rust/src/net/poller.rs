@@ -1,0 +1,425 @@
+//! The readiness side of the bounded transport: one event thread
+//! watching every *parked* connection's socket with raw `poll(2)`, so
+//! workers only ever touch connections that have something to do.
+//!
+//! The PR 5 pool discovered readiness by rotating every live connection
+//! through the run queue and letting a worker eat a read timeout on
+//! each idle one — O(live) wasted wakeups per poll interval on a
+//! mostly-idle fleet. Here a worker hands an idle connection
+//! ([`crate::net::conn::Slice::Park`]) to the [`Poller`], whose event
+//! loop waits on *all* parked fds in one `poll(2)` call and feeds a
+//! connection back to the run queue only when
+//!
+//! * its socket turns readable (a new request, or EOF),
+//! * its socket turns writable while staged output is pending
+//!   (backpressure flush), or
+//! * a deadline expires — read-stall, write-stall, or at-cap idle
+//!   reclaim; the worker re-runs the connection and the state machine
+//!   in [`crate::net::conn`] decides which of those it was (and sends
+//!   the structured `ERR`).
+//!
+//! The syscall surface is declared locally (`poll`, `pipe`, `fcntl`,
+//! `getrlimit`) — no new dependencies — and gated on `cfg(unix)`;
+//! elsewhere the poller degrades to the old timed rotation, so the
+//! crate still builds and serves correctly, just without the
+//! idle-fleet economics.
+
+use super::conn::{ConnConfig, Connection, TransportStats};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Minimal hand-declared bindings for the handful of syscalls the
+/// readiness loop needs. Kept local on purpose: the crate carries no
+/// libc dependency, and one screen of `extern "C"` beats pulling one
+/// in for four functions with identical layouts across the unixes we
+/// target.
+#[cfg(unix)]
+pub(crate) mod sys {
+    use std::os::raw::{c_int, c_ulong};
+    use std::os::unix::io::RawFd;
+    use std::time::Duration;
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+
+    /// `struct pollfd` — identical layout on every supported unix.
+    #[repr(C)]
+    #[derive(Clone, Copy)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    impl PollFd {
+        pub fn new(fd: RawFd, events: i16) -> Self {
+            Self {
+                fd,
+                events,
+                revents: 0,
+            }
+        }
+
+        /// Readable, writable, error, or hangup — anything that makes
+        /// the next non-blocking read/write on this fd return
+        /// immediately instead of `WouldBlock`.
+        pub fn ready(&self) -> bool {
+            self.revents != 0
+        }
+    }
+
+    #[cfg(target_os = "linux")]
+    type NfdsT = c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NfdsT = std::os::raw::c_uint;
+
+    const F_GETFL: c_int = 3;
+    const F_SETFL: c_int = 4;
+    #[cfg(target_os = "linux")]
+    const O_NONBLOCK: c_int = 0o4000;
+    #[cfg(not(target_os = "linux"))]
+    const O_NONBLOCK: c_int = 0x0004;
+    #[cfg(target_os = "linux")]
+    const RLIMIT_NOFILE: c_int = 7;
+    #[cfg(not(target_os = "linux"))]
+    const RLIMIT_NOFILE: c_int = 8;
+
+    #[repr(C)]
+    struct RLimit {
+        cur: u64,
+        max: u64,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+        fn pipe(fds: *mut c_int) -> c_int;
+        fn fcntl(fd: c_int, cmd: c_int, arg: c_int) -> c_int;
+        fn read(fd: c_int, buf: *mut u8, count: usize) -> isize;
+        fn write(fd: c_int, buf: *const u8, count: usize) -> isize;
+        fn close(fd: c_int) -> c_int;
+        fn getrlimit(resource: c_int, rlim: *mut RLimit) -> c_int;
+        fn setrlimit(resource: c_int, rlim: *const RLimit) -> c_int;
+    }
+
+    /// Wait on a set of fds; returns how many turned ready (0 on
+    /// timeout or `EINTR` — callers re-check their state and loop
+    /// either way, so the two need no distinction).
+    pub fn poll_fds(fds: &mut [PollFd], timeout: Duration) -> usize {
+        let ms = timeout.as_millis().min(i32::MAX as u128) as c_int;
+        let n = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, ms) };
+        n.max(0) as usize
+    }
+
+    /// Wait for one fd; `true` when it turned ready within `timeout`.
+    pub fn poll_one(fd: RawFd, events: i16, timeout: Duration) -> bool {
+        let mut fds = [PollFd::new(fd, events)];
+        poll_fds(&mut fds, timeout) > 0 && fds[0].ready()
+    }
+
+    /// The classic self-pipe: [`WakePipe::wake`] makes a blocked
+    /// [`poll_fds`] that includes [`WakePipe::read_fd`] return
+    /// immediately, from any thread. Both ends are non-blocking, so a
+    /// full pipe cannot stall a waker and a drained pipe cannot stall
+    /// the event loop.
+    pub struct WakePipe {
+        rx: RawFd,
+        tx: RawFd,
+    }
+
+    impl WakePipe {
+        pub fn new() -> std::io::Result<Self> {
+            let mut fds = [0 as c_int; 2];
+            if unsafe { pipe(fds.as_mut_ptr()) } != 0 {
+                return Err(std::io::Error::last_os_error());
+            }
+            for fd in fds {
+                let flags = unsafe { fcntl(fd, F_GETFL, 0) };
+                if flags < 0 || unsafe { fcntl(fd, F_SETFL, flags | O_NONBLOCK) } < 0 {
+                    let err = std::io::Error::last_os_error();
+                    unsafe {
+                        close(fds[0]);
+                        close(fds[1]);
+                    }
+                    return Err(err);
+                }
+            }
+            Ok(Self {
+                rx: fds[0],
+                tx: fds[1],
+            })
+        }
+
+        pub fn read_fd(&self) -> RawFd {
+            self.rx
+        }
+
+        /// One byte down the pipe. A full pipe already wakes the
+        /// poller, so `EAGAIN` is success here.
+        pub fn wake(&self) {
+            unsafe {
+                write(self.tx, [1u8].as_ptr(), 1);
+            }
+        }
+
+        /// Swallow every pending wake byte (called once a poll returns
+        /// with the pipe readable).
+        pub fn drain(&self) {
+            let mut buf = [0u8; 64];
+            while unsafe { read(self.rx, buf.as_mut_ptr(), buf.len()) } > 0 {}
+        }
+    }
+
+    impl Drop for WakePipe {
+        fn drop(&mut self) {
+            unsafe {
+                close(self.rx);
+                close(self.tx);
+            }
+        }
+    }
+
+    /// Raise the soft `RLIMIT_NOFILE` toward `want` (capped at the
+    /// hard limit) and return the resulting soft limit. The idle-fleet
+    /// bench holds tens of thousands of sockets and sizes its fleet to
+    /// whatever this achieves instead of dying on `EMFILE`.
+    pub fn raise_nofile_limit(want: u64) -> u64 {
+        unsafe {
+            let mut r = RLimit { cur: 0, max: 0 };
+            if getrlimit(RLIMIT_NOFILE, &mut r) != 0 {
+                return 0;
+            }
+            if r.cur < want {
+                let bumped = RLimit {
+                    cur: want.min(r.max),
+                    max: r.max,
+                };
+                if setrlimit(RLIMIT_NOFILE, &bumped) == 0 {
+                    r.cur = bumped.cur;
+                }
+            }
+            r.cur
+        }
+    }
+}
+
+#[cfg(unix)]
+pub use sys::raise_nofile_limit;
+
+/// Portability stub: no rlimit syscalls to raise — report 0 so callers
+/// size their fleets down.
+#[cfg(not(unix))]
+pub fn raise_nofile_limit(_want: u64) -> u64 {
+    0
+}
+
+/// Everything the event loop needs from the pool that spawned it.
+pub struct PollerCtx {
+    /// The per-connection transport knobs (deadlines, backpressure
+    /// high-water mark, and the poll tick via
+    /// [`ConnConfig::poll_timeout`]).
+    pub cfg: ConnConfig,
+    /// The pool's connection cap — at-cap is when idle reclaim arms.
+    pub cap: usize,
+    pub stats: Arc<TransportStats>,
+    pub draining: Arc<AtomicBool>,
+    pub hard_stop: Arc<AtomicBool>,
+    /// Feeds a runnable connection back to the pool's run queue.
+    pub enqueue: Box<dyn Fn(Connection) + Send>,
+}
+
+/// The shared handle to the readiness thread: workers park idle
+/// connections here ([`Poller::park`]) and the event loop
+/// ([`Poller::run`], one thread per server) watches them.
+pub struct Poller {
+    inbox: Mutex<Vec<Connection>>,
+    #[cfg(unix)]
+    wake: sys::WakePipe,
+}
+
+impl Poller {
+    pub fn new() -> std::io::Result<Arc<Self>> {
+        Ok(Arc::new(Self {
+            inbox: Mutex::new(Vec::new()),
+            #[cfg(unix)]
+            wake: sys::WakePipe::new()?,
+        }))
+    }
+
+    /// Hand an idle connection to the event thread. The wake matters:
+    /// without it, a freshly parked connection would sit unwatched
+    /// until the in-flight `poll` ticks over.
+    pub fn park(&self, conn: Connection) {
+        self.inbox.lock().unwrap().push(conn);
+        self.wake();
+    }
+
+    /// Kick the event loop out of its current `poll` (used on park,
+    /// drain, and shutdown).
+    pub fn wake(&self) {
+        #[cfg(unix)]
+        self.wake.wake();
+    }
+
+    /// The event loop. Runs on its own thread until `ctx.hard_stop`;
+    /// on hard stop every parked connection is dropped (closing its
+    /// socket) and the live gauge is settled.
+    pub fn run(&self, ctx: PollerCtx) {
+        let mut parked: Vec<Connection> = Vec::new();
+        #[cfg(unix)]
+        let mut fds: Vec<sys::PollFd> = Vec::new();
+        let tick = ctx.cfg.poll_timeout.max(Duration::from_millis(1));
+        loop {
+            if ctx.hard_stop.load(Ordering::SeqCst) {
+                parked.append(&mut self.inbox.lock().unwrap());
+                for conn in parked.drain(..) {
+                    ctx.stats.active.fetch_sub(1, Ordering::SeqCst);
+                    drop(conn);
+                }
+                return;
+            }
+            parked.append(&mut self.inbox.lock().unwrap());
+            let draining = ctx.draining.load(Ordering::SeqCst);
+            let at_cap = ctx.stats.active.load(Ordering::SeqCst) >= ctx.cap;
+            let now = Instant::now();
+            // deadline sweep: stalled / reclaimable / drain-closable
+            // connections go back to a worker, which runs the state
+            // machine that decides their fate (and sends the ERR) —
+            // the poller schedules, it never judges
+            let mut next_deadline: Option<Instant> = None;
+            let mut i = 0;
+            while i < parked.len() {
+                let deadline = parked[i].next_deadline(&ctx.cfg, at_cap);
+                let due = deadline.is_some_and(|d| d <= now);
+                if due || (draining && parked[i].drain_closable()) {
+                    (ctx.enqueue)(parked.swap_remove(i));
+                    continue;
+                }
+                if let Some(d) = deadline {
+                    next_deadline = Some(next_deadline.map_or(d, |n| n.min(d)));
+                }
+                i += 1;
+            }
+            let timeout = match next_deadline {
+                Some(d) => d.saturating_duration_since(now).min(tick),
+                None => tick,
+            };
+            #[cfg(unix)]
+            self.wait_ready(&mut parked, &mut fds, timeout, &ctx);
+            #[cfg(not(unix))]
+            self.wait_ready(&mut parked, timeout, &ctx);
+        }
+    }
+
+    /// Block until some parked fd matches its connection's interest, a
+    /// wake arrives, or `timeout` passes; ready connections move to
+    /// the run queue.
+    #[cfg(unix)]
+    fn wait_ready(
+        &self,
+        parked: &mut Vec<Connection>,
+        fds: &mut Vec<sys::PollFd>,
+        timeout: Duration,
+        ctx: &PollerCtx,
+    ) {
+        fds.clear();
+        fds.push(sys::PollFd::new(self.wake.read_fd(), sys::POLLIN));
+        for conn in parked.iter() {
+            let (read, write) = conn.poll_interest(&ctx.cfg);
+            let mut events = 0i16;
+            if read {
+                events |= sys::POLLIN;
+            }
+            if write {
+                events |= sys::POLLOUT;
+            }
+            fds.push(sys::PollFd::new(conn.fd(), events));
+        }
+        if sys::poll_fds(fds, timeout) == 0 {
+            return;
+        }
+        if fds[0].ready() {
+            self.wake.drain();
+        }
+        // reverse order keeps earlier indices valid across swap_remove
+        for idx in (0..parked.len()).rev() {
+            if fds[idx + 1].ready() {
+                (ctx.enqueue)(parked.swap_remove(idx));
+            }
+        }
+    }
+
+    /// Portability fallback: no readiness primitive — sleep one tick,
+    /// then hand everything back to the run queue (the pre-poller
+    /// rotation behavior).
+    #[cfg(not(unix))]
+    fn wait_ready(&self, parked: &mut Vec<Connection>, timeout: Duration, ctx: &PollerCtx) {
+        std::thread::sleep(timeout.min(Duration::from_millis(50)));
+        for conn in parked.drain(..) {
+            (ctx.enqueue)(conn);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[cfg(unix)]
+    mod unix {
+        use super::super::sys;
+        use std::time::Duration;
+
+        #[test]
+        fn wake_pipe_makes_poll_return() {
+            let wp = sys::WakePipe::new().unwrap();
+            assert!(!sys::poll_one(
+                wp.read_fd(),
+                sys::POLLIN,
+                Duration::from_millis(0)
+            ));
+            wp.wake();
+            assert!(sys::poll_one(
+                wp.read_fd(),
+                sys::POLLIN,
+                Duration::from_millis(1000)
+            ));
+            wp.drain();
+            assert!(!sys::poll_one(
+                wp.read_fd(),
+                sys::POLLIN,
+                Duration::from_millis(0)
+            ));
+        }
+
+        #[test]
+        fn poll_sees_tcp_readability_and_writability() {
+            use std::io::Write;
+            use std::os::unix::io::AsRawFd;
+            let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            let mut tx = std::net::TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+            let (rx, _) = listener.accept().unwrap();
+            assert!(!sys::poll_one(
+                rx.as_raw_fd(),
+                sys::POLLIN,
+                Duration::from_millis(0)
+            ));
+            // a fresh socket's send buffer is empty: writable at once
+            assert!(sys::poll_one(
+                rx.as_raw_fd(),
+                sys::POLLOUT,
+                Duration::from_millis(100)
+            ));
+            tx.write_all(b"x").unwrap();
+            assert!(sys::poll_one(
+                rx.as_raw_fd(),
+                sys::POLLIN,
+                Duration::from_secs(2)
+            ));
+        }
+
+        #[test]
+        fn nofile_limit_is_reported() {
+            // asking for nothing still reports the current soft limit
+            assert!(sys::raise_nofile_limit(0) > 0);
+        }
+    }
+}

@@ -1,17 +1,26 @@
-//! The bounded transport: one accept thread feeding a fixed worker pool
-//! over a run queue of [`Connection`]s — the replacement for the old
+//! The bounded transport: one accept thread, one readiness thread
+//! ([`crate::net::poller`]), and a fixed worker pool over a run queue
+//! of [`Connection`]s — the replacement for the old
 //! thread-per-connection server.
 //!
 //! Capacity is explicit instead of emergent: `workers` threads
 //! (default [`default_workers`]) cooperatively multiplex up to
 //! `max_connections` live connections. A connection is a queue entry,
 //! not a thread — a worker pops one, serves a bounded slice of requests
-//! ([`Connection::serve_slice`]), and requeues it, so 16 workers hold
-//! thousands of mostly-idle connections at a per-connection cost of one
-//! socket + one buffered reader. Accepts past the connection cap are
-//! answered with one structured `ERR` line and closed (counted in
-//! [`TransportStats::rejected`]); requests that stall mid-read are
-//! timed out (slow-loris, [`TransportStats::timed_out`]); and while
+//! ([`Connection::serve_slice`]), and either requeues it (more buffered
+//! work), hands it to the poller (nothing to do until its socket turns
+//! ready), or retires it. Idle connections cost the pool *nothing* per
+//! poll interval: they sit in the poller's single `poll(2)` set, and a
+//! worker only ever touches a connection the kernel says is readable,
+//! writable (staged output), or past a deadline.
+//!
+//! Accepts past the connection cap are answered with one structured
+//! `ERR` line — written best-effort with a short bounded deadline, so
+//! a rejected client that never reads cannot block the accept thread —
+//! and closed (counted in [`TransportStats::rejected`]). Requests that
+//! stall mid-read are timed out (slow-loris,
+//! [`TransportStats::timed_out`]); peers that stop draining their
+//! replies are cut off ([`TransportStats::write_stalled`]); and while
 //! the pool sits *at* the cap, connections idle past
 //! [`ConnConfig::idle_reclaim`] give their slot back
 //! ([`TransportStats::reclaimed`]) — a horde of cheap idle sockets
@@ -22,19 +31,21 @@
 //!
 //! [`ServerHandle::stop`] stops the accept loop; live connections keep
 //! being served. [`ServerHandle::drain`] additionally asks every
-//! connection to close at its next request boundary (in-flight requests
-//! finish and get their reply) and waits for the active gauge to reach
-//! zero. Dropping the handle is the hard stop: workers abandon whatever
-//! is queued and join.
+//! connection to close at its next request boundary (in-flight
+//! requests finish, staged replies flush — bounded by the stall
+//! timeout) and waits for the active gauge to reach zero. Dropping the
+//! handle is the hard stop: the poller drops its parked connections,
+//! workers abandon whatever is queued, and everything joins.
 
 use super::conn::{ConnConfig, Connection, Handler, Slice, TransportStats};
+use super::poller::{Poller, PollerCtx};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Write};
-use std::net::{SocketAddr, TcpListener};
+use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Pool size when none is configured: one worker per core, capped — a
 /// serving box does not need more request-execution threads than that,
@@ -47,6 +58,24 @@ pub fn default_workers() -> usize {
         .min(16)
 }
 
+/// How long an idle worker watches the connection it just served
+/// before handing it to the poller: a request/reply client's next
+/// command usually lands within this, and answering it from the worker
+/// keeps the hot path off the poller's O(parked) scan entirely — the
+/// reason churn qps stays flat as the idle fleet grows.
+const WORKER_LINGER: Duration = Duration::from_millis(10);
+
+/// Budget for the final flush of a closing connection (the promised
+/// `ERR`/goodbye line) — a live peer takes it instantly off its socket
+/// buffer; a dead or malicious one forfeits the courtesy.
+const CLOSE_FLUSH_BUDGET: Duration = Duration::from_millis(200);
+
+/// Budget for writing the at-cap reject line from the accept thread.
+/// An empty fresh socket buffer makes the write instant for any live
+/// peer; the deadline only exists so a peer that never reads cannot
+/// block *all* accepts behind its full buffer.
+const REJECT_WRITE_BUDGET: Duration = Duration::from_millis(50);
+
 /// Transport configuration for [`serve_handler`].
 #[derive(Clone, Debug)]
 pub struct NetConfig {
@@ -55,7 +84,8 @@ pub struct NetConfig {
     /// Hard cap on live connections; accept #cap+1 is answered with an
     /// `ERR` line and closed.
     pub max_connections: usize,
-    /// Per-connection read/drain knobs + the shard-verb auth token.
+    /// Per-connection read/write/drain knobs + the shard-verb auth
+    /// token.
     pub conn: ConnConfig,
 }
 
@@ -69,7 +99,8 @@ impl Default for NetConfig {
     }
 }
 
-/// The run queue shared by the accept loop and the workers.
+/// The run queue shared by the accept loop, the poller, and the
+/// workers.
 struct RunQueue {
     queue: Mutex<VecDeque<Connection>>,
     ready: Condvar,
@@ -109,7 +140,8 @@ impl RunQueue {
 
 /// Decrements the live-connection gauge when the connection it still
 /// holds is retired (dropping the socket with it). [`ActiveConn::keep`]
-/// disarms the guard for connections going back on the run queue.
+/// disarms the guard for connections going back on the run queue or to
+/// the poller (both keep the connection live).
 struct ActiveConn {
     conn: Option<Connection>,
     stats: Arc<TransportStats>,
@@ -131,6 +163,57 @@ impl Drop for ActiveConn {
     }
 }
 
+/// Final bounded flush for a connection leaving the pool with a staged
+/// goodbye/`ERR` line; dropping the guard afterwards closes the socket
+/// and releases the slot.
+fn retire(mut active: ActiveConn, budget: Duration) {
+    if let Some(conn) = active.conn.as_mut() {
+        conn.flush_before_close(budget);
+    }
+}
+
+/// Best-effort bounded reject: one `ERR` line on a non-blocking
+/// socket. The accept thread calls this, so it must never wait on the
+/// peer longer than [`REJECT_WRITE_BUDGET`] — a client that never
+/// reads simply loses the courtesy line (the close still tells it).
+fn reject_over_capacity(mut stream: TcpStream, cap: usize) {
+    if stream.set_nonblocking(true).is_err() {
+        return;
+    }
+    let line = format!("ERR server at connection capacity ({cap}); retry later\n");
+    let bytes = line.as_bytes();
+    let deadline = Instant::now() + REJECT_WRITE_BUDGET;
+    let mut written = 0;
+    while written < bytes.len() {
+        match stream.write(&bytes[written..]) {
+            Ok(0) => return,
+            Ok(n) => written += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                let now = Instant::now();
+                if now >= deadline {
+                    return;
+                }
+                wait_writable(&stream, (deadline - now).min(Duration::from_millis(10)));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(_) => return,
+        }
+    }
+    // dropping the stream closes it
+}
+
+#[cfg(unix)]
+fn wait_writable(stream: &TcpStream, timeout: Duration) {
+    use super::poller::sys;
+    use std::os::unix::io::AsRawFd;
+    sys::poll_one(stream.as_raw_fd(), sys::POLLOUT, timeout);
+}
+
+#[cfg(not(unix))]
+fn wait_writable(_stream: &TcpStream, timeout: Duration) {
+    std::thread::sleep(timeout.min(Duration::from_millis(5)));
+}
+
 /// A running TCP server. Dropping the handle hard-stops the pool.
 pub struct ServerHandle {
     addr: SocketAddr,
@@ -139,6 +222,7 @@ pub struct ServerHandle {
     hard_stop: Arc<AtomicBool>,
     stats: Arc<TransportStats>,
     queue: Arc<RunQueue>,
+    poller: Arc<Poller>,
     joins: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -154,7 +238,7 @@ impl ServerHandle {
         self.stop_accept.store(true, Ordering::SeqCst);
     }
 
-    /// Connections currently live (queued or being served).
+    /// Connections currently live (queued, parked, or being served).
     pub fn active_connections(&self) -> usize {
         self.stats.active.load(Ordering::SeqCst)
     }
@@ -168,13 +252,16 @@ impl ServerHandle {
     /// at its next request boundary (in-flight requests finish and get
     /// their reply; nothing is dropped mid-frame), and wait up to
     /// `grace` for them. Returns whether every connection drained — a
-    /// `false` means some connection is stalled mid-request; it is
-    /// reclaimed by its stall timeout or by dropping the handle.
-    /// Callers flush pending edits afterwards (e.g.
+    /// `false` means some connection is stalled mid-request or
+    /// mid-flush; it is reclaimed by its stall timeout or by dropping
+    /// the handle. Callers flush pending edits afterwards (e.g.
     /// [`crate::service::server::CoreService::flush_all`]).
     pub fn drain(&self, grace: Duration) -> bool {
         self.draining.store(true, Ordering::SeqCst);
         self.stop();
+        // kick the poller so boundary-idle parked connections are
+        // handed to workers (and closed) now, not at the next tick
+        self.poller.wake();
         let deadline = std::time::Instant::now() + grace;
         while self.active_connections() > 0 {
             if std::time::Instant::now() >= deadline {
@@ -201,6 +288,7 @@ impl ServerHandle {
     fn hard_stop_and_join(&mut self) {
         self.stop();
         self.hard_stop.store(true, Ordering::SeqCst);
+        self.poller.wake();
         self.queue.ready.notify_all();
         for j in self.joins.drain(..) {
             let _ = j.join();
@@ -216,9 +304,9 @@ impl Drop for ServerHandle {
 }
 
 /// Bind `addr` and serve `handler` on a bounded worker pool until the
-/// handle is stopped. The accept thread and all workers run in the
-/// background; panics in application handlers are contained per
-/// request (see [`Connection::serve_slice`]).
+/// handle is stopped. The accept thread, the readiness poller, and all
+/// workers run in the background; panics in application handlers are
+/// contained per request (see [`Connection::serve_slice`]).
 pub fn serve_handler(
     handler: Arc<dyn Handler>,
     addr: &str,
@@ -246,7 +334,32 @@ pub fn serve_handler(
         queue: Mutex::new(VecDeque::new()),
         ready: Condvar::new(),
     });
-    let mut joins = Vec::with_capacity(workers + 1);
+    let poller = Poller::new().context("creating the readiness poller")?;
+    let mut joins = Vec::with_capacity(workers + 2);
+
+    // the readiness thread: parked connections wait here in one
+    // poll(2) set instead of rotating through the run queue
+    {
+        let poller = poller.clone();
+        let ctx = PollerCtx {
+            cfg: cfg.conn.clone(),
+            cap: cfg.max_connections,
+            stats: stats.clone(),
+            draining: draining.clone(),
+            hard_stop: hard_stop.clone(),
+            enqueue: {
+                let queue = queue.clone();
+                let stats = stats.clone();
+                Box::new(move |conn| queue.push(conn, &stats))
+            },
+        };
+        joins.push(
+            std::thread::Builder::new()
+                .name("pico-serve-poller".into())
+                .spawn(move || poller.run(ctx))
+                .context("spawning the poller thread")?,
+        );
+    }
 
     // the accept loop: admission control + enqueue
     {
@@ -254,7 +367,6 @@ pub fn serve_handler(
         let stats = stats.clone();
         let queue = queue.clone();
         let default_graph = handler.default_graph();
-        let poll = cfg.conn.poll_timeout;
         let cap = cfg.max_connections;
         let slot_counter = AtomicUsize::new(0);
         joins.push(
@@ -263,21 +375,18 @@ pub fn serve_handler(
                 .spawn(move || {
                     while !stop.load(Ordering::SeqCst) {
                         match listener.accept() {
-                            Ok((mut stream, _peer)) => {
+                            Ok((stream, _peer)) => {
                                 stats.accepted.fetch_add(1, Ordering::Relaxed);
                                 if stats.active.load(Ordering::SeqCst) >= cap {
                                     // one clean error line, then close —
-                                    // the client gets a reason, not a RST
+                                    // the client gets a reason, not a
+                                    // RST, but only if it actually reads
                                     stats.rejected.fetch_add(1, Ordering::Relaxed);
-                                    let _ = stream.set_nonblocking(false);
-                                    let _ = writeln!(
-                                        stream,
-                                        "ERR server at connection capacity ({cap}); retry later"
-                                    );
-                                    continue; // dropping the stream closes it
+                                    reject_over_capacity(stream, cap);
+                                    continue;
                                 }
                                 let slot = slot_counter.fetch_add(1, Ordering::Relaxed);
-                                match Connection::new(stream, default_graph.clone(), slot, poll) {
+                                match Connection::new(stream, default_graph.clone(), slot) {
                                     Ok(conn) => {
                                         stats.active.fetch_add(1, Ordering::SeqCst);
                                         queue.push(conn, &stats);
@@ -299,11 +408,12 @@ pub fn serve_handler(
         );
     }
 
-    // the workers: pop, serve a slice, requeue or retire
+    // the workers: pop, serve a slice, then requeue / park / retire
     for w in 0..workers {
         let handler = handler.clone();
         let stats = stats.clone();
         let queue = queue.clone();
+        let poller = poller.clone();
         let draining = draining.clone();
         let hard_stop = hard_stop.clone();
         let conn_cfg = cfg.conn.clone();
@@ -320,35 +430,50 @@ pub fn serve_handler(
                             conn: Some(conn),
                             stats: stats.clone(),
                         };
-                        // more live connections than workers: skim idle
-                        // ones quickly so ready ones are not held back
-                        let live = stats.active.load(Ordering::SeqCst);
-                        let oversubscribed = live > workers;
                         // at the cap, accepts are being rejected: long-
                         // idle connections give their slots back
-                        let at_capacity = live >= cap;
+                        let at_capacity = stats.active.load(Ordering::SeqCst) >= cap;
                         let outcome = active.conn.as_mut().expect("just wrapped").serve_slice(
                             handler.as_ref(),
                             &conn_cfg,
                             &stats,
                             &draining,
-                            oversubscribed,
                             at_capacity,
                         );
                         match outcome {
-                            Slice::Yield if !hard_stop.load(Ordering::SeqCst) => {
-                                // still live: back on the run queue
-                                // without touching the active gauge
-                                queue.push(active.keep(), &stats);
-                            }
                             // on hard stop, dropping `active` closes the
                             // socket and decrements the gauge
-                            Slice::Yield | Slice::Closed => {}
+                            Slice::Yield | Slice::Park if hard_stop.load(Ordering::SeqCst) => {}
+                            Slice::Yield => queue.push(active.keep(), &stats),
+                            Slice::Park => {
+                                // linger: with nothing else queued,
+                                // watch this connection's own fd
+                                // briefly — a request/reply client's
+                                // next command lands here and never
+                                // touches the O(parked) poller scan
+                                let conn = active.keep();
+                                if stats.queued.load(Ordering::Relaxed) == 0
+                                    && !draining.load(Ordering::SeqCst)
+                                    && conn.ready_within(&conn_cfg, WORKER_LINGER)
+                                {
+                                    queue.push(conn, &stats);
+                                } else {
+                                    poller.park(conn);
+                                }
+                            }
+                            Slice::Closed => retire(active, CLOSE_FLUSH_BUDGET),
                             Slice::TimedOut => {
                                 stats.timed_out.fetch_add(1, Ordering::Relaxed);
+                                retire(active, CLOSE_FLUSH_BUDGET);
                             }
                             Slice::Reclaimed => {
                                 stats.reclaimed.fetch_add(1, Ordering::Relaxed);
+                                retire(active, CLOSE_FLUSH_BUDGET);
+                            }
+                            Slice::WriteStalled => {
+                                // no goodbye flush: the peer provably
+                                // stopped reading a stall window ago
+                                stats.write_stalled.fetch_add(1, Ordering::Relaxed);
                             }
                         }
                     }
@@ -364,6 +489,7 @@ pub fn serve_handler(
         hard_stop,
         stats,
         queue,
+        poller,
         joins,
     })
 }

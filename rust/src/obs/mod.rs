@@ -44,6 +44,7 @@
 //! | `pico_net_accepted_total` | counter | — |
 //! | `pico_net_rejected_total` | counter | — |
 //! | `pico_net_timed_out_total` | counter | — |
+//! | `pico_net_write_stalled_total` | counter | — |
 //! | `pico_net_reclaimed_total` | counter | — |
 //! | `pico_net_active` | gauge | — |
 //! | `pico_net_queued` | gauge | — |

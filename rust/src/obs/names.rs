@@ -31,6 +31,9 @@ pub const NET_ACCEPTED: &str = "pico_net_accepted_total";
 pub const NET_REJECTED: &str = "pico_net_rejected_total";
 /// Requests cut off mid-read by the slow-loris stall timeout.
 pub const NET_TIMED_OUT: &str = "pico_net_timed_out_total";
+/// Connections cut off because the peer stopped draining staged
+/// replies for a full stall window (write-side slow-loris).
+pub const NET_WRITE_STALLED: &str = "pico_net_write_stalled_total";
 /// Idle connections reclaimed while the pool sat at its cap.
 pub const NET_RECLAIMED: &str = "pico_net_reclaimed_total";
 

@@ -34,7 +34,7 @@
 //! | `DELETE <u> <v>` | `OK pending=<n>` |
 //! | `FLUSH` | `OK epoch=<e> submitted=<s> applied=<a> coalesced=<c> changed=<g> recomputed=<r> [shards=<n> rounds=<r> boundary=<b>] ms=<t>` |
 //! | `STATS` | `OK queries=<q> edits=<e> batches=<b> recomputes=<r> graphs=<g>` |
-//! | `METRICS` | `OK workers=<w> conn_cap=<c> accepted=<a> active=<n> queued=<q> rejected=<r> timed_out=<t> reclaimed=<i>` — transport counters, answered by [`crate::net::conn`] (`reclaimed` = idle connections closed while the pool sat at its cap) |
+//! | `METRICS` | `OK workers=<w> conn_cap=<c> accepted=<a> active=<n> queued=<q> rejected=<r> timed_out=<t> write_stalled=<s> reclaimed=<i>` — transport counters, answered by [`crate::net::conn`] (`write_stalled` = peers cut off for not draining their replies, `reclaimed` = idle connections closed while the pool sat at its cap) |
 //! | `METRICS PROM` / `METRICS JSON` | `OK metrics format=<f> lines=<n> bytes=<b>` + `\n`-joined exposition of the whole [`crate::obs`] registry (serve counters, flush-stage histograms, transport + sync series); `PROM` is the Prometheus text format `pico cluster status --metrics` scrapes and merges |
 //! | `TRACES [n]` | `OK traces n=<t> lines=<l>` + the `l` rendered span-tree lines of the `n` most recent flush/slow-query traces from the [`crate::obs::trace`] ring (default 5) |
 //! | `AUTH <token>` | `OK auth` / `ERR bad auth token` — unlocks the gated shard verbs when the server has a token configured (answered by [`crate::net::conn`], constant-time compare) |
@@ -111,26 +111,37 @@
 //! jittered probing), which ships delta chains to lagging replicas and
 //! full manifests when the journal cannot cover the gap.
 //!
-//! The TCP layer is [`crate::net::pool`]: one accept thread feeding a
-//! bounded worker pool (`pico serve --workers N`, default
-//! `min(cores, 16)`) over a connection run queue, with a hard
-//! connection cap (`--max-conns`, accept #cap+1 gets one `ERR` line and
-//! a close), per-request slow-loris timeouts, and the scheduler's
-//! containment idiom: a panicking handler poisons nothing — the
-//! connection reports `ERR internal` and closes, the pool keeps
-//! serving. The transport counters surface on `METRICS`. Abuse bounds:
-//! [`MAX_LINE_BYTES`], [`MAX_FRAME_BYTES`], [`MAX_VERTEX_ID`],
-//! [`MAX_PENDING_EDITS`], [`MAX_HOSTED_GRAPHS`].
+//! The TCP layer is [`crate::net::pool`] + [`crate::net::poller`]: one
+//! accept thread and a bounded worker pool (`pico serve --workers N`,
+//! default `min(cores, 16)`) over a connection run queue, with every
+//! idle connection parked in a single `poll(2)` readiness set — an
+//! idle connection costs one fd and its buffers, never a worker wakeup,
+//! so a mostly-idle fleet of tens of thousands of clients leaves
+//! request latency untouched. There is a hard connection cap
+//! (`--max-conns`; accept #cap+1 gets one best-effort bounded `ERR`
+//! line and a close — a rejected client that never reads cannot block
+//! the accept thread), per-request slow-loris timeouts, and write
+//! backpressure: replies are staged on a bounded per-connection buffer
+//! and flushed on writability, a connection over its high-water mark
+//! stops being read, and a peer that stops draining replies for a full
+//! stall window is cut off (`write_stalled` on `METRICS`) — so a
+//! non-reading client can never pin a worker or the accept thread.
+//! Plus the scheduler's containment idiom: a panicking handler poisons
+//! nothing — the connection reports `ERR internal` and closes, the
+//! pool keeps serving. The transport counters surface on `METRICS`.
+//! Abuse bounds: [`MAX_LINE_BYTES`], [`MAX_FRAME_BYTES`],
+//! [`MAX_VERTEX_ID`], [`MAX_PENDING_EDITS`], [`MAX_HOSTED_GRAPHS`].
 //!
 //! # Graceful shutdown
 //!
 //! [`ServerHandle::drain`] stops the accept loop and asks every
 //! connection to wind down at its next *command boundary*: an in-flight
 //! request is parsed, executed, and answered in full (a half-read frame
-//! is never dropped), idle connections close at their next poll
-//! timeout, and [`CoreService::flush_all`] then applies any pending
-//! edits so nothing queued is lost. `pico serve` drives this on
-//! SIGTERM / ctrl-c.
+//! is never dropped), parked idle connections are woken and closed
+//! immediately, staged replies keep flushing (bounded by the stall
+//! timeout, so a write-stalled peer cannot hold the drain open), and
+//! [`CoreService::flush_all`] then applies any pending edits so nothing
+//! queued is lost. `pico serve` drives this on SIGTERM / ctrl-c.
 //!
 //! **Trust model:** when an auth token is configured (`auth_token` in
 //! the cluster topology, or the `PICO_AUTH_TOKEN` env var for any

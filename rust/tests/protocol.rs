@@ -95,6 +95,16 @@ impl Client {
     }
 }
 
+/// Parse one `key=<n>` counter out of a `METRICS` reply line.
+fn metric_field(metrics: &str, key: &str) -> u64 {
+    metrics
+        .split(key)
+        .nth(1)
+        .and_then(|rest| rest.split_whitespace().next())
+        .and_then(|v| v.parse().ok())
+        .unwrap_or_else(|| panic!("no {key}<n> in {metrics}"))
+}
+
 /// The liveness + no-slot-leak probe run after every attack.
 fn assert_healthy(handle: &ServerHandle, hosted: &str) {
     let mut c = Client::connect(handle);
@@ -495,6 +505,126 @@ fn idle_connections_are_reclaimed_only_at_the_cap() {
         .unwrap_or_else(|| panic!("no reclaimed= in {metrics}"));
     assert!(reclaimed >= 1, "{metrics}");
     handle.stop();
+}
+
+#[test]
+fn at_cap_rejections_are_bounded_and_never_block_the_accept_thread() {
+    // fill a tiny cap, then park a horde of rejected sockets that never
+    // read their `ERR` line — a blocking reject write would wedge the
+    // accept thread behind the first deadbeat and starve every accept
+    // after it
+    let cap = 2;
+    let (_svc, handle) = spawn_bounded(2, cap, 60_000);
+    let mut held = Vec::new();
+    for i in 0..cap {
+        let mut c = Client::connect(&handle);
+        assert_eq!(c.send_line("PING").as_deref(), Some("OK pong"), "conn {i}");
+        held.push(c);
+    }
+    let deadbeats: Vec<TcpStream> = (0..8)
+        .map(|i| TcpStream::connect(handle.addr()).unwrap_or_else(|e| panic!("deadbeat {i}: {e}")))
+        .collect();
+    // give the accept thread time to chew through (and reject) them all
+    std::thread::sleep(Duration::from_millis(300));
+    // a well-behaved over-cap client still gets its rejection promptly
+    let probe = TcpStream::connect(handle.addr()).expect("probe connect");
+    probe
+        .set_read_timeout(Some(Duration::from_secs(2)))
+        .unwrap();
+    let mut probe = BufReader::new(probe);
+    let mut line = String::new();
+    probe.read_line(&mut line).expect("prompt rejection line");
+    assert!(
+        line.starts_with("ERR server at connection capacity"),
+        "{line}"
+    );
+    // every deadbeat and the probe were counted, none served
+    let metrics = held[0].send_line("METRICS").expect("metrics");
+    assert!(metric_field(&metrics, "rejected=") >= 9, "{metrics}");
+    assert!(metrics.contains(&format!("active={cap}")), "{metrics}");
+    // freeing a slot lets a real client in past the deadbeat horde
+    let _ = held.pop().unwrap().send_line("QUIT");
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let mut served = false;
+    while std::time::Instant::now() < deadline {
+        let mut c = Client::connect(&handle);
+        if c.send_line("PING").as_deref() == Some("OK pong") {
+            served = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    assert!(served, "freed slot never went to a fresh client");
+    drop(deadbeats);
+    handle.stop();
+}
+
+/// Stage a glut of un-read reply bytes on one connection: `OPEN` a
+/// graph whose snapshot is ~1.5 MiB, pipeline `frames` `SNAPSHOT`
+/// requests, and never read a byte back. The combined replies exceed
+/// any sane kernel socket buffering, so the server's staged output
+/// stops making progress and the write-stall path must engage.
+fn stall_writes(handle: &ServerHandle, frames: usize) -> Client {
+    let mut glut = Client::connect(handle);
+    let reply = glut.send_line("OPEN big social-ba").expect("open");
+    assert!(reply.starts_with("OK open=big"), "{reply}");
+    glut.upgrade_binary();
+    for _ in 0..frames {
+        write_frame(&mut glut.w, b"SNAPSHOT").expect("pipeline request");
+    }
+    glut.w.flush().unwrap();
+    glut
+}
+
+#[test]
+fn non_draining_reader_is_cut_off_and_counted() {
+    // write-side slow-loris: the peer takes replies but stops draining
+    // them. The connection must be cut off after the stall budget —
+    // with its worker released the whole time — and counted.
+    let (_svc, handle) = spawn_bounded(2, 8, 400);
+    let glut = stall_writes(&handle, 32);
+    let mut probe = Client::connect(&handle);
+    let deadline = std::time::Instant::now() + Duration::from_secs(20);
+    loop {
+        // the stalled connection never pins a worker: the probe is
+        // served continuously while the server waits out the stall
+        assert_eq!(probe.send_line("PING").as_deref(), Some("OK pong"));
+        let metrics = probe.send_line("METRICS").expect("metrics");
+        if metric_field(&metrics, "write_stalled=") >= 1 {
+            break;
+        }
+        assert!(
+            std::time::Instant::now() < deadline,
+            "never cut off: {metrics}"
+        );
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    // the deadbeat's slot came back; the server is unharmed
+    drop(glut);
+    let mut fresh = Client::connect(&handle);
+    assert_eq!(fresh.send_line("PING").as_deref(), Some("OK pong"));
+    handle.stop();
+}
+
+#[test]
+fn drain_completes_while_a_connection_is_write_stalled() {
+    // a graceful drain must not wait forever on a peer that stopped
+    // reading: the stall budget reclaims the connection and the drain
+    // finishes in bounded time
+    let (_svc, handle) = spawn_bounded(2, 8, 300);
+    let glut = stall_writes(&handle, 32);
+    // let the staged replies fill the kernel buffers and jam
+    std::thread::sleep(Duration::from_millis(250));
+    assert!(
+        handle.drain(Duration::from_secs(10)),
+        "drain wedged behind a write-stalled peer"
+    );
+    let stalled = handle
+        .stats()
+        .write_stalled
+        .load(std::sync::atomic::Ordering::Relaxed);
+    assert!(stalled >= 1, "write_stalled={stalled}");
+    drop(glut);
 }
 
 #[test]
