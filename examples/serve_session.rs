@@ -57,6 +57,20 @@
 //!   `remote=` attribution for cross-host stages). Section 9 below
 //!   walks through them; `pico cluster status --metrics` scrapes and
 //!   merges the PROM exposition across every host in a topology.
+//!   `pico serve --trace-ring N` sizes the trace ring, and the
+//!   `PICO_SLOW_QUERY_US` env sets the slow-query threshold feeding
+//!   `pico_slow_queries_total`.
+//! * `STATS <window_s> [JSON]`, `EVENTS [n [severity]]`,
+//!   `HEALTH [graph]` — the live-ops verbs (section 10): windowed
+//!   rates and quantiles from the in-process time-series ring (`pico
+//!   serve --sample-interval MS` controls the sampling period, default
+//!   1s, ~15 min retention), the severity-tagged structured event
+//!   journal (replica failovers, delta-sync fallbacks, write-stall and
+//!   slow-loris cutoffs, auth rejects, drains), and the SLO verdict
+//!   `ok|degraded|critical` with its reasons. `pico top` polls all
+//!   three across every host of a topology into a live dashboard;
+//!   `pico cluster status --events|--health` merges them one-shot,
+//!   with `--health` exiting non-zero below ok.
 //!
 //! The same flow over two shells:
 //!
@@ -363,6 +377,25 @@ fn main() -> anyhow::Result<()> {
     }
     println!("      ... ({} exposition lines in all)", prom.len());
     for line in send_lines(&mut ow, &mut oreader, "TRACES 1") {
+        println!("      {line}");
+    }
+
+    // 10. Live monitoring on the same session. Windowed STATS reads the
+    //     time-series ring a `pico serve --sample-interval` sampler
+    //     fills; with no sampler in this process every key answers n/a
+    //     over 0 samples, but the wire shape is the same. EVENTS replays
+    //     the journal the cluster work above filled (sync fallbacks,
+    //     crossover recomputes), and HEALTH folds the SLO rules into one
+    //     verdict. `pico top` polls exactly these three verbs per host;
+    //     `pico cluster status --health` turns the worst verdict into
+    //     its exit code.
+    for line in send_lines(&mut ow, &mut oreader, "STATS 60") {
+        println!("      {line}");
+    }
+    for line in send_lines(&mut ow, &mut oreader, "EVENTS 10") {
+        println!("      {line}");
+    }
+    for line in send_lines(&mut ow, &mut oreader, "HEALTH") {
         println!("      {line}");
     }
     send(&mut ow, &mut oreader, "QUIT");

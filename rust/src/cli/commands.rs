@@ -252,6 +252,13 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
     }
     let strategy = PartitionStrategy::parse(args.get_or("partition", "hash"))?;
     let sync_interval_ms = args.parse_num::<u64>("sync-interval")?.unwrap_or(1000);
+    let sample_interval_ms = args.parse_num::<u64>("sample-interval")?.unwrap_or(1000);
+    if let Some(n) = args.parse_num::<usize>("trace-ring")? {
+        if n == 0 {
+            bail!("--trace-ring must be at least 1");
+        }
+        crate::obs::trace::set_trace_ring_cap(n);
+    }
     let max_connections = match args.parse_num::<usize>("max-conns")? {
         Some(0) => bail!("--max-conns must be at least 1"),
         Some(cap) => cap,
@@ -373,6 +380,22 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
         batch.recompute_fraction * 100.0
     );
     println!("try: pico query --addr {} --cmd 'CORENESS 0'", handle.addr());
+    // the sampler snapshots the metric registry into the bounded
+    // time-series ring, which is what the windowed `STATS <window_s>`
+    // verb and the burn-rate HEALTH rules read from
+    let sampler = if sample_interval_ms > 0 {
+        let s = crate::obs::Sampler::spawn(std::time::Duration::from_millis(sample_interval_ms));
+        println!(
+            "stats sampler: every {sample_interval_ms}ms (STATS <window_s> / HEALTH; trace ring {} entries)",
+            crate::obs::trace::trace_ring_cap()
+        );
+        Some(s)
+    } else {
+        println!(
+            "stats sampler: disabled (--sample-interval 0); windowed STATS and burn-rate HEALTH answer n/a"
+        );
+        None
+    };
 
     // run until SIGTERM/ctrl-c, then drain instead of dropping
     // connections mid-frame
@@ -393,6 +416,9 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
             Err(e) => println!("WARNING: pending edits on '{graph}' could not be flushed: {e}"),
         }
     }
+    // the sampler outlives the drain so the final flush still lands in
+    // the ring; dropping it stops and joins the thread
+    drop(sampler);
     if drained {
         println!("drained cleanly; bye");
     } else {
@@ -425,6 +451,12 @@ fn cluster_status(args: &Args) -> Result<()> {
     let topo = ClusterConfig::load(path)?;
     if args.has("metrics") {
         return cluster_metrics(args, &topo);
+    }
+    if args.has("events") {
+        return cluster_events(args, &topo);
+    }
+    if args.has("health") {
+        return cluster_health(args, &topo);
     }
     println!(
         "cluster '{}' — dataset {}, {} shards [{}], journal {} epoch(s)",
@@ -537,15 +569,12 @@ fn cluster_status(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `pico cluster status --metrics`: scrape `METRICS PROM` from the
-/// coordinator (`--addr`) and every remote endpoint of the topology,
-/// then print one merged exposition — counters and histogram cells
-/// sum across hosts, gauges take the max (see [`crate::obs::expo`]).
-fn cluster_metrics(args: &Args, topo: &crate::cluster::ClusterConfig) -> Result<()> {
+/// Every protocol endpoint of a topology: the coordinator (`--addr`)
+/// first, then each remote primary and replica. Several shards may
+/// share a host, so addresses are deduplicated.
+fn topology_endpoints(args: &Args, topo: &crate::cluster::ClusterConfig) -> Vec<String> {
     use crate::cluster::Endpoint;
-    use crate::obs::merge_prom;
 
-    let auth = crate::net::env_auth_token().or_else(|| topo.effective_auth_token());
     let mut endpoints: Vec<String> = Vec::new();
     if let Some(addr) = args.get("addr") {
         endpoints.push(addr.to_string());
@@ -556,18 +585,50 @@ fn cluster_metrics(args: &Args, topo: &crate::cluster::ClusterConfig) -> Result<
         }
         endpoints.extend(spec.replicas.iter().cloned());
     }
-    // several shards may share a host — scrape each address once
     let mut seen = std::collections::BTreeSet::new();
     endpoints.retain(|a| seen.insert(a.clone()));
+    endpoints
+}
+
+/// `pico cluster status --metrics`: scrape `METRICS PROM` from the
+/// coordinator (`--addr`) and every remote endpoint of the topology,
+/// then print one merged exposition — counters and histogram cells
+/// sum across hosts, gauges take the max (see [`crate::obs::expo`]).
+/// A host answering a truncated or malformed exposition is flagged
+/// per-host and in the exit code; its readable part still merges.
+fn cluster_metrics(args: &Args, topo: &crate::cluster::ClusterConfig) -> Result<()> {
+    use crate::obs::expo::parse_prom_strict;
+    use crate::obs::merge_prom;
+
+    let auth = crate::net::env_auth_token().or_else(|| topo.effective_auth_token());
+    let endpoints = topology_endpoints(args, topo);
     if endpoints.is_empty() {
         bail!("nothing to scrape: all-local topology and no --addr for the coordinator");
     }
     let mut texts = Vec::new();
     let mut down = 0usize;
+    let mut bad = 0usize;
     for addr in &endpoints {
         match scrape_prom(addr, auth.as_deref()) {
             Ok(text) => {
-                println!("# scraped {addr}");
+                // a host serving garbage is as alarming as one not
+                // answering; every build emits pico_uptime_seconds, so
+                // its absence means the scrape was cut short
+                let (parsed, skipped) = parse_prom_strict(&text);
+                let no_uptime = !parsed
+                    .samples
+                    .keys()
+                    .any(|s| s.starts_with(crate::obs::names::UPTIME_SECONDS));
+                if skipped > 0 || no_uptime {
+                    bad += 1;
+                    eprintln!(
+                        "WARNING: {addr}: partial/malformed exposition ({skipped} unreadable line(s){})",
+                        if no_uptime { "; no pico_uptime_seconds" } else { "" }
+                    );
+                    println!("# scraped {addr} (PARTIAL)");
+                } else {
+                    println!("# scraped {addr}");
+                }
                 texts.push(text);
             }
             Err(e) => {
@@ -580,10 +641,267 @@ fn cluster_metrics(args: &Args, topo: &crate::cluster::ClusterConfig) -> Result<
         bail!("no endpoint could be scraped ({down} down)");
     }
     print!("{}", merge_prom(&texts));
+    if down > 0 || bad > 0 {
+        bail!("{down} endpoint(s) down, {bad} with partial/malformed expositions");
+    }
+    Ok(())
+}
+
+/// `pico cluster status --events`: pull the structured event journal
+/// (`EVENTS <n>`, the `--last` flag) from every endpoint and print one
+/// merged, time-ordered tail, each line suffixed with its host.
+fn cluster_events(args: &Args, topo: &crate::cluster::ClusterConfig) -> Result<()> {
+    let auth = crate::net::env_auth_token().or_else(|| topo.effective_auth_token());
+    let endpoints = topology_endpoints(args, topo);
+    if endpoints.is_empty() {
+        bail!("nothing to poll: all-local topology and no --addr for the coordinator");
+    }
+    let n = args.parse_num::<usize>("last")?.unwrap_or(20);
+    let mut merged: Vec<(u64, String)> = Vec::new();
+    let mut down = 0usize;
+    for addr in &endpoints {
+        match poll_lines(addr, auth.as_deref(), &format!("EVENTS {n}")) {
+            Ok(lines) => {
+                for line in lines {
+                    // rendered events lead with their unix-ms stamp —
+                    // that token is the cross-host sort key
+                    let t = event_stamp(&line);
+                    merged.push((t, format!("{line}  [{addr}]")));
+                }
+            }
+            Err(e) => {
+                down += 1;
+                eprintln!("WARNING: polling {addr}: {e:#}");
+            }
+        }
+    }
+    merged.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.1.cmp(&b.1)));
+    if merged.is_empty() {
+        println!("(no events)");
+    }
+    for (_, line) in &merged {
+        println!("{line}");
+    }
     if down > 0 {
         bail!("{down} endpoint(s) down");
     }
     Ok(())
+}
+
+/// `pico cluster status --health`: ask every endpoint for its `HEALTH`
+/// verdict and print it with the SLO reasons. The exit code is the
+/// cluster's: non-zero unless every host answers and answers `ok`.
+fn cluster_health(args: &Args, topo: &crate::cluster::ClusterConfig) -> Result<()> {
+    use crate::obs::Verdict;
+
+    let auth = crate::net::env_auth_token().or_else(|| topo.effective_auth_token());
+    let endpoints = topology_endpoints(args, topo);
+    if endpoints.is_empty() {
+        bail!("nothing to poll: all-local topology and no --addr for the coordinator");
+    }
+    let mut worst = Verdict::Ok;
+    let mut down = 0usize;
+    for addr in &endpoints {
+        match poll_health(addr, auth.as_deref()) {
+            Ok((verdict, reasons)) => {
+                println!("{addr}: {}", verdict.as_str());
+                for r in &reasons {
+                    println!("  - {r}");
+                }
+                worst = worst.max(verdict);
+            }
+            Err(e) => {
+                down += 1;
+                println!("{addr}: down ({e:#})");
+            }
+        }
+    }
+    println!("cluster: {}", if down > 0 { "down" } else { worst.as_str() });
+    if down > 0 {
+        bail!("{down} endpoint(s) down");
+    }
+    if worst > Verdict::Ok {
+        bail!("cluster health is {}", worst.as_str());
+    }
+    Ok(())
+}
+
+/// The leading unix-ms token of a rendered event line (0 when absent,
+/// which sorts malformed lines first instead of dropping them).
+fn event_stamp(line: &str) -> u64 {
+    line.split_whitespace()
+        .next()
+        .and_then(|t| t.parse().ok())
+        .unwrap_or(0)
+}
+
+/// One multiline verb exchange over the line protocol.
+fn poll_lines(addr: &str, auth: Option<&str>, cmd: &str) -> Result<Vec<String>> {
+    use crate::net::client::Client;
+
+    let mut client = Client::connect(addr)?;
+    if let Some(token) = auth {
+        client.auth(token)?;
+    }
+    let (_head, lines) = client.send_multiline(cmd)?;
+    client.quit();
+    Ok(lines)
+}
+
+/// A `HEALTH` exchange: the parsed verdict plus its reason lines.
+fn poll_health(addr: &str, auth: Option<&str>) -> Result<(crate::obs::Verdict, Vec<String>)> {
+    use crate::net::client::{field, Client};
+
+    let mut client = Client::connect(addr)?;
+    if let Some(token) = auth {
+        client.auth(token)?;
+    }
+    let (head, reasons) = client.send_multiline("HEALTH")?;
+    client.quit();
+    let verdict = crate::obs::Verdict::parse(field(&head, "health")?)
+        .ok_or_else(|| anyhow::anyhow!("unparseable HEALTH verdict in '{head}'"))?;
+    Ok((verdict, reasons))
+}
+
+/// One host's worth of dashboard state for `pico top`.
+struct TopSample {
+    stats: std::collections::BTreeMap<String, String>,
+    verdict: crate::obs::Verdict,
+    reasons: Vec<String>,
+    events: Vec<String>,
+}
+
+/// Poll one host: `STATS <window_s>` (tolerated missing — a host
+/// running without a graph context still dashboards), then the
+/// transport-level `HEALTH` and `EVENTS`.
+fn poll_top(addr: &str, auth: Option<&str>, window_s: u64) -> Result<TopSample> {
+    use crate::net::client::{field, Client};
+
+    let mut client = Client::connect(addr)?;
+    if let Some(token) = auth {
+        client.auth(token)?;
+    }
+    let stats = match client.send_multiline(&format!("STATS {window_s}")) {
+        Ok((_head, lines)) => lines
+            .iter()
+            .filter_map(|l| l.split_once(' '))
+            .map(|(k, v)| (k.to_string(), v.trim().to_string()))
+            .collect(),
+        Err(_) => std::collections::BTreeMap::new(),
+    };
+    let (head, reasons) = client.send_multiline("HEALTH")?;
+    let (_head, events) = client.send_multiline("EVENTS 5")?;
+    client.quit();
+    let verdict = crate::obs::Verdict::parse(field(&head, "health")?)
+        .ok_or_else(|| anyhow::anyhow!("unparseable HEALTH verdict in '{head}'"))?;
+    Ok(TopSample { stats, verdict, reasons, events })
+}
+
+/// `pico top` — a live terminal dashboard over the observability verbs:
+/// one row per host with windowed rates and quantiles (`STATS`), the
+/// `HEALTH` verdict with its SLO reasons, and a merged cross-host tail
+/// of recent journal events. Redraws every `--interval` ms until
+/// ctrl-c, or for `--iterations N` refreshes when scripting a capture.
+/// Hosts come from `--cluster <cfg>` plus `--addr`; with neither, the
+/// default serve address is polled.
+pub fn cmd_top(args: &Args, _cfg: &Config) -> Result<()> {
+    let interval_ms = args.parse_num::<u64>("interval")?.unwrap_or(2000).max(100);
+    let window_s = args.parse_num::<u64>("window")?.unwrap_or(60).max(1);
+    let iterations = args.parse_num::<u64>("iterations")?.unwrap_or(0);
+    let mut auth = crate::net::env_auth_token();
+    let mut endpoints: Vec<String> = Vec::new();
+    if let Some(path) = args.get("cluster") {
+        let topo = crate::cluster::ClusterConfig::load(path)?;
+        if auth.is_none() {
+            auth = topo.effective_auth_token();
+        }
+        endpoints = topology_endpoints(args, &topo);
+    } else if let Some(addr) = args.get("addr") {
+        endpoints.push(addr.to_string());
+    }
+    if endpoints.is_empty() {
+        endpoints.push("127.0.0.1:7571".to_string());
+    }
+
+    shutdown::install();
+    let mut tick = 0u64;
+    loop {
+        let mut rows = Table::new(&[
+            "host", "health", "qps", "edits/s", "q p99 us", "flush p99 us", "lag", "cutoffs/s",
+            "slow/s", "err/s",
+        ]);
+        let mut events: Vec<(u64, String)> = Vec::new();
+        let mut reasons: Vec<String> = Vec::new();
+        for addr in &endpoints {
+            match poll_top(addr, auth.as_deref(), window_s) {
+                Ok(h) => {
+                    let pick = |k: &str| h.stats.get(k).cloned().unwrap_or_else(|| "n/a".into());
+                    rows.row(vec![
+                        addr.clone(),
+                        h.verdict.as_str().to_string(),
+                        pick("qps"),
+                        pick("edits_per_s"),
+                        pick("query_p99_us"),
+                        pick("flush_total_p99_us"),
+                        pick("replica_lag_epochs"),
+                        pick("net_cutoffs_per_s"),
+                        pick("slow_queries_per_s"),
+                        pick("error_events_per_s"),
+                    ]);
+                    reasons.extend(h.reasons.iter().map(|r| format!("{addr}: {r}")));
+                    events.extend(
+                        h.events
+                            .into_iter()
+                            .map(|l| (event_stamp(&l), format!("{l}  [{addr}]"))),
+                    );
+                }
+                Err(_) => {
+                    let mut row = vec![addr.clone(), "down".to_string()];
+                    row.extend(vec!["-".to_string(); 8]);
+                    rows.row(row);
+                }
+            }
+        }
+        events.sort_by(|a, b| b.0.cmp(&a.0).then_with(|| a.1.cmp(&b.1)));
+        events.truncate(8);
+        // one ANSI clear-and-home per refresh: the whole frame redraws
+        print!("\x1b[2J\x1b[H");
+        println!(
+            "pico top — {} host(s), window {window_s}s, refresh {interval_ms}ms (ctrl-c quits)",
+            endpoints.len()
+        );
+        print!("{}", rows.render());
+        if !reasons.is_empty() {
+            println!("\nhealth reasons:");
+            for r in &reasons {
+                println!("  - {r}");
+            }
+        }
+        println!("\nrecent events (newest first):");
+        if events.is_empty() {
+            println!("  (none)");
+        }
+        for (_, line) in &events {
+            println!("  {line}");
+        }
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+
+        tick += 1;
+        if iterations > 0 && tick >= iterations {
+            return Ok(());
+        }
+        // sliced sleep so ctrl-c lands within ~50ms of the keypress
+        let mut left = interval_ms;
+        while left > 0 && !shutdown::requested() {
+            let step = left.min(50);
+            std::thread::sleep(std::time::Duration::from_millis(step));
+            left -= step;
+        }
+        if shutdown::requested() {
+            return Ok(());
+        }
+    }
 }
 
 /// One `METRICS PROM` scrape over the line protocol.
@@ -784,6 +1102,31 @@ mod tests {
     #[test]
     fn list_command_smoke() {
         cmd_list(&Args::default(), &Config::default()).unwrap();
+    }
+
+    #[test]
+    fn top_one_iteration_survives_a_down_host() {
+        let args = Args::parse(
+            &[
+                "top".into(),
+                "--addr".into(),
+                "127.0.0.1:1".into(), // reserved port: nothing listens
+                "--iterations".into(),
+                "1".into(),
+                "--interval".into(),
+                "100".into(),
+            ],
+            &[],
+        )
+        .unwrap();
+        // a dead host renders as a `down` row, not an error
+        cmd_top(&args, &Config::default()).unwrap();
+    }
+
+    #[test]
+    fn event_stamp_sorts_rendered_lines() {
+        assert_eq!(event_stamp("1754000000123 warn replica_failover graph=- x"), 1754000000123);
+        assert_eq!(event_stamp("not-a-stamp"), 0);
     }
 
     #[test]

@@ -18,6 +18,7 @@ COMMANDS:
     suite     Run algorithms across the dataset suite (alias: bench)
     serve     Host core indices behind the line-protocol TCP server
     cluster   Multi-host topology tooling (`pico cluster status`)
+    top       Live dashboard over STATS/EVENTS/HEALTH for one host or a cluster
     query     Send protocol commands to a running `pico serve`
     stats     Print Table II-style statistics for the suite
     analyze   Fig. 3-style multi-access analysis of a dataset
@@ -66,6 +67,15 @@ SERVE OPTIONS:
     --batch-fraction F   Recompute when a batch exceeds F of |E| (default 0.02,
                          or the PICO_RECOMPUTE_FRACTION env override)
     --batch-min N        Never recompute below N coalesced edits (default 64)
+    --sample-interval MS Stats-sampler period: snapshot the metric
+                         registry into the in-process time-series ring
+                         every MS ms (default 1000; 0 disables — the
+                         windowed `STATS <window_s>` verb and burn-rate
+                         HEALTH rules then answer n/a)
+    --trace-ring N       Per-query trace ring capacity (default 64; the
+                         TRACES verb reads it). PICO_SLOW_QUERY_US sets
+                         the slow-query threshold feeding
+                         pico_slow_queries_total
 
 CLUSTER OPTIONS (pico cluster status):
     --cluster CFG        Topology file; probes every remote endpoint with
@@ -81,14 +91,32 @@ CLUSTER OPTIONS (pico cluster status):
     --metrics            Scrape METRICS PROM from the coordinator
                          (--addr) and every remote endpoint, and print
                          one merged exposition: counters and histogram
-                         cells sum across hosts, gauges take the max
+                         cells sum across hosts, gauges take the max.
+                         Hosts serving a truncated/malformed exposition
+                         are flagged per-host and fail the exit code
+    --events             Pull the structured event journal (EVENTS) from
+                         every endpoint and print one merged,
+                         time-ordered tail (--last N, default 20)
+    --health             Ask every endpoint for its HEALTH verdict and
+                         SLO reasons; exits non-zero unless every host
+                         answers ok
+
+TOP OPTIONS (pico top):
+    --cluster CFG        Poll every endpoint of a topology (with --addr
+                         for the coordinator); without either flag the
+                         default serve address is polled
+    --interval MS        Refresh period (default 2000)
+    --window S           STATS window for rates/quantiles (default 60)
+    --iterations N       Render N frames then exit (default 0 = run
+                         until ctrl-c); handy for scripted captures
 
 QUERY OPTIONS:
     --addr HOST:PORT     Server address (default 127.0.0.1:7571)
     --cmd 'A; B; C'      Protocol commands, `;`-separated (see service::server
                          docs: CORENESS, MEMBERS, HISTO, DENSEST, INSERT,
-                         DELETE, FLUSH, EPOCH, STATS, METRICS [PROM|JSON],
-                         TRACES [n], OPEN, USE,
+                         DELETE, FLUSH, EPOCH, STATS [window_s [JSON]],
+                         METRICS [PROM|JSON], TRACES [n],
+                         EVENTS [n [severity]], HEALTH [graph], OPEN, USE,
                          GRAPHS, SHARDS). A coordinator's REDIRECT reply
                          to a shard-local probe (e.g. SHARDCORE) is
                          followed one hop to the owning shard host;
@@ -107,6 +135,8 @@ EXAMPLES:
     pico serve --cluster cluster.toml
     pico cluster status --cluster cluster.toml
     pico cluster status --cluster cluster.toml --addr 127.0.0.1:7571 --metrics
+    pico cluster status --cluster cluster.toml --health
+    pico top --cluster cluster.toml --interval 1000 --window 30
     pico query --cmd 'INSERT 3 9; FLUSH; CORENESS 3; DENSEST; SHARDS'
     pico query --binary --cmd 'SNAPSHOT' --snapshot-file /tmp/social.snap
     pico query --binary --cmd 'RESTORE replica' --snapshot-file /tmp/social.snap

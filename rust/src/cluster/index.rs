@@ -242,8 +242,14 @@ impl ReplicaGroup {
                     Ok(_) => {
                         self.stale_reads.fetch_add(1, Ordering::Relaxed);
                     }
-                    Err(_) => {
+                    Err(e) => {
                         self.failovers.fetch_add(1, Ordering::Relaxed);
+                        obs::events::emit(
+                            obs::Severity::Warn,
+                            obs::events::kind::REPLICA_FAILOVER,
+                            "",
+                            format!("replica={} read failed ({e:#}); trying next", r.addr()),
+                        );
                     }
                 }
             }
@@ -490,6 +496,14 @@ impl ClusterIndex {
             });
         }
         let out = self.flush_inner(edits, queued_at);
+        if let Err(e) = &out {
+            obs::events::emit(
+                obs::Severity::Error,
+                obs::events::kind::FLUSH_FAILED,
+                &self.name,
+                format!("flush died mid-apply ({e:#}); journals cleared, full re-ship forced"),
+            );
+        }
         if out.is_err() {
             // A flush that died midway may leave primaries holding edits
             // no recorded chain (and no published epoch) reproduces.
@@ -775,6 +789,24 @@ impl ClusterIndex {
                             .add(m.len() as u64);
                         report.snapshots += 1;
                         report.snapshot_bytes += m.len() as u64;
+                        // a replica with real committed state behind the
+                        // head should have caught up by delta; a full
+                        // ship there (or a forced one) is the fallback
+                        // worth journaling — initial hydration is not
+                        if forced || matches!(committed, Some(e) if e < want) {
+                            obs::events::emit(
+                                obs::Severity::Warn,
+                                obs::events::kind::SYNC_FULL_SHIP,
+                                &self.name,
+                                format!(
+                                    "replica={} shard={} bytes={}{}",
+                                    r.addr(),
+                                    gr.backend.id(),
+                                    m.len(),
+                                    if forced { " forced" } else { "" }
+                                ),
+                            );
+                        }
                     }
                     Err(e) => report.note_failure(format!("ship to {}: {e:#}", r.addr())),
                 }
@@ -787,6 +819,25 @@ impl ClusterIndex {
                 // exact state again — deltas may resume
                 gr.force_full_ship.store(false, Ordering::SeqCst);
             }
+        }
+        // publish how many replicas this pass failed to catch up — the
+        // instantaneous signal behind HEALTH's replication rule — and
+        // journal transitions only, not every daemon pass
+        let failed_gauge =
+            obs::global().gauge(names::SYNC_FAILED_REPLICAS, &[("graph", &self.name)]);
+        let prev_failed = failed_gauge.get();
+        failed_gauge.set(report.failed as u64);
+        if report.failed > 0 && prev_failed != report.failed as u64 {
+            obs::events::emit(
+                obs::Severity::Error,
+                obs::events::kind::SYNC_FAILED,
+                &self.name,
+                format!(
+                    "{} replica(s) not caught up: {}",
+                    report.failed,
+                    report.first_error.as_deref().unwrap_or("unknown error")
+                ),
+            );
         }
         Ok(report)
     }

@@ -17,7 +17,7 @@ fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse_with_sub(
         &raw,
-        &["metrics", "no-validate", "help", "json", "binary"],
+        &["metrics", "no-validate", "help", "json", "binary", "events", "health"],
         &["cluster"],
     )?;
 
@@ -29,6 +29,7 @@ fn run() -> Result<()> {
         "suite" | "bench" => commands::cmd_suite(&args, &cfg),
         "serve" => commands::cmd_serve(&args, &cfg),
         "cluster" => commands::cmd_cluster(&args, &cfg),
+        "top" => commands::cmd_top(&args, &cfg),
         "query" => commands::cmd_query(&args, &cfg),
         "stats" => commands::cmd_stats(&args, &cfg),
         "analyze" => commands::cmd_analyze(&args, &cfg),

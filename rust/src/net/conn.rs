@@ -80,6 +80,8 @@ pub const LINE_VERBS: &[&str] = &[
     "STATS",
     "METRICS",
     "TRACES",
+    "EVENTS",
+    "HEALTH",
     "AUTH",
     "BINARY",
     "QUIT",
@@ -770,7 +772,15 @@ impl Connection {
                     self.session.authed = true;
                     "OK auth".into()
                 }
-                (Some(_), _) => "ERR bad auth token".into(),
+                (Some(_), _) => {
+                    crate::obs::events::emit(
+                        crate::obs::Severity::Warn,
+                        crate::obs::events::kind::AUTH_REJECT,
+                        "",
+                        "bad token on AUTH preamble",
+                    );
+                    "ERR bad auth token".into()
+                }
             }),
             "METRICS" => Some(match parts.next().map(|f| f.to_ascii_uppercase()) {
                 // the bare reply line predates the registry and stays
@@ -808,7 +818,42 @@ impl Connection {
                 }
                 Some(reply)
             }
+            "EVENTS" => {
+                let n = parts
+                    .next()
+                    .and_then(|t| t.parse::<usize>().ok())
+                    .unwrap_or(10);
+                let min = parts.next().and_then(crate::obs::Severity::parse);
+                let events = crate::obs::recent_events(n, min);
+                let mut reply = format!("OK events n={} lines={}", events.len(), events.len());
+                for e in &events {
+                    reply.push('\n');
+                    reply.push_str(&e.render());
+                }
+                Some(reply)
+            }
+            "HEALTH" => {
+                let graph = parts.next();
+                let rep = crate::obs::health::evaluate_global(graph);
+                let mut reply = format!(
+                    "OK health={} reasons={} lines={}",
+                    rep.verdict.as_str(),
+                    rep.reasons.len(),
+                    rep.reasons.len()
+                );
+                for r in &rep.reasons {
+                    reply.push('\n');
+                    reply.push_str(r);
+                }
+                Some(reply)
+            }
             v if cfg.auth_token.is_some() && !self.session.authed && AUTH_VERBS.contains(&v) => {
+                crate::obs::events::emit(
+                    crate::obs::Severity::Warn,
+                    crate::obs::events::kind::AUTH_REJECT,
+                    "",
+                    format!("unauthenticated {v}"),
+                );
                 Some(format!("ERR auth required for {v} (send AUTH <token> first)"))
             }
             _ => None,
@@ -1090,6 +1135,59 @@ mod tests {
         let mut r = std::io::Cursor::new(sink.taken);
         let body = codec::read_frame(&mut r, 1024).unwrap().unwrap();
         assert_eq!(body, b"OK pong");
+    }
+
+    #[test]
+    fn events_and_health_are_transport_verbs() {
+        let cfg = ConnConfig::default();
+        let stats = TransportStats::default();
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let _peer = TcpStream::connect(listener.local_addr().unwrap()).unwrap();
+        let (stream, _) = listener.accept().unwrap();
+        let mut conn = Connection::new(stream, "g".into(), 0).unwrap();
+
+        crate::obs::events::emit(
+            crate::obs::Severity::Warn,
+            crate::obs::events::kind::REPLICA_FAILOVER,
+            "conn-test",
+            "replica=127.0.0.1:1 err=dial",
+        );
+        let reply = conn.transport_reply(&cfg, &stats, "EVENTS 500").unwrap();
+        let head = reply.lines().next().unwrap();
+        assert!(head.starts_with("OK events n="), "{head}");
+        assert!(
+            reply
+                .lines()
+                .skip(1)
+                .any(|l| l.contains("replica_failover") && l.contains("graph=conn-test")),
+            "{reply}"
+        );
+
+        // the min-severity filter drops anything below it
+        let reply = conn.transport_reply(&cfg, &stats, "EVENTS 500 error").unwrap();
+        assert!(
+            reply
+                .lines()
+                .skip(1)
+                .all(|l| l.split_whitespace().nth(1) == Some("error")),
+            "{reply}"
+        );
+
+        // HEALTH answers a parseable verdict even for an unknown graph
+        // (the global registry is shared with concurrent tests, so the
+        // verdict itself is not pinned here)
+        let reply = conn
+            .transport_reply(&cfg, &stats, "HEALTH no-such-graph")
+            .unwrap();
+        let head = reply.lines().next().unwrap();
+        let verdict = head
+            .strip_prefix("OK health=")
+            .and_then(|r| r.split_whitespace().next())
+            .unwrap_or("");
+        assert!(
+            crate::obs::health::Verdict::parse(verdict).is_some(),
+            "unparseable HEALTH head: {head}"
+        );
     }
 
     #[test]

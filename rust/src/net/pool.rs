@@ -39,6 +39,7 @@
 
 use super::conn::{ConnConfig, Connection, Handler, Slice, TransportStats};
 use super::poller::{Poller, PollerCtx};
+use crate::obs::events::{self, Severity};
 use anyhow::{Context, Result};
 use std::collections::VecDeque;
 use std::io::{ErrorKind, Write};
@@ -257,19 +258,33 @@ impl ServerHandle {
     /// the handle. Callers flush pending edits afterwards (e.g.
     /// [`crate::service::server::CoreService::flush_all`]).
     pub fn drain(&self, grace: Duration) -> bool {
+        events::emit(
+            Severity::Info,
+            events::kind::DRAIN_START,
+            "",
+            format!("active={} grace_ms={}", self.active_connections(), grace.as_millis()),
+        );
         self.draining.store(true, Ordering::SeqCst);
         self.stop();
         // kick the poller so boundary-idle parked connections are
         // handed to workers (and closed) now, not at the next tick
         self.poller.wake();
         let deadline = std::time::Instant::now() + grace;
+        let mut drained = true;
         while self.active_connections() > 0 {
             if std::time::Instant::now() >= deadline {
-                return false;
+                drained = false;
+                break;
             }
             std::thread::sleep(Duration::from_millis(10));
         }
-        true
+        events::emit(
+            Severity::Info,
+            events::kind::DRAIN_FINISH,
+            "",
+            format!("drained={drained} remaining={}", self.active_connections()),
+        );
+        drained
     }
 
     /// Block until another thread requests a stop ([`Self::stop`] or
@@ -382,6 +397,12 @@ pub fn serve_handler(
                                     // the client gets a reason, not a
                                     // RST, but only if it actually reads
                                     stats.rejected.fetch_add(1, Ordering::Relaxed);
+                                    events::emit(
+                                        Severity::Warn,
+                                        events::kind::CONN_REJECTED,
+                                        "",
+                                        format!("at capacity cap={cap}"),
+                                    );
                                     reject_over_capacity(stream, cap);
                                     continue;
                                 }
@@ -464,16 +485,34 @@ pub fn serve_handler(
                             Slice::Closed => retire(active, CLOSE_FLUSH_BUDGET),
                             Slice::TimedOut => {
                                 stats.timed_out.fetch_add(1, Ordering::Relaxed);
+                                events::emit(
+                                    Severity::Warn,
+                                    events::kind::SLOW_LORIS_CUTOFF,
+                                    "",
+                                    "request stalled mid-read past the stall timeout",
+                                );
                                 retire(active, CLOSE_FLUSH_BUDGET);
                             }
                             Slice::Reclaimed => {
                                 stats.reclaimed.fetch_add(1, Ordering::Relaxed);
+                                events::emit(
+                                    Severity::Info,
+                                    events::kind::IDLE_RECLAIM,
+                                    "",
+                                    "idle connection reclaimed at the connection cap",
+                                );
                                 retire(active, CLOSE_FLUSH_BUDGET);
                             }
                             Slice::WriteStalled => {
                                 // no goodbye flush: the peer provably
                                 // stopped reading a stall window ago
                                 stats.write_stalled.fetch_add(1, Ordering::Relaxed);
+                                events::emit(
+                                    Severity::Warn,
+                                    events::kind::WRITE_STALL_CUTOFF,
+                                    "",
+                                    "peer stopped draining staged replies",
+                                );
                             }
                         }
                     }

@@ -1,0 +1,256 @@
+//! The structured event journal: a bounded, severity-tagged ring of
+//! the *exceptional* things a serving process did — replica failovers,
+//! delta-sync fallbacks to a full manifest ship, slow-loris and
+//! write-stall cutoffs, flush-crossover recomputes, auth rejects,
+//! drain start/finish — so "what happened overnight" has an answer
+//! that counters alone cannot give.
+//!
+//! Metrics say *how often*; the journal says *what, when, and to
+//! which graph*. Every [`emit`] also bumps the
+//! `pico_events_total{severity=...}` registry counter, so the tsdb's
+//! windowed event rate and the journal's readable tail stay two views
+//! of one stream. The ring is bounded ([`EVENT_JOURNAL_CAP`]) and
+//! process-global, mirroring the trace ring ([`super::trace`]):
+//! emission is one mutex push on paths that are already exceptional,
+//! never on the per-query hot path.
+//!
+//! Read it with the `EVENTS [n] [min-severity]` verb (any session,
+//! any backend) or merged across hosts by `pico cluster status
+//! --events`. Event kinds are constants in [`kind`] — CI lints that
+//! table against the reference table in [`super`] (obs/mod.rs), so a
+//! new kind cannot land undocumented.
+
+use super::names;
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Events the journal retains; older ones are evicted. At the default
+/// emission rates (events are exceptional) this covers hours.
+pub const EVENT_JOURNAL_CAP: usize = 256;
+
+/// Every event kind the journal carries — the single definition site,
+/// CI-linted against the reference table in obs/mod.rs.
+pub mod kind {
+    /// A replica read failed and the group fell over to the next one.
+    pub const REPLICA_FAILOVER: &str = "replica_failover";
+    /// Replica catch-up could not use the delta chain and re-shipped
+    /// the full manifest instead.
+    pub const SYNC_FULL_SHIP: &str = "sync_full_ship";
+    /// A replica could not be synced at all this pass.
+    pub const SYNC_FAILED: &str = "sync_failed";
+    /// A cluster flush died mid-apply; the group is poisoned until a
+    /// full re-ship.
+    pub const FLUSH_FAILED: &str = "flush_failed";
+    /// A batch crossed the incremental-vs-recompute threshold and fell
+    /// back to a full recompute.
+    pub const CROSSOVER_RECOMPUTE: &str = "crossover_recompute";
+    /// A distributed refine round lost a shard backend mid-merge.
+    pub const REFINE_ROUND_FAILED: &str = "refine_round_failed";
+    /// A request stalled mid-read past the stall timeout (slow-loris)
+    /// and the connection was cut off.
+    pub const SLOW_LORIS_CUTOFF: &str = "slow_loris_cutoff";
+    /// A peer stopped draining staged replies for a full stall window
+    /// and was cut off.
+    pub const WRITE_STALL_CUTOFF: &str = "write_stall_cutoff";
+    /// An idle connection gave its slot back while the pool sat at its
+    /// connection cap.
+    pub const IDLE_RECLAIM: &str = "idle_reclaim";
+    /// An accept was refused because the pool was at its connection cap.
+    pub const CONN_REJECTED: &str = "conn_rejected";
+    /// An `AUTH` preamble carried the wrong token, or a gated shard
+    /// verb arrived without one.
+    pub const AUTH_REJECT: &str = "auth_reject";
+    /// Graceful shutdown began draining connections.
+    pub const DRAIN_START: &str = "drain_start";
+    /// The drain finished (detail says whether every connection made it).
+    pub const DRAIN_FINISH: &str = "drain_finish";
+}
+
+/// Event severity, ordered: `Info < Warn < Error`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Severity::Info => "info",
+            Severity::Warn => "warn",
+            Severity::Error => "error",
+        }
+    }
+
+    /// Parse a severity name (case-insensitive); `None` for noise.
+    pub fn parse(s: &str) -> Option<Severity> {
+        match s.to_ascii_lowercase().as_str() {
+            "info" => Some(Severity::Info),
+            "warn" | "warning" => Some(Severity::Warn),
+            "error" | "err" => Some(Severity::Error),
+            _ => None,
+        }
+    }
+}
+
+/// One journal entry.
+#[derive(Clone, Debug)]
+pub struct Event {
+    /// Monotonic per-process sequence number (total ordering within
+    /// one host even when two events share a millisecond).
+    pub seq: u64,
+    /// Wall-clock milliseconds since the unix epoch — comparable
+    /// across hosts, which is what `pico cluster status --events`
+    /// sorts the merged tail by.
+    pub unix_ms: u64,
+    pub severity: Severity,
+    /// One of the [`kind`] constants.
+    pub kind: &'static str,
+    /// The graph the event concerns; empty for transport-level events.
+    pub graph: String,
+    /// Free-form `key=value`-style context.
+    pub detail: String,
+}
+
+impl Event {
+    /// The one-line wire/CLI rendering:
+    /// `<unix_ms> <severity> <kind> graph=<g|-> <detail>`.
+    pub fn render(&self) -> String {
+        format!(
+            "{} {} {} graph={} {}",
+            self.unix_ms,
+            self.severity.as_str(),
+            self.kind,
+            if self.graph.is_empty() { "-" } else { &self.graph },
+            self.detail
+        )
+    }
+}
+
+struct Journal {
+    events: VecDeque<Event>,
+    next_seq: u64,
+}
+
+fn journal() -> &'static Mutex<Journal> {
+    static JOURNAL: OnceLock<Mutex<Journal>> = OnceLock::new();
+    JOURNAL.get_or_init(|| {
+        Mutex::new(Journal {
+            events: VecDeque::with_capacity(EVENT_JOURNAL_CAP),
+            next_seq: 0,
+        })
+    })
+}
+
+fn unix_ms_now() -> u64 {
+    SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_millis().min(u64::MAX as u128) as u64)
+        .unwrap_or(0)
+}
+
+/// Append one event to the process journal (evicting the oldest past
+/// [`EVENT_JOURNAL_CAP`]) and bump `pico_events_total{severity=...}`.
+pub fn emit(severity: Severity, kind: &'static str, graph: &str, detail: impl Into<String>) {
+    super::global()
+        .counter(names::EVENTS_TOTAL, &[("severity", severity.as_str())])
+        .inc();
+    let mut j = journal().lock().unwrap();
+    let seq = j.next_seq;
+    j.next_seq += 1;
+    while j.events.len() >= EVENT_JOURNAL_CAP {
+        j.events.pop_front();
+    }
+    j.events.push_back(Event {
+        seq,
+        unix_ms: unix_ms_now(),
+        severity,
+        kind,
+        graph: graph.to_string(),
+        detail: detail.into(),
+    });
+}
+
+/// The newest `n` events (newest first), optionally keeping only
+/// severities at or above `min`.
+pub fn recent_events(n: usize, min: Option<Severity>) -> Vec<Event> {
+    let j = journal().lock().unwrap();
+    j.events
+        .iter()
+        .rev()
+        .filter(|e| min.map_or(true, |m| e.severity >= m))
+        .take(n)
+        .cloned()
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_and_parses() {
+        assert!(Severity::Info < Severity::Warn);
+        assert!(Severity::Warn < Severity::Error);
+        assert_eq!(Severity::parse("WARN"), Some(Severity::Warn));
+        assert_eq!(Severity::parse("error"), Some(Severity::Error));
+        assert_eq!(Severity::parse("bogus"), None);
+        assert_eq!(Severity::Error.as_str(), "error");
+    }
+
+    #[test]
+    fn journal_is_bounded_and_keeps_the_newest() {
+        // the journal is process-global and other tests may emit
+        // concurrently, so assert on our own uniquely-tagged events
+        let tag = "bounded-test";
+        for i in 0..EVENT_JOURNAL_CAP + 16 {
+            emit(Severity::Info, kind::DRAIN_START, "gj", format!("{tag} i={i}"));
+        }
+        let all = recent_events(usize::MAX, None);
+        assert!(all.len() <= EVENT_JOURNAL_CAP, "ring must stay bounded");
+        let newest_tag = format!("{tag} i={}", EVENT_JOURNAL_CAP + 15);
+        assert!(
+            all.iter().any(|e| e.detail == newest_tag),
+            "newest event must survive"
+        );
+        assert!(
+            !all.iter().any(|e| e.detail == format!("{tag} i=0")),
+            "oldest overflow event must be evicted"
+        );
+        // newest-first ordering by sequence number
+        let seqs: Vec<u64> = all.iter().map(|e| e.seq).collect();
+        assert!(seqs.windows(2).all(|w| w[0] > w[1]), "newest first");
+    }
+
+    #[test]
+    fn severity_filter_keeps_at_or_above() {
+        emit(Severity::Info, kind::DRAIN_START, "gs", "sev-filter info");
+        emit(Severity::Warn, kind::REPLICA_FAILOVER, "gs", "sev-filter warn");
+        emit(Severity::Error, kind::FLUSH_FAILED, "gs", "sev-filter error");
+        let warn_up = recent_events(usize::MAX, Some(Severity::Warn));
+        assert!(warn_up.iter().any(|e| e.detail == "sev-filter warn"));
+        assert!(warn_up.iter().any(|e| e.detail == "sev-filter error"));
+        assert!(!warn_up.iter().any(|e| e.detail == "sev-filter info"));
+        assert!(warn_up.iter().all(|e| e.severity >= Severity::Warn));
+    }
+
+    #[test]
+    fn render_is_one_structured_line() {
+        let e = Event {
+            seq: 7,
+            unix_ms: 1754000000123,
+            severity: Severity::Warn,
+            kind: kind::REPLICA_FAILOVER,
+            graph: "soc".into(),
+            detail: "replica=10.0.0.7:7571 err=dial".into(),
+        };
+        assert_eq!(
+            e.render(),
+            "1754000000123 warn replica_failover graph=soc replica=10.0.0.7:7571 err=dial"
+        );
+        let t = Event { graph: String::new(), ..e };
+        assert!(t.render().contains(" graph=- "), "{}", t.render());
+    }
+}

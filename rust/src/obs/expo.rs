@@ -162,7 +162,17 @@ pub struct PromText {
 /// lines are skipped, not fatal — the merger must survive a host
 /// running a newer build with extra series.
 pub fn parse_prom(text: &str) -> PromText {
+    parse_prom_strict(text).0
+}
+
+/// Like [`parse_prom`], but also reports how many non-comment,
+/// non-empty lines could NOT be parsed. `pico cluster status
+/// --metrics` uses the count to flag a host serving a truncated or
+/// corrupt exposition instead of silently merging only its readable
+/// part.
+pub fn parse_prom_strict(text: &str) -> (PromText, usize) {
     let mut out = PromText::default();
+    let mut skipped = 0usize;
     for line in text.lines() {
         let line = line.trim();
         if line.is_empty() {
@@ -172,6 +182,8 @@ pub fn parse_prom(text: &str) -> PromText {
             let mut it = rest.split_whitespace();
             if let (Some(name), Some(kind)) = (it.next(), it.next()) {
                 out.types.insert(name.to_string(), kind.to_string());
+            } else {
+                skipped += 1;
             }
             continue;
         }
@@ -180,12 +192,18 @@ pub fn parse_prom(text: &str) -> PromText {
         }
         // `name{labels} value` or `name value`; labels may hold spaces
         // only inside quotes, which our own renderer never emits
-        let Some(split_at) = line.rfind(' ') else { continue };
+        let Some(split_at) = line.rfind(' ') else {
+            skipped += 1;
+            continue;
+        };
         let (series, value) = line.split_at(split_at);
-        let Ok(v) = value.trim().parse::<f64>() else { continue };
+        let Ok(v) = value.trim().parse::<f64>() else {
+            skipped += 1;
+            continue;
+        };
         out.samples.insert(series.trim().to_string(), v);
     }
-    out
+    (out, skipped)
 }
 
 /// The base metric name of a series key (strips labels and histogram
@@ -284,6 +302,21 @@ mod tests {
         assert_eq!(lines[7 + NUM_BUCKETS], "# TYPE pico_uptime_seconds gauge");
         assert!(lines[8 + NUM_BUCKETS].starts_with("pico_uptime_seconds "));
         assert_eq!(lines.len(), 9 + NUM_BUCKETS);
+    }
+
+    #[test]
+    fn strict_parse_counts_malformed_lines() {
+        let good = render_prom(&sample_registry());
+        let (_, skipped) = parse_prom_strict(&good);
+        assert_eq!(skipped, 0, "our own exposition parses clean");
+        // a bad value, a line with no value at all; plain comments and
+        // blank lines stay free
+        let mangled = format!(
+            "{good}pico_broken{{graph=\"g1\"}} not-a-number\ntruncated-mid-line\n\n# plain comment\n"
+        );
+        let (p, skipped) = parse_prom_strict(&mangled);
+        assert_eq!(skipped, 2);
+        assert!(p.samples.contains_key("pico_serve_queries_total{graph=\"g1\"}"));
     }
 
     #[test]

@@ -1,0 +1,333 @@
+//! SLO rules evaluated into an opinionated verdict: `ok`, `degraded`,
+//! or `critical`, plus the reasons — the machine-readable answer
+//! behind the `HEALTH [graph]` verb and the non-zero exit of
+//! `pico cluster status --health`.
+//!
+//! Two kinds of rule feed one verdict:
+//!
+//! * **Windowed rules** read the sample ring ([`super::tsdb`]): the
+//!   flush p99 against its budget, and the burn rate (transport
+//!   cutoffs + error-severity events per second). They *skip* when the
+//!   ring holds too little data — a process with no sampler (or one
+//!   that just started) is not thereby unhealthy.
+//! * **Instantaneous rules** read the live registry directly: replica
+//!   lag in epochs and the count of replicas failing sync. These need
+//!   no history, so `HEALTH` is meaningful even without a sampler, and
+//!   they honor the optional graph filter (`HEALTH <graph>` judges one
+//!   graph's replication instead of the whole process).
+//!
+//! Thresholds come from [`SloConfig`]; each has an env override
+//! (`PICO_SLO_WINDOW_S`, `PICO_SLO_FLUSH_P99_US`,
+//! `PICO_SLO_REPLICA_LAG`, `PICO_SLO_BURN_PER_S`) so a deployment can
+//! tighten or loosen the budget without a rebuild.
+
+use super::registry::{Registry, Series, Value};
+use super::tsdb::Tsdb;
+use super::names;
+use std::sync::OnceLock;
+
+/// The verdict, ordered so `max` across rules (and across hosts in
+/// `pico cluster status --health`) is the aggregate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Verdict {
+    Ok,
+    Degraded,
+    Critical,
+}
+
+impl Verdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Verdict::Ok => "ok",
+            Verdict::Degraded => "degraded",
+            Verdict::Critical => "critical",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Verdict> {
+        match s {
+            "ok" => Some(Verdict::Ok),
+            "degraded" => Some(Verdict::Degraded),
+            "critical" => Some(Verdict::Critical),
+            _ => None,
+        }
+    }
+}
+
+/// The SLO thresholds. `degraded` at the base threshold; `critical`
+/// at the stated multiple (p99, burn) or the dedicated bound (lag).
+#[derive(Clone, Copy, Debug)]
+pub struct SloConfig {
+    /// Trailing window the tsdb rules evaluate over.
+    pub window_s: f64,
+    /// End-to-end flush p99 budget in microseconds; 2x is critical.
+    pub flush_p99_budget_us: u64,
+    /// Replica lag (epochs behind the committed head) that degrades.
+    pub replica_lag_warn: u64,
+    /// Replica lag that is critical.
+    pub replica_lag_crit: u64,
+    /// Cutoffs + error events per second that degrade; 10x is critical.
+    pub burn_warn_per_s: f64,
+}
+
+impl Default for SloConfig {
+    fn default() -> Self {
+        Self {
+            window_s: 60.0,
+            flush_p99_budget_us: 250_000,
+            replica_lag_warn: 3,
+            replica_lag_crit: 10,
+            burn_warn_per_s: 0.5,
+        }
+    }
+}
+
+impl SloConfig {
+    /// Defaults with env overrides applied; parsed once per process.
+    pub fn from_env() -> SloConfig {
+        static CFG: OnceLock<SloConfig> = OnceLock::new();
+        *CFG.get_or_init(|| {
+            let mut c = SloConfig::default();
+            if let Some(v) = env_parse::<f64>("PICO_SLO_WINDOW_S") {
+                if v > 0.0 {
+                    c.window_s = v;
+                }
+            }
+            if let Some(v) = env_parse::<u64>("PICO_SLO_FLUSH_P99_US") {
+                c.flush_p99_budget_us = v.max(1);
+            }
+            if let Some(v) = env_parse::<u64>("PICO_SLO_REPLICA_LAG") {
+                c.replica_lag_warn = v.max(1);
+                c.replica_lag_crit = c.replica_lag_crit.max(c.replica_lag_warn);
+            }
+            if let Some(v) = env_parse::<f64>("PICO_SLO_BURN_PER_S") {
+                if v > 0.0 {
+                    c.burn_warn_per_s = v;
+                }
+            }
+            c
+        })
+    }
+}
+
+fn env_parse<T: std::str::FromStr>(key: &str) -> Option<T> {
+    std::env::var(key).ok().and_then(|v| v.parse().ok())
+}
+
+/// The evaluated verdict plus one reason line per violated rule.
+#[derive(Clone, Debug)]
+pub struct HealthReport {
+    pub verdict: Verdict,
+    pub reasons: Vec<String>,
+}
+
+impl HealthReport {
+    fn note(&mut self, v: Verdict, reason: String) {
+        self.verdict = self.verdict.max(v);
+        self.reasons.push(reason);
+    }
+}
+
+/// Max of a gauge across the label sets of `name`, honoring the graph
+/// filter (series without a matching `graph` label are excluded when a
+/// filter is given).
+fn gauge_max(snap: &[Series], name: &str, graph: Option<&str>) -> Option<u64> {
+    snap.iter()
+        .filter(|s| s.name == name)
+        .filter(|s| match graph {
+            None => true,
+            Some(g) => s.labels.iter().any(|(k, v)| k == "graph" && v == g),
+        })
+        .filter_map(|s| match &s.value {
+            Value::Gauge(v) => Some(*v),
+            _ => None,
+        })
+        .max()
+}
+
+/// Evaluate every SLO rule against a tsdb and a registry. `graph`
+/// narrows the instantaneous replication rules to one graph's series.
+pub fn evaluate(ts: &Tsdb, reg: &Registry, cfg: &SloConfig, graph: Option<&str>) -> HealthReport {
+    let mut rep = HealthReport {
+        verdict: Verdict::Ok,
+        reasons: Vec::new(),
+    };
+    let w = cfg.window_s;
+
+    // windowed: flush p99 against its budget (skips without samples)
+    if let Some(p99) = ts.quantile(names::FLUSH_TOTAL_SECONDS, w, 0.99) {
+        if p99 > cfg.flush_p99_budget_us.saturating_mul(2) {
+            rep.note(
+                Verdict::Critical,
+                format!(
+                    "flush p99 {p99}us > 2x budget {}us over {w:.0}s",
+                    cfg.flush_p99_budget_us
+                ),
+            );
+        } else if p99 > cfg.flush_p99_budget_us {
+            rep.note(
+                Verdict::Degraded,
+                format!(
+                    "flush p99 {p99}us > budget {}us over {w:.0}s",
+                    cfg.flush_p99_budget_us
+                ),
+            );
+        }
+    }
+
+    // windowed: burn rate = transport cutoffs + error-severity events
+    let cutoffs = [names::NET_TIMED_OUT, names::NET_WRITE_STALLED, names::NET_REJECTED]
+        .iter()
+        .filter_map(|n| ts.rate(n, w))
+        .sum::<f64>();
+    let errors = ts
+        .rate_with(names::EVENTS_TOTAL, Some(("severity", "error")), w)
+        .unwrap_or(0.0);
+    let burn = cutoffs + errors;
+    if ts.samples_in(w) >= 2 && burn >= cfg.burn_warn_per_s {
+        let v = if burn >= cfg.burn_warn_per_s * 10.0 {
+            Verdict::Critical
+        } else {
+            Verdict::Degraded
+        };
+        rep.note(
+            v,
+            format!(
+                "burn rate {burn:.2}/s (cutoffs+errors) >= {:.2}/s over {w:.0}s",
+                cfg.burn_warn_per_s
+            ),
+        );
+    }
+
+    // instantaneous: replication, straight from the live registry
+    let snap = reg.snapshot();
+    if let Some(lag) = gauge_max(&snap, names::SYNC_LAG_EPOCHS, graph) {
+        if lag >= cfg.replica_lag_crit {
+            rep.note(
+                Verdict::Critical,
+                format!("replica lag {lag} epochs >= {}", cfg.replica_lag_crit),
+            );
+        } else if lag >= cfg.replica_lag_warn {
+            rep.note(
+                Verdict::Degraded,
+                format!("replica lag {lag} epochs >= {}", cfg.replica_lag_warn),
+            );
+        }
+    }
+    if let Some(failed) = gauge_max(&snap, names::SYNC_FAILED_REPLICAS, graph) {
+        if failed > 0 {
+            rep.note(
+                Verdict::Degraded,
+                format!("{failed} replica(s) failing sync"),
+            );
+        }
+    }
+    rep
+}
+
+/// [`evaluate`] against the process-global tsdb and registry with the
+/// env-tuned thresholds — what the `HEALTH` verb serves.
+pub fn evaluate_global(graph: Option<&str>) -> HealthReport {
+    evaluate(
+        super::tsdb::global(),
+        super::registry::global(),
+        &SloConfig::from_env(),
+        graph,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> SloConfig {
+        SloConfig::default()
+    }
+
+    #[test]
+    fn empty_process_is_ok() {
+        let ts = Tsdb::with_cap(8);
+        let reg = Registry::new();
+        let rep = evaluate(&ts, &reg, &cfg(), None);
+        assert_eq!(rep.verdict, Verdict::Ok);
+        assert!(rep.reasons.is_empty());
+    }
+
+    #[test]
+    fn verdict_orders_and_parses() {
+        assert!(Verdict::Ok < Verdict::Degraded);
+        assert!(Verdict::Degraded < Verdict::Critical);
+        assert_eq!(Verdict::parse("degraded"), Some(Verdict::Degraded));
+        assert_eq!(Verdict::parse("meh"), None);
+        assert_eq!(Verdict::Critical.as_str(), "critical");
+    }
+
+    #[test]
+    fn slow_flushes_degrade_then_go_critical() {
+        let c = cfg();
+        let reg = Registry::new();
+        let ts = Tsdb::with_cap(8);
+        let h = reg.histogram(names::FLUSH_TOTAL_SECONDS, &[("graph", "g")]);
+        ts.record_at(0.0, reg.snapshot());
+        for _ in 0..50 {
+            h.record(c.flush_p99_budget_us + 10_000);
+        }
+        ts.record_at(30.0, reg.snapshot());
+        let rep = evaluate(&ts, &reg, &c, None);
+        assert_eq!(rep.verdict, Verdict::Degraded, "{:?}", rep.reasons);
+        assert!(rep.reasons[0].contains("flush p99"));
+
+        let reg2 = Registry::new();
+        let ts2 = Tsdb::with_cap(8);
+        let h2 = reg2.histogram(names::FLUSH_TOTAL_SECONDS, &[("graph", "g")]);
+        ts2.record_at(0.0, reg2.snapshot());
+        for _ in 0..50 {
+            h2.record(c.flush_p99_budget_us * 8);
+        }
+        ts2.record_at(30.0, reg2.snapshot());
+        assert_eq!(evaluate(&ts2, &reg2, &c, None).verdict, Verdict::Critical);
+    }
+
+    #[test]
+    fn cutoff_burn_rate_degrades() {
+        let reg = Registry::new();
+        let ts = Tsdb::with_cap(8);
+        let t = reg.counter(names::NET_TIMED_OUT, &[]);
+        ts.record_at(0.0, reg.snapshot());
+        t.add(60); // 2/s over 30s >= 0.5/s
+        ts.record_at(30.0, reg.snapshot());
+        let rep = evaluate(&ts, &reg, &cfg(), None);
+        assert_eq!(rep.verdict, Verdict::Degraded, "{:?}", rep.reasons);
+        assert!(rep.reasons[0].contains("burn rate"));
+    }
+
+    #[test]
+    fn replica_lag_and_failed_sync_need_no_sampler() {
+        let reg = Registry::new();
+        let ts = Tsdb::with_cap(8); // empty: windowed rules skip
+        let c = cfg();
+        reg.gauge(names::SYNC_LAG_EPOCHS, &[("graph", "a"), ("shard", "0")])
+            .set(c.replica_lag_warn);
+        let rep = evaluate(&ts, &reg, &c, None);
+        assert_eq!(rep.verdict, Verdict::Degraded);
+        assert!(rep.reasons[0].contains("replica lag"));
+
+        reg.gauge(names::SYNC_LAG_EPOCHS, &[("graph", "a"), ("shard", "0")])
+            .set(c.replica_lag_crit);
+        assert_eq!(evaluate(&ts, &reg, &c, None).verdict, Verdict::Critical);
+
+        // the graph filter isolates verdicts per graph
+        assert_eq!(
+            evaluate(&ts, &reg, &c, Some("other")).verdict,
+            Verdict::Ok,
+            "a filtered graph does not inherit another graph's lag"
+        );
+        reg.gauge(names::SYNC_FAILED_REPLICAS, &[("graph", "other")]).set(1);
+        let rep = evaluate(&ts, &reg, &c, Some("other"));
+        assert_eq!(rep.verdict, Verdict::Degraded);
+        assert!(rep.reasons[0].contains("failing sync"));
+        // and recovery flips it back
+        reg.gauge(names::SYNC_FAILED_REPLICAS, &[("graph", "other")]).set(0);
+        assert_eq!(evaluate(&ts, &reg, &c, Some("other")).verdict, Verdict::Ok);
+    }
+}

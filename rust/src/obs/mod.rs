@@ -22,6 +22,13 @@
 //! * [`expo`] — Prometheus-text and JSON renderings (`METRICS PROM`,
 //!   `METRICS JSON`), plus the parser/merger behind
 //!   `pico cluster status --metrics`.
+//! * [`tsdb`] — a bounded in-process sample ring over the registry
+//!   with windowed rate/quantile queries; the sampler thread in
+//!   `pico serve` feeds it and the `STATS [window_s]` verb reads it.
+//! * [`events`] — the severity-tagged structured event journal behind
+//!   the `EVENTS [n]` verb and `pico cluster status --events`.
+//! * [`health`] — SLO rules over the tsdb and registry, folded into
+//!   the `ok|degraded|critical` verdict of the `HEALTH` verb.
 //!
 //! # Metric-name reference
 //!
@@ -46,11 +53,15 @@
 //! | `pico_net_timed_out_total` | counter | — |
 //! | `pico_net_write_stalled_total` | counter | — |
 //! | `pico_net_reclaimed_total` | counter | — |
+//! | `pico_slow_queries_total` | counter | `graph` |
+//! | `pico_events_total` | counter | `severity` |
+//! | `pico_sampler_samples_total` | counter | — |
 //! | `pico_net_active` | gauge | — |
 //! | `pico_net_queued` | gauge | — |
 //! | `pico_net_workers` | gauge | — |
 //! | `pico_net_conn_cap` | gauge | — |
 //! | `pico_sync_lag_epochs` | gauge | `graph`, `shard` |
+//! | `pico_sync_failed_replicas` | gauge | `graph` |
 //! | `pico_graph_epoch` | gauge | `graph` |
 //! | `pico_uptime_seconds` | gauge | — |
 //! | `pico_query_seconds` | histogram | `graph` |
@@ -74,20 +85,49 @@
 //! recorded host-side under the shard's hosted graph name (e.g.
 //! `soc/shard1`), so a coordinator scrape and a shard-host scrape stay
 //! distinguishable after a merge.
+//!
+//! # Event-kind reference
+//!
+//! Every kind the structured event journal ([`events`]) emits, with
+//! its severity and source. CI greps the constants in
+//! [`events::kind`] against this table, so a new event kind cannot
+//! land undocumented.
+//!
+//! | kind | severity | emitted by |
+//! |---|---|---|
+//! | `replica_failover` | warn | `cluster/index.rs` — a replica read failed, next replica took it |
+//! | `sync_full_ship` | warn | `cluster/index.rs` — delta catch-up fell back to a full manifest ship |
+//! | `sync_failed` | error | `cluster/index.rs` — a replica could not be synced this pass |
+//! | `flush_failed` | error | `cluster/index.rs` — a cluster flush died mid-apply |
+//! | `crossover_recompute` | info | `service/batch.rs` — batch crossed the incremental threshold, full recompute |
+//! | `refine_round_failed` | error | `shard/router.rs` — a refine round lost a shard backend |
+//! | `slow_loris_cutoff` | warn | `net/pool.rs` — request stalled mid-read past the stall timeout |
+//! | `write_stall_cutoff` | warn | `net/pool.rs` — peer stopped draining staged replies |
+//! | `idle_reclaim` | info | `net/pool.rs` — idle connection reclaimed at the cap |
+//! | `conn_rejected` | warn | `net/pool.rs` — accept refused over the connection cap |
+//! | `auth_reject` | warn | `net/conn.rs` — bad `AUTH` token or gated verb without one |
+//! | `drain_start` | info | `net/pool.rs` — graceful shutdown began draining |
+//! | `drain_finish` | info | `net/pool.rs` — drain completed (detail says if fully drained) |
 
+pub mod events;
 pub mod expo;
+pub mod health;
 pub mod hist;
 pub mod names;
 pub mod registry;
 pub mod trace;
+pub mod tsdb;
 
+pub use events::{emit, recent_events, Event, Severity};
 pub use expo::{merge_prom, parse_prom, render_json, render_prom};
+pub use health::{HealthReport, SloConfig, Verdict};
 pub use hist::{HistSnapshot, Histogram};
 pub use registry::{global, Counter, Gauge, Registry, Series, Value};
 pub use trace::{
     next_trace_id, recent_traces, record_slow_query, record_trace, FlushTrace, Span, Trace,
     TraceScope,
 };
+pub use tsdb::{Sampler, Tsdb};
 
 use std::time::Duration;
 

@@ -36,6 +36,12 @@ pub const NET_TIMED_OUT: &str = "pico_net_timed_out_total";
 pub const NET_WRITE_STALLED: &str = "pico_net_write_stalled_total";
 /// Idle connections reclaimed while the pool sat at its cap.
 pub const NET_RECLAIMED: &str = "pico_net_reclaimed_total";
+/// Queries slower than the slow-query threshold, per graph.
+pub const SLOW_QUERIES: &str = "pico_slow_queries_total";
+/// Structured journal events emitted, per severity.
+pub const EVENTS_TOTAL: &str = "pico_events_total";
+/// Registry snapshots taken by the tsdb sampler thread.
+pub const SAMPLER_SAMPLES: &str = "pico_sampler_samples_total";
 
 // --- gauges -------------------------------------------------------------
 
@@ -49,6 +55,8 @@ pub const NET_WORKERS: &str = "pico_net_workers";
 pub const NET_CONN_CAP: &str = "pico_net_conn_cap";
 /// Epochs a replica trails the committed head, per shard.
 pub const SYNC_LAG_EPOCHS: &str = "pico_sync_lag_epochs";
+/// Replicas the last sync pass failed to catch up, per graph.
+pub const SYNC_FAILED_REPLICAS: &str = "pico_sync_failed_replicas";
 /// The published epoch of a hosted graph.
 pub const GRAPH_EPOCH: &str = "pico_graph_epoch";
 /// Seconds since the registry (process) started.

@@ -16,18 +16,45 @@
 //!   turns that into a child span under the right stage. The flush lock
 //!   serializes flushes, so one scope per cluster is race-free.
 
+use super::names;
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Mutex, OnceLock};
 use std::time::{Duration, Instant, SystemTime, UNIX_EPOCH};
 
-/// How many recent traces the ring keeps.
+/// How many recent traces the ring keeps by default — tunable at
+/// startup with `pico serve --trace-ring N` (see [`set_trace_ring_cap`]).
 pub const TRACE_RING_CAP: usize = 64;
 
 /// Queries at or above this (µs) land in the trace ring; faster ones
 /// only feed the latency histograms (the ring would otherwise be all
-/// point queries and no flushes).
+/// point queries and no flushes). `PICO_SLOW_QUERY_US` overrides it.
 pub const SLOW_QUERY_US: u64 = 10_000;
+
+static RING_CAP: AtomicUsize = AtomicUsize::new(TRACE_RING_CAP);
+
+/// The effective trace-ring capacity.
+pub fn trace_ring_cap() -> usize {
+    RING_CAP.load(Ordering::Relaxed)
+}
+
+/// Resize the trace ring (`pico serve --trace-ring N`). Takes effect on
+/// the next [`record_trace`]; shrinking evicts oldest-first.
+pub fn set_trace_ring_cap(n: usize) {
+    RING_CAP.store(n.max(1), Ordering::Relaxed);
+}
+
+/// The effective slow-query threshold in µs: `PICO_SLOW_QUERY_US` when
+/// set and parseable, else [`SLOW_QUERY_US`]. Parsed once per process.
+pub fn slow_query_threshold_us() -> u64 {
+    static CACHE: OnceLock<u64> = OnceLock::new();
+    *CACHE.get_or_init(|| {
+        std::env::var("PICO_SLOW_QUERY_US")
+            .ok()
+            .and_then(|v| v.trim().parse::<u64>().ok())
+            .unwrap_or(SLOW_QUERY_US)
+    })
+}
 
 /// Mint a fresh trace id: a counter seeded from the wall clock at first
 /// use, so ids from different hosts almost never collide.
@@ -100,8 +127,9 @@ fn ring() -> &'static Mutex<VecDeque<Trace>> {
 
 /// Push a finished trace into the bounded ring (oldest evicted).
 pub fn record_trace(t: Trace) {
+    let cap = trace_ring_cap();
     let mut r = ring().lock().unwrap();
-    if r.len() == TRACE_RING_CAP {
+    while r.len() >= cap {
         r.pop_front();
     }
     r.push_back(t);
@@ -114,12 +142,16 @@ pub fn recent_traces(n: usize) -> Vec<Trace> {
 }
 
 /// Record a single-span query trace — only when it was slow enough to
-/// be worth a ring slot (see [`SLOW_QUERY_US`]).
+/// be worth a ring slot (see [`slow_query_threshold_us`]). Every slow
+/// query also bumps `pico_slow_queries_total{graph}`.
 pub fn record_slow_query(graph: &str, verb: &str, dur: Duration) {
     let dur_us = dur.as_micros().min(u64::MAX as u128) as u64;
-    if dur_us < SLOW_QUERY_US {
+    if dur_us < slow_query_threshold_us() {
         return;
     }
+    super::global()
+        .counter(names::SLOW_QUERIES, &[("graph", graph)])
+        .inc();
     record_trace(Trace {
         id: next_trace_id(),
         kind: "query",
@@ -278,6 +310,15 @@ impl TraceScope {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn slow_query_threshold_defaults_without_env() {
+        if std::env::var("PICO_SLOW_QUERY_US").is_err() {
+            assert_eq!(slow_query_threshold_us(), SLOW_QUERY_US);
+        }
+        // the runtime cap starts at the compiled default and clamps to 1
+        assert!(trace_ring_cap() >= 1);
+    }
 
     #[test]
     fn trace_ids_are_distinct() {

@@ -1,0 +1,500 @@
+//! A zero-dependency, bounded in-process time-series ring over the
+//! metrics registry — the "time dimension" the scrape-only exposition
+//! lacks.
+//!
+//! A [`Sampler`] thread in `pico serve` snapshots
+//! [`super::registry::global`] every `--sample-interval` (default 1 s)
+//! into a fixed-size ring of [`SAMPLE_RING_CAP`] whole-registry
+//! samples (~15 min of history at the default cadence). Windowed
+//! queries then answer the questions a single scrape cannot:
+//!
+//! * [`Tsdb::rate`] — counter increase per second over the last
+//!   `window_s` seconds (summed across label sets; optionally pinned
+//!   to one label via [`Tsdb::rate_with`]).
+//! * [`Tsdb::quantile`] — a histogram quantile *over a window*: the
+//!   cumulative snapshot at the window start is subtracted bucket-wise
+//!   from the newest one, so the readout reflects only samples
+//!   recorded inside the window instead of the whole process lifetime.
+//! * [`Tsdb::gauge_max`] — the newest value of a gauge (max across
+//!   label sets).
+//!
+//! Everything is exposed over the wire by the `STATS [window_s]
+//! [JSON]` verb (rendered by [`render_window_text`] /
+//! [`render_window_json`]) and consumed by `obs/health.rs`'s SLO rules
+//! and `pico top`. Storage is bounded by construction: one
+//! `VecDeque` of samples, oldest evicted first — no allocation growth
+//! over a long-lived serve process beyond the ring itself.
+
+use super::hist::{HistSnapshot, NUM_BUCKETS};
+use super::registry::{Series, Value};
+use super::names;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::thread;
+use std::time::{Duration, Instant};
+
+/// Samples the ring retains; at the default 1 s cadence this is ~15
+/// minutes of history.
+pub const SAMPLE_RING_CAP: usize = 900;
+
+struct Sample {
+    /// Seconds since the tsdb was created.
+    t_s: f64,
+    series: Vec<Series>,
+}
+
+struct Inner {
+    samples: VecDeque<Sample>,
+    cap: usize,
+}
+
+/// The bounded sample ring. One process-wide instance ([`global`])
+/// backs the `STATS`/`HEALTH` verbs; tests construct their own and
+/// drive it deterministically through [`Tsdb::record_at`].
+pub struct Tsdb {
+    start: Instant,
+    inner: Mutex<Inner>,
+}
+
+impl Default for Tsdb {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tsdb {
+    pub fn new() -> Self {
+        Self::with_cap(SAMPLE_RING_CAP)
+    }
+
+    pub fn with_cap(cap: usize) -> Self {
+        Self {
+            start: Instant::now(),
+            inner: Mutex::new(Inner {
+                samples: VecDeque::new(),
+                cap: cap.max(2),
+            }),
+        }
+    }
+
+    /// Record a registry snapshot now.
+    pub fn record(&self, series: Vec<Series>) {
+        self.record_at(self.start.elapsed().as_secs_f64(), series);
+    }
+
+    /// Record a snapshot at an explicit timestamp (seconds since the
+    /// tsdb's creation) — the deterministic entry point tests use.
+    pub fn record_at(&self, t_s: f64, series: Vec<Series>) {
+        let mut g = self.inner.lock().unwrap();
+        while g.samples.len() >= g.cap {
+            g.samples.pop_front();
+        }
+        g.samples.push_back(Sample { t_s, series });
+    }
+
+    /// Samples currently retained.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Seconds of history between the oldest and newest retained sample.
+    pub fn retention_s(&self) -> f64 {
+        let g = self.inner.lock().unwrap();
+        match (g.samples.front(), g.samples.back()) {
+            (Some(a), Some(b)) => b.t_s - a.t_s,
+            _ => 0.0,
+        }
+    }
+
+    /// Samples whose timestamp falls inside the trailing window.
+    pub fn samples_in(&self, window_s: f64) -> usize {
+        let g = self.inner.lock().unwrap();
+        let Some(newest) = g.samples.back() else {
+            return 0;
+        };
+        let cutoff = newest.t_s - window_s;
+        g.samples.iter().filter(|s| s.t_s >= cutoff).count()
+    }
+
+    /// Run `f` over (oldest-in-window, newest) — the endpoints every
+    /// windowed query differences. `None` with fewer than two samples
+    /// in the window (no rate is computable from one point).
+    fn with_window<R>(&self, window_s: f64, f: impl FnOnce(&Sample, &Sample) -> R) -> Option<R> {
+        let g = self.inner.lock().unwrap();
+        let newest = g.samples.back()?;
+        let cutoff = newest.t_s - window_s;
+        let oldest = g.samples.iter().find(|s| s.t_s >= cutoff)?;
+        if oldest.t_s >= newest.t_s {
+            return None;
+        }
+        Some(f(oldest, newest))
+    }
+
+    /// Counter increase per second over the trailing window, summed
+    /// across every label set of `name`.
+    pub fn rate(&self, name: &str, window_s: f64) -> Option<f64> {
+        self.rate_with(name, None, window_s)
+    }
+
+    /// Like [`Tsdb::rate`], but only label sets carrying `label` (e.g.
+    /// `("severity", "error")`) contribute.
+    pub fn rate_with(
+        &self,
+        name: &str,
+        label: Option<(&str, &str)>,
+        window_s: f64,
+    ) -> Option<f64> {
+        let sum = |s: &Sample| -> u64 {
+            s.series
+                .iter()
+                .filter(|sr| sr.name == name && label_matches(sr, label))
+                .map(|sr| match &sr.value {
+                    Value::Counter(v) => *v,
+                    _ => 0,
+                })
+                .sum()
+        };
+        self.with_window(window_s, |oldest, newest| {
+            let dt = newest.t_s - oldest.t_s;
+            sum(newest).saturating_sub(sum(oldest)) as f64 / dt
+        })
+    }
+
+    /// Histogram quantile over the trailing window: merge `name`'s
+    /// snapshots across label sets at both window endpoints, subtract
+    /// the older cumulative counts bucket-wise, and read the quantile
+    /// of what remains. `None` when no samples were recorded inside
+    /// the window (the all-time distribution would be misleading).
+    pub fn quantile(&self, name: &str, window_s: f64, p: f64) -> Option<u64> {
+        let merged = |s: &Sample| -> HistSnapshot {
+            let mut acc = HistSnapshot::default();
+            for sr in s.series.iter().filter(|sr| sr.name == name) {
+                if let Value::Histogram(h) = &sr.value {
+                    acc.merge(h);
+                }
+            }
+            acc
+        };
+        self.with_window(window_s, |oldest, newest| {
+            let newer = merged(newest);
+            let older = merged(oldest);
+            let mut w = HistSnapshot::default();
+            for i in 0..NUM_BUCKETS {
+                w.buckets[i] = newer.buckets[i].saturating_sub(older.buckets[i]);
+            }
+            w.sum = newer.sum.saturating_sub(older.sum);
+            if w.count() == 0 {
+                None
+            } else {
+                Some(w.quantile(p))
+            }
+        })
+        .flatten()
+    }
+
+    /// The newest sample's value of gauge `name`, max across label sets.
+    pub fn gauge_max(&self, name: &str) -> Option<u64> {
+        let g = self.inner.lock().unwrap();
+        let newest = g.samples.back()?;
+        newest
+            .series
+            .iter()
+            .filter(|sr| sr.name == name)
+            .filter_map(|sr| match &sr.value {
+                Value::Gauge(v) => Some(*v),
+                _ => None,
+            })
+            .max()
+    }
+}
+
+fn label_matches(sr: &Series, label: Option<(&str, &str)>) -> bool {
+    match label {
+        None => true,
+        Some((k, v)) => sr.labels.iter().any(|(lk, lv)| lk == k && lv == v),
+    }
+}
+
+/// The process-wide sample ring the sampler records into and the
+/// `STATS`/`HEALTH` verbs read from.
+pub fn global() -> &'static Tsdb {
+    static GLOBAL: OnceLock<Tsdb> = OnceLock::new();
+    GLOBAL.get_or_init(Tsdb::new)
+}
+
+/// The background sampler: snapshots the global registry into the
+/// global tsdb every `interval`. Same lifecycle shape as the replica
+/// sync daemon — sliced sleeps so `stop` takes effect within ~10 ms,
+/// and `Drop` stops and joins.
+pub struct Sampler {
+    stop: Arc<AtomicBool>,
+    ticks: Arc<AtomicU64>,
+    join: Option<thread::JoinHandle<()>>,
+}
+
+impl Sampler {
+    pub fn spawn(interval: Duration) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let ticks = Arc::new(AtomicU64::new(0));
+        let (t_stop, t_ticks) = (stop.clone(), ticks.clone());
+        let join = thread::spawn(move || {
+            let slice = Duration::from_millis(10);
+            while !t_stop.load(Ordering::Relaxed) {
+                global().record(super::registry::global().snapshot());
+                super::registry::global()
+                    .counter(names::SAMPLER_SAMPLES, &[])
+                    .inc();
+                t_ticks.fetch_add(1, Ordering::Relaxed);
+                let mut slept = Duration::ZERO;
+                while slept < interval && !t_stop.load(Ordering::Relaxed) {
+                    let d = slice.min(interval - slept);
+                    thread::sleep(d);
+                    slept += d;
+                }
+            }
+        });
+        Self {
+            stop,
+            ticks,
+            join: Some(join),
+        }
+    }
+
+    /// Samples taken so far.
+    pub fn ticks(&self) -> u64 {
+        self.ticks.load(Ordering::Relaxed)
+    }
+
+    pub fn stop(&self) {
+        self.stop.store(true, Ordering::Relaxed);
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop();
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+/// The derived signals `STATS` reports, in display order. Each entry is
+/// `(key, value)`; `None` means the window holds too little data.
+pub fn window_stats(ts: &Tsdb, window_s: f64) -> Vec<(&'static str, Option<f64>)> {
+    let q99 = |name: &str| ts.quantile(name, window_s, 0.99).map(|v| v as f64);
+    let cutoffs = [names::NET_TIMED_OUT, names::NET_WRITE_STALLED, names::NET_REJECTED]
+        .iter()
+        .filter_map(|n| ts.rate(n, window_s))
+        .fold(None, |acc: Option<f64>, r| Some(acc.unwrap_or(0.0) + r));
+    vec![
+        ("qps", ts.rate(names::SERVE_QUERIES, window_s)),
+        ("edits_per_s", ts.rate(names::SERVE_EDITS, window_s)),
+        ("flushes_per_s", ts.rate(names::SERVE_BATCHES, window_s)),
+        ("query_p99_us", q99(names::QUERY_SECONDS)),
+        ("flush_total_p99_us", q99(names::FLUSH_TOTAL_SECONDS)),
+        ("flush_apply_p99_us", q99(names::FLUSH_APPLY_SECONDS)),
+        ("flush_refine_p99_us", q99(names::FLUSH_REFINE_SECONDS)),
+        ("replica_lag_epochs", ts.gauge_max(names::SYNC_LAG_EPOCHS).map(|v| v as f64)),
+        ("net_cutoffs_per_s", cutoffs),
+        ("slow_queries_per_s", ts.rate(names::SLOW_QUERIES, window_s)),
+        (
+            "error_events_per_s",
+            ts.rate_with(names::EVENTS_TOTAL, Some(("severity", "error")), window_s),
+        ),
+    ]
+}
+
+/// `STATS` text body: one `key value` line per signal; `n/a` where the
+/// window holds too little data.
+pub fn render_window_text(ts: &Tsdb, window_s: f64) -> Vec<String> {
+    window_stats(ts, window_s)
+        .into_iter()
+        .map(|(k, v)| match v {
+            Some(v) => format!("{k} {v:.3}"),
+            None => format!("{k} n/a"),
+        })
+        .collect()
+}
+
+/// `STATS … JSON` body: one object, `null` where data is missing.
+pub fn render_window_json(ts: &Tsdb, window_s: f64) -> String {
+    let mut out = String::from("{");
+    out.push_str(&format!(
+        "\"window_s\":{:.0},\"samples\":{}",
+        window_s,
+        ts.samples_in(window_s)
+    ));
+    for (k, v) in window_stats(ts, window_s) {
+        match v {
+            Some(v) => out.push_str(&format!(",\"{k}\":{v:.3}")),
+            None => out.push_str(&format!(",\"{k}\":null")),
+        }
+    }
+    out.push('}');
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::registry::Registry;
+    use crate::util::rng::Rng;
+
+    fn counter_sample(reg: &Registry, name: &str, v: u64) -> Vec<Series> {
+        reg.counter(name, &[("graph", "g")]).set_total(v);
+        reg.snapshot()
+    }
+
+    #[test]
+    fn ring_wraps_and_keeps_the_newest_window() {
+        let ts = Tsdb::with_cap(8);
+        for i in 0..20u64 {
+            ts.record_at(i as f64, vec![]);
+        }
+        assert_eq!(ts.len(), 8, "ring stays at cap");
+        // oldest retained sample is t=12, newest t=19
+        assert!((ts.retention_s() - 7.0).abs() < 1e-9);
+        assert_eq!(ts.samples_in(3.0), 4, "t in 16..=19");
+        assert_eq!(ts.samples_in(1000.0), 8);
+    }
+
+    #[test]
+    fn rate_is_increase_over_window() {
+        let reg = Registry::new();
+        let ts = Tsdb::with_cap(64);
+        ts.record_at(0.0, counter_sample(&reg, "pico_serve_queries_total", 100));
+        ts.record_at(10.0, counter_sample(&reg, "pico_serve_queries_total", 400));
+        // full window: (400 - 100) / 10s
+        let r = ts.rate("pico_serve_queries_total", 60.0).unwrap();
+        assert!((r - 30.0).abs() < 1e-9, "{r}");
+        // one sample in window -> no rate
+        assert!(ts.rate("pico_serve_queries_total", 5.0).is_none());
+        // unknown series: both endpoints sum to 0 -> rate 0
+        assert_eq!(ts.rate("pico_nonexistent_total", 60.0), Some(0.0));
+    }
+
+    #[test]
+    fn rate_sums_label_sets_and_filters_by_label() {
+        let reg = Registry::new();
+        let ts = Tsdb::with_cap(64);
+        reg.counter("pico_events_total", &[("severity", "error")]).set_total(0);
+        reg.counter("pico_events_total", &[("severity", "info")]).set_total(0);
+        ts.record_at(0.0, reg.snapshot());
+        reg.counter("pico_events_total", &[("severity", "error")]).set_total(5);
+        reg.counter("pico_events_total", &[("severity", "info")]).set_total(45);
+        ts.record_at(10.0, reg.snapshot());
+        let all = ts.rate("pico_events_total", 60.0).unwrap();
+        assert!((all - 5.0).abs() < 1e-9, "{all}");
+        let err = ts
+            .rate_with("pico_events_total", Some(("severity", "error")), 60.0)
+            .unwrap();
+        assert!((err - 0.5).abs() < 1e-9, "{err}");
+    }
+
+    #[test]
+    fn windowed_rate_matches_a_random_walk_oracle() {
+        // property: for any monotone counter walk and any window, the
+        // tsdb rate equals (newest - oldest_in_window) / dt computed
+        // directly from the walk
+        let mut rng = Rng::new(99);
+        for round in 0..10 {
+            let reg = Registry::new();
+            let ts = Tsdb::with_cap(SAMPLE_RING_CAP);
+            let n = 20 + rng.below(40) as usize;
+            let mut total = 0u64;
+            let mut walk = Vec::new(); // (t, total)
+            for i in 0..n {
+                total += rng.below(50);
+                let t = i as f64;
+                walk.push((t, total));
+                ts.record_at(t, counter_sample(&reg, "pico_walk_total", total));
+            }
+            for w in [3.0, 7.0, 1000.0] {
+                let newest = *walk.last().unwrap();
+                let cutoff = newest.0 - w;
+                let oldest = walk.iter().find(|(t, _)| *t >= cutoff).unwrap();
+                let got = ts.rate("pico_walk_total", w);
+                if oldest.0 >= newest.0 {
+                    assert!(got.is_none());
+                } else {
+                    let want = (newest.1 - oldest.1) as f64 / (newest.0 - oldest.0);
+                    let got = got.unwrap();
+                    assert!((got - want).abs() < 1e-9, "round {round} w={w}: {got} vs {want}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_quantile_sees_only_the_window() {
+        let reg = Registry::new();
+        let ts = Tsdb::with_cap(64);
+        let h = reg.histogram("pico_q_seconds", &[("graph", "g")]);
+        // before the window: a thousand fast samples
+        for _ in 0..1000 {
+            h.record(10);
+        }
+        ts.record_at(0.0, reg.snapshot());
+        // inside the window: ten slow ones
+        for _ in 0..10 {
+            h.record(100_000);
+        }
+        ts.record_at(30.0, reg.snapshot());
+        // all-time p99 would be ~10; the windowed one must see only the
+        // slow tail
+        let p99 = ts.quantile("pico_q_seconds", 60.0, 0.99).unwrap();
+        assert!(p99 >= 100_000, "windowed p99 {p99} must reflect the slow samples");
+        // a window covering only the newest sample has no pair to diff
+        assert!(ts.quantile("pico_q_seconds", 10.0, 0.99).is_none());
+        // nothing recorded between the endpoints -> None, not the
+        // all-time distribution
+        ts.record_at(40.0, reg.snapshot());
+        assert!(ts.quantile("pico_q_seconds", 8.0, 0.99).is_none());
+    }
+
+    #[test]
+    fn gauge_max_reads_the_newest_sample() {
+        let reg = Registry::new();
+        let ts = Tsdb::with_cap(64);
+        reg.gauge("pico_lag", &[("shard", "0")]).set(9);
+        reg.gauge("pico_lag", &[("shard", "1")]).set(2);
+        ts.record_at(0.0, reg.snapshot());
+        assert_eq!(ts.gauge_max("pico_lag"), Some(9));
+        reg.gauge("pico_lag", &[("shard", "0")]).set(1);
+        ts.record_at(1.0, reg.snapshot());
+        assert_eq!(ts.gauge_max("pico_lag"), Some(2), "newest sample wins");
+        assert_eq!(ts.gauge_max("pico_other"), None);
+    }
+
+    #[test]
+    fn render_text_and_json_cover_every_signal() {
+        let ts = Tsdb::with_cap(8);
+        let lines = render_window_text(&ts, 60.0);
+        assert_eq!(lines.len(), window_stats(&ts, 60.0).len());
+        assert!(lines.iter().any(|l| l.starts_with("qps ")));
+        assert!(lines.iter().all(|l| l.ends_with("n/a")), "empty tsdb -> all n/a");
+        let json = render_window_json(&ts, 60.0);
+        assert!(json.starts_with('{') && json.ends_with('}'));
+        assert!(json.contains("\"qps\":null"));
+        assert!(json.contains("\"samples\":0"));
+    }
+
+    #[test]
+    fn sampler_records_into_the_global_ring_and_stops() {
+        let before = global().len();
+        let s = Sampler::spawn(Duration::from_millis(5));
+        let deadline = Instant::now() + Duration::from_secs(5);
+        while s.ticks() < 3 && Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert!(s.ticks() >= 3, "sampler must tick");
+        assert!(global().len() > before);
+        drop(s); // stops and joins
+    }
+}

@@ -152,6 +152,14 @@ pub fn apply_batch(index: &CoreIndex, edits: &[EdgeEdit], cfg: &BatchConfig) -> 
             (dc.apply_batch(&batch), false)
         }
     });
+    if recomputed {
+        crate::obs::events::emit(
+            crate::obs::Severity::Info,
+            crate::obs::events::kind::CROSSOVER_RECOMPUTE,
+            index.name(),
+            format!("applied={applied} crossed the incremental threshold; full recompute"),
+        );
+    }
     BatchOutcome {
         snapshot,
         submitted: edits.len(),

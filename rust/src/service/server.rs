@@ -34,9 +34,12 @@
 //! | `DELETE <u> <v>` | `OK pending=<n>` |
 //! | `FLUSH` | `OK epoch=<e> submitted=<s> applied=<a> coalesced=<c> changed=<g> recomputed=<r> [shards=<n> rounds=<r> boundary=<b>] ms=<t>` |
 //! | `STATS` | `OK queries=<q> edits=<e> batches=<b> recomputes=<r> graphs=<g>` |
+//! | `STATS <window_s> [JSON]` | `OK stats window=<w>s samples=<n> lines=<l>` + one `key value` line per windowed signal (qps, edits/flushes per second, query/flush-stage p99s in µs, replica lag, cutoff/error rates) computed from the [`crate::obs::tsdb`] sample ring over the trailing `window_s` seconds; `n/a` where the ring holds too little data (no sampler, or just started). With `JSON`, one JSON object instead (`null` for missing). The ring is fed by the `pico serve --sample-interval` sampler |
 //! | `METRICS` | `OK workers=<w> conn_cap=<c> accepted=<a> active=<n> queued=<q> rejected=<r> timed_out=<t> write_stalled=<s> reclaimed=<i>` — transport counters, answered by [`crate::net::conn`] (`write_stalled` = peers cut off for not draining their replies, `reclaimed` = idle connections closed while the pool sat at its cap) |
 //! | `METRICS PROM` / `METRICS JSON` | `OK metrics format=<f> lines=<n> bytes=<b>` + `\n`-joined exposition of the whole [`crate::obs`] registry (serve counters, flush-stage histograms, transport + sync series); `PROM` is the Prometheus text format `pico cluster status --metrics` scrapes and merges |
-//! | `TRACES [n]` | `OK traces n=<t> lines=<l>` + the `l` rendered span-tree lines of the `n` most recent flush/slow-query traces from the [`crate::obs::trace`] ring (default 5) |
+//! | `TRACES [n]` | `OK traces n=<t> lines=<l>` + the `l` rendered span-tree lines of the `n` most recent flush/slow-query traces from the [`crate::obs::trace`] ring (default 5; ring size set by `pico serve --trace-ring`) |
+//! | `EVENTS [n] [min-severity]` | `OK events n=<e> lines=<l>` + one line per journal entry, newest first: `<unix_ms> <severity> <kind> graph=<g> <detail>` from the [`crate::obs::events`] ring (default 10; `min-severity` of `info`/`warn`/`error` filters), answered by [`crate::net::conn`]; merged across hosts by `pico cluster status --events` |
+//! | `HEALTH [graph]` | `OK health=<ok\|degraded\|critical> reasons=<r> lines=<l>` + one reason line per violated SLO rule, evaluated by [`crate::obs::health`] against the tsdb window and the live registry (optionally narrowed to one graph's replication state); `pico cluster status --health` exits non-zero below `ok` |
 //! | `AUTH <token>` | `OK auth` / `ERR bad auth token` — unlocks the gated shard verbs when the server has a token configured (answered by [`crate::net::conn`], constant-time compare) |
 //! | `BINARY` | `OK binary proto=<id>` — switch this connection to binary framing (the id names the framing codec, [`crate::net::codec::FRAME_PROTO`]) |
 //! | `QUIT` | `OK bye` (connection closes) |
@@ -665,17 +668,50 @@ impl CoreService {
                     Err(e) => format!("ERR {e:#}"),
                 }
             }
-            "STATS" => {
-                let s = self.stats();
-                format!(
-                    "OK queries={} edits={} batches={} recomputes={} graphs={}",
-                    s.serve_queries,
-                    s.serve_edits,
-                    s.serve_batches,
-                    s.serve_recomputes,
-                    self.num_graphs()
-                )
-            }
+            "STATS" => match args.first() {
+                // the bare reply line predates the tsdb and stays
+                // byte-for-byte stable for existing tooling
+                None => {
+                    let s = self.stats();
+                    format!(
+                        "OK queries={} edits={} batches={} recomputes={} graphs={}",
+                        s.serve_queries,
+                        s.serve_edits,
+                        s.serve_batches,
+                        s.serve_recomputes,
+                        self.num_graphs()
+                    )
+                }
+                Some(w) => match w.parse::<f64>() {
+                    Ok(window_s) if window_s > 0.0 => {
+                        let ts = obs::tsdb::global();
+                        let json = args
+                            .get(1)
+                            .map(|f| f.eq_ignore_ascii_case("json"))
+                            .unwrap_or(false);
+                        if json {
+                            let body = obs::tsdb::render_window_json(ts, window_s);
+                            format!(
+                                "OK stats window={window_s:.0}s samples={} format=json lines=1\n{body}",
+                                ts.samples_in(window_s)
+                            )
+                        } else {
+                            let lines = obs::tsdb::render_window_text(ts, window_s);
+                            let mut reply = format!(
+                                "OK stats window={window_s:.0}s samples={} lines={}",
+                                ts.samples_in(window_s),
+                                lines.len()
+                            );
+                            for l in &lines {
+                                reply.push('\n');
+                                reply.push_str(l);
+                            }
+                            reply
+                        }
+                    }
+                    _ => format!("ERR bad STATS window '{w}' (want seconds > 0)"),
+                },
+            },
             "BINARY" => {
                 session.binary = true;
                 format!("OK binary proto={}", codec::FRAME_PROTO)

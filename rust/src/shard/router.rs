@@ -224,7 +224,22 @@ pub fn refine_traced(
         }
         let mut any = false;
         for (i, reply) in replies.into_iter().enumerate() {
-            let r = reply?;
+            let r = match reply {
+                Ok(r) => r,
+                Err(e) => {
+                    crate::obs::events::emit(
+                        crate::obs::Severity::Error,
+                        crate::obs::events::kind::REFINE_ROUND_FAILED,
+                        "",
+                        format!(
+                            "round {} lost shard {} ({e:#})",
+                            stats.rounds,
+                            backends[i].id()
+                        ),
+                    );
+                    return Err(e);
+                }
+            };
             stats.sweeps += r.sweeps;
             stats.boundary_updates += r.ghost_updates;
             stats.boundary_bytes += 8 * r.changed.len() as u64;

@@ -753,6 +753,145 @@ fn cluster_coordinator_redirects_shard_probes_one_hop() {
     front_handle.stop();
 }
 
+/// Observability e2e: a killed replica trips failover events and a
+/// degraded HEALTH verdict; standing a server back up at the same
+/// address and re-syncing recovers the verdict to ok. STATS / EVENTS /
+/// HEALTH are exercised over the wire against the fronted cluster, and
+/// the `pico cluster status --health` exit code is pinned via the real
+/// binary.
+#[cfg(unix)]
+#[test]
+fn dead_replica_degrades_health_and_recovery_restores_ok() {
+    use pico::net::client::{field, Client};
+    use pico::obs::Verdict;
+    use pico::service::serve;
+
+    let g = gen::erdos_renyi(60, 150, 43);
+    let (replica_svc, replica_handle, addr) = spawn_server();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = hl\nshards = 1\n\
+         [shard.0]\nprimary = local\nreplicas = {addr}\n"
+    ))
+    .unwrap();
+    let cl = Arc::new(ClusterIndex::build(&g, &topo, cfg()).unwrap());
+    assert_eq!(
+        pico::obs::health::evaluate_global(Some("hl")).verdict,
+        Verdict::Ok,
+        "a freshly hydrated cluster is healthy"
+    );
+
+    // kill the replica host; the bound address frees for the recovery
+    // rebind below (closed listeners don't linger in TIME_WAIT)
+    replica_handle.drain(std::time::Duration::from_secs(5));
+    drop(replica_handle);
+    drop(replica_svc);
+
+    // reads fail over to the primary, journaling the failovers
+    let failovers_before = cl.groups()[0].failovers();
+    for v in 0..10u32 {
+        assert!(cl.coreness_routed(v).unwrap().is_some(), "v{v}");
+    }
+    assert!(cl.groups()[0].failovers() > failovers_before);
+
+    // the sync pass cannot reach the replica: the failure lands in the
+    // gauge the SLO rules read, and in the event journal
+    let report = cl.sync_replicas().unwrap();
+    assert_eq!(report.failed, 1, "the dead replica must count as failing");
+    let health = pico::obs::health::evaluate_global(Some("hl"));
+    assert!(
+        health.verdict >= Verdict::Degraded,
+        "a failing replica must degrade the verdict: {health:?}"
+    );
+    assert!(
+        health.reasons.iter().any(|r| r.contains("failing sync")),
+        "{health:?}"
+    );
+
+    // the same state over the wire, through a fronting serve process
+    let front = Arc::new(CoreService::new(cfg()));
+    front.open_cluster("hl", cl.clone());
+    let front_handle = serve(front, "127.0.0.1:0").expect("bind");
+    let mut client = Client::connect(&front_handle.addr().to_string()).unwrap();
+    let (hhead, hlines) = client.send_multiline("HEALTH hl").unwrap();
+    let verdict = Verdict::parse(field(&hhead, "health").unwrap()).unwrap();
+    assert!(verdict >= Verdict::Degraded, "{hhead}");
+    assert!(
+        hlines.iter().any(|l| l.contains("failing sync")),
+        "{hhead}: {hlines:?}"
+    );
+    let (ehead, elines) = client.send_multiline("EVENTS 256").unwrap();
+    assert!(ehead.starts_with("OK events"), "{ehead}");
+    assert!(
+        elines.iter().any(|l| l.contains(" sync_failed graph=hl ")),
+        "the failed sync must be journaled: {elines:?}"
+    );
+    assert!(
+        elines
+            .iter()
+            .any(|l| l.contains("replica_failover") && l.contains(&addr)),
+        "the failovers must be journaled: {elines:?}"
+    );
+    // windowed STATS answers on a cluster backend too (no sampler runs
+    // in this process, so the keys are present but n/a)
+    let (shead, slines) = client.send_multiline("STATS 60").unwrap();
+    assert!(shead.starts_with("OK stats window=60s"), "{shead}");
+    assert!(slines.iter().any(|l| l.starts_with("qps ")), "{slines:?}");
+    let (jhead, jlines) = client.send_multiline("STATS 60 JSON").unwrap();
+    assert!(jhead.contains("format=json"), "{jhead}");
+    assert!(jlines[0].starts_with("{\"window_s\":"), "{jlines:?}");
+
+    // the CLI surfaces the outage in its exit code: the topology's only
+    // remote endpoint is down
+    let topo_path = std::env::temp_dir().join(format!("pico-health-{}.toml", std::process::id()));
+    std::fs::write(
+        &topo_path,
+        format!(
+            "[cluster]\nname = hl\nshards = 1\n\
+             [shard.0]\nprimary = local\nreplicas = {addr}\n"
+        ),
+    )
+    .unwrap();
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_pico"))
+        .args([
+            "cluster",
+            "status",
+            "--cluster",
+            topo_path.to_str().unwrap(),
+            "--health",
+        ])
+        .output()
+        .unwrap();
+    assert!(
+        !out.status.success(),
+        "health below ok must exit non-zero: {}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    assert!(
+        String::from_utf8_lossy(&out.stdout).contains("down"),
+        "{}",
+        String::from_utf8_lossy(&out.stdout)
+    );
+    std::fs::remove_file(&topo_path).ok();
+
+    // recovery: a fresh server at the same address, one sync pass, and
+    // the graph-scoped verdict returns to ok
+    let recovered_svc = Arc::new(CoreService::new(cfg()));
+    let recovered_handle = serve(recovered_svc, &addr).expect("rebinding the freed address");
+    let report = cl.sync_replicas().unwrap();
+    assert_eq!(report.failed, 0, "the rebound replica must hydrate");
+    assert!(report.shipped() >= 1, "recovery re-ships state");
+    assert_eq!(
+        pico::obs::health::evaluate_global(Some("hl")).verdict,
+        Verdict::Ok,
+        "recovery must clear the verdict"
+    );
+    let (hhead, _hlines) = client.send_multiline("HEALTH hl").unwrap();
+    assert_eq!(field(&hhead, "health").unwrap(), "ok", "{hhead}");
+    client.quit();
+    recovered_handle.stop();
+    front_handle.stop();
+}
+
 #[test]
 fn flush_through_a_remote_shard_stitches_a_cross_host_trace() {
     use pico::net::client::Client;
