@@ -71,6 +71,11 @@
 //!   three across every host of a topology into a live dashboard;
 //!   `pico cluster status --events|--health` merges them one-shot,
 //!   with `--health` exiting non-zero below ok.
+//! * `CLUSTER TOPOLOGY|REBALANCE PLAN|REBALANCE APPLY|REBALANCE
+//!   MIGRATE|MOVES` — the admin control-plane namespace (section 11):
+//!   live shard split/merge and primary migration, driven over the
+//!   wire or via `pico cluster rebalance`. Legacy spellings (`SHARDS`)
+//!   are thin aliases with byte-identical replies.
 //!
 //! The same flow over two shells:
 //!
@@ -399,6 +404,45 @@ fn main() -> anyhow::Result<()> {
         println!("      {line}");
     }
     send(&mut ow, &mut oreader, "QUIT");
+
+    // 11. Elastic resharding — the CLUSTER control-plane namespace. A
+    //     hot shard sheds its boundary-heaviest vertices to a cooler
+    //     shard under the flush fence (export → adopt → release →
+    //     router remap → warm re-publish), and a primary can be
+    //     live-migrated to another host while writes keep flowing
+    //     (`CLUSTER REBALANCE MIGRATE <shard> <host:port>`: manifest +
+    //     delta-chain catch-up, then an epoch-verified fenced cutover).
+    //     Over the CLI the same surface is `pico cluster rebalance
+    //     --addr ...` (dry-run plan), `--apply` (latched execute), and
+    //     `--migrate S=ADDR`. The legacy `SHARDS` verb is a thin alias
+    //     of `CLUSTER TOPOLOGY` — byte-identical replies, lint-checked.
+    service.open_cluster("social-cluster", cluster.clone());
+    let cs = TcpStream::connect(handle.addr())?;
+    let mut cw = cs.try_clone()?;
+    let mut creader = BufReader::new(cs);
+    println!("\nrebalance session (CLUSTER namespace):");
+    send(&mut cw, &mut creader, "USE social-cluster");
+    send(&mut cw, &mut creader, "CLUSTER TOPOLOGY"); // == SHARDS, byte-identical
+    for line in send_lines(&mut cw, &mut creader, "CLUSTER REBALANCE PLAN") {
+        println!("      {line}");
+    }
+    // a hot split, driven directly: shard 0 hands 40 vertices to shard
+    // 1; journals reset across the move, so the replica takes one full
+    // re-ship on the next sync pass and delta catch-up resumes after
+    let rec = cluster.move_vertices(0, 1, 40)?;
+    println!(
+        "  split: {} vertices -> {} ({} bytes shipped, {}us fenced, epoch {} published)",
+        rec.vertices, rec.to, rec.bytes, rec.cutover_us, rec.epoch
+    );
+    cluster.sync_replicas()?;
+    println!(
+        "  coreness(3) after the split = {:?} (answers never wavered)",
+        cluster.coreness_routed(3)?
+    );
+    for line in send_lines(&mut cw, &mut creader, "CLUSTER MOVES") {
+        println!("      {line}");
+    }
+    send(&mut cw, &mut creader, "QUIT");
 
     handle.stop();
     println!("\ndone — see rust/src/service/server.rs for the full protocol");

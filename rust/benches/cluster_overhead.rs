@@ -22,6 +22,12 @@
 //! latency for both, across two graph sizes, to show delta catch-up
 //! cost scaling with the edit batches instead of the graph.
 //!
+//! A third section measures **live primary migration**: shard 0's
+//! primary ping-pongs between two loopback hosts while routed point
+//! reads keep flowing — per move the bytes shipped and the fenced
+//! cutover pause, plus the read-qps dip vs an undisturbed baseline
+//! (`migrate_*` keys in the json artifact).
+//!
 //!     cargo bench --bench cluster_overhead
 //!     PICO_BENCH_QUICK=1 cargo bench --bench cluster_overhead  # CI smoke
 //!
@@ -292,6 +298,125 @@ fn bench_catchup(json: &mut Vec<(&'static str, f64)>) {
     );
 }
 
+/// Live primary migration: a two-shard cluster ping-pongs shard 0's
+/// primary between two loopback hosts while point reads keep flowing.
+/// Reported per move: catch-up bytes shipped and the fenced cutover
+/// pause (the only pause writers observe); plus the read-qps dip while
+/// a migration is in flight vs the undisturbed baseline.
+fn bench_migration(json: &mut Vec<(&'static str, f64)>) {
+    use std::time::Duration;
+
+    let n: usize = if quick_bench() { 600 } else { 4_000 };
+    let g = gen::barabasi_albert(n, 4, 123);
+    let svc_a = Arc::new(CoreService::new(cfg()));
+    let host_a = serve(svc_a, "127.0.0.1:0").expect("bind migration host A");
+    let svc_b = Arc::new(CoreService::new(cfg()));
+    let host_b = serve(svc_b, "127.0.0.1:0").expect("bind migration host B");
+    let locals: Vec<String> = (0..2).map(|_| "local".to_string()).collect();
+    let cl = Arc::new(
+        ClusterIndex::build(&g, &topology("mig", &locals), cfg()).expect("migration cluster"),
+    );
+    let moves = if quick_bench() { 4 } else { 12 };
+    let window = Duration::from_millis(if quick_bench() { 120 } else { 400 });
+
+    let probe = |cl: &ClusterIndex, rng: &mut Rng, dur: Duration| -> f64 {
+        let t = Timer::start();
+        let mut count = 0u64;
+        let mut sink = 0u64;
+        while t.elapsed() < dur {
+            let v = rng.below(n as u64) as u32;
+            sink ^= cl.coreness_routed(v).expect("routed read").unwrap_or(0) as u64;
+            count += 1;
+        }
+        std::hint::black_box(sink);
+        count as f64 / t.elapsed().as_secs_f64()
+    };
+    let targets = [host_a.addr().to_string(), host_b.addr().to_string()];
+    // warm-up move so the baseline probe reads shard 0 through the same
+    // remote path as the in-flight probes — otherwise the "dip" would
+    // mostly measure local-vs-loopback reads, not migration interference
+    cl.migrate_primary(0, &targets[0]).expect("warm-up migration");
+    let mut rng = Rng::new(5);
+    let baseline_qps = probe(&cl, &mut rng, window);
+
+    println!("\n== live primary migration == ({moves} moves, reads flowing throughout)\n");
+    println!(
+        "{:>5}  {:>22}  {:>12}  {:>12}  {:>12}",
+        "move", "primary", "bytes", "cutover", "reads q/s"
+    );
+    let mut cutovers = Samples::default();
+    let mut shipped = 0u64;
+    let mut during = Vec::new();
+    for i in 0..moves {
+        // live routed edits between moves — the shard state the next
+        // migration ships is never the state the last one shipped
+        let mut queued = 0usize;
+        while queued < BATCH {
+            let u = rng.below(n as u64) as u32;
+            let v = rng.below(n as u64) as u32;
+            if u == v {
+                continue;
+            }
+            cl.submit(if rng.chance(0.7) {
+                EdgeEdit::Insert(u, v)
+            } else {
+                EdgeEdit::Delete(u, v)
+            });
+            queued += 1;
+        }
+        cl.flush().expect("flush between migrations");
+        // warm-up parked the primary on host A, so move to B first
+        let addr = targets[(i + 1) % 2].clone();
+        let cl2 = cl.clone();
+        let mig = std::thread::spawn(move || cl2.migrate_primary(0, &addr).expect("migration"));
+        let qps = probe(&cl, &mut rng, window);
+        let rec = mig.join().expect("migration thread");
+        cutovers.push(Duration::from_micros(rec.cutover_us));
+        shipped += rec.bytes;
+        during.push(qps);
+        println!(
+            "{:>5}  {:>22}  {:>12}  {:>10}us  {:>12}",
+            i,
+            rec.to,
+            rec.bytes,
+            rec.cutover_us,
+            fmt::si(qps as u64)
+        );
+    }
+    // reads stayed correct through every cutover, and the state that
+    // landed on the final host still equals BZ on the assembled graph
+    let (snap, graph) = cl.consistent_view().expect("post-migration view");
+    assert_eq!(
+        snap.core,
+        bz_coreness(&graph),
+        "migrated cluster diverged from the oracle"
+    );
+    let during_qps = during.iter().sum::<f64>() / during.len().max(1) as f64;
+    let dip_pct = if baseline_qps > 0.0 {
+        ((1.0 - during_qps / baseline_qps) * 100.0).max(0.0)
+    } else {
+        0.0
+    };
+    let p50_us = cutovers.percentile_ms(50.0) * 1000.0;
+    let p99_us = cutovers.percentile_ms(99.0) * 1000.0;
+    println!(
+        "\ncutover pause p50 {:.0}us p99 {:.0}us; {} bytes shipped across {moves} moves;\n\
+         reads dipped {dip_pct:.1}% while migrations ran ({} -> {} q/s) — the pause\n\
+         writers observe is the fenced chain/verify/swap, never the manifest ship",
+        p50_us,
+        p99_us,
+        shipped,
+        fmt::si(baseline_qps as u64),
+        fmt::si(during_qps as u64)
+    );
+    json.push(("migrate_cutover_p50_us", p50_us));
+    json.push(("migrate_cutover_p99_us", p99_us));
+    json.push(("migrate_bytes_shipped", shipped as f64));
+    json.push(("migrate_qps_dip_pct", dip_pct));
+    host_a.stop();
+    host_b.stop();
+}
+
 fn main() {
     let g = workload();
     let n = g.num_vertices() as u32;
@@ -377,5 +502,6 @@ fn main() {
         }
     }
     bench_catchup(&mut json);
+    bench_migration(&mut json);
     write_bench_json("cluster_overhead", &g.name, &json);
 }

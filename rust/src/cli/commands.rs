@@ -432,13 +432,73 @@ pub fn cmd_serve(args: &Args, cfg: &Config) -> Result<()> {
 /// `pico cluster <subcommand>` — topology tooling. `status` probes every
 /// endpoint of a `--cluster` config over the protocol; with `--metrics`
 /// it scrapes `METRICS PROM` from every host instead and prints one
-/// merged cluster-wide exposition.
+/// merged cluster-wide exposition. `rebalance` drives the elastic
+/// resharding control plane on a live coordinator.
 pub fn cmd_cluster(args: &Args, _cfg: &Config) -> Result<()> {
     match args.subcommand.as_str() {
         "status" => cluster_status(args),
-        "" => bail!("usage: pico cluster status --cluster <cfg>"),
-        other => bail!("unknown cluster subcommand '{other}' (have: status)"),
+        "rebalance" => cluster_rebalance(args),
+        "" => bail!("usage: pico cluster status|rebalance ..."),
+        other => bail!("unknown cluster subcommand '{other}' (have: status rebalance)"),
     }
+}
+
+/// `pico cluster rebalance --addr <coordinator>` — a thin client for the
+/// `CLUSTER REBALANCE` namespace. The default is a dry run (`CLUSTER
+/// REBALANCE PLAN`: the load snapshot plus every planned move with its
+/// reason); `--apply` plans and executes in one latched step; `--migrate
+/// <shard>=<host:port>` live-migrates one shard's primary instead.
+/// `--name <graph>` pins the session when the coordinator hosts several
+/// graphs; `PICO_AUTH_TOKEN` is sent as the `AUTH` preamble when set.
+/// After the action, the coordinator's move history (`CLUSTER MOVES`)
+/// is printed so the operator sees what the cluster has done so far.
+fn cluster_rebalance(args: &Args) -> Result<()> {
+    use crate::net::client::Client;
+
+    // validate before dialing: a malformed --migrate spec must not cost
+    // a connection attempt
+    let migrate = match args.get("migrate") {
+        Some(spec) => Some(spec.split_once('=').ok_or_else(|| {
+            anyhow::anyhow!("--migrate wants <shard>=<host:port>, got '{spec}'")
+        })?),
+        None => None,
+    };
+    let addr = args.get_or("addr", "127.0.0.1:7571");
+    let mut client = Client::connect(addr)
+        .with_context(|| format!("connecting to the coordinator at {addr}"))?;
+    if let Some(token) = crate::net::env_auth_token() {
+        client.auth(&token)?;
+    }
+    if let Some(name) = args.get("name") {
+        client
+            .use_graph(name)
+            .with_context(|| format!("selecting '{name}' on the coordinator"))?;
+    }
+    if let Some((shard, target)) = migrate {
+        let reply = client.send_line(&format!("CLUSTER REBALANCE MIGRATE {shard} {target}"))?;
+        println!("{reply}");
+        if reply.starts_with("ERR") {
+            bail!("migration rejected: {reply}");
+        }
+    } else {
+        let cmd = if args.has("apply") {
+            "CLUSTER REBALANCE APPLY"
+        } else {
+            "CLUSTER REBALANCE PLAN"
+        };
+        let (head, lines) = client.send_multiline(cmd)?;
+        println!("{head}");
+        for l in &lines {
+            println!("  {l}");
+        }
+    }
+    let (head, lines) = client.send_multiline("CLUSTER MOVES")?;
+    println!("{head}");
+    for l in &lines {
+        println!("  {l}");
+    }
+    client.quit();
+    Ok(())
 }
 
 fn cluster_status(args: &Args) -> Result<()> {
@@ -1148,5 +1208,21 @@ mod tests {
             .unwrap_err()
             .to_string()
             .contains("--cluster"));
+        // a malformed --migrate spec fails before any connection attempt
+        let bad_migrate = Args::parse_with_sub(
+            &[
+                "cluster".into(),
+                "rebalance".into(),
+                "--migrate".into(),
+                "nonsense".into(),
+            ],
+            &[],
+            &["cluster"],
+        )
+        .unwrap();
+        assert!(cmd_cluster(&bad_migrate, &Config::default())
+            .unwrap_err()
+            .to_string()
+            .contains("--migrate wants <shard>=<host:port>"));
     }
 }

@@ -17,7 +17,7 @@ COMMANDS:
     run       Decompose one dataset with one algorithm
     suite     Run algorithms across the dataset suite (alias: bench)
     serve     Host core indices behind the line-protocol TCP server
-    cluster   Multi-host topology tooling (`pico cluster status`)
+    cluster   Multi-host topology tooling (`pico cluster status|rebalance`)
     top       Live dashboard over STATS/EVENTS/HEALTH for one host or a cluster
     query     Send protocol commands to a running `pico serve`
     stats     Print Table II-style statistics for the suite
@@ -101,6 +101,21 @@ CLUSTER OPTIONS (pico cluster status):
                          SLO reasons; exits non-zero unless every host
                          answers ok
 
+CLUSTER OPTIONS (pico cluster rebalance):
+    --addr HOST:PORT     The live coordinator to drive (default
+                         127.0.0.1:7571); --name GRAPH pins the session
+                         when it hosts several graphs. Without further
+                         flags, prints the dry-run plan (CLUSTER
+                         REBALANCE PLAN): per-shard load signals plus
+                         every planned split/merge with its reason
+    --apply              Plan and execute in one latched step (CLUSTER
+                         REBALANCE APPLY); refused with ERR MIGRATING
+                         while another structural change is in flight
+    --migrate S=ADDR     Live-migrate shard S's primary to the `pico
+                         serve` at ADDR instead: manifest + delta-chain
+                         catch-up while writes keep flowing, then an
+                         epoch-verified fenced cutover
+
 TOP OPTIONS (pico top):
     --cluster CFG        Poll every endpoint of a topology (with --addr
                          for the coordinator); without either flag the
@@ -136,6 +151,9 @@ EXAMPLES:
     pico cluster status --cluster cluster.toml
     pico cluster status --cluster cluster.toml --addr 127.0.0.1:7571 --metrics
     pico cluster status --cluster cluster.toml --health
+    pico cluster rebalance --addr 127.0.0.1:7571
+    pico cluster rebalance --addr 127.0.0.1:7571 --apply
+    pico cluster rebalance --addr 127.0.0.1:7571 --migrate 2=10.0.0.9:7571
     pico top --cluster cluster.toml --interval 1000 --window 30
     pico query --cmd 'INSERT 3 9; FLUSH; CORENESS 3; DENSEST; SHARDS'
     pico query --binary --cmd 'SNAPSHOT' --snapshot-file /tmp/social.snap

@@ -230,6 +230,62 @@ impl ShardHost {
         }
     }
 
+    /// `SHARDHAND EXPORT <count> | ADOPT | RELEASE` — the rebalance
+    /// handoff verbs, one per executor step: export encodes this shard's
+    /// boundary-heaviest owned vertices (head + handoff payload), adopt
+    /// splices a handoff payload in as owned state (head + adopted-id
+    /// payload), release demotes previously exported vertices to ghosts
+    /// once the adopter confirmed. The ordering guarantee (adopt before
+    /// release) lives in the coordinator; each step here is individually
+    /// validated and refuses replays.
+    pub fn hand_frame(&self, args: &[&str], payload: &[u8]) -> Vec<u8> {
+        let sub = args.first().map(|s| s.to_ascii_uppercase()).unwrap_or_default();
+        match sub.as_str() {
+            "EXPORT" => {
+                let Some(Ok(count)) = args.get(1).map(|a| a.parse::<usize>()) else {
+                    return b"ERR usage: SHARDHAND EXPORT <count>".to_vec();
+                };
+                match self.shard.handoff_export(count) {
+                    Ok(bytes) => {
+                        let mut out = format!(
+                            "OK handoff shard={} bytes={}\n",
+                            self.shard.id(),
+                            bytes.len()
+                        )
+                        .into_bytes();
+                        out.extend_from_slice(&bytes);
+                        out
+                    }
+                    Err(e) => format!("ERR shardhand export: {e:#}").into_bytes(),
+                }
+            }
+            "ADOPT" => match self.shard.handoff_adopt(payload) {
+                Ok(adopted) => {
+                    let mut out =
+                        format!("OK adopted={} shard={}\n", adopted.len(), self.shard.id())
+                            .into_bytes();
+                    out.extend_from_slice(&wire::encode_u32s(&adopted));
+                    out
+                }
+                Err(e) => format!("ERR shardhand adopt: {e:#}").into_bytes(),
+            },
+            "RELEASE" => {
+                let vertices = match wire::decode_u32s(payload) {
+                    Ok(v) => v,
+                    Err(e) => return format!("ERR shardhand release: {e:#}").into_bytes(),
+                };
+                match self.shard.handoff_release(&vertices) {
+                    Ok(()) => format!("OK released={}", vertices.len()).into_bytes(),
+                    Err(e) => format!("ERR shardhand release: {e:#}").into_bytes(),
+                }
+            }
+            other => {
+                format!("ERR unknown SHARDHAND sub-verb '{other}' (EXPORT|ADOPT|RELEASE)")
+                    .into_bytes()
+            }
+        }
+    }
+
     /// `SHARDSNAP` — the full manifest for replica catch-up.
     pub fn snap_frame(&self) -> Vec<u8> {
         let manifest = manifest_for(&self.shard, self.num_shards);
@@ -266,8 +322,11 @@ impl ShardHost {
         }
         let current = self.cluster_epoch();
         if current != from {
-            return format!(
-                "ERR sharddelta: chain starts at epoch {from} but this replica is at {current}"
+            // machine-readable: the rebalance executor's catch-up loop
+            // keys off STALE_EPOCH to re-probe instead of string-matching
+            return crate::net::conn::err_reply(
+                crate::net::conn::code::STALE_EPOCH,
+                format!("sharddelta: chain starts at epoch {from} but this replica is at {current}"),
             )
             .into_bytes();
         }
@@ -361,6 +420,40 @@ mod tests {
         assert!(std::str::from_utf8(&commit[..nl]).unwrap().starts_with("OK commit=9 changed="));
         wire::decode_pairs(&commit[nl + 1..]).unwrap();
         assert!(h.info().contains("cluster=9"));
+    }
+
+    #[test]
+    fn handoff_verbs_move_owned_vertices_between_hosts() {
+        let g = examples::g1();
+        let plan = partition(&g, 2, PartitionStrategy::Hash);
+        let make = |i: usize| {
+            let shard = LocalShard::from_plan("c", &plan.shards[i], cfg());
+            shard.refine_start(None).unwrap();
+            shard.refine_round(&[]).unwrap();
+            shard.refine_commit(1).unwrap();
+            let bytes = manifest_for(&shard, 2);
+            ShardHost::from_manifest_bytes(&format!("c/shard{i}"), &bytes, cfg()).unwrap()
+        };
+        let (a, b) = (make(0), make(1));
+        // usage / structured errors
+        assert!(String::from_utf8(a.hand_frame(&[], b"")).unwrap().starts_with("ERR unknown SHARDHAND"));
+        assert!(String::from_utf8(a.hand_frame(&["EXPORT"], b"")).unwrap().starts_with("ERR usage"));
+        assert!(String::from_utf8(b.hand_frame(&["ADOPT"], b"junk")).unwrap().starts_with("ERR shardhand adopt"));
+        assert!(String::from_utf8(b.hand_frame(&["RELEASE"], b"junk")).unwrap().starts_with("ERR shardhand release"));
+        // export → adopt → release
+        let owned_a = a.shard.status().unwrap().owned;
+        let reply = a.hand_frame(&["EXPORT", "2"], b"");
+        let nl = reply.iter().position(|&c| c == b'\n').unwrap();
+        assert!(std::str::from_utf8(&reply[..nl]).unwrap().starts_with("OK handoff shard=0"));
+        let payload = &reply[nl + 1..];
+        let adopted = b.hand_frame(&["ADOPT"], payload);
+        let nl = adopted.iter().position(|&c| c == b'\n').unwrap();
+        assert!(std::str::from_utf8(&adopted[..nl]).unwrap().starts_with("OK adopted=2 shard=1"));
+        let ids = wire::decode_u32s(&adopted[nl + 1..]).unwrap();
+        assert_eq!(ids.len(), 2);
+        let released = a.hand_frame(&["RELEASE"], &wire::encode_u32s(&ids));
+        assert!(String::from_utf8(released).unwrap().starts_with("OK released=2"));
+        assert_eq!(a.shard.status().unwrap().owned, owned_a - 2);
     }
 
     #[test]

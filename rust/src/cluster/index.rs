@@ -115,10 +115,15 @@ pub struct SyncStats {
     pub lag_epochs: u64,
 }
 
-/// One shard's primary plus its read replicas.
+/// One shard's primary plus its read replicas. The primary is
+/// *swappable*: a live migration ([`ClusterIndex::migrate_primary`])
+/// replaces it under the flush fence while reads keep flowing, so both
+/// the placement and the erased backend handle sit behind locks —
+/// [`ReplicaGroup::backend`] hands out an owned `Arc` clone, never a
+/// borrow into the lock.
 pub struct ReplicaGroup {
-    primary: Primary,
-    backend: Arc<dyn ShardBackend>,
+    primary: RwLock<Primary>,
+    backend: RwLock<Arc<dyn ShardBackend>>,
     replicas: Vec<Arc<RemoteShard>>,
     cursor: AtomicUsize,
     failovers: AtomicU64,
@@ -134,6 +139,24 @@ pub struct ReplicaGroup {
     /// delta chains are compared (0 = none encoded yet: the first
     /// catch-up takes the full path and initialises it).
     manifest_bytes_hint: AtomicU64,
+    /// The hint above no longer matches the primary's state: ownership
+    /// changed under it (a flush registered new vertices, a rebalance
+    /// moved some, a migration swapped the primary). The next sync pass
+    /// re-probes the primary for the exact size *before* comparing delta
+    /// chains against it — shipping against a stale hint was the bug
+    /// where a grown shard kept taking the (now mis-sized) delta path.
+    hint_stale: AtomicBool,
+    /// A primary migration is in flight for this shard: flushes must
+    /// journal this group's deltas even with zero replicas, because the
+    /// mover catches up over exactly those chains.
+    migrating: AtomicBool,
+    /// Routed edits this group's primary has applied, cumulatively —
+    /// the rebalance planner's heat signal.
+    edits_routed: AtomicU64,
+    /// This shard's boundary-arc count at the last refinement — the
+    /// planner's boundary-edge-share signal (cached off
+    /// [`crate::shard::router::RefineOutcome::per_shard_boundary_arcs`]).
+    boundary_arcs: AtomicU64,
     /// Set when a flush died midway: the primary may then hold edits no
     /// published epoch (and no journal chain) accounts for, so every
     /// replica of the group — *including* ones whose committed epoch
@@ -151,8 +174,8 @@ impl ReplicaGroup {
     pub fn new(primary: Primary, replicas: Vec<Arc<RemoteShard>>) -> Self {
         let backend = primary.backend();
         Self {
-            primary,
-            backend,
+            primary: RwLock::new(primary),
+            backend: RwLock::new(backend),
             replicas,
             cursor: AtomicUsize::new(0),
             failovers: AtomicU64::new(0),
@@ -163,22 +186,38 @@ impl ReplicaGroup {
             snapshot_bytes: AtomicU64::new(0),
             lag_epochs: AtomicU64::new(0),
             manifest_bytes_hint: AtomicU64::new(0),
+            hint_stale: AtomicBool::new(false),
+            migrating: AtomicBool::new(false),
+            edits_routed: AtomicU64::new(0),
+            boundary_arcs: AtomicU64::new(0),
             force_full_ship: AtomicBool::new(false),
         }
     }
 
-    pub fn backend(&self) -> &Arc<dyn ShardBackend> {
-        &self.backend
+    /// The current primary's erased handle (an owned clone — the
+    /// primary may be swapped by a migration the moment this returns,
+    /// but the clone stays valid for the caller's whole operation).
+    pub fn backend(&self) -> Arc<dyn ShardBackend> {
+        self.backend.read().unwrap().clone()
+    }
+
+    /// Swap the primary (migration cutover). Callers hold the flush
+    /// fence: no flush, merge, or journal write may interleave.
+    fn set_primary(&self, primary: Primary) {
+        let backend = primary.backend();
+        *self.backend.write().unwrap() = backend;
+        *self.primary.write().unwrap() = primary;
+        self.hint_stale.store(true, Ordering::SeqCst);
     }
 
     /// `"local"` / `"remote"` — the primary's placement (no probing).
     pub fn kind(&self) -> &'static str {
-        self.primary.kind()
+        self.primary.read().unwrap().kind()
     }
 
     /// The primary's endpoint for display (no probing).
     pub fn primary_addr(&self) -> String {
-        self.primary.addr()
+        self.primary.read().unwrap().addr()
     }
 
     pub fn replicas(&self) -> &[Arc<RemoteShard>] {
@@ -193,6 +232,29 @@ impl ReplicaGroup {
 
     pub fn stale_reads(&self) -> u64 {
         self.stale_reads.load(Ordering::Relaxed)
+    }
+
+    /// Whether a primary migration is in flight for this shard.
+    pub fn migrating(&self) -> bool {
+        self.migrating.load(Ordering::SeqCst)
+    }
+
+    /// Routed edits applied by this group's primary, cumulatively.
+    pub fn edits_routed(&self) -> u64 {
+        self.edits_routed.load(Ordering::Relaxed)
+    }
+
+    /// Boundary arcs this shard contributed at the last refinement.
+    pub fn boundary_arcs(&self) -> u64 {
+        self.boundary_arcs.load(Ordering::Relaxed)
+    }
+
+    /// The full-ship byte size the delta/snapshot comparison currently
+    /// uses (exact after any sync pass that followed an ownership
+    /// change — the hint-refresh tests pin this against
+    /// [`Self::primary_manifest`]).
+    pub fn manifest_bytes_hint(&self) -> u64 {
+        self.manifest_bytes_hint.load(Ordering::Relaxed)
     }
 
     /// Cumulative replica-sync counters.
@@ -210,7 +272,7 @@ impl ReplicaGroup {
     /// baseline (tests pin delta-caught-up replicas byte-identical to
     /// it; benches read its size as the full-ship cost).
     pub fn primary_manifest(&self, num_shards: u32) -> Result<Vec<u8>> {
-        self.primary.manifest(num_shards)
+        self.primary.read().unwrap().manifest(num_shards)
     }
 
     /// The primary's remote endpoint and hosted graph name when the
@@ -218,15 +280,25 @@ impl ReplicaGroup {
     /// for shard-local probes. `None` for in-coordinator primaries
     /// (answered inline; there is no host to redirect to).
     pub fn remote_primary(&self) -> Option<(String, String)> {
-        match &self.primary {
+        match &*self.primary.read().unwrap() {
             Primary::Remote(r) => Some((r.addr().to_string(), r.graph().to_string())),
+            Primary::Local(_) => None,
+        }
+    }
+
+    /// The remote primary's trace-scope handle, when it has one.
+    fn remote_trace(&self) -> Option<Arc<RemoteShard>> {
+        match &*self.primary.read().unwrap() {
+            Primary::Remote(r) => Some(r.clone()),
             Primary::Local(_) => None,
         }
     }
 
     /// Run an epoch-stamped read: replicas round-robin first (accepting
     /// only answers committed at `want_epoch`), the primary as the
-    /// authoritative fallback.
+    /// authoritative fallback. Coded `STALE_EPOCH` rejections count as
+    /// stale reads, not failovers — the replica is healthy, merely
+    /// behind (or fenced mid-move); everything else is a failover.
     pub fn read<T>(
         &self,
         want_epoch: u64,
@@ -242,6 +314,12 @@ impl ReplicaGroup {
                     Ok(_) => {
                         self.stale_reads.fetch_add(1, Ordering::Relaxed);
                     }
+                    Err(e)
+                        if crate::net::client::remote_err_code(&e)
+                            == Some(crate::net::client::ErrCode::StaleEpoch) =>
+                    {
+                        self.stale_reads.fetch_add(1, Ordering::Relaxed);
+                    }
                     Err(e) => {
                         self.failovers.fetch_add(1, Ordering::Relaxed);
                         obs::events::emit(
@@ -254,7 +332,7 @@ impl ReplicaGroup {
                 }
             }
         }
-        f(self.backend.as_ref()).map(|(v, _)| v)
+        f(self.backend().as_ref()).map(|(v, _)| v)
     }
 }
 
@@ -311,6 +389,64 @@ struct Published {
     boundary_edges: u64,
 }
 
+/// One completed rebalance step, kept in [`ClusterIndex::moves`]'s
+/// bounded history ring (the `CLUSTER MOVES` verb renders it).
+#[derive(Clone, Debug)]
+pub struct MoveRecord {
+    /// `"split"`, `"merge"`, or `"migrate"`.
+    pub kind: &'static str,
+    /// Source shard.
+    pub from: usize,
+    /// Destination: `shard<i>` for vertex moves, the host address for a
+    /// primary migration.
+    pub to: String,
+    /// Vertices whose ownership moved (0 for a migration).
+    pub vertices: usize,
+    /// Payload bytes shipped (handoff or manifest + delta chains).
+    pub bytes: u64,
+    /// Wall time spent under the flush fence — the cutover pause writers
+    /// actually observed.
+    pub cutover_us: u64,
+    /// The cluster epoch published by (or current at) the move.
+    pub epoch: u64,
+    /// Wall-clock completion time (ms since the Unix epoch).
+    pub unix_ms: u64,
+}
+
+/// Completed moves kept in the history ring.
+const MOVE_HISTORY: usize = 64;
+
+/// Wall-clock now, as ms since the Unix epoch (0 on a clock before it).
+fn now_unix_ms() -> u64 {
+    std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_millis() as u64)
+        .unwrap_or(0)
+}
+
+/// `rebalance_apply` / `migrate_primary` refused because another
+/// rebalance is already in flight — one structural change at a time.
+/// The serve layer downcasts to this to answer `ERR MIGRATING`.
+#[derive(Debug)]
+pub struct RebalanceBusy;
+
+impl std::fmt::Display for RebalanceBusy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "a rebalance is already in flight (one at a time)")
+    }
+}
+
+impl std::error::Error for RebalanceBusy {}
+
+/// RAII reset for the one-at-a-time rebalance latch.
+struct BusyGuard<'a>(&'a AtomicBool);
+
+impl Drop for BusyGuard<'_> {
+    fn drop(&mut self) {
+        self.0.store(false, Ordering::SeqCst);
+    }
+}
+
 /// A cluster-served core index: local/remote shards behind one router,
 /// exact merged answers at every published epoch.
 pub struct ClusterIndex {
@@ -329,6 +465,15 @@ pub struct ClusterIndex {
     /// Per-shard epoch journals (delta replica catch-up; bounded by the
     /// topology's `cluster.journal` retention).
     journals: Vec<Mutex<EpochJournal>>,
+    /// The topology's auth token — every dialer this router creates
+    /// later (migration targets included) must send the same preamble
+    /// the build-time dialers did.
+    auth: Option<String>,
+    /// One structural change (rebalance apply / migration) at a time.
+    rebalancing: AtomicBool,
+    /// Completed [`MoveRecord`]s, newest last, bounded at
+    /// [`MOVE_HISTORY`].
+    moves: Mutex<Vec<MoveRecord>>,
 }
 
 impl ClusterIndex {
@@ -379,8 +524,7 @@ impl ClusterIndex {
                 .collect();
             groups.push(ReplicaGroup::new(primary, replicas));
         }
-        let backends: Vec<Arc<dyn ShardBackend>> =
-            groups.iter().map(|gr| gr.backend.clone()).collect();
+        let backends: Vec<Arc<dyn ShardBackend>> = groups.iter().map(|gr| gr.backend()).collect();
         let refined = refine(&backends, plan.owner.len(), None, 0, cfg.threads)
             .context("initial cluster refinement")?;
         let k_max = refined.core.iter().copied().max().unwrap_or(0);
@@ -408,6 +552,9 @@ impl ClusterIndex {
             queued_since: Mutex::new(None),
             flush_lock: Mutex::new(()),
             journals,
+            auth,
+            rebalancing: AtomicBool::new(false),
+            moves: Mutex::new(Vec::new()),
         };
         // the manifests shipped above predate the initial merge commit —
         // bring replicas to the committed epoch 0 state. Build is strict
@@ -522,7 +669,7 @@ impl ClusterIndex {
             // disarm any trace scopes the failed flush left armed, so
             // later reads through the same primaries go untagged
             for gr in &self.groups {
-                if let Primary::Remote(r) = &gr.primary {
+                if let Some(r) = gr.remote_trace() {
                     r.trace_scope().end();
                 }
             }
@@ -546,7 +693,7 @@ impl ClusterIndex {
         // now carry this flush's trace id, and the hosts' measured
         // handler times come back as remote child spans
         for gr in &self.groups {
-            if let Primary::Remote(r) = &gr.primary {
+            if let Some(r) = gr.remote_trace() {
                 r.trace_scope().begin(ft.id(), ft.t0());
             }
         }
@@ -573,11 +720,19 @@ impl ClusterIndex {
             if !plan.touched[s] {
                 continue;
             }
+            // planner heat signal + hint staleness, before the journal
+            // loop below takes the batches
+            gr.edits_routed
+                .fetch_add(plan.per_shard[s].edits.len() as u64, Ordering::Relaxed);
+            if !plan.per_shard[s].new_owned.is_empty() {
+                // ownership grew: the cached full-ship size is wrong now
+                gr.hint_stale.store(true, Ordering::SeqCst);
+            }
             let shard_start = Instant::now();
             let out = gr
-                .backend
+                .backend()
                 .apply(&plan.per_shard[s])
-                .with_context(|| format!("routed batch on shard {s} ({})", gr.primary.addr()))?;
+                .with_context(|| format!("routed batch on shard {s} ({})", gr.primary_addr()))?;
             // coordinator-side wall time; a remote primary additionally
             // reports its own host-side span through the trace scope
             ft.child(
@@ -600,7 +755,7 @@ impl ClusterIndex {
         let epoch = self.epoch.load(Ordering::SeqCst) + 1;
         let merge_timer = Timer::start();
         let backends: Vec<Arc<dyn ShardBackend>> =
-            self.groups.iter().map(|gr| gr.backend.clone()).collect();
+            self.groups.iter().map(|gr| gr.backend()).collect();
         let mut refined = refine_traced(
             &backends,
             n,
@@ -614,12 +769,20 @@ impl ClusterIndex {
         let merge = refined.stats;
         let (refine_elapsed, commit_elapsed) = (refined.refine_elapsed, refined.commit_elapsed);
         let k_max = refined.core.iter().copied().max().unwrap_or(0);
+        // cache each shard's boundary-arc share for the planner
+        for (s, gr) in self.groups.iter().enumerate() {
+            if let Some(&arcs) = refined.per_shard_boundary_arcs.get(s) {
+                gr.boundary_arcs.store(arcs, Ordering::Relaxed);
+            }
+        }
         // journal the epoch for delta catch-up — the routed batch plus
         // the commit's refined diff reproduce this epoch exactly on a
-        // replica (only groups that actually have replicas pay for it)
+        // replica. Groups pay for it when they have replicas to serve
+        // — or a migration in flight, whose mover catches up over these
+        // same chains.
         let mut plan = plan;
         for (s, gr) in self.groups.iter().enumerate() {
-            if gr.replicas.is_empty() {
+            if gr.replicas.is_empty() && !gr.migrating() {
                 continue;
             }
             self.journals[s].lock().unwrap().record(EpochDelta {
@@ -646,7 +809,7 @@ impl ClusterIndex {
         // stitch: drain the hosts' measured spans into this flush's
         // trace, nested under their stages with the remote addr kept
         for gr in &self.groups {
-            if let Primary::Remote(r) = &gr.primary {
+            if let Some(r) = gr.remote_trace() {
                 for (stage, span) in r.trace_scope().end() {
                     ft.child(&stage, span);
                 }
@@ -709,6 +872,16 @@ impl ClusterIndex {
             // SHARDS verb, the registry feeds the scrapeable exposition
             let shard_label = s.to_string();
             let labels: &[(&str, &str)] = &[("graph", &self.name), ("shard", &shard_label)];
+            // ownership changed since the hint was last exact (flush
+            // registered vertices, rebalance moved some, migration
+            // swapped the primary): re-probe the primary for the real
+            // full-ship size before any chain-vs-manifest comparison.
+            // Shipping against the stale hint was the bug where a grown
+            // shard kept comparing deltas to an undersized manifest.
+            if gr.hint_stale.swap(false, Ordering::SeqCst) {
+                let fresh = gr.backend().status().map(|st| st.state_bytes).unwrap_or(0);
+                gr.manifest_bytes_hint.store(fresh, Ordering::Relaxed);
+            }
             let mut manifest: Option<Vec<u8>> = None;
             let mut primary_down = false;
             let mut group_lag = 0u64;
@@ -758,12 +931,12 @@ impl ClusterIndex {
                 if primary_down {
                     report.note_failure(format!(
                         "shard {} primary unreachable for catch-up",
-                        gr.backend.id()
+                        gr.backend().id()
                     ));
                     continue;
                 }
                 if manifest.is_none() {
-                    match gr.primary.manifest(num_shards) {
+                    match gr.primary_manifest(num_shards) {
                         Ok(m) => {
                             gr.manifest_bytes_hint.store(m.len() as u64, Ordering::Relaxed);
                             manifest = Some(m);
@@ -772,7 +945,7 @@ impl ClusterIndex {
                             primary_down = true;
                             report.note_failure(format!(
                                 "pulling shard {} manifest for catch-up: {e:#}",
-                                gr.backend.id()
+                                gr.backend().id()
                             ));
                             continue;
                         }
@@ -801,7 +974,7 @@ impl ClusterIndex {
                                 format!(
                                     "replica={} shard={} bytes={}{}",
                                     r.addr(),
-                                    gr.backend.id(),
+                                    gr.backend().id(),
                                     m.len(),
                                     if forced { " forced" } else { "" }
                                 ),
@@ -910,10 +1083,10 @@ impl ClusterIndex {
         self.groups
             .iter()
             .map(|gr| GroupStatus {
-                shard: gr.backend.id(),
-                kind: gr.primary.kind(),
-                primary_addr: gr.primary.addr(),
-                primary: gr.backend.status().map_err(|e| format!("{e:#}")),
+                shard: gr.backend().id(),
+                kind: gr.kind(),
+                primary_addr: gr.primary_addr(),
+                primary: gr.backend().status().map_err(|e| format!("{e:#}")),
                 replicas: gr
                     .replicas
                     .iter()
@@ -941,6 +1114,374 @@ impl ClusterIndex {
             .unwrap()
             .encode_chain(from, to)
             .map(|b| b.len())
+    }
+
+    // --- elastic resharding -------------------------------------------
+
+    /// Completed rebalance steps, oldest first (bounded ring).
+    pub fn moves(&self) -> Vec<MoveRecord> {
+        self.moves.lock().unwrap().clone()
+    }
+
+    fn push_move(&self, rec: MoveRecord) {
+        obs::global()
+            .counter(
+                names::REBALANCE_MOVES,
+                &[("graph", &self.name), ("kind", rec.kind)],
+            )
+            .inc();
+        let mut moves = self.moves.lock().unwrap();
+        moves.push(rec);
+        if moves.len() > MOVE_HISTORY {
+            let excess = moves.len() - MOVE_HISTORY;
+            moves.drain(..excess);
+        }
+    }
+
+    /// Take the one-at-a-time structural-change latch, or fail with
+    /// [`RebalanceBusy`].
+    fn begin_structural(&self) -> Result<BusyGuard<'_>> {
+        if self
+            .rebalancing
+            .compare_exchange(false, true, Ordering::SeqCst, Ordering::SeqCst)
+            .is_err()
+        {
+            return Err(RebalanceBusy.into());
+        }
+        Ok(BusyGuard(&self.rebalancing))
+    }
+
+    /// The per-shard load signals the planner consumes — live counters
+    /// already cached on the groups plus one status probe per primary.
+    pub fn shard_loads(&self) -> Vec<super::rebalance::ShardLoad> {
+        self.groups
+            .iter()
+            .enumerate()
+            .map(|(s, gr)| {
+                let (owned, state_bytes, reachable) = match gr.backend().status() {
+                    Ok(st) => (st.owned, st.state_bytes, true),
+                    Err(_) => (0, 0, false),
+                };
+                super::rebalance::ShardLoad {
+                    shard: s,
+                    owned,
+                    state_bytes,
+                    edits_routed: gr.edits_routed(),
+                    boundary_arcs: gr.boundary_arcs(),
+                    lag_epochs: gr.sync_stats().lag_epochs,
+                    reachable,
+                }
+            })
+            .collect()
+    }
+
+    /// Plan (but do not execute) a rebalance over the live load signals.
+    pub fn rebalance_plan(&self) -> super::rebalance::RebalancePlan {
+        super::rebalance::plan(&self.shard_loads())
+    }
+
+    /// Plan and execute a rebalance atomically under the one-at-a-time
+    /// latch: the plan is computed against the same load snapshot it is
+    /// applied to, so a concurrent admin cannot apply a stale plan.
+    pub fn rebalance_apply(
+        &self,
+    ) -> Result<(super::rebalance::RebalancePlan, Vec<MoveRecord>)> {
+        let _latch = self.begin_structural()?;
+        let plan = self.rebalance_plan();
+        let records = super::rebalance::execute(self, &plan)?;
+        Ok((plan, records))
+    }
+
+    /// Move `count` owned vertices from shard `from` to shard `to` — the
+    /// split/merge primitive. The whole move runs under the flush fence
+    /// (writers queue, nothing is lost): export the boundary-heaviest
+    /// vertices with their adjacency and committed coreness, adopt them
+    /// on the target (which refuses any vertex it already owns — the
+    /// double-apply fence), release them on the source, remap the
+    /// router, then publish a fresh epoch from a warm refinement so
+    /// every stale replica read is rejected by the epoch check until
+    /// catch-up. Journals cannot span a move, so both groups' journals
+    /// reset and their replicas take one full re-ship.
+    ///
+    /// This is the raw primitive: [`Self::rebalance_apply`] is the
+    /// latched path; callers here coordinate their own exclusion.
+    pub fn move_vertices(&self, from: usize, to: usize, count: usize) -> Result<MoveRecord> {
+        if from >= self.groups.len() || to >= self.groups.len() {
+            bail!(
+                "move: shard out of range (have {} shards)",
+                self.groups.len()
+            );
+        }
+        if from == to {
+            bail!("move: source and destination are both shard {from}");
+        }
+        if count == 0 {
+            bail!("move: zero vertices requested");
+        }
+        let fence_start = Instant::now();
+        let _fence = self.flush_lock.lock().unwrap();
+        let src = self.groups[from].backend();
+        let dst = self.groups[to].backend();
+        let payload = src
+            .handoff_export(count)
+            .with_context(|| format!("exporting {count} vertices from shard {from}"))?;
+        let bytes = payload.len() as u64;
+        // adopt before release: if the adopt fails, nothing has changed
+        // anywhere (export is a pure read) and the move aborts clean
+        let adopted = match dst.handoff_adopt(&payload) {
+            Ok(ids) => ids,
+            Err(e) => {
+                obs::events::emit(
+                    obs::Severity::Warn,
+                    obs::events::kind::REBALANCE_ABORTED,
+                    &self.name,
+                    format!("move {from}->{to}: adopt failed ({e:#}); no state changed"),
+                );
+                return Err(e.context(format!("adopting handoff on shard {to}")));
+            }
+        };
+        src.handoff_release(&adopted)
+            .with_context(|| format!("releasing {} moved vertices on shard {from}", adopted.len()))?;
+        {
+            let mut owner = self.owner.lock().unwrap();
+            crate::shard::router::reassign(&mut owner, &adopted, to as u32)?;
+        }
+        // journals cannot span an ownership move: reset both groups and
+        // force their replicas through one full re-ship, exact-size
+        // hints refreshed on the next sync pass
+        for s in [from, to] {
+            self.journals[s].lock().unwrap().clear();
+            let gr = &self.groups[s];
+            gr.hint_stale.store(true, Ordering::SeqCst);
+            if !gr.replicas.is_empty() {
+                gr.force_full_ship.store(true, Ordering::SeqCst);
+            }
+        }
+        // publish a fresh epoch from a warm refinement: moved vertices
+        // answer from their new owner, and any replica still at the old
+        // epoch fails the epoch check until it catches up
+        let epoch = self.republish().context("republishing after the move")?;
+        let cutover_us = fence_start.elapsed().as_micros() as u64;
+        let shard_label = from.to_string();
+        obs::global()
+            .counter(
+                names::MIGRATE_SHIPPED_BYTES,
+                &[("graph", &self.name), ("shard", &shard_label)],
+            )
+            .add(bytes);
+        let kind = if self.groups[from]
+            .backend()
+            .status()
+            .map(|st| st.owned == 0)
+            .unwrap_or(false)
+        {
+            "merge"
+        } else {
+            "split"
+        };
+        let rec = MoveRecord {
+            kind,
+            from,
+            to: format!("shard{to}"),
+            vertices: adopted.len(),
+            bytes,
+            cutover_us,
+            epoch,
+            unix_ms: now_unix_ms(),
+        };
+        obs::events::emit(
+            obs::Severity::Info,
+            obs::events::kind::REBALANCE_MOVE,
+            &self.name,
+            format!(
+                "{kind} {from}->{to}: vertices={} bytes={bytes} cutover_us={cutover_us} epoch={epoch}",
+                adopted.len()
+            ),
+        );
+        self.push_move(rec.clone());
+        Ok(rec)
+    }
+
+    /// Re-refine (warm, no routed batch) and publish `epoch + 1`.
+    /// Callers hold the flush fence.
+    fn republish(&self) -> Result<u64> {
+        let epoch = self.epoch.load(Ordering::SeqCst) + 1;
+        let n = self.owner.lock().unwrap().len();
+        let backends: Vec<Arc<dyn ShardBackend>> =
+            self.groups.iter().map(|gr| gr.backend()).collect();
+        let refined =
+            refine(&backends, n, None, epoch, self.cfg.threads).context("post-move refinement")?;
+        let k_max = refined.core.iter().copied().max().unwrap_or(0);
+        for (s, gr) in self.groups.iter().enumerate() {
+            if let Some(&arcs) = refined.per_shard_boundary_arcs.get(s) {
+                gr.boundary_arcs.store(arcs, Ordering::Relaxed);
+            }
+        }
+        *self.published.write().unwrap() = Arc::new(Published {
+            global: Arc::new(CoreSnapshot {
+                epoch,
+                core: refined.core,
+                k_max,
+                num_edges: refined.num_edges,
+            }),
+            merge: refined.stats,
+            boundary_edges: refined.boundary_edges,
+        });
+        self.epoch.store(epoch, Ordering::SeqCst);
+        Ok(epoch)
+    }
+
+    /// Live primary migration: move shard `shard`'s primary to the host
+    /// at `addr` while routed edits keep flowing.
+    ///
+    /// Phase 1 (unfenced): flag the shard as migrating (flushes start
+    /// journalling it even with no replicas), ship the primary's full
+    /// manifest to the target, then loop delta catch-up — each pass
+    /// ships the journal chain covering whatever epochs flushes
+    /// published meanwhile, re-shipping the manifest on any chain gap.
+    /// Phase 2 (fenced, the measured cutover): under the flush fence,
+    /// ship the final chain, verify the target sits at the router's
+    /// exact epoch, and swap the primary. Writers observe only phase 2
+    /// as pause. Any failure before the swap aborts with the old
+    /// primary fully intact.
+    pub fn migrate_primary(&self, shard: usize, addr: &str) -> Result<MoveRecord> {
+        let _latch = self.begin_structural()?;
+        if shard >= self.groups.len() {
+            bail!(
+                "migrate: shard {shard} out of range (have {} shards)",
+                self.groups.len()
+            );
+        }
+        let gr = &self.groups[shard];
+        gr.migrating.store(true, Ordering::SeqCst);
+        let out = self.migrate_inner(shard, addr);
+        gr.migrating.store(false, Ordering::SeqCst);
+        if let Err(e) = &out {
+            obs::events::emit(
+                obs::Severity::Warn,
+                obs::events::kind::REBALANCE_ABORTED,
+                &self.name,
+                format!("migrate shard {shard} -> {addr} aborted ({e:#}); old primary intact"),
+            );
+        }
+        out
+    }
+
+    fn migrate_inner(&self, shard: usize, addr: &str) -> Result<MoveRecord> {
+        let gr = &self.groups[shard];
+        let num_shards = self.groups.len() as u32;
+        let shard_label = shard.to_string();
+        let labels: &[(&str, &str)] = &[("graph", &self.name), ("shard", &shard_label)];
+        let graph_name = format!("{}/shard{shard}", self.name);
+        let mover = Arc::new(
+            RemoteShard::new(shard, addr.to_string(), graph_name).with_auth(self.auth.clone()),
+        );
+        mover
+            .ping()
+            .with_context(|| format!("migration target {addr} unreachable"))?;
+        let catchup_start = Instant::now();
+        let mut shipped_bytes = 0u64;
+        // phase 1: ship the manifest, then chase the head with deltas.
+        // `at` is the epoch read *before* each ship, so a flush landing
+        // mid-ship only means one more catch-up pass, never a gap.
+        let mut at = self.epoch();
+        let manifest = gr.primary_manifest(num_shards)?;
+        shipped_bytes += manifest.len() as u64;
+        mover
+            .host(&manifest)
+            .with_context(|| format!("shipping shard {shard} manifest to {addr}"))?;
+        for _attempt in 0..8 {
+            let head = self.epoch();
+            if head == at {
+                break;
+            }
+            let chain = self.journals[shard].lock().unwrap().encode_chain(at, head);
+            match chain {
+                Some(bytes) => {
+                    mover
+                        .apply_delta(at, head, &bytes)
+                        .with_context(|| format!("catch-up chain ({at}, {head}] to {addr}"))?;
+                    shipped_bytes += bytes.len() as u64;
+                }
+                None => {
+                    // chain gap (journal bounds, or journalling started
+                    // after `at`): fall back to a manifest re-ship
+                    let head = self.epoch();
+                    let m = gr.primary_manifest(num_shards)?;
+                    shipped_bytes += m.len() as u64;
+                    mover.host(&m).context("manifest re-ship during catch-up")?;
+                    at = head;
+                    continue;
+                }
+            }
+            at = head;
+        }
+        obs::global()
+            .histogram(names::MIGRATE_CATCHUP_SECONDS, labels)
+            .record(catchup_start.elapsed().as_micros() as u64);
+        // phase 2: fenced cutover — the only pause writers observe
+        let cutover_start = Instant::now();
+        let _fence = self.flush_lock.lock().unwrap();
+        let head = self.epoch();
+        if at < head {
+            let chain = self.journals[shard].lock().unwrap().encode_chain(at, head);
+            match chain {
+                Some(bytes) => {
+                    mover
+                        .apply_delta(at, head, &bytes)
+                        .with_context(|| format!("final chain ({at}, {head}] to {addr}"))?;
+                    shipped_bytes += bytes.len() as u64;
+                }
+                None => {
+                    // no flush can interleave under the fence, so one
+                    // re-ship is guaranteed to land exactly at `head`
+                    let m = gr.primary_manifest(num_shards)?;
+                    shipped_bytes += m.len() as u64;
+                    mover.host(&m).context("manifest re-ship at cutover")?;
+                }
+            }
+        }
+        let st = mover
+            .status()
+            .with_context(|| format!("verifying {addr} before cutover"))?;
+        if st.cluster_epoch != head {
+            bail!(
+                "refusing cutover: {addr} committed epoch {} but the router is at {head}",
+                st.cluster_epoch
+            );
+        }
+        // the swap: reads and writes route to the new primary from here.
+        // Journals stay — the mover holds byte-identical state, so every
+        // recorded chain still applies; replicas keep syncing unbroken.
+        gr.set_primary(Primary::Remote(mover));
+        let cutover_us = cutover_start.elapsed().as_micros() as u64;
+        drop(_fence);
+        obs::global()
+            .histogram(names::MIGRATE_CUTOVER_SECONDS, labels)
+            .record(cutover_us);
+        obs::global()
+            .counter(names::MIGRATE_SHIPPED_BYTES, labels)
+            .add(shipped_bytes);
+        let rec = MoveRecord {
+            kind: "migrate",
+            from: shard,
+            to: addr.to_string(),
+            vertices: 0,
+            bytes: shipped_bytes,
+            cutover_us,
+            epoch: head,
+            unix_ms: now_unix_ms(),
+        };
+        obs::events::emit(
+            obs::Severity::Info,
+            obs::events::kind::PRIMARY_MIGRATED,
+            &self.name,
+            format!(
+                "shard {shard} primary -> {addr}: bytes={shipped_bytes} cutover_us={cutover_us} epoch={head}"
+            ),
+        );
+        self.push_move(rec.clone());
+        Ok(rec)
     }
 
     /// Assembled global CSR at the current epoch (cached per epoch;
@@ -971,7 +1512,7 @@ impl ClusterIndex {
         let n = self.owner.lock().unwrap().len();
         let mut b = GraphBuilder::new(n);
         for gr in &self.groups {
-            match &gr.primary {
+            match &*gr.primary.read().unwrap() {
                 Primary::Local(s) => {
                     for (u, v) in s.owned_edges() {
                         b.add_edge(u, v);
@@ -987,7 +1528,7 @@ impl ClusterIndex {
                             if gu as usize >= n || gv as usize >= n {
                                 bail!(
                                     "shard {} names vertex outside the cluster (|V|={n})",
-                                    gr.backend.id()
+                                    gr.backend().id()
                                 );
                             }
                             b.add_edge(gu, gv);
@@ -1005,11 +1546,7 @@ impl ClusterIndex {
 impl std::fmt::Debug for ClusterIndex {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         let s = self.snapshot();
-        let remote = self
-            .groups
-            .iter()
-            .filter(|g| matches!(g.primary, Primary::Remote(_)))
-            .count();
+        let remote = self.groups.iter().filter(|g| g.kind() == "remote").count();
         write!(
             f,
             "ClusterIndex({} x{} [{} remote] @ epoch {}: |V|={}, |E|={}, k_max={})",
@@ -1088,6 +1625,79 @@ mod tests {
         let report = cl.sync_replicas().unwrap();
         assert_eq!(report.shipped(), 0);
         assert_eq!(report.failed, 0);
+    }
+
+    #[test]
+    fn moves_preserve_the_oracle_and_route_edits_after() {
+        let g = gen::erdos_renyi(120, 420, 11);
+        let single = CoreIndex::new("single", &g);
+        let cl = ClusterIndex::build(&g, &all_local("c", 3), cfg()).unwrap();
+        let want = single.snapshot();
+        // split: move 10 boundary-heavy vertices from shard 0 to 1
+        let rec = cl.move_vertices(0, 1, 10).unwrap();
+        assert_eq!(rec.vertices, 10);
+        assert_eq!(rec.kind, "split");
+        assert!(rec.bytes > 0);
+        assert_eq!(cl.epoch(), 1, "a move publishes a fresh epoch");
+        assert_eq!(cl.snapshot().core, want.core);
+        assert_eq!(cl.snapshot().num_edges, want.num_edges);
+        for v in 0..g.num_vertices() as u32 {
+            assert_eq!(cl.coreness_routed(v).unwrap(), want.coreness(v), "v{v}");
+        }
+        // routed edits keep flowing after the move
+        cl.submit(EdgeEdit::Insert(0, 90));
+        cl.submit(EdgeEdit::Insert(3, 117));
+        assert_eq!(cl.flush().unwrap().snapshot.epoch, 2);
+        let (snap, graph) = cl.consistent_view().unwrap();
+        assert_eq!(snap.core, bz_coreness(&graph));
+        // merge: empty shard 2 into shard 0 entirely
+        let owned2 = cl.groups()[2].backend().status().unwrap().owned;
+        assert!(owned2 > 0);
+        let rec = cl.move_vertices(2, 0, owned2).unwrap();
+        assert_eq!(rec.kind, "merge");
+        assert_eq!(rec.vertices, owned2);
+        assert_eq!(cl.groups()[2].backend().status().unwrap().owned, 0);
+        let (snap, graph) = cl.consistent_view().unwrap();
+        assert_eq!(snap.core, bz_coreness(&graph));
+        // history ring remembers both, oldest first
+        let moves = cl.moves();
+        assert_eq!(moves.len(), 2);
+        assert_eq!(moves[0].kind, "split");
+        assert_eq!(moves[1].to, "shard0");
+        // guards: self-move, out-of-range, nothing left to export
+        assert!(cl.move_vertices(0, 0, 1).is_err());
+        assert!(cl.move_vertices(0, 9, 1).is_err());
+        assert!(cl.move_vertices(0, 1, 0).is_err());
+        assert!(
+            cl.move_vertices(2, 0, 1).is_err(),
+            "an emptied shard has nothing to export"
+        );
+    }
+
+    #[test]
+    fn migration_to_an_unreachable_target_aborts_clean() {
+        let g = gen::erdos_renyi(80, 200, 5);
+        let single = CoreIndex::new("single", &g);
+        let cl = ClusterIndex::build(&g, &all_local("c", 2), cfg()).unwrap();
+        // reserved port: nothing listens, the target ping must fail
+        let err = cl.migrate_primary(0, "127.0.0.1:1").unwrap_err();
+        assert!(format!("{err:#}").contains("unreachable"), "{err:#}");
+        // old primary fully intact: epoch, answers, flags, history
+        assert_eq!(cl.epoch(), 0);
+        assert_eq!(cl.snapshot().core, single.snapshot().core);
+        assert!(!cl.groups()[0].migrating());
+        assert!(cl.moves().is_empty());
+        assert_eq!(cl.coreness_routed(3).unwrap(), single.snapshot().coreness(3));
+        // the latch released on abort: the retry is admitted (and fails
+        // on reachability again), not refused as busy
+        let err = cl.migrate_primary(0, "127.0.0.1:1").unwrap_err();
+        assert!(err.downcast_ref::<RebalanceBusy>().is_none());
+        assert!(cl.migrate_primary(9, "127.0.0.1:1").is_err(), "out of range");
+        // edits still flow after the aborted migration
+        cl.submit(EdgeEdit::Insert(0, 40));
+        assert_eq!(cl.flush().unwrap().snapshot.epoch, 1);
+        let (snap, graph) = cl.consistent_view().unwrap();
+        assert_eq!(snap.core, bz_coreness(&graph));
     }
 
     #[test]

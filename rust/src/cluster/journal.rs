@@ -175,6 +175,14 @@ impl EpochJournal {
         let chain = self.chain(from, to)?;
         Some(super::wire::encode_delta_chain(from, to, &chain))
     }
+
+    /// Whether the contiguous chain `(from, to]` is fully retained —
+    /// what the migration catch-up loop probes before deciding between
+    /// a delta ship and a full-manifest re-ship (without paying for the
+    /// encoding it may not send).
+    pub fn covers(&self, from: u64, to: u64) -> bool {
+        self.chain(from, to).is_some()
+    }
 }
 
 #[cfg(test)]
@@ -196,6 +204,7 @@ mod tests {
             j.record(delta(e));
         }
         assert_eq!(j.len(), 5);
+        assert!(j.covers(2, 5) && !j.covers(2, 6) && !j.covers(5, 5));
         let chain = j.chain(2, 5).unwrap();
         assert_eq!(
             chain.iter().map(|d| d.to_epoch).collect::<Vec<_>>(),

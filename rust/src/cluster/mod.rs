@@ -36,6 +36,17 @@
 //!   background daemon (`pico serve --sync-interval`) instead of on the
 //!   flush path.
 //!
+//! * [`rebalance`] — the elastic-resharding planner/executor: turns
+//!   the live per-shard load signals (state bytes, routed-edit heat,
+//!   boundary-arc share, replica lag) into a bounded plan of splits and
+//!   merges, each driven through the handoff primitive
+//!   ([`index::ClusterIndex::move_vertices`]) under the flush fence;
+//!   live primary migration ([`index::ClusterIndex::migrate_primary`])
+//!   rides the same manifest-ship + delta-chain machinery with an
+//!   epoch-verified fenced cutover. The `CLUSTER` admin namespace
+//!   (`TOPOLOGY`, `REBALANCE PLAN|APPLY|MIGRATE`, `MOVES`) is the
+//!   operator surface.
+//!
 //! A two-host walkthrough lives in `examples/serve_session.rs`; the
 //! loopback-cluster-vs-oracle equivalence and the fault paths (dead
 //! replicas, truncated connections, stale-epoch catch-up over both the
@@ -48,12 +59,17 @@ pub mod config;
 pub mod host;
 pub mod index;
 pub mod journal;
+pub mod rebalance;
 pub mod remote;
 pub mod wire;
 
 pub use config::{ClusterConfig, Endpoint, ShardSpec};
 pub use host::{manifest_for, ShardHost};
-pub use index::{ClusterIndex, GroupStatus, Primary, ReplicaGroup, SyncReport, SyncStats};
+pub use index::{
+    ClusterIndex, GroupStatus, MoveRecord, Primary, RebalanceBusy, ReplicaGroup, SyncReport,
+    SyncStats,
+};
 pub use journal::{EpochDelta, EpochJournal, DEFAULT_JOURNAL_EPOCHS};
+pub use rebalance::{PlannedMove, RebalancePlan, ShardLoad};
 pub use remote::RemoteShard;
-pub use wire::ShardManifest;
+pub use wire::{HandoffPayload, HandoffVertex, ShardManifest};

@@ -1,0 +1,276 @@
+//! The rebalance planner and executor: turns the per-shard load
+//! signals the router already tracks into a bounded plan of ownership
+//! moves, and drives each move through the handoff primitive.
+//!
+//! The planner is deliberately conservative — the same philosophy as
+//! [`crate::shard::partition`]'s degree-balanced cost model, whose
+//! weights (degree + 1 per vertex) are exactly what a shard's
+//! `state_bytes` is a faithful proxy for (the manifest encodes each
+//! owned vertex plus its adjacency). One pass emits at most **one
+//! split** (shave the hottest shard toward the mean) plus any number of
+//! **merges** (empty shards that have shrunk below a floor fraction of
+//! the mean into the next-smallest shard), because every move costs a
+//! fenced cutover and a replica re-ship — a plan that chases perfect
+//! balance in one shot would pause writers for longer than the
+//! imbalance costs.
+//!
+//! Signals, all live on [`crate::cluster::ReplicaGroup`]:
+//!
+//! * `state_bytes` — the size signal (degree-weighted, like the
+//!   partitioner's cost model); the imbalance test runs on it.
+//! * `edits_routed` — the heat tiebreak: between two near-equal heavy
+//!   shards, shave the one taking more writes.
+//! * `boundary_arcs` — reported in the plan (an operator deciding
+//!   between split targets cares about cut growth), not yet an
+//!   objective term.
+//! * `lag_epochs` / `reachable` — shards whose replicas lag, or whose
+//!   primary probe failed, are never chosen as *targets*: landing more
+//!   vertices on a group that cannot even keep its replicas current
+//!   digs the hole deeper.
+
+use super::index::{ClusterIndex, MoveRecord};
+use anyhow::{Context, Result};
+
+/// A hot shard splits when its weight exceeds the mean by this factor.
+pub const SPLIT_THRESHOLD: f64 = 1.2;
+
+/// A shard merges away when its weight falls below this fraction of the
+/// mean (and some other shard can take it).
+pub const MERGE_FLOOR: f64 = 0.25;
+
+/// One shard's live load signals, as sampled for a plan.
+#[derive(Clone, Debug)]
+pub struct ShardLoad {
+    pub shard: usize,
+    /// Owned vertices (status probe).
+    pub owned: usize,
+    /// Exact encoded state size — the degree-weighted size signal.
+    pub state_bytes: u64,
+    /// Routed edits applied by this shard's primary, cumulatively.
+    pub edits_routed: u64,
+    /// Boundary arcs at the last refinement (cut-share signal).
+    pub boundary_arcs: u64,
+    /// Replica lag at the last sync probe (0 = all current).
+    pub lag_epochs: u64,
+    /// Whether the primary answered its status probe.
+    pub reachable: bool,
+}
+
+/// One planned ownership move.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct PlannedMove {
+    /// `"split"` or `"merge"`.
+    pub kind: &'static str,
+    pub from: usize,
+    pub to: usize,
+    /// Vertices to hand off.
+    pub count: usize,
+    /// Why the planner chose this move (rendered by `CLUSTER REBALANCE
+    /// PLAN`).
+    pub reason: String,
+}
+
+/// A full plan: the load snapshot it was computed from, plus the moves.
+#[derive(Clone, Debug)]
+pub struct RebalancePlan {
+    pub loads: Vec<ShardLoad>,
+    pub moves: Vec<PlannedMove>,
+}
+
+impl RebalancePlan {
+    pub fn is_empty(&self) -> bool {
+        self.moves.is_empty()
+    }
+}
+
+/// Compute a plan from a load snapshot. Pure — callers sample loads
+/// (`ClusterIndex::shard_loads`) and apply moves separately, so the
+/// planner is unit-testable without a cluster.
+pub fn plan(loads: &[ShardLoad]) -> RebalancePlan {
+    let mut moves = Vec::new();
+    let eligible: Vec<&ShardLoad> = loads.iter().filter(|l| l.reachable).collect();
+    if eligible.len() < 2 {
+        return RebalancePlan {
+            loads: loads.to_vec(),
+            moves,
+        };
+    }
+    let mean =
+        eligible.iter().map(|l| l.state_bytes).sum::<u64>() as f64 / eligible.len() as f64;
+    // a valid landing zone: reachable, replicas current
+    let target_of = |exclude: &[usize]| -> Option<usize> {
+        eligible
+            .iter()
+            .filter(|l| l.lag_epochs == 0 && !exclude.contains(&l.shard))
+            .min_by_key(|l| (l.state_bytes, l.shard))
+            .map(|l| l.shard)
+    };
+    // shards below the merge floor are about to be emptied — they are
+    // merge *sources*, never landing zones for a split
+    let shrunken: Vec<usize> = eligible
+        .iter()
+        .filter(|l| l.owned > 0 && (l.state_bytes as f64) < mean * MERGE_FLOOR)
+        .map(|l| l.shard)
+        .collect();
+    // at most one split per pass: the heaviest shard over the threshold
+    // (edits_routed breaks near-equal ties toward the hotter writer)
+    let split = eligible
+        .iter()
+        .filter(|l| l.owned > 1 && (l.state_bytes as f64) > mean * SPLIT_THRESHOLD)
+        .max_by_key(|l| (l.state_bytes, l.edits_routed, l.shard));
+    if let Some(hot) = split {
+        let mut exclude = shrunken.clone();
+        exclude.push(hot.shard);
+        if let Some(to) = target_of(&exclude) {
+            // shave the excess over the mean, scaled into vertices
+            let excess = (hot.state_bytes as f64 - mean) / hot.state_bytes as f64;
+            let count = ((hot.owned as f64 * excess) as usize).clamp(1, hot.owned - 1);
+            moves.push(PlannedMove {
+                kind: "split",
+                from: hot.shard,
+                to,
+                count,
+                reason: format!(
+                    "shard {} carries {} bytes ({}x the {}-byte mean; {} routed edits, {} boundary arcs)",
+                    hot.shard,
+                    hot.state_bytes,
+                    (hot.state_bytes as f64 / mean * 100.0).round() / 100.0,
+                    mean as u64,
+                    hot.edits_routed,
+                    hot.boundary_arcs,
+                ),
+            });
+        }
+    }
+    // merges: shards shrunk below the floor empty into the next-smallest
+    // (never a shard already involved in this pass's split)
+    let busy: Vec<usize> = moves.iter().flat_map(|m| [m.from, m.to]).collect();
+    for l in &eligible {
+        if l.owned == 0 || busy.contains(&l.shard) {
+            continue;
+        }
+        if (l.state_bytes as f64) < mean * MERGE_FLOOR {
+            let mut exclude = busy.clone();
+            exclude.push(l.shard);
+            exclude.extend(moves.iter().map(|m| m.from));
+            if let Some(to) = target_of(&exclude) {
+                moves.push(PlannedMove {
+                    kind: "merge",
+                    from: l.shard,
+                    to,
+                    count: l.owned,
+                    reason: format!(
+                        "shard {} shrank to {} bytes (under {}% of the {}-byte mean)",
+                        l.shard,
+                        l.state_bytes,
+                        (MERGE_FLOOR * 100.0) as u64,
+                        mean as u64,
+                    ),
+                });
+            }
+        }
+    }
+    RebalancePlan {
+        loads: loads.to_vec(),
+        moves,
+    }
+}
+
+/// Drive every planned move through [`ClusterIndex::move_vertices`],
+/// in order. Each move is atomic (fenced, epoch-published); a failure
+/// stops the pass with the completed moves standing — the cluster is
+/// consistent after every step, so there is nothing to roll back.
+/// Callers hold the one-at-a-time latch (`ClusterIndex::rebalance_apply`
+/// is the latched entry point).
+pub fn execute(idx: &ClusterIndex, plan: &RebalancePlan) -> Result<Vec<MoveRecord>> {
+    let mut records = Vec::with_capacity(plan.moves.len());
+    for m in &plan.moves {
+        let rec = idx.move_vertices(m.from, m.to, m.count).with_context(|| {
+            format!("applying planned {} {}->{} ({} vertices)", m.kind, m.from, m.to, m.count)
+        })?;
+        records.push(rec);
+    }
+    Ok(records)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn load(shard: usize, owned: usize, state_bytes: u64) -> ShardLoad {
+        ShardLoad {
+            shard,
+            owned,
+            state_bytes,
+            edits_routed: 0,
+            boundary_arcs: 0,
+            lag_epochs: 0,
+            reachable: true,
+        }
+    }
+
+    #[test]
+    fn balanced_clusters_plan_nothing() {
+        let p = plan(&[load(0, 100, 1000), load(1, 100, 1050), load(2, 100, 980)]);
+        assert!(p.is_empty(), "{:?}", p.moves);
+        // degenerate inputs
+        assert!(plan(&[]).is_empty());
+        assert!(plan(&[load(0, 100, 1000)]).is_empty());
+    }
+
+    #[test]
+    fn a_hot_shard_splits_toward_the_smallest() {
+        let p = plan(&[load(0, 200, 4000), load(1, 100, 1000), load(2, 110, 1200)]);
+        assert_eq!(p.moves.len(), 1);
+        let m = &p.moves[0];
+        assert_eq!((m.kind, m.from, m.to), ("split", 0, 1));
+        // excess over the mean (~2067) is ~48% of shard 0's weight
+        assert!(m.count >= 1 && m.count < 200, "count {}", m.count);
+        assert!((80..=120).contains(&m.count), "count {}", m.count);
+        assert!(m.reason.contains("shard 0"), "{}", m.reason);
+    }
+
+    #[test]
+    fn a_shrunken_shard_merges_away() {
+        let p = plan(&[load(0, 100, 2000), load(1, 100, 2100), load(2, 5, 100)]);
+        assert_eq!(p.moves.len(), 1);
+        let m = &p.moves[0];
+        assert_eq!((m.kind, m.from, m.count), ("merge", 2, 5));
+        assert_eq!(m.to, 0, "merges into the smallest other shard");
+    }
+
+    #[test]
+    fn lagging_and_unreachable_shards_are_never_targets() {
+        // shard 1 is smallest but lags; the split must land on shard 2
+        let mut laggy = load(1, 50, 500);
+        laggy.lag_epochs = 3;
+        let p = plan(&[load(0, 200, 4000), laggy, load(2, 110, 1200)]);
+        assert_eq!(p.moves.len(), 1);
+        assert_eq!(p.moves[0].to, 2);
+        // an unreachable shard neither splits nor receives
+        let mut dead = load(0, 0, 0);
+        dead.reachable = false;
+        let p = plan(&[dead, load(1, 100, 1000), load(2, 100, 1020)]);
+        assert!(p.is_empty(), "{:?}", p.moves);
+    }
+
+    #[test]
+    fn split_and_merge_compose_without_sharing_shards() {
+        // shard 0 hot, shard 3 tiny: one split + one merge, landing on
+        // different shards than the split pair
+        let p = plan(&[
+            load(0, 300, 6000),
+            load(1, 100, 1500),
+            load(2, 120, 1600),
+            load(3, 4, 90),
+        ]);
+        let kinds: Vec<&str> = p.moves.iter().map(|m| m.kind).collect();
+        assert_eq!(kinds, vec!["split", "merge"]);
+        let split = &p.moves[0];
+        let merge = &p.moves[1];
+        assert_eq!(split.from, 0);
+        assert_eq!(merge.from, 3);
+        assert_ne!(merge.to, split.from, "merge must not refill the hot shard");
+        assert_ne!(merge.to, merge.from);
+    }
+}

@@ -275,6 +275,43 @@ impl ShardBackend for RemoteShard {
         }
         Ok((members, cluster))
     }
+
+    fn handoff_export(&self, count: usize) -> Result<Vec<u8>> {
+        // idempotent: exporting reads committed state, changes nothing
+        // (ownership only moves at ADOPT/RELEASE)
+        let (head, payload) = self.call_line(&format!("SHARDHAND EXPORT {count}"))?;
+        if field_u64(&head, "bytes")? as usize != payload.len() {
+            bail!(
+                "SHARDHAND EXPORT declared {} bytes but shipped {}",
+                field_u64(&head, "bytes")?,
+                payload.len()
+            );
+        }
+        Ok(payload)
+    }
+
+    fn handoff_adopt(&self, bytes: &[u8]) -> Result<Vec<VertexId>> {
+        // NOT idempotent: the remote refuses already-owned vertices, so
+        // a replayed ADOPT whose first reply was lost would error even
+        // though the move landed — surface the error and let the
+        // rebalance executor probe ownership instead of replaying
+        let (head, payload) = self.call_payload_once("SHARDHAND ADOPT", bytes)?;
+        let adopted = wire::decode_u32s(&payload)?;
+        if adopted.len() as u64 != field_u64(&head, "adopted")? {
+            bail!("SHARDHAND ADOPT adopted= disagrees with the id payload");
+        }
+        Ok(adopted)
+    }
+
+    fn handoff_release(&self, vertices: &[VertexId]) -> Result<()> {
+        // NOT idempotent: releasing an already-released vertex errors
+        let (head, _) =
+            self.call_payload_once("SHARDHAND RELEASE", &wire::encode_u32s(vertices))?;
+        if field_u64(&head, "released")? as usize != vertices.len() {
+            bail!("SHARDHAND RELEASE released= disagrees with the request");
+        }
+        Ok(())
+    }
 }
 
 impl std::fmt::Debug for RemoteShard {

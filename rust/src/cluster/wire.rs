@@ -38,7 +38,7 @@
 use super::journal::EpochDelta;
 use crate::core::maintenance::EdgeEdit;
 use crate::graph::VertexId;
-use crate::net::codec::{Cursor, DELTA_MAGIC, MANIFEST_MAGIC};
+use crate::net::codec::{Cursor, DELTA_MAGIC, HANDOFF_MAGIC, MANIFEST_MAGIC};
 use crate::shard::backend::{RefineInit, RoutedBatch};
 use crate::shard::snapshot::{self, IndexSnapshot};
 use anyhow::{bail, Context, Result};
@@ -251,6 +251,113 @@ pub fn decode_delta_chain(bytes: &[u8]) -> Result<(u64, u64, Vec<EpochDelta>)> {
     }
     c.done("delta chain")?;
     Ok((from, to, deltas))
+}
+
+/// One vertex crossing shards in a rebalance move: its identity, its
+/// committed refined coreness, and its complete adjacency (the partition
+/// invariant — an owner holds every arc out of its owned vertices — is
+/// what makes the exporting shard's neighbor list authoritative).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HandoffVertex {
+    pub id: VertexId,
+    pub refined: u32,
+    /// Global neighbor ids, strictly ascending (the codec enforces it,
+    /// so duplicates and self-loops cannot cross the wire).
+    pub neighbors: Vec<VertexId>,
+}
+
+/// A decoded, fully validated handoff payload.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct HandoffPayload {
+    /// The exporting shard — an adopter refuses its own exports.
+    pub from_shard: u32,
+    pub vertices: Vec<HandoffVertex>,
+}
+
+/// Serialise an owned-vertex handoff (`SHARDHAND ADOPT` payload):
+///
+/// ```text
+/// magic       HANDOFF_MAGIC                    8 bytes
+/// from_shard  u32
+/// count       u64
+/// per vertex: u32 id, u32 refined,
+///             u64 deg + deg × u32 neighbors (strictly ascending)
+/// ```
+pub fn encode_handoff(from_shard: u32, vertices: &[HandoffVertex]) -> Result<Vec<u8>> {
+    if vertices.is_empty() {
+        bail!("empty handoff");
+    }
+    let mut out = Vec::with_capacity(
+        20 + vertices.iter().map(|v| 16 + v.neighbors.len() * 4).sum::<usize>(),
+    );
+    out.extend_from_slice(HANDOFF_MAGIC);
+    out.extend_from_slice(&from_shard.to_le_bytes());
+    out.extend_from_slice(&(vertices.len() as u64).to_le_bytes());
+    for hv in vertices {
+        out.extend_from_slice(&hv.id.to_le_bytes());
+        out.extend_from_slice(&hv.refined.to_le_bytes());
+        out.extend_from_slice(&(hv.neighbors.len() as u64).to_le_bytes());
+        for &w in &hv.neighbors {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+/// Parse and validate untrusted handoff bytes: neighbor lists must be
+/// strictly ascending (no duplicate arcs), free of self-loops, and each
+/// refined coreness is capped by the shipped degree — the same bound
+/// [`decode_manifest`] enforces for owned vertices.
+pub fn decode_handoff(bytes: &[u8]) -> Result<HandoffPayload> {
+    let mut c = Cursor::new(bytes);
+    if c.take(HANDOFF_MAGIC.len())? != HANDOFF_MAGIC {
+        bail!("not a pico shard handoff (bad magic)");
+    }
+    let from_shard = c.u32()?;
+    // each vertex is at least id + refined + an empty-degree count
+    let count = c.count(16, "handoff vertex")?;
+    if count == 0 {
+        bail!("empty handoff");
+    }
+    let mut vertices = Vec::with_capacity(count);
+    let mut last_id: Option<VertexId> = None;
+    for _ in 0..count {
+        let id = c.u32()?;
+        if let Some(prev) = last_id {
+            if id <= prev {
+                bail!("handoff vertices must be strictly ascending ({prev} then {id})");
+            }
+        }
+        last_id = Some(id);
+        let refined = c.u32()?;
+        let deg = c.count(4, "handoff neighbors")?;
+        if refined as usize > deg {
+            bail!("handoff refined {refined} for vertex {id} exceeds its degree {deg}");
+        }
+        let mut neighbors = Vec::with_capacity(deg);
+        for _ in 0..deg {
+            let w = c.u32()?;
+            if w == id {
+                bail!("handoff vertex {id} carries a self-loop");
+            }
+            if let Some(&prev) = neighbors.last() {
+                if w <= prev {
+                    bail!("handoff neighbors of {id} must be strictly ascending");
+                }
+            }
+            neighbors.push(w);
+        }
+        vertices.push(HandoffVertex {
+            id,
+            refined,
+            neighbors,
+        });
+    }
+    c.done("handoff")?;
+    Ok(HandoffPayload {
+        from_shard,
+        vertices,
+    })
 }
 
 /// A decoded, fully validated shard manifest.
@@ -505,6 +612,76 @@ mod tests {
         }];
         let refs: Vec<&EpochDelta> = evil.iter().collect();
         assert!(decode_delta_chain(&encode_delta_chain(0, 1, &refs)).is_err());
+    }
+
+    #[test]
+    fn handoff_round_trips_and_validates() {
+        let vs = vec![
+            HandoffVertex {
+                id: 3,
+                refined: 2,
+                neighbors: vec![1, 4, 9],
+            },
+            HandoffVertex {
+                id: 7,
+                refined: 0,
+                neighbors: vec![],
+            },
+        ];
+        let bytes = encode_handoff(1, &vs).unwrap();
+        let p = decode_handoff(&bytes).unwrap();
+        assert_eq!(p.from_shard, 1);
+        assert_eq!(p.vertices, vs);
+        // truncations never panic, always reject
+        for cut in 0..bytes.len() {
+            assert!(decode_handoff(&bytes[..cut]).is_err(), "cut at {cut}");
+        }
+        let mut trailing = bytes.clone();
+        trailing.push(0);
+        assert!(decode_handoff(&trailing).is_err());
+        assert!(decode_handoff(b"NOTAHANDOFFxxxxxxxxxxxxx").is_err());
+        assert!(encode_handoff(0, &[]).is_err(), "empty handoff");
+        // a count far beyond the payload fails before allocating
+        let mut huge = bytes.clone();
+        huge[12..20].copy_from_slice(&u64::MAX.to_le_bytes());
+        assert!(decode_handoff(&huge).is_err());
+        // refined above the shipped degree
+        let evil = encode_handoff(
+            0,
+            &[HandoffVertex {
+                id: 1,
+                refined: 5,
+                neighbors: vec![2],
+            }],
+        )
+        .unwrap();
+        assert!(decode_handoff(&evil).is_err());
+        // self-loops and unsorted neighbor lists rejected
+        let evil = encode_handoff(
+            0,
+            &[HandoffVertex {
+                id: 1,
+                refined: 0,
+                neighbors: vec![1],
+            }],
+        )
+        .unwrap();
+        assert!(decode_handoff(&evil).is_err());
+        // vertices out of ascending order rejected
+        let evil = {
+            let a = HandoffVertex {
+                id: 9,
+                refined: 0,
+                neighbors: vec![],
+            };
+            let b = HandoffVertex {
+                id: 3,
+                refined: 0,
+                neighbors: vec![],
+            };
+            encode_handoff(0, &[a, b]).unwrap()
+        };
+        assert!(decode_handoff(&evil).is_err());
     }
 
     #[test]

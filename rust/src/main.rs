@@ -17,7 +17,7 @@ fn run() -> Result<()> {
     let raw: Vec<String> = std::env::args().skip(1).collect();
     let args = Args::parse_with_sub(
         &raw,
-        &["metrics", "no-validate", "help", "json", "binary", "events", "health"],
+        &["metrics", "no-validate", "help", "json", "binary", "events", "health", "apply"],
         &["cluster"],
     )?;
 

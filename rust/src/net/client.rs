@@ -55,8 +55,86 @@ pub fn field_u64(head: &str, key: &str) -> Result<u64> {
         .with_context(|| format!("bad {key}= in reply '{head}'"))
 }
 
+/// A stable machine-readable error code parsed off an `ERR <CODE> <msg>`
+/// reply — mirrors the server-side table in [`crate::net::conn::code`].
+/// Retry/failover policy keys off this instead of string-matching the
+/// free-text tail.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Missing/wrong `AUTH <token>` preamble.
+    Auth,
+    /// No such graph (or none selected).
+    NoGraph,
+    /// Epoch fence: the request's epoch does not match the shard's.
+    StaleEpoch,
+    /// The answer lives on another host.
+    Redirect,
+    /// A server-side limit was hit (caps, queues).
+    Capacity,
+    /// Malformed request.
+    BadReq,
+    /// A rebalance is in flight; retry after it completes.
+    Migrating,
+}
+
+impl ErrCode {
+    /// Parse the code token (second word of an `ERR <CODE> <msg>`
+    /// reply). Unknown tokens are `None` — old servers answer plain
+    /// `ERR <msg>` and that must stay a valid, merely uncoded, error.
+    pub fn parse(tok: &str) -> Option<Self> {
+        Some(match tok {
+            "AUTH" => Self::Auth,
+            "NOGRAPH" => Self::NoGraph,
+            "STALE_EPOCH" => Self::StaleEpoch,
+            "REDIRECT" => Self::Redirect,
+            "CAPACITY" => Self::Capacity,
+            "BADREQ" => Self::BadReq,
+            "MIGRATING" => Self::Migrating,
+            _ => return None,
+        })
+    }
+}
+
+/// A remote `ERR` reply carried as a typed error: the full head line
+/// for humans, the parsed [`ErrCode`] (if the server sent one) for
+/// policy. Display stays `remote: <head>` so existing error text is
+/// unchanged; callers that need the code reach it through
+/// [`remote_err_code`] instead of matching substrings.
+#[derive(Debug)]
+pub struct RemoteReplyError {
+    pub code: Option<ErrCode>,
+    pub head: String,
+}
+
+impl RemoteReplyError {
+    fn from_head(head: String) -> Self {
+        let code = head
+            .strip_prefix("ERR ")
+            .and_then(|rest| rest.split_whitespace().next())
+            .and_then(ErrCode::parse);
+        Self { code, head }
+    }
+}
+
+impl std::fmt::Display for RemoteReplyError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "remote: {}", self.head)
+    }
+}
+
+impl std::error::Error for RemoteReplyError {}
+
+/// The [`ErrCode`] buried in an error chain, if the failure was a coded
+/// remote `ERR` reply (transport failures and uncoded `ERR`s are
+/// `None`).
+pub fn remote_err_code(e: &anyhow::Error) -> Option<ErrCode> {
+    e.chain()
+        .find_map(|c| c.downcast_ref::<RemoteReplyError>())
+        .and_then(|r| r.code)
+}
+
 /// Split a reply frame into its head line and raw payload; `ERR` heads
-/// become errors.
+/// become [`RemoteReplyError`]s (code parsed, text preserved).
 pub fn split_reply(frame: Vec<u8>) -> Result<(String, Vec<u8>)> {
     let (head, payload) = split_frame(&frame);
     let head = std::str::from_utf8(head)
@@ -64,7 +142,7 @@ pub fn split_reply(frame: Vec<u8>) -> Result<(String, Vec<u8>)> {
         .to_string();
     let payload = payload.to_vec();
     if head.starts_with("ERR") {
-        bail!("remote: {head}");
+        return Err(RemoteReplyError::from_head(head).into());
     }
     Ok((head, payload))
 }
@@ -436,6 +514,29 @@ mod tests {
         let (head, payload) = split_reply(b"OK x=1\nabc".to_vec()).unwrap();
         assert_eq!(head, "OK x=1");
         assert_eq!(payload, b"abc");
+    }
+
+    #[test]
+    fn coded_err_replies_carry_a_parsed_code() {
+        let e = split_reply(b"ERR STALE_EPOCH chain starts at epoch 7".to_vec()).unwrap_err();
+        assert_eq!(remote_err_code(&e), Some(ErrCode::StaleEpoch));
+        // the human-facing text is unchanged by the typed carrier
+        assert_eq!(
+            format!("{e:#}"),
+            "remote: ERR STALE_EPOCH chain starts at epoch 7"
+        );
+        // uncoded (legacy) and unknown-code replies stay plain errors
+        let e = split_reply(b"ERR something broke".to_vec()).unwrap_err();
+        assert_eq!(remote_err_code(&e), None);
+        let e = split_reply(b"ERR WAT new-server code".to_vec()).unwrap_err();
+        assert_eq!(remote_err_code(&e), None);
+        // a context wrapper must not hide the code from the extractor
+        let e = split_reply(b"ERR MIGRATING rebalance in flight".to_vec())
+            .unwrap_err()
+            .context("probing shard 2");
+        assert_eq!(remote_err_code(&e), Some(ErrCode::Migrating));
+        // transport errors carry no code
+        assert_eq!(remote_err_code(&anyhow!("connection reset")), None);
     }
 
     #[test]

@@ -11,6 +11,8 @@
 //! * [`SNAPSHOT_MAGIC`] — index snapshots ([`crate::shard::snapshot`]).
 //! * [`MANIFEST_MAGIC`] — shard manifests ([`crate::cluster::wire`]).
 //! * [`DELTA_MAGIC`] — epoch delta chains ([`crate::cluster::wire`]).
+//! * [`HANDOFF_MAGIC`] — owned-vertex handoff payloads shipped by the
+//!   rebalancer when a shard splits or merges ([`crate::cluster::wire`]).
 //!
 //! The read/write path here is shared by the server ([`crate::net::pool`]
 //! / [`crate::net::conn`]), the remote-shard client
@@ -34,6 +36,11 @@ pub const MANIFEST_MAGIC: &[u8; 8] = b"PICOSHD1";
 
 /// Epoch-delta-chain payload magic (see [`crate::cluster::wire`]).
 pub const DELTA_MAGIC: &[u8; 8] = b"PICODLT1";
+
+/// Owned-vertex handoff payload magic (see [`crate::cluster::wire`]).
+/// Carries a set of owned vertices — adjacency and committed coreness —
+/// from one shard to another during a rebalance split or merge.
+pub const HANDOFF_MAGIC: &[u8; 8] = b"PICOHND1";
 
 /// Longest protocol line accepted from the wire. A client streaming
 /// bytes with no newline must not grow the server's line buffer without
@@ -300,7 +307,7 @@ mod tests {
 
     #[test]
     fn magics_are_distinct() {
-        let all = [SNAPSHOT_MAGIC, MANIFEST_MAGIC, DELTA_MAGIC];
+        let all = [SNAPSHOT_MAGIC, MANIFEST_MAGIC, DELTA_MAGIC, HANDOFF_MAGIC];
         for (i, a) in all.iter().enumerate() {
             assert_eq!(a.len(), 8);
             for b in &all[i + 1..] {

@@ -74,6 +74,7 @@ pub const LINE_VERBS: &[&str] = &[
     "HISTO",
     "DENSEST",
     "SHARDS",
+    "CLUSTER",
     "INSERT",
     "DELETE",
     "FLUSH",
@@ -100,6 +101,7 @@ pub const FRAME_VERBS: &[&str] = &[
     "SHARDAPPLY",
     "SHARDREFINE",
     "SHARDDELTA",
+    "SHARDHAND",
     "SHARDMEMBERS",
 ];
 
@@ -112,7 +114,64 @@ pub const AUTH_VERBS: &[&str] = &[
     "SHARDREFINE",
     "SHARDSNAP",
     "SHARDDELTA",
+    "SHARDHAND",
 ];
+
+/// The `CLUSTER <SUBVERB>` admin namespace — the one dispatch table the
+/// control plane hangs off. [`crate::service::server`] resolves the
+/// sub-verb against this list (and each legacy alias against
+/// [`CLUSTER_ALIASES`]); CI greps every entry here against the protocol
+/// docs as `` `CLUSTER <SUB>` ``, so a namespace addition cannot land
+/// undocumented.
+pub const CLUSTER_SUBVERBS: &[&str] = &["TOPOLOGY", "REBALANCE", "MOVES"];
+
+/// Legacy admin verbs kept as thin aliases for one release: each pair
+/// is `(old verb, CLUSTER sub-verb it forwards to)`. Both spellings run
+/// the identical handler, so replies are byte-for-byte equal (pinned by
+/// an alias-equivalence test in `tests/cluster.rs`).
+pub const CLUSTER_ALIASES: &[(&str, &str)] = &[("SHARDS", "TOPOLOGY")];
+
+/// Stable machine-readable error codes for the `ERR <CODE> <msg>` reply
+/// shape produced by [`err_reply`] — what `net/client.rs` parses so
+/// retry/failover decisions key off a code instead of string-matching
+/// free text.
+pub mod code {
+    /// Missing or wrong `AUTH <token>` preamble.
+    pub const AUTH: &str = "AUTH";
+    /// No graph selected / graph does not exist.
+    pub const NOGRAPH: &str = "NOGRAPH";
+    /// Epoch fence: the request's epoch does not match the shard's
+    /// (stale delta chain base, stale read during a move).
+    pub const STALE_EPOCH: &str = "STALE_EPOCH";
+    /// The answer lives on another host (reserved; the `REDIRECT` reply
+    /// head carries the address today).
+    pub const REDIRECT: &str = "REDIRECT";
+    /// A server-side limit: graph cap, edit-queue cap, connection cap.
+    pub const CAPACITY: &str = "CAPACITY";
+    /// Malformed request (usage errors, oversized lines/frames).
+    pub const BADREQ: &str = "BADREQ";
+    /// A rebalance is already in flight; retry after it completes.
+    pub const MIGRATING: &str = "MIGRATING";
+    /// Every stable code — the client-side parser's allow-list.
+    pub const ALL: &[&str] = &[
+        AUTH,
+        NOGRAPH,
+        STALE_EPOCH,
+        REDIRECT,
+        CAPACITY,
+        BADREQ,
+        MIGRATING,
+    ];
+}
+
+/// The one place `ERR <CODE> <msg>` replies are formatted. Codes come
+/// from [`code`]; anything else is a programming error (debug-asserted)
+/// — free-text `ERR` without a code remains legal protocol, this helper
+/// is for the sites whose errors drive client retry/failover decisions.
+pub fn err_reply(c: &str, msg: impl std::fmt::Display) -> String {
+    debug_assert!(code::ALL.contains(&c), "unknown ERR code {c}");
+    format!("ERR {c} {msg}")
+}
 
 /// Per-connection state.
 #[derive(Clone, Debug)]
@@ -552,9 +611,10 @@ impl Connection {
                     // must not lock new clients out forever); off the
                     // cap, idle connections live indefinitely
                     if at_capacity && self.last_active.elapsed() >= cfg.idle_reclaim {
-                        self.send_err(
-                            "ERR connection reclaimed (server at capacity, idle too long)",
-                        );
+                        self.send_err(&err_reply(
+                            code::CAPACITY,
+                            "connection reclaimed (server at capacity, idle too long)",
+                        ));
                         return Slice::Reclaimed;
                     }
                     return Slice::Park;
@@ -690,9 +750,9 @@ impl Connection {
             ErrorKind::InvalidData => {
                 // oversized line/frame: structured error, then close
                 let msg = if self.session.binary {
-                    format!("ERR frame exceeds {MAX_FRAME_BYTES} bytes")
+                    err_reply(code::BADREQ, format!("frame exceeds {MAX_FRAME_BYTES} bytes"))
                 } else {
-                    format!("ERR line exceeds {MAX_LINE_BYTES} bytes")
+                    err_reply(code::BADREQ, format!("line exceeds {MAX_LINE_BYTES} bytes"))
                 };
                 self.send_err(&msg);
                 Slice::Closed
@@ -779,7 +839,7 @@ impl Connection {
                         "",
                         "bad token on AUTH preamble",
                     );
-                    "ERR bad auth token".into()
+                    err_reply(code::AUTH, "bad auth token")
                 }
             }),
             "METRICS" => Some(match parts.next().map(|f| f.to_ascii_uppercase()) {
@@ -854,7 +914,10 @@ impl Connection {
                     "",
                     format!("unauthenticated {v}"),
                 );
-                Some(format!("ERR auth required for {v} (send AUTH <token> first)"))
+                Some(err_reply(
+                    code::AUTH,
+                    format!("auth required for {v} (send AUTH <token> first)"),
+                ))
             }
             _ => None,
         }
@@ -1040,6 +1103,33 @@ mod tests {
                 "auth-gated verb {v} missing from FRAME_VERBS"
             );
         }
+    }
+
+    #[test]
+    fn cluster_tables_are_consistent_and_err_replies_are_coded() {
+        // every alias forwards an existing line verb to a real sub-verb
+        for (old, sub) in CLUSTER_ALIASES {
+            assert!(
+                LINE_VERBS.contains(old),
+                "alias source {old} is not a line verb"
+            );
+            assert!(
+                CLUSTER_SUBVERBS.contains(sub),
+                "alias target {sub} is not a CLUSTER sub-verb"
+            );
+        }
+        // sub-verbs are unique (one dispatch table, no shadowing)
+        let mut subs: Vec<&str> = CLUSTER_SUBVERBS.to_vec();
+        subs.sort_unstable();
+        subs.dedup();
+        assert_eq!(subs.len(), CLUSTER_SUBVERBS.len(), "duplicate sub-verb");
+        // the coded reply shape clients parse: `ERR <CODE> <msg>`
+        assert_eq!(
+            err_reply(code::STALE_EPOCH, "chain starts at epoch 7"),
+            "ERR STALE_EPOCH chain starts at epoch 7"
+        );
+        assert!(code::ALL.contains(&code::MIGRATING));
+        assert_eq!(code::ALL.len(), 7, "codes are append-only and stable");
     }
 
     #[test]

@@ -65,6 +65,12 @@ pub mod kind {
     pub const DRAIN_START: &str = "drain_start";
     /// The drain finished (detail says whether every connection made it).
     pub const DRAIN_FINISH: &str = "drain_finish";
+    /// A rebalance moved vertex ownership between shards (split/merge).
+    pub const REBALANCE_MOVE: &str = "rebalance_move";
+    /// A live migration swapped a shard's primary to a new host.
+    pub const PRIMARY_MIGRATED: &str = "primary_migrated";
+    /// A rebalance step aborted before cutover; prior state intact.
+    pub const REBALANCE_ABORTED: &str = "rebalance_aborted";
 }
 
 /// Event severity, ordered: `Info < Warn < Error`.

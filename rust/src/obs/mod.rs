@@ -55,6 +55,8 @@
 //! | `pico_net_reclaimed_total` | counter | — |
 //! | `pico_slow_queries_total` | counter | `graph` |
 //! | `pico_events_total` | counter | `severity` |
+//! | `pico_migrate_shipped_bytes_total` | counter | `graph`, `shard` |
+//! | `pico_rebalance_moves_total` | counter | `graph`, `kind` |
 //! | `pico_sampler_samples_total` | counter | — |
 //! | `pico_net_active` | gauge | — |
 //! | `pico_net_queued` | gauge | — |
@@ -76,6 +78,8 @@
 //! | `pico_shard_apply_seconds` | histogram | `graph` |
 //! | `pico_shard_refine_round_seconds` | histogram | `graph` |
 //! | `pico_shard_commit_seconds` | histogram | `graph` |
+//! | `pico_migrate_catchup_seconds` | histogram | `graph`, `shard` |
+//! | `pico_migrate_cutover_seconds` | histogram | `graph`, `shard` |
 //!
 //! `_seconds` histograms record microseconds internally and expose
 //! second-denominated buckets; `pico_flush_refine_rounds` is a plain
@@ -108,6 +112,9 @@
 //! | `auth_reject` | warn | `net/conn.rs` — bad `AUTH` token or gated verb without one |
 //! | `drain_start` | info | `net/pool.rs` — graceful shutdown began draining |
 //! | `drain_finish` | info | `net/pool.rs` — drain completed (detail says if fully drained) |
+//! | `rebalance_move` | info | `cluster/index.rs` — vertex ownership moved between shards (split/merge) |
+//! | `primary_migrated` | info | `cluster/index.rs` — a shard's primary cut over to a new host |
+//! | `rebalance_aborted` | warn | `cluster/index.rs` — a rebalance step aborted before cutover |
 
 pub mod events;
 pub mod expo;

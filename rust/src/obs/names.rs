@@ -40,6 +40,10 @@ pub const NET_RECLAIMED: &str = "pico_net_reclaimed_total";
 pub const SLOW_QUERIES: &str = "pico_slow_queries_total";
 /// Structured journal events emitted, per severity.
 pub const EVENTS_TOTAL: &str = "pico_events_total";
+/// Bytes shipped to a migration target (manifest + catch-up chains).
+pub const MIGRATE_SHIPPED_BYTES: &str = "pico_migrate_shipped_bytes_total";
+/// Completed rebalance moves, per kind (split/merge/migrate).
+pub const REBALANCE_MOVES: &str = "pico_rebalance_moves_total";
 /// Registry snapshots taken by the tsdb sampler thread.
 pub const SAMPLER_SAMPLES: &str = "pico_sampler_samples_total";
 
@@ -88,3 +92,7 @@ pub const SHARD_APPLY_SECONDS: &str = "pico_shard_apply_seconds";
 pub const SHARD_REFINE_ROUND_SECONDS: &str = "pico_shard_refine_round_seconds";
 /// Host-side `SHARDREFINE COMMIT` handler latency, per graph.
 pub const SHARD_COMMIT_SECONDS: &str = "pico_shard_commit_seconds";
+/// Unfenced migration catch-up (manifest ship + delta chains), per shard.
+pub const MIGRATE_CATCHUP_SECONDS: &str = "pico_migrate_catchup_seconds";
+/// The fenced migration cutover pause writers observe, per shard.
+pub const MIGRATE_CUTOVER_SECONDS: &str = "pico_migrate_cutover_seconds";

@@ -29,7 +29,12 @@
 //! | `MEMBERS <k>` | `OK count=<n> epoch=<e> members=<v,v,...>` (capped) |
 //! | `HISTO` | `OK epoch=<e> histo=<k>:<count>,...` |
 //! | `DENSEST` | `OK k=<k> vertices=<n> edges=<m> density=<d> epoch=<e>` |
-//! | `SHARDS` | `OK shards=<n> strategy=<s> ...` (partition + merge stats) |
+//! | `SHARDS` | deprecated alias for `CLUSTER TOPOLOGY` (byte-identical reply; kept for old tooling, see [`crate::net::conn::CLUSTER_ALIASES`]) |
+//! | `CLUSTER TOPOLOGY` | `OK shards=<n> strategy=<s> ...` — partition + merge stats; on a cluster front end, one `<id>:<kind>:<addr>+<n>r:fo<f>:st<s>:lag<l>` cell per replica group |
+//! | `CLUSTER REBALANCE PLAN` | `OK rebalance plan moves=<m> lines=<l>` + one `load shard=...` line per shard (state bytes, routed-edit heat, boundary arcs, replica lag, reachability) and one `move <kind> from=... reason: ...` line per planned move — a dry run, touches nothing ([`crate::cluster::rebalance`]) |
+//! | `CLUSTER REBALANCE APPLY` | plan and execute in one latched step: `OK rebalance applied moves=<m> lines=<l>` + one line per completed move; `ERR MIGRATING ...` when another structural change is in flight |
+//! | `CLUSTER REBALANCE MIGRATE <shard> <host:port>` | live primary migration: unfenced manifest + delta-chain catch-up, then an epoch-verified fenced cutover — `OK migrate shard=<s> addr=<a> bytes=<b> cutover_us=<c> epoch=<e>` |
+//! | `CLUSTER MOVES [JSON]` | `OK moves n=<n> lines=<l>` + one line per completed move (kind, endpoints, vertices, bytes shipped, cutover pause, epoch, wall-clock), oldest first; with `JSON`, one JSON array instead |
 //! | `INSERT <u> <v>` | `OK pending=<n>` — queued, not yet visible |
 //! | `DELETE <u> <v>` | `OK pending=<n>` |
 //! | `FLUSH` | `OK epoch=<e> submitted=<s> applied=<a> coalesced=<c> changed=<g> recomputed=<r> [shards=<n> rounds=<r> boundary=<b>] ms=<t>` |
@@ -40,7 +45,7 @@
 //! | `TRACES [n]` | `OK traces n=<t> lines=<l>` + the `l` rendered span-tree lines of the `n` most recent flush/slow-query traces from the [`crate::obs::trace`] ring (default 5; ring size set by `pico serve --trace-ring`) |
 //! | `EVENTS [n] [min-severity]` | `OK events n=<e> lines=<l>` + one line per journal entry, newest first: `<unix_ms> <severity> <kind> graph=<g> <detail>` from the [`crate::obs::events`] ring (default 10; `min-severity` of `info`/`warn`/`error` filters), answered by [`crate::net::conn`]; merged across hosts by `pico cluster status --events` |
 //! | `HEALTH [graph]` | `OK health=<ok\|degraded\|critical> reasons=<r> lines=<l>` + one reason line per violated SLO rule, evaluated by [`crate::obs::health`] against the tsdb window and the live registry (optionally narrowed to one graph's replication state); `pico cluster status --health` exits non-zero below `ok` |
-//! | `AUTH <token>` | `OK auth` / `ERR bad auth token` — unlocks the gated shard verbs when the server has a token configured (answered by [`crate::net::conn`], constant-time compare) |
+//! | `AUTH <token>` | `OK auth` / `ERR AUTH bad auth token` — unlocks the gated shard verbs when the server has a token configured (answered by [`crate::net::conn`], constant-time compare) |
 //! | `BINARY` | `OK binary proto=<id>` — switch this connection to binary framing (the id names the framing codec, [`crate::net::codec::FRAME_PROTO`]) |
 //! | `QUIT` | `OK bye` (connection closes) |
 //!
@@ -57,6 +62,28 @@
 //! is applying — the epoch-snapshot guarantee from [`super::index`]. On a
 //! sharded graph the flush routes edits to their owner shards and runs
 //! the boundary-refinement merge before publishing (see [`crate::shard`]).
+//!
+//! # Structured errors
+//!
+//! Every refusal a client may want to branch on carries a
+//! machine-readable code as the first token after `ERR` — `ERR <CODE>
+//! <message>` — minted by one helper ([`crate::net::conn::err_reply`])
+//! and parsed back by the shared client
+//! ([`crate::net::client::ErrCode`]), so retry/failover logic never
+//! string-matches message text:
+//!
+//! | code | meaning |
+//! |---|---|
+//! | `AUTH` | missing or wrong `AUTH <token>` preamble on a gated verb |
+//! | `NOGRAPH` | the session has no (usable) graph selected |
+//! | `STALE_EPOCH` | an epoch-fenced request does not match the replica's base epoch (delta chain after a rebalance, read of a stale replica) — catch up or re-route, never retry verbatim |
+//! | `REDIRECT` | the addressed state lives on another host; the message names it |
+//! | `CAPACITY` | a server-side cap refused the request (hosted-graph limit, connection cap, pending-edit queue) |
+//! | `BADREQ` | malformed or oversized request — a client bug, never retried |
+//! | `MIGRATING` | a structural change (rebalance / migration) holds the latch; retry shortly |
+//!
+//! Errors without a recognized code are legacy message-only refusals;
+//! the client surfaces them with `code=None`.
 //!
 //! # Binary protocol
 //!
@@ -100,6 +127,9 @@
 //! | `SHARDREFINE ROUND` + updates | `OK sweeps=<s> ghosts=<g>` + changed-estimates payload |
 //! | `SHARDREFINE COMMIT <epoch>` | `OK commit=<epoch> changed=<n>` + refined-diff payload (the journal entry's diff half) |
 //! | `SHARDMEMBERS <k>` | `OK count=<n> cluster=<ce>` + member-id payload |
+//! | `SHARDHAND EXPORT <count>` | `OK handoff shard=<id> bytes=<n>` + handoff payload — the `count` boundary-heaviest owned vertices with their full adjacency and committed coreness ([`crate::cluster::wire`] handoff codec), the elastic-resharding export half |
+//! | `SHARDHAND ADOPT` + handoff payload | `OK adopted=<n> shard=<id>` + adopted-id payload — splice the shipped vertices into this shard's owned set; a vertex already owned is refused wholesale (the double-apply fence) |
+//! | `SHARDHAND RELEASE` + id payload | `OK released=<n>` — drop ownership of vertices that landed elsewhere (they stay as ghosts where referenced) |
 //!
 //! plus line-mode probes `SHARDINFO` (health/epoch/state bytes),
 //! `SHARDCORE <v>`, and `SHARDHISTO`, each stamped with the committed
@@ -162,7 +192,7 @@ use super::queries::densest_core_view;
 use crate::cluster::{ClusterIndex, ShardHost};
 use crate::core::maintenance::EdgeEdit;
 use crate::graph::CsrGraph;
-use crate::net::conn::Handler;
+use crate::net::conn::{code, err_reply, Handler, CLUSTER_SUBVERBS};
 use crate::net::{codec, NetConfig};
 use crate::obs::{self, names};
 use crate::shard::{snapshot as shard_snapshot, PartitionStrategy, ShardedIndex};
@@ -628,7 +658,10 @@ impl CoreService {
                 };
                 // cheap fast-fail; install_checked below is authoritative
                 if self.backend(name).is_none() && self.num_graphs() >= MAX_HOSTED_GRAPHS {
-                    return format!("ERR graph limit reached ({MAX_HOSTED_GRAPHS} hosted)");
+                    return err_reply(
+                        code::CAPACITY,
+                        format!("graph limit reached ({MAX_HOSTED_GRAPHS} hosted)"),
+                    );
                 }
                 match load_dataset(dataset) {
                     Ok(g) => {
@@ -660,7 +693,7 @@ impl CoreService {
                             )
                         };
                         if let Err(e) = self.install_checked(name, backend) {
-                            return format!("ERR {e}");
+                            return err_reply(code::CAPACITY, e);
                         }
                         session.graph = name.to_string();
                         format!("OK open={name} vertices={vertices} edges={edges}{suffix}")
@@ -712,12 +745,13 @@ impl CoreService {
                     _ => format!("ERR bad STATS window '{w}' (want seconds > 0)"),
                 },
             },
+            "CLUSTER" => self.cluster_command(session, &args, _slot),
             "BINARY" => {
                 session.binary = true;
                 format!("OK binary proto={}", codec::FRAME_PROTO)
             }
             "SNAPSHOT" | "RESTORE" | "SHARDHOST" | "SHARDSNAP" | "SHARDAPPLY" | "SHARDREFINE"
-            | "SHARDMEMBERS" | "SHARDDELTA"
+            | "SHARDMEMBERS" | "SHARDDELTA" | "SHARDHAND"
                 if !session.binary =>
             {
                 format!("ERR {verb} needs the binary protocol (send BINARY first)")
@@ -726,9 +760,9 @@ impl CoreService {
             // everything below operates on the session's current graph
             _ => {
                 let Some(Hosted { backend, obs: gobs }) = self.hosted_of(&session.graph) else {
-                    return format!(
-                        "ERR no graph selected (have: {})",
-                        self.graph_names().join(" ")
+                    return err_reply(
+                        code::NOGRAPH,
+                        format!("no graph selected (have: {})", self.graph_names().join(" ")),
                     );
                 };
                 match verb.as_str() {
@@ -898,8 +932,9 @@ impl CoreService {
                             );
                         }
                         if backend.pending() >= MAX_PENDING_EDITS {
-                            return format!(
-                                "ERR edit queue full ({MAX_PENDING_EDITS} pending); FLUSH first"
+                            return err_reply(
+                                code::CAPACITY,
+                                format!("edit queue full ({MAX_PENDING_EDITS} pending); FLUSH first"),
                             );
                         }
                         self.totals.edits.fetch_add(1, Ordering::Relaxed);
@@ -1035,6 +1070,165 @@ impl CoreService {
         }
     }
 
+    /// The `CLUSTER <SUBVERB>` admin namespace — the one entry point for
+    /// the cluster control plane, resolved against
+    /// [`crate::net::conn::CLUSTER_SUBVERBS`]. `CLUSTER TOPOLOGY`
+    /// re-dispatches the legacy `SHARDS` arm so the alias
+    /// ([`crate::net::conn::CLUSTER_ALIASES`]) can never drift from it.
+    fn cluster_command(&self, session: &mut Session, args: &[&str], slot: usize) -> String {
+        let Some(sub) = args.first().map(|s| s.to_ascii_uppercase()) else {
+            return err_reply(
+                code::BADREQ,
+                format!("usage: CLUSTER <{}>", CLUSTER_SUBVERBS.join("|")),
+            );
+        };
+        if !CLUSTER_SUBVERBS.contains(&sub.as_str()) {
+            return err_reply(
+                code::BADREQ,
+                format!(
+                    "unknown CLUSTER subverb '{sub}' (have: {})",
+                    CLUSTER_SUBVERBS.join(" ")
+                ),
+            );
+        }
+        if sub == "TOPOLOGY" {
+            return self.dispatch_command(session, "SHARDS", slot);
+        }
+        // the structural sub-verbs act on a cluster front end only
+        let Some(Hosted { backend, .. }) = self.hosted_of(&session.graph) else {
+            return err_reply(
+                code::NOGRAPH,
+                format!("no graph selected (have: {})", self.graph_names().join(" ")),
+            );
+        };
+        let Backend::Cluster(c) = &backend else {
+            return err_reply(
+                code::BADREQ,
+                format!("'{}' does not front a cluster", session.graph),
+            );
+        };
+        let move_line = |m: &crate::cluster::MoveRecord| {
+            format!(
+                "{} from=shard{} to={} vertices={} bytes={} cutover_us={} epoch={} unix_ms={}",
+                m.kind, m.from, m.to, m.vertices, m.bytes, m.cutover_us, m.epoch, m.unix_ms
+            )
+        };
+        match sub.as_str() {
+            "MOVES" => {
+                let moves = c.moves();
+                let json = args
+                    .get(1)
+                    .map(|f| f.eq_ignore_ascii_case("json"))
+                    .unwrap_or(false);
+                if json {
+                    let items: Vec<String> = moves
+                        .iter()
+                        .map(|m| {
+                            format!(
+                                "{{\"kind\":\"{}\",\"from\":{},\"to\":\"{}\",\"vertices\":{},\"bytes\":{},\"cutover_us\":{},\"epoch\":{},\"unix_ms\":{}}}",
+                                m.kind, m.from, m.to, m.vertices, m.bytes, m.cutover_us, m.epoch, m.unix_ms
+                            )
+                        })
+                        .collect();
+                    format!(
+                        "OK moves n={} format=json lines=1\n[{}]",
+                        moves.len(),
+                        items.join(",")
+                    )
+                } else {
+                    let mut reply = format!("OK moves n={0} lines={0}", moves.len());
+                    for m in &moves {
+                        reply.push('\n');
+                        reply.push_str(&move_line(m));
+                    }
+                    reply
+                }
+            }
+            "REBALANCE" => {
+                let Some(action) = args.get(1).map(|s| s.to_ascii_uppercase()) else {
+                    return err_reply(
+                        code::BADREQ,
+                        "usage: CLUSTER REBALANCE PLAN|APPLY|MIGRATE <shard> <host:port>",
+                    );
+                };
+                match action.as_str() {
+                    "PLAN" => {
+                        let plan = c.rebalance_plan();
+                        let mut lines = Vec::new();
+                        for l in &plan.loads {
+                            lines.push(format!(
+                                "load shard={} owned={} bytes={} edits={} boundary={} lag={} reachable={}",
+                                l.shard,
+                                l.owned,
+                                l.state_bytes,
+                                l.edits_routed,
+                                l.boundary_arcs,
+                                l.lag_epochs,
+                                l.reachable
+                            ));
+                        }
+                        for m in &plan.moves {
+                            lines.push(format!(
+                                "move {} from=shard{} to=shard{} count={} reason: {}",
+                                m.kind, m.from, m.to, m.count, m.reason
+                            ));
+                        }
+                        let mut reply = format!(
+                            "OK rebalance plan moves={} lines={}",
+                            plan.moves.len(),
+                            lines.len()
+                        );
+                        for l in &lines {
+                            reply.push('\n');
+                            reply.push_str(l);
+                        }
+                        reply
+                    }
+                    "APPLY" => match c.rebalance_apply() {
+                        Ok((_, records)) => {
+                            let mut reply = format!(
+                                "OK rebalance applied moves={0} lines={0}",
+                                records.len()
+                            );
+                            for r in &records {
+                                reply.push('\n');
+                                reply.push_str(&move_line(r));
+                            }
+                            reply
+                        }
+                        Err(e) => structural_err(e),
+                    },
+                    "MIGRATE" => {
+                        let (Some(Ok(shard)), Some(&addr)) =
+                            (args.get(2).map(|a| a.parse::<usize>()), args.get(3))
+                        else {
+                            return err_reply(
+                                code::BADREQ,
+                                "usage: CLUSTER REBALANCE MIGRATE <shard> <host:port>",
+                            );
+                        };
+                        match c.migrate_primary(shard, addr) {
+                            Ok(r) => format!(
+                                "OK migrate shard={} addr={} bytes={} cutover_us={} epoch={}",
+                                r.from, r.to, r.bytes, r.cutover_us, r.epoch
+                            ),
+                            Err(e) => structural_err(e),
+                        }
+                    }
+                    other => err_reply(
+                        code::BADREQ,
+                        format!(
+                            "unknown CLUSTER REBALANCE action '{other}' (have: PLAN APPLY MIGRATE)"
+                        ),
+                    ),
+                }
+            }
+            // unreachable while CLUSTER_SUBVERBS = TOPOLOGY|REBALANCE|MOVES;
+            // a new table entry lands here until its arm exists
+            other => err_reply(code::BADREQ, format!("CLUSTER {other} not implemented")),
+        }
+    }
+
     /// Execute one binary-protocol frame; returns the reply frame body.
     /// `SNAPSHOT`/`RESTORE` carry raw bytes after the first line; every
     /// other verb delegates to [`Self::handle_command`].
@@ -1067,6 +1261,7 @@ impl CoreService {
             "SHARDAPPLY" => self.frame_shard(session, slot, |h| h.apply_frame(payload)),
             "SHARDREFINE" => self.frame_shard(session, slot, |h| h.refine_frame(&args, payload)),
             "SHARDDELTA" => self.frame_shard(session, slot, |h| h.delta_frame(&args, payload)),
+            "SHARDHAND" => self.frame_shard(session, slot, |h| h.hand_frame(&args, payload)),
             "SHARDMEMBERS" => self.frame_shard(session, slot, |h| h.members_frame(&args)),
             _ => self.handle_command(session, line, slot).into_bytes(),
         };
@@ -1095,9 +1290,9 @@ impl CoreService {
         match self.backend(&session.graph) {
             Some(Backend::ShardHost(h)) => f(&h),
             Some(_) => format!("ERR '{}' is not a hosted shard", session.graph).into_bytes(),
-            None => format!(
-                "ERR no graph selected (have: {})",
-                self.graph_names().join(" ")
+            None => err_reply(
+                code::NOGRAPH,
+                format!("no graph selected (have: {})", self.graph_names().join(" ")),
             )
             .into_bytes(),
         }
@@ -1122,7 +1317,11 @@ impl CoreService {
         }
         // cheap fast-fail; install_checked below re-checks under the lock
         if self.backend(name).is_none() && self.num_graphs() >= MAX_HOSTED_GRAPHS {
-            return format!("ERR graph limit reached ({MAX_HOSTED_GRAPHS} hosted)").into_bytes();
+            return err_reply(
+                code::CAPACITY,
+                format!("graph limit reached ({MAX_HOSTED_GRAPHS} hosted)"),
+            )
+            .into_bytes();
         }
         match ShardHost::from_manifest_bytes(name, payload, self.batch_cfg.clone()) {
             Ok(h) => {
@@ -1134,7 +1333,7 @@ impl CoreService {
                     h.cluster_epoch()
                 );
                 if let Err(e) = self.install_checked(name, Backend::ShardHost(Arc::new(h))) {
-                    return format!("ERR {e}").into_bytes();
+                    return err_reply(code::CAPACITY, e).into_bytes();
                 }
                 session.graph = name.to_string();
                 reply.into_bytes()
@@ -1146,9 +1345,9 @@ impl CoreService {
     fn frame_snapshot(&self, session: &mut Session, args: &[&str], _slot: usize) -> Vec<u8> {
         self.count_query(&session.graph);
         let Some(backend) = self.backend(&session.graph) else {
-            return format!(
-                "ERR no graph selected (have: {})",
-                self.graph_names().join(" ")
+            return err_reply(
+                code::NOGRAPH,
+                format!("no graph selected (have: {})", self.graph_names().join(" ")),
             )
             .into_bytes();
         };
@@ -1226,7 +1425,11 @@ impl CoreService {
         // cheap fast-fail before the (potentially large) decode; the
         // install_checked below re-checks the cap under the write lock
         if self.backend(name).is_none() && self.num_graphs() >= MAX_HOSTED_GRAPHS {
-            return format!("ERR graph limit reached ({MAX_HOSTED_GRAPHS} hosted)").into_bytes();
+            return err_reply(
+                code::CAPACITY,
+                format!("graph limit reached ({MAX_HOSTED_GRAPHS} hosted)"),
+            )
+            .into_bytes();
         }
         // decode validates everything before anything is installed: a
         // rejected payload leaves the hosted map untouched
@@ -1238,7 +1441,7 @@ impl CoreService {
                 let idx = Arc::new(CoreIndex::hydrate(name, &snap.graph, snap.core, epoch));
                 let queue = Arc::new(EditQueue::new(idx.clone(), self.batch_cfg.clone()));
                 if let Err(e) = self.install_checked(name, Backend::Single { index: idx, queue }) {
-                    return format!("ERR {e}").into_bytes();
+                    return err_reply(code::CAPACITY, e).into_bytes();
                 }
                 session.graph = name.to_string();
                 format!("OK restore={name} epoch={epoch} vertices={vertices} edges={edges}")
@@ -1269,6 +1472,17 @@ impl Handler for CoreService {
 /// the CLI ([`crate::coordinator::DatasetSpec::resolve`]).
 fn load_dataset(name: &str) -> Result<Arc<CsrGraph>> {
     crate::coordinator::DatasetSpec::resolve(name)?.load()
+}
+
+/// Render a structural-change failure: the one-at-a-time latch refusal
+/// gets the machine-readable `MIGRATING` code (a client retries it);
+/// everything else stays a message-only error with its full chain.
+fn structural_err(e: anyhow::Error) -> String {
+    if e.downcast_ref::<crate::cluster::RebalanceBusy>().is_some() {
+        err_reply(code::MIGRATING, e)
+    } else {
+        format!("ERR rebalance: {e:#}")
+    }
 }
 
 /// The background replica-sync daemon: probes replica epochs on a
@@ -1559,6 +1773,31 @@ mod tests {
         assert_eq!(snap.name, "shg/shard1");
         let oob = svc.handle_frame(&mut s, b"SNAPSHOT 9", 0);
         assert!(std::str::from_utf8(&oob).unwrap().starts_with("ERR shard 9 out of range"));
+    }
+
+    #[test]
+    fn cluster_namespace_resolves_subverbs_and_aliases() {
+        let (svc, mut s) = service_with_g1();
+        // TOPOLOGY answers byte-identically to the legacy SHARDS alias
+        let shards = svc.handle_command(&mut s, "SHARDS", 0);
+        assert_eq!(shards, "OK shards=1 strategy=single");
+        assert_eq!(svc.handle_command(&mut s, "CLUSTER TOPOLOGY", 0), shards);
+        assert_eq!(svc.handle_command(&mut s, "cluster topology", 0), shards);
+        // refusals carry machine-readable codes
+        assert!(svc
+            .handle_command(&mut s, "CLUSTER", 0)
+            .starts_with("ERR BADREQ usage: CLUSTER"));
+        assert!(svc
+            .handle_command(&mut s, "CLUSTER NOPE", 0)
+            .starts_with("ERR BADREQ unknown CLUSTER subverb 'NOPE'"));
+        // the structural sub-verbs need a cluster front end
+        for cmd in ["CLUSTER MOVES", "CLUSTER REBALANCE PLAN", "CLUSTER REBALANCE APPLY"] {
+            assert!(
+                svc.handle_command(&mut s, cmd, 0)
+                    .starts_with("ERR BADREQ 'g1' does not front a cluster"),
+                "{cmd}"
+            );
+        }
     }
 
     #[test]

@@ -186,6 +186,39 @@ pub trait ShardBackend: Send + Sync {
     fn local_index(&self) -> Option<Arc<CoreIndex>> {
         None
     }
+
+    /// Encode up to `count` of this shard's owned vertices — complete
+    /// adjacency plus committed refined coreness — as a handoff payload
+    /// ([`crate::cluster::wire::encode_handoff`]). Boundary-heavy
+    /// vertices are picked first so a split sheds the vertices whose
+    /// edits already cross shards. Ownership does **not** change here:
+    /// the rebalance executor calls [`ShardBackend::handoff_release`]
+    /// only after the receiving shard has adopted the payload, so a
+    /// failure between the two calls never leaves a vertex unowned.
+    fn handoff_export(&self, count: usize) -> Result<Vec<u8>> {
+        let _ = count;
+        bail!("shard {}: handoff is not supported by this backend", self.id())
+    }
+
+    /// Adopt a handoff payload: register its vertices as owned, splice
+    /// their shipped adjacency into the local subgraph, install their
+    /// committed coreness. Refuses vertices this shard already owns —
+    /// the double-apply fence for a retried move. Returns the adopted
+    /// global ids (the set the coordinator remaps and releases).
+    fn handoff_adopt(&self, bytes: &[u8]) -> Result<Vec<VertexId>> {
+        let _ = bytes;
+        bail!("shard {}: handoff is not supported by this backend", self.id())
+    }
+
+    /// Demote previously-exported owned vertices to ghosts after the
+    /// receiving shard adopted them. Their adjacency stays in the local
+    /// subgraph (ghost neighborhoods are never read for owned answers);
+    /// only the ownership bookkeeping — and with it arc accounting,
+    /// reads, manifests — changes hands.
+    fn handoff_release(&self, vertices: &[VertexId]) -> Result<()> {
+        let _ = vertices;
+        bail!("shard {}: handoff is not supported by this backend", self.id())
+    }
 }
 
 /// Writer-side state of an in-process shard.
@@ -730,6 +763,139 @@ impl ShardBackend for LocalShard {
     fn local_index(&self) -> Option<Arc<CoreIndex>> {
         Some(self.index.clone())
     }
+
+    fn handoff_export(&self, count: usize) -> Result<Vec<u8>> {
+        if count == 0 {
+            bail!("shard {}: handoff of zero vertices", self.id);
+        }
+        let st = self.state.lock().unwrap();
+        if st.refined.len() != st.globals.len() {
+            bail!(
+                "shard {}: no committed refined state to hand off (run a flush first)",
+                self.id
+            );
+        }
+        let g = self.index.graph();
+        // Shed boundary-heavy vertices first: their edits already ship
+        // to two shards, so moving them is the cheapest way to change
+        // the balance. Global-id tiebreak keeps the pick deterministic.
+        let mut ranked: Vec<(u64, VertexId, u32)> = st
+            .owned_locals
+            .iter()
+            .map(|&l| {
+                let ghost_arcs = g
+                    .neighbors(l)
+                    .iter()
+                    .filter(|&&w| !st.owned_mask[w as usize])
+                    .count() as u64;
+                (ghost_arcs, st.globals[l as usize], l)
+            })
+            .collect();
+        ranked.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+        ranked.truncate(count);
+        // the codec ships vertices in ascending id order
+        ranked.sort_by_key(|&(_, v, _)| v);
+        let picked: Vec<crate::cluster::wire::HandoffVertex> = ranked
+            .iter()
+            .map(|&(_, v, l)| crate::cluster::wire::HandoffVertex {
+                id: v,
+                refined: st.refined[l as usize],
+                neighbors: {
+                    let mut ns: Vec<VertexId> =
+                        g.neighbors(l).iter().map(|&w| st.globals[w as usize]).collect();
+                    ns.sort_unstable();
+                    ns
+                },
+            })
+            .collect();
+        crate::cluster::wire::encode_handoff(self.id as u32, &picked)
+    }
+
+    fn handoff_adopt(&self, bytes: &[u8]) -> Result<Vec<VertexId>> {
+        let payload = crate::cluster::wire::decode_handoff(bytes)?;
+        if payload.from_shard as usize == self.id {
+            bail!("shard {}: refusing to adopt its own handoff", self.id);
+        }
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        // Pass 1 — validate against current state before mutating
+        // anything: a vertex this shard already owns means the move was
+        // already applied (the retry / double-apply fence).
+        for hv in &payload.vertices {
+            if let Some(&l) = st.locals.get(&hv.id) {
+                if st.owned_mask[l as usize] {
+                    bail!(
+                        "shard {}: already owns vertex {} (handoff replayed?)",
+                        self.id,
+                        hv.id
+                    );
+                }
+            }
+        }
+        // Pass 2 — register vertices (adoptees owned, unseen neighbors
+        // as ghosts) and collect the edge splice in local ids.
+        let mut adopted = Vec::with_capacity(payload.vertices.len());
+        let mut splice: Vec<(u32, u32)> = Vec::new();
+        for hv in &payload.vertices {
+            let lv = st.local_id(hv.id);
+            st.owned_mask[lv as usize] = true;
+            st.owned_locals.push(lv);
+            adopted.push(hv.id);
+            for &w in &hv.neighbors {
+                let lw = st.local_id(w);
+                splice.push((lv, lw));
+            }
+        }
+        // Splice the shipped neighborhoods into the subgraph (inserts on
+        // edges the shard already held as ghost arcs no-op) and refresh
+        // the shard-local coreness the embedded snapshot carries — same
+        // structural-edit + recompute pipeline as a bulk apply.
+        let last_local = st.globals.len() as u32 - 1;
+        let threads = self.cfg.threads;
+        self.index.update(|dc| {
+            dc.ensure_vertex(last_local);
+            for &(lu, lv) in &splice {
+                dc.insert_edge_structural(lu, lv);
+            }
+            dc.recompute_with(&Hybrid::default(), threads);
+        });
+        // Committed coreness follows the vertices; a never-committed
+        // shard stays never-committed (the post-move refinement pass
+        // commits everything at the next epoch anyway).
+        if !st.refined.is_empty() {
+            st.refined.resize(st.globals.len(), 0);
+            for hv in &payload.vertices {
+                st.refined[st.locals[&hv.id] as usize] = hv.refined;
+            }
+        }
+        st.dirty = true;
+        Ok(adopted)
+    }
+
+    fn handoff_release(&self, vertices: &[VertexId]) -> Result<()> {
+        let mut st = self.state.lock().unwrap();
+        let st = &mut *st;
+        let mut demote = Vec::with_capacity(vertices.len());
+        for &v in vertices {
+            let Some(&l) = st.locals.get(&v) else {
+                bail!("shard {}: cannot release unknown vertex {v}", self.id);
+            };
+            if !st.owned_mask[l as usize] {
+                bail!("shard {}: cannot release vertex {v} it does not own", self.id);
+            }
+            demote.push(l);
+        }
+        for &l in &demote {
+            st.owned_mask[l as usize] = false;
+        }
+        let kept = std::mem::take(&mut st.owned_locals);
+        st.owned_locals = kept
+            .into_iter()
+            .filter(|&l| st.owned_mask[l as usize])
+            .collect();
+        st.dirty = true;
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -889,6 +1055,77 @@ mod tests {
             let want = crate::cluster::manifest_for(s, 2).len() as u64;
             assert_eq!(s.status().unwrap().state_bytes, want);
         }
+    }
+
+    #[test]
+    fn handoff_moves_ownership_and_refine_still_reaches_the_oracle() {
+        let g = crate::graph::gen::erdos_renyi(80, 260, 3);
+        let want = crate::core::bz::bz_coreness(&g);
+        let backends: Vec<Arc<dyn ShardBackend>> = shards_for(&g, 2)
+            .into_iter()
+            .map(|s| Arc::new(s) as Arc<dyn ShardBackend>)
+            .collect();
+        // commit a first pass so the export has refined state to carry
+        crate::shard::router::refine(&backends, g.num_vertices(), None, 0, 1).unwrap();
+        let owned_before: usize = backends.iter().map(|b| b.status().unwrap().owned).sum();
+        // split: shard 0 sheds 10 vertices to shard 1
+        let payload = backends[0].handoff_export(10).unwrap();
+        let adopted = backends[1].handoff_adopt(&payload).unwrap();
+        assert_eq!(adopted.len(), 10);
+        backends[0].handoff_release(&adopted).unwrap();
+        let s0 = backends[0].status().unwrap();
+        let s1 = backends[1].status().unwrap();
+        assert_eq!(s0.owned + s1.owned, owned_before, "no vertex unowned or doubled");
+        // moved vertices answer (with their committed value) on the new
+        // owner and are ghosts on the old one
+        for &v in &adopted {
+            assert_eq!(backends[0].refined_coreness(v).unwrap().0, None);
+            assert_eq!(backends[1].refined_coreness(v).unwrap().0, Some(want[v as usize]));
+        }
+        // the arc accounting still closes and a warm pass still lands on
+        // the oracle — the boundary rebookkeeping is exact
+        let out = crate::shard::router::refine(&backends, g.num_vertices(), Some(0), 1, 1).unwrap();
+        assert_eq!(out.core, want);
+        assert_eq!(out.num_edges, g.num_edges());
+        // replaying the same payload is refused (double-apply fence)
+        let err = backends[1].handoff_adopt(&payload).unwrap_err();
+        assert!(format!("{err:#}").contains("already owns"), "{err:#}");
+        // merge: shard 0 empties entirely into shard 1
+        let rest = backends[0].status().unwrap().owned;
+        let payload = backends[0].handoff_export(rest).unwrap();
+        let adopted = backends[1].handoff_adopt(&payload).unwrap();
+        backends[0].handoff_release(&adopted).unwrap();
+        assert_eq!(backends[0].status().unwrap().owned, 0);
+        assert_eq!(backends[1].status().unwrap().owned, owned_before);
+        let out = crate::shard::router::refine(&backends, g.num_vertices(), Some(0), 2, 1).unwrap();
+        assert_eq!(out.core, want);
+        assert_eq!(out.num_edges, g.num_edges());
+    }
+
+    #[test]
+    fn handoff_guards_reject_bad_transfers() {
+        let g = examples::g1();
+        let shards = shards_for(&g, 2);
+        // no committed refined state yet: export refuses
+        let err = shards[0].handoff_export(1).unwrap_err();
+        assert!(format!("{err:#}").contains("no committed refined state"), "{err:#}");
+        let bs: Vec<Arc<dyn ShardBackend>> = shards
+            .into_iter()
+            .map(|s| Arc::new(s) as Arc<dyn ShardBackend>)
+            .collect();
+        crate::shard::router::refine(&bs, g.num_vertices(), None, 0, 1).unwrap();
+        assert!(bs[0].handoff_export(0).is_err(), "zero-vertex handoff");
+        let payload = bs[0].handoff_export(1).unwrap();
+        // a shard never adopts its own export
+        let err = bs[0].handoff_adopt(&payload).unwrap_err();
+        assert!(format!("{err:#}").contains("its own handoff"), "{err:#}");
+        // releasing something unknown, or a vertex the shard has only as
+        // a ghost, is refused — release is for the exporting owner only
+        assert!(bs[1].handoff_release(&[999]).is_err());
+        let adopted = bs[1].handoff_adopt(&payload).unwrap();
+        bs[0].handoff_release(&adopted).unwrap();
+        // the old owner cannot release twice
+        assert!(bs[0].handoff_release(&adopted).is_err());
     }
 
     #[test]

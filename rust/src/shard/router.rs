@@ -52,6 +52,11 @@ pub struct RefineOutcome {
     pub num_edges: u64,
     /// Distinct global boundary edges.
     pub boundary_edges: u64,
+    /// Arcs from each shard's owned vertices to ghosts (backend order).
+    /// The rebalance planner reads this as each shard's boundary-edge
+    /// share; the cluster router caches it on the replica group between
+    /// refinement passes.
+    pub per_shard_boundary_arcs: Vec<u64>,
     /// Per-shard refined diffs from the commit (backend order) — what
     /// each shard's `refine_commit` changed. The cluster router journals
     /// these for delta replica catch-up.
@@ -113,6 +118,26 @@ pub fn route(owner: &mut Vec<u32>, num_shards: usize, batch: &[EdgeEdit]) -> Rou
         touched,
         inserts,
     }
+}
+
+/// Repoint owner-map entries at a new shard — the router half of a
+/// rebalance move. [`route`] consults `owner[v]` for every vertex it has
+/// seen before, so flipping the entries here is all it takes for
+/// subsequent flushes to deliver the moved vertices' edits to their new
+/// home; only vertices the map has never seen fall through to
+/// [`hash_owner`]. Returns how many entries actually changed hands.
+pub fn reassign(owner: &mut [u32], vertices: &[VertexId], to: u32) -> Result<usize> {
+    let mut moved = 0;
+    for &v in vertices {
+        let Some(slot) = owner.get_mut(v as usize) else {
+            bail!("reassign: vertex {v} outside the owner map (len {})", owner.len());
+        };
+        if *slot != to {
+            *slot = to;
+            moved += 1;
+        }
+    }
+    Ok(moved)
 }
 
 /// One exchange round on every shard, dirty sweeps running concurrently.
@@ -187,6 +212,7 @@ pub fn refine_traced(
     let mut stats = MergeStats::default();
     let mut arcs = 0u64;
     let mut boundary_arcs = 0u64;
+    let mut per_shard_boundary_arcs = Vec::with_capacity(backends.len());
     let mut ghost_lists: Vec<Vec<VertexId>> = Vec::with_capacity(backends.len());
     for b in backends {
         let init = b.refine_start(slack)?;
@@ -198,6 +224,7 @@ pub fn refine_traced(
         }
         arcs += init.arcs;
         boundary_arcs += init.boundary_arcs;
+        per_shard_boundary_arcs.push(init.boundary_arcs);
         ghost_lists.push(init.ghosts);
     }
     // `changed[v]` — did v's mailbox value change since the last round?
@@ -304,6 +331,7 @@ pub fn refine_traced(
         stats,
         num_edges: arcs / 2,
         boundary_edges: boundary_arcs / 2,
+        per_shard_boundary_arcs,
         diffs,
         refine_elapsed,
         commit_elapsed,
@@ -345,6 +373,12 @@ mod tests {
             let cold = refine(&bs, g.num_vertices(), None, 0, threads).unwrap();
             assert_eq!(cold.core, want, "cold, {threads} threads");
             assert_eq!(cold.num_edges, g.num_edges());
+            assert_eq!(cold.per_shard_boundary_arcs.len(), 4);
+            assert_eq!(
+                cold.per_shard_boundary_arcs.iter().sum::<u64>(),
+                cold.boundary_edges * 2,
+                "per-shard boundary arcs sum to twice the distinct boundary edges"
+            );
             assert!(cold.stats.rounds >= 1 && cold.stats.sweeps >= 4);
             // round 1 ships every ghost its owner's estimate: a 4-way
             // hash partition of an ER graph always crosses boundaries
@@ -402,5 +436,17 @@ mod tests {
         let new_owned: usize = plan.per_shard.iter().map(|b| b.new_owned.len()).sum();
         assert_eq!(new_owned, 3); // vertices 4, 5, 6
         assert!(plan.touched.iter().any(|&t| t));
+    }
+
+    #[test]
+    fn reassign_flips_owners_and_routing_follows() {
+        let mut owner = vec![0u32, 0, 1, 1];
+        assert_eq!(reassign(&mut owner, &[0, 1, 2], 1).unwrap(), 2);
+        assert_eq!(owner, vec![1, 1, 1, 1]);
+        // an edit touching a moved vertex now routes to its new owner
+        let plan = route(&mut owner, 2, &[EdgeEdit::Insert(0, 3)]);
+        assert!(plan.per_shard[0].is_empty() && !plan.per_shard[1].is_empty());
+        // out-of-map vertices are a hard error, not a silent grow
+        assert!(reassign(&mut owner, &[9], 0).is_err());
     }
 }

@@ -15,6 +15,12 @@
 //!    sync (the background daemon converges the replicas).
 //! 4. **Multi-process equivalence** — the same pinning against real
 //!    `pico serve` child processes, plus graceful SIGTERM shutdown.
+//! 5. **Elastic resharding** — shard split/merge and live primary
+//!    migration under routed edits stay byte-identical to the
+//!    single-index oracle; aborted migrations leave the group
+//!    recoverable; the `CLUSTER` admin namespace answers over the wire
+//!    with its legacy aliases byte-identical; the full-ship size hint
+//!    refreshes after any ownership change.
 
 use pico::cluster::{manifest_for, ClusterConfig, ClusterIndex, Primary, RemoteShard, ReplicaGroup};
 use pico::core::bz::bz_coreness;
@@ -890,6 +896,226 @@ fn dead_replica_degrades_health_and_recovery_restores_ok() {
     client.quit();
     recovered_handle.stop();
     front_handle.stop();
+}
+
+/// `check_against_oracle` minus the epoch pin: structural moves publish
+/// a fresh epoch from a warm refinement, so the cluster's epoch runs
+/// ahead of a lockstep single index — the *answers* must still match.
+fn check_answers(cl: &ClusterIndex, single: &CoreIndex) {
+    let want = single.snapshot();
+    let got = cl.snapshot();
+    assert_eq!(got.core, want.core, "merged snapshot must be byte-identical");
+    assert_eq!(got.num_edges, want.num_edges);
+    assert_eq!(cl.degeneracy(), want.degeneracy());
+    assert_eq!(cl.histogram_routed().unwrap(), want.histogram());
+    for v in 0..want.num_vertices() as u32 {
+        assert_eq!(cl.coreness_routed(v).unwrap(), want.coreness(v), "v{v}");
+    }
+    for k in 0..=want.k_max + 1 {
+        assert_eq!(cl.members_routed(k).unwrap(), want.kcore_members(k), "k={k}");
+    }
+}
+
+#[test]
+fn elastic_split_merge_and_migration_match_the_oracle_under_live_edits() {
+    let g = gen::barabasi_albert(130, 3, 47);
+    let (_rsvc, _rhandle, replica_addr) = spawn_server();
+    let (_msvc, _mhandle, mig_addr) = spawn_server();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = els\nshards = 2\n\
+         [shard.0]\nprimary = local\nreplicas = {replica_addr}\n\
+         [shard.1]\nprimary = local\n"
+    ))
+    .unwrap();
+    let cl = ClusterIndex::build(&g, &topo, cfg()).unwrap();
+    let single = CoreIndex::new("single", &g);
+    check_against_oracle(&cl, &single);
+
+    // each round: a routed edit batch (in lockstep with the oracle),
+    // then one structural change — a split-direction move, a live
+    // primary migration, a merge-direction move — and the answers must
+    // stay byte-identical throughout
+    let mut rng = Rng::new(0xE1A);
+    let mut n = g.num_vertices() as u64;
+    for round in 0..3 {
+        let mut edits = Vec::new();
+        while edits.len() < 12 {
+            let u = rng.below(n + 6) as u32;
+            let v = rng.below(n + 6) as u32;
+            if u == v {
+                continue;
+            }
+            edits.push(if rng.chance(0.7) {
+                EdgeEdit::Insert(u, v)
+            } else {
+                EdgeEdit::Delete(u, v)
+            });
+        }
+        for &e in &edits {
+            cl.submit(e);
+        }
+        let out = cl.flush().unwrap();
+        let single_out = apply_batch(&single, &edits, &cfg());
+        assert_eq!(out.snapshot.core, single_out.snapshot.core, "round {round}");
+        assert_eq!(out.applied, single_out.applied, "round {round}");
+        n = out.snapshot.num_vertices() as u64;
+
+        let rec = match round {
+            0 => cl.move_vertices(0, 1, 10).unwrap(),
+            // round 1+: shard 1 lives on a loopback host, so the
+            // later merge-direction move exercises the remote
+            // handoff path (SHARDHAND EXPORT/ADOPT/RELEASE frames)
+            1 => cl.migrate_primary(1, &mig_addr).unwrap(),
+            _ => cl.move_vertices(1, 0, 10).unwrap(),
+        };
+        if rec.kind == "migrate" {
+            assert_eq!(rec.to, mig_addr, "round {round}");
+        } else {
+            assert_eq!(rec.vertices, 10, "round {round}: {rec:?}");
+        }
+        cl.sync_replicas().unwrap();
+        check_answers(&cl, &single);
+    }
+    // the move history holds the three steps, oldest first
+    let kinds: Vec<&str> = cl.moves().iter().map(|m| m.kind).collect();
+    assert_eq!(kinds, ["split", "migrate", "split"], "{:?}", cl.moves());
+    let (snap, graph) = cl.consistent_view().unwrap();
+    assert_eq!(snap.core, bz_coreness(&graph), "assembled graph vs BZ oracle");
+}
+
+#[test]
+fn aborted_migration_leaves_the_cluster_recoverable() {
+    let g = gen::erdos_renyi(70, 180, 53);
+    let topo = ClusterConfig::parse(
+        "[cluster]\nname = ab\nshards = 1\n[shard.0]\nprimary = local\n",
+    )
+    .unwrap();
+    let cl = ClusterIndex::build(&g, &topo, cfg()).unwrap();
+    let epoch_before = cl.epoch();
+
+    // reserved port: the target is unreachable, the migration aborts
+    // before anything ships — no move recorded, no fence left latched,
+    // the migrating flag cleared
+    let err = cl.migrate_primary(0, "127.0.0.1:1").unwrap_err();
+    assert!(
+        format!("{err:#}").contains("unreachable"),
+        "{err:#}"
+    );
+    assert!(cl.moves().is_empty(), "aborted moves must not be recorded");
+    assert!(!cl.groups()[0].migrating());
+    assert_eq!(cl.epoch(), epoch_before);
+
+    // writes still flow and the answers stay exact
+    cl.submit(EdgeEdit::Insert(0, 60));
+    cl.flush().unwrap();
+    let (snap, graph) = cl.consistent_view().unwrap();
+    assert_eq!(snap.core, bz_coreness(&graph));
+
+    // the structural latch was released by the abort: a retry against a
+    // live host is admitted and completes
+    let (_svc, _handle, addr) = spawn_server();
+    let rec = cl.migrate_primary(0, &addr).unwrap();
+    assert_eq!((rec.kind, rec.to.as_str()), ("migrate", addr.as_str()));
+    assert_eq!(rec.epoch, cl.epoch(), "cutover verified at the head epoch");
+
+    // edits route through the migrated primary and stay oracle-exact
+    cl.submit(EdgeEdit::Insert(1, 61));
+    cl.flush().unwrap();
+    let (snap, graph) = cl.consistent_view().unwrap();
+    assert_eq!(snap.core, bz_coreness(&graph));
+    assert_eq!(cl.moves().len(), 1);
+}
+
+#[test]
+fn cluster_namespace_over_the_wire_aliases_and_reply_shapes() {
+    use pico::net::client::Client;
+    use pico::service::serve;
+
+    let g = gen::barabasi_albert(80, 3, 59);
+    let topo = ClusterConfig::parse(
+        "[cluster]\nname = ns\nshards = 2\n\
+         [shard.0]\nprimary = local\n[shard.1]\nprimary = local\n",
+    )
+    .unwrap();
+    let cl = Arc::new(ClusterIndex::build(&g, &topo, cfg()).unwrap());
+    // one completed move so MOVES has something to render
+    cl.move_vertices(0, 1, 6).unwrap();
+
+    let front = Arc::new(CoreService::new(cfg()));
+    front.open_cluster("ns", cl.clone());
+    let front_handle = serve(front, "127.0.0.1:0").expect("bind");
+    let mut client = Client::connect(&front_handle.addr().to_string()).unwrap();
+
+    // the legacy verb and its CLUSTER spelling answer byte-identically
+    let shards = client.send_line("SHARDS").unwrap();
+    assert!(shards.starts_with("OK shards=2 strategy=cluster"), "{shards}");
+    assert_eq!(client.send_line("CLUSTER TOPOLOGY").unwrap(), shards);
+
+    // MOVES: head carries the line count, each line one completed move
+    let (head, lines) = client.send_multiline("CLUSTER MOVES").unwrap();
+    assert!(head.starts_with("OK moves n=1 lines=1"), "{head}");
+    assert!(
+        lines[0].starts_with("split from=shard0 to=shard1 vertices=6 "),
+        "{lines:?}"
+    );
+    let (jhead, jlines) = client.send_multiline("CLUSTER MOVES JSON").unwrap();
+    assert!(jhead.contains("format=json"), "{jhead}");
+    assert!(jlines[0].starts_with("[{\"kind\":\"split\""), "{jlines:?}");
+
+    // PLAN: one load line per shard (the planner's input signals), a
+    // dry run that records nothing
+    let (phead, plines) = client.send_multiline("CLUSTER REBALANCE PLAN").unwrap();
+    assert!(phead.starts_with("OK rebalance plan moves="), "{phead}");
+    assert!(plines.iter().any(|l| l.starts_with("load shard=0 ")), "{plines:?}");
+    assert!(plines.iter().any(|l| l.starts_with("load shard=1 ")), "{plines:?}");
+    let (head, _) = client.send_multiline("CLUSTER MOVES").unwrap();
+    assert!(head.starts_with("OK moves n=1 "), "PLAN must not execute: {head}");
+
+    // APPLY answers with the executed move count (zero on a balanced
+    // cluster is a valid outcome — the head shape is the contract)
+    let (ahead, _alines) = client.send_multiline("CLUSTER REBALANCE APPLY").unwrap();
+    assert!(ahead.starts_with("OK rebalance applied moves="), "{ahead}");
+
+    // refusals carry machine-readable codes over the wire too
+    let bad = client.send_line("CLUSTER NOPE").unwrap();
+    assert!(bad.starts_with("ERR BADREQ unknown CLUSTER subverb 'NOPE'"), "{bad}");
+    let bare = client.send_line("CLUSTER").unwrap();
+    assert!(bare.starts_with("ERR BADREQ usage: CLUSTER"), "{bare}");
+    client.quit();
+    front_handle.stop();
+}
+
+#[test]
+fn ownership_change_refreshes_the_full_ship_hint() {
+    let g = gen::barabasi_albert(100, 3, 61);
+    let (_svc, _handle, addr) = spawn_server();
+    let topo = ClusterConfig::parse(&format!(
+        "[cluster]\nname = hint\nshards = 2\n\
+         [shard.0]\nprimary = local\nreplicas = {addr}\n\
+         [shard.1]\nprimary = local\n"
+    ))
+    .unwrap();
+    let cl = ClusterIndex::build(&g, &topo, cfg()).unwrap();
+    let exact_before = cl.groups()[0].primary_manifest(2).unwrap().len() as u64;
+    assert_eq!(
+        cl.groups()[0].manifest_bytes_hint(),
+        exact_before,
+        "hydration leaves an exact hint"
+    );
+
+    // an ownership change invalidates the hint: shard 0 adopts vertices,
+    // its manifest grows, and the delta-vs-snapshot comparison must not
+    // keep shipping against the stale pre-move size
+    cl.move_vertices(1, 0, 8).unwrap();
+    let report = cl.sync_replicas().unwrap();
+    assert!(report.snapshots >= 1, "a move forces the full-ship path: {report:?}");
+    let exact_after = cl.groups()[0].primary_manifest(2).unwrap().len() as u64;
+    assert_ne!(exact_before, exact_after, "the move must change the manifest size");
+    assert_eq!(
+        cl.groups()[0].manifest_bytes_hint(),
+        exact_after,
+        "the post-move sync must recompute the hint against the new ownership"
+    );
 }
 
 #[test]

@@ -156,7 +156,7 @@ fn oversized_line_is_rejected_and_connection_closed() {
     let mut c = Client::connect(&handle);
     let huge = "A".repeat(MAX_LINE_BYTES + 10);
     let reply = c.send_line(&huge).expect("error reply before close");
-    assert!(reply.starts_with("ERR line exceeds"), "{reply}");
+    assert!(reply.starts_with("ERR BADREQ line exceeds"), "{reply}");
     // server closes this connection afterwards
     assert!(c.send_line("PING").is_none());
     assert_healthy(&handle, "OK n=1 g1");
@@ -179,7 +179,8 @@ fn unterminated_line_stream_cannot_grow_the_buffer() {
     if !rejected {
         let reply = c.read_line();
         assert!(
-            reply.is_none() || reply.as_deref().unwrap_or("").starts_with("ERR line exceeds"),
+            reply.is_none()
+                || reply.as_deref().unwrap_or("").starts_with("ERR BADREQ line exceeds"),
             "{reply:?}"
         );
     }
@@ -199,7 +200,9 @@ fn oversized_binary_frame_is_rejected() {
     c.w.flush().unwrap();
     let reply = c.read_frame().expect("error frame before close");
     assert!(
-        std::str::from_utf8(&reply).unwrap().starts_with("ERR frame exceeds"),
+        std::str::from_utf8(&reply)
+            .unwrap()
+            .starts_with("ERR BADREQ frame exceeds"),
         "{reply:?}"
     );
     assert!(c.read_frame().is_none(), "connection must close");
