@@ -6,8 +6,11 @@
 //! concurrent-client counts (the capacity claim of the worker-pool
 //! refactor), and sustained qps against a growing fleet of *idle*
 //! parked connections (the capacity claim of the readiness poller —
-//! an idle socket costs one `poll(2)` slot, not a worker). Both are
-//! recorded in the CI `BENCH_*.json` artifact.
+//! an idle socket costs one `poll(2)` slot, not a worker). Two kernel
+//! sections cover the flush recompute (fresh-alloc `Hybrid` run vs the
+//! warm-scratch hierarchical-bucket peel) and the `MEMBERS` fast path
+//! (sort-free single-k vs full decomposition at k = degeneracy). All
+//! are recorded in the CI `BENCH_*.json` artifact.
 //!
 //! The crossover table is the serving analog of the paper's Table VII
 //! peel-vs-index2core crossover: below it, per-edit subcore maintenance
@@ -135,6 +138,14 @@ fn bench_concurrent_serving(g: &CsrGraph) -> Vec<(&'static str, f64)> {
         ("reads_per_sec", q as f64 / wall_s),
         ("flush_p50_ms", flushes.percentile_ms(50.0)),
         ("flush_p99_ms", flushes.percentile_ms(99.0)),
+        // the EWMA cost model's break-even point after this run's
+        // flushes — the live counterpart of Part 2's offline sweep
+        (
+            "crossover_measured_fraction",
+            idx.crossover_costs()
+                .effective_fraction(graph.num_edges())
+                .unwrap_or(f64::NAN),
+        ),
     ];
     // the obs registry's per-stage flush histograms for this graph — CI's
     // bench smoke asserts these keys land in BENCH_serve_throughput.json
@@ -166,6 +177,9 @@ fn bench_crossover(g: &CsrGraph) -> Option<f64> {
     );
     let mut crossover: Option<f64> = None;
     let mut rng = Rng::new(99);
+    // warm scratch across fractions: the production recompute path
+    // (`apply_batch` -> `recompute_bucket`) holds one per index too
+    let mut scratch = pico::core::peel::BucketScratch::with_capacity(0);
     for &frac in &fractions {
         let count = ((m as f64 * frac) as usize).max(1);
         let edits = random_edits(&mut rng, n, count, 0.6);
@@ -187,7 +201,7 @@ fn bench_crossover(g: &CsrGraph) -> Option<f64> {
                 }
             }
         }
-        rec.recompute_with(&Hybrid::default(), pico::util::default_threads());
+        rec.recompute_bucket(pico::util::default_threads(), &mut scratch);
         let rec_ms = t.elapsed().as_secs_f64() * 1e3;
 
         assert_eq!(inc.coreness(), rec.coreness(), "paths disagree at frac {frac}");
@@ -543,7 +557,103 @@ fn bench_registry_overhead(served_qps: f64) -> Vec<(&'static str, f64)> {
     ]
 }
 
-/// Part 5 — one full-recompute decomposition on the serving graph, for
+/// Part 5 — the flush-time recompute kernel: the old path (a fresh
+/// `Hybrid`-selected run, all working arrays allocated per call) vs the
+/// hierarchical-bucket peel with a warm caller-held scratch — the kernel
+/// `apply_batch`/`LocalShard::apply` actually run when a batch crosses
+/// the recompute threshold. Repeated runs, p99 in µs: the steady-state
+/// flush picture, where scratch reuse and the one-scan-per-bucket
+/// collection pay off on the powerlaw serving graph.
+fn bench_recompute_kernel(g: &CsrGraph) -> Vec<(&'static str, f64)> {
+    use pico::core::peel::BucketScratch;
+
+    let threads = pico::util::default_threads();
+    let iters = if quick_bench() { 6 } else { 20 };
+    let base = DynamicCore::new(g);
+
+    let mut hybrid = Samples::default();
+    let mut dc = base.clone();
+    for _ in 0..iters {
+        let t = Timer::start();
+        dc.recompute_with(&Hybrid::default(), threads);
+        hybrid.push(t.elapsed());
+    }
+    let hybrid_core = dc.coreness().to_vec();
+
+    let mut bucket = Samples::default();
+    let mut dc = base.clone();
+    let mut scratch = BucketScratch::with_capacity(0);
+    for _ in 0..iters {
+        let t = Timer::start();
+        dc.recompute_bucket(threads, &mut scratch);
+        bucket.push(t.elapsed());
+    }
+    assert_eq!(dc.coreness(), &hybrid_core[..], "recompute kernels disagree");
+
+    let hybrid_us = hybrid.percentile_ms(99.0) * 1e3;
+    let bucket_us = bucket.percentile_ms(99.0) * 1e3;
+    println!(
+        "flush recompute kernel ({iters} warm runs, {threads} threads):\n\
+         \x20 Hybrid fresh-alloc p99 {:.0} us | BucketPeel warm-scratch p99 {:.0} us -> {}",
+        hybrid_us,
+        bucket_us,
+        fmt::speedup(hybrid_us / bucket_us)
+    );
+    vec![
+        ("recompute_p99_us", bucket_us),
+        ("recompute_hybrid_p99_us", hybrid_us),
+        ("recompute_speedup_x", hybrid_us / bucket_us),
+    ]
+}
+
+/// Part 6 — the MEMBERS fast path: sort-free single-k extraction
+/// ([`pico::core::peel::single_k`]) vs the full decomposition it
+/// replaces, at k = degeneracy (the deep-core cohort query). The fast
+/// path is one O(|V|+|E|) delete-below-k fixpoint; the old answer needed
+/// every vertex's exact coreness first.
+fn bench_members_fastpath(g: &CsrGraph) -> Vec<(&'static str, f64)> {
+    use pico::core::peel::single_k;
+
+    let core = bz_coreness(g);
+    let k = core.iter().copied().max().unwrap_or(0);
+    let iters = if quick_bench() { 8 } else { 30 };
+
+    let mut full = Samples::default();
+    let mut full_members = Vec::new();
+    for _ in 0..iters {
+        let t = Timer::start();
+        let r = Hybrid::default().decompose(g);
+        full_members = (0..r.core.len() as u32).filter(|&v| r.core[v as usize] >= k).collect();
+        full.push(t.elapsed());
+    }
+
+    let mut fast = Samples::default();
+    let mut fast_members = Vec::new();
+    for _ in 0..iters {
+        let t = Timer::start();
+        fast_members = single_k(g, k).members();
+        fast.push(t.elapsed());
+    }
+    assert_eq!(fast_members, full_members, "single_k disagrees with full decomposition");
+
+    let full_us = full.percentile_ms(99.0) * 1e3;
+    let fast_us = fast.percentile_ms(99.0) * 1e3;
+    println!(
+        "MEMBERS fast path (k = degeneracy = {k}, {} members):\n\
+         \x20 full decomposition p99 {:.0} us | single-k p99 {:.0} us -> {} (bar: >= 5x)",
+        fast_members.len(),
+        full_us,
+        fast_us,
+        fmt::speedup(full_us / fast_us)
+    );
+    vec![
+        ("members_fastpath_p99_us", fast_us),
+        ("members_fastpath_full_p99_us", full_us),
+        ("members_fastpath_speedup_x", full_us / fast_us),
+    ]
+}
+
+/// Part 7 — one full-recompute decomposition on the serving graph, for
 /// scale: what a cold index build / worst-case fallback costs.
 fn bench_cold_build(g: &CsrGraph) -> f64 {
     let t = Timer::start();
@@ -578,6 +688,8 @@ fn main() {
         .map(|&(_, v)| v)
         .unwrap_or(0.0);
     json.extend(bench_registry_overhead(served_qps));
+    json.extend(bench_recompute_kernel(&g));
+    json.extend(bench_members_fastpath(&g));
     let crossover = bench_crossover(&g);
     let cold_ms = bench_cold_build(&g);
     json.push(("crossover_fraction", crossover.unwrap_or(f64::NAN)));

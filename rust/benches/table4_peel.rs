@@ -1,45 +1,77 @@
 //! Table IV reproduction: GPP vs PeelOne execution time (+ the Gunrock
-//! system-level column, here the vertex-centric framework VC-Peel).
+//! system-level column, here the vertex-centric framework VC-Peel), with
+//! the hierarchical-bucket kernel (BucketPeel) alongside.
 //!
 //! Paper shape to check: PeelOne beats GPP on every dataset (1.0–4.1x,
 //! avg 1.9x on the RTX 3090); the generic-framework implementation is far
-//! slower than both. Both iteration counts (l1) are printed as in the
-//! paper's table.
+//! slower than both. BucketPeel should close on or beat PeelOne exactly
+//! where k_max is deep (its one-scan-per-bucket collection removes the
+//! `l1` full-vertex scans). Both iteration counts (l1) are printed as in
+//! the paper's table.
 //!
 //!     cargo bench --bench table4_peel
+//!
+//! `PICO_BENCH_QUICK=1` shrinks to the Small tier and writes
+//! `BENCH_table4_peel.json` for the CI perf trail.
 
-use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::bench::{measure, print_preamble, BenchOptions};
+use pico::bench::suite::{quick_bench, suite, write_bench_json, Tier};
 use pico::coordinator::report::{geomean_speedup, Table};
-use pico::core::peel::{Gpp, PeelOne};
+use pico::core::peel::{BucketPeel, Gpp, PeelOne};
 use pico::util::fmt;
 use pico::vc::VcPeel;
 
 fn main() {
     let opts = BenchOptions::default();
-    print_preamble("Table IV — GPP vs PeelOne (+ Gunrock-analog)", &opts);
+    print_preamble("Table IV — GPP vs PeelOne vs BucketPeel (+ Gunrock-analog)", &opts);
 
+    let tier = if quick_bench() { Tier::Small } else { Tier::from_env() };
     let mut t = Table::new(&[
-        "dataset", "GPP", "PeelOne", "SpeedUp", "VC-Peel(GR)", "l1",
+        "dataset", "GPP", "PeelOne", "SpeedUp", "BucketPeel", "SpeedUp(B)", "VC-Peel(GR)", "l1",
     ]);
     let mut pairs = Vec::new();
-    for entry in suite(Tier::from_env()) {
+    let mut bucket_pairs = Vec::new();
+    let mut last: Option<(String, f64, f64, f64)> = None;
+    for entry in suite(tier) {
         let g = entry.build();
         let gpp = measure(&Gpp, &g, &opts);
         let po = measure(&PeelOne, &g, &opts);
+        let bk = measure(&BucketPeel, &g, &opts);
         let vc = measure(&VcPeel, &g, &opts);
         pairs.push((gpp.ms(), po.ms()));
+        bucket_pairs.push((po.ms(), bk.ms()));
         t.row(vec![
             entry.name.to_string(),
             fmt::ms(gpp.ms()),
             fmt::ms(po.ms()),
             fmt::speedup(gpp.ms() / po.ms()),
+            fmt::ms(bk.ms()),
+            fmt::speedup(po.ms() / bk.ms()),
             fmt::ms(vc.ms()),
             po.instrumented.iterations.to_string(),
         ]);
+        last = Some((entry.name.to_string(), gpp.ms(), po.ms(), bk.ms()));
     }
     print!("{}", t.render());
     println!(
         "\ngeomean PeelOne speedup over GPP: {} (paper: avg 1.9x)",
         fmt::speedup(geomean_speedup(&pairs))
     );
+    println!(
+        "geomean BucketPeel speedup over PeelOne: {} (deep-k_max graphs drive it)",
+        fmt::speedup(geomean_speedup(&bucket_pairs))
+    );
+    if let Some((name, gpp_ms, po_ms, bk_ms)) = last {
+        write_bench_json(
+            "table4_peel",
+            &name,
+            &[
+                ("gpp_ms", gpp_ms),
+                ("peelone_ms", po_ms),
+                ("bucketpeel_ms", bk_ms),
+                ("bucket_speedup_x", po_ms / bk_ms),
+                ("geomean_bucket_speedup_x", geomean_speedup(&bucket_pairs)),
+            ],
+        );
+    }
 }

@@ -7,8 +7,13 @@
 //! appended beyond the standard suite to chart where the crossover falls.
 //!
 //!     cargo bench --bench table7_crossover
+//!
+//! `PICO_BENCH_QUICK=1` shrinks to the Small tier plus scaled-down
+//! deep-hierarchy extras and writes `BENCH_table7_crossover.json` for
+//! the CI perf trail.
 
-use pico::bench::{measure, print_preamble, suite::suite, suite::Tier, BenchOptions};
+use pico::bench::suite::{quick_bench, suite, write_bench_json, Tier};
+use pico::bench::{measure, print_preamble, BenchOptions};
 use pico::coordinator::report::Table;
 use pico::core::hybrid::{Choice, Hybrid};
 use pico::core::index2core::HistoCore;
@@ -17,6 +22,10 @@ use pico::graph::{gen, CsrGraph};
 use pico::util::fmt;
 
 fn deep_extras() -> Vec<CsrGraph> {
+    if quick_bench() {
+        // same regimes, CI-sized: one core-periphery, one clique chain
+        return vec![gen::core_periphery(8_000, 40, 3), gen::nested_cliques(12, 8, 5).0];
+    }
     vec![
         // core-periphery: the regime of the paper's HistoCore-winning web
         // graphs (indochina/webbase/it): big sparse |V|, k_max set by a
@@ -51,6 +60,7 @@ fn main() {
     ]);
     let mut hybrid_correct = 0usize;
     let mut hybrid_total = 0usize;
+    let mut last: Option<(String, f64, f64)> = None;
     let mut run = |g: &CsrGraph| {
         let pod = measure(&PoDyn, g, &opts);
         let hst = measure(&HistoCore, g, &opts);
@@ -82,9 +92,11 @@ fn main() {
             },
             format!("{pick:?}"),
         ]);
+        last = Some((g.name.clone(), pod.ms(), hst.ms()));
     };
 
-    for entry in suite(Tier::from_env()) {
+    let tier = if quick_bench() { Tier::Small } else { Tier::from_env() };
+    for entry in suite(tier) {
         run(&entry.build());
     }
     for g in deep_extras() {
@@ -95,4 +107,16 @@ fn main() {
     println!(
         "hybrid selector (paper §VII future work) picks the measured winner or a near-tie on {hybrid_correct}/{hybrid_total} graphs"
     );
+    if let Some((name, podyn_ms, histocore_ms)) = last {
+        write_bench_json(
+            "table7_crossover",
+            &name,
+            &[
+                ("podyn_ms", podyn_ms),
+                ("histocore_ms", histocore_ms),
+                ("histocore_speedup_x", podyn_ms / histocore_ms),
+                ("hybrid_pick_accuracy", hybrid_correct as f64 / hybrid_total.max(1) as f64),
+            ],
+        );
+    }
 }

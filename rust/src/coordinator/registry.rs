@@ -14,6 +14,7 @@ pub fn algorithm_names() -> Vec<&'static str> {
         "PeelOne",
         "PP-dyn",
         "PO-dyn",
+        "BucketPeel",
         "VC-Peel(Gunrock)",
         "NbrCore",
         "CntCore",
@@ -36,6 +37,7 @@ pub fn algorithm_by_name(name: &str) -> Result<Box<dyn Decomposer>> {
         "PeelOne" => Box::new(peel::PeelOne),
         "PP-dyn" => Box::new(peel::PpDyn),
         "PO-dyn" => Box::new(peel::PoDyn),
+        "BucketPeel" => Box::new(peel::BucketPeel),
         "VC-Peel(Gunrock)" => Box::new(VcPeel),
         "NbrCore" => Box::new(index2core::NbrCore),
         "CntCore" => Box::new(index2core::CntCore),
@@ -63,7 +65,18 @@ mod tests {
 
     #[test]
     fn native_algorithms_resolve_and_run() {
-        for name in ["BZ", "GPP", "PeelOne", "PP-dyn", "PO-dyn", "NbrCore", "CntCore", "HistoCore", "VC-Peel(Gunrock)"] {
+        for name in [
+            "BZ",
+            "GPP",
+            "PeelOne",
+            "PP-dyn",
+            "PO-dyn",
+            "BucketPeel",
+            "NbrCore",
+            "CntCore",
+            "HistoCore",
+            "VC-Peel(Gunrock)",
+        ] {
             let algo = algorithm_by_name(name).unwrap();
             assert_eq!(algo.name(), name);
             let r = algo.decompose_with(&examples::g1(), 2, false);

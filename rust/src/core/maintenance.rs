@@ -22,7 +22,7 @@
 use crate::core::bz::bz_coreness;
 use crate::core::traits::Decomposer;
 use crate::graph::{CsrGraph, GraphBuilder, VertexId};
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 
 /// One edge edit. Endpoints are unordered (stored as given, compared
 /// canonically); self-loop edits are rejected by [`DynamicCore::apply`].
@@ -45,11 +45,65 @@ impl EdgeEdit {
     }
 }
 
+/// Hoisted work queues for the subcore/traversal maintenance — one set
+/// per index, reused across edits and batches instead of reallocated per
+/// call (the incremental half of the scratch-reuse audit; the recompute
+/// half is [`crate::core::peel::BucketScratch`]). Buffers are cleared at
+/// each use and never shrink; reuses are counted in
+/// [`crate::engine::metrics::scratch_reuses`].
+#[derive(Clone, Debug, Default)]
+struct MaintScratch {
+    /// Subcore DFS: visited set, stack, and collected output.
+    seen: HashSet<VertexId>,
+    stack: Vec<VertexId>,
+    sub: Vec<VertexId>,
+    /// Candidate bookkeeping: member → slot, cd/mcd degrees,
+    /// evicted/demoted flags, cascade queue.
+    index: HashMap<VertexId, usize>,
+    deg: Vec<u32>,
+    flag: Vec<bool>,
+    queue: Vec<usize>,
+}
+
+/// The subcore of level `k` reachable from `roots` (vertices with
+/// core == k, connected through vertices of core == k), collected into
+/// `scratch.sub`. A free function over the fields so callers can keep
+/// disjoint borrows on `adj`/`core` while the scratch is held mutably.
+fn subcore_into(
+    adj: &[Vec<VertexId>],
+    core: &[u32],
+    k: u32,
+    roots: &[VertexId],
+    scratch: &mut MaintScratch,
+) {
+    if scratch.stack.capacity() > 0 {
+        // warm buffers from an earlier edit: this call allocates nothing
+        crate::engine::metrics::note_scratch_reuses(1);
+    }
+    scratch.seen.clear();
+    scratch.stack.clear();
+    scratch.sub.clear();
+    for &r in roots {
+        if core[r as usize] == k && scratch.seen.insert(r) {
+            scratch.stack.push(r);
+        }
+    }
+    while let Some(w) = scratch.stack.pop() {
+        scratch.sub.push(w);
+        for &x in &adj[w as usize] {
+            if core[x as usize] == k && scratch.seen.insert(x) {
+                scratch.stack.push(x);
+            }
+        }
+    }
+}
+
 /// A mutable graph with continuously maintained coreness.
 #[derive(Clone, Debug)]
 pub struct DynamicCore {
     adj: Vec<Vec<VertexId>>,
     core: Vec<u32>,
+    scratch: MaintScratch,
 }
 
 impl DynamicCore {
@@ -61,6 +115,7 @@ impl DynamicCore {
         Self {
             adj,
             core: bz_coreness(g),
+            scratch: MaintScratch::default(),
         }
     }
 
@@ -69,6 +124,7 @@ impl DynamicCore {
         Self {
             adj: vec![Vec::new(); n],
             core: vec![0; n],
+            scratch: MaintScratch::default(),
         }
     }
 
@@ -85,7 +141,11 @@ impl DynamicCore {
         let adj = (0..g.num_vertices() as VertexId)
             .map(|v| g.neighbors(v).to_vec())
             .collect();
-        Self { adj, core }
+        Self {
+            adj,
+            core,
+            scratch: MaintScratch::default(),
+        }
     }
 
     pub fn num_vertices(&self) -> usize {
@@ -134,28 +194,10 @@ impl DynamicCore {
         b.build("dynamic-snapshot")
     }
 
-    /// The subcore of level `k` reachable from `roots` (vertices with
-    /// core == k, connected through vertices of core == k).
-    fn subcore(&self, k: u32, roots: &[VertexId]) -> Vec<VertexId> {
-        let mut seen: HashMap<VertexId, ()> = HashMap::new();
-        let mut stack: Vec<VertexId> = Vec::new();
-        for &r in roots {
-            if self.core[r as usize] == k && !seen.contains_key(&r) {
-                seen.insert(r, ());
-                stack.push(r);
-            }
-        }
-        let mut out = Vec::new();
-        while let Some(w) = stack.pop() {
-            out.push(w);
-            for &x in &self.adj[w as usize] {
-                if self.core[x as usize] == k && !seen.contains_key(&x) {
-                    seen.insert(x, ());
-                    stack.push(x);
-                }
-            }
-        }
-        out
+    /// Adjacency of `v` — the live structure, no CSR rebuild (the
+    /// single-k overlay iterates it per query).
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.adj[v as usize]
     }
 
     /// Mutate the adjacency only — no coreness maintenance. Returns true
@@ -198,6 +240,26 @@ impl DynamicCore {
         self.core = algo.decompose_with(&g, threads, false).core;
     }
 
+    /// Recompute via the hierarchical-bucket peel
+    /// ([`crate::core::peel::BucketPeel`]) with a caller-held scratch —
+    /// the serving layer's flush-time recompute hot path. A warm scratch
+    /// skips all five O(|V|) allocations; reuses tick
+    /// [`crate::engine::metrics::scratch_reuses`].
+    pub fn recompute_bucket(
+        &mut self,
+        threads: usize,
+        scratch: &mut crate::core::peel::BucketScratch,
+    ) {
+        let g = self.snapshot();
+        let n = g.num_vertices();
+        if scratch.ensure(n) {
+            crate::engine::metrics::note_scratch_reuses(1);
+        }
+        let metrics = crate::engine::metrics::Metrics::disabled(threads.max(1));
+        crate::core::peel::bucket_peel_into(&g, threads, &metrics, scratch);
+        scratch.copy_core_into(n, &mut self.core);
+    }
+
     /// Apply one [`EdgeEdit`] with incremental maintenance. Returns true
     /// if the edge set changed (self-loop edits never do).
     pub fn apply(&mut self, edit: EdgeEdit) -> bool {
@@ -233,33 +295,42 @@ impl DynamicCore {
         let (cu, cv) = (self.core[u as usize], self.core[v as usize]);
         let k = cu.min(cv);
         // roots: endpoints sitting exactly at level k
-        let roots: Vec<VertexId> = [u, v]
-            .into_iter()
-            .filter(|&w| self.core[w as usize] == k)
-            .collect();
-        let candidates = self.subcore(k, &roots);
-        if candidates.is_empty() {
+        let mut roots = [0 as VertexId; 2];
+        let mut nr = 0usize;
+        for w in [u, v] {
+            if self.core[w as usize] == k {
+                roots[nr] = w;
+                nr += 1;
+            }
+        }
+        subcore_into(&self.adj, &self.core, k, &roots[..nr], &mut self.scratch);
+        if self.scratch.sub.is_empty() {
             return true;
         }
 
+        let MaintScratch {
+            sub: candidates,
+            index,
+            deg: cd,
+            flag: evicted,
+            queue,
+            ..
+        } = &mut self.scratch;
+        index.clear();
+        index.extend(candidates.iter().enumerate().map(|(i, &w)| (w, i)));
         // candidate degree: neighbors strictly above k, or inside S
-        let index: HashMap<VertexId, usize> = candidates
-            .iter()
-            .enumerate()
-            .map(|(i, &w)| (w, i))
-            .collect();
-        let mut cd: Vec<u32> = candidates
-            .iter()
-            .map(|&w| {
-                self.adj[w as usize]
-                    .iter()
-                    .filter(|&&x| self.core[x as usize] > k || index.contains_key(&x))
-                    .count() as u32
-            })
-            .collect();
-        let mut evicted = vec![false; candidates.len()];
+        cd.clear();
+        cd.extend(candidates.iter().map(|&w| {
+            self.adj[w as usize]
+                .iter()
+                .filter(|&&x| self.core[x as usize] > k || index.contains_key(&x))
+                .count() as u32
+        }));
+        evicted.clear();
+        evicted.resize(candidates.len(), false);
         // evict until fixpoint: members that cannot sustain k+1
-        let mut queue: Vec<usize> = (0..candidates.len()).filter(|&i| cd[i] <= k).collect();
+        queue.clear();
+        queue.extend((0..candidates.len()).filter(|&i| cd[i] <= k));
         while let Some(i) = queue.pop() {
             if evicted[i] {
                 continue;
@@ -297,31 +368,40 @@ impl DynamicCore {
         if k == 0 {
             return true;
         }
-        let roots: Vec<VertexId> = [u, v]
-            .into_iter()
-            .filter(|&w| self.core[w as usize] == k)
-            .collect();
-        let candidates = self.subcore(k, &roots);
-        if candidates.is_empty() {
+        let mut roots = [0 as VertexId; 2];
+        let mut nr = 0usize;
+        for w in [u, v] {
+            if self.core[w as usize] == k {
+                roots[nr] = w;
+                nr += 1;
+            }
+        }
+        subcore_into(&self.adj, &self.core, k, &roots[..nr], &mut self.scratch);
+        if self.scratch.sub.is_empty() {
             return true;
         }
-        let index: HashMap<VertexId, usize> = candidates
-            .iter()
-            .enumerate()
-            .map(|(i, &w)| (w, i))
-            .collect();
+        let MaintScratch {
+            sub: candidates,
+            index,
+            deg: mcd,
+            flag: demoted,
+            queue,
+            ..
+        } = &mut self.scratch;
+        index.clear();
+        index.extend(candidates.iter().enumerate().map(|(i, &w)| (w, i)));
         // max-core degree: neighbors with core >= k
-        let mut mcd: Vec<u32> = candidates
-            .iter()
-            .map(|&w| {
-                self.adj[w as usize]
-                    .iter()
-                    .filter(|&&x| self.core[x as usize] >= k)
-                    .count() as u32
-            })
-            .collect();
-        let mut demoted = vec![false; candidates.len()];
-        let mut queue: Vec<usize> = (0..candidates.len()).filter(|&i| mcd[i] < k).collect();
+        mcd.clear();
+        mcd.extend(candidates.iter().map(|&w| {
+            self.adj[w as usize]
+                .iter()
+                .filter(|&&x| self.core[x as usize] >= k)
+                .count() as u32
+        }));
+        demoted.clear();
+        demoted.resize(candidates.len(), false);
+        queue.clear();
+        queue.extend((0..candidates.len()).filter(|&i| mcd[i] < k));
         while let Some(i) = queue.pop() {
             if demoted[i] {
                 continue;
@@ -467,6 +547,24 @@ mod tests {
         // idempotent / non-shrinking
         dc.ensure_vertex(3);
         assert_eq!(dc.num_vertices(), 6);
+    }
+
+    #[test]
+    fn hoisted_scratch_counts_reuses_across_a_batch() {
+        let mut dc = DynamicCore::new(&examples::g1());
+        let before = crate::engine::metrics::scratch_reuses();
+        // three maintenance edits against one index: every edit after the
+        // first finds the hoisted work queues warm
+        dc.apply_batch(&[
+            EdgeEdit::Insert(2, 5),
+            EdgeEdit::Delete(2, 5),
+            EdgeEdit::Insert(2, 5),
+        ]);
+        check(&dc, "after counted batch");
+        assert!(
+            crate::engine::metrics::scratch_reuses() >= before + 2,
+            "warm-buffer edits must be counted as saved allocations"
+        );
     }
 
     #[test]

@@ -1,16 +1,30 @@
 //! Core decomposition algorithms — the paper's contribution plus every
-//! baseline it compares against.
+//! baseline it compares against, and the serving-era kernels grown on
+//! top of them.
 //!
-//! | Algorithm | Paradigm | Paper role |
-//! |---|---|---|
-//! | [`bz::Bz`] | serial Peel | O(M) ground-truth oracle [33] |
-//! | [`peel::Gpp`] | Peel | General Parallel Peel baseline (Alg 3) |
-//! | [`peel::PeelOne`] | Peel | **proposed** — assertion method (Alg 4) |
-//! | [`peel::PpDyn`] | Peel | SOTA dynamic-frontier baseline [21] |
-//! | [`peel::PoDyn`] | Peel | **proposed** — PeelOne + dynamic frontier |
-//! | [`index2core::NbrCore`] | Index2core | baseline [19] |
-//! | [`index2core::CntCore`] | Index2core | **proposed** — cnt frontiers (Alg 5) |
-//! | [`index2core::HistoCore`] | Index2core | **proposed** — up-to-date histograms (Alg 6) |
+//! The **Registry** column is the name `coordinator::registry` resolves
+//! (CI greps the two lists against each other, so a kernel cannot land
+//! in the registry without a row here).
+//!
+//! | Registry | Algorithm | Paradigm | Role |
+//! |---|---|---|---|
+//! | `BZ` | [`bz::Bz`] | serial Peel | O(M) ground-truth oracle [33] |
+//! | `GPP` | [`peel::Gpp`] | Peel | General Parallel Peel baseline (Alg 3) |
+//! | `PeelOne` | [`peel::PeelOne`] | Peel | **proposed** — assertion method (Alg 4) |
+//! | `PP-dyn` | [`peel::PpDyn`] | Peel | SOTA dynamic-frontier baseline [21] |
+//! | `PO-dyn` | [`peel::PoDyn`] | Peel | **proposed** — PeelOne + dynamic frontier |
+//! | `BucketPeel` | [`peel::BucketPeel`] | Peel | hierarchical log-spaced buckets with per-bucket local frontiers (theory-practice, Liu & Dong) — the flush-time recompute kernel |
+//! | `VC-Peel(Gunrock)` | [`crate::vc::VcPeel`] | Peel | vertex-centric framework baseline (§V) |
+//! | `NbrCore` | [`index2core::NbrCore`] | Index2core | baseline [19] |
+//! | `CntCore` | [`index2core::CntCore`] | Index2core | **proposed** — cnt frontiers (Alg 5) |
+//! | `HistoCore` | [`index2core::HistoCore`] | Index2core | **proposed** — up-to-date histograms (Alg 6) |
+//! | `Hybrid` | [`hybrid::Hybrid`] | either | density-based paradigm pick (§VI) |
+//! | `VecPeel(XLA)` | `runtime::xla` | Peel | vectorised peel via the XLA backend (feature-gated) |
+//! | `VecHindex(XLA)` | `runtime::xla` | Index2core | vectorised h-index via the XLA backend (feature-gated) |
+//!
+//! Not in the registry (not a full decomposition): [`peel::single_k`],
+//! the sort-free single-k extractor (Xiang) behind the `MEMBERS` fast
+//! path — it produces one level set in O(n+m) instead of all of them.
 
 pub mod bz;
 pub mod hindex;

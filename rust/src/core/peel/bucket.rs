@@ -1,0 +1,408 @@
+//! BucketPeel — hierarchical-bucket parallel peel (theory-practice style).
+//!
+//! [`super::PeelOne`] re-scans the *whole* vertex set once per round, so its
+//! scan cost is `O(n · Σ per-level rounds)` — the term that dominates the
+//! flush-stage recompute on high-`k_max` graphs. Following the
+//! hierarchical bucketing of Liu & Dong ("Parallel k-Core Decomposition:
+//! Theory and Practice", PAPERS.md), this kernel groups levels into
+//! log-spaced ranges `[k_lo, k_hi)` with `k_hi = max(k_lo+1, 2·k_lo)` and
+//! pays **one** full scan per bucket to collect a local member list; every
+//! round inside the bucket scans only that list. Scan cost drops to
+//! `O(n · log k_max + Σ bucket work)`.
+//!
+//! Correctness of the once-per-run `binned` stamp rests on the residual
+//! invariant `core[v] >= coreness(v)`: a vertex's residual enters
+//! `[k_lo, k_hi)` exactly when its coreness lies there, so it belongs to
+//! exactly one bucket, ever. Vertices whose residual is still `>= k_hi` at
+//! collection time are admitted *dynamically* by the scatter kernel — the
+//! assertion decrement ([`atomic_sub_floor`]) moves residuals in unit
+//! steps, so the first write below `k_hi` is never skipped. If the
+//! collection scan finds nothing, no remaining vertex has coreness below
+//! `k_hi` (a sub-`k_hi` min-degree vertex would show a sub-`k_hi`
+//! residual), so the whole bucket is skipped in one scan.
+//!
+//! PeelOne's other traits are retained: the single `core[]` property array
+//! doubling as residual degree, and the assertion method (under-core
+//! vertices clamped *at* their coreness, zero atomicAdd corrections).
+//! Round scans and scatters are work-stolen via [`SpmdCtx::dynamic_chunks`]
+//! rather than statically split — member lists are small and skewed, so a
+//! static split would leave workers idle behind one hub-heavy chunk.
+
+use crate::core::traits::{DecompositionResult, Decomposer, Paradigm};
+use crate::engine::atomics::{atomic_sub_floor, AtomicCoreArray, SubFloor};
+use crate::engine::frontier::WorkList;
+use crate::engine::metrics::Metrics;
+use crate::engine::spmd::run_spmd;
+use crate::graph::CsrGraph;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+
+/// Hierarchical-bucket peel with per-bucket local frontiers.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct BucketPeel;
+
+impl Decomposer for BucketPeel {
+    fn name(&self) -> &'static str {
+        "BucketPeel"
+    }
+
+    fn paradigm(&self) -> Paradigm {
+        Paradigm::Peel
+    }
+
+    fn decompose_with(&self, g: &CsrGraph, threads: usize, metrics_on: bool) -> DecompositionResult {
+        let n = g.num_vertices();
+        let metrics = Metrics::new(threads, metrics_on);
+        if n == 0 {
+            return DecompositionResult {
+                core: vec![],
+                iterations: 0,
+                launches: 0,
+                metrics: metrics.snapshot(),
+            };
+        }
+
+        let mut scratch = BucketScratch::with_capacity(n);
+        let (iterations, launches) =
+            bucket_peel_into(g, threads, &metrics, &mut scratch);
+        DecompositionResult {
+            core: scratch.core.to_vec(),
+            iterations,
+            launches,
+            metrics: metrics.snapshot(),
+        }
+    }
+}
+
+/// Reusable working set of one [`BucketPeel`] run: the residual/core
+/// array, the bucket member list, the per-level frontier, and the two
+/// dedup stamps. Holding one of these per index lets every flush-time
+/// recompute skip five `O(n)` allocations (the tentpole's scratch-reuse
+/// requirement); [`BucketScratch::ensure`] re-initialises in place.
+#[derive(Debug)]
+pub struct BucketScratch {
+    core: AtomicCoreArray,
+    members: WorkList,
+    frontier: WorkList,
+    /// Peeled stamp: set once when a vertex enters a level frontier.
+    queued: Vec<AtomicBool>,
+    /// Bucketed stamp: set once when a vertex enters a member list.
+    binned: Vec<AtomicBool>,
+}
+
+impl BucketScratch {
+    pub fn with_capacity(n: usize) -> Self {
+        let mut s = BucketScratch {
+            core: AtomicCoreArray::zeros(0),
+            members: WorkList::new(0),
+            frontier: WorkList::new(0),
+            queued: vec![],
+            binned: vec![],
+        };
+        s.ensure(n);
+        s
+    }
+
+    /// Current vertex capacity.
+    pub fn capacity(&self) -> usize {
+        self.queued.len()
+    }
+
+    /// Grow (never shrink) to hold `n` vertices. Returns `true` when the
+    /// existing buffers were large enough and got reused in place.
+    pub fn ensure(&mut self, n: usize) -> bool {
+        if n <= self.capacity() && self.frontier.capacity() >= n {
+            return true;
+        }
+        self.core = AtomicCoreArray::zeros(n);
+        self.members = WorkList::new(n);
+        self.frontier = WorkList::new(n);
+        self.queued = (0..n).map(|_| AtomicBool::new(false)).collect();
+        self.binned = (0..n).map(|_| AtomicBool::new(false)).collect();
+        false
+    }
+
+    /// Copy the first `n` computed coreness values into `out`, reusing
+    /// its allocation (the scratch may be larger than the last run's
+    /// graph, so callers name the prefix explicitly).
+    pub fn copy_core_into(&self, n: usize, out: &mut Vec<u32>) {
+        debug_assert!(n <= self.capacity());
+        out.clear();
+        out.extend((0..n).map(|v| self.core.load(v)));
+    }
+
+    /// Reset the first `n` slots for a fresh run (single-threaded; the
+    /// stamps are once-per-run, so this is the only place they clear).
+    fn reset(&mut self, degrees: &[u32]) {
+        let n = degrees.len();
+        debug_assert!(n <= self.capacity());
+        for (v, &d) in degrees.iter().enumerate() {
+            self.core.store(v, d);
+            self.queued[v].store(false, Ordering::Relaxed);
+            self.binned[v].store(false, Ordering::Relaxed);
+        }
+        self.members.reset();
+        self.frontier.reset();
+    }
+}
+
+/// Run the bucket peel on `g`, leaving coreness in `scratch.core[0..n]`.
+/// Returns `(iterations, launches)`. Separated from the trait impl so the
+/// flush-time recompute path can pass a long-lived [`BucketScratch`].
+pub fn bucket_peel_into(
+    g: &CsrGraph,
+    threads: usize,
+    metrics: &Metrics,
+    scratch: &mut BucketScratch,
+) -> (usize, usize) {
+    let n = g.num_vertices();
+    if n == 0 {
+        return (0, 0);
+    }
+    scratch.ensure(n);
+    scratch.reset(&g.degrees());
+    let BucketScratch {
+        core,
+        members,
+        frontier,
+        queued,
+        binned,
+    } = &*scratch;
+
+    let remaining = AtomicUsize::new(n);
+    let iterations = AtomicUsize::new(0);
+    let round_end_shared = AtomicUsize::new(0);
+    let scan_cursor = AtomicUsize::new(0);
+    let scatter_cursor = AtomicUsize::new(0);
+
+    let launches = run_spmd(threads, |ctx| {
+        let mv = metrics.view(ctx.tid);
+
+        // Level 0: isolated vertices are already converged (core 0).
+        let isolated = ctx.static_chunk(n).filter(|&v| core.load(v) == 0).count();
+        if isolated > 0 {
+            remaining.fetch_sub(isolated, Ordering::AcqRel);
+        }
+        ctx.barrier();
+
+        let mut k_lo = 1u32;
+        loop {
+            // `remaining` only moves under tid 0 between barriers (after
+            // the level-0 phase), so this read — and every control-flow
+            // read below — is uniform across workers.
+            if remaining.load(Ordering::Acquire) == 0 {
+                break;
+            }
+            let k_hi = k_lo.saturating_mul(2).max(k_lo.saturating_add(1));
+
+            // ---- bucket collection: the one full-vertex scan ----
+            // V_b = {v : core[v] in [k_lo, k_hi), not yet binned}. The
+            // 1-byte stamp short-circuits before the 4-byte core load,
+            // and the RMW swap runs at most once per vertex, as in the
+            // PeelOne scan.
+            let range = ctx.static_chunk(n);
+            let lo = range.start;
+            for (i, b) in binned[range].iter().enumerate() {
+                if !b.load(Ordering::Relaxed) {
+                    let v = lo + i;
+                    let c = core.load(v);
+                    if c >= k_lo && c < k_hi && !b.swap(true, Ordering::Relaxed) {
+                        members.push(v as u32);
+                        mv.frontier_pushes(1);
+                    }
+                }
+            }
+            ctx.launch_boundary();
+
+            // Empty bucket: no remaining vertex has coreness < k_hi (see
+            // module docs), so skip straight to the next range.
+            if members.pushed() == 0 {
+                k_lo = k_hi;
+                continue;
+            }
+
+            let mut done = false;
+            for k in k_lo..k_hi {
+                // ---- scan/scatter rounds at level k, members only ----
+                let mut round_start = 0usize;
+                loop {
+                    // scan kernel: V_f = {v in members : core[v] == k,
+                    // not yet queued}. The member list is small and
+                    // hub-skewed, so chunks are work-stolen.
+                    let msize = members.pushed();
+                    for range in ctx.dynamic_chunks(msize, 256, &scan_cursor) {
+                        for i in range {
+                            let v = members.get(i) as usize;
+                            let q = &queued[v];
+                            if !q.load(Ordering::Relaxed)
+                                && core.load(v) == k
+                                && !q.swap(true, Ordering::Relaxed)
+                            {
+                                frontier.push(v as u32);
+                                mv.frontier_pushes(1);
+                            }
+                        }
+                    }
+                    ctx.launch_boundary();
+                    if ctx.tid == 0 {
+                        round_end_shared.store(frontier.pushed(), Ordering::Relaxed);
+                        scan_cursor.store(0, Ordering::Relaxed);
+                    }
+                    ctx.barrier();
+                    let round_end = round_end_shared.load(Ordering::Relaxed);
+                    if round_start == round_end {
+                        break;
+                    }
+                    // scatter kernel over this round's slice
+                    let len = round_end - round_start;
+                    for range in ctx.dynamic_chunks(len, 32, &scatter_cursor) {
+                        for i in range {
+                            let v = frontier.get(round_start + i);
+                            for &u in g.neighbors(v) {
+                                mv.edge_accesses(1);
+                                let u = u as usize;
+                                if core.load(u) > k {
+                                    // assertion method: clamp at the floor k
+                                    if let SubFloor::Written(nv) =
+                                        atomic_sub_floor(core.cell(u), k, &mv)
+                                    {
+                                        // dropped into this bucket's range:
+                                        // admit it to the local member list
+                                        if nv < k_hi {
+                                            let b = &binned[u];
+                                            if !b.load(Ordering::Relaxed)
+                                                && !b.swap(true, Ordering::Relaxed)
+                                            {
+                                                members.push(u as u32);
+                                                mv.frontier_pushes(1);
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    ctx.launch_boundary();
+                    if ctx.tid == 0 {
+                        iterations.fetch_add(1, Ordering::Relaxed);
+                        scatter_cursor.store(0, Ordering::Relaxed);
+                    }
+                    round_start = round_end;
+                }
+
+                // Level done: everything queued this level had coreness k.
+                ctx.barrier();
+                if ctx.tid == 0 {
+                    remaining.fetch_sub(frontier.pushed(), Ordering::AcqRel);
+                    frontier.reset();
+                }
+                ctx.barrier();
+                if remaining.load(Ordering::Acquire) == 0 {
+                    done = true;
+                    break;
+                }
+            }
+            if done {
+                break;
+            }
+            // Bucket done: the member list is bucket-local; drop it. The
+            // stamps stay — a binned vertex never re-enters any bucket.
+            if ctx.tid == 0 {
+                members.reset();
+            }
+            ctx.barrier();
+            k_lo = k_hi;
+        }
+    });
+
+    (iterations.load(Ordering::Relaxed), launches)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::{examples, gen};
+
+    #[test]
+    fn g1_matches_paper_walkthrough() {
+        let r = BucketPeel.decompose_with(&examples::g1(), 2, true);
+        assert_eq!(r.core, examples::g1_coreness());
+        // assertion method retained: no atomicAdd corrections ever
+        assert_eq!(r.metrics.atomic_adds, 0);
+    }
+
+    #[test]
+    fn matches_bz_on_random_graphs() {
+        for seed in 0..3 {
+            let g = gen::erdos_renyi(300, 1200, seed);
+            let r = BucketPeel.decompose_with(&g, 4, false);
+            assert_eq!(r.core, bz_coreness(&g), "seed={seed}");
+        }
+    }
+
+    #[test]
+    fn matches_bz_on_powerlaw_and_planted() {
+        let g = gen::barabasi_albert(800, 3, 5);
+        assert_eq!(BucketPeel.decompose_with(&g, 4, false).core, bz_coreness(&g));
+        let g = gen::planted_core(1000, 3000, &[(200, 12), (50, 25)], 7);
+        assert_eq!(BucketPeel.decompose_with(&g, 4, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn clique_chain_exercises_bucket_skips() {
+        // nested cliques span many levels with gaps between them — the
+        // empty-bucket fast path and the dynamic member admission both
+        // fire here
+        let (g, expected) = gen::nested_cliques(4, 3, 4);
+        assert_eq!(BucketPeel.decompose_with(&g, 4, false).core, expected);
+        let (g, expected) = gen::nested_cliques(6, 5, 9);
+        assert_eq!(BucketPeel.decompose_with(&g, 4, false).core, expected);
+    }
+
+    #[test]
+    fn single_thread_works() {
+        let g = gen::rmat(8, 6, 0.57, 0.19, 0.19, 2);
+        assert_eq!(BucketPeel.decompose_with(&g, 1, false).core, bz_coreness(&g));
+    }
+
+    #[test]
+    fn isolated_vertices_terminate() {
+        let mut b = crate::graph::GraphBuilder::new(5);
+        b.add_edge(0, 1);
+        let g = b.build("mostly-isolated");
+        let r = BucketPeel.decompose_with(&g, 2, false);
+        assert_eq!(r.core, vec![1, 1, 0, 0, 0]);
+    }
+
+    #[test]
+    fn scratch_reuse_across_runs_is_clean() {
+        // A dirtied scratch must not leak stamps or residuals into the
+        // next run — this is the flush-path reuse contract.
+        let metrics = Metrics::new(2, false);
+        let mut scratch = BucketScratch::with_capacity(8);
+        let g1 = gen::barabasi_albert(500, 4, 3);
+        let g2 = gen::erdos_renyi(200, 700, 9);
+        for _ in 0..2 {
+            bucket_peel_into(&g1, 2, &metrics, &mut scratch);
+            assert_eq!(scratch.core.to_vec()[..500], bz_coreness(&g1)[..]);
+            // second graph is smaller: buffers must be reused, prefix-reset
+            assert!(scratch.ensure(g2.num_vertices()));
+            bucket_peel_into(&g2, 2, &metrics, &mut scratch);
+            assert_eq!(scratch.core.to_vec()[..200], bz_coreness(&g2)[..]);
+        }
+    }
+
+    #[test]
+    fn fewer_scan_launches_than_peelone_on_high_kmax() {
+        // the point of the buckets: launches track rounds, and member-list
+        // rounds don't shrink, but the planted deep core forces PeelOne
+        // through every level with full-vertex scans while BucketPeel
+        // re-scans only members — equality of results is the hard pin,
+        // the launch comparison documents the mechanism stays bounded
+        let g = gen::planted_core(2000, 5000, &[(100, 40)], 3);
+        let b = BucketPeel.decompose_with(&g, 4, false);
+        let p = crate::core::peel::PeelOne.decompose_with(&g, 4, false);
+        assert_eq!(b.core, p.core);
+        assert!(b.launches <= p.launches + 2 * 64, "b={} p={}", b.launches, p.launches);
+    }
+}

@@ -1,13 +1,19 @@
 //! Peel-paradigm algorithms (bottom-up removal, §II-A Algorithm 1):
 //! the GPP baseline, the proposed PeelOne (assertion method), the
-//! dynamic-frontier SOTA baseline PP-dyn, and the proposed PO-dyn.
+//! dynamic-frontier SOTA baseline PP-dyn, the proposed PO-dyn, the
+//! hierarchical-bucket BucketPeel (theory-practice recompute kernel),
+//! and the sort-free single-k extractor behind the `MEMBERS` fast path.
 
+pub mod bucket;
 pub mod gpp;
 pub mod peelone;
 pub mod podyn;
 pub mod ppdyn;
+pub mod singlek;
 
+pub use bucket::{bucket_peel_into, BucketPeel, BucketScratch};
 pub use gpp::Gpp;
 pub use peelone::PeelOne;
 pub use podyn::PoDyn;
 pub use ppdyn::PpDyn;
+pub use singlek::{live_kcore, single_k, single_k_size, KCoreSet, KCoreSource, LiveView};

@@ -1,0 +1,314 @@
+//! Sort-free single-k extraction (Xiang-style, "Simple linear algorithms
+//! for mining graph cores", PAPERS.md).
+//!
+//! A `MEMBERS k` / k-core-size query needs one level set, not the whole
+//! decomposition: delete vertices with degree `< k`, cascade the degree
+//! drops to a fixpoint, and what survives *is* the k-core — `O(n + m)`
+//! with no bucket sort and no per-level machinery. The extractor runs
+//! against any [`KCoreSource`]; two sources matter in practice:
+//!
+//! * [`CsrGraph`] — the committed, immutable structure;
+//! * [`LiveView`] — the writer's adjacency plus the *pending, uncommitted*
+//!   edit overlay, which is how the serving layer answers `MEMBERS k`
+//!   mid-batch without waiting for (or paying) a flush. The overlay
+//!   coalesces last-wins on canonical endpoints — the same rule
+//!   `service::batch::coalesce` applies at flush time, so a mid-batch
+//!   answer and the post-flush answer agree by construction.
+
+use crate::core::maintenance::{DynamicCore, EdgeEdit};
+use crate::graph::{CsrGraph, VertexId};
+use std::collections::{HashMap, HashSet};
+
+/// Adjacency access for the single-k extractor — implemented by the CSR
+/// snapshot and by the live pending-edit overlay.
+pub trait KCoreSource {
+    fn num_vertices(&self) -> usize;
+
+    /// Visit every neighbor of `v` exactly once.
+    fn for_each_neighbor(&self, v: usize, f: &mut dyn FnMut(VertexId));
+
+    /// Degree of `v`; the default counts neighbors.
+    fn degree(&self, v: usize) -> u32 {
+        let mut d = 0u32;
+        self.for_each_neighbor(v, &mut |_| d += 1);
+        d
+    }
+}
+
+impl KCoreSource for CsrGraph {
+    fn num_vertices(&self) -> usize {
+        CsrGraph::num_vertices(self)
+    }
+
+    fn for_each_neighbor(&self, v: usize, f: &mut dyn FnMut(VertexId)) {
+        for &u in self.neighbors(v as VertexId) {
+            f(u);
+        }
+    }
+
+    fn degree(&self, v: usize) -> u32 {
+        self.neighbors(v as VertexId).len() as u32
+    }
+}
+
+/// Result of one extraction: the k-core as a presence bitmap, with the
+/// size tracked during the peel so counting callers never materialise a
+/// member list.
+#[derive(Clone, Debug)]
+pub struct KCoreSet {
+    k: u32,
+    present: Vec<bool>,
+    size: usize,
+}
+
+impl KCoreSet {
+    pub fn k(&self) -> u32 {
+        self.k
+    }
+
+    /// |k-core| — free, no materialisation.
+    pub fn size(&self) -> usize {
+        self.size
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.size == 0
+    }
+
+    pub fn contains(&self, v: VertexId) -> bool {
+        self.present.get(v as usize).copied().unwrap_or(false)
+    }
+
+    /// Members ascending (allocates once, exactly `size` slots).
+    pub fn members(&self) -> Vec<VertexId> {
+        let mut out = Vec::with_capacity(self.size);
+        out.extend(
+            (0..self.present.len() as VertexId).filter(|&v| self.present[v as usize]),
+        );
+        out
+    }
+
+    /// First `cap` members ascending — the reply-listing path, which
+    /// never needs more than the protocol's cap.
+    pub fn members_capped(&self, cap: usize) -> Vec<VertexId> {
+        (0..self.present.len() as VertexId)
+            .filter(|&v| self.present[v as usize])
+            .take(cap)
+            .collect()
+    }
+}
+
+/// Extract the k-core of `src`: delete every vertex with degree `< k`,
+/// cascading to the fixpoint. `k = 0` is the whole vertex set (isolated
+/// vertices included); `k` above the degeneracy empties out.
+pub fn single_k<S: KCoreSource + ?Sized>(src: &S, k: u32) -> KCoreSet {
+    let n = src.num_vertices();
+    let mut present = vec![true; n];
+    let mut size = n;
+    if k == 0 || n == 0 {
+        return KCoreSet { k, present, size };
+    }
+    let mut deg: Vec<u32> = (0..n).map(|v| src.degree(v)).collect();
+    let mut queue: Vec<VertexId> =
+        (0..n as VertexId).filter(|&v| deg[v as usize] < k).collect();
+    for &v in &queue {
+        present[v as usize] = false;
+    }
+    size -= queue.len();
+    while let Some(v) = queue.pop() {
+        src.for_each_neighbor(v as usize, &mut |u| {
+            let u = u as usize;
+            if present[u] {
+                deg[u] -= 1;
+                if deg[u] < k {
+                    present[u] = false;
+                    size -= 1;
+                    queue.push(u as VertexId);
+                }
+            }
+        });
+    }
+    KCoreSet { k, present, size }
+}
+
+/// Counting variant: |k-core| without touching a member list.
+pub fn single_k_size<S: KCoreSource + ?Sized>(src: &S, k: u32) -> usize {
+    single_k(src, k).size()
+}
+
+/// The writer's adjacency with the pending edit queue layered on top —
+/// the structure a flush *would* commit, viewed without committing it.
+///
+/// Inserts not present in the base adjacency land in a per-vertex extra
+/// list (growing the vertex set when an edit names an unseen id, exactly
+/// like `DynamicCore::ensure_vertex` at flush); deletes of present edges
+/// land in a removed set consulted per arc. Edits that no-op against the
+/// base (duplicate inserts, deletes of absent edges, self-loops) are
+/// dropped, mirroring the flush path.
+pub struct LiveView<'a> {
+    dc: &'a DynamicCore,
+    extra: HashMap<VertexId, Vec<VertexId>>,
+    removed: HashSet<(VertexId, VertexId)>,
+    n: usize,
+}
+
+impl<'a> LiveView<'a> {
+    pub fn new(dc: &'a DynamicCore, pending: &[EdgeEdit]) -> Self {
+        let base_n = dc.num_vertices();
+        // last-wins per canonical endpoint pair (= service::batch::coalesce)
+        let mut last: HashMap<(VertexId, VertexId), bool> = HashMap::new();
+        for e in pending {
+            let (a, b) = e.endpoints();
+            if a == b {
+                continue;
+            }
+            last.insert((a, b), e.is_insert());
+        }
+        let mut n = base_n;
+        let mut extra: HashMap<VertexId, Vec<VertexId>> = HashMap::new();
+        let mut removed: HashSet<(VertexId, VertexId)> = HashSet::new();
+        for ((a, b), insert) in last {
+            let exists = (b as usize) < base_n && dc.has_edge(a, b);
+            if insert && !exists {
+                extra.entry(a).or_default().push(b);
+                extra.entry(b).or_default().push(a);
+                n = n.max(b as usize + 1);
+            } else if !insert && exists {
+                removed.insert((a, b));
+            }
+        }
+        LiveView {
+            dc,
+            extra,
+            removed,
+            n,
+        }
+    }
+}
+
+impl KCoreSource for LiveView<'_> {
+    fn num_vertices(&self) -> usize {
+        self.n
+    }
+
+    fn for_each_neighbor(&self, v: usize, f: &mut dyn FnMut(VertexId)) {
+        let vv = v as VertexId;
+        if v < self.dc.num_vertices() {
+            for &u in self.dc.neighbors(vv) {
+                if self.removed.is_empty() || !self.removed.contains(&(vv.min(u), vv.max(u)))
+                {
+                    f(u);
+                }
+            }
+        }
+        if let Some(ex) = self.extra.get(&vv) {
+            for &u in ex {
+                f(u);
+            }
+        }
+    }
+}
+
+/// The `MEMBERS k` fast path: the k-core of the live graph (writer
+/// adjacency + pending edits), one `O(n + m)` pass, no decomposition.
+pub fn live_kcore(dc: &DynamicCore, pending: &[EdgeEdit], k: u32) -> KCoreSet {
+    single_k(&LiveView::new(dc, pending), k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::core::bz::bz_coreness;
+    use crate::graph::{examples, gen, GraphBuilder};
+
+    /// Oracle: members from a full decomposition.
+    fn bz_members(g: &CsrGraph, k: u32) -> Vec<VertexId> {
+        bz_coreness(g)
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c >= k)
+            .map(|(v, _)| v as VertexId)
+            .collect()
+    }
+
+    #[test]
+    fn matches_full_decomposition_across_k() {
+        let g = gen::barabasi_albert(400, 4, 7);
+        let kmax = *bz_coreness(&g).iter().max().unwrap();
+        for k in 0..=kmax + 2 {
+            let s = single_k(&g, k);
+            assert_eq!(s.members(), bz_members(&g, k), "k={k}");
+            assert_eq!(s.size(), bz_members(&g, k).len(), "k={k}");
+            assert_eq!(single_k_size(&g, k), s.size(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn k_zero_includes_isolated_vertices() {
+        let mut b = GraphBuilder::new(5);
+        b.add_edge(0, 1);
+        let g = b.build("mostly-isolated");
+        let s = single_k(&g, 0);
+        assert_eq!(s.members(), vec![0, 1, 2, 3, 4]);
+        assert_eq!(single_k(&g, 1).members(), vec![0, 1]);
+        assert!(single_k(&g, 2).is_empty());
+    }
+
+    #[test]
+    fn capped_listing_is_a_prefix() {
+        let g = examples::g1();
+        let s = single_k(&g, 2);
+        assert_eq!(s.members(), vec![2, 3, 4, 5]);
+        assert_eq!(s.members_capped(2), vec![2, 3]);
+        assert!(s.contains(3) && !s.contains(0));
+    }
+
+    #[test]
+    fn live_overlay_matches_flushed_graph() {
+        let g = examples::g1();
+        let dc = DynamicCore::new(&g);
+        let pending = [
+            EdgeEdit::Insert(2, 5),  // closes K4 over {2,3,4,5}
+            EdgeEdit::Delete(0, 5),  // prunes a 1-core arc
+            EdgeEdit::Insert(2, 5),  // duplicate: no-op
+            EdgeEdit::Insert(1, 1),  // self-loop: no-op
+            EdgeEdit::Insert(7, 8),  // grows the vertex set
+            EdgeEdit::Delete(8, 9),  // absent edge: no-op (but grows ids seen)
+        ];
+        let mut flushed = DynamicCore::new(&g);
+        flushed.ensure_vertex(8);
+        flushed.apply_batch(&pending);
+        let fg = flushed.snapshot();
+        let kmax = *bz_coreness(&fg).iter().max().unwrap();
+        for k in 0..=kmax + 1 {
+            let live = live_kcore(&dc, &pending, k);
+            let want = bz_members(&fg, k);
+            assert_eq!(live.members(), want, "k={k}");
+            assert_eq!(live.size(), want.len(), "k={k}");
+        }
+    }
+
+    #[test]
+    fn live_overlay_insert_then_delete_coalesces_last_wins() {
+        let g = examples::g1();
+        let dc = DynamicCore::new(&g);
+        // inserted then deleted before the flush: must not appear
+        let pending = [EdgeEdit::Insert(2, 5), EdgeEdit::Delete(2, 5)];
+        let live = live_kcore(&dc, &pending, 2);
+        assert_eq!(live.members(), bz_members(&g, 2));
+        // deleted then re-inserted: must still appear
+        let pending = [EdgeEdit::Delete(3, 4), EdgeEdit::Insert(3, 4)];
+        let live = live_kcore(&dc, &pending, 2);
+        assert_eq!(live.members(), bz_members(&g, 2));
+    }
+
+    #[test]
+    fn empty_and_oversized_k() {
+        let g = GraphBuilder::new(0).build("empty");
+        assert!(single_k(&g, 0).members().is_empty());
+        assert!(single_k(&g, 3).is_empty());
+        let g = examples::complete(4);
+        assert!(single_k(&g, 4).is_empty(), "k above degeneracy empties");
+        assert_eq!(single_k(&g, 3).size(), 4);
+    }
+}

@@ -58,6 +58,12 @@ impl WorkList {
         self.tail.load(Ordering::Acquire)
     }
 
+    /// Maximum pushes between resets (fixed at construction). Lets a
+    /// scratch holder decide whether an old list can serve a new graph.
+    pub fn capacity(&self) -> usize {
+        self.buf.len()
+    }
+
     /// Read a published item by index (BSP use: `i < pushed()` and a
     /// barrier separates the pushing launch from the reading launch).
     #[inline]

@@ -9,22 +9,26 @@
 //! Self-loop edits are dropped outright (simple graphs only).
 //!
 //! **Crossover.** Incremental maintenance pays a subcore-cascade per edit;
-//! a full recompute pays one `Decomposer` run regardless of batch size.
-//! The incremental path wins for small batches and loses once the batch
-//! is a few percent of |E| — the same shape as the paper's Table VII
-//! peel-vs-index2core crossover, and like it, host-dependent. The default
-//! [`BatchConfig::recompute_fraction`] comes from
-//! `benches/serve_throughput.rs` (run it to recalibrate on a new host;
-//! ROADMAP tracks the tuning follow-up). The recompute path itself picks
-//! PeelOne/HistoCore through [`Hybrid`].
+//! a full recompute pays one kernel run regardless of batch size. The
+//! incremental path wins for small batches and loses once the batch is a
+//! few percent of |E| — the same shape as the paper's Table VII
+//! peel-vs-index2core crossover, and like it, host-dependent. The
+//! decision is made against *measured* costs: every flush feeds
+//! [`CrossoverCosts`] (per-edit ns on the incremental path, per-edge ns
+//! on the recompute path, EWMA-smoothed), and once both sides are warm
+//! the threshold sits at their break-even point. Until then the static
+//! [`BatchConfig::recompute_fraction`] calibration from
+//! `benches/serve_throughput.rs` applies. The recompute itself runs the
+//! hierarchical-bucket peel ([`crate::core::peel::BucketPeel`]) against
+//! the index's persistent [`crate::core::peel::BucketScratch`], so a
+//! steady flush load allocates nothing per recompute.
 
 use super::index::{CoreIndex, CoreSnapshot};
 use crate::core::maintenance::EdgeEdit;
-use crate::core::traits::Decomposer;
-use crate::core::Hybrid;
 use crate::obs::{self, names};
 use crate::util::timer::Timer;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -69,10 +73,78 @@ pub fn default_recompute_fraction() -> f64 {
 
 impl BatchConfig {
     /// Coalesced-batch size at which recompute takes over, for a graph
-    /// with `num_edges` edges.
+    /// with `num_edges` edges — the *static* (cold-start) calibration.
     pub fn recompute_threshold(&self, num_edges: u64) -> usize {
         let frac = (self.recompute_fraction * num_edges as f64).ceil() as usize;
         frac.max(self.min_recompute_edits)
+    }
+}
+
+/// Measured crossover costs for one index: EWMA of the incremental
+/// path's cost per applied edit and the bucket recompute's cost per
+/// edge, fed by every flush this index runs. Once both sides are warm,
+/// recompute wins when `edits · ns_per_edit ≥ |E| · ns_per_edge`; the
+/// break-even batch size replaces the static fraction. Values are f64
+/// bit patterns in atomics — readers never lock, and a lost racing
+/// update only drops one EWMA sample.
+#[derive(Debug, Default)]
+pub struct CrossoverCosts {
+    incr_ns_per_edit: AtomicU64,
+    rec_ns_per_edge: AtomicU64,
+}
+
+impl CrossoverCosts {
+    /// EWMA smoothing weight for new samples.
+    const ALPHA: f64 = 0.25;
+
+    fn fold(cell: &AtomicU64, sample: f64) {
+        if !sample.is_finite() || sample <= 0.0 {
+            return;
+        }
+        let old = f64::from_bits(cell.load(Ordering::Relaxed));
+        let new = if old > 0.0 {
+            old + Self::ALPHA * (sample - old)
+        } else {
+            sample
+        };
+        cell.store(new.to_bits(), Ordering::Relaxed);
+    }
+
+    /// Record an incremental batch: `applied` edits took `elapsed`.
+    pub fn observe_incremental(&self, applied: usize, elapsed: Duration) {
+        if applied > 0 {
+            Self::fold(
+                &self.incr_ns_per_edit,
+                elapsed.as_nanos() as f64 / applied as f64,
+            );
+        }
+    }
+
+    /// Record a bucket recompute over a graph of `num_edges` edges.
+    pub fn observe_recompute(&self, num_edges: u64, elapsed: Duration) {
+        if num_edges > 0 {
+            Self::fold(
+                &self.rec_ns_per_edge,
+                elapsed.as_nanos() as f64 / num_edges as f64,
+            );
+        }
+    }
+
+    /// Break-even batch size for a graph with `num_edges` edges, or
+    /// `None` while either side is still unmeasured (cold start — the
+    /// static calibration applies).
+    pub fn measured_threshold(&self, num_edges: u64) -> Option<usize> {
+        let e = f64::from_bits(self.incr_ns_per_edit.load(Ordering::Relaxed));
+        let r = f64::from_bits(self.rec_ns_per_edge.load(Ordering::Relaxed));
+        (e > 0.0 && r > 0.0).then(|| (num_edges as f64 * r / e).ceil() as usize)
+    }
+
+    /// The effective crossover expressed as a fraction of |E| — what the
+    /// bench tables report next to the static calibration.
+    pub fn effective_fraction(&self, num_edges: u64) -> Option<f64> {
+        self.measured_threshold(num_edges)
+            .filter(|_| num_edges > 0)
+            .map(|t| t as f64 / num_edges as f64)
     }
 }
 
@@ -126,16 +198,23 @@ pub fn apply_batch(index: &CoreIndex, edits: &[EdgeEdit], cfg: &BatchConfig) -> 
     let timer = Timer::start();
     let batch = coalesce(edits);
     let applied = batch.len();
+    let costs = index.crossover_costs();
     let ((changed, recomputed), snapshot) = index.update(|dc| {
         for e in &batch {
             let (_, hi) = e.endpoints();
             dc.ensure_vertex(hi);
         }
-        let threshold = cfg.recompute_threshold(dc.num_edges());
+        // Measured break-even when warm, static calibration when cold;
+        // the floor always applies.
+        let num_edges = dc.num_edges();
+        let threshold = costs
+            .measured_threshold(num_edges)
+            .map(|t| t.max(cfg.min_recompute_edits))
+            .unwrap_or_else(|| cfg.recompute_threshold(num_edges));
         if applied >= threshold {
-            // Structural edits + one from-scratch run of the fastest
-            // decomposer — the paper's full-recompute engines serving as
-            // the maintenance fallback.
+            // Structural edits + one from-scratch bucket-peel run against
+            // the index's persistent scratch — the flush-time recompute
+            // hot path.
             let mut changed = 0usize;
             for &e in &batch {
                 let did = match e {
@@ -146,10 +225,15 @@ pub fn apply_batch(index: &CoreIndex, edits: &[EdgeEdit], cfg: &BatchConfig) -> 
                     changed += 1;
                 }
             }
-            dc.recompute_with(&Hybrid::default(), cfg.threads);
+            let t0 = Instant::now();
+            dc.recompute_bucket(cfg.threads, &mut index.recompute_scratch());
+            costs.observe_recompute(dc.num_edges(), t0.elapsed());
             (changed, true)
         } else {
-            (dc.apply_batch(&batch), false)
+            let t0 = Instant::now();
+            let changed = dc.apply_batch(&batch);
+            costs.observe_incremental(applied, t0.elapsed());
+            (changed, false)
         }
     });
     if recomputed {
@@ -219,6 +303,13 @@ impl EditQueue {
 
     pub fn pending(&self) -> usize {
         self.pending.lock().unwrap().len()
+    }
+
+    /// Clone the queued edits in submission order — the `MEMBERS` fast
+    /// path overlays them on the live structure to answer single-k
+    /// queries mid-batch without forcing a flush.
+    pub fn pending_edits(&self) -> Vec<EdgeEdit> {
+        self.pending.lock().unwrap().clone()
     }
 
     /// Drain the queue and apply it as one batch (publishes one epoch).

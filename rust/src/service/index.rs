@@ -19,11 +19,13 @@
 //! lazily and caches it per epoch, serialising with writers (documented
 //! as the one heavyweight read).
 
+use super::batch::CrossoverCosts;
 use crate::core::maintenance::DynamicCore;
+use crate::core::peel::BucketScratch;
 use crate::graph::CsrGraph;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex, RwLock};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
 
 /// An immutable, epoch-stamped view of one graph's core decomposition.
 #[derive(Clone, Debug)]
@@ -63,6 +65,12 @@ pub struct CoreIndex {
     epoch: AtomicU64,
     /// Per-epoch CSR rebuild cache for structure queries.
     graph_cache: Mutex<Option<(u64, Arc<CsrGraph>)>>,
+    /// Flush-time recompute working set (bucket-peel scratch), persistent
+    /// across epochs so steady flush load allocates nothing per recompute.
+    recompute_scratch: Mutex<BucketScratch>,
+    /// Measured per-edit / per-edge flush costs feeding the crossover
+    /// decision (`service::batch`).
+    costs: CrossoverCosts,
 }
 
 impl CoreIndex {
@@ -87,6 +95,8 @@ impl CoreIndex {
             published: RwLock::new(snap),
             epoch: AtomicU64::new(epoch),
             graph_cache: Mutex::new(None),
+            recompute_scratch: Mutex::new(BucketScratch::with_capacity(0)),
+            costs: CrossoverCosts::default(),
         }
     }
 
@@ -145,6 +155,19 @@ impl CoreIndex {
     pub fn graph(&self) -> Arc<CsrGraph> {
         let dc = self.writer.lock().unwrap();
         self.graph_locked(&dc)
+    }
+
+    /// The recompute scratch, locked. Held only around a
+    /// [`DynamicCore::recompute_bucket`] call inside [`Self::update`];
+    /// its own mutex (not the writer lock) so a bench or test can warm
+    /// it without publishing an epoch.
+    pub fn recompute_scratch(&self) -> MutexGuard<'_, BucketScratch> {
+        self.recompute_scratch.lock().unwrap()
+    }
+
+    /// Measured flush-path costs for this index (crossover input).
+    pub fn crossover_costs(&self) -> &CrossoverCosts {
+        &self.costs
     }
 
     /// Run a read-only closure against the writer structure — for O(1)

@@ -5,10 +5,11 @@
 //! Everything here except [`densest_core`] runs against one immutable
 //! [`CoreSnapshot`] and therefore never blocks on writers. Densest-core
 //! extraction needs the adjacency; it takes a consistent (snapshot,
-//! graph) pair from the index and reuses [`CoreHierarchy`].
+//! graph) pair from the index and scans by counting (suffix sums over
+//! per-coreness vertex and edge tallies), materialising only the
+//! winning core.
 
 use super::index::{CoreIndex, CoreSnapshot};
-use crate::analysis::CoreHierarchy;
 use crate::graph::{CsrGraph, VertexId};
 
 impl CoreSnapshot {
@@ -26,6 +27,17 @@ impl CoreSnapshot {
     pub fn kcore_members(&self, k: u32) -> Vec<VertexId> {
         (0..self.core.len() as VertexId)
             .filter(|&v| self.core[v as usize] >= k)
+            .collect()
+    }
+
+    /// First `cap` members of the k-core, ascending — the reply-listing
+    /// path, which never needs more than the protocol's cap. Size-only
+    /// callers should use [`Self::kcore_size`] instead; neither walks
+    /// the full membership into a |V|-sized list.
+    pub fn kcore_members_capped(&self, k: u32, cap: usize) -> Vec<VertexId> {
+        (0..self.core.len() as VertexId)
+            .filter(|&v| self.core[v as usize] >= k)
+            .take(cap)
             .collect()
     }
 
@@ -58,10 +70,12 @@ pub struct DensestCore {
     pub members: Vec<VertexId>,
 }
 
-/// Extract the densest core: scan k = 1..=k_max, extracting each k-core
-/// subgraph (via [`CoreHierarchy`]) and keeping the max-density one.
-/// Serialises with writers (needs the adjacency); the scan is
-/// O(k_max · (|V| + |E|)).
+/// Extract the densest core by counting, not materialising: every
+/// k-core's size and edge count fall out of two suffix sums (vertices
+/// with coreness ≥ k; edges whose endpoint-coreness minimum is ≥ k), so
+/// the whole k = 0..=k_max scan is O(|V| + |E| + k_max) and only the
+/// winning core's members are ever listed. Serialises with writers
+/// (needs the adjacency for the edge counts).
 pub fn densest_core(index: &CoreIndex) -> DensestCore {
     let (snap, g) = index.consistent_view();
     densest_core_view(&snap, &g)
@@ -71,9 +85,24 @@ pub fn densest_core(index: &CoreIndex) -> DensestCore {
 /// entry point for backends that assemble their view differently (e.g. a
 /// [`crate::shard::ShardedIndex`]'s merged snapshot + assembled graph).
 pub fn densest_core_view(snap: &CoreSnapshot, g: &CsrGraph) -> DensestCore {
-    let h = CoreHierarchy::from_coreness(snap.core.clone());
-    // base case (k = 0): the whole graph, members listed so the fields
-    // stay mutually consistent even when no k-core beats it
+    let k_max = snap.k_max as usize;
+    // vcnt[j] = vertices with coreness exactly j; ecnt[j] = edges whose
+    // smaller endpoint-coreness is exactly j. An edge survives in the
+    // k-core iff min(core(u), core(v)) >= k, so suffix sums over both
+    // arrays give every k-core's |V| and |E| in one pass each.
+    let mut vcnt = vec![0u64; k_max + 1];
+    for &c in &snap.core {
+        vcnt[c as usize] += 1;
+    }
+    let mut ecnt = vec![0u64; k_max + 1];
+    for u in 0..g.num_vertices() as VertexId {
+        let cu = snap.core[u as usize];
+        for &v in g.neighbors(u) {
+            if u < v {
+                ecnt[cu.min(snap.core[v as usize]) as usize] += 1;
+            }
+        }
+    }
     let mut best = DensestCore {
         epoch: snap.epoch,
         k: 0,
@@ -84,27 +113,34 @@ pub fn densest_core_view(snap: &CoreSnapshot, g: &CsrGraph) -> DensestCore {
         } else {
             g.num_edges() as f64 / g.num_vertices() as f64
         },
-        members: (0..g.num_vertices() as VertexId).collect(),
+        members: Vec::new(),
     };
+    // walk k ascending, peeling the suffix sums down as k rises; ties
+    // promote the deeper core — a k-core and (k+1)-core can be the same
+    // vertex set, and the larger k is the sharper label
+    let mut vertices: u64 = snap.core.len() as u64;
+    let mut edges: u64 = g.num_edges();
     for k in 1..=snap.k_max {
-        let (sub, members) = h.extract_k_core(g, k);
-        if sub.num_vertices() == 0 {
+        vertices -= vcnt[k as usize - 1];
+        edges -= ecnt[k as usize - 1];
+        if vertices == 0 {
             continue;
         }
-        // ties promote the deeper core: a k-core and (k+1)-core can be
-        // the same vertex set, and the larger k is the sharper label
-        let density = sub.num_edges() as f64 / sub.num_vertices() as f64;
+        let density = edges as f64 / vertices as f64;
         if density >= best.density {
             best = DensestCore {
                 epoch: snap.epoch,
                 k,
-                vertices: sub.num_vertices(),
-                edges: sub.num_edges(),
+                vertices: vertices as usize,
+                edges,
                 density,
-                members,
+                members: Vec::new(),
             };
         }
     }
+    // materialise members once, for the winner only (k = 0 lists the
+    // whole vertex set so the fields stay mutually consistent)
+    best.members = snap.kcore_members(best.k);
     best
 }
 

@@ -26,7 +26,7 @@
 //! | `EPOCH` | `OK epoch=<e>` |
 //! | `CORENESS <v>` | `OK core=<c> epoch=<e>` |
 //! | `DEGENERACY` | `OK degeneracy=<k> epoch=<e>` |
-//! | `MEMBERS <k>` | `OK count=<n> epoch=<e> members=<v,v,...>` (capped) |
+//! | `MEMBERS <k>` | `OK count=<n> epoch=<e> members=<v,v,...>` (capped). With edits pending on a single-index graph, answered from the live structure + pending overlay via the sort-free single-k extractor ([`crate::core::peel::single_k`]) — one `O(n+m)` pass, no decomposition, no flush; the reply then reflects the queued edits before any epoch publishes them |
 //! | `HISTO` | `OK epoch=<e> histo=<k>:<count>,...` |
 //! | `DENSEST` | `OK k=<k> vertices=<n> edges=<m> density=<d> epoch=<e>` |
 //! | `SHARDS` | deprecated alias for `CLUSTER TOPOLOGY` (byte-identical reply; kept for old tooling, see [`crate::net::conn::CLUSTER_ALIASES`]) |
@@ -191,6 +191,7 @@ use super::index::{CoreIndex, CoreSnapshot};
 use super::queries::densest_core_view;
 use crate::cluster::{ClusterIndex, ShardHost};
 use crate::core::maintenance::EdgeEdit;
+use crate::core::peel::live_kcore;
 use crate::graph::CsrGraph;
 use crate::net::conn::{code, err_reply, Handler, CLUSTER_SUBVERBS};
 use crate::net::{codec, NetConfig};
@@ -806,17 +807,39 @@ impl CoreService {
                         let Some(Ok(k)) = args.first().map(|a| a.parse::<u32>()) else {
                             return "ERR usage: MEMBERS <k>".into();
                         };
+                        // Mid-batch fast path: with edits queued the
+                        // committed snapshot is stale, so answer from the
+                        // live structure + pending overlay via the
+                        // sort-free single-k extractor — one O(n+m) pass,
+                        // no decomposition, no flush. Racing a concurrent
+                        // flush is benign: already-applied overlay edits
+                        // classify as no-ops against the base adjacency.
+                        if let Backend::Single { index, queue } = &backend {
+                            let edits = queue.pending_edits();
+                            if !edits.is_empty() {
+                                let set =
+                                    index.with_dynamic(|dc| live_kcore(dc, &edits, k));
+                                let listed: Vec<String> = set
+                                    .members_capped(MAX_REPLY_MEMBERS)
+                                    .into_iter()
+                                    .map(|v| v.to_string())
+                                    .collect();
+                                return format!(
+                                    "OK count={} epoch={} members={}",
+                                    set.size(),
+                                    index.epoch(),
+                                    listed.join(",")
+                                );
+                            }
+                        }
                         let s = backend.snapshot();
                         // count + capped listing without materialising the
                         // full membership (|V|-sized per request otherwise)
                         let count = s.kcore_size(k);
                         let listed: Vec<String> = s
-                            .core
-                            .iter()
-                            .enumerate()
-                            .filter(|&(_, &c)| c >= k)
-                            .take(MAX_REPLY_MEMBERS)
-                            .map(|(v, _)| v.to_string())
+                            .kcore_members_capped(k, MAX_REPLY_MEMBERS)
+                            .into_iter()
+                            .map(|v| v.to_string())
                             .collect();
                         format!(
                             "OK count={} epoch={} members={}",
@@ -1652,6 +1675,38 @@ mod tests {
         let stats = svc.handle_command(&mut s, "STATS", 0);
         assert!(stats.contains("edits=1"), "{stats}");
         assert!(stats.contains("batches=1"), "{stats}");
+    }
+
+    #[test]
+    fn members_fast_path_lockstep_with_flush() {
+        // MEMBERS answered mid-batch (edits queued, epoch not yet
+        // advanced) must agree with the post-flush answer on count and
+        // member list — only the epoch may differ
+        let (svc, mut s) = service_with_g1();
+        // closing (2,5) turns {2,3,4,5} into a K4: a 3-core appears
+        assert_eq!(svc.handle_command(&mut s, "INSERT 2 5", 0), "OK pending=1");
+        assert_eq!(
+            svc.handle_command(&mut s, "MEMBERS 3", 0),
+            "OK count=4 epoch=0 members=2,3,4,5",
+            "mid-batch fast path must see the pending insert"
+        );
+        svc.handle_command(&mut s, "FLUSH", 0);
+        assert_eq!(
+            svc.handle_command(&mut s, "MEMBERS 3", 0),
+            "OK count=4 epoch=1 members=2,3,4,5"
+        );
+        // and the other direction: a pending delete empties the 3-core
+        assert_eq!(svc.handle_command(&mut s, "DELETE 2 3", 0), "OK pending=1");
+        assert_eq!(
+            svc.handle_command(&mut s, "MEMBERS 3", 0),
+            "OK count=0 epoch=1 members=",
+            "mid-batch fast path must see the pending delete"
+        );
+        svc.handle_command(&mut s, "FLUSH", 0);
+        assert_eq!(
+            svc.handle_command(&mut s, "MEMBERS 3", 0),
+            "OK count=0 epoch=2 members="
+        );
     }
 
     #[test]

@@ -36,7 +36,6 @@
 
 use crate::core::hindex::{hindex_capped, HindexScratch};
 use crate::core::maintenance::EdgeEdit;
-use crate::core::Hybrid;
 use crate::graph::VertexId;
 use crate::service::batch::BatchConfig;
 use crate::service::index::CoreIndex;
@@ -553,14 +552,22 @@ impl ShardBackend for LocalShard {
             };
             local_edits.push((local, primary));
         }
-        // same crossover policy as `service::batch::apply_batch`
+        // same crossover policy as `service::batch::apply_batch`:
+        // measured break-even when warm, static calibration when cold,
+        // bucket-peel recompute against the shard index's scratch
         let last_local = st.globals.len().checked_sub(1).map(|l| l as u32);
         let cfg = &self.cfg;
+        let index = &self.index;
+        let costs = index.crossover_costs();
         let ((changed, recomputed), _snap) = self.index.update(|dc| {
             if let Some(last) = last_local {
                 dc.ensure_vertex(last);
             }
-            let threshold = cfg.recompute_threshold(dc.num_edges());
+            let num_edges = dc.num_edges();
+            let threshold = costs
+                .measured_threshold(num_edges)
+                .map(|t| t.max(cfg.min_recompute_edits))
+                .unwrap_or_else(|| cfg.recompute_threshold(num_edges));
             let mut changed = 0usize;
             if !local_edits.is_empty() && local_edits.len() >= threshold {
                 for &(e, primary) in &local_edits {
@@ -572,14 +579,18 @@ impl ShardBackend for LocalShard {
                         changed += 1;
                     }
                 }
-                dc.recompute_with(&Hybrid::default(), cfg.threads);
+                let t0 = std::time::Instant::now();
+                dc.recompute_bucket(cfg.threads, &mut index.recompute_scratch());
+                costs.observe_recompute(dc.num_edges(), t0.elapsed());
                 (changed, true)
             } else {
+                let t0 = std::time::Instant::now();
                 for &(e, primary) in &local_edits {
                     if dc.apply(e) && primary {
                         changed += 1;
                     }
                 }
+                costs.observe_incremental(local_edits.len(), t0.elapsed());
                 (changed, false)
             }
         });
@@ -852,12 +863,13 @@ impl ShardBackend for LocalShard {
         // structural-edit + recompute pipeline as a bulk apply.
         let last_local = st.globals.len() as u32 - 1;
         let threads = self.cfg.threads;
+        let index = &self.index;
         self.index.update(|dc| {
             dc.ensure_vertex(last_local);
             for &(lu, lv) in &splice {
                 dc.insert_edge_structural(lu, lv);
             }
-            dc.recompute_with(&Hybrid::default(), threads);
+            dc.recompute_bucket(threads, &mut index.recompute_scratch());
         });
         // Committed coreness follows the vertices; a never-committed
         // shard stays never-committed (the post-move refinement pass

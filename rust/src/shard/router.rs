@@ -140,6 +140,27 @@ pub fn reassign(owner: &mut [u32], vertices: &[VertexId], to: u32) -> Result<usi
     Ok(moved)
 }
 
+/// Fan-out read over the shard backends — the per-shard single-k
+/// primitive: each shard lists its owned k-core members from committed
+/// refined state (no decomposition runs anywhere), and the partials
+/// merge into the global ascending membership list. Returns the minimum
+/// cluster epoch among the partials so callers can detect a read that
+/// straddled an in-flight commit.
+pub fn members_merged(
+    backends: &[Arc<dyn ShardBackend>],
+    k: u32,
+) -> Result<(Vec<VertexId>, u64)> {
+    let mut out = Vec::new();
+    let mut epoch = u64::MAX;
+    for b in backends {
+        let (members, ce) = b.members_partial(k)?;
+        out.extend(members);
+        epoch = epoch.min(ce);
+    }
+    out.sort_unstable();
+    Ok((out, if epoch == u64::MAX { 0 } else { epoch }))
+}
+
 /// One exchange round on every shard, dirty sweeps running concurrently.
 /// `threads` bounds the worker count (1 falls back to in-place calls).
 fn round_all(

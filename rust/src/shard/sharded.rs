@@ -35,7 +35,7 @@
 
 use super::backend::{LocalShard, ShardBackend};
 use super::partition::{partition, PartitionStrategy};
-use super::router::{refine, refine_traced, route, MergeStats, RefineOutcome};
+use super::router::{members_merged, refine, refine_traced, route, MergeStats, RefineOutcome};
 use crate::core::maintenance::EdgeEdit;
 use crate::graph::{CsrGraph, GraphBuilder, VertexId};
 use crate::obs::{self, FlushStages, FlushTrace, Span};
@@ -203,9 +203,15 @@ impl ShardedIndex {
         Some(p.views[owner].core[i])
     }
 
-    /// Fan-out + merge: per-shard k-core members, merged into the global
-    /// ascending membership list.
+    /// Fan-out + merge through the router's per-shard members primitive
+    /// ([`members_merged`]): each shard lists its owned members from
+    /// committed refined state — no decomposition runs anywhere. Falls
+    /// back to the published views should a backend read fail (local
+    /// shards never do).
     pub fn kcore_members(&self, k: u32) -> Vec<VertexId> {
+        if let Ok((members, _)) = members_merged(&self.backends, k) {
+            return members;
+        }
         let p = self.published();
         let mut out: Vec<VertexId> = Vec::new();
         for view in &p.views {

@@ -1,8 +1,9 @@
 //! Cross-algorithm conformance suite: every decomposition algorithm ×
 //! every generator family × the BZ oracle × the structural invariants.
 //!
-//! The eight engines (BZ, PeelOne, GPP, PO-dyn, PP-dyn, NbrCore, CntCore,
-//! HistoCore) are resolved through the coordinator registry — the same
+//! The nine engines (BZ, PeelOne, GPP, PO-dyn, PP-dyn, BucketPeel,
+//! NbrCore, CntCore, HistoCore) are resolved through the coordinator
+//! registry — the same
 //! construction path `pico run` uses — and run over one representative
 //! graph per `graph::gen` family plus the degenerate shapes (empty,
 //! single-vertex, all-isolated, star, clique, path). Each result must
@@ -22,13 +23,15 @@ use pico::core::verify::check_invariants;
 use pico::core::Decomposer;
 use pico::graph::{examples, gen, CsrGraph, GraphBuilder};
 
-/// The paper's eight decomposition algorithms (registry names).
-const ALGORITHMS: [&str; 8] = [
+/// The paper's eight decomposition algorithms plus the theory-practice
+/// hierarchical-bucket recompute kernel (registry names).
+const ALGORITHMS: [&str; 9] = [
     "BZ",
     "PeelOne",
     "GPP",
     "PO-dyn",
     "PP-dyn",
+    "BucketPeel",
     "NbrCore",
     "CntCore",
     "HistoCore",
@@ -106,5 +109,32 @@ fn metrics_runs_do_not_change_results() {
         let algo = algorithm_by_name(name).expect(name);
         let r = algo.decompose_with(&g, 2, true);
         assert_eq!(r.core, oracle, "{name} with metrics enabled");
+    }
+}
+
+#[test]
+fn single_k_matches_bz_members_on_all_families() {
+    // the sort-free single-k extractor (not a registry Decomposer — it
+    // answers one k, not all) must agree with the oracle's k-core at
+    // every k, including k = 0 (whole vertex set) and k > degeneracy
+    // (empty), on every family and degenerate shape above
+    use pico::core::peel::{single_k, single_k_size};
+    for g in conformance_graphs() {
+        let oracle = bz_coreness(&g);
+        let k_max = oracle.iter().copied().max().unwrap_or(0);
+        for k in 0..=k_max + 2 {
+            let expected: Vec<u32> = (0..g.num_vertices() as u32)
+                .filter(|&v| oracle[v as usize] >= k)
+                .collect();
+            let set = single_k(&g, k);
+            assert_eq!(set.members(), expected, "single_k({k}) on '{}'", g.name);
+            assert_eq!(set.size(), expected.len(), "size({k}) on '{}'", g.name);
+            assert_eq!(
+                single_k_size(&g, k),
+                expected.len(),
+                "single_k_size({k}) on '{}'",
+                g.name
+            );
+        }
     }
 }

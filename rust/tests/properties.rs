@@ -82,6 +82,7 @@ fn prop_all_peel_algorithms_match_bz() {
             ("PeelOne", peel::PeelOne.decompose_with(&g, 2, false)),
             ("PP-dyn", peel::PpDyn.decompose_with(&g, 2, false)),
             ("PO-dyn", peel::PoDyn.decompose_with(&g, 2, false)),
+            ("BucketPeel", peel::BucketPeel.decompose_with(&g, 2, false)),
         ] {
             if r.core != expected {
                 return Err(format!("{name}: got {:?}, want {expected:?}", r.core));
@@ -209,6 +210,33 @@ fn prop_builder_is_canonical() {
     // builder output passes full CSR validation whatever the input order
     assert_prop::<RandGraph>(&cfg(80, 29), "CSR canonical", |rg| {
         rg.build().validate()
+    });
+}
+
+#[test]
+fn prop_single_k_matches_bz_derived_members() {
+    // the sort-free extractor's k-core == {v : bz coreness(v) >= k} at
+    // every k from 0 (whole vertex set) through degeneracy + 2 (empty)
+    assert_prop::<RandGraph>(&cfg(60, 37), "single_k == BZ members", |rg| {
+        let g = rg.build();
+        let core = bz_coreness(&g);
+        let k_max = core.iter().copied().max().unwrap_or(0);
+        for k in 0..=k_max + 2 {
+            let expected: Vec<u32> = (0..g.num_vertices() as u32)
+                .filter(|&v| core[v as usize] >= k)
+                .collect();
+            let set = peel::single_k(&g, k);
+            if set.members() != expected {
+                return Err(format!(
+                    "k={k}: got {:?}, want {expected:?}",
+                    set.members()
+                ));
+            }
+            if set.size() != expected.len() {
+                return Err(format!("k={k}: size {} != {}", set.size(), expected.len()));
+            }
+        }
+        Ok(())
     });
 }
 
